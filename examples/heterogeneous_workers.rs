@@ -1,0 +1,110 @@
+//! Heterogeneous workers over the threaded coordinator + simulated network.
+//!
+//! §3.2.1 of the paper: "one can use different compressors Q_i, which can be
+//! particularly beneficial when different workers have various bandwidths …
+//! the slower workers can compress more". This example builds a fleet whose
+//! links degrade 4× from the fastest to the slowest worker and compares:
+//!
+//!   (a) homogeneous Rand-K on every worker,
+//!   (b) bandwidth-matched Rand-K (aggressive on slow links),
+//!
+//! under identical round budgets, reporting accuracy AND simulated
+//! wall-clock from the byte-priced network model.
+//!
+//! ```bash
+//! cargo run --release --example heterogeneous_workers
+//! ```
+
+use std::sync::Arc;
+
+use shiftcomp::compressors::{Compressor, RandK, ValPrec};
+use shiftcomp::coordinator::{ClusterConfig, DistributedRunner, MethodKind};
+use shiftcomp::net::LinkModel;
+use shiftcomp::prelude::*;
+
+fn run_fleet(name: &str, problem: Arc<Ridge>, qs: Vec<Box<dyn Compressor>>, rounds: usize) {
+    let n = problem.n_workers();
+    let d = problem.dim();
+    // links degrade with worker index (worker 9 is ~4x slower than worker 0)
+    let links = LinkModel::heterogeneous_fleet(
+        n,
+        LinkModel {
+            up_bps: 20e6,
+            down_bps: 100e6,
+            latency: 1e-3,
+        },
+        0.35,
+    );
+    // DIANA across the mixed fleet: α from the *largest* ω in the fleet
+    let max_omega = qs
+        .iter()
+        .map(|q| q.omega().expect("unbiased"))
+        .fold(0.0f64, f64::max);
+    let omegas: Vec<f64> = vec![max_omega; n];
+    let ss = shiftcomp::theory::diana(problem.as_ref(), &omegas, &vec![0.0; n], 2.0);
+
+    let mut runner = DistributedRunner::new(
+        problem.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::Diana {
+                alpha: ss.alpha,
+                with_c: false,
+            },
+            gamma: ss.gamma,
+            prec: ValPrec::F64,
+            seed: 42,
+            links: Some(links),
+        },
+    );
+    let trace = runner.run(
+        problem.as_ref(),
+        &RunOpts {
+            max_rounds: rounds,
+            tol: 1e-10,
+            record_every: 10,
+            ..Default::default()
+        },
+    );
+    println!(
+        "{:<28} rounds {:>6}  err {:>10.3e}  uplink {:>12} bits  simulated time {:>8.3}s",
+        name,
+        trace.rounds(),
+        trace.final_relative_error(),
+        trace.total_bits_up(),
+        runner.simulated_time(),
+    );
+}
+
+fn main() {
+    let problem = Arc::new(Ridge::paper_default(42));
+    let n = problem.n_workers();
+    let d = problem.dim();
+    let rounds = 8_000;
+
+    println!("fleet: worker 0 fastest → worker {} slowest (≈4× degradation)\n", n - 1);
+
+    // (a) homogeneous: everyone at q = 0.5
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(RandK::with_q(d, 0.5)) as Box<dyn Compressor>)
+        .collect();
+    run_fleet("homogeneous rand-k(q=0.5)", problem.clone(), qs, rounds);
+
+    // (b) bandwidth-matched: fast workers send more, slow workers compress
+    // harder — same *average* q, radically better straggler time.
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|i| {
+            let q = 0.8 - 0.6 * (i as f64) / (n as f64 - 1.0); // 0.8 → 0.2
+            Box::new(RandK::with_q(d, q)) as Box<dyn Compressor>
+        })
+        .collect();
+    run_fleet("bandwidth-matched rand-k", problem.clone(), qs, rounds);
+
+    println!(
+        "\nBandwidth-matching compresses harder exactly where the link is slow, \
+         cutting the straggler-dominated round time while the shifted-compression \
+         machinery keeps the method exact (Theorem 3 holds per-worker ω_i)."
+    );
+}

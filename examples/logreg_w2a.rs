@@ -1,0 +1,79 @@
+//! Figure-4 style experiment: ℓ2-regularized logistic regression on the
+//! w2a-like LibSVM dataset (κ = 100), DIANA vs Rand-DIANA.
+//!
+//! Pass a path to a real LibSVM file to run on actual data:
+//! ```bash
+//! cargo run --release --example logreg_w2a -- [path/to/w2a] [max_rounds]
+//! ```
+
+use shiftcomp::prelude::*;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let data_path = args.iter().find(|a| !a.chars().all(|c| c.is_ascii_digit()));
+    let max_rounds: usize = args
+        .iter()
+        .find(|a| a.chars().all(|c| c.is_ascii_digit()) && !a.is_empty())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30_000);
+
+    let seed = 42;
+    let problem = match data_path {
+        Some(path) => {
+            println!("loading LibSVM data from {path}");
+            let ds = shiftcomp::data::libsvm::read_file(path).expect("parsing LibSVM file");
+            Logistic::from_dataset(&ds, 10, 100.0, seed)
+        }
+        None => {
+            println!("using the synthetic w2a stand-in (see DESIGN.md §Substitutions)");
+            Logistic::w2a_default(10, seed)
+        }
+    };
+    let d = problem.dim();
+    println!(
+        "logistic: d={d}, n={}, κ = {:.1} (λ = {:.3e})",
+        problem.n_workers(),
+        problem.kappa(),
+        problem.lambda()
+    );
+
+    let opts = RunOpts {
+        max_rounds,
+        tol: 1e-10,
+        record_every: 10,
+        ..Default::default()
+    };
+
+    println!(
+        "\n{:<24} {:>10} {:>14} {:>14}",
+        "method", "rounds", "final err", "uplink bits"
+    );
+    for &q in &[0.1, 0.5, 0.9] {
+        for (name, trace) in [
+            (
+                format!("DIANA rand-k q={q}"),
+                DcgdShift::diana(&problem, RandK::with_q(d, q), None, seed).run(&problem, &opts),
+            ),
+            (
+                format!("Rand-DIANA rand-k q={q}"),
+                DcgdShift::rand_diana(&problem, RandK::with_q(d, q), None, seed)
+                    .run(&problem, &opts),
+            ),
+        ] {
+            println!(
+                "{:<24} {:>10} {:>14.3e} {:>14}",
+                name,
+                trace.rounds(),
+                trace.final_relative_error(),
+                trace.total_bits_up(),
+            );
+            trace
+                .save_csv(&format!(
+                    "results/logreg_{}.csv",
+                    name.replace([' ', '='], "_")
+                ))
+                .expect("writing CSV");
+        }
+    }
+    println!("\ncurves written to results/logreg_*.csv");
+}

@@ -1,0 +1,77 @@
+//! Quickstart: the paper's core story in one run.
+//!
+//! On the paper's ridge problem (make_regression m=100, d=80, 10 workers,
+//! NOT interpolating), plain DCGD with Rand-K stalls in a neighborhood of
+//! the optimum; shifted-compression methods (DIANA, Rand-DIANA, DCGD-STAR)
+//! drive the error to machine precision at a fraction of the bits.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use shiftcomp::prelude::*;
+
+fn main() {
+    let seed = 42;
+    let problem = Ridge::paper_default(seed);
+    let d = problem.dim();
+    println!(
+        "ridge: d={d}, n={} workers, κ = {:.1}, interpolating: {}",
+        problem.n_workers(),
+        problem.kappa(),
+        problem.is_interpolating(1e-9),
+    );
+
+    let opts = RunOpts {
+        max_rounds: 40_000,
+        tol: 1e-12,
+        record_every: 10,
+        ..Default::default()
+    };
+    let q = 0.25; // Rand-K share: ω = 3
+
+    let mut runs: Vec<(&str, Trace)> = Vec::new();
+    runs.push((
+        "DGD (no compression)",
+        Gd::new(&problem, seed).run(&problem, &opts),
+    ));
+    runs.push((
+        "DCGD",
+        DcgdShift::dcgd(&problem, RandK::with_q(d, q), seed).run(&problem, &opts),
+    ));
+    runs.push((
+        "DCGD-STAR",
+        DcgdShift::star(&problem, RandK::with_q(d, q), None, seed).run(&problem, &opts),
+    ));
+    runs.push((
+        "DIANA",
+        DcgdShift::diana(&problem, RandK::with_q(d, q), None, seed).run(&problem, &opts),
+    ));
+    runs.push((
+        "Rand-DIANA",
+        DcgdShift::rand_diana(&problem, RandK::with_q(d, q), None, seed).run(&problem, &opts),
+    ));
+
+    println!(
+        "\n{:<22} {:>10} {:>14} {:>14} {:>12}",
+        "method", "rounds", "final err", "error floor", "uplink bits"
+    );
+    for (name, t) in &runs {
+        println!(
+            "{:<22} {:>10} {:>14.3e} {:>14.3e} {:>12}",
+            name,
+            t.rounds(),
+            t.final_relative_error(),
+            t.error_floor(),
+            t.total_bits_up(),
+        );
+    }
+
+    let dcgd_floor = runs[1].1.error_floor();
+    let diana_floor = runs[3].1.error_floor();
+    println!(
+        "\nDCGD stalls at {:.1e}; DIANA reaches {:.1e} — the shift removes the \
+         compression-variance neighborhood (Theorems 1 vs 3).",
+        dcgd_floor, diana_floor
+    );
+}

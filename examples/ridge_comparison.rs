@@ -1,0 +1,27 @@
+//! Figure-1 style comparison on the paper's ridge problem: DIANA vs
+//! Rand-DIANA across Rand-K compression levels, plotted against
+//! communicated bits (ASCII) and written to results/.
+//!
+//! ```bash
+//! cargo run --release --example ridge_comparison -- [max_rounds]
+//! ```
+
+fn main() {
+    let max_rounds = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40_000);
+    let res = shiftcomp::harness::fig1_left("results", 42, max_rounds);
+    println!("curve summaries:");
+    for c in &res.curves {
+        println!(
+            "  {:<22} bits→1e-10: {:>12}  floor {:.2e}{}",
+            c.label,
+            c.bits_to_tol
+                .map(|b| b.to_string())
+                .unwrap_or_else(|| "—".into()),
+            c.error_floor,
+            if c.diverged { "  DIVERGED" } else { "" }
+        );
+    }
+}

@@ -1,0 +1,209 @@
+"""AOT compile path: lower every Layer-2 entry point to HLO **text** and
+write `artifacts/manifest.json` describing shapes/dtypes/param layout for
+the Rust runtime.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids, which xla_extension 0.5.1 (the
+version the published `xla` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run via `make artifacts` (no-op when inputs are unchanged):
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+from compile.kernels import nat_dither_quantize, shifted_compress  # noqa: E402
+
+# ---------------------------------------------------------------- lowering
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def describe(args_specs, out_specs):
+    def one(s):
+        return {"shape": list(s.shape), "dtype": jnp.dtype(s.dtype).name}
+
+    return {
+        "inputs": [one(s) for s in args_specs],
+        "outputs": [one(s) for s in out_specs],
+    }
+
+
+# ----------------------------------------------------------------- entries
+
+# Paper-shaped ridge worker: m=100 rows over 10 workers -> m_i = 10, d = 80.
+RIDGE_MI, RIDGE_D, RIDGE_N = 10, 80, 10
+# w2a-shaped logistic worker: 3470 rows over 10 workers -> 347, d = 300.
+LOGREG_MI, LOGREG_D = 347, 300
+# LM config for the end-to-end example.
+LM_CFG = model.LmConfig()
+LM_BATCH = 8
+
+
+def build_entries():
+    """(name, jitted fn, example specs, extra-manifest) tuples."""
+    f64 = jnp.float64
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    def ridge(x, a, y, lam, n):
+        return (model.ridge_grad(x, a, y, lam[0], n[0]),)
+
+    def logreg(x, a, y, lam):
+        return (model.logreg_grad(x, a, y, lam[0]),)
+
+    def lm(params, tokens):
+        loss, grads = model.lm_step(params, tokens, LM_CFG)
+        return (loss, grads)
+
+    fast_cfg = LM_CFG._replace(matmul="xla")
+
+    def lm_fast(params, tokens):
+        loss, grads = model.lm_step(params, tokens, fast_cfg)
+        return (loss, grads)
+
+    def fused_compress(g, h, mask, scale):
+        return (shifted_compress(g, h, mask, scale[0]),)
+
+    def nat_dither(x, u, norm):
+        return (nat_dither_quantize(x, u, norm[0], s=8),)
+
+    lm_p = model.lm_param_count(LM_CFG)
+
+    entries = [
+        (
+            "ridge_grad",
+            ridge,
+            [
+                spec((RIDGE_D,), f64),
+                spec((RIDGE_MI, RIDGE_D), f64),
+                spec((RIDGE_MI,), f64),
+                spec((1,), f64),
+                spec((1,), f64),
+            ],
+            {"m_i": RIDGE_MI, "d": RIDGE_D, "n_workers": RIDGE_N},
+        ),
+        (
+            "logreg_grad",
+            logreg,
+            [
+                spec((LOGREG_D,), f64),
+                spec((LOGREG_MI, LOGREG_D), f64),
+                spec((LOGREG_MI,), f64),
+                spec((1,), f64),
+            ],
+            {"m_i": LOGREG_MI, "d": LOGREG_D},
+        ),
+        (
+            "lm_step",
+            lm,
+            [spec((lm_p,), f32), spec((LM_BATCH, LM_CFG.seq + 1), i32)],
+            {
+                "param_count": lm_p,
+                "batch": LM_BATCH,
+                "config": LM_CFG._asdict(),
+                "param_layout": [
+                    {"name": n, "shape": list(s)} for n, s in model.lm_param_shapes(LM_CFG)
+                ],
+            },
+        ),
+        (
+            "lm_step_fast",
+            lm_fast,
+            [spec((lm_p,), f32), spec((LM_BATCH, LM_CFG.seq + 1), i32)],
+            {
+                "param_count": lm_p,
+                "batch": LM_BATCH,
+                "config": fast_cfg._asdict(),
+                "param_layout": [
+                    {"name": n, "shape": list(s)} for n, s in model.lm_param_shapes(LM_CFG)
+                ],
+            },
+        ),
+        (
+            "shifted_compress",
+            fused_compress,
+            [
+                spec((RIDGE_D,), f64),
+                spec((RIDGE_D,), f64),
+                spec((RIDGE_D,), f64),
+                spec((1,), f64),
+            ],
+            {"d": RIDGE_D},
+        ),
+        (
+            "nat_dither_quantize",
+            nat_dither,
+            [spec((RIDGE_D,), f64), spec((RIDGE_D,), f64), spec((1,), f64)],
+            {"d": RIDGE_D, "s": 8},
+        ),
+    ]
+    return entries
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--skip-lm", action="store_true", help="skip the (slow) LM entry"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"entries": {}}
+    for name, fn, specs, extra in build_entries():
+        if args.skip_lm and name.startswith("lm_step"):
+            continue
+        print(f"lowering {name} …", flush=True)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        out_specs = [
+            jax.ShapeDtypeStruct(o.shape, o.dtype) for o in lowered.out_info
+        ]
+        entry = {"file": fname, **describe(specs, out_specs), **extra}
+        manifest["entries"][name] = entry
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    # initial LM parameters for the Rust trainer
+    if not args.skip_lm:
+        print("initializing LM parameters …", flush=True)
+        params = model.lm_init_params(LM_CFG, jax.random.PRNGKey(0))
+        raw = bytes(jnp.asarray(params, jnp.float32).tobytes())
+        with open(os.path.join(args.out_dir, "lm_init.bin"), "wb") as f:
+            f.write(raw)
+        manifest["entries"]["lm_step"]["init_file"] = "lm_init.bin"
+        if "lm_step_fast" in manifest["entries"]:
+            manifest["entries"]["lm_step_fast"]["init_file"] = "lm_init.bin"
+        print(f"  wrote lm_init.bin ({len(raw)} bytes)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

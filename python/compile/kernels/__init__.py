@@ -1,0 +1,6 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from compile.kernels.compress import nat_dither_quantize, shifted_compress
+from compile.kernels.matmul import matmul, matmul_ad
+
+__all__ = ["matmul", "matmul_ad", "shifted_compress", "nat_dither_quantize"]

@@ -1,0 +1,115 @@
+"""Layer-1 Pallas kernels for the paper's compression hot-spot.
+
+Two kernels:
+
+* ``shifted_compress`` — the fused shifted-compression update at the heart
+  of DCGD-SHIFT:  ``out = h + mask * (g - h) * scale``.  On a worker this
+  runs immediately after the gradient while the tile is still in VMEM,
+  fusing the shift subtraction, sparsification mask and Rand-K rescale into
+  one pass (one HBM read of g/h/mask, one write) instead of three.
+
+* ``nat_dither_quantize`` — Natural-Dithering quantization of ``x/norm`` to
+  the binary level grid {0, 2^(1-s), ..., 1}, with external uniform
+  randomness ``u`` (the AOT artifact must be deterministic: the Rust
+  coordinator supplies the random draws, same as it does for its own native
+  compressors).
+
+Both are element-wise 1-D kernels tiled over VMEM-sized blocks; both have
+pure-jnp oracles in ``ref.py`` that pytest compares against.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _shifted_compress_kernel(g_ref, h_ref, mask_ref, scale_ref, o_ref):
+    scale = scale_ref[0]
+    g = g_ref[...]
+    h = h_ref[...]
+    m = mask_ref[...]
+    o_ref[...] = h + m * (g - h) * scale
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def shifted_compress(g, h, mask, scale, *, block: int = 1024, interpret: bool = True):
+    """``h + mask * (g - h) * scale`` — the decoded form of
+    ``h + Q(g - h)`` for masked sparsifiers (Rand-K: mask = indicator of the
+    kept subset, scale = d/K)."""
+    (d,) = g.shape
+    assert h.shape == (d,) and mask.shape == (d,)
+    dp = -(-d // block) * block
+    pad = dp - d
+    gp = jnp.pad(g, (0, pad))
+    hp = jnp.pad(h, (0, pad))
+    mp = jnp.pad(mask, (0, pad))
+    scale_arr = jnp.asarray([scale], dtype=g.dtype)
+    out = pl.pallas_call(
+        _shifted_compress_kernel,
+        grid=(dp // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), g.dtype),
+        interpret=interpret,
+    )(gp, hp, mp, scale_arr)
+    return out[:d]
+
+
+def _nat_dither_kernel(x_ref, u_ref, norm_ref, o_ref, *, s: int):
+    norm = norm_ref[0]
+    x = x_ref[...]
+    u = u_ref[...]
+    sign = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+    ax = jnp.abs(x)
+    # normalized magnitude in [0, 1]
+    t = jnp.where(norm > 0, ax / norm, 0.0)
+    # bracketing binary levels: lo = 2^floor(log2 t) clamped to the grid,
+    # hi = min(2*lo, 1); below the smallest level the bracket is [0, 2^(1-s)].
+    tiny = 2.0 ** (1 - s)
+    safe_t = jnp.maximum(t, 1e-300)
+    e = jnp.floor(jnp.log2(safe_t))
+    e = jnp.clip(e, 1 - s, 0)
+    lo_grid = jnp.exp2(e)
+    below = t < tiny
+    lo = jnp.where(below, 0.0, lo_grid)
+    hi = jnp.where(below, tiny, jnp.minimum(2.0 * lo_grid, 1.0))
+    width = hi - lo
+    p_hi = jnp.where(width > 0, (t - lo) / jnp.where(width > 0, width, 1.0), 0.0)
+    q = jnp.where(u < p_hi, hi, lo)
+    q = jnp.where(t == 0.0, 0.0, q)
+    q = jnp.where(t >= 1.0, 1.0, q)
+    o_ref[...] = sign * norm * q.astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "block", "interpret"))
+def nat_dither_quantize(x, u, norm, *, s: int, block: int = 1024, interpret: bool = True):
+    """Natural dithering of ``x`` onto ``norm * {0, 2^(1-s), …, 1}`` using
+    uniform draws ``u`` in [0,1): unbiased randomized rounding between the
+    bracketing levels."""
+    (d,) = x.shape
+    assert u.shape == (d,)
+    dp = -(-d // block) * block
+    pad = dp - d
+    xp = jnp.pad(x, (0, pad))
+    up = jnp.pad(u, (0, pad))
+    norm_arr = jnp.asarray([norm], dtype=x.dtype)
+    out = pl.pallas_call(
+        functools.partial(_nat_dither_kernel, s=s),
+        grid=(dp // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), x.dtype),
+        interpret=interpret,
+    )(xp, up, norm_arr)
+    return out[:d]

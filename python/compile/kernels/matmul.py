@@ -1,0 +1,117 @@
+"""Layer-1 Pallas kernel: tiled matmul.
+
+The compute hot-spot of every workload in this repo (per-worker gradients
+and the transformer LM) is matmul-shaped. This kernel expresses the paper's
+distributed-compute substrate the way a TPU deployment would: HBM->VMEM
+tiles via BlockSpec, an MXU-shaped inner matmul, and a grid that walks
+(M/bm, N/bn, K/bk) with accumulation in the output tile.
+
+TPU sizing rationale (see DESIGN.md "Hardware adaptation"):
+  * default tiles 128x128x128 = three f32 tiles of 64 KiB each, comfortably
+    inside the ~16 MiB VMEM with double-buffering room;
+  * the MXU is a 128x128 systolic array, so bm = bn = bk = 128 keeps it
+    fully fed (bf16 inputs would double the effective rate).
+
+On this image Pallas MUST run with interpret=True (CPU PJRT cannot execute
+Mosaic custom-calls); correctness is asserted against `ref.py` oracles in
+python/tests, and TPU efficiency is estimated analytically in
+EXPERIMENTS.md section Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k: int):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ y[k,j]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+    del n_k  # grid bound is encoded in the BlockSpec grid
+
+
+def _pad_to(x, multiple, axis):
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(x, y, *, bm: int = 128, bn: int = 128, bk: int = 128, interpret: bool = True):
+    """`x @ y` via the tiled Pallas kernel, any shapes (zero-padded to tiles).
+
+    Padding is mathematically exact for matmul (zero rows/cols contribute
+    nothing) and mirrors what Mosaic does for ragged edges on real TPUs.
+    """
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"matmul expects rank-2 operands, got {x.shape} @ {y.shape}")
+    if x.shape[1] != y.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+    m, k = x.shape
+    _, n = y.shape
+    out_dtype = jnp.result_type(x.dtype, y.dtype)
+
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    yp = _pad_to(_pad_to(y, bk, 0), bn, 1)
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=interpret,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul_ad(x, y):
+    """Differentiable wrapper: forward AND backward run the Pallas kernel
+    (dX = dC @ Yᵀ and dY = Xᵀ @ dC are themselves matmuls)."""
+    return matmul(x, y)
+
+
+def _matmul_fwd(x, y):
+    return matmul(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    return matmul(g, y.T), matmul(x.T, g)
+
+
+matmul_ad.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, bytes_per_el: int = 4) -> int:
+    """VMEM footprint of one grid step (x-tile + y-tile + o-tile), used by
+    the section-Perf roofline estimate."""
+    return bytes_per_el * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU-issued MACs that are useful (non-padding) work."""
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    kp = -(-k // bk) * bk
+    return (m * n * k) / (mp * np_ * kp)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+ground truth. Every kernel in this package has a reference here, and
+python/tests asserts allclose between the two across hypothesis-driven
+shape/dtype sweeps."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y, preferred_element_type=jnp.result_type(x.dtype, y.dtype))
+
+
+def shifted_compress_ref(g, h, mask, scale):
+    return h + mask * (g - h) * jnp.asarray(scale, dtype=g.dtype)
+
+
+def nat_dither_quantize_ref(x, u, norm, *, s: int):
+    """Reference natural dithering (vectorized jnp, mirrors the definition
+    in the paper's cited Horváth et al. 2019a construction)."""
+    sign = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+    ax = jnp.abs(x)
+    t = jnp.where(norm > 0, ax / norm, 0.0)
+    tiny = 2.0 ** (1 - s)
+    safe_t = jnp.maximum(t, 1e-300)
+    e = jnp.clip(jnp.floor(jnp.log2(safe_t)), 1 - s, 0)
+    lo_grid = jnp.exp2(e)
+    below = t < tiny
+    lo = jnp.where(below, 0.0, lo_grid)
+    hi = jnp.where(below, tiny, jnp.minimum(2.0 * lo_grid, 1.0))
+    width = hi - lo
+    p_hi = jnp.where(width > 0, (t - lo) / jnp.where(width > 0, width, 1.0), 0.0)
+    q = jnp.where(u < p_hi, hi, lo)
+    q = jnp.where(t == 0.0, 0.0, q)
+    q = jnp.where(t >= 1.0, 1.0, q)
+    return sign * norm * q.astype(x.dtype)

@@ -1,0 +1,191 @@
+"""Layer-2 JAX models — the differentiable workloads the Rust coordinator
+distributes. All dense contractions route through the Layer-1 Pallas matmul
+(`kernels.matmul_ad`), so lowering any entry point bakes the kernel into the
+same HLO module.
+
+Entry points (AOT-exported by aot.py):
+  * ridge_grad   — per-worker gradient of the paper's ridge objective
+  * logreg_grad  — per-worker gradient of the l2-regularized logistic loss
+  * lm_loss / lm_step — a small GPT-style causal LM: loss and flat-gradient,
+    the workload of the end-to-end distributed-compressed-training example
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul_ad
+
+
+# --------------------------------------------------------------------- ridge
+
+
+def ridge_grad(x, a, y, lam, n_workers):
+    """∇f_i for f_i(x) = n/2 ||A_i x − y_i||² + λ/2 ||x||².
+
+    Matches `rust/src/problems/ridge.rs` exactly (the runtime integration
+    test cross-checks the two implementations through PJRT).
+    """
+    resid = matmul_ad(a, x[:, None])[:, 0] - y
+    ata_r = matmul_ad(a.T, resid[:, None])[:, 0]
+    return n_workers * ata_r + lam * x
+
+
+# ------------------------------------------------------------------ logistic
+
+
+def logreg_grad(x, a, y, lam):
+    """∇f_i for f_i(x) = (1/m)Σ log(1+exp(−y_l·a_lᵀx)) + λ/2 ||x||²."""
+    m = a.shape[0]
+    t = y * (matmul_ad(a, x[:, None])[:, 0])
+    coeff = -y * jax.nn.sigmoid(-t) / m
+    return matmul_ad(a.T, coeff[:, None])[:, 0] + lam * x
+
+
+# ------------------------------------------------------------ transformer LM
+
+
+class LmConfig(NamedTuple):
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 1024
+    seq: int = 128
+    # dense-layer backend: "pallas" = the Layer-1 tiled kernel (the real-TPU
+    # artifact; interpret-mode on CPU), "xla" = XLA's native dot (the
+    # CPU-optimized artifact — see EXPERIMENTS.md section Perf)
+    matmul: str = "pallas"
+
+
+def lm_param_shapes(cfg: LmConfig):
+    """Ordered (name, shape) list — the flat-vector layout contract with the
+    Rust trainer (also recorded in the AOT manifest)."""
+    shapes = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq, cfg.d_model)),
+    ]
+    for layer in range(cfg.n_layers):
+        p = f"l{layer}."
+        shapes += [
+            (p + "ln1_g", (cfg.d_model,)),
+            (p + "ln1_b", (cfg.d_model,)),
+            (p + "wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2_g", (cfg.d_model,)),
+            (p + "ln2_b", (cfg.d_model,)),
+            (p + "w1", (cfg.d_model, cfg.d_ff)),
+            (p + "b1", (cfg.d_ff,)),
+            (p + "w2", (cfg.d_ff, cfg.d_model)),
+            (p + "b2", (cfg.d_model,)),
+        ]
+    shapes += [("lnf_g", (cfg.d_model,)), ("lnf_b", (cfg.d_model,))]
+    return shapes
+
+
+def lm_param_count(cfg: LmConfig) -> int:
+    total = 0
+    for _, shape in lm_param_shapes(cfg):
+        size = 1
+        for s in shape:
+            size *= s
+        total += size
+    return total
+
+
+def lm_init_params(cfg: LmConfig, key) -> jnp.ndarray:
+    """Flat f32 parameter vector, GPT-2-style init."""
+    chunks = []
+    for name, shape in lm_param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("_g"):
+            chunks.append(jnp.ones(shape, jnp.float32).ravel())
+        elif name.endswith("_b") or name.endswith("b1") or name.endswith("b2"):
+            chunks.append(jnp.zeros(shape, jnp.float32).ravel())
+        else:
+            std = 0.02
+            chunks.append((jax.random.normal(sub, shape, jnp.float32) * std).ravel())
+    return jnp.concatenate(chunks)
+
+
+def _unflatten(flat, cfg: LmConfig):
+    params = {}
+    offset = 0
+    for name, shape in lm_param_shapes(cfg):
+        size = 1
+        for s in shape:
+            size *= s
+        params[name] = flat[offset : offset + size].reshape(shape)
+        offset += size
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _dense(x2d, w, impl="pallas"):
+    """[T, in] @ [in, out] — Pallas kernel or XLA dot per the config."""
+    if impl == "pallas":
+        return matmul_ad(x2d, w)
+    return jnp.dot(x2d, w)
+
+
+def lm_logits(flat_params, tokens, cfg: LmConfig):
+    """Causal-LM logits. tokens: i32 [B, S]."""
+    p = _unflatten(flat_params, cfg)
+    b, s = tokens.shape
+    h = p["tok_emb"][tokens] + p["pos_emb"][None, :s, :]
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    neg = jnp.asarray(-1e9, jnp.float32)
+    hd = cfg.d_model // cfg.n_heads
+    mm = cfg.matmul
+    for layer in range(cfg.n_layers):
+        pre = f"l{layer}."
+        x = _layer_norm(h, p[pre + "ln1_g"], p[pre + "ln1_b"])
+        qkv = _dense(x.reshape(b * s, cfg.d_model), p[pre + "wqkv"], mm).reshape(
+            b, s, 3, cfg.n_heads, hd
+        )
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        # [b, heads, s, hd]
+        q = q.transpose(0, 2, 1, 3)
+        k = k.transpose(0, 2, 1, 3)
+        v = v.transpose(0, 2, 1, 3)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+        scores = jnp.where(mask[None, None] > 0, scores, neg)
+        att = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b * s, cfg.d_model)
+        h = h + _dense(ctx, p[pre + "wo"], mm).reshape(b, s, cfg.d_model)
+
+        x = _layer_norm(h, p[pre + "ln2_g"], p[pre + "ln2_b"])
+        y = _dense(x.reshape(b * s, cfg.d_model), p[pre + "w1"], mm) + p[pre + "b1"]
+        y = jax.nn.gelu(y)
+        y = _dense(y, p[pre + "w2"], mm) + p[pre + "b2"]
+        h = h + y.reshape(b, s, cfg.d_model)
+
+    h = _layer_norm(h, p["lnf_g"], p["lnf_b"])
+    # tied output head: logits = h @ tok_embᵀ
+    logits = _dense(h.reshape(b * s, cfg.d_model), p["tok_emb"].T, cfg.matmul)
+    return logits.reshape(b, s, cfg.vocab)
+
+
+def lm_loss(flat_params, tokens, cfg: LmConfig):
+    """Next-token cross-entropy. tokens: i32 [B, S+1]."""
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    logits = lm_logits(flat_params, inputs, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def lm_step(flat_params, tokens, cfg: LmConfig):
+    """(loss, flat_grads) — the unit of work one worker executes per round."""
+    loss, grads = jax.value_and_grad(lm_loss)(flat_params, tokens, cfg)
+    return loss, grads

@@ -1,0 +1,161 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes/seeds; numpy.testing.assert_allclose is the
+verdict. All kernels run interpret=True (CPU image; see DESIGN.md)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, nat_dither_quantize, shifted_compress
+from compile.kernels.ref import (
+    matmul_ref,
+    nat_dither_quantize_ref,
+    shifted_compress_ref,
+)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ------------------------------------------------------------------- matmul
+
+
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 80),
+    n=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_small_shapes(m, k, n, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (m, k), jnp.float32)
+    y = jax.random.normal(k2, (k, n), jnp.float32)
+    got = matmul(x, y, bm=32, bn=32, bk=32)
+    want = matmul_ref(x, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize(
+    "shape", [(1, 1, 1), (128, 128, 128), (130, 70, 257), (5, 300, 2)]
+)
+def test_matmul_dtypes_and_ragged_tiles(dtype, shape):
+    m, k, n = shape
+    key = jax.random.PRNGKey(m * 7 + k * 3 + n)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (m, k), dtype)
+    y = jax.random.normal(k2, (k, n), dtype)
+    got = matmul(x, y)
+    want = matmul_ref(x, y)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("tiles", [(16, 16, 16), (32, 64, 16), (128, 128, 128)])
+def test_matmul_tile_invariance(tiles):
+    bm, bn, bk = tiles
+    key = jax.random.PRNGKey(42)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (77, 45), jnp.float32)
+    y = jax.random.normal(k2, (45, 91), jnp.float32)
+    got = matmul(x, y, bm=bm, bn=bn, bk=bk)
+    want = matmul_ref(x, y)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_matmul_ad_gradients_match_autodiff():
+    from compile.kernels import matmul_ad
+
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (17, 9), jnp.float32)
+    y = jax.random.normal(k2, (9, 13), jnp.float32)
+
+    def f_pallas(x, y):
+        return jnp.sum(jnp.sin(matmul_ad(x, y)))
+
+    def f_ref(x, y):
+        return jnp.sum(jnp.sin(x @ y))
+
+    gx_p, gy_p = jax.grad(f_pallas, argnums=(0, 1))(x, y)
+    gx_r, gy_r = jax.grad(f_ref, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(np.asarray(gx_p), np.asarray(gx_r), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gy_p), np.asarray(gy_r), rtol=1e-4, atol=1e-5)
+
+
+# -------------------------------------------------------- shifted compress
+
+
+@given(
+    d=st.integers(1, 600),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.1, 50.0),
+)
+def test_shifted_compress_matches_ref(d, seed, scale):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    g = jax.random.normal(k1, (d,), jnp.float64)
+    h = jax.random.normal(k2, (d,), jnp.float64)
+    mask = (jax.random.uniform(k3, (d,)) < 0.3).astype(jnp.float64)
+    got = shifted_compress(g, h, mask, scale, block=128)
+    want = shifted_compress_ref(g, h, mask, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+def test_shifted_compress_is_exact_at_shift():
+    # the defining property: g == h => output == h regardless of mask/scale
+    d = 64
+    h = jax.random.normal(jax.random.PRNGKey(1), (d,), jnp.float64)
+    mask = jnp.ones((d,), jnp.float64)
+    out = shifted_compress(h, h, mask, 13.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(h), rtol=0, atol=0)
+
+
+# -------------------------------------------------------- natural dithering
+
+
+@given(d=st.integers(1, 400), s=st.integers(1, 12), seed=st.integers(0, 2**31 - 1))
+def test_nat_dither_matches_ref(d, s, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (d,), jnp.float64) * 3.0
+    u = jax.random.uniform(k2, (d,), jnp.float64)
+    norm = float(jnp.linalg.norm(x))
+    got = nat_dither_quantize(x, u, norm, s=s, block=128)
+    want = nat_dither_quantize_ref(x, u, norm, s=s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+def test_nat_dither_outputs_on_grid():
+    d, s = 256, 6
+    key = jax.random.PRNGKey(3)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (d,), jnp.float64)
+    u = jax.random.uniform(k2, (d,), jnp.float64)
+    norm = float(jnp.linalg.norm(x))
+    out = np.asarray(nat_dither_quantize(x, u, norm, s=s))
+    mag = np.abs(out) / norm
+    nz = mag[mag > 0]
+    logs = np.log2(nz)
+    np.testing.assert_allclose(logs, np.round(logs), atol=1e-9)
+    assert logs.min() >= 1 - s - 1e-9
+    assert logs.max() <= 0 + 1e-9
+
+
+def test_nat_dither_unbiased_monte_carlo():
+    # E[quantized] == x (randomized rounding preserves expectations)
+    d, s, trials = 32, 4, 4000
+    x = jax.random.normal(jax.random.PRNGKey(5), (d,), jnp.float64)
+    norm = float(jnp.linalg.norm(x))
+    keys = jax.random.split(jax.random.PRNGKey(6), trials)
+    u = jax.vmap(lambda k: jax.random.uniform(k, (d,), jnp.float64))(keys)
+    ref = jax.vmap(lambda ui: nat_dither_quantize_ref(x, ui, norm, s=s))(u)
+    mean = np.asarray(jnp.mean(ref, axis=0))
+    np.testing.assert_allclose(mean, np.asarray(x), rtol=0, atol=0.12 * norm / np.sqrt(d))

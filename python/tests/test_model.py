@@ -1,0 +1,132 @@
+"""Layer-2 model checks: gradient entries vs hand formulas, LM shapes,
+loss sanity, and trainability on a tiny config."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+# ----------------------------------------------------------- ridge gradient
+
+
+def test_ridge_grad_matches_formula():
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    m_i, d, n, lam = 10, 80, 10, 0.01
+    a = jax.random.normal(k1, (m_i, d), jnp.float64)
+    y = jax.random.normal(k2, (m_i,), jnp.float64)
+    x = jax.random.normal(k3, (d,), jnp.float64)
+    got = model.ridge_grad(x, a, y, lam, n)
+    want = n * a.T @ (a @ x - y) + lam * x
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10, atol=1e-10)
+
+
+def test_ridge_grad_is_gradient_of_loss():
+    key = jax.random.PRNGKey(1)
+    k1, k2, k3 = jax.random.split(key, 3)
+    m_i, d, n, lam = 7, 12, 4, 0.05
+    a = jax.random.normal(k1, (m_i, d), jnp.float64)
+    y = jax.random.normal(k2, (m_i,), jnp.float64)
+    x = jax.random.normal(k3, (d,), jnp.float64)
+
+    def loss(x):
+        r = a @ x - y
+        return 0.5 * n * jnp.sum(r * r) + 0.5 * lam * jnp.sum(x * x)
+
+    want = jax.grad(loss)(x)
+    got = model.ridge_grad(x, a, y, lam, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10, atol=1e-10)
+
+
+# -------------------------------------------------------- logistic gradient
+
+
+def test_logreg_grad_is_gradient_of_loss():
+    key = jax.random.PRNGKey(2)
+    k1, k2, k3 = jax.random.split(key, 3)
+    m_i, d, lam = 30, 15, 0.1
+    a = jax.random.normal(k1, (m_i, d), jnp.float64)
+    y = jnp.sign(jax.random.normal(k2, (m_i,), jnp.float64))
+    x = jax.random.normal(k3, (d,), jnp.float64) * 0.3
+
+    def loss(x):
+        t = y * (a @ x)
+        return jnp.mean(jnp.logaddexp(0.0, -t)) + 0.5 * lam * jnp.sum(x * x)
+
+    want = jax.grad(loss)(x)
+    got = model.logreg_grad(x, a, y, lam)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-9, atol=1e-10)
+
+
+# ------------------------------------------------------------ transformer LM
+
+TINY = model.LmConfig(vocab=61, d_model=32, n_layers=2, n_heads=2, d_ff=64, seq=16)
+
+
+def test_lm_param_count_matches_layout():
+    count = model.lm_param_count(TINY)
+    flat = model.lm_init_params(TINY, jax.random.PRNGKey(0))
+    assert flat.shape == (count,)
+    # layout covers the vector exactly
+    total = 0
+    for _, shape in model.lm_param_shapes(TINY):
+        size = 1
+        for s in shape:
+            size *= s
+        total += size
+    assert total == count
+
+
+def test_lm_logits_shape_and_finiteness():
+    flat = model.lm_init_params(TINY, jax.random.PRNGKey(1))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (3, TINY.seq), 0, TINY.vocab)
+    logits = model.lm_logits(flat, tokens, TINY)
+    assert logits.shape == (3, TINY.seq, TINY.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_lm_initial_loss_near_uniform():
+    flat = model.lm_init_params(TINY, jax.random.PRNGKey(3))
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (4, TINY.seq + 1), 0, TINY.vocab)
+    loss = model.lm_loss(flat, tokens, TINY)
+    expected = float(jnp.log(TINY.vocab))
+    assert abs(float(loss) - expected) < 0.5, f"{float(loss)} vs ln V = {expected}"
+
+
+def test_lm_causality():
+    # Changing a future token must not change past logits.
+    flat = model.lm_init_params(TINY, jax.random.PRNGKey(5))
+    tokens = jax.random.randint(jax.random.PRNGKey(6), (1, TINY.seq), 0, TINY.vocab)
+    logits1 = model.lm_logits(flat, tokens, TINY)
+    tokens2 = tokens.at[0, -1].set((tokens[0, -1] + 1) % TINY.vocab)
+    logits2 = model.lm_logits(flat, tokens2, TINY)
+    np.testing.assert_allclose(
+        np.asarray(logits1[0, :-1]), np.asarray(logits2[0, :-1]), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_lm_step_grads_shape_and_descent():
+    flat = model.lm_init_params(TINY, jax.random.PRNGKey(7))
+    tokens = jax.random.randint(jax.random.PRNGKey(8), (4, TINY.seq + 1), 0, TINY.vocab)
+    loss0, grads = model.lm_step(flat, tokens, TINY)
+    assert grads.shape == flat.shape
+    assert bool(jnp.all(jnp.isfinite(grads)))
+    # one SGD step on the same batch must reduce the loss
+    loss1, _ = model.lm_step(flat - 0.5 * grads, tokens, TINY)
+    assert float(loss1) < float(loss0)
+
+
+def test_lm_training_reduces_loss_on_fixed_batch():
+    flat = model.lm_init_params(TINY, jax.random.PRNGKey(9))
+    tokens = jax.random.randint(jax.random.PRNGKey(10), (4, TINY.seq + 1), 0, TINY.vocab)
+    losses = []
+    for _ in range(12):
+        loss, grads = model.lm_step(flat, tokens, TINY)
+        losses.append(float(loss))
+        flat = flat - 0.5 * grads
+    assert losses[-1] < losses[0] - 0.3, f"no training progress: {losses}"

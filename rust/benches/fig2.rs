@@ -1,0 +1,41 @@
+//! Regenerates paper Figure 2: Rand-DIANA stability studies.
+//! Left: Lyapunov constant M = b·M'. Right: refresh probability p sweep.
+//! `cargo bench --bench fig2`
+
+use shiftcomp::util::bench::time_once;
+
+fn main() {
+    let rounds = 60_000;
+    let (left, _) = time_once("figure 2 left (M = b·M')", || {
+        shiftcomp::harness::fig2_left("results", 42, rounds)
+    });
+    let (right, _) = time_once("figure 2 right (p sweep at q=0.1)", || {
+        shiftcomp::harness::fig2_right("results", 42, rounds)
+    });
+
+    println!("— shape checks (paper Figure 2) —");
+    for c in &left.curves {
+        println!(
+            "  {}: {}  floor {:.1e}",
+            c.label,
+            if c.diverged {
+                "DIVERGED"
+            } else if c.bits_to_tol.is_some() {
+                "converged"
+            } else {
+                "slow/stalled"
+            },
+            c.error_floor
+        );
+    }
+    println!("  (paper: b < 1 destabilizes/diverges; b = 1.5 stable but slower)");
+    for c in &right.curves {
+        println!(
+            "  {}: {}  bits→tol {:?}",
+            c.label,
+            if c.diverged { "DIVERGED" } else { "ok" },
+            c.bits_to_tol
+        );
+    }
+    println!("  (paper: smaller p converges in fewer bits; too-large p diverges)");
+}

@@ -1,0 +1,23 @@
+//! Regenerates supplementary Figure 3: Rand-DIANA p sweeps across q.
+//! `cargo bench --bench fig3`
+
+use shiftcomp::util::bench::time_once;
+
+fn main() {
+    let (results, _) = time_once("figure 3 (p sweep × q)", || {
+        shiftcomp::harness::fig3("results", 42, 60_000)
+    });
+    println!("— shape checks (paper Figure 3) —");
+    for fig in &results {
+        println!("{}:", fig.name);
+        for c in &fig.curves {
+            println!(
+                "  {}: {}  bits→tol {:?}  floor {:.1e}",
+                c.label,
+                if c.diverged { "DIVERGED" } else { "ok" },
+                c.bits_to_tol,
+                c.error_floor
+            );
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! Regenerates supplementary Figure 4: logistic regression (w2a-like,
+//! κ=100) — DIANA vs Rand-DIANA, Rand-K and Natural Dithering.
+//! `cargo bench --bench fig4`
+
+use shiftcomp::util::bench::time_once;
+
+fn main() {
+    let ((left, right), _) = time_once("figure 4 (logistic w2a)", || {
+        shiftcomp::harness::fig4("results", 42, 60_000)
+    });
+    println!("— shape checks (paper Figure 4) —");
+    for q in [0.1, 0.5, 0.9] {
+        let d = left.curve(&format!("diana q={q}"));
+        let r = left.curve(&format!("rand-diana q={q}"));
+        println!(
+            "  q={q}: diana bits {:?}, rand-diana bits {:?}",
+            d.bits_to_tol, r.bits_to_tol
+        );
+    }
+    println!("  (paper: same conclusions as ridge; DIANA slightly better at q=0.9)");
+    for c in &right.curves {
+        println!("  ND {}: bits→tol {:?}", c.label, c.bits_to_tol);
+    }
+}

@@ -1,0 +1,56 @@
+//! L3 micro-benchmarks: compressor + wire throughput on the hot path.
+//! `cargo bench --bench perf_compressors`
+
+use shiftcomp::compressors::{
+    Compressor, NaturalCompression, NaturalDithering, RandK, Ternary, TopK, ValPrec,
+};
+use shiftcomp::util::bench::{bb, bench, write_csv};
+use shiftcomp::util::rng::Pcg64;
+use shiftcomp::wire;
+
+fn main() {
+    let mut rows = Vec::new();
+    for &d in &[80usize, 1_000, 100_000] {
+        let mut rng = Pcg64::new(1);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let comps: Vec<Box<dyn Compressor>> = vec![
+            Box::new(RandK::with_q(d, 0.1)),
+            Box::new(TopK::with_q(d, 0.1)),
+            Box::new(NaturalDithering::l2(d, 8)),
+            Box::new(NaturalCompression::new(d)),
+            Box::new(Ternary::new(d)),
+        ];
+        for c in &comps {
+            let name = format!("compress {} d={d}", c.name());
+            let mut r = Pcg64::new(2);
+            let stats = bench(&name, || {
+                bb(c.compress(&mut r, bb(&x)));
+            });
+            rows.push(format!("{},{},{:.3e}", c.name(), d, stats.median()));
+
+            // encode+decode roundtrip cost
+            let mut r2 = Pcg64::new(3);
+            let pkt = c.compress(&mut r2, &x);
+            let stats = bench(&format!("wire roundtrip {} d={d}", c.name()), || {
+                let bytes = wire::encode(bb(&pkt), ValPrec::F64);
+                bb(wire::decode(&bytes).unwrap());
+            });
+            rows.push(format!("wire-{},{},{:.3e}", c.name(), d, stats.median()));
+        }
+        // decode-into (allocation-free consumer path)
+        let mut r3 = Pcg64::new(4);
+        let pkt = RandK::with_q(d, 0.1).compress(&mut r3, &x);
+        let mut out = vec![0.0; d];
+        let stats = bench(&format!("decode_into rand-k d={d}"), || {
+            pkt.decode_into(bb(&mut out));
+        });
+        rows.push(format!("decode_into,{},{:.3e}", d, stats.median()));
+    }
+    write_csv(
+        "results/perf_compressors.csv",
+        "name,dim,median_sec_per_iter",
+        &rows,
+    )
+    .expect("csv");
+    println!("\nwritten: results/perf_compressors.csv");
+}

@@ -1,0 +1,82 @@
+//! L2/L1 runtime benchmarks: PJRT execution latency of the AOT artifacts
+//! (skips gracefully when `make artifacts` hasn't been run).
+//! `cargo bench --bench perf_runtime`
+
+use shiftcomp::runtime::oracles::HloShiftedCompress;
+use shiftcomp::runtime::{Engine, HloRidgeOracle, LmSession};
+use shiftcomp::util::bench::{bench_slow, write_csv};
+use shiftcomp::util::rng::Pcg64;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("no artifacts — run `make artifacts` first; skipping runtime bench");
+        return;
+    }
+    let engine = Engine::cpu("artifacts").expect("engine");
+    let mut rows = Vec::new();
+
+    {
+        let oracle = HloRidgeOracle::new(&engine).expect("oracle");
+        let mut rng = Pcg64::new(1);
+        let x: Vec<f64> = (0..oracle.d).map(|_| rng.normal()).collect();
+        let a: Vec<f64> = (0..oracle.m_i * oracle.d).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..oracle.m_i).map(|_| rng.normal()).collect();
+        let stats = bench_slow("pjrt ridge_grad (10×80)", || {
+            oracle.grad(&x, &a, &y, 0.01, 10.0).unwrap();
+        });
+        rows.push(format!("ridge_grad,{:.3e}", stats.median()));
+    }
+
+    {
+        let kernel = HloShiftedCompress::new(&engine).expect("kernel");
+        let mut rng = Pcg64::new(2);
+        let g: Vec<f64> = (0..kernel.d).map(|_| rng.normal()).collect();
+        let h: Vec<f64> = (0..kernel.d).map(|_| rng.normal()).collect();
+        let mask: Vec<f64> = (0..kernel.d).map(|_| (rng.f64() < 0.1) as u8 as f64).collect();
+        let stats = bench_slow("pjrt shifted_compress (d=80)", || {
+            kernel.apply(&g, &h, &mask, 10.0).unwrap();
+        });
+        rows.push(format!("shifted_compress,{:.3e}", stats.median()));
+    }
+
+    // §Perf L1/L2 comparison: Pallas-interpret artifact vs XLA-gemm artifact
+    for entry in ["lm_step", "lm_step_fast"] {
+        if engine.manifest.entry(entry).is_err() {
+            continue;
+        }
+        let session = LmSession::with_entry(&engine, entry).expect("session");
+        let params = session.initial_params().expect("params");
+        let mut rng = Pcg64::new(3);
+        let tokens: Vec<i32> = (0..session.batch * (session.seq + 1))
+            .map(|_| rng.below(session.vocab as u64) as i32)
+            .collect();
+        // warm compile happens inside first call
+        let t0 = std::time::Instant::now();
+        session.step(&params, &tokens).expect("first step");
+        println!(
+            "{entry} first call (incl. XLA compile): {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        let mut n = 0u32;
+        let t0 = std::time::Instant::now();
+        while n < 3 {
+            session.step(&params, &tokens).expect("step");
+            n += 1;
+        }
+        let per = t0.elapsed().as_secs_f64() / n as f64;
+        println!("{entry} steady state: {per:.3}s / step ({} params)", session.param_count);
+        rows.push(format!("{entry},{per:.3e}"));
+        // useful-FLOP estimate: ~6 · params · tokens per fwd+bwd
+        let tokens_per_step = (session.batch * session.seq) as f64;
+        let flops = 6.0 * session.param_count as f64 * tokens_per_step;
+        println!(
+            "  ≈ {:.2} GFLOP/step → {:.2} GFLOP/s through PJRT CPU",
+            flops / 1e9,
+            flops / per / 1e9
+        );
+        rows.push(format!("{entry}_gflops,{:.3}", flops / per / 1e9));
+    }
+
+    write_csv("results/perf_runtime.csv", "name,median_sec", &rows).expect("csv");
+    println!("\nwritten: results/perf_runtime.csv");
+}

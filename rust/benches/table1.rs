@@ -1,0 +1,37 @@
+//! Regenerates paper Table 1: theoretical complexities + measured rounds.
+//! `cargo bench --bench table1`
+
+use shiftcomp::harness::{table1, table1::render};
+use shiftcomp::util::bench::{time_once, write_csv};
+
+fn main() {
+    let eps = 1e-10; // below DCGD's q=0.5 neighborhood: the stalling is visible
+    let (rows, _) = time_once("table1 (ridge, rand-k q=0.5)", || {
+        table1(42, 0.5, eps, 120_000)
+    });
+    print!("{}", render(&rows, eps));
+    let csv_rows: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{},{},{},{:e}",
+                r.method.replace(',', ";"),
+                r.theory_ours,
+                if r.theory_prev.is_nan() {
+                    "".to_string()
+                } else {
+                    format!("{}", r.theory_prev)
+                },
+                r.measured_rounds.map(|m| m.to_string()).unwrap_or_default(),
+                r.floor
+            )
+        })
+        .collect();
+    write_csv(
+        "results/table1.csv",
+        "method,theory_ours,theory_prev,measured_rounds,floor",
+        &csv_rows,
+    )
+    .expect("write results/table1.csv");
+    println!("\nwritten: results/table1.csv");
+}

@@ -1,0 +1,118 @@
+//! Uncompressed baselines: (distributed) gradient descent.
+//!
+//! DGD is DCGD-SHIFT with the identity operator (Table 2, "folklore" row);
+//! this standalone implementation is the cross-check oracle for the
+//! reductions in the property tests, and the no-compression baseline in the
+//! figures (it transfers `n·d` values per round).
+
+use crate::algorithms::{Algorithm, StepStats};
+use crate::compressors::ValPrec;
+use crate::problems::Problem;
+
+pub struct Gd {
+    x: Vec<f64>,
+    pub gamma: f64,
+    pub prec: ValPrec,
+    n_workers: usize,
+    grad: Vec<f64>,
+}
+
+impl Gd {
+    /// γ = 2/(L+μ), the optimal fixed step for smooth strongly convex GD.
+    pub fn new(p: &dyn Problem, seed: u64) -> Self {
+        Self::with_gamma(p, 2.0 / (p.l() + p.mu()), seed)
+    }
+
+    /// γ = 1/L (the conservative textbook step).
+    pub fn conservative(p: &dyn Problem, seed: u64) -> Self {
+        Self::with_gamma(p, 1.0 / p.l(), seed)
+    }
+
+    pub fn with_gamma(p: &dyn Problem, gamma: f64, seed: u64) -> Self {
+        Self {
+            x: crate::algorithms::paper_x0(p.dim(), seed),
+            gamma,
+            prec: ValPrec::F64,
+            n_workers: p.n_workers(),
+            grad: vec![0.0; p.dim()],
+        }
+    }
+
+    pub fn set_x0(&mut self, x0: Vec<f64>) {
+        self.x = x0;
+    }
+}
+
+impl Algorithm for Gd {
+    fn name(&self) -> String {
+        "dgd".into()
+    }
+    fn compressor_desc(&self) -> String {
+        "identity".into()
+    }
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+    fn step(&mut self, p: &dyn Problem) -> StepStats {
+        p.grad_into(&self.x, &mut self.grad);
+        crate::linalg::axpy(-self.gamma, &self.grad, &mut self.x);
+        let d = self.x.len() as u64;
+        StepStats {
+            bits_up: self.n_workers as u64 * d * self.prec.bits(),
+            bits_down: self.n_workers as u64 * d * self.prec.bits(),
+            bits_refresh: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::RunOpts;
+    use crate::problems::Ridge;
+
+    #[test]
+    fn gd_converges_linearly_to_exact_optimum() {
+        let p = Ridge::paper_default(3);
+        let mut alg = Gd::new(&p, 3);
+        let trace = alg.run(
+            &p,
+            &RunOpts {
+                max_rounds: 20_000,
+                tol: 1e-24,
+                record_every: 10,
+                ..Default::default()
+            },
+        );
+        assert!(trace.converged, "floor {:e}", trace.error_floor());
+        // monotone decrease (deterministic method, suitable γ)
+        let errs: Vec<f64> = trace.records.iter().map(|r| r.rel_err).collect();
+        assert!(errs.windows(2).all(|w| w[1] <= w[0] * (1.0 + 1e-12)));
+    }
+
+    #[test]
+    fn optimal_step_beats_conservative() {
+        let p = Ridge::paper_default(4);
+        let opts = RunOpts {
+            max_rounds: 5_000,
+            tol: 1e-20,
+            record_every: 1,
+            ..Default::default()
+        };
+        let fast = Gd::new(&p, 4).run(&p, &opts);
+        let slow = Gd::conservative(&p, 4).run(&p, &opts);
+        match (fast.rounds_to_tol(1e-10), slow.rounds_to_tol(1e-10)) {
+            (Some(a), Some(b)) => assert!(a <= b, "{a} vs {b}"),
+            (Some(_), None) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bits_count_full_vectors() {
+        let p = Ridge::paper_default(5);
+        let mut alg = Gd::new(&p, 5);
+        let stats = alg.step(&p);
+        assert_eq!(stats.bits_up, 10 * 80 * 64);
+    }
+}

@@ -1,0 +1,147 @@
+//! Optimization algorithms: the DCGD-SHIFT meta-algorithm (Algorithm 1)
+//! with pluggable shift rules, the compressed-iterates family (GDCI /
+//! VR-GDCI, Algorithm 2), and uncompressed baselines.
+//!
+//! These single-process drivers are *semantically distributed*: each worker
+//! slot owns its compressor, RNG stream and shift state, and every message
+//! that would cross the network is materialized as a [`Packet`] whose
+//! payload bits are accounted. The threaded runtime in
+//! [`crate::coordinator`] runs the same per-worker code over channels and
+//! is property-tested to produce bit-identical trajectories.
+
+pub mod dcgd_shift;
+pub mod gd;
+pub mod gdci;
+pub mod shift_rules;
+
+pub use dcgd_shift::DcgdShift;
+pub use gd::Gd;
+pub use gdci::{Gdci, VrGdci};
+pub use shift_rules::ShiftRule;
+
+use crate::compressors::ValPrec;
+use crate::metrics::{RoundRecord, Trace};
+use crate::problems::Problem;
+
+/// Alias kept for API compatibility: plain DCGD is DCGD-SHIFT with zero
+/// fixed shifts.
+pub type Dcgd = DcgdShift;
+
+/// Options controlling a run.
+#[derive(Clone, Copy, Debug)]
+pub struct RunOpts {
+    pub max_rounds: usize,
+    /// stop when ‖x−x*‖²/‖x⁰−x*‖² ≤ tol
+    pub tol: f64,
+    /// record a trace point every this many rounds (1 = every round)
+    pub record_every: usize,
+    /// declare divergence when rel_err exceeds this
+    pub blowup: f64,
+    /// wire precision for bit accounting
+    pub prec: ValPrec,
+    /// also record f(x) (costs one extra pass per record)
+    pub record_loss: bool,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        Self {
+            max_rounds: 10_000,
+            tol: 1e-12,
+            record_every: 1,
+            blowup: 1e9,
+            prec: ValPrec::F64,
+            record_loss: false,
+        }
+    }
+}
+
+/// Per-round statistics returned by [`Algorithm::step`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    /// worker→master gradient-message payload bits this round (sum over
+    /// workers)
+    pub bits_up: u64,
+    /// master→worker broadcast bits this round
+    pub bits_down: u64,
+    /// shift-state synchronization bits this round (Rand-DIANA refreshes,
+    /// STAR displacement frames) — tracked separately so both accounting
+    /// conventions can be reported
+    pub bits_refresh: u64,
+}
+
+/// A round-synchronous distributed optimization algorithm.
+pub trait Algorithm {
+    fn name(&self) -> String;
+    /// Description of the compressor configuration (for trace labels).
+    fn compressor_desc(&self) -> String;
+    /// Current iterate.
+    fn x(&self) -> &[f64];
+    /// Execute one communication round.
+    fn step(&mut self, p: &dyn Problem) -> StepStats;
+
+    /// Drive the algorithm, recording a [`Trace`].
+    fn run(&mut self, p: &dyn Problem, opts: &RunOpts) -> Trace {
+        let mut trace = Trace::new(&self.name(), &self.compressor_desc());
+        let x_star = p.x_star().to_vec();
+        let denom = crate::linalg::dist_sq(self.x(), &x_star).max(1e-300);
+        let mut bits_up: u64 = 0;
+        let mut bits_down: u64 = 0;
+        let mut bits_refresh: u64 = 0;
+
+        // round 0 record
+        trace.push(RoundRecord {
+            round: 0,
+            rel_err: 1.0,
+            bits_up: 0,
+            bits_refresh: 0,
+            bits_down: 0,
+            sim_time: 0.0,
+            loss: if opts.record_loss {
+                p.loss(self.x())
+            } else {
+                f64::NAN
+            },
+        });
+
+        for k in 0..opts.max_rounds {
+            let stats = self.step(p);
+            bits_up += stats.bits_up;
+            bits_down += stats.bits_down;
+            bits_refresh += stats.bits_refresh;
+            let record_now = (k + 1) % opts.record_every == 0 || k + 1 == opts.max_rounds;
+            if record_now {
+                let rel_err = crate::linalg::dist_sq(self.x(), &x_star) / denom;
+                trace.push(RoundRecord {
+                    round: k + 1,
+                    rel_err,
+                    bits_up,
+                    bits_refresh,
+                    bits_down,
+                    sim_time: 0.0,
+                    loss: if opts.record_loss {
+                        p.loss(self.x())
+                    } else {
+                        f64::NAN
+                    },
+                });
+                if rel_err <= opts.tol {
+                    trace.converged = true;
+                    break;
+                }
+                if !rel_err.is_finite() || rel_err > opts.blowup {
+                    trace.diverged = true;
+                    break;
+                }
+            }
+        }
+        trace
+    }
+}
+
+/// Sample the paper's starting point: entries i.i.d. normal with std 10
+/// ("sampled from the normal distribution N(0, 10)").
+pub fn paper_x0(d: usize, seed: u64) -> Vec<f64> {
+    let mut rng = crate::util::rng::Pcg64::with_stream(seed, 0x0f0);
+    (0..d).map(|_| rng.normal() * 10.0).collect()
+}

@@ -1,0 +1,86 @@
+//! Shift-update rules for DCGD-SHIFT (the colored line 8 of Algorithm 1).
+//!
+//! Table 2 of the paper, realized as one enum. All rules are expressed in
+//! the unified form `h_i^{k+1} = s_i^k + C_i(∇f_i(x^k) − s_i^k)`:
+//!
+//! | Rule        | `s_i^k`         | `C_i`                  | VR |
+//! |-------------|-----------------|------------------------|----|
+//! | `Fixed`     | `h_i⁰` (const)  | `O` (zero)             | ✗  |
+//! | `Star`      | `∇f_i(x*)`      | any `C_i ∈ B(δ)`       | ✓  |
+//! | `Diana`     | `h_i^k`         | `α·Q_ind,i`            | ✓  |
+//! | `RandDiana` | `h_i^k`         | `B_{p_i}` (Bernoulli)  | ✓  |
+
+use crate::compressors::Compressor;
+
+/// Per-worker shift rule (owning the rule's compressor where applicable).
+pub enum ShiftRule {
+    /// `h_i^k ≡ h_i⁰` — covers plain DCGD (zero shifts) and DCGD-SHIFT
+    /// with arbitrary fixed shifts (Theorem 1).
+    Fixed,
+    /// DCGD-STAR (Theorem 2): `h_i^k = ∇f_i(x*) + C_i(∇f_i(x^k) − ∇f_i(x*))`.
+    /// `c = None` means the zero operator (simplest optimal shift
+    /// `h_i = ∇f_i(x*)`), per the paper's "δ_i interpreted as zero".
+    Star { c: Option<Box<dyn Compressor>> },
+    /// Generalized DIANA (Theorem 3):
+    /// `h_i^{k+1} = h_i^k + α·[C_i(v) + Q_i(v − C_i(v))]`, `v = ∇f_i − h_i^k`.
+    /// `c = None` recovers the classic DIANA update (11).
+    Diana {
+        alpha: f64,
+        c: Option<Box<dyn Compressor>>,
+    },
+    /// Rand-DIANA (Theorem 4): `h_i^k = ∇f_i(w_i^k)`, `w_i` refreshed to the
+    /// current iterate with probability `p` each round.
+    RandDiana { p: f64 },
+}
+
+impl ShiftRule {
+    pub fn label(&self) -> String {
+        match self {
+            ShiftRule::Fixed => "fixed".into(),
+            ShiftRule::Star { c } => match c {
+                Some(c) => format!("star({})", c.name()),
+                None => "star".into(),
+            },
+            ShiftRule::Diana { alpha, c } => match c {
+                Some(c) => format!("diana(α={alpha:.4}, C={})", c.name()),
+                None => format!("diana(α={alpha:.4})"),
+            },
+            ShiftRule::RandDiana { p } => format!("rand-diana(p={p:.4})"),
+        }
+    }
+
+    /// Is this a variance-reduced rule (shift converges to ∇f_i(x*))?
+    pub fn is_variance_reduced(&self) -> bool {
+        !matches!(self, ShiftRule::Fixed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::TopK;
+
+    #[test]
+    fn labels_are_descriptive() {
+        assert_eq!(ShiftRule::Fixed.label(), "fixed");
+        assert!(ShiftRule::Star { c: None }.label().starts_with("star"));
+        let d = ShiftRule::Diana {
+            alpha: 0.1,
+            c: Some(Box::new(TopK::new(10, 2))),
+        };
+        assert!(d.label().contains("top-k"));
+        assert!(ShiftRule::RandDiana { p: 0.25 }.label().contains("0.25"));
+    }
+
+    #[test]
+    fn vr_classification_matches_table2() {
+        assert!(!ShiftRule::Fixed.is_variance_reduced());
+        assert!(ShiftRule::Star { c: None }.is_variance_reduced());
+        assert!(ShiftRule::Diana {
+            alpha: 0.1,
+            c: None
+        }
+        .is_variance_reduced());
+        assert!(ShiftRule::RandDiana { p: 0.1 }.is_variance_reduced());
+    }
+}

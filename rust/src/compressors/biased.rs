@@ -1,0 +1,238 @@
+//! Biased / contractive compression operators `C ∈ B(δ)` (Definition 1):
+//! `E‖C(x) − x‖² ≤ (1 − δ)‖x‖²`.
+
+use crate::compressors::packet::Packet;
+use crate::compressors::Compressor;
+use crate::linalg::nrm1;
+use crate::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------- Zero
+
+/// The zero operator `O`: maps everything to 0. This is the `C_i` of plain
+/// DCGD / DCGD-SHIFT in Table 2; the paper's convention is that its δ is
+/// "interpreted as zero" in the step-size rules.
+#[derive(Clone, Debug)]
+pub struct ZeroCompressor {
+    pub d: usize,
+}
+
+impl ZeroCompressor {
+    pub fn new(d: usize) -> Self {
+        Self { d }
+    }
+}
+
+impl Compressor for ZeroCompressor {
+    fn name(&self) -> String {
+        "zero".into()
+    }
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn compress(&self, _rng: &mut Pcg64, x: &[f64]) -> Packet {
+        assert_eq!(x.len(), self.d);
+        Packet::Zero { dim: self.d as u32 }
+    }
+    fn omega(&self) -> Option<f64> {
+        None // biased (E C(x) = 0 ≠ x)
+    }
+    fn delta(&self) -> Option<f64> {
+        Some(0.0) // E‖0 − x‖² = ‖x‖² = (1 − 0)‖x‖²
+    }
+    fn clone_box(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
+}
+
+// --------------------------------------------------------------------- Top-K
+
+/// Greedy sparsification (Top-K): keeps the K coordinates of largest
+/// magnitude. `C ∈ B(K/d)`.
+#[derive(Clone, Debug)]
+pub struct TopK {
+    pub d: usize,
+    pub k: usize,
+}
+
+impl TopK {
+    pub fn new(d: usize, k: usize) -> Self {
+        assert!(k >= 1 && k <= d, "Top-K needs 1 ≤ K ≤ d (got K={k}, d={d})");
+        Self { d, k }
+    }
+
+    pub fn with_q(d: usize, q: f64) -> Self {
+        let k = ((q * d as f64).round() as usize).clamp(1, d);
+        Self::new(d, k)
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> String {
+        format!("top-k({}/{})", self.k, self.d)
+    }
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn compress(&self, _rng: &mut Pcg64, x: &[f64]) -> Packet {
+        assert_eq!(x.len(), self.d);
+        // Partial selection of the K largest |x_i|.
+        let mut order: Vec<u32> = (0..self.d as u32).collect();
+        order.select_nth_unstable_by(self.k.saturating_sub(1), |&a, &b| {
+            x[b as usize]
+                .abs()
+                .partial_cmp(&x[a as usize].abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut indices: Vec<u32> = order[..self.k].to_vec();
+        indices.sort_unstable();
+        let values: Vec<f64> = indices.iter().map(|&i| x[i as usize]).collect();
+        Packet::Sparse {
+            dim: self.d as u32,
+            indices,
+            values,
+            scale: 1.0,
+        }
+    }
+    fn omega(&self) -> Option<f64> {
+        None // biased
+    }
+    fn delta(&self) -> Option<f64> {
+        Some(self.k as f64 / self.d as f64)
+    }
+    fn clone_box(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
+}
+
+// --------------------------------------------------------------- SignScaled
+
+/// ℓ1-scaled sign quantization (Karimireddy et al., 2019):
+/// `C(x) = (‖x‖₁/d) · sign(x)`. Contractive with
+/// `E‖C(x) − x‖² = ‖x‖² − ‖x‖₁²/d`, i.e. δ(x) = ‖x‖₁²/(d‖x‖²) ∈ [1/d, 1];
+/// we report the worst-case δ = 1/d.
+#[derive(Clone, Debug)]
+pub struct SignScaled {
+    pub d: usize,
+}
+
+impl SignScaled {
+    pub fn new(d: usize) -> Self {
+        Self { d }
+    }
+}
+
+impl Compressor for SignScaled {
+    fn name(&self) -> String {
+        "sign-l1".into()
+    }
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn compress(&self, _rng: &mut Pcg64, x: &[f64]) -> Packet {
+        assert_eq!(x.len(), self.d);
+        let scale = nrm1(x) / self.d as f64;
+        let signs = x.iter().map(|&v| v >= 0.0).collect();
+        Packet::SignScale {
+            dim: self.d as u32,
+            scale,
+            signs,
+        }
+    }
+    fn omega(&self) -> Option<f64> {
+        None
+    }
+    fn delta(&self) -> Option<f64> {
+        Some(1.0 / self.d as f64)
+    }
+    fn clone_box(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::empirical_variance_ratio;
+    use crate::linalg::nrm2_sq;
+
+    fn test_vec(d: usize, seed: u64) -> Vec<f64> {
+        let mut g = Pcg64::new(seed);
+        (0..d).map(|_| g.normal() * 2.0).collect()
+    }
+
+    #[test]
+    fn zero_maps_to_zero() {
+        let c = ZeroCompressor::new(4);
+        let mut rng = Pcg64::new(1);
+        assert_eq!(c.compress(&mut rng, &[1.0, 2.0, 3.0, 4.0]).decode(), vec![0.0; 4]);
+        assert_eq!(c.delta(), Some(0.0));
+        assert_eq!(c.omega(), None);
+    }
+
+    #[test]
+    fn topk_keeps_largest() {
+        let c = TopK::new(6, 2);
+        let x = [0.1, -5.0, 0.3, 4.0, -0.2, 0.05];
+        let mut rng = Pcg64::new(2);
+        let out = c.compress(&mut rng, &x).decode();
+        assert_eq!(out, vec![0.0, -5.0, 0.0, 4.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_contraction_bound_holds() {
+        // E‖C(x)−x‖² ≤ (1−K/d)‖x‖², deterministically for Top-K.
+        let d = 50;
+        for k in [1usize, 5, 25, 49, 50] {
+            let c = TopK::new(d, k);
+            let x = test_vec(d, 3 + k as u64);
+            let mut rng = Pcg64::new(4);
+            let err = crate::linalg::dist_sq(&c.compress(&mut rng, &x).decode(), &x);
+            let bound = (1.0 - c.delta().unwrap()) * nrm2_sq(&x);
+            assert!(err <= bound + 1e-9, "k={k}: {err} > {bound}");
+        }
+    }
+
+    #[test]
+    fn topk_is_the_best_k_sparse_approx() {
+        // Top-K error ≤ Rand-K(unscaled) error for the same K.
+        let d = 30;
+        let k = 6;
+        let x = test_vec(d, 5);
+        let top = TopK::new(d, k);
+        let mut rng = Pcg64::new(6);
+        let top_err = crate::linalg::dist_sq(&top.compress(&mut rng, &x).decode(), &x);
+        // random K-sparse selection without scaling
+        for trial in 0..20 {
+            let mut r = Pcg64::new(100 + trial);
+            let idx = r.subset(d, k);
+            let mut approx = vec![0.0; d];
+            for &i in &idx {
+                approx[i as usize] = x[i as usize];
+            }
+            assert!(top_err <= crate::linalg::dist_sq(&approx, &x) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn sign_contraction_bound() {
+        let d = 40;
+        let c = SignScaled::new(d);
+        let x = test_vec(d, 7);
+        let mut rng = Pcg64::new(8);
+        let ratio = empirical_variance_ratio(&c, &mut rng, &x, 10);
+        // must satisfy the B(1/d) bound; typically far better
+        assert!(ratio <= 1.0 - 1.0 / d as f64 + 1e-9, "ratio {ratio}");
+        // exact identity: ‖C(x)−x‖² = ‖x‖² − ‖x‖₁²/d
+        let expected = (nrm2_sq(&x) - nrm1(&x).powi(2) / d as f64) / nrm2_sq(&x);
+        assert!((ratio - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn topk_with_ties_keeps_exactly_k() {
+        let c = TopK::new(5, 3);
+        let x = [1.0, 1.0, 1.0, 1.0, 1.0];
+        let mut rng = Pcg64::new(9);
+        let out = c.compress(&mut rng, &x).decode();
+        assert_eq!(out.iter().filter(|&&v| v != 0.0).count(), 3);
+    }
+}

@@ -1,0 +1,164 @@
+//! Compression operators.
+//!
+//! Two classes from the paper (Definitions 1–2):
+//!
+//! * **Unbiased** `Q ∈ U(ω)`: `E Q(x) = x` and `E‖Q(x) − x‖² ≤ ω‖x‖²`.
+//! * **Contractive (possibly biased)** `C ∈ B(δ)`:
+//!   `E‖C(x) − x‖² ≤ (1 − δ)‖x‖²`, δ ∈ (0, 1].
+//!
+//! plus the paper's central concept, the **shifted compressor**
+//! `Q_h(x) = h + Q(x − h) ∈ U(ω; h)` (Definition 3, realized by
+//! [`combinators::Shifted`]) and the **induced compressor**
+//! `Q_ind(x) = C(x) + Q(x − C(x)) ∈ U(ω(1 − δ))` (Definition 4,
+//! [`combinators::Induced`]).
+//!
+//! Every compressor returns a [`Packet`] whose wire encoding defines the
+//! *measured* communicated bits. ω/δ accessors expose the theoretical
+//! constants consumed by the step-size rules in [`crate::theory`].
+
+pub mod biased;
+pub mod combinators;
+pub mod packet;
+pub mod unbiased;
+
+pub use biased::{SignScaled, TopK, ZeroCompressor};
+pub use combinators::{Induced, Scaled, Shifted};
+pub use packet::{index_bits, Packet, ValPrec};
+pub use unbiased::{
+    BernoulliP, Identity, NaturalCompression, NaturalDithering, RandK, StandardDithering, Ternary,
+};
+
+use crate::util::rng::Pcg64;
+
+/// A (possibly randomized) compression operator `R^d → R^d`.
+pub trait Compressor: Send + Sync {
+    /// Short human-readable identifier, e.g. `rand-k(8/80)`.
+    fn name(&self) -> String;
+
+    /// Dimension this operator was constructed for.
+    fn dim(&self) -> usize;
+
+    /// Apply the operator to `x` using the caller's RNG stream.
+    fn compress(&self, rng: &mut Pcg64, x: &[f64]) -> Packet;
+
+    /// Unbiased variance parameter ω with `E‖Q(x) − x‖² ≤ ω‖x‖²`,
+    /// or `None` if the operator is biased.
+    fn omega(&self) -> Option<f64>;
+
+    /// Contraction parameter δ with `E‖C(x) − x‖² ≤ (1 − δ)‖x‖²`.
+    ///
+    /// Defined for every operator in the library: for unbiased `Q ∈ U(ω)`,
+    /// the *scaled* operator `Q/(ω+1) ∈ B(1/(ω+1))`, and we report that
+    /// canonical value (Beznosikov et al., 2020). For the Zero operator the
+    /// paper's convention "δ interpreted as 0" applies.
+    fn delta(&self) -> Option<f64> {
+        self.omega().map(|w| 1.0 / (w + 1.0))
+    }
+
+    fn clone_box(&self) -> Box<dyn Compressor>;
+}
+
+impl Clone for Box<dyn Compressor> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+/// Convenience: compress and immediately decode to a dense vector,
+/// returning the payload bit count too. Single-process algorithm drivers
+/// use this; the distributed coordinator keeps the packet and encodes it.
+pub fn compress_dense(
+    c: &dyn Compressor,
+    rng: &mut Pcg64,
+    x: &[f64],
+    prec: ValPrec,
+) -> (Vec<f64>, u64) {
+    let pkt = c.compress(rng, x);
+    let bits = pkt.payload_bits(prec);
+    (pkt.decode(), bits)
+}
+
+/// Monte-Carlo estimate of `E‖Q(x) − x‖² / ‖x‖²` at a given point — used by
+/// tests to verify ω (and `1 − δ`) bounds empirically.
+pub fn empirical_variance_ratio(
+    c: &dyn Compressor,
+    rng: &mut Pcg64,
+    x: &[f64],
+    trials: usize,
+) -> f64 {
+    let xn = crate::linalg::nrm2_sq(x);
+    if xn == 0.0 {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    let mut buf = vec![0.0; x.len()];
+    for _ in 0..trials {
+        let pkt = c.compress(rng, x);
+        pkt.decode_into(&mut buf);
+        acc += crate::linalg::dist_sq(&buf, x);
+    }
+    acc / trials as f64 / xn
+}
+
+/// Monte-Carlo estimate of the bias `‖E Q(x) − x‖ / ‖x‖`.
+pub fn empirical_bias_ratio(
+    c: &dyn Compressor,
+    rng: &mut Pcg64,
+    x: &[f64],
+    trials: usize,
+) -> f64 {
+    let mut mean = vec![0.0; x.len()];
+    let mut buf = vec![0.0; x.len()];
+    for _ in 0..trials {
+        let pkt = c.compress(rng, x);
+        pkt.decode_into(&mut buf);
+        crate::linalg::axpy(1.0, &buf, &mut mean);
+    }
+    crate::linalg::scale(1.0 / trials as f64, &mut mean);
+    let xn = crate::linalg::nrm2(x);
+    if xn == 0.0 {
+        return crate::linalg::nrm2(&mean);
+    }
+    let diff: f64 = mean
+        .iter()
+        .zip(x.iter())
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        .sqrt();
+    diff / xn
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compress_dense_matches_packet_decode() {
+        let mut rng = Pcg64::new(5);
+        let c = RandK::new(10, 4);
+        let x: Vec<f64> = (0..10).map(|i| i as f64 - 4.5).collect();
+        let mut rng2 = rng.clone();
+        let (dense, bits) = compress_dense(&c, &mut rng, &x, ValPrec::F64);
+        let pkt = c.compress(&mut rng2, &x);
+        assert_eq!(dense, pkt.decode());
+        assert_eq!(bits, pkt.payload_bits(ValPrec::F64));
+    }
+
+    #[test]
+    fn box_clone_preserves_behaviour() {
+        let c: Box<dyn Compressor> = Box::new(RandK::new(8, 2));
+        let c2 = c.clone();
+        assert_eq!(c.name(), c2.name());
+        assert_eq!(c.omega(), c2.omega());
+        let mut r1 = Pcg64::new(1);
+        let mut r2 = Pcg64::new(1);
+        let x = vec![1.0; 8];
+        assert_eq!(c.compress(&mut r1, &x), c2.compress(&mut r2, &x));
+    }
+
+    #[test]
+    fn default_delta_is_scaled_inverse() {
+        let c = RandK::new(10, 5); // omega = 1
+        assert!((c.delta().unwrap() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,356 @@
+//! The on-the-wire representation of a compressed vector.
+//!
+//! Compressors produce a [`Packet`]; the coordinator serializes packets with
+//! [`crate::wire`] before "sending" them. Bit accounting is derived from the
+//! packet structure itself (what an efficient encoder actually needs), so
+//! the x-axis of the paper's figures — *communicated bits* — is measured,
+//! not assumed.
+
+/// Floating-point precision used for values on the wire.
+///
+/// The paper's simulations run in NumPy float64; we default to [`F64`] so
+/// deep-convergence curves (relative errors down to 1e-30) are faithful,
+/// and support [`F32`] for the common 32-bit accounting convention.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValPrec {
+    F32,
+    F64,
+}
+
+impl ValPrec {
+    #[inline]
+    pub fn bits(self) -> u64 {
+        match self {
+            ValPrec::F32 => 32,
+            ValPrec::F64 => 64,
+        }
+    }
+}
+
+/// Compressed message payloads.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Packet {
+    /// Uncompressed dense vector (Identity compressor, shift uploads).
+    Dense(Vec<f64>),
+    /// Sparse subset: sorted indices + values (+ an overall scale applied at
+    /// decode, used by Rand-K's d/K factor so values stay at their original
+    /// magnitudes on the wire).
+    Sparse {
+        dim: u32,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+        scale: f64,
+    },
+    /// Dithering-style quantization: one norm + per-coordinate sign and
+    /// level index in `0..=s` (level 0 ⇒ coordinate is zero). Decoded value
+    /// is `sign * norm * 2^(level - s)` for level ≥ 1.
+    Levels {
+        dim: u32,
+        norm: f64,
+        /// number of exponent levels `s` (level indices fit in
+        /// `ceil(log2(s+1))` bits)
+        s: u8,
+        signs: Vec<bool>,
+        levels: Vec<u8>,
+    },
+    /// Linear-grid dithering (QSGD-style): one norm + per-coordinate sign
+    /// and integer level in `0..=s`; decoded value is
+    /// `sign * norm * level / s`.
+    LevelsLinear {
+        dim: u32,
+        norm: f64,
+        s: u32,
+        signs: Vec<bool>,
+        levels: Vec<u8>,
+    },
+    /// Natural compression: per-coordinate sign + 8-bit exponent (the
+    /// "float without mantissa" format). `exps[i] = i8::MIN` encodes an
+    /// exact zero.
+    NatExp { dim: u32, signs: Vec<bool>, exps: Vec<i8> },
+    /// Sign quantization with a single scale: `scale * sign(x_i)`.
+    SignScale {
+        dim: u32,
+        scale: f64,
+        signs: Vec<bool>,
+    },
+    /// Ternary: sign bitmap + presence bitmap + one scale.
+    TernaryPkt {
+        dim: u32,
+        scale: f64,
+        /// non-zero mask
+        mask: Vec<bool>,
+        /// signs of the non-zero entries (len = popcount(mask))
+        signs: Vec<bool>,
+    },
+    /// The zero vector (Bernoulli miss / Zero compressor): one flag bit.
+    Zero { dim: u32 },
+}
+
+impl Packet {
+    pub fn dim(&self) -> usize {
+        match self {
+            Packet::Dense(v) => v.len(),
+            Packet::Sparse { dim, .. }
+            | Packet::Levels { dim, .. }
+            | Packet::LevelsLinear { dim, .. }
+            | Packet::NatExp { dim, .. }
+            | Packet::SignScale { dim, .. }
+            | Packet::TernaryPkt { dim, .. }
+            | Packet::Zero { dim } => *dim as usize,
+        }
+    }
+
+    /// Decode into a dense vector (must be zeroed-capacity `dim` long).
+    pub fn decode_into(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.dim(), "decode dim mismatch");
+        match self {
+            Packet::Dense(v) => out.copy_from_slice(v),
+            Packet::Sparse {
+                indices,
+                values,
+                scale,
+                ..
+            } => {
+                out.iter_mut().for_each(|o| *o = 0.0);
+                for (i, v) in indices.iter().zip(values.iter()) {
+                    out[*i as usize] = scale * v;
+                }
+            }
+            Packet::Levels {
+                norm,
+                s,
+                signs,
+                levels,
+                ..
+            } => {
+                for i in 0..out.len() {
+                    let lvl = levels[i];
+                    out[i] = if lvl == 0 {
+                        0.0
+                    } else {
+                        let mag = norm * 2f64.powi(lvl as i32 - *s as i32);
+                        if signs[i] {
+                            mag
+                        } else {
+                            -mag
+                        }
+                    };
+                }
+            }
+            Packet::LevelsLinear {
+                norm,
+                s,
+                signs,
+                levels,
+                ..
+            } => {
+                for i in 0..out.len() {
+                    let mag = norm * levels[i] as f64 / *s as f64;
+                    out[i] = if levels[i] == 0 {
+                        0.0
+                    } else if signs[i] {
+                        mag
+                    } else {
+                        -mag
+                    };
+                }
+            }
+            Packet::NatExp { signs, exps, .. } => {
+                for i in 0..out.len() {
+                    out[i] = if exps[i] == i8::MIN {
+                        0.0
+                    } else {
+                        let mag = 2f64.powi(exps[i] as i32);
+                        if signs[i] {
+                            mag
+                        } else {
+                            -mag
+                        }
+                    };
+                }
+            }
+            Packet::SignScale { scale, signs, .. } => {
+                for i in 0..out.len() {
+                    out[i] = if signs[i] { *scale } else { -*scale };
+                }
+            }
+            Packet::TernaryPkt {
+                scale,
+                mask,
+                signs,
+                ..
+            } => {
+                let mut sign_cursor = 0;
+                for i in 0..out.len() {
+                    if mask[i] {
+                        out[i] = if signs[sign_cursor] { *scale } else { -*scale };
+                        sign_cursor += 1;
+                    } else {
+                        out[i] = 0.0;
+                    }
+                }
+            }
+            Packet::Zero { .. } => out.iter_mut().for_each(|o| *o = 0.0),
+        }
+    }
+
+    pub fn decode(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.decode_into(&mut out);
+        out
+    }
+
+    /// Exact number of payload bits an efficient encoder needs for this
+    /// packet (matches [`crate::wire`]'s bit-level encoding, excluding the
+    /// fixed per-message header). This is what the "communicated bits"
+    /// axis of the figures integrates.
+    pub fn payload_bits(&self, prec: ValPrec) -> u64 {
+        let vb = prec.bits();
+        match self {
+            Packet::Dense(v) => v.len() as u64 * vb,
+            Packet::Sparse {
+                dim,
+                indices,
+                values,
+                ..
+            } => {
+                let idx_bits = index_bits(*dim);
+                indices.len() as u64 * idx_bits + values.len() as u64 * vb + vb /* scale */
+            }
+            Packet::Levels { dim, s, .. } => {
+                let lvl_bits = bits_for_levels(*s);
+                vb /* norm */ + (*dim as u64) * (1 + lvl_bits)
+            }
+            Packet::LevelsLinear { dim, s, .. } => {
+                let n = s + 1; // levels 0..=s
+                let lvl_bits = if n <= 1 {
+                    1
+                } else {
+                    (32 - (n - 1).leading_zeros()) as u64
+                };
+                vb /* norm */ + (*dim as u64) * (1 + lvl_bits)
+            }
+            Packet::NatExp { dim, .. } => (*dim as u64) * 9, // sign + 8-bit exponent
+            Packet::SignScale { dim, .. } => vb + *dim as u64,
+            Packet::TernaryPkt { dim, signs, .. } => vb + *dim as u64 + signs.len() as u64,
+            Packet::Zero { .. } => 1,
+        }
+    }
+}
+
+/// Bits needed per index for a vector of dimension `dim`.
+#[inline]
+pub fn index_bits(dim: u32) -> u64 {
+    if dim <= 1 {
+        1
+    } else {
+        (32 - (dim - 1).leading_zeros()) as u64
+    }
+}
+
+/// Bits needed to store a level index in `0..=s`.
+#[inline]
+pub fn bits_for_levels(s: u8) -> u64 {
+    let n = s as u32 + 1; // levels 0..=s
+    if n <= 1 {
+        1
+    } else {
+        (32 - (n - 1).leading_zeros()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_roundtrip() {
+        let p = Packet::Dense(vec![1.0, -2.0, 3.5]);
+        assert_eq!(p.decode(), vec![1.0, -2.0, 3.5]);
+        assert_eq!(p.payload_bits(ValPrec::F64), 3 * 64);
+        assert_eq!(p.payload_bits(ValPrec::F32), 3 * 32);
+    }
+
+    #[test]
+    fn sparse_decode_applies_scale() {
+        let p = Packet::Sparse {
+            dim: 5,
+            indices: vec![1, 4],
+            values: vec![2.0, -1.0],
+            scale: 2.5,
+        };
+        assert_eq!(p.decode(), vec![0.0, 5.0, 0.0, 0.0, -2.5]);
+        // 3 index bits for dim=5, two values + scale in f64
+        assert_eq!(p.payload_bits(ValPrec::F64), 2 * 3 + 3 * 64);
+    }
+
+    #[test]
+    fn levels_decode() {
+        // s = 3: level l decodes to norm * 2^(l-3); level 0 is zero.
+        let p = Packet::Levels {
+            dim: 4,
+            norm: 8.0,
+            s: 3,
+            signs: vec![true, false, true, true],
+            levels: vec![3, 2, 0, 1],
+        };
+        assert_eq!(p.decode(), vec![8.0, -4.0, 0.0, 2.0]);
+        // norm (64) + 4 * (1 sign + 2 level bits)
+        assert_eq!(p.payload_bits(ValPrec::F64), 64 + 4 * 3);
+    }
+
+    #[test]
+    fn natexp_decode() {
+        let p = Packet::NatExp {
+            dim: 3,
+            signs: vec![true, false, true],
+            exps: vec![2, -1, i8::MIN],
+        };
+        assert_eq!(p.decode(), vec![4.0, -0.5, 0.0]);
+        assert_eq!(p.payload_bits(ValPrec::F64), 27);
+    }
+
+    #[test]
+    fn sign_and_ternary_decode() {
+        let p = Packet::SignScale {
+            dim: 3,
+            scale: 0.5,
+            signs: vec![true, false, true],
+        };
+        assert_eq!(p.decode(), vec![0.5, -0.5, 0.5]);
+
+        let t = Packet::TernaryPkt {
+            dim: 4,
+            scale: 3.0,
+            mask: vec![true, false, false, true],
+            signs: vec![false, true],
+        };
+        assert_eq!(t.decode(), vec![-3.0, 0.0, 0.0, 3.0]);
+        assert_eq!(t.payload_bits(ValPrec::F64), 64 + 4 + 2);
+    }
+
+    #[test]
+    fn zero_packet() {
+        let p = Packet::Zero { dim: 7 };
+        assert_eq!(p.decode(), vec![0.0; 7]);
+        assert_eq!(p.payload_bits(ValPrec::F64), 1);
+    }
+
+    #[test]
+    fn index_bit_widths() {
+        assert_eq!(index_bits(1), 1);
+        assert_eq!(index_bits(2), 1);
+        assert_eq!(index_bits(3), 2);
+        assert_eq!(index_bits(80), 7);
+        assert_eq!(index_bits(256), 8);
+        assert_eq!(index_bits(257), 9);
+    }
+
+    #[test]
+    fn level_bit_widths() {
+        assert_eq!(bits_for_levels(1), 1); // levels {0,1}
+        assert_eq!(bits_for_levels(3), 2); // {0..3}
+        assert_eq!(bits_for_levels(4), 3); // {0..4}
+        assert_eq!(bits_for_levels(15), 4);
+    }
+}

@@ -1,0 +1,638 @@
+//! Unbiased compression operators `Q ∈ U(ω)` (Definition 2).
+//!
+//! | Operator             | ω                                             | wire payload |
+//! |----------------------|-----------------------------------------------|--------------|
+//! | [`Identity`]         | 0                                             | d values |
+//! | [`RandK`]            | d/K − 1                                       | K indices + K values |
+//! | [`NaturalDithering`] | 1/8 + d^{1/p}·2^{1−s}·min(1, d^{1/p}·2^{1−s}) | 1 norm + d·(1+⌈log₂(s+1)⌉) bits |
+//! | [`StandardDithering`]| min(d/s², √d/s) (QSGD bound)                  | same shape |
+//! | [`NaturalCompression`]| 1/8                                          | 9 bits/coordinate |
+//! | [`BernoulliP`]       | 1/p − 1                                       | dense w.p. p, else 1 bit |
+//! | [`Ternary`]          | √d − 1 (worst case)                           | 1 scale + ≤2 bits/coordinate |
+
+use crate::compressors::packet::Packet;
+use crate::compressors::Compressor;
+use crate::linalg::{nrm2, nrm_inf, nrmp};
+use crate::util::rng::Pcg64;
+
+/// `floor(log2(x))` for finite positive normal `x`, via the IEEE-754
+/// exponent field — ~10× cheaper than `x.log2().floor()` on the dithering
+/// hot path. Falls back to the slow path for subnormals.
+#[inline]
+fn log2_floor(x: f64) -> i32 {
+    debug_assert!(x > 0.0);
+    let bits = x.to_bits();
+    let exp = ((bits >> 52) & 0x7ff) as i32;
+    if exp == 0 {
+        // subnormal — rare (|x_i|/norm below 2^-1022)
+        return x.log2().floor() as i32;
+    }
+    exp - 1023
+}
+
+/// `2^e` for |e| ≤ 1022 via bit construction (no `powi` call).
+#[inline]
+fn exp2_i(e: i32) -> f64 {
+    debug_assert!((-1022..=1023).contains(&e));
+    f64::from_bits(((e + 1023) as u64) << 52)
+}
+
+// ------------------------------------------------------------------ Identity
+
+/// The identity operator: ω = 0, full communication. `DGD` in Table 2.
+#[derive(Clone, Debug)]
+pub struct Identity {
+    pub d: usize,
+}
+
+impl Identity {
+    pub fn new(d: usize) -> Self {
+        Self { d }
+    }
+}
+
+impl Compressor for Identity {
+    fn name(&self) -> String {
+        "identity".into()
+    }
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn compress(&self, _rng: &mut Pcg64, x: &[f64]) -> Packet {
+        Packet::Dense(x.to_vec())
+    }
+    fn omega(&self) -> Option<f64> {
+        Some(0.0)
+    }
+    fn clone_box(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
+}
+
+// -------------------------------------------------------------------- Rand-K
+
+/// Random sparsification (Rand-K), Eq. (2) of the paper:
+/// `Q(x) = (d/K) Σ_{i∈S} x_i e_i` over a uniformly random K-subset S.
+/// `Q ∈ U(d/K − 1)`.
+#[derive(Clone, Debug)]
+pub struct RandK {
+    pub d: usize,
+    pub k: usize,
+}
+
+impl RandK {
+    pub fn new(d: usize, k: usize) -> Self {
+        assert!(k >= 1 && k <= d, "Rand-K needs 1 ≤ K ≤ d (got K={k}, d={d})");
+        Self { d, k }
+    }
+
+    /// Construct from the paper's `q = K/d` share of kept coordinates.
+    pub fn with_q(d: usize, q: f64) -> Self {
+        let k = ((q * d as f64).round() as usize).clamp(1, d);
+        Self::new(d, k)
+    }
+
+    pub fn q(&self) -> f64 {
+        self.k as f64 / self.d as f64
+    }
+}
+
+impl Compressor for RandK {
+    fn name(&self) -> String {
+        format!("rand-k({}/{})", self.k, self.d)
+    }
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn compress(&self, rng: &mut Pcg64, x: &[f64]) -> Packet {
+        assert_eq!(x.len(), self.d);
+        let indices = rng.subset(self.d, self.k);
+        let values: Vec<f64> = indices.iter().map(|&i| x[i as usize]).collect();
+        Packet::Sparse {
+            dim: self.d as u32,
+            indices,
+            values,
+            scale: self.d as f64 / self.k as f64,
+        }
+    }
+    fn omega(&self) -> Option<f64> {
+        Some(self.d as f64 / self.k as f64 - 1.0)
+    }
+    fn clone_box(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
+}
+
+// -------------------------------------------------------- Natural Dithering
+
+/// Natural Dithering `D^{nat}_{p,s}` (Horváth et al., 2019a): coordinates
+/// are randomly rounded to the binary level grid
+/// `{0, 2^{1−s}, 2^{2−s}, …, 2^{−1}, 1} · ‖x‖_p`, preserving expectations.
+///
+/// ω = 1/8 + d^{1/p}·2^{1−s} · min(1, d^{1/p}·2^{1−s}).
+#[derive(Clone, Debug)]
+pub struct NaturalDithering {
+    pub d: usize,
+    /// number of binary levels s ≥ 1
+    pub s: u8,
+    /// which ℓp norm scales the grid (paper's experiments use p = 2)
+    pub p: f64,
+}
+
+impl NaturalDithering {
+    pub fn new(d: usize, s: u8, p: f64) -> Self {
+        assert!(s >= 1, "need at least one level");
+        assert!(p >= 1.0);
+        Self { d, s, p }
+    }
+
+    pub fn l2(d: usize, s: u8) -> Self {
+        Self::new(d, s, 2.0)
+    }
+
+    pub fn omega_formula(d: usize, s: u8, p: f64) -> f64 {
+        let r = (d as f64).powf(1.0 / p) * 2f64.powi(1 - s as i32);
+        0.125 + r * r.min(1.0)
+    }
+}
+
+impl Compressor for NaturalDithering {
+    fn name(&self) -> String {
+        format!("nat-dith(s={}, p={})", self.s, self.p)
+    }
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn compress(&self, rng: &mut Pcg64, x: &[f64]) -> Packet {
+        assert_eq!(x.len(), self.d);
+        let norm = nrmp(x, self.p);
+        let s = self.s;
+        let mut signs = vec![false; self.d];
+        let mut levels = vec![0u8; self.d];
+        if norm == 0.0 {
+            return Packet::Levels {
+                dim: self.d as u32,
+                norm: 0.0,
+                s,
+                signs,
+                levels,
+            };
+        }
+        let inv_norm = 1.0 / norm; // one divide, d multiplies (§Perf)
+        let tiny = exp2_i(1 - s as i32); // smallest positive grid level
+        for i in 0..self.d {
+            let v = x[i];
+            signs[i] = v >= 0.0;
+            let u = v.abs() * inv_norm; // ∈ [0, 1]
+            if u == 0.0 {
+                continue;
+            }
+            // Find the bracketing binary levels. Level index l ∈ {1..s}
+            // decodes to 2^{l−s}; level 0 decodes to 0.
+            // Upper level: smallest grid point ≥ u  (clamped to 1).
+            // floor(log2): u ∈ [2^{e}, 2^{e+1}). Bit-level fast paths —
+            // see log2_floor/exp2_i (§Perf).
+            let e = log2_floor(u); // u ≥ 2^e
+            let lo_exp = e.max(1 - s as i32).min(0); // grid exponent of lower bracket
+            let lo = if u >= tiny {
+                exp2_i(lo_exp)
+            } else {
+                0.0 // below the smallest positive level
+            };
+            let hi = if lo == 0.0 {
+                tiny
+            } else {
+                exp2_i((lo_exp + 1).min(0))
+            };
+            let (lo, hi) = if u >= 1.0 {
+                (1.0, 1.0)
+            } else if (u - lo).abs() < f64::EPSILON * lo {
+                (lo, lo)
+            } else {
+                (lo, hi)
+            };
+            let chosen = if hi == lo {
+                hi
+            } else {
+                // unbiased randomized rounding between lo and hi
+                let p_hi = (u - lo) / (hi - lo);
+                if rng.bernoulli(p_hi) {
+                    hi
+                } else {
+                    lo
+                }
+            };
+            levels[i] = if chosen == 0.0 {
+                0
+            } else {
+                // chosen = 2^{l−s} ⇒ l = log2(chosen) + s (exact powers of
+                // two: the exponent field IS the answer)
+                (log2_floor(chosen) + s as i32) as u8
+            };
+        }
+        Packet::Levels {
+            dim: self.d as u32,
+            norm,
+            s,
+            signs,
+            levels,
+        }
+    }
+    fn omega(&self) -> Option<f64> {
+        Some(Self::omega_formula(self.d, self.s, self.p))
+    }
+    fn clone_box(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
+}
+
+// -------------------------------------------------------- Standard Dithering
+
+/// Standard (linear-grid) random dithering with s uniform levels — the QSGD
+/// quantizer (Alistarh et al., 2017). ω = min(d/s², √d/s).
+#[derive(Clone, Debug)]
+pub struct StandardDithering {
+    pub d: usize,
+    pub s: u32,
+}
+
+impl StandardDithering {
+    pub fn new(d: usize, s: u32) -> Self {
+        assert!(s >= 1);
+        Self { d, s }
+    }
+}
+
+impl Compressor for StandardDithering {
+    fn name(&self) -> String {
+        format!("std-dith(s={})", self.s)
+    }
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn compress(&self, rng: &mut Pcg64, x: &[f64]) -> Packet {
+        assert_eq!(x.len(), self.d);
+        assert!(self.s <= 255, "StandardDithering supports s ≤ 255");
+        let norm = nrm2(x);
+        let s = self.s as f64;
+        let mut signs = vec![false; self.d];
+        let mut levels = vec![0u8; self.d];
+        if norm > 0.0 {
+            for i in 0..self.d {
+                let v = x[i];
+                signs[i] = v >= 0.0;
+                // Randomized rounding on the uniform grid {0, 1/s, ..., 1}:
+                // level q satisfies E[q/s] = |v|/norm.
+                let u = v.abs() / norm * s; // ∈ [0, s]
+                let lo = u.floor();
+                let p_hi = u - lo;
+                let q = lo + if rng.bernoulli(p_hi) { 1.0 } else { 0.0 };
+                levels[i] = q as u8;
+            }
+        }
+        Packet::LevelsLinear {
+            dim: self.d as u32,
+            norm,
+            s: self.s,
+            signs,
+            levels,
+        }
+    }
+    fn omega(&self) -> Option<f64> {
+        let d = self.d as f64;
+        let s = self.s as f64;
+        Some((d / (s * s)).min(d.sqrt() / s))
+    }
+    fn clone_box(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
+}
+
+// ------------------------------------------------------- Natural Compression
+
+/// Natural compression `C_{nat}` (Horváth et al., 2019a): randomized
+/// rounding of each coordinate to the nearest power of two, preserving the
+/// sign and expectation. ω = 1/8; 9 bits per coordinate on the wire.
+#[derive(Clone, Debug)]
+pub struct NaturalCompression {
+    pub d: usize,
+}
+
+impl NaturalCompression {
+    pub fn new(d: usize) -> Self {
+        Self { d }
+    }
+}
+
+impl Compressor for NaturalCompression {
+    fn name(&self) -> String {
+        "nat-comp".into()
+    }
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn compress(&self, rng: &mut Pcg64, x: &[f64]) -> Packet {
+        assert_eq!(x.len(), self.d);
+        let mut signs = vec![false; self.d];
+        let mut exps = vec![i8::MIN; self.d];
+        for i in 0..self.d {
+            let v = x[i];
+            signs[i] = v >= 0.0;
+            let a = v.abs();
+            if a == 0.0 {
+                continue;
+            }
+            let e = log2_floor(a);
+            let lo = if (-1022..=1023).contains(&e) {
+                exp2_i(e)
+            } else {
+                2f64.powi(e)
+            };
+            let p_hi = (a - lo) / lo; // ∈ [0, 1): round up to 2^{e+1} w.p. (a−2^e)/2^e
+            let chosen_e = if rng.bernoulli(p_hi) { e + 1 } else { e };
+            // clamp to i8 exponent range (|x| ∈ [2^-126, 2^127] covers f32)
+            exps[i] = chosen_e.clamp(-126, 127) as i8;
+        }
+        Packet::NatExp {
+            dim: self.d as u32,
+            signs,
+            exps,
+        }
+    }
+    fn omega(&self) -> Option<f64> {
+        Some(0.125)
+    }
+    fn clone_box(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
+}
+
+// ------------------------------------------------------------- Bernoulli_p
+
+/// The Bernoulli compressor `B_p` from Table 2: the *whole vector* is sent
+/// (scaled by 1/p) with probability p, otherwise nothing is sent.
+/// Unbiased with ω = 1/p − 1. This is the natural `C_i` realization of the
+/// Rand-DIANA shift update viewed through the shift form (4).
+#[derive(Clone, Debug)]
+pub struct BernoulliP {
+    pub d: usize,
+    pub p: f64,
+}
+
+impl BernoulliP {
+    pub fn new(d: usize, p: f64) -> Self {
+        assert!(p > 0.0 && p <= 1.0, "Bernoulli needs p ∈ (0, 1]");
+        Self { d, p }
+    }
+}
+
+impl Compressor for BernoulliP {
+    fn name(&self) -> String {
+        format!("bernoulli(p={})", self.p)
+    }
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn compress(&self, rng: &mut Pcg64, x: &[f64]) -> Packet {
+        assert_eq!(x.len(), self.d);
+        if rng.bernoulli(self.p) {
+            Packet::Dense(x.iter().map(|v| v / self.p).collect())
+        } else {
+            Packet::Zero { dim: self.d as u32 }
+        }
+    }
+    fn omega(&self) -> Option<f64> {
+        Some(1.0 / self.p - 1.0)
+    }
+    fn clone_box(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
+}
+
+// ------------------------------------------------------------------ Ternary
+
+/// TernGrad-style ternary quantization (Wen et al., 2017):
+/// `Q(x)_i = ‖x‖_∞ · sign(x_i) · Bernoulli(|x_i|/‖x‖_∞)`.
+/// Unbiased; `E‖Q(x)‖² ≤ ‖x‖_∞‖x‖₁ ≤ √d‖x‖²` ⇒ ω ≤ √d − 1.
+#[derive(Clone, Debug)]
+pub struct Ternary {
+    pub d: usize,
+}
+
+impl Ternary {
+    pub fn new(d: usize) -> Self {
+        Self { d }
+    }
+}
+
+impl Compressor for Ternary {
+    fn name(&self) -> String {
+        "ternary".into()
+    }
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn compress(&self, rng: &mut Pcg64, x: &[f64]) -> Packet {
+        assert_eq!(x.len(), self.d);
+        let scale = nrm_inf(x);
+        let mut mask = vec![false; self.d];
+        let mut signs = Vec::new();
+        if scale > 0.0 {
+            for i in 0..self.d {
+                let p = x[i].abs() / scale;
+                if rng.bernoulli(p) {
+                    mask[i] = true;
+                    signs.push(x[i] >= 0.0);
+                }
+            }
+        }
+        Packet::TernaryPkt {
+            dim: self.d as u32,
+            scale,
+            mask,
+            signs,
+        }
+    }
+    fn omega(&self) -> Option<f64> {
+        Some((self.d as f64).sqrt() - 1.0)
+    }
+    fn clone_box(&self) -> Box<dyn Compressor> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::{empirical_bias_ratio, empirical_variance_ratio};
+
+    fn test_vec(d: usize, seed: u64) -> Vec<f64> {
+        let mut g = Pcg64::new(seed);
+        (0..d).map(|_| g.normal() * 3.0 + 0.5).collect()
+    }
+
+    #[test]
+    fn identity_is_exact() {
+        let c = Identity::new(6);
+        let x = test_vec(6, 1);
+        let mut rng = Pcg64::new(2);
+        assert_eq!(c.compress(&mut rng, &x).decode(), x);
+        assert_eq!(c.omega(), Some(0.0));
+    }
+
+    #[test]
+    fn randk_keeps_k_scaled_coordinates() {
+        let c = RandK::new(10, 3);
+        let x = test_vec(10, 3);
+        let mut rng = Pcg64::new(4);
+        let out = c.compress(&mut rng, &x).decode();
+        let nonzero: Vec<usize> = (0..10).filter(|&i| out[i] != 0.0).collect();
+        assert!(nonzero.len() <= 3);
+        for &i in &nonzero {
+            assert!((out[i] - x[i] * 10.0 / 3.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn randk_unbiased_and_variance_bounded() {
+        let d = 40;
+        let c = RandK::new(d, 8); // omega = 4
+        let x = test_vec(d, 5);
+        let mut rng = Pcg64::new(6);
+        assert!(empirical_bias_ratio(&c, &mut rng, &x, 20_000) < 0.02);
+        let ratio = empirical_variance_ratio(&c, &mut rng, &x, 5_000);
+        assert!(ratio <= c.omega().unwrap() * 1.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn randk_with_q_matches_paper_parameterization() {
+        let c = RandK::with_q(80, 0.1);
+        assert_eq!(c.k, 8);
+        assert!((c.omega().unwrap() - 9.0).abs() < 1e-12);
+        let c = RandK::with_q(80, 0.9);
+        assert_eq!(c.k, 72);
+    }
+
+    #[test]
+    fn natural_dithering_unbiased() {
+        let d = 30;
+        for s in [2u8, 5, 9] {
+            let c = NaturalDithering::l2(d, s);
+            let x = test_vec(d, 7 + s as u64);
+            let mut rng = Pcg64::new(8);
+            let bias = empirical_bias_ratio(&c, &mut rng, &x, 30_000);
+            assert!(bias < 0.02, "s={s}: bias {bias}");
+        }
+    }
+
+    #[test]
+    fn natural_dithering_variance_within_formula() {
+        let d = 30;
+        for s in [2u8, 4, 8] {
+            let c = NaturalDithering::l2(d, s);
+            let x = test_vec(d, 11 + s as u64);
+            let mut rng = Pcg64::new(12);
+            let ratio = empirical_variance_ratio(&c, &mut rng, &x, 4_000);
+            let omega = c.omega().unwrap();
+            assert!(ratio <= omega * 1.1 + 0.02, "s={s}: {ratio} vs ω={omega}");
+        }
+    }
+
+    #[test]
+    fn natural_dithering_levels_are_grid_points() {
+        let d = 12;
+        let c = NaturalDithering::l2(d, 4);
+        let x = test_vec(d, 13);
+        let mut rng = Pcg64::new(14);
+        let pkt = c.compress(&mut rng, &x);
+        if let Packet::Levels { norm, s, levels, .. } = &pkt {
+            for &l in levels {
+                assert!(l <= *s);
+            }
+            let out = pkt.decode();
+            for (i, &v) in out.iter().enumerate() {
+                if v != 0.0 {
+                    let u = v.abs() / norm;
+                    let log = u.log2();
+                    assert!((log - log.round()).abs() < 1e-9, "coord {i}: {u}");
+                }
+            }
+        } else {
+            panic!("expected Levels packet");
+        }
+    }
+
+    #[test]
+    fn natural_dithering_zero_vector() {
+        let c = NaturalDithering::l2(5, 3);
+        let mut rng = Pcg64::new(15);
+        assert_eq!(c.compress(&mut rng, &[0.0; 5]).decode(), vec![0.0; 5]);
+    }
+
+    #[test]
+    fn natural_compression_unbiased_small_variance() {
+        let d = 25;
+        let c = NaturalCompression::new(d);
+        let x = test_vec(d, 16);
+        let mut rng = Pcg64::new(17);
+        assert!(empirical_bias_ratio(&c, &mut rng, &x, 30_000) < 0.01);
+        let ratio = empirical_variance_ratio(&c, &mut rng, &x, 10_000);
+        assert!(ratio <= 0.125 * 1.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn natural_compression_outputs_powers_of_two() {
+        let c = NaturalCompression::new(8);
+        let x = test_vec(8, 18);
+        let mut rng = Pcg64::new(19);
+        let out = c.compress(&mut rng, &x).decode();
+        for &v in &out {
+            if v != 0.0 {
+                let l = v.abs().log2();
+                assert!((l - l.round()).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn bernoulli_unbiased_with_omega() {
+        let d = 15;
+        let p = 0.25;
+        let c = BernoulliP::new(d, p);
+        assert!((c.omega().unwrap() - 3.0).abs() < 1e-12);
+        let x = test_vec(d, 20);
+        let mut rng = Pcg64::new(21);
+        assert!(empirical_bias_ratio(&c, &mut rng, &x, 40_000) < 0.03);
+        // Exact variance of Bernoulli: (1/p − 1)·‖x‖² exactly at every x.
+        let ratio = empirical_variance_ratio(&c, &mut rng, &x, 40_000);
+        assert!((ratio - 3.0).abs() < 0.15, "ratio {ratio}");
+    }
+
+    #[test]
+    fn ternary_unbiased_and_bounded() {
+        let d = 36;
+        let c = Ternary::new(d);
+        let x = test_vec(d, 22);
+        let mut rng = Pcg64::new(23);
+        assert!(empirical_bias_ratio(&c, &mut rng, &x, 30_000) < 0.02);
+        let ratio = empirical_variance_ratio(&c, &mut rng, &x, 5_000);
+        assert!(ratio <= c.omega().unwrap() * 1.1 + 0.05, "ratio {ratio}");
+        // outputs are in {−s, 0, s}
+        let out = c.compress(&mut rng, &x).decode();
+        let s = crate::linalg::nrm_inf(&x);
+        for &v in &out {
+            assert!(v == 0.0 || (v.abs() - s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn std_dithering_unbiased() {
+        let d = 20;
+        let c = StandardDithering::new(d, 4);
+        let x = test_vec(d, 24);
+        let mut rng = Pcg64::new(25);
+        assert!(empirical_bias_ratio(&c, &mut rng, &x, 30_000) < 0.02);
+        let ratio = empirical_variance_ratio(&c, &mut rng, &x, 5_000);
+        assert!(ratio <= c.omega().unwrap() * 1.15 + 0.02, "ratio {ratio}");
+    }
+}

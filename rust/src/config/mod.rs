@@ -1,0 +1,441 @@
+//! Experiment configuration: JSON schema → validated spec → algorithm
+//! factory.
+//!
+//! One JSON document fully describes a run:
+//!
+//! ```json
+//! {
+//!   "problem":    {"kind": "ridge", "m": 100, "d": 80, "workers": 10,
+//!                  "lambda": 0.01, "seed": 42},
+//!   "algorithm":  {"kind": "rand-diana", "p": 0.1},
+//!   "compressor": {"kind": "rand-k", "q": 0.1},
+//!   "run":        {"max_rounds": 20000, "tol": 1e-12, "record_every": 10}
+//! }
+//! ```
+//!
+//! `shiftcomp run --config file.json` drives exactly this path; the harness
+//! builds the same specs programmatically.
+
+use crate::algorithms::{Algorithm, DcgdShift, Gd, Gdci, RunOpts, VrGdci};
+use crate::compressors::{
+    BernoulliP, Compressor, Identity, NaturalCompression, NaturalDithering, RandK,
+    StandardDithering, Ternary, TopK,
+};
+use crate::data::{RegressionOpts, W2aOpts};
+use crate::problems::{Logistic, Problem, Quadratic, Ridge};
+use crate::util::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("config: {0}")]
+    Invalid(String),
+    #[error(transparent)]
+    Json(#[from] crate::util::json::JsonError),
+}
+
+fn bad(msg: impl Into<String>) -> ConfigError {
+    ConfigError::Invalid(msg.into())
+}
+
+// ------------------------------------------------------------------ problem
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProblemSpec {
+    Ridge {
+        m: usize,
+        d: usize,
+        workers: usize,
+        lambda: f64,
+        seed: u64,
+    },
+    LogisticW2a {
+        workers: usize,
+        kappa: f64,
+        seed: u64,
+        /// optional path to a real LibSVM file (else the synthetic stand-in)
+        data: Option<String>,
+    },
+    Quadratic {
+        d: usize,
+        workers: usize,
+        mu: f64,
+        l: f64,
+        seed: u64,
+        interpolating: bool,
+    },
+}
+
+impl ProblemSpec {
+    pub fn parse(j: &Json) -> Result<Self, ConfigError> {
+        let kind = j
+            .get("kind")
+            .as_str()
+            .ok_or_else(|| bad("problem.kind missing"))?;
+        let seed = j.get("seed").as_f64().unwrap_or(42.0) as u64;
+        match kind {
+            "ridge" => Ok(ProblemSpec::Ridge {
+                m: j.get("m").as_usize().unwrap_or(100),
+                d: j.get("d").as_usize().unwrap_or(80),
+                workers: j.get("workers").as_usize().unwrap_or(10),
+                lambda: j
+                    .get("lambda")
+                    .as_f64()
+                    .unwrap_or(1.0 / j.get("m").as_f64().unwrap_or(100.0)),
+                seed,
+            }),
+            "logistic-w2a" | "logistic" => Ok(ProblemSpec::LogisticW2a {
+                workers: j.get("workers").as_usize().unwrap_or(10),
+                kappa: j.get("kappa").as_f64().unwrap_or(100.0),
+                seed,
+                data: j.get("data").as_str().map(|s| s.to_string()),
+            }),
+            "quadratic" => Ok(ProblemSpec::Quadratic {
+                d: j.get("d").as_usize().unwrap_or(40),
+                workers: j.get("workers").as_usize().unwrap_or(10),
+                mu: j.get("mu").as_f64().unwrap_or(1.0),
+                l: j.get("l").as_f64().unwrap_or(100.0),
+                seed,
+                interpolating: j.get("interpolating").as_bool().unwrap_or(false),
+            }),
+            other => Err(bad(format!("unknown problem kind '{other}'"))),
+        }
+    }
+
+    pub fn build(&self) -> Result<Box<dyn Problem>, ConfigError> {
+        match self {
+            ProblemSpec::Ridge {
+                m,
+                d,
+                workers,
+                lambda,
+                seed,
+            } => Ok(Box::new(Ridge::new(
+                &RegressionOpts {
+                    n_samples: *m,
+                    n_features: *d,
+                    seed: *seed,
+                    ..Default::default()
+                },
+                *workers,
+                *lambda,
+                *seed,
+            ))),
+            ProblemSpec::LogisticW2a {
+                workers,
+                kappa,
+                seed,
+                data,
+            } => {
+                let ds = match data {
+                    Some(path) => crate::data::libsvm::read_file(path)
+                        .map_err(|e| bad(format!("loading {path}: {e}")))?,
+                    None => crate::data::synthetic_w2a(&W2aOpts {
+                        seed: *seed,
+                        ..Default::default()
+                    }),
+                };
+                Ok(Box::new(Logistic::from_dataset(&ds, *workers, *kappa, *seed)))
+            }
+            ProblemSpec::Quadratic {
+                d,
+                workers,
+                mu,
+                l,
+                seed,
+                interpolating,
+            } => Ok(Box::new(if *interpolating {
+                Quadratic::interpolating(*d, *workers, *mu, *l, *seed)
+            } else {
+                Quadratic::random(*d, *workers, *mu, *l, *seed)
+            })),
+        }
+    }
+}
+
+// --------------------------------------------------------------- compressor
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum CompressorSpec {
+    Identity,
+    RandK { q: f64 },
+    TopK { q: f64 },
+    NaturalDithering { s: u8, p: f64 },
+    StandardDithering { s: u32 },
+    NaturalCompression,
+    Bernoulli { p: f64 },
+    Ternary,
+}
+
+impl CompressorSpec {
+    pub fn parse(j: &Json) -> Result<Self, ConfigError> {
+        let kind = j
+            .get("kind")
+            .as_str()
+            .ok_or_else(|| bad("compressor.kind missing"))?;
+        match kind {
+            "identity" => Ok(CompressorSpec::Identity),
+            "rand-k" => Ok(CompressorSpec::RandK {
+                q: j.get("q")
+                    .as_f64()
+                    .ok_or_else(|| bad("rand-k needs q = K/d"))?,
+            }),
+            "top-k" => Ok(CompressorSpec::TopK {
+                q: j.get("q").as_f64().ok_or_else(|| bad("top-k needs q"))?,
+            }),
+            "natural-dithering" | "nd" => Ok(CompressorSpec::NaturalDithering {
+                s: j.get("s").as_f64().ok_or_else(|| bad("nd needs s"))? as u8,
+                p: j.get("p").as_f64().unwrap_or(2.0),
+            }),
+            "standard-dithering" => Ok(CompressorSpec::StandardDithering {
+                s: j.get("s").as_f64().ok_or_else(|| bad("sd needs s"))? as u32,
+            }),
+            "natural-compression" | "nat-comp" => Ok(CompressorSpec::NaturalCompression),
+            "bernoulli" => Ok(CompressorSpec::Bernoulli {
+                p: j.get("p").as_f64().ok_or_else(|| bad("bernoulli needs p"))?,
+            }),
+            "ternary" => Ok(CompressorSpec::Ternary),
+            other => Err(bad(format!("unknown compressor kind '{other}'"))),
+        }
+    }
+
+    pub fn build(&self, d: usize) -> Box<dyn Compressor> {
+        match self {
+            CompressorSpec::Identity => Box::new(Identity::new(d)),
+            CompressorSpec::RandK { q } => Box::new(RandK::with_q(d, *q)),
+            CompressorSpec::TopK { q } => Box::new(TopK::with_q(d, *q)),
+            CompressorSpec::NaturalDithering { s, p } => {
+                Box::new(NaturalDithering::new(d, *s, *p))
+            }
+            CompressorSpec::StandardDithering { s } => Box::new(StandardDithering::new(d, *s)),
+            CompressorSpec::NaturalCompression => Box::new(NaturalCompression::new(d)),
+            CompressorSpec::Bernoulli { p } => Box::new(BernoulliP::new(d, *p)),
+            CompressorSpec::Ternary => Box::new(Ternary::new(d)),
+        }
+    }
+
+    /// ω of the built compressor, if unbiased.
+    pub fn omega(&self, d: usize) -> Option<f64> {
+        self.build(d).omega()
+    }
+}
+
+// ---------------------------------------------------------------- algorithm
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum AlgorithmSpec {
+    Dgd,
+    Dcgd,
+    DcgdStar,
+    Diana { with_top_k_c: Option<f64> },
+    RandDiana { p: Option<f64>, m_factor: Option<f64> },
+    Gdci,
+    VrGdci,
+}
+
+impl AlgorithmSpec {
+    pub fn parse(j: &Json) -> Result<Self, ConfigError> {
+        let kind = j
+            .get("kind")
+            .as_str()
+            .ok_or_else(|| bad("algorithm.kind missing"))?;
+        match kind {
+            "dgd" | "gd" => Ok(AlgorithmSpec::Dgd),
+            "dcgd" => Ok(AlgorithmSpec::Dcgd),
+            "dcgd-star" | "star" => Ok(AlgorithmSpec::DcgdStar),
+            "diana" => Ok(AlgorithmSpec::Diana {
+                with_top_k_c: j.get("c_top_q").as_f64(),
+            }),
+            "rand-diana" => Ok(AlgorithmSpec::RandDiana {
+                p: j.get("p").as_f64(),
+                m_factor: j.get("m_factor").as_f64(),
+            }),
+            "gdci" => Ok(AlgorithmSpec::Gdci),
+            "vr-gdci" => Ok(AlgorithmSpec::VrGdci),
+            other => Err(bad(format!("unknown algorithm kind '{other}'"))),
+        }
+    }
+
+    /// Build a ready-to-run algorithm instance. Panics on specs that need
+    /// an unbiased compressor if given a biased one (surface early).
+    pub fn build(
+        &self,
+        p: &dyn Problem,
+        comp: &CompressorSpec,
+        seed: u64,
+    ) -> Box<dyn Algorithm> {
+        let d = p.dim();
+        macro_rules! with_q {
+            ($ctor:expr) => {
+                match comp {
+                    CompressorSpec::Identity => $ctor(Identity::new(d)),
+                    CompressorSpec::RandK { q } => $ctor(RandK::with_q(d, *q)),
+                    CompressorSpec::NaturalDithering { s, p: np } => {
+                        $ctor(NaturalDithering::new(d, *s, *np))
+                    }
+                    CompressorSpec::StandardDithering { s } => {
+                        $ctor(StandardDithering::new(d, *s))
+                    }
+                    CompressorSpec::NaturalCompression => $ctor(NaturalCompression::new(d)),
+                    CompressorSpec::Bernoulli { p: bp } => $ctor(BernoulliP::new(d, *bp)),
+                    CompressorSpec::Ternary => $ctor(Ternary::new(d)),
+                    CompressorSpec::TopK { .. } => {
+                        panic!("{self:?} needs an unbiased Q; top-k is biased")
+                    }
+                }
+            };
+        }
+        match self {
+            AlgorithmSpec::Dgd => Box::new(Gd::new(p, seed)),
+            AlgorithmSpec::Dcgd => {
+                with_q!(|q| Box::new(DcgdShift::dcgd(p, q, seed)) as Box<dyn Algorithm>)
+            }
+            AlgorithmSpec::DcgdStar => {
+                with_q!(|q| Box::new(DcgdShift::star(p, q, None, seed)) as Box<dyn Algorithm>)
+            }
+            AlgorithmSpec::Diana { with_top_k_c } => {
+                let c: Option<Box<dyn Compressor>> = with_top_k_c
+                    .map(|cq| Box::new(TopK::with_q(d, cq)) as Box<dyn Compressor>);
+                with_q!(|q| Box::new(DcgdShift::diana(p, q, c.clone(), seed))
+                    as Box<dyn Algorithm>)
+            }
+            AlgorithmSpec::RandDiana { p: pr, m_factor } => {
+                let m_override = m_factor.map(|b| {
+                    let omega = comp.omega(d).expect("rand-diana needs unbiased Q");
+                    let n = p.n_workers() as f64;
+                    let prr = pr.unwrap_or(1.0 / (omega + 1.0));
+                    b * 2.0 * omega / (n * prr)
+                });
+                with_q!(|q| Box::new(DcgdShift::rand_diana_with_m(p, q, *pr, m_override, seed))
+                    as Box<dyn Algorithm>)
+            }
+            AlgorithmSpec::Gdci => {
+                with_q!(|q| Box::new(Gdci::new(p, q, seed)) as Box<dyn Algorithm>)
+            }
+            AlgorithmSpec::VrGdci => {
+                with_q!(|q| Box::new(VrGdci::new(p, q, seed)) as Box<dyn Algorithm>)
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------- experiment
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub problem: ProblemSpec,
+    pub algorithm: AlgorithmSpec,
+    pub compressor: CompressorSpec,
+    pub run: RunOpts,
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let j = Json::parse(text)?;
+        let problem = ProblemSpec::parse(j.get("problem"))?;
+        let algorithm = AlgorithmSpec::parse(j.get("algorithm"))?;
+        let compressor = CompressorSpec::parse(j.get("compressor"))?;
+        let run_j = j.get("run");
+        let run = RunOpts {
+            max_rounds: run_j.get("max_rounds").as_usize().unwrap_or(10_000),
+            tol: run_j.get("tol").as_f64().unwrap_or(1e-12),
+            record_every: run_j.get("record_every").as_usize().unwrap_or(1).max(1),
+            record_loss: run_j.get("record_loss").as_bool().unwrap_or(false),
+            ..Default::default()
+        };
+        let seed = j.get("seed").as_f64().unwrap_or(42.0) as u64;
+        Ok(Self {
+            problem,
+            algorithm,
+            compressor,
+            run,
+            seed,
+        })
+    }
+
+    pub fn load(path: &str) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| bad(format!("reading {path}: {e}")))?;
+        Self::parse(&text)
+    }
+
+    /// Build problem + algorithm and run to completion.
+    pub fn execute(&self) -> Result<crate::metrics::Trace, ConfigError> {
+        let problem = self.problem.build()?;
+        let mut alg = self.algorithm.build(problem.as_ref(), &self.compressor, self.seed);
+        Ok(alg.run(problem.as_ref(), &self.run))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "problem": {"kind": "quadratic", "d": 15, "workers": 4, "mu": 1.0, "l": 10.0, "seed": 3},
+        "algorithm": {"kind": "rand-diana"},
+        "compressor": {"kind": "rand-k", "q": 0.25},
+        "run": {"max_rounds": 20000, "tol": 1e-10, "record_every": 10},
+        "seed": 3
+    }"#;
+
+    #[test]
+    fn parses_and_executes_sample() {
+        let cfg = ExperimentConfig::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.seed, 3);
+        assert_eq!(cfg.run.max_rounds, 20_000);
+        let trace = cfg.execute().unwrap();
+        assert!(trace.converged, "err {:e}", trace.final_relative_error());
+    }
+
+    #[test]
+    fn rejects_unknown_kinds() {
+        assert!(ProblemSpec::parse(&Json::parse(r#"{"kind": "sudoku"}"#).unwrap()).is_err());
+        assert!(CompressorSpec::parse(&Json::parse(r#"{"kind": "zip"}"#).unwrap()).is_err());
+        assert!(AlgorithmSpec::parse(&Json::parse(r#"{"kind": "adam"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn missing_required_fields_error() {
+        assert!(CompressorSpec::parse(&Json::parse(r#"{"kind": "rand-k"}"#).unwrap()).is_err());
+        assert!(ExperimentConfig::parse("{}").is_err());
+    }
+
+    #[test]
+    fn ridge_defaults_match_paper() {
+        let spec =
+            ProblemSpec::parse(&Json::parse(r#"{"kind": "ridge", "seed": 1}"#).unwrap()).unwrap();
+        match spec {
+            ProblemSpec::Ridge {
+                m,
+                d,
+                workers,
+                lambda,
+                ..
+            } => {
+                assert_eq!((m, d, workers), (100, 80, 10));
+                assert!((lambda - 0.01).abs() < 1e-12);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn all_compressor_kinds_build() {
+        for (text, unbiased) in [
+            (r#"{"kind": "identity"}"#, true),
+            (r#"{"kind": "rand-k", "q": 0.1}"#, true),
+            (r#"{"kind": "top-k", "q": 0.1}"#, false),
+            (r#"{"kind": "nd", "s": 4}"#, true),
+            (r#"{"kind": "standard-dithering", "s": 8}"#, true),
+            (r#"{"kind": "nat-comp"}"#, true),
+            (r#"{"kind": "bernoulli", "p": 0.2}"#, true),
+            (r#"{"kind": "ternary"}"#, true),
+        ] {
+            let spec = CompressorSpec::parse(&Json::parse(text).unwrap()).unwrap();
+            let c = spec.build(30);
+            assert_eq!(c.omega().is_some(), unbiased, "{text}");
+            assert_eq!(c.dim(), 30);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! The distributed runtime: a leader (master) and `n` worker threads
+//! exchanging **wire-encoded** messages over channels.
+//!
+//! This is the deployment-shaped realization of Algorithm 1. Everything the
+//! master learns comes off the wire (worker shifts are reconstructed from
+//! the same packets a real parameter server would receive), bytes are
+//! priced by the [`crate::net`] model, and per-worker RNG streams are
+//! derived exactly as in the single-process driver — so a distributed run
+//! is **bit-identical** to [`crate::algorithms::DcgdShift`] with the same
+//! seed (property-tested in `rust/tests/coordinator.rs`).
+//!
+//! Protocol per round k:
+//! ```text
+//! master ──► workers : Broadcast(x^k)                      (dense, d·prec)
+//! worker i ─► master : Frames { [c_i^k]?, m_i^k, [h-refresh]? }   (encoded)
+//! master: decode, reconstruct h_i, g^k = (1/n)Σ(h_i + msgs), step, repeat
+//! ```
+
+pub mod protocol;
+pub mod runner;
+
+pub use protocol::{FrameSet, MethodKind, WorkerCommand, WorkerUpdate};
+pub use runner::{ClusterConfig, DistributedRunner};

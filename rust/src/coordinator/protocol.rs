@@ -1,0 +1,65 @@
+//! Message types exchanged between the master and worker threads.
+
+use std::sync::Arc;
+
+/// What shift rule the cluster runs (worker- and master-side behaviour).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MethodKind {
+    /// fixed shifts (plain DCGD when the shifts are zero)
+    Fixed,
+    /// DCGD-STAR (master knows ∇f_i(x*); `with_c` ⇒ a C-frame is sent)
+    Star { with_c: bool },
+    /// generalized DIANA (`with_c` ⇒ a C-frame precedes the Q-frame)
+    Diana { alpha: f64, with_c: bool },
+    /// Rand-DIANA with refresh probability p
+    RandDiana { p: f64 },
+}
+
+/// Master → worker.
+pub enum WorkerCommand {
+    /// Start round k with the broadcast iterate.
+    Round { k: usize, x: Arc<Vec<f64>> },
+    /// Clean shutdown.
+    Shutdown,
+}
+
+/// The encoded frames one worker uploads in one round.
+#[derive(Debug, Default)]
+pub struct FrameSet {
+    /// C_i-compressor frame (STAR displacement / DIANA c-part), if any
+    pub c_frame: Option<Vec<u8>>,
+    /// main Q_i frame (always present)
+    pub q_frame: Vec<u8>,
+    /// Rand-DIANA dense shift refresh, if this round refreshed
+    pub refresh: Option<Vec<u8>>,
+}
+
+impl FrameSet {
+    /// Total payload bits: encoded body bits of each frame present.
+    /// (Header overhead is excluded to match the single-process driver's
+    /// packet-level accounting; headers are fixed 48-bit constants.)
+    pub fn payload_bits(&self, header_free_bits: impl Fn(&[u8]) -> u64) -> u64 {
+        let mut bits = header_free_bits(&self.q_frame);
+        if let Some(c) = &self.c_frame {
+            bits += header_free_bits(c);
+        }
+        if let Some(r) = &self.refresh {
+            bits += header_free_bits(r);
+        }
+        bits
+    }
+}
+
+/// Worker → master.
+pub struct WorkerUpdate {
+    pub worker: usize,
+    pub k: usize,
+    pub frames: FrameSet,
+    /// gradient-message payload bits (packet-level, identical to the
+    /// single-process driver's accounting)
+    pub payload_bits: u64,
+    /// shift-state sync payload bits (Rand-DIANA refreshes)
+    pub refresh_bits: u64,
+    /// encoded byte size actually shipped (wire accounting incl. headers)
+    pub wire_bytes: usize,
+}

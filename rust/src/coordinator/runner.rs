@@ -1,0 +1,534 @@
+//! Master/worker threaded runtime.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::algorithms::{Algorithm, StepStats};
+use crate::compressors::{Compressor, Packet, ValPrec};
+use crate::coordinator::protocol::{FrameSet, MethodKind, WorkerCommand, WorkerUpdate};
+use crate::linalg::{axpy, sub_into, zero};
+use crate::net::{LinkModel, NetworkAccountant};
+use crate::problems::Problem;
+use crate::util::rng::Pcg64;
+use crate::wire;
+
+/// Cluster-level configuration.
+pub struct ClusterConfig {
+    pub method: MethodKind,
+    pub gamma: f64,
+    pub prec: ValPrec,
+    pub seed: u64,
+    /// per-worker link models; `None` disables the time simulation
+    pub links: Option<Vec<LinkModel>>,
+}
+
+struct WorkerThread {
+    cmd_tx: Sender<WorkerCommand>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// The leader: owns the iterate, reconstructs worker shifts from wire
+/// traffic, and drives rounds.
+pub struct DistributedRunner {
+    method: MethodKind,
+    gamma: f64,
+    prec: ValPrec,
+    x: Vec<f64>,
+    /// master-side reconstruction of each worker's shift
+    h: Vec<Vec<f64>>,
+    /// ∇f_i(x*) (STAR only — the "impractical but insightful" method
+    /// assumes these are known on both ends)
+    grad_star: Vec<Vec<f64>>,
+    workers: Vec<WorkerThread>,
+    up_rx: Receiver<WorkerUpdate>,
+    pub net: Option<NetworkAccountant>,
+    // scratch
+    est: Vec<f64>,
+    decoded: Vec<f64>,
+    round: usize,
+}
+
+/// Worker-side loop: one thread per worker.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    wi: usize,
+    problem: Arc<dyn Problem>,
+    q: Box<dyn Compressor>,
+    mut c: Option<Box<dyn Compressor>>,
+    method: MethodKind,
+    mut h: Vec<f64>,
+    mut rng: Pcg64,
+    prec: ValPrec,
+    cmd_rx: Receiver<WorkerCommand>,
+    up_tx: Sender<WorkerUpdate>,
+) {
+    let d = problem.dim();
+    let mut grad = vec![0.0; d];
+    let mut diff = vec![0.0; d];
+    let mut decoded = vec![0.0; d];
+
+    while let Ok(cmd) = cmd_rx.recv() {
+        let (k, x) = match cmd {
+            WorkerCommand::Round { k, x } => (k, x),
+            WorkerCommand::Shutdown => break,
+        };
+        problem.local_grad_into(wi, &x, &mut grad);
+        let mut frames = FrameSet::default();
+        let mut payload_bits = 0u64;
+        let mut refresh_bits = 0u64;
+
+        match method {
+            MethodKind::Fixed => {
+                sub_into(&grad, &h, &mut diff);
+                let pkt = q.compress(&mut rng, &diff);
+                payload_bits += pkt.payload_bits(prec);
+                frames.q_frame = wire::encode(&pkt, prec);
+            }
+            MethodKind::Star { with_c } => {
+                let gs = problem.grad_star(wi);
+                if with_c {
+                    let cc = c.as_mut().expect("star with_c needs a C compressor");
+                    sub_into(&grad, gs, &mut diff);
+                    let pkt = cc.compress(&mut rng, &diff);
+                    payload_bits += pkt.payload_bits(prec);
+                    // worker's own new shift
+                    pkt.decode_into(&mut decoded);
+                    h.copy_from_slice(gs);
+                    axpy(1.0, &decoded, &mut h);
+                    frames.c_frame = Some(wire::encode(&pkt, prec));
+                } else {
+                    h.copy_from_slice(gs);
+                }
+                sub_into(&grad, &h, &mut diff);
+                let pkt = q.compress(&mut rng, &diff);
+                payload_bits += pkt.payload_bits(prec);
+                frames.q_frame = wire::encode(&pkt, prec);
+            }
+            MethodKind::Diana { alpha, with_c } => {
+                sub_into(&grad, &h, &mut diff);
+                let mut update = vec![0.0; d];
+                if with_c {
+                    let cc = c.as_mut().expect("diana with_c needs a C compressor");
+                    let c_pkt = cc.compress(&mut rng, &diff);
+                    payload_bits += c_pkt.payload_bits(prec);
+                    c_pkt.decode_into(&mut decoded);
+                    update.copy_from_slice(&decoded);
+                    for j in 0..d {
+                        diff[j] -= decoded[j];
+                    }
+                    frames.c_frame = Some(wire::encode(&c_pkt, prec));
+                }
+                let q_pkt = q.compress(&mut rng, &diff);
+                payload_bits += q_pkt.payload_bits(prec);
+                q_pkt.decode_into(&mut decoded);
+                axpy(1.0, &decoded, &mut update);
+                axpy(alpha, &update, &mut h);
+                frames.q_frame = wire::encode(&q_pkt, prec);
+            }
+            MethodKind::RandDiana { p } => {
+                sub_into(&grad, &h, &mut diff);
+                let pkt = q.compress(&mut rng, &diff);
+                payload_bits += pkt.payload_bits(prec);
+                frames.q_frame = wire::encode(&pkt, prec);
+                if rng.bernoulli(p) {
+                    h.copy_from_slice(&grad);
+                    refresh_bits += d as u64 * prec.bits();
+                    frames.refresh = Some(wire::encode(&Packet::Dense(h.clone()), prec));
+                }
+            }
+        }
+
+        let wire_bytes = frames.q_frame.len()
+            + frames.c_frame.as_ref().map(|f| f.len()).unwrap_or(0)
+            + frames.refresh.as_ref().map(|f| f.len()).unwrap_or(0);
+        if up_tx
+            .send(WorkerUpdate {
+                worker: wi,
+                k,
+                frames,
+                payload_bits,
+                refresh_bits,
+                wire_bytes,
+            })
+            .is_err()
+        {
+            break; // master gone
+        }
+    }
+}
+
+impl DistributedRunner {
+    /// Construct the cluster. `qs` are the per-worker Q_i compressors,
+    /// `cs` the optional per-worker C_i (required when the method carries a
+    /// C-frame). Shifts, RNG streams and x⁰ match
+    /// [`crate::algorithms::DcgdShift`] exactly for the same seed.
+    pub fn new(
+        problem: Arc<dyn Problem>,
+        qs: Vec<Box<dyn Compressor>>,
+        cs: Option<Vec<Box<dyn Compressor>>>,
+        shifts: Vec<Vec<f64>>,
+        cfg: ClusterConfig,
+    ) -> Self {
+        let n = problem.n_workers();
+        let d = problem.dim();
+        assert_eq!(qs.len(), n);
+        assert_eq!(shifts.len(), n);
+        if let Some(links) = &cfg.links {
+            assert_eq!(links.len(), n);
+        }
+        let needs_c = matches!(
+            cfg.method,
+            MethodKind::Star { with_c: true } | MethodKind::Diana { with_c: true, .. }
+        );
+        if needs_c {
+            assert!(
+                cs.as_ref().map(|v| v.len()) == Some(n),
+                "method requires one C_i per worker"
+            );
+        }
+
+        let mut root = Pcg64::with_stream(cfg.seed, 0xa160);
+        let (up_tx, up_rx) = channel::<WorkerUpdate>();
+        let mut cs_iter = cs.into_iter().flatten();
+
+        let grad_star: Vec<Vec<f64>> = (0..n).map(|i| problem.grad_star(i).to_vec()).collect();
+        let mut workers = Vec::with_capacity(n);
+        for (wi, q) in qs.into_iter().enumerate() {
+            let rng = root.stream(wi as u64 + 1);
+            let (cmd_tx, cmd_rx) = channel::<WorkerCommand>();
+            let up_tx = up_tx.clone();
+            let problem = problem.clone();
+            let method = cfg.method;
+            let prec = cfg.prec;
+            let h0 = shifts[wi].clone();
+            let c = if needs_c { cs_iter.next() } else { None };
+            let handle = std::thread::Builder::new()
+                .name(format!("shiftcomp-worker-{wi}"))
+                .spawn(move || worker_loop(wi, problem, q, c, method, h0, rng, prec, cmd_rx, up_tx))
+                .expect("spawn worker thread");
+            workers.push(WorkerThread {
+                cmd_tx,
+                handle: Some(handle),
+            });
+        }
+
+        Self {
+            method: cfg.method,
+            gamma: cfg.gamma,
+            prec: cfg.prec,
+            x: crate::algorithms::paper_x0(d, cfg.seed),
+            h: shifts,
+            grad_star,
+            workers,
+            up_rx,
+            net: cfg.links.map(NetworkAccountant::new),
+            est: vec![0.0; d],
+            decoded: vec![0.0; d],
+            round: 0,
+        }
+    }
+
+    pub fn set_x0(&mut self, x0: Vec<f64>) {
+        assert_eq!(x0.len(), self.x.len());
+        self.x = x0;
+    }
+
+    /// Master-side reconstruction of a worker's shift (tests).
+    pub fn shift(&self, worker: usize) -> &[f64] {
+        &self.h[worker]
+    }
+
+    pub fn simulated_time(&self) -> f64 {
+        self.net.as_ref().map(|n| n.sim_time).unwrap_or(0.0)
+    }
+
+    fn decode_frame(&self, bytes: &[u8]) -> Packet {
+        wire::decode(bytes).expect("malformed frame from worker")
+    }
+}
+
+impl Algorithm for DistributedRunner {
+    fn name(&self) -> String {
+        match self.method {
+            MethodKind::Fixed => "dist-dcgd-shift(fixed)".into(),
+            MethodKind::Star { .. } => "dist-dcgd-star".into(),
+            MethodKind::Diana { .. } => "dist-diana".into(),
+            MethodKind::RandDiana { .. } => "dist-rand-diana".into(),
+        }
+    }
+
+    fn compressor_desc(&self) -> String {
+        "distributed".into()
+    }
+
+    fn x(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn step(&mut self, _p: &dyn Problem) -> StepStats {
+        let n = self.workers.len();
+        let d = self.x.len();
+        let inv_n = 1.0 / n as f64;
+
+        // broadcast
+        let x_arc = Arc::new(self.x.clone());
+        for w in &self.workers {
+            w.cmd_tx
+                .send(WorkerCommand::Round {
+                    k: self.round,
+                    x: x_arc.clone(),
+                })
+                .expect("worker thread died");
+        }
+
+        // gather (any arrival order; processed in worker order for exact
+        // fp-reproducibility)
+        let mut slots: Vec<Option<WorkerUpdate>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let upd = self.up_rx.recv().expect("worker channel closed");
+            debug_assert_eq!(upd.k, self.round);
+            let wi = upd.worker;
+            slots[wi] = Some(upd);
+        }
+
+        zero(&mut self.est);
+        let mut bits_up = 0u64;
+        let mut bits_refresh = 0u64;
+        let mut per_worker_wire_bits = vec![0u64; n];
+
+        for wi in 0..n {
+            let upd = slots[wi].take().unwrap();
+            bits_up += upd.payload_bits;
+            bits_refresh += upd.refresh_bits;
+            per_worker_wire_bits[wi] = upd.wire_bytes as u64 * 8;
+
+            match self.method {
+                MethodKind::Fixed => {
+                    let pkt = self.decode_frame(&upd.frames.q_frame);
+                    pkt.decode_into(&mut self.decoded);
+                    axpy(inv_n, &self.h[wi], &mut self.est);
+                    axpy(inv_n, &self.decoded, &mut self.est);
+                }
+                MethodKind::Star { with_c } => {
+                    // reconstruct the worker's same-round shift
+                    let mut h_new = self.grad_star[wi].clone();
+                    if with_c {
+                        let c_pkt = self
+                            .decode_frame(upd.frames.c_frame.as_ref().expect("missing C frame"));
+                        c_pkt.decode_into(&mut self.decoded);
+                        axpy(1.0, &self.decoded, &mut h_new);
+                    }
+                    self.h[wi] = h_new;
+                    let pkt = self.decode_frame(&upd.frames.q_frame);
+                    pkt.decode_into(&mut self.decoded);
+                    axpy(inv_n, &self.h[wi], &mut self.est);
+                    axpy(inv_n, &self.decoded, &mut self.est);
+                }
+                MethodKind::Diana { alpha, with_c } => {
+                    let mut update = vec![0.0; d];
+                    if with_c {
+                        let c_pkt = self
+                            .decode_frame(upd.frames.c_frame.as_ref().expect("missing C frame"));
+                        c_pkt.decode_into(&mut self.decoded);
+                        update.copy_from_slice(&self.decoded);
+                    }
+                    let q_pkt = self.decode_frame(&upd.frames.q_frame);
+                    q_pkt.decode_into(&mut self.decoded);
+                    axpy(1.0, &self.decoded, &mut update);
+                    axpy(inv_n, &self.h[wi], &mut self.est);
+                    axpy(inv_n, &update, &mut self.est);
+                    axpy(alpha, &update, &mut self.h[wi]);
+                }
+                MethodKind::RandDiana { .. } => {
+                    let pkt = self.decode_frame(&upd.frames.q_frame);
+                    pkt.decode_into(&mut self.decoded);
+                    axpy(inv_n, &self.h[wi], &mut self.est);
+                    axpy(inv_n, &self.decoded, &mut self.est);
+                    if let Some(refresh) = &upd.frames.refresh {
+                        let pkt = self.decode_frame(refresh);
+                        pkt.decode_into(&mut self.h[wi]);
+                    }
+                }
+            }
+        }
+
+        // gradient step
+        axpy(-self.gamma, &self.est.clone(), &mut self.x);
+        self.round += 1;
+
+        let bits_down = (n * d) as u64 * self.prec.bits();
+        if let Some(net) = &mut self.net {
+            net.round(&per_worker_wire_bits, d as u64 * self.prec.bits());
+        }
+
+        StepStats {
+            bits_up,
+            bits_down,
+            bits_refresh,
+        }
+    }
+}
+
+impl Drop for DistributedRunner {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.cmd_tx.send(WorkerCommand::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ constructors
+
+impl DistributedRunner {
+    /// Distributed DIANA with homogeneous compressors and Theorem-3 steps.
+    pub fn diana(
+        problem: Arc<dyn Problem>,
+        q: impl Compressor + Clone + 'static,
+        seed: u64,
+        links: Option<Vec<LinkModel>>,
+    ) -> Self {
+        let n = problem.n_workers();
+        let d = problem.dim();
+        let omega = q.omega().expect("DIANA needs unbiased Q");
+        let ss = crate::theory::diana(problem.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+        let qs: Vec<Box<dyn Compressor>> = (0..n)
+            .map(|_| Box::new(q.clone()) as Box<dyn Compressor>)
+            .collect();
+        Self::new(
+            problem,
+            qs,
+            None,
+            vec![vec![0.0; d]; n],
+            ClusterConfig {
+                method: MethodKind::Diana {
+                    alpha: ss.alpha,
+                    with_c: false,
+                },
+                gamma: ss.gamma,
+                prec: ValPrec::F64,
+                seed,
+                links,
+            },
+        )
+    }
+
+    /// Distributed Rand-DIANA with Theorem-4 steps.
+    pub fn rand_diana(
+        problem: Arc<dyn Problem>,
+        q: impl Compressor + Clone + 'static,
+        p_refresh: Option<f64>,
+        seed: u64,
+        links: Option<Vec<LinkModel>>,
+    ) -> Self {
+        let n = problem.n_workers();
+        let d = problem.dim();
+        let omega = q.omega().expect("Rand-DIANA needs unbiased Q");
+        let pr = p_refresh.unwrap_or_else(|| crate::theory::rand_diana_default_p(omega));
+        let ss = crate::theory::rand_diana(problem.as_ref(), omega, &vec![pr; n], None);
+        let qs: Vec<Box<dyn Compressor>> = (0..n)
+            .map(|_| Box::new(q.clone()) as Box<dyn Compressor>)
+            .collect();
+        Self::new(
+            problem,
+            qs,
+            None,
+            vec![vec![0.0; d]; n],
+            ClusterConfig {
+                method: MethodKind::RandDiana { p: pr },
+                gamma: ss.gamma,
+                prec: ValPrec::F64,
+                seed,
+                links,
+            },
+        )
+    }
+
+    /// Distributed plain DCGD (zero fixed shifts, Theorem-1 step).
+    pub fn dcgd(
+        problem: Arc<dyn Problem>,
+        q: impl Compressor + Clone + 'static,
+        seed: u64,
+        links: Option<Vec<LinkModel>>,
+    ) -> Self {
+        let n = problem.n_workers();
+        let d = problem.dim();
+        let omega = q.omega().expect("DCGD needs unbiased Q");
+        let ss = crate::theory::dcgd_fixed(problem.as_ref(), &vec![omega; n]);
+        let qs: Vec<Box<dyn Compressor>> = (0..n)
+            .map(|_| Box::new(q.clone()) as Box<dyn Compressor>)
+            .collect();
+        Self::new(
+            problem,
+            qs,
+            None,
+            vec![vec![0.0; d]; n],
+            ClusterConfig {
+                method: MethodKind::Fixed,
+                gamma: ss.gamma,
+                prec: ValPrec::F64,
+                seed,
+                links,
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::RunOpts;
+    use crate::compressors::RandK;
+    use crate::problems::Ridge;
+
+    #[test]
+    fn distributed_diana_converges() {
+        let p = Arc::new(Ridge::paper_default(5));
+        let mut runner =
+            DistributedRunner::diana(p.clone(), RandK::with_q(p.dim(), 0.5), 5, None);
+        let trace = runner.run(
+            p.as_ref(),
+            &RunOpts {
+                max_rounds: 15_000,
+                tol: 1e-6,
+                record_every: 10,
+                ..Default::default()
+            },
+        );
+        assert!(
+            trace.converged || trace.final_relative_error() < 1e-5,
+            "err {:e}",
+            trace.final_relative_error()
+        );
+    }
+
+    #[test]
+    fn network_accounting_advances() {
+        let p = Arc::new(Ridge::paper_default(6));
+        let links = vec![LinkModel::default(); p.n_workers()];
+        let mut runner =
+            DistributedRunner::rand_diana(p.clone(), RandK::with_q(p.dim(), 0.2), None, 6, Some(links));
+        for _ in 0..10 {
+            runner.step(p.as_ref());
+        }
+        assert!(runner.simulated_time() > 0.0);
+        let net = runner.net.as_ref().unwrap();
+        assert_eq!(net.rounds, 10);
+        assert!(net.total_up_bits > 0);
+    }
+
+    #[test]
+    fn clean_shutdown_on_drop() {
+        let p = Arc::new(Ridge::paper_default(7));
+        {
+            let mut runner =
+                DistributedRunner::dcgd(p.clone(), RandK::with_q(p.dim(), 0.5), 7, None);
+            runner.step(p.as_ref());
+        } // drop must join all threads without hanging
+    }
+}

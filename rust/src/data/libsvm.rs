@@ -1,0 +1,176 @@
+//! LibSVM text format: `label idx:val idx:val ...`, 1-based indices.
+//!
+//! The paper's logistic-regression experiment uses the `w2a` dataset from
+//! the LibSVM repository. This module provides a full parser + writer; the
+//! synthetic stand-in dataset (see [`crate::data::w2a`]) is emitted through
+//! the writer and read back with the parser so the same code path a real
+//! `w2a` file would take is exercised end to end.
+
+use crate::data::sparse::{SparseDataset, SparseRow};
+
+#[derive(Debug, thiserror::Error)]
+pub enum LibsvmError {
+    #[error("line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Parse LibSVM text. Indices are converted to 0-based. Features indices
+/// must be strictly increasing within a row (LibSVM convention).
+pub fn parse(text: &str) -> Result<SparseDataset, LibsvmError> {
+    let mut rows = Vec::new();
+    let mut n_features = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label_tok = parts.next().ok_or_else(|| LibsvmError::Parse {
+            line: lineno + 1,
+            msg: "empty line".into(),
+        })?;
+        let label: f64 = label_tok.parse().map_err(|e| LibsvmError::Parse {
+            line: lineno + 1,
+            msg: format!("bad label '{label_tok}': {e}"),
+        })?;
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        let mut prev: i64 = -1;
+        for tok in parts {
+            let (idx_s, val_s) = tok.split_once(':').ok_or_else(|| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("expected idx:val, got '{tok}'"),
+            })?;
+            let idx1: u32 = idx_s.parse().map_err(|e| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("bad index '{idx_s}': {e}"),
+            })?;
+            if idx1 == 0 {
+                return Err(LibsvmError::Parse {
+                    line: lineno + 1,
+                    msg: "LibSVM indices are 1-based; got 0".into(),
+                });
+            }
+            let idx = idx1 - 1;
+            if (idx as i64) <= prev {
+                return Err(LibsvmError::Parse {
+                    line: lineno + 1,
+                    msg: format!("indices not strictly increasing at {idx1}"),
+                });
+            }
+            prev = idx as i64;
+            let val: f64 = val_s.parse().map_err(|e| LibsvmError::Parse {
+                line: lineno + 1,
+                msg: format!("bad value '{val_s}': {e}"),
+            })?;
+            n_features = n_features.max(idx as usize + 1);
+            indices.push(idx);
+            values.push(val);
+        }
+        rows.push(SparseRow {
+            indices,
+            values,
+            label,
+        });
+    }
+    Ok(SparseDataset { rows, n_features })
+}
+
+/// Serialize to LibSVM text (1-based indices; zero values skipped).
+pub fn write(ds: &SparseDataset) -> String {
+    let mut out = String::with_capacity(ds.nnz() * 12 + ds.len() * 4);
+    for row in &ds.rows {
+        if row.label == row.label.trunc() {
+            out.push_str(&format!("{}", row.label as i64));
+        } else {
+            out.push_str(&format!("{}", row.label));
+        }
+        for (idx, val) in row.indices.iter().zip(row.values.iter()) {
+            if *val == 0.0 {
+                continue;
+            }
+            if *val == val.trunc() && val.abs() < 1e15 {
+                out.push_str(&format!(" {}:{}", idx + 1, *val as i64));
+            } else {
+                out.push_str(&format!(" {}:{}", idx + 1, val));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+pub fn read_file(path: &str) -> Result<SparseDataset, LibsvmError> {
+    let text = std::fs::read_to_string(path)?;
+    parse(&text)
+}
+
+pub fn write_file(path: &str, ds: &SparseDataset) -> Result<(), LibsvmError> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, write(ds))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_simple() {
+        let ds = parse("+1 1:1 4:0.5\n-1 2:2\n").unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.n_features, 4);
+        assert_eq!(ds.rows[0].indices, vec![0, 3]);
+        assert_eq!(ds.rows[0].values, vec![1.0, 0.5]);
+        assert_eq!(ds.rows[0].label, 1.0);
+        assert_eq!(ds.rows[1].label, -1.0);
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let ds = parse("# header\n\n+1 1:1\n").unwrap();
+        assert_eq!(ds.len(), 1);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(parse("1 0:5\n").is_err());
+    }
+
+    #[test]
+    fn rejects_decreasing_indices() {
+        assert!(parse("1 3:1 2:1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("1 a:b\n").is_err());
+        assert!(parse("x 1:1\n").is_err());
+        assert!(parse("1 11\n").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = "1 1:1 3:-2.5 10:0.125\n-1 2:4\n1 1:0.333\n";
+        let ds = parse(src).unwrap();
+        let text = write(&ds);
+        let ds2 = parse(&text).unwrap();
+        assert_eq!(ds.rows, ds2.rows);
+        assert_eq!(ds.n_features, ds2.n_features);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let ds = parse("1 1:1 2:2\n-1 3:3\n").unwrap();
+        let path = std::env::temp_dir().join("shiftcomp_libsvm_test.txt");
+        let path = path.to_str().unwrap();
+        write_file(path, &ds).unwrap();
+        let ds2 = read_file(path).unwrap();
+        assert_eq!(ds.rows, ds2.rows);
+        let _ = std::fs::remove_file(path);
+    }
+}

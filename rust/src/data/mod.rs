@@ -1,0 +1,24 @@
+//! Datasets: generators, parsers, and partitioning.
+//!
+//! * [`regression`] — a faithful port of
+//!   `sklearn.datasets.make_regression` (the paper's ridge experiment uses
+//!   it with `m=100, d=80` and default parameters).
+//! * [`sparse`] — CSR-style sparse rows used by the LibSVM path.
+//! * [`libsvm`] — LibSVM text format parser/writer.
+//! * [`w2a`] — synthetic stand-in for the LibSVM `w2a` dataset (no network
+//!   access in this environment); same shape/sparsity/imbalance profile,
+//!   emitted through the LibSVM writer and read back through the parser so
+//!   the full file path is exercised. See DESIGN.md §Substitutions.
+//! * [`partition`] — uniform, even, random assignment of examples to the
+//!   `n` workers, as in the paper's Section 4.
+
+pub mod libsvm;
+pub mod partition;
+pub mod regression;
+pub mod sparse;
+pub mod w2a;
+
+pub use partition::partition_evenly;
+pub use regression::{make_regression, RegressionDataset, RegressionOpts};
+pub use sparse::{SparseDataset, SparseRow};
+pub use w2a::{synthetic_w2a, W2aOpts};

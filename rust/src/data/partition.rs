@@ -1,0 +1,89 @@
+//! Partitioning examples across workers.
+//!
+//! The paper: data is "uniformly, evenly, and randomly distributed among 10
+//! workers". We shuffle indices with the experiment's seeded RNG and cut
+//! into `n` near-equal contiguous chunks (sizes differ by at most one).
+
+use crate::util::rng::Pcg64;
+
+/// Return `n_workers` disjoint index sets covering `0..n_samples`,
+/// random and even (|size difference| ≤ 1).
+pub fn partition_evenly(n_samples: usize, n_workers: usize, rng: &mut Pcg64) -> Vec<Vec<usize>> {
+    assert!(n_workers > 0, "need at least one worker");
+    assert!(
+        n_samples >= n_workers,
+        "cannot give every worker data: {n_samples} samples, {n_workers} workers"
+    );
+    let mut idx: Vec<usize> = (0..n_samples).collect();
+    rng.shuffle(&mut idx);
+    let base = n_samples / n_workers;
+    let extra = n_samples % n_workers;
+    let mut out = Vec::with_capacity(n_workers);
+    let mut cursor = 0;
+    for w in 0..n_workers {
+        let size = base + usize::from(w < extra);
+        out.push(idx[cursor..cursor + size].to_vec());
+        cursor += size;
+    }
+    debug_assert_eq!(cursor, n_samples);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_indices_exactly_once() {
+        let mut rng = Pcg64::new(1);
+        let parts = partition_evenly(100, 10, &mut rng);
+        assert_eq!(parts.len(), 10);
+        let mut seen = vec![false; 100];
+        for p in &parts {
+            assert_eq!(p.len(), 10);
+            for &i in p {
+                assert!(!seen[i], "duplicate {i}");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn uneven_split_differs_by_at_most_one() {
+        let mut rng = Pcg64::new(2);
+        let parts = partition_evenly(103, 10, &mut rng);
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 103);
+        let max = *sizes.iter().max().unwrap();
+        let min = *sizes.iter().min().unwrap();
+        assert!(max - min <= 1, "{sizes:?}");
+    }
+
+    #[test]
+    fn randomized_not_contiguous() {
+        let mut rng = Pcg64::new(3);
+        let parts = partition_evenly(1000, 4, &mut rng);
+        // The first chunk of a shuffled partition should not be 0..250.
+        let sorted_first: Vec<usize> = {
+            let mut p = parts[0].clone();
+            p.sort_unstable();
+            p
+        };
+        assert_ne!(sorted_first, (0..250).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Pcg64::new(7);
+        let mut b = Pcg64::new(7);
+        assert_eq!(partition_evenly(50, 5, &mut a), partition_evenly(50, 5, &mut b));
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_few_samples_panics() {
+        let mut rng = Pcg64::new(1);
+        partition_evenly(3, 10, &mut rng);
+    }
+}

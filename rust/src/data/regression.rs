@@ -1,0 +1,219 @@
+//! Port of `sklearn.datasets.make_regression`.
+//!
+//! The paper's ridge experiment (Section 4): `make_regression` with default
+//! parameters for `m = 100, d = 80`, data then "uniformly, evenly, and
+//! randomly distributed among 10 workers".
+//!
+//! sklearn semantics reproduced here (defaults in parentheses):
+//! * `X` is `m × d` i.i.d. standard normal;
+//! * `n_informative` (10) coordinates of the ground truth are drawn as
+//!   `100 * U[0, 1)`, the rest are zero;
+//! * `y = X @ coef + bias (0) + noise (0) * N(0,1)`;
+//! * columns and rows are shuffled (`shuffle=True`).
+//!
+//! RNG streams obviously differ from NumPy's MT19937, but every compared
+//! algorithm consumes the *same* generated dataset, which is what the
+//! paper's comparisons rely on.
+
+use crate::linalg::Mat;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct RegressionOpts {
+    pub n_samples: usize,
+    pub n_features: usize,
+    pub n_informative: usize,
+    pub bias: f64,
+    pub noise: f64,
+    pub shuffle: bool,
+    pub seed: u64,
+}
+
+impl Default for RegressionOpts {
+    fn default() -> Self {
+        Self {
+            n_samples: 100,
+            n_features: 80,
+            n_informative: 10,
+            bias: 0.0,
+            noise: 0.0,
+            shuffle: true,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RegressionDataset {
+    pub a: Mat,           // design matrix, m × d
+    pub y: Vec<f64>,      // targets, m
+    pub coef: Vec<f64>,   // ground-truth coefficients, d
+}
+
+/// Generate a regression problem following sklearn's `make_regression`.
+pub fn make_regression(opts: &RegressionOpts) -> RegressionDataset {
+    let RegressionOpts {
+        n_samples: m,
+        n_features: d,
+        n_informative,
+        bias,
+        noise,
+        shuffle,
+        seed,
+    } = *opts;
+    let n_informative = n_informative.min(d);
+    let mut rng = Pcg64::with_stream(seed, 0x8e6);
+
+    let mut a = Mat::zeros(m, d);
+    rng.fill_normal(&mut a.data);
+
+    // Ground truth: informative prefix, then zeros.
+    let mut coef = vec![0.0; d];
+    for c in coef.iter_mut().take(n_informative) {
+        *c = 100.0 * rng.f64();
+    }
+
+    let mut y = a.matvec(&coef);
+    for v in y.iter_mut() {
+        *v += bias;
+        if noise > 0.0 {
+            *v += rng.normal() * noise;
+        }
+    }
+
+    if shuffle {
+        // Shuffle rows (keeping X/y aligned) …
+        let row_perm = rng.permutation(m);
+        let mut a2 = Mat::zeros(m, d);
+        let mut y2 = vec![0.0; m];
+        for (new_i, &old_i) in row_perm.iter().enumerate() {
+            a2.row_mut(new_i).copy_from_slice(a.row(old_i as usize));
+            y2[new_i] = y[old_i as usize];
+        }
+        // … and features (keeping coef aligned).
+        let col_perm = rng.permutation(d);
+        let mut a3 = Mat::zeros(m, d);
+        let mut coef2 = vec![0.0; d];
+        for (new_j, &old_j) in col_perm.iter().enumerate() {
+            for i in 0..m {
+                a3.data[i * d + new_j] = a2.data[i * d + old_j as usize];
+            }
+            coef2[new_j] = coef[old_j as usize];
+        }
+        a = a3;
+        y = y2;
+        coef = coef2;
+    }
+
+    RegressionDataset { a, y, coef }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_opts() {
+        let ds = make_regression(&RegressionOpts::default());
+        assert_eq!(ds.a.rows, 100);
+        assert_eq!(ds.a.cols, 80);
+        assert_eq!(ds.y.len(), 100);
+        assert_eq!(ds.coef.len(), 80);
+    }
+
+    #[test]
+    fn noiseless_targets_are_exact() {
+        let ds = make_regression(&RegressionOpts {
+            noise: 0.0,
+            ..Default::default()
+        });
+        let pred = ds.a.matvec(&ds.coef);
+        for (p, t) in pred.iter().zip(ds.y.iter()) {
+            assert!((p - t).abs() < 1e-9, "{p} vs {t}");
+        }
+    }
+
+    #[test]
+    fn informative_count_respected() {
+        let ds = make_regression(&RegressionOpts {
+            shuffle: false,
+            ..Default::default()
+        });
+        let nonzero = ds.coef.iter().filter(|&&c| c != 0.0).count();
+        assert_eq!(nonzero, 10);
+        // informative coefficients live in [0, 100)
+        for &c in ds.coef.iter().filter(|&&c| c != 0.0) {
+            assert!((0.0..100.0).contains(&c));
+        }
+    }
+
+    #[test]
+    fn shuffle_preserves_model() {
+        let ds = make_regression(&RegressionOpts {
+            shuffle: true,
+            seed: 5,
+            ..Default::default()
+        });
+        let pred = ds.a.matvec(&ds.coef);
+        for (p, t) in pred.iter().zip(ds.y.iter()) {
+            assert!((p - t).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = make_regression(&RegressionOpts {
+            seed: 9,
+            ..Default::default()
+        });
+        let b = make_regression(&RegressionOpts {
+            seed: 9,
+            ..Default::default()
+        });
+        assert_eq!(a.a.data, b.a.data);
+        assert_eq!(a.y, b.y);
+        let c = make_regression(&RegressionOpts {
+            seed: 10,
+            ..Default::default()
+        });
+        assert_ne!(a.a.data, c.a.data);
+    }
+
+    #[test]
+    fn noise_perturbs_targets() {
+        let clean = make_regression(&RegressionOpts {
+            seed: 1,
+            noise: 0.0,
+            shuffle: false,
+            ..Default::default()
+        });
+        let noisy = make_regression(&RegressionOpts {
+            seed: 1,
+            noise: 1.0,
+            shuffle: false,
+            ..Default::default()
+        });
+        assert_eq!(clean.a.data, noisy.a.data);
+        let diffs = clean
+            .y
+            .iter()
+            .zip(noisy.y.iter())
+            .filter(|(a, b)| (*a - *b).abs() > 1e-12)
+            .count();
+        assert!(diffs > 90);
+    }
+
+    #[test]
+    fn entries_look_standard_normal() {
+        let ds = make_regression(&RegressionOpts {
+            n_samples: 200,
+            n_features: 100,
+            ..Default::default()
+        });
+        let n = ds.a.data.len() as f64;
+        let mean: f64 = ds.a.data.iter().sum::<f64>() / n;
+        let var: f64 = ds.a.data.iter().map(|v| v * v).sum::<f64>() / n - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+}

@@ -1,0 +1,125 @@
+//! Sparse row storage for classification datasets (LibSVM-style).
+
+/// One example: sorted feature indices + values, and a ±1 label.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseRow {
+    pub indices: Vec<u32>,
+    pub values: Vec<f64>,
+    pub label: f64, // ±1 for binary classification
+}
+
+impl SparseRow {
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Sparse dot with a dense vector.
+    #[inline]
+    pub fn dot(&self, x: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for (idx, v) in self.indices.iter().zip(self.values.iter()) {
+            s += x[*idx as usize] * v;
+        }
+        s
+    }
+
+    /// `out += a * row` scatter-add.
+    #[inline]
+    pub fn axpy_into(&self, a: f64, out: &mut [f64]) {
+        for (idx, v) in self.indices.iter().zip(self.values.iter()) {
+            out[*idx as usize] += a * v;
+        }
+    }
+
+    /// Squared Euclidean norm of the feature vector.
+    pub fn nrm2_sq(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum()
+    }
+}
+
+/// A sparse binary-classification dataset.
+#[derive(Clone, Debug, Default)]
+pub struct SparseDataset {
+    pub rows: Vec<SparseRow>,
+    pub n_features: usize,
+}
+
+impl SparseDataset {
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+    pub fn nnz(&self) -> usize {
+        self.rows.iter().map(|r| r.nnz()).sum()
+    }
+    pub fn density(&self) -> f64 {
+        if self.rows.is_empty() || self.n_features == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.len() * self.n_features) as f64
+    }
+    pub fn positive_fraction(&self) -> f64 {
+        if self.rows.is_empty() {
+            return 0.0;
+        }
+        self.rows.iter().filter(|r| r.label > 0.0).count() as f64 / self.len() as f64
+    }
+    /// Upper bound on per-example smoothness of the logistic loss:
+    /// L_row = ‖a‖²/4 (curvature of log(1+exp(-t)) is ≤ 1/4).
+    pub fn max_row_norm_sq(&self) -> f64 {
+        self.rows.iter().map(|r| r.nrm2_sq()).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> SparseRow {
+        SparseRow {
+            indices: vec![0, 3, 7],
+            values: vec![1.0, -2.0, 0.5],
+            label: 1.0,
+        }
+    }
+
+    #[test]
+    fn sparse_dot() {
+        let r = row();
+        let x = vec![1.0; 8];
+        assert_eq!(r.dot(&x), -0.5);
+    }
+
+    #[test]
+    fn axpy_scatter() {
+        let r = row();
+        let mut out = vec![0.0; 8];
+        r.axpy_into(2.0, &mut out);
+        assert_eq!(out[0], 2.0);
+        assert_eq!(out[3], -4.0);
+        assert_eq!(out[7], 1.0);
+        assert_eq!(out[1], 0.0);
+    }
+
+    #[test]
+    fn dataset_stats() {
+        let ds = SparseDataset {
+            rows: vec![
+                row(),
+                SparseRow {
+                    indices: vec![1],
+                    values: vec![3.0],
+                    label: -1.0,
+                },
+            ],
+            n_features: 8,
+        };
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.nnz(), 4);
+        assert!((ds.density() - 4.0 / 16.0).abs() < 1e-12);
+        assert_eq!(ds.positive_fraction(), 0.5);
+        assert_eq!(ds.max_row_norm_sq(), 9.0);
+    }
+}

@@ -1,0 +1,238 @@
+//! `shiftcomp` CLI dispatch.
+
+use crate::config::ExperimentConfig;
+use crate::util::cli::Command;
+
+const TOP_USAGE: &str = "\
+shiftcomp — Shifted Compression Framework (Shulgin & Richtárik, UAI 2022)
+
+USAGE:
+  shiftcomp <SUBCOMMAND> [OPTIONS]
+
+SUBCOMMANDS:
+  run       run one experiment from a JSON config
+  figure    regenerate a paper figure (1, 2, 3, 4, gdci) into results/
+  table     regenerate Table 1 (theory vs measured)
+  train-lm  distributed compressed training of the transformer LM
+  list      list algorithms / compressors / shift rules (paper Table 2)
+  help      show this message
+";
+
+pub fn cli_main(argv: &[String]) -> i32 {
+    match argv.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&argv[1..]),
+        Some("figure") => cmd_figure(&argv[1..]),
+        Some("table") => cmd_table(&argv[1..]),
+        Some("train-lm") => cmd_train_lm(&argv[1..]),
+        Some("list") => cmd_list(),
+        Some("help") | Some("--help") | Some("-h") | None => {
+            println!("{TOP_USAGE}");
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n\n{TOP_USAGE}");
+            2
+        }
+    }
+}
+
+fn cmd_run(argv: &[String]) -> i32 {
+    let cmd = Command::new("run", "run one experiment from a JSON config")
+        .required("config", "path to the experiment JSON")
+        .opt("out", "", "write the trace CSV here");
+    let parsed = match cmd.parse(argv) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let cfg_path = parsed.get("config").unwrap();
+    let cfg = match ExperimentConfig::load(cfg_path) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    match cfg.execute() {
+        Ok(trace) => {
+            println!(
+                "{} [{}]: {} rounds, final rel err {:.3e}, uplink {} bits{}{}",
+                trace.algorithm,
+                trace.compressor,
+                trace.rounds(),
+                trace.final_relative_error(),
+                trace.total_bits_up(),
+                if trace.converged { ", converged" } else { "" },
+                if trace.diverged { ", DIVERGED" } else { "" },
+            );
+            if let Some(out) = parsed.get("out") {
+                if !out.is_empty() {
+                    if let Err(e) = trace.save_csv(out) {
+                        eprintln!("writing {out}: {e}");
+                        return 1;
+                    }
+                    println!("trace written to {out}");
+                }
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_figure(argv: &[String]) -> i32 {
+    let cmd = Command::new("figure", "regenerate a paper figure")
+        .positional("which", "1 | 2 | 3 | 4 | gdci")
+        .opt("out-dir", "results", "output directory for CSVs")
+        .opt("seed", "42", "experiment seed")
+        .opt("rounds", "40000", "max rounds per curve");
+    let parsed = match cmd.parse(argv) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let out = parsed.get("out-dir").unwrap().to_string();
+    let seed = parsed.get_u64("seed").unwrap_or(42);
+    let rounds = parsed.get_usize("rounds").unwrap_or(40_000);
+    match parsed.positional("which") {
+        Some("1") => {
+            crate::harness::fig1_left(&out, seed, rounds);
+            crate::harness::fig1_right(&out, seed, rounds);
+        }
+        Some("2") => {
+            crate::harness::fig2_left(&out, seed, rounds);
+            crate::harness::fig2_right(&out, seed, rounds);
+        }
+        Some("3") => {
+            crate::harness::fig3(&out, seed, rounds);
+        }
+        Some("4") => {
+            crate::harness::fig4(&out, seed, rounds);
+        }
+        Some("gdci") => {
+            crate::harness::gdci_ablation(&out, seed, rounds);
+        }
+        other => {
+            eprintln!("figure must be 1|2|3|4|gdci, got {other:?}");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_table(argv: &[String]) -> i32 {
+    let cmd = Command::new("table", "regenerate Table 1")
+        .opt("seed", "42", "experiment seed")
+        .opt("q", "0.5", "Rand-K share q = K/d")
+        .opt("eps", "1e-6", "target relative error")
+        .opt("rounds", "60000", "max rounds per method");
+    let parsed = match cmd.parse(argv) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let rows = crate::harness::table1(
+        parsed.get_u64("seed").unwrap_or(42),
+        parsed.get_f64("q").unwrap_or(0.5),
+        parsed.get_f64("eps").unwrap_or(1e-6),
+        parsed.get_usize("rounds").unwrap_or(60_000),
+    );
+    print!("{}", crate::harness::table1::render(&rows, 1e-6));
+    0
+}
+
+fn cmd_train_lm(argv: &[String]) -> i32 {
+    let cmd = Command::new("train-lm", "distributed compressed LM training")
+        .opt("artifacts", "artifacts", "AOT artifacts directory")
+        .opt("workers", "4", "number of workers")
+        .opt("rounds", "300", "training rounds")
+        .opt("q", "0.05", "Rand-K share for gradient compression")
+        .opt("lr", "0.25", "learning rate")
+        .opt("seed", "0", "seed");
+    let parsed = match cmd.parse(argv) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let artifacts = parsed.get("artifacts").unwrap();
+    let engine = match crate::runtime::Engine::cpu(artifacts) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("error: {e}\n(run `make artifacts` first)");
+            return 1;
+        }
+    };
+    let opts = crate::lm::LmTrainOpts {
+        n_workers: parsed.get_usize("workers").unwrap_or(4),
+        rounds: parsed.get_usize("rounds").unwrap_or(300),
+        lr: parsed.get_f64("lr").unwrap_or(0.1),
+        seed: parsed.get_u64("seed").unwrap_or(0),
+        ..Default::default()
+    };
+    let q = parsed.get_f64("q").unwrap_or(0.05);
+    let corpus = crate::lm::MarkovCorpus::new(512, 4, 0.9, opts.seed);
+    let mut trainer = match crate::lm::LmTrainer::new(
+        &engine,
+        corpus,
+        |p| Box::new(crate::compressors::RandK::with_q(p, q)),
+        opts,
+    ) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "training {}-param LM, corpus entropy floor ≈ {:.3}",
+        trainer.param_count(),
+        trainer.entropy_floor()
+    );
+    match trainer.train() {
+        Ok(history) => {
+            let first = history.first().map(|l| l.mean_loss).unwrap_or(f64::NAN);
+            let last = history.last().map(|l| l.mean_loss).unwrap_or(f64::NAN);
+            println!("loss: {first:.4} → {last:.4}");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_list() -> i32 {
+    println!(
+        "\
+Algorithms (paper Table 2 — shift h_i^{{k+1}} = s_i^k + C_i(∇f_i(x^k) − s_i^k)):
+  dgd         s=0,  C=I    VR  (folklore baseline, no compression)
+  dcgd        s=0,  C=O    —   (Khirirat et al. 2018; Theorem 1 w/ h=0)
+  dcgd-shift  s=h⁰, C=O    —   (this work, Theorem 1)
+  dcgd-star   s=∇f_i(x*)   VR  (this work, Theorem 2)
+  diana       s=h_i^k, C_i VR  (Mishchenko et al. 2019; Theorem 3 generalized)
+  rand-diana  s=h_i^k, B_p VR  (this work, Theorem 4)
+  gdci        iterate compression  (Theorem 5, improved κ²→κ)
+  vr-gdci     iterate compression + learned shift (Theorem 6)
+
+Compressors:
+  unbiased U(ω): identity(0), rand-k(d/K−1), natural-dithering, standard-
+                 dithering, natural-compression(1/8), bernoulli(1/p−1),
+                 ternary(√d−1)
+  biased B(δ):   top-k(K/d), sign-l1(1/d), zero(0)
+  combinators:   induced C+Q(x−C(x)) ∈ U(ω(1−δ)), shifted h+Q(x−h), scaled αQ
+"
+    );
+    0
+}

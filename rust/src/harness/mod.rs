@@ -1,0 +1,17 @@
+//! Experiment harness: one driver per paper table/figure, shared by the
+//! `cargo bench` targets and the `shiftcomp` CLI.
+//!
+//! Every driver writes CSVs under `results/` and renders an ASCII plot, and
+//! returns a structured summary so benches/tests can assert the *shape* of
+//! the result (who wins, by roughly what factor) — see DESIGN.md §5.
+
+pub mod cli;
+pub mod figures;
+pub mod table1;
+
+pub use cli::cli_main;
+pub use figures::{
+    fig1_left, fig1_right, fig2_left, fig2_right, fig3, fig4, gdci_ablation, CurveSummary,
+    FigureResult,
+};
+pub use table1::{table1, Table1Row};

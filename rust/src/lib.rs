@@ -1,0 +1,72 @@
+//! # shiftcomp — Shifted Compression Framework
+//!
+//! A production-grade implementation of *"Shifted Compression Framework:
+//! Generalizations and Improvements"* (Shulgin & Richtárik, UAI 2022) for
+//! communication-efficient distributed optimization.
+//!
+//! The paper generalizes unbiased compression operators `Q ∈ U(ω)` to
+//! **shifted compressors** `Q_h(x) = h + Q(x − h) ∈ U(ω; h)` and derives a
+//! meta-algorithm, **DCGD-SHIFT**, in which each worker compresses the
+//! difference between its local gradient and a *shift* `h_i^k`. Different
+//! shift-update rules recover (and improve) DCGD, DIANA, GDCI, VR-GDCI, and
+//! produce the new DCGD-STAR and Rand-DIANA methods.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **Layer 3 (this crate)** — the distributed coordinator: a
+//!   round-synchronous master + n workers runtime over channels carrying
+//!   wire-encoded compressed messages, with exact bit accounting and a
+//!   simulated network ([`coordinator`], [`net`], [`wire`]).
+//! * **Layer 2 (JAX, build time)** — gradient computations and a
+//!   transformer LM lowered once to HLO text (`python/compile/model.py`),
+//!   loaded and executed from Rust via PJRT ([`runtime`]).
+//! * **Layer 1 (Pallas, build time)** — tiled matmul and fused
+//!   shift-compress kernels called from the L2 graphs
+//!   (`python/compile/kernels/`).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use shiftcomp::prelude::*;
+//!
+//! // Build the paper's ridge problem: make_regression(m=100, d=80), 10 workers.
+//! let problem = Ridge::paper_default(42);
+//! // Rand-DIANA with Rand-K compression at q = 0.5.
+//! let d = problem.dim();
+//! let mut alg = DcgdShift::rand_diana(&problem, RandK::with_q(d, 0.5), None, 42);
+//! let trace = alg.run(&problem, &RunOpts::default());
+//! println!("final error: {:.3e}", trace.final_relative_error());
+//! ```
+
+pub mod algorithms;
+pub mod compressors;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod linalg;
+pub mod lm;
+pub mod metrics;
+pub mod net;
+pub mod problems;
+pub mod runtime;
+pub mod theory;
+pub mod util;
+pub mod wire;
+
+/// Convenient re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::algorithms::{
+        Algorithm, Dcgd, DcgdShift, Gd, Gdci, RunOpts, ShiftRule, VrGdci,
+    };
+    pub use crate::compressors::{
+        BernoulliP, Compressor, Identity, Induced, NaturalCompression, NaturalDithering, RandK,
+        Scaled, SignScaled, Ternary, TopK, ZeroCompressor,
+    };
+    pub use crate::coordinator::{ClusterConfig, DistributedRunner};
+    pub use crate::data::{make_regression, partition_evenly, synthetic_w2a, RegressionOpts, W2aOpts};
+    pub use crate::metrics::Trace;
+    pub use crate::problems::{Logistic, Problem, Quadratic, Ridge};
+    pub use crate::theory::{self, StepSizes};
+    pub use crate::util::rng::Pcg64;
+}

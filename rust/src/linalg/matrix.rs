@@ -1,0 +1,229 @@
+//! Row-major dense matrix with the operations the problem layer needs:
+//! matvec, transposed matvec, gram matrix, and a blocked GEMM used by the
+//! spectral estimator and the data generator's low-rank construction.
+
+use crate::linalg::vector::{axpy, dot};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>, // row-major, len = rows * cols
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in &rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self {
+            rows: r,
+            cols: c,
+            data,
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// `out = A x`.
+    pub fn matvec_into(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for i in 0..self.rows {
+            out[i] = dot(self.row(i), x);
+        }
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows];
+        self.matvec_into(x, &mut out);
+        out
+    }
+
+    /// `out = Aᵀ y` without materializing the transpose.
+    pub fn t_matvec_into(&self, y: &[f64], out: &mut [f64]) {
+        assert_eq!(y.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        out.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..self.rows {
+            axpy(y[i], self.row(i), out);
+        }
+    }
+
+    pub fn t_matvec(&self, y: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.cols];
+        self.t_matvec_into(y, &mut out);
+        out
+    }
+
+    /// Gram matrix `AᵀA` (cols × cols), the Hessian core of least squares.
+    pub fn gram(&self) -> Mat {
+        let d = self.cols;
+        let mut g = Mat::zeros(d, d);
+        // Rank-1 accumulation over rows: G += a_i a_iᵀ. Row-major friendly.
+        for i in 0..self.rows {
+            let a = self.row(i).to_vec();
+            for j in 0..d {
+                let aj = a[j];
+                if aj != 0.0 {
+                    let grow = g.row_mut(j);
+                    for k in 0..d {
+                        grow[k] += aj * a[k];
+                    }
+                }
+            }
+        }
+        g
+    }
+
+    /// Blocked `A * B` (ikj loop order — streaming, autovectorizable).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows);
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut c = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            // split borrows: write into c.row_mut(i) while reading b rows
+            for p in 0..k {
+                let a_ip = arow[p];
+                if a_ip == 0.0 {
+                    continue;
+                }
+                let brow = b.row(p);
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += a_ip * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Scale all entries in place.
+    pub fn scale(&mut self, a: f64) {
+        for v in self.data.iter_mut() {
+            *v *= a;
+        }
+    }
+
+    /// `self += a * I` (ridge term on a square matrix).
+    pub fn add_diag(&mut self, a: f64) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] += a;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a() -> Mat {
+        Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]])
+    }
+
+    #[test]
+    fn matvec_and_transpose_matvec() {
+        let m = a();
+        assert_eq!(m.matvec(&[1.0, 1.0]), vec![3.0, 7.0, 11.0]);
+        assert_eq!(m.t_matvec(&[1.0, 1.0, 1.0]), vec![9.0, 12.0]);
+    }
+
+    #[test]
+    fn gram_is_at_a() {
+        let m = a();
+        let g = m.gram();
+        let expected = m.transpose().matmul(&m);
+        assert_eq!(g, expected);
+        // symmetric
+        for i in 0..g.rows {
+            for j in 0..g.cols {
+                assert!((g.get(i, j) - g.get(j, i)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let m = a();
+        let i2 = Mat::eye(2);
+        assert_eq!(m.matmul(&i2), m);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let x = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let y = Mat::from_rows(vec![vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let z = x.matmul(&y);
+        assert_eq!(z.data, vec![2.0, 1.0, 4.0, 3.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = a();
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn add_diag_and_fro() {
+        let mut m = Mat::eye(3);
+        m.add_diag(2.0);
+        assert_eq!(m.get(0, 0), 3.0);
+        assert!((m.fro() - (27.0f64).sqrt()).abs() < 1e-12);
+    }
+}

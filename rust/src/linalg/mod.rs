@@ -1,0 +1,18 @@
+//! Dense linear algebra substrate.
+//!
+//! Everything the optimization stack needs, built from scratch for the
+//! offline environment: vector kernels, a row-major dense matrix with
+//! matvec/gemm, Cholesky solves (used for the closed-form ridge optimum),
+//! and spectral estimation (power iteration and Rayleigh bounds) used to
+//! derive the smoothness constants `L_i`, `L` and strong-convexity `μ` that
+//! the paper's step-size rules (Theorems 1–6) consume.
+
+pub mod matrix;
+pub mod solve;
+pub mod spectral;
+pub mod vector;
+
+pub use matrix::Mat;
+pub use solve::{cholesky_solve, Cholesky};
+pub use spectral::{lambda_max, lambda_min_psd, SpectralOpts};
+pub use vector::*;

@@ -1,0 +1,169 @@
+//! Spectral estimation for smoothness / strong-convexity constants.
+//!
+//! The paper's step-size rules need `L_i = λ_max(∇²f_i)`, `L = λ_max(∇²f)`
+//! and `μ = λ_min(∇²f)`. For ridge regression the Hessian is constant
+//! (`AᵀA/m + λI`), so we estimate extreme eigenvalues of SPD matrices with:
+//!
+//! * **power iteration** with Rayleigh-quotient convergence test → λ_max,
+//! * **spectral-shift power iteration** on `λ_max·I − H` → λ_min (avoids a
+//!   full inverse; for PSD H this is robust and allocation-light).
+
+use crate::linalg::matrix::Mat;
+use crate::linalg::vector::{dot, nrm2, scale};
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SpectralOpts {
+    pub max_iters: usize,
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl Default for SpectralOpts {
+    fn default() -> Self {
+        Self {
+            max_iters: 5_000,
+            tol: 1e-12,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// Largest eigenvalue of a symmetric PSD matrix via power iteration.
+pub fn lambda_max(h: &Mat, opts: SpectralOpts) -> f64 {
+    assert_eq!(h.rows, h.cols, "symmetric matrix required");
+    let n = h.rows;
+    if n == 0 {
+        return 0.0;
+    }
+    let mut g = Pcg64::new(opts.seed);
+    let mut v: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+    let norm = nrm2(&v);
+    scale(1.0 / norm, &mut v);
+    let mut hv = vec![0.0; n];
+    let mut prev = 0.0f64;
+    for _ in 0..opts.max_iters {
+        h.matvec_into(&v, &mut hv);
+        let lam = dot(&v, &hv); // Rayleigh quotient
+        let hv_norm = nrm2(&hv);
+        if hv_norm == 0.0 {
+            return 0.0; // zero matrix
+        }
+        for i in 0..n {
+            v[i] = hv[i] / hv_norm;
+        }
+        if (lam - prev).abs() <= opts.tol * lam.abs().max(1.0) {
+            return lam.max(hv_norm); // hv_norm ≥ Rayleigh for the final iterate
+        }
+        prev = lam;
+    }
+    prev
+}
+
+/// Smallest eigenvalue of a symmetric PSD matrix via shifted power
+/// iteration: λ_min(H) = s − λ_max(sI − H) with s ≥ λ_max(H).
+pub fn lambda_min_psd(h: &Mat, opts: SpectralOpts) -> f64 {
+    assert_eq!(h.rows, h.cols);
+    let n = h.rows;
+    if n == 0 {
+        return 0.0;
+    }
+    let lmax = lambda_max(h, opts);
+    // shift slightly above λ_max so the target eigenvalue is the largest of
+    // the shifted matrix with a margin
+    let s = lmax * (1.0 + 1e-6) + 1e-12;
+    let mut shifted = h.clone();
+    shifted.scale(-1.0);
+    shifted.add_diag(s);
+    let lam_shift = lambda_max(&shifted, opts);
+    (s - lam_shift).max(0.0)
+}
+
+/// Gershgorin upper bound on λ_max — cheap sanity check / fallback.
+pub fn gershgorin_upper(h: &Mat) -> f64 {
+    assert_eq!(h.rows, h.cols);
+    let mut best = 0.0f64;
+    for i in 0..h.rows {
+        let row = h.row(i);
+        let radius: f64 = row
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| *j != i)
+            .map(|(_, v)| v.abs())
+            .sum();
+        best = best.max(h.get(i, i) + radius);
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diag(vals: &[f64]) -> Mat {
+        let n = vals.len();
+        let mut m = Mat::zeros(n, n);
+        for (i, &v) in vals.iter().enumerate() {
+            m.set(i, i, v);
+        }
+        m
+    }
+
+    #[test]
+    fn diagonal_extremes() {
+        let h = diag(&[0.5, 3.0, 7.0, 1.0]);
+        let opts = SpectralOpts::default();
+        assert!((lambda_max(&h, opts) - 7.0).abs() < 1e-6);
+        assert!((lambda_min_psd(&h, opts) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rank_one_plus_ridge() {
+        // H = u uᵀ + λ I has λ_max = ‖u‖² + λ, λ_min = λ.
+        let u = [1.0, 2.0, 2.0]; // ‖u‖² = 9
+        let lam = 0.25;
+        let mut h = Mat::zeros(3, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                h.set(i, j, u[i] * u[j]);
+            }
+        }
+        h.add_diag(lam);
+        let opts = SpectralOpts::default();
+        assert!((lambda_max(&h, opts) - 9.25).abs() < 1e-6);
+        assert!((lambda_min_psd(&h, opts) - 0.25).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gershgorin_upper_bounds_lambda_max() {
+        let h = diag(&[1.0, 2.0, 5.0]);
+        assert!(gershgorin_upper(&h) >= lambda_max(&h, SpectralOpts::default()) - 1e-9);
+    }
+
+    #[test]
+    fn random_gram_consistency() {
+        use crate::util::rng::Pcg64;
+        let mut g = Pcg64::new(7);
+        let mut a = Mat::zeros(40, 12);
+        for v in a.data.iter_mut() {
+            *v = g.normal();
+        }
+        let mut h = a.gram();
+        h.scale(1.0 / 40.0);
+        h.add_diag(0.01);
+        let opts = SpectralOpts::default();
+        let lmax = lambda_max(&h, opts);
+        let lmin = lambda_min_psd(&h, opts);
+        assert!(lmax >= lmin && lmin >= 0.0099, "lmax {lmax} lmin {lmin}");
+        assert!(gershgorin_upper(&h) >= lmax - 1e-9);
+        // trace bounds: lmin*n <= tr <= lmax*n
+        let tr: f64 = (0..12).map(|i| h.get(i, i)).sum();
+        assert!(lmin * 12.0 <= tr + 1e-9 && tr <= lmax * 12.0 + 1e-9);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let h = Mat::zeros(5, 5);
+        assert_eq!(lambda_max(&h, SpectralOpts::default()), 0.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Dense vector kernels on `&[f64]` / `&mut [f64]`.
+//!
+//! These are the innermost loops of the whole stack — every compressor,
+//! every algorithm step, and the coordinator's aggregation path run through
+//! them — so they are written to autovectorize (plain indexed loops over
+//! equal-length slices, with `assert_eq!` up front so the compiler can elide
+//! bounds checks).
+
+/// `y += a * x`.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// `y = a * x + b * y` (general scaled update).
+#[inline]
+pub fn axpby(a: f64, x: &[f64], b: f64, y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] = a * x[i] + b * y[i];
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mut s = 0.0;
+    for i in 0..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn nrm2_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    nrm2_sq(x).sqrt()
+}
+
+/// ‖x − y‖².
+#[inline]
+pub fn dist_sq(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mut s = 0.0;
+    for i in 0..x.len() {
+        let d = x[i] - y[i];
+        s += d * d;
+    }
+    s
+}
+
+/// `x *= a` in place.
+#[inline]
+pub fn scale(a: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= a;
+    }
+}
+
+/// `out = x - y` into a preallocated buffer.
+#[inline]
+pub fn sub_into(x: &[f64], y: &[f64], out: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] = x[i] - y[i];
+    }
+}
+
+/// `out = x + y` into a preallocated buffer.
+#[inline]
+pub fn add_into(x: &[f64], y: &[f64], out: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] = x[i] + y[i];
+    }
+}
+
+/// Copy `src` into `dst`.
+#[inline]
+pub fn copy(src: &[f64], dst: &mut [f64]) {
+    dst.copy_from_slice(src);
+}
+
+/// Set all entries to zero.
+#[inline]
+pub fn zero(x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v = 0.0;
+    }
+}
+
+/// ℓ∞ norm.
+#[inline]
+pub fn nrm_inf(x: &[f64]) -> f64 {
+    x.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
+}
+
+/// ℓ1 norm.
+#[inline]
+pub fn nrm1(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// ℓp norm for p ≥ 1 (used by Natural Dithering's p-norm variant).
+#[inline]
+pub fn nrmp(x: &[f64], p: f64) -> f64 {
+    debug_assert!(p >= 1.0);
+    if p == 1.0 {
+        return nrm1(x);
+    }
+    if p == 2.0 {
+        return nrm2(x);
+    }
+    if p.is_infinite() {
+        return nrm_inf(x);
+    }
+    x.iter().map(|v| v.abs().powf(p)).sum::<f64>().powf(1.0 / p)
+}
+
+/// Mean of n vectors accumulated into `out` (used by the master aggregate).
+pub fn mean_into(vectors: &[&[f64]], out: &mut [f64]) {
+    assert!(!vectors.is_empty());
+    zero(out);
+    for v in vectors {
+        axpy(1.0, v, out);
+    }
+    scale(1.0 / vectors.len() as f64, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_matches_manual() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn axpby_matches_manual() {
+        let x = [1.0, 2.0];
+        let mut y = [3.0, 4.0];
+        axpby(2.0, &x, 0.5, &mut y);
+        assert_eq!(y, [3.5, 6.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let x = [3.0, -4.0];
+        assert_eq!(nrm2(&x), 5.0);
+        assert_eq!(nrm2_sq(&x), 25.0);
+        assert_eq!(nrm1(&x), 7.0);
+        assert_eq!(nrm_inf(&x), 4.0);
+        assert!((nrmp(&x, 2.0) - 5.0).abs() < 1e-12);
+        assert!((nrmp(&x, 3.0) - (27.0f64 + 64.0).powf(1.0 / 3.0)).abs() < 1e-12);
+        assert_eq!(nrmp(&x, f64::INFINITY), 4.0);
+    }
+
+    #[test]
+    fn dist_and_dot() {
+        let x = [1.0, 2.0, 3.0];
+        let y = [2.0, 2.0, 1.0];
+        assert_eq!(dot(&x, &y), 9.0);
+        assert_eq!(dist_sq(&x, &y), 1.0 + 0.0 + 4.0);
+    }
+
+    #[test]
+    fn mean_of_vectors() {
+        let a = [1.0, 2.0];
+        let b = [3.0, 6.0];
+        let mut out = [0.0, 0.0];
+        mean_into(&[&a, &b], &mut out);
+        assert_eq!(out, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn sub_add_roundtrip() {
+        let x = [5.0, 7.0];
+        let y = [2.0, 3.0];
+        let mut d = [0.0; 2];
+        let mut s = [0.0; 2];
+        sub_into(&x, &y, &mut d);
+        add_into(&d, &y, &mut s);
+        assert_eq!(s, x);
+    }
+}

@@ -1,0 +1,14 @@
+//! Distributed compressed training of the transformer LM — the end-to-end
+//! workload of `examples/train_lm.rs`.
+//!
+//! The model lives in the AOT artifact (`lm_step`): Rust owns the
+//! parameters, shards synthetic-corpus batches across n workers, executes
+//! each worker's forward+backward via PJRT, compresses the gradients with
+//! the paper's DIANA shift machinery (f32 → f64 lift on the compression
+//! boundary), aggregates, and applies SGD-with-momentum on the leader.
+
+pub mod corpus;
+pub mod trainer;
+
+pub use corpus::MarkovCorpus;
+pub use trainer::{LmTrainOpts, LmTrainer, RoundLog};

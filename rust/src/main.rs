@@ -1,0 +1,14 @@
+//! `shiftcomp` CLI — leader entrypoint.
+//!
+//! Subcommands (see `shiftcomp help`):
+//! * `run`      — run one algorithm on one problem, print/save the trace
+//! * `figure`   — regenerate a paper figure (1, 2, 3, 4) into results/
+//! * `table`    — regenerate Table 1 (theory + measured)
+//! * `train-lm` — distributed compressed training of the transformer LM
+//!                via the PJRT runtime (requires `make artifacts`)
+//! * `list`     — list algorithms, compressors and shift rules (Table 2)
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(shiftcomp::harness::cli_main(&argv));
+}

@@ -1,0 +1,9 @@
+//! Run metrics: per-round traces, convergence detection, CSV/JSON export,
+//! and an ASCII plotter used by the figure benches to render the paper's
+//! plots directly in the terminal.
+
+pub mod plot;
+pub mod trace;
+
+pub use plot::AsciiPlot;
+pub use trace::{RoundRecord, Trace};

@@ -1,0 +1,131 @@
+//! Terminal ASCII line plots.
+//!
+//! The benches regenerate the paper's figures as CSVs *and* render them as
+//! ASCII plots so a reviewer can eyeball the curves without leaving the
+//! terminal. Multiple series share one canvas; each series gets a distinct
+//! glyph; axes are labeled with min/max.
+
+pub struct AsciiPlot {
+    pub title: String,
+    pub xlabel: String,
+    pub ylabel: String,
+    pub width: usize,
+    pub height: usize,
+    series: Vec<(String, char, Vec<(f64, f64)>)>,
+}
+
+const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&', '~', '^'];
+
+impl AsciiPlot {
+    pub fn new(title: &str, xlabel: &str, ylabel: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            xlabel: xlabel.to_string(),
+            ylabel: ylabel.to_string(),
+            width: 78,
+            height: 22,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn add_series(&mut self, name: &str, points: Vec<(f64, f64)>) {
+        let glyph = GLYPHS[self.series.len() % GLYPHS.len()];
+        self.series.push((name.to_string(), glyph, points));
+    }
+
+    pub fn render(&self) -> String {
+        let pts: Vec<(f64, f64)> = self
+            .series
+            .iter()
+            .flat_map(|(_, _, p)| p.iter().copied())
+            .filter(|(x, y)| x.is_finite() && y.is_finite())
+            .collect();
+        if pts.is_empty() {
+            return format!("{}\n(no finite data)\n", self.title);
+        }
+        let xmin = pts.iter().map(|p| p.0).fold(f64::INFINITY, f64::min);
+        let xmax = pts.iter().map(|p| p.0).fold(f64::NEG_INFINITY, f64::max);
+        let ymin = pts.iter().map(|p| p.1).fold(f64::INFINITY, f64::min);
+        let ymax = pts.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max);
+        let xspan = (xmax - xmin).max(1e-300);
+        let yspan = (ymax - ymin).max(1e-300);
+
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (_, glyph, points) in &self.series {
+            for &(x, y) in points {
+                if !x.is_finite() || !y.is_finite() {
+                    continue;
+                }
+                let col = (((x - xmin) / xspan) * (self.width - 1) as f64).round() as usize;
+                let row = (((y - ymin) / yspan) * (self.height - 1) as f64).round() as usize;
+                let row = self.height - 1 - row; // origin at bottom
+                grid[row.min(self.height - 1)][col.min(self.width - 1)] = *glyph;
+            }
+        }
+
+        let mut out = String::new();
+        out.push_str(&format!("━━ {} ━━\n", self.title));
+        out.push_str(&format!("{} (y: {:.3e} … {:.3e})\n", self.ylabel, ymin, ymax));
+        for row in &grid {
+            out.push('│');
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out.push('└');
+        out.extend(std::iter::repeat('─').take(self.width));
+        out.push('\n');
+        out.push_str(&format!(
+            "  {} (x: {:.3e} … {:.3e})\n",
+            self.xlabel, xmin, xmax
+        ));
+        for (name, glyph, _) in &self.series {
+            out.push_str(&format!("  {glyph} = {name}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_series_with_legend() {
+        let mut p = AsciiPlot::new("test", "bits", "log err");
+        p.add_series("a", vec![(0.0, 0.0), (1.0, -1.0), (2.0, -2.0)]);
+        p.add_series("b", vec![(0.0, 0.0), (1.0, -0.5), (2.0, -1.0)]);
+        let s = p.render();
+        assert!(s.contains("test"));
+        assert!(s.contains("* = a"));
+        assert!(s.contains("o = b"));
+        assert!(s.contains('*'));
+        assert!(s.lines().count() > 20);
+    }
+
+    #[test]
+    fn empty_plot_doesnt_panic() {
+        let p = AsciiPlot::new("empty", "x", "y");
+        assert!(p.render().contains("no finite data"));
+    }
+
+    #[test]
+    fn nonfinite_points_skipped() {
+        let mut p = AsciiPlot::new("nan", "x", "y");
+        p.add_series("a", vec![(0.0, f64::NAN), (1.0, 1.0), (2.0, f64::INFINITY)]);
+        let s = p.render();
+        assert!(s.contains("nan"));
+    }
+
+    #[test]
+    fn extremes_land_on_canvas_edges() {
+        let mut p = AsciiPlot::new("edge", "x", "y");
+        p.add_series("a", vec![(0.0, 0.0), (10.0, 10.0)]);
+        let s = p.render();
+        // both corners populated
+        let lines: Vec<&str> = s.lines().collect();
+        let first_grid = lines[2];
+        let last_grid = lines[2 + p.height - 1];
+        assert!(first_grid.ends_with('*') || first_grid.contains('*'));
+        assert!(last_grid.contains('*'));
+    }
+}

@@ -1,0 +1,214 @@
+//! Per-round measurements of one optimization run.
+
+use crate::util::json::Json;
+
+/// One recorded round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// relative squared argument error ‖x^k − x*‖² / ‖x⁰ − x*‖²
+    pub rel_err: f64,
+    /// cumulative worker→master payload bits (all workers)
+    pub bits_up: u64,
+    /// cumulative master→worker broadcast bits
+    pub bits_down: u64,
+    /// cumulative shift-state synchronization bits (e.g. Rand-DIANA's rare
+    /// dense shift refreshes) — reported separately so both accounting
+    /// conventions (messages-only vs total) can be plotted
+    pub bits_refresh: u64,
+    /// simulated wall-clock seconds (0 when no network model attached)
+    pub sim_time: f64,
+    /// objective value f(x^k), if the driver computes it (else NaN)
+    pub loss: f64,
+}
+
+/// The full trajectory of a run.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub algorithm: String,
+    pub compressor: String,
+    pub records: Vec<RoundRecord>,
+    /// true if the run was stopped because rel_err ≤ tol
+    pub converged: bool,
+    /// true if the iterate diverged (NaN / rel_err above the blow-up guard)
+    pub diverged: bool,
+}
+
+impl Trace {
+    pub fn new(algorithm: &str, compressor: &str) -> Self {
+        Self {
+            algorithm: algorithm.to_string(),
+            compressor: compressor.to_string(),
+            records: Vec::new(),
+            converged: false,
+            diverged: false,
+        }
+    }
+
+    pub fn push(&mut self, rec: RoundRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn final_relative_error(&self) -> f64 {
+        self.records.last().map(|r| r.rel_err).unwrap_or(f64::NAN)
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.records.last().map(|r| r.round + 1).unwrap_or(0)
+    }
+
+    /// Total uplink: gradient messages + shift-state sync.
+    pub fn total_bits_up(&self) -> u64 {
+        self.records
+            .last()
+            .map(|r| r.bits_up + r.bits_refresh)
+            .unwrap_or(0)
+    }
+
+    /// First round index at which rel_err ≤ tol, if reached.
+    pub fn rounds_to_tol(&self, tol: f64) -> Option<usize> {
+        self.records
+            .iter()
+            .find(|r| r.rel_err <= tol)
+            .map(|r| r.round)
+    }
+
+    /// Cumulative uplink bits (messages + refreshes) at the first round
+    /// where rel_err ≤ tol — the honest total-traffic accounting.
+    pub fn bits_to_tol(&self, tol: f64) -> Option<u64> {
+        self.records
+            .iter()
+            .find(|r| r.rel_err <= tol)
+            .map(|r| r.bits_up + r.bits_refresh)
+    }
+
+    /// Gradient-message bits only (shift refreshes excluded) — the
+    /// convention under which the paper's Figure 1 compares methods.
+    pub fn bits_to_tol_messages_only(&self, tol: f64) -> Option<u64> {
+        self.records
+            .iter()
+            .find(|r| r.rel_err <= tol)
+            .map(|r| r.bits_up)
+    }
+
+    /// The error floor: minimum rel_err along the trajectory (neighborhood
+    /// convergence shows up as a plateau here).
+    pub fn error_floor(&self) -> f64 {
+        self.records
+            .iter()
+            .map(|r| r.rel_err)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// (total bits, log10 rel_err) series for plotting.
+    pub fn bits_log_err(&self) -> Vec<(f64, f64)> {
+        self.records
+            .iter()
+            .map(|r| {
+                (
+                    (r.bits_up + r.bits_refresh) as f64,
+                    r.rel_err.max(1e-300).log10(),
+                )
+            })
+            .collect()
+    }
+
+    // --------------------------------------------------------------- export
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("round,rel_err,bits_up,bits_refresh,bits_down,sim_time,loss\n");
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{:e},{},{},{},{:e},{:e}\n",
+                r.round, r.rel_err, r.bits_up, r.bits_refresh, r.bits_down, r.sim_time, r.loss
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("algorithm", Json::str(&self.algorithm)),
+            ("compressor", Json::str(&self.compressor)),
+            ("converged", Json::Bool(self.converged)),
+            ("diverged", Json::Bool(self.diverged)),
+            (
+                "rounds",
+                Json::arr(self.records.iter().map(|r| Json::num(r.round as f64))),
+            ),
+            (
+                "rel_err",
+                Json::arr(self.records.iter().map(|r| Json::num(r.rel_err))),
+            ),
+            (
+                "bits_up",
+                Json::arr(self.records.iter().map(|r| Json::num(r.bits_up as f64))),
+            ),
+        ])
+    }
+
+    pub fn save_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        let mut t = Trace::new("diana", "rand-k");
+        for k in 0..5 {
+            t.push(RoundRecord {
+                round: k,
+                rel_err: 10f64.powi(-(k as i32)),
+                bits_up: (k as u64 + 1) * 100,
+                bits_refresh: 0,
+                bits_down: (k as u64 + 1) * 50,
+                sim_time: k as f64 * 0.1,
+                loss: f64::NAN,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn tol_queries() {
+        let t = sample();
+        assert_eq!(t.rounds_to_tol(1e-2), Some(2));
+        assert_eq!(t.bits_to_tol(1e-2), Some(300));
+        assert_eq!(t.rounds_to_tol(1e-9), None);
+        assert_eq!(t.final_relative_error(), 1e-4);
+        assert_eq!(t.error_floor(), 1e-4);
+        assert_eq!(t.total_bits_up(), 500);
+        assert_eq!(t.rounds(), 5);
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let t = sample();
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 6);
+        assert!(csv.starts_with("round,"));
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let t = sample();
+        let j = t.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("algorithm").as_str().unwrap(), "diana");
+        assert_eq!(parsed.get("rel_err").as_arr().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn empty_trace_is_sane() {
+        let t = Trace::new("x", "y");
+        assert!(t.final_relative_error().is_nan());
+        assert_eq!(t.rounds(), 0);
+        assert_eq!(t.rounds_to_tol(0.1), None);
+    }
+}

@@ -1,0 +1,144 @@
+//! Simulated network model.
+//!
+//! The coordinator moves *real encoded bytes* between threads; this module
+//! prices those bytes. Each worker↔master link has a bandwidth and latency;
+//! a synchronous round costs the slowest worker's uplink plus the broadcast
+//! ("the straggler defines the round"). This is what turns bit-accounting
+//! into the simulated wall-clock series reported alongside the figures, and
+//! what makes heterogeneous-compressor experiments (slow links get more
+//! aggressive compressors — §3.2.1's remark) meaningful.
+
+/// One worker's link to the master.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// uplink bandwidth, bits/second
+    pub up_bps: f64,
+    /// downlink bandwidth, bits/second
+    pub down_bps: f64,
+    /// one-way latency, seconds
+    pub latency: f64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        // 100 Mbit/s symmetric, 1 ms — a commodity datacenter link.
+        Self {
+            up_bps: 100e6,
+            down_bps: 100e6,
+            latency: 1e-3,
+        }
+    }
+}
+
+impl LinkModel {
+    pub fn uplink_time(&self, bits: u64) -> f64 {
+        self.latency + bits as f64 / self.up_bps
+    }
+    pub fn downlink_time(&self, bits: u64) -> f64 {
+        self.latency + bits as f64 / self.down_bps
+    }
+
+    /// A heterogeneous fleet: worker i gets bandwidth scaled by
+    /// `1/(1 + i·spread)` — used by the heterogeneous example.
+    pub fn heterogeneous_fleet(n: usize, base: LinkModel, spread: f64) -> Vec<LinkModel> {
+        (0..n)
+            .map(|i| LinkModel {
+                up_bps: base.up_bps / (1.0 + i as f64 * spread),
+                down_bps: base.down_bps / (1.0 + i as f64 * spread),
+                latency: base.latency * (1.0 + i as f64 * spread),
+            })
+            .collect()
+    }
+}
+
+/// Accumulates the simulated time and traffic of a run.
+#[derive(Clone, Debug, Default)]
+pub struct NetworkAccountant {
+    pub links: Vec<LinkModel>,
+    pub total_up_bits: u64,
+    pub total_down_bits: u64,
+    pub sim_time: f64,
+    pub rounds: usize,
+}
+
+impl NetworkAccountant {
+    pub fn new(links: Vec<LinkModel>) -> Self {
+        Self {
+            links,
+            ..Default::default()
+        }
+    }
+
+    pub fn uniform(n: usize, link: LinkModel) -> Self {
+        Self::new(vec![link; n])
+    }
+
+    /// Price one synchronous round: `up_bits[i]` is worker i's uplink
+    /// payload, `down_bits` the per-worker broadcast size. Returns the
+    /// round's wall-clock contribution.
+    pub fn round(&mut self, up_bits: &[u64], down_bits: u64) -> f64 {
+        assert_eq!(up_bits.len(), self.links.len());
+        let mut slowest: f64 = 0.0;
+        for (bits, link) in up_bits.iter().zip(self.links.iter()) {
+            let t = link.uplink_time(*bits) + link.downlink_time(down_bits);
+            slowest = slowest.max(t);
+            self.total_up_bits += bits;
+        }
+        self.total_down_bits += down_bits * self.links.len() as u64;
+        self.sim_time += slowest;
+        self.rounds += 1;
+        slowest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_times() {
+        let l = LinkModel {
+            up_bps: 1e6,
+            down_bps: 2e6,
+            latency: 0.01,
+        };
+        assert!((l.uplink_time(1_000_000) - 1.01).abs() < 1e-12);
+        assert!((l.downlink_time(1_000_000) - 0.51).abs() < 1e-12);
+    }
+
+    #[test]
+    fn straggler_defines_round() {
+        let fast = LinkModel {
+            up_bps: 1e9,
+            down_bps: 1e9,
+            latency: 0.0,
+        };
+        let slow = LinkModel {
+            up_bps: 1e3,
+            down_bps: 1e9,
+            latency: 0.0,
+        };
+        let mut acc = NetworkAccountant::new(vec![fast, slow]);
+        let t = acc.round(&[1_000, 1_000], 0);
+        assert!((t - 1.0).abs() < 1e-6, "slow link dominates: {t}");
+        assert_eq!(acc.total_up_bits, 2_000);
+    }
+
+    #[test]
+    fn accumulates_over_rounds() {
+        let mut acc = NetworkAccountant::uniform(3, LinkModel::default());
+        acc.round(&[100, 200, 300], 640);
+        acc.round(&[100, 200, 300], 640);
+        assert_eq!(acc.rounds, 2);
+        assert_eq!(acc.total_up_bits, 1200);
+        assert_eq!(acc.total_down_bits, 2 * 640 * 3);
+        assert!(acc.sim_time > 0.0);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_degrades() {
+        let fleet = LinkModel::heterogeneous_fleet(4, LinkModel::default(), 1.0);
+        assert!(fleet[0].up_bps > fleet[3].up_bps * 3.0);
+        assert!(fleet[3].latency > fleet[0].latency * 3.0);
+    }
+}

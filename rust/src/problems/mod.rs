@@ -1,0 +1,139 @@
+//! Optimization problems: `min_x f(x) = (1/n) Σ f_i(x)` (problem (★)).
+//!
+//! Every problem exposes the local gradient oracles `∇f_i`, the smoothness
+//! constants `L_i`, `L`, the strong-convexity constant `μ`, the optimum
+//! `x*` and the optimal local gradients `∇f_i(x*)` — everything the paper's
+//! step-size rules (Theorems 1–6) and the DCGD-STAR shift need.
+
+pub mod agd;
+pub mod logistic;
+pub mod quadratic;
+pub mod ridge;
+
+pub use logistic::Logistic;
+pub use quadratic::Quadratic;
+pub use ridge::Ridge;
+
+/// A distributed, smooth, strongly convex problem.
+pub trait Problem: Send + Sync {
+    /// Parameter dimension d.
+    fn dim(&self) -> usize;
+    /// Number of workers n.
+    fn n_workers(&self) -> usize;
+
+    /// Local gradient `∇f_i(x)` into a preallocated buffer.
+    fn local_grad_into(&self, worker: usize, x: &[f64], out: &mut [f64]);
+
+    /// Local objective `f_i(x)`.
+    fn local_loss(&self, worker: usize, x: &[f64]) -> f64;
+
+    /// Smoothness constant of `f_i`.
+    fn l_i(&self, worker: usize) -> f64;
+
+    /// Smoothness constant of `f` (≤ mean of `L_i`; problems compute the
+    /// exact/global value where available).
+    fn l(&self) -> f64;
+
+    /// Strong convexity constant of `f`.
+    fn mu(&self) -> f64;
+
+    /// The optimum `x*`.
+    fn x_star(&self) -> &[f64];
+
+    /// Optimal local gradient `∇f_i(x*)` (precomputed at construction).
+    fn grad_star(&self, worker: usize) -> &[f64];
+
+    // ------------------------------------------------ provided methods
+
+    fn l_max(&self) -> f64 {
+        (0..self.n_workers())
+            .map(|i| self.l_i(i))
+            .fold(0.0, f64::max)
+    }
+
+    /// Condition number κ = L/μ.
+    fn kappa(&self) -> f64 {
+        self.l() / self.mu()
+    }
+
+    /// Full gradient `∇f(x) = (1/n) Σ ∇f_i(x)` into a buffer.
+    fn grad_into(&self, x: &[f64], out: &mut [f64]) {
+        let n = self.n_workers();
+        let mut tmp = vec![0.0; self.dim()];
+        out.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..n {
+            self.local_grad_into(i, x, &mut tmp);
+            crate::linalg::axpy(1.0 / n as f64, &tmp, out);
+        }
+    }
+
+    fn grad(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.grad_into(x, &mut out);
+        out
+    }
+
+    /// Full objective `f(x)`.
+    fn loss(&self, x: &[f64]) -> f64 {
+        let n = self.n_workers();
+        (0..n).map(|i| self.local_loss(i, x)).sum::<f64>() / n as f64
+    }
+
+    /// Is the problem (numerically) in the interpolation regime
+    /// `∇f_i(x*) = 0 ∀i`?
+    fn is_interpolating(&self, tol: f64) -> bool {
+        (0..self.n_workers()).all(|i| crate::linalg::nrm2(self.grad_star(i)) <= tol)
+    }
+
+    /// Mean squared optimal-gradient norm `(1/n) Σ ‖∇f_i(x*)‖²` — the
+    /// quantity that controls the DCGD convergence neighborhood (Thm 1).
+    fn grad_star_second_moment(&self) -> f64 {
+        let n = self.n_workers();
+        (0..n)
+            .map(|i| crate::linalg::nrm2_sq(self.grad_star(i)))
+            .sum::<f64>()
+            / n as f64
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use super::Problem;
+
+    /// Finite-difference check of local gradients — shared by problem tests.
+    pub fn check_local_grads(p: &dyn Problem, x: &[f64], tol: f64) {
+        let d = p.dim();
+        let eps = 1e-6;
+        for w in 0..p.n_workers() {
+            let mut g = vec![0.0; d];
+            p.local_grad_into(w, x, &mut g);
+            for j in (0..d).step_by((d / 7).max(1)) {
+                let mut xp = x.to_vec();
+                xp[j] += eps;
+                let mut xm = x.to_vec();
+                xm[j] -= eps;
+                let fd = (p.local_loss(w, &xp) - p.local_loss(w, &xm)) / (2.0 * eps);
+                assert!(
+                    (fd - g[j]).abs() <= tol * (1.0 + fd.abs()),
+                    "worker {w} coord {j}: fd {fd} vs analytic {}",
+                    g[j]
+                );
+            }
+        }
+    }
+
+    /// The defining identity of (★): ∇f = mean of ∇f_i, and x* is a
+    /// stationary point.
+    pub fn check_stationarity(p: &dyn Problem, tol: f64) {
+        let g = p.grad(p.x_star());
+        let n = crate::linalg::nrm2(&g);
+        assert!(n <= tol, "‖∇f(x*)‖ = {n} > {tol}");
+        // grad_star consistency
+        for w in 0..p.n_workers() {
+            let mut g = vec![0.0; p.dim()];
+            p.local_grad_into(w, p.x_star(), &mut g);
+            let diff = crate::linalg::dist_sq(&g, p.grad_star(w)).sqrt();
+            assert!(diff <= 1e-9, "worker {w}: grad_star stale by {diff}");
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Synthetic distributed quadratics — the controllable testbed used by unit
+//! and property tests.
+//!
+//! `f_i(x) = 1/2 xᵀ H_i x − b_iᵀ x` with SPD `H_i`. Everything is exact:
+//! `∇f_i = H_i x − b_i`, `L_i = λ_max(H_i)`, `x* = H̄⁻¹ b̄`.
+//!
+//! Two generators matter for the paper's story:
+//! * [`Quadratic::random`] — heterogeneous `b_i` ⇒ `∇f_i(x*) ≠ 0` (the
+//!   general, non-interpolating regime where plain DCGD stalls);
+//! * [`Quadratic::interpolating`] — all workers share the minimizer
+//!   (`b_i = H_i x̄`) ⇒ `∇f_i(x*) = 0` (the regime where DCGD already
+//!   reaches the exact solution).
+
+use crate::linalg::{cholesky_solve, lambda_max, lambda_min_psd, Mat, SpectralOpts};
+use crate::problems::Problem;
+use crate::util::rng::Pcg64;
+
+pub struct Quadratic {
+    d: usize,
+    n: usize,
+    h: Vec<Mat>,
+    b: Vec<Vec<f64>>,
+    l_i: Vec<f64>,
+    l: f64,
+    mu: f64,
+    x_star: Vec<f64>,
+    grad_star: Vec<Vec<f64>>,
+}
+
+impl Quadratic {
+    /// Random SPD quadratics with spectrum in [mu_target, l_target].
+    pub fn random(d: usize, n: usize, mu_target: f64, l_target: f64, seed: u64) -> Self {
+        let mut rng = Pcg64::with_stream(seed, 0x4a4d);
+        let h: Vec<Mat> = (0..n)
+            .map(|_| random_spd(d, mu_target, l_target, &mut rng))
+            .collect();
+        let b: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.normal() * 5.0).collect())
+            .collect();
+        Self::from_parts(h, b)
+    }
+
+    /// All workers share the same minimizer x̄: interpolation regime.
+    pub fn interpolating(d: usize, n: usize, mu_target: f64, l_target: f64, seed: u64) -> Self {
+        let mut rng = Pcg64::with_stream(seed, 0x4a4e);
+        let h: Vec<Mat> = (0..n)
+            .map(|_| random_spd(d, mu_target, l_target, &mut rng))
+            .collect();
+        let shared_min: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let b: Vec<Vec<f64>> = h.iter().map(|hi| hi.matvec(&shared_min)).collect();
+        Self::from_parts(h, b)
+    }
+
+    pub fn from_parts(h: Vec<Mat>, b: Vec<Vec<f64>>) -> Self {
+        let n = h.len();
+        assert!(n > 0 && b.len() == n);
+        let d = h[0].rows;
+        let sopts = SpectralOpts::default();
+        let l_i: Vec<f64> = h.iter().map(|hi| lambda_max(hi, sopts)).collect();
+
+        // Global: H̄ = mean(H_i), b̄ = mean(b_i).
+        let mut h_bar = Mat::zeros(d, d);
+        let mut b_bar = vec![0.0; d];
+        for i in 0..n {
+            for (o, v) in h_bar.data.iter_mut().zip(h[i].data.iter()) {
+                *o += v / n as f64;
+            }
+            crate::linalg::axpy(1.0 / n as f64, &b[i], &mut b_bar);
+        }
+        let l = lambda_max(&h_bar, sopts);
+        let mu = lambda_min_psd(&h_bar, sopts);
+        let x_star = cholesky_solve(&h_bar, &b_bar).expect("mean Hessian must be SPD");
+
+        let grad_star: Vec<Vec<f64>> = (0..n)
+            .map(|i| {
+                let mut g = h[i].matvec(&x_star);
+                for j in 0..d {
+                    g[j] -= b[i][j];
+                }
+                g
+            })
+            .collect();
+
+        Self {
+            d,
+            n,
+            h,
+            b,
+            l_i,
+            l,
+            mu,
+            x_star,
+            grad_star,
+        }
+    }
+}
+
+fn random_spd(d: usize, mu: f64, l: f64, rng: &mut Pcg64) -> Mat {
+    // Random orthogonal-ish basis via QR-free construction: Householder
+    // products are overkill; use G = B Bᵀ normalized then rescale spectrum
+    // roughly into [mu, l] by diag embedding: H = Qᵀ D Q with Q from
+    // Gram-Schmidt of a random matrix.
+    let mut b = Mat::zeros(d, d);
+    for v in b.data.iter_mut() {
+        *v = rng.normal();
+    }
+    // Gram–Schmidt to get an orthonormal Q (rows).
+    let mut q = b.clone();
+    for i in 0..d {
+        for j in 0..i {
+            let proj = crate::linalg::dot(q.row(i), q.row(j));
+            let (head, tail) = q.data.split_at_mut(i * d);
+            let qi = &mut tail[..d];
+            let qj = &head[j * d..j * d + d];
+            for t in 0..d {
+                qi[t] -= proj * qj[t];
+            }
+        }
+        let norm = crate::linalg::nrm2(q.row(i));
+        let qi = q.row_mut(i);
+        for t in 0..d {
+            qi[t] /= norm.max(1e-12);
+        }
+    }
+    // spectrum log-uniform in [mu, l]
+    let mut h = Mat::zeros(d, d);
+    for e in 0..d {
+        let lam = if d == 1 {
+            l
+        } else if e == 0 {
+            mu
+        } else if e == d - 1 {
+            l
+        } else {
+            (mu.ln() + rng.f64() * (l.ln() - mu.ln())).exp()
+        };
+        // H += lam * q_e q_eᵀ
+        let qe = q.row(e).to_vec();
+        for i in 0..d {
+            let qei = qe[i] * lam;
+            if qei != 0.0 {
+                let hrow = h.row_mut(i);
+                for j in 0..d {
+                    hrow[j] += qei * qe[j];
+                }
+            }
+        }
+    }
+    h
+}
+
+impl Problem for Quadratic {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn n_workers(&self) -> usize {
+        self.n
+    }
+    fn local_grad_into(&self, worker: usize, x: &[f64], out: &mut [f64]) {
+        self.h[worker].matvec_into(x, out);
+        for j in 0..self.d {
+            out[j] -= self.b[worker][j];
+        }
+    }
+    fn local_loss(&self, worker: usize, x: &[f64]) -> f64 {
+        let hx = self.h[worker].matvec(x);
+        0.5 * crate::linalg::dot(x, &hx) - crate::linalg::dot(&self.b[worker], x)
+    }
+    fn l_i(&self, worker: usize) -> f64 {
+        self.l_i[worker]
+    }
+    fn l(&self) -> f64 {
+        self.l
+    }
+    fn mu(&self) -> f64 {
+        self.mu
+    }
+    fn x_star(&self) -> &[f64] {
+        &self.x_star
+    }
+    fn grad_star(&self, worker: usize) -> &[f64] {
+        &self.grad_star[worker]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::test_util::{check_local_grads, check_stationarity};
+
+    #[test]
+    fn random_quadratic_is_consistent() {
+        let p = Quadratic::random(12, 4, 0.5, 20.0, 1);
+        check_stationarity(&p, 1e-8);
+        let mut rng = Pcg64::new(2);
+        let x: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        check_local_grads(&p, &x, 2e-4);
+        assert!(!p.is_interpolating(1e-6));
+    }
+
+    #[test]
+    fn interpolating_quadratic_has_zero_local_grads() {
+        let p = Quadratic::interpolating(10, 5, 1.0, 10.0, 7);
+        check_stationarity(&p, 1e-7);
+        assert!(p.is_interpolating(1e-7), "‖∇f_i(x*)‖ should all vanish");
+        assert!(p.grad_star_second_moment() < 1e-14);
+    }
+
+    #[test]
+    fn spectrum_within_targets() {
+        let p = Quadratic::random(15, 3, 0.5, 20.0, 3);
+        assert!(p.mu() >= 0.4, "mu {}", p.mu());
+        assert!(p.l() <= 21.0, "l {}", p.l());
+        for i in 0..3 {
+            assert!(p.l_i(i) <= 20.5 && p.l_i(i) >= 0.4);
+        }
+    }
+
+    #[test]
+    fn kappa_matches_ratio() {
+        let p = Quadratic::random(8, 2, 1.0, 50.0, 5);
+        assert!((p.kappa() - p.l() / p.mu()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,273 @@
+//! Distributed ridge regression — the paper's Section 4 testbed.
+//!
+//! Global objective (paper formulation):
+//! ```text
+//! f(x) = 1/2 ‖A x − y‖² + λ/2 ‖x‖²,   λ = 1/m,
+//! ```
+//! with `A ∈ R^{m×d}, y ∈ R^m` from `make_regression` (m=100, d=80), rows
+//! distributed uniformly/evenly/randomly over n=10 workers. Writing `S_i`
+//! for worker i's rows, the local objective that makes `(1/n) Σ f_i = f` is
+//! ```text
+//! f_i(x) = n/2 Σ_{l ∈ S_i} (a_lᵀx − y_l)² + λ/2 ‖x‖².
+//! ```
+//! Hessians are constant: `∇²f_i = n·A_iᵀA_i + λI`, `∇²f = AᵀA + λI`, so
+//! `L_i`, `L`, `μ` are exact eigenvalue computations, and `x*` solves the
+//! normal equations `(AᵀA + λI) x = Aᵀy` (Cholesky).
+
+use crate::data::{make_regression, partition_evenly, RegressionOpts};
+use crate::linalg::{cholesky_solve, lambda_max, lambda_min_psd, Mat, SpectralOpts};
+use crate::problems::Problem;
+use crate::util::rng::Pcg64;
+
+pub struct Ridge {
+    d: usize,
+    n: usize,
+    lambda: f64,
+    /// per-worker design matrix (m_i × d) and targets
+    a_local: Vec<Mat>,
+    y_local: Vec<Vec<f64>>,
+    l_i: Vec<f64>,
+    l: f64,
+    mu: f64,
+    x_star: Vec<f64>,
+    grad_star: Vec<Vec<f64>>,
+}
+
+impl Ridge {
+    /// The paper's exact setup: `make_regression` defaults, m=100, d=80,
+    /// λ = 1/m, 10 workers.
+    pub fn paper_default(seed: u64) -> Self {
+        let opts = RegressionOpts {
+            n_samples: 100,
+            n_features: 80,
+            seed,
+            ..Default::default()
+        };
+        Self::new(&opts, 10, 1.0 / opts.n_samples as f64, seed)
+    }
+
+    pub fn new(opts: &RegressionOpts, n_workers: usize, lambda: f64, seed: u64) -> Self {
+        let ds = make_regression(opts);
+        Self::from_data(ds.a, ds.y, n_workers, lambda, seed)
+    }
+
+    /// Build from explicit data (used by tests and custom drivers).
+    pub fn from_data(a: Mat, y: Vec<f64>, n_workers: usize, lambda: f64, seed: u64) -> Self {
+        let m = a.rows;
+        let d = a.cols;
+        assert_eq!(y.len(), m);
+        let mut part_rng = Pcg64::with_stream(seed, 0x9a47);
+        let parts = partition_evenly(m, n_workers, &mut part_rng);
+
+        let mut a_local = Vec::with_capacity(n_workers);
+        let mut y_local = Vec::with_capacity(n_workers);
+        for rows in &parts {
+            let mut ai = Mat::zeros(rows.len(), d);
+            let mut yi = Vec::with_capacity(rows.len());
+            for (r, &idx) in rows.iter().enumerate() {
+                ai.row_mut(r).copy_from_slice(a.row(idx));
+                yi.push(y[idx]);
+            }
+            a_local.push(ai);
+            y_local.push(yi);
+        }
+
+        // Exact optimum via the normal equations.
+        let mut h = a.gram(); // AᵀA
+        h.add_diag(lambda);
+        let aty = a.t_matvec(&y);
+        let x_star = cholesky_solve(&h, &aty).expect("ridge Hessian must be SPD");
+
+        // Constants.
+        let sopts = SpectralOpts::default();
+        let l = lambda_max(&h, sopts);
+        let mu = lambda_min_psd(&h, sopts).max(lambda);
+        let n_f = n_workers as f64;
+        let l_i: Vec<f64> = a_local
+            .iter()
+            .map(|ai| {
+                let mut hi = ai.gram();
+                hi.scale(n_f);
+                hi.add_diag(lambda);
+                lambda_max(&hi, sopts)
+            })
+            .collect();
+
+        let mut me = Self {
+            d,
+            n: n_workers,
+            lambda,
+            a_local,
+            y_local,
+            l_i,
+            l,
+            mu,
+            x_star,
+            grad_star: Vec::new(),
+        };
+        let mut gs = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let mut g = vec![0.0; d];
+            me.local_grad_raw(w, &me.x_star.clone(), &mut g);
+            gs.push(g);
+        }
+        me.grad_star = gs;
+        me
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn local_grad_raw(&self, worker: usize, x: &[f64], out: &mut [f64]) {
+        // ∇f_i(x) = n·A_iᵀ(A_i x − y_i) + λ x
+        let ai = &self.a_local[worker];
+        let yi = &self.y_local[worker];
+        let mut resid = ai.matvec(x);
+        for (r, t) in resid.iter_mut().zip(yi.iter()) {
+            *r -= t;
+        }
+        ai.t_matvec_into(&resid, out);
+        let n = self.n as f64;
+        for j in 0..self.d {
+            out[j] = n * out[j] + self.lambda * x[j];
+        }
+    }
+}
+
+impl Problem for Ridge {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn n_workers(&self) -> usize {
+        self.n
+    }
+    fn local_grad_into(&self, worker: usize, x: &[f64], out: &mut [f64]) {
+        self.local_grad_raw(worker, x, out);
+    }
+    fn local_loss(&self, worker: usize, x: &[f64]) -> f64 {
+        let ai = &self.a_local[worker];
+        let yi = &self.y_local[worker];
+        let resid = ai.matvec(x);
+        let ss: f64 = resid
+            .iter()
+            .zip(yi.iter())
+            .map(|(r, t)| (r - t) * (r - t))
+            .sum();
+        0.5 * self.n as f64 * ss + 0.5 * self.lambda * crate::linalg::nrm2_sq(x)
+    }
+    fn l_i(&self, worker: usize) -> f64 {
+        self.l_i[worker]
+    }
+    fn l(&self) -> f64 {
+        self.l
+    }
+    fn mu(&self) -> f64 {
+        self.mu
+    }
+    fn x_star(&self) -> &[f64] {
+        &self.x_star
+    }
+    fn grad_star(&self, worker: usize) -> &[f64] {
+        &self.grad_star[worker]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::test_util::{check_local_grads, check_stationarity};
+
+    fn problem() -> Ridge {
+        Ridge::paper_default(42)
+    }
+
+    #[test]
+    fn dimensions() {
+        let p = problem();
+        assert_eq!(p.dim(), 80);
+        assert_eq!(p.n_workers(), 10);
+        assert!((p.lambda() - 0.01).abs() < 1e-15);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let p = problem();
+        let mut rng = Pcg64::new(7);
+        let x: Vec<f64> = (0..80).map(|_| rng.normal()).collect();
+        check_local_grads(&p, &x, 2e-4);
+    }
+
+    #[test]
+    fn x_star_is_stationary() {
+        let p = problem();
+        check_stationarity(&p, 1e-8);
+    }
+
+    #[test]
+    fn not_interpolating() {
+        // Regularized regression with noiseless targets but λ > 0:
+        // individual ∇f_i(x*) ≠ 0 — the regime the paper targets.
+        let p = problem();
+        assert!(!p.is_interpolating(1e-6));
+        assert!(p.grad_star_second_moment() > 0.0);
+    }
+
+    #[test]
+    fn constants_are_consistent() {
+        let p = problem();
+        assert!(p.mu() > 0.0);
+        assert!(p.l() >= p.mu());
+        // mean of local Hessians = global Hessian ⇒ L ≤ mean L_i ≤ L_max
+        let mean_li: f64 =
+            (0..p.n_workers()).map(|i| p.l_i(i)).sum::<f64>() / p.n_workers() as f64;
+        assert!(p.l() <= mean_li * (1.0 + 1e-9), "{} vs {}", p.l(), mean_li);
+        assert!(p.l_max() >= mean_li * (1.0 - 1e-9));
+    }
+
+    #[test]
+    fn mean_of_local_losses_matches_global_formula() {
+        let p = problem();
+        let mut rng = Pcg64::new(9);
+        let x: Vec<f64> = (0..80).map(|_| rng.normal()).collect();
+        // rebuild global A,y from the same generator stream
+        let ds = make_regression(&RegressionOpts {
+            n_samples: 100,
+            n_features: 80,
+            seed: 42,
+            ..Default::default()
+        });
+        let resid = ds.a.matvec(&x);
+        let ss: f64 = resid
+            .iter()
+            .zip(ds.y.iter())
+            .map(|(r, t)| (r - t) * (r - t))
+            .sum();
+        let expected = 0.5 * ss + 0.5 * 0.01 * crate::linalg::nrm2_sq(&x);
+        let got = p.loss(&x);
+        assert!(
+            (got - expected).abs() < 1e-8 * expected.abs().max(1.0),
+            "{got} vs {expected}"
+        );
+    }
+
+    #[test]
+    fn smoothness_bound_holds_along_random_directions() {
+        // ‖∇f_i(x) − ∇f_i(y)‖ ≤ L_i ‖x − y‖
+        let p = problem();
+        let mut rng = Pcg64::new(11);
+        for w in [0usize, 5, 9] {
+            for _ in 0..5 {
+                let x: Vec<f64> = (0..80).map(|_| rng.normal()).collect();
+                let y: Vec<f64> = (0..80).map(|_| rng.normal()).collect();
+                let mut gx = vec![0.0; 80];
+                let mut gy = vec![0.0; 80];
+                p.local_grad_into(w, &x, &mut gx);
+                p.local_grad_into(w, &y, &mut gy);
+                let lhs = crate::linalg::dist_sq(&gx, &gy).sqrt();
+                let rhs = p.l_i(w) * crate::linalg::dist_sq(&x, &y).sqrt();
+                assert!(lhs <= rhs * (1.0 + 1e-6), "worker {w}: {lhs} > {rhs}");
+            }
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! The PJRT engine: manifest parsing, lazy compilation cache, literal
+//! conversion helpers.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One AOT entry as described by `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct EntryInfo {
+    pub name: String,
+    pub file: String,
+    /// `(shape, dtype)` per input, dtype as the manifest string ("float64")
+    pub inputs: Vec<(Vec<usize>, String)>,
+    pub outputs: Vec<(Vec<usize>, String)>,
+    /// entry-specific extras (param_count, config, …)
+    pub extra: Json,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: HashMap<String, EntryInfo>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let mut entries = HashMap::new();
+        let obj = j
+            .get("entries")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest.json: missing entries object"))?;
+        for (name, e) in obj {
+            let parse_specs = |key: &str| -> Result<Vec<(Vec<usize>, String)>> {
+                e.get(key)
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("entry {name}: missing {key}"))?
+                    .iter()
+                    .map(|s| {
+                        let shape = s
+                            .get("shape")
+                            .as_arr()
+                            .ok_or_else(|| anyhow!("entry {name}: bad shape"))?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                            .collect::<Result<Vec<_>>>()?;
+                        let dtype = s
+                            .get("dtype")
+                            .as_str()
+                            .ok_or_else(|| anyhow!("entry {name}: bad dtype"))?
+                            .to_string();
+                        Ok((shape, dtype))
+                    })
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntryInfo {
+                    name: name.clone(),
+                    file: e
+                        .get("file")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("entry {name}: missing file"))?
+                        .to_string(),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                    extra: e.clone(),
+                },
+            );
+        }
+        Ok(Self { entries, dir })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryInfo> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no entry '{name}'"))
+    }
+}
+
+/// PJRT client + compiled-executable cache.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch from cache) an entry's executable.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.entry(name)?;
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an entry. The module was lowered with `return_tuple=True`,
+    /// so the single output literal is a tuple; we decompose it.
+    pub fn run(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("{name}: no output buffer"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: readback: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("{name}: tuple: {e:?}"))
+    }
+}
+
+// -------------------------------------------------------- literal helpers
+
+pub fn lit_f64(v: &[f64], dims: &[i64]) -> Result<xla::Literal> {
+    let flat = xla::Literal::vec1(v);
+    if dims.len() == 1 {
+        return Ok(flat);
+    }
+    flat.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn lit_f32(v: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let flat = xla::Literal::vec1(v);
+    if dims.len() == 1 {
+        return Ok(flat);
+    }
+    flat.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn lit_i32(v: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let flat = xla::Literal::vec1(v);
+    if dims.len() == 1 {
+        return Ok(flat);
+    }
+    flat.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn lit_scalar_f64(v: f64) -> xla::Literal {
+    xla::Literal::vec1(&[v])
+}
+
+pub fn to_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
+    lit.to_vec::<f64>().map_err(|e| anyhow!("to_vec f64: {e:?}"))
+}
+
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses_when_present() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        let e = m.entry("ridge_grad").unwrap();
+        assert_eq!(e.inputs.len(), 5);
+        assert_eq!(e.inputs[0].0, vec![80]);
+        assert_eq!(e.inputs[0].1, "float64");
+        assert_eq!(e.outputs.len(), 1);
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn bad_manifest_is_rejected() {
+        let dir = std::env::temp_dir().join("shiftcomp_bad_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{\"entries\": 5}").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::write(dir.join("manifest.json"), "not json").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

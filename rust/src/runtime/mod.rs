@@ -1,0 +1,12 @@
+//! PJRT runtime — loads the AOT artifacts produced by `make artifacts`
+//! (`python/compile/aot.py`) and executes them from the Rust hot path.
+//!
+//! Interchange is HLO **text** + `manifest.json`:
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Python never runs after build time.
+
+pub mod engine;
+pub mod oracles;
+
+pub use engine::{Engine, EntryInfo, Manifest};
+pub use oracles::{HloRidgeOracle, LmSession};

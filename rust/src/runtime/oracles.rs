@@ -1,0 +1,184 @@
+//! Typed wrappers over AOT entries: gradient oracles and the LM training
+//! session used by `examples/train_lm.rs`.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::runtime::engine::{lit_f32, lit_f64, lit_i32, to_f32, to_f64, Engine};
+
+/// The HLO-backed ridge gradient: the same math as
+/// `problems::Ridge::local_grad_into`, but executed by PJRT from the
+/// Layer-2 lowering (which itself calls the Layer-1 Pallas matmul). The
+/// integration tests drive both and assert agreement — the whole-stack
+/// correctness check.
+pub struct HloRidgeOracle<'e> {
+    engine: &'e Engine,
+    pub m_i: usize,
+    pub d: usize,
+}
+
+impl<'e> HloRidgeOracle<'e> {
+    pub fn new(engine: &'e Engine) -> Result<Self> {
+        let e = engine.manifest.entry("ridge_grad")?;
+        let m_i = e.extra.get("m_i").as_usize().ok_or_else(|| anyhow!("m_i"))?;
+        let d = e.extra.get("d").as_usize().ok_or_else(|| anyhow!("d"))?;
+        Ok(Self { engine, m_i, d })
+    }
+
+    /// `∇f_i(x) = n·A_iᵀ(A_i x − y_i) + λx` via PJRT.
+    pub fn grad(&self, x: &[f64], a: &[f64], y: &[f64], lam: f64, n: f64) -> Result<Vec<f64>> {
+        ensure!(x.len() == self.d, "x dim");
+        ensure!(a.len() == self.m_i * self.d, "A dims");
+        ensure!(y.len() == self.m_i, "y dim");
+        let args = vec![
+            lit_f64(x, &[self.d as i64])?,
+            lit_f64(a, &[self.m_i as i64, self.d as i64])?,
+            lit_f64(y, &[self.m_i as i64])?,
+            lit_f64(&[lam], &[1])?,
+            lit_f64(&[n], &[1])?,
+        ];
+        let out = self.engine.run("ridge_grad", &args)?;
+        to_f64(&out[0])
+    }
+}
+
+/// A compiled LM training step: `(params, tokens) → (loss, flat grads)`.
+pub struct LmSession<'e> {
+    engine: &'e Engine,
+    entry: &'static str,
+    pub param_count: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl<'e> LmSession<'e> {
+    /// Prefers the CPU-optimized `lm_step_fast` artifact (XLA-native gemm)
+    /// when present; `lm_step` is the Pallas-kernel TPU artifact (see
+    /// EXPERIMENTS.md section Perf for the measured difference).
+    pub fn new(engine: &'e Engine) -> Result<Self> {
+        let entry: &'static str = if engine.manifest.entry("lm_step_fast").is_ok() {
+            "lm_step_fast"
+        } else {
+            "lm_step"
+        };
+        Self::with_entry(engine, entry)
+    }
+
+    /// Force a specific LM artifact (used by the perf bench to compare the
+    /// Pallas-interpret and XLA-gemm paths).
+    pub fn with_entry(engine: &'e Engine, entry: &'static str) -> Result<Self> {
+        let e = engine.manifest.entry(entry)?;
+        let param_count = e
+            .extra
+            .get("param_count")
+            .as_usize()
+            .ok_or_else(|| anyhow!("param_count"))?;
+        let batch = e.extra.get("batch").as_usize().ok_or_else(|| anyhow!("batch"))?;
+        let cfg = e.extra.get("config");
+        let seq = cfg.get("seq").as_usize().ok_or_else(|| anyhow!("seq"))?;
+        let vocab = cfg.get("vocab").as_usize().ok_or_else(|| anyhow!("vocab"))?;
+        Ok(Self {
+            engine,
+            entry,
+            param_count,
+            batch,
+            seq,
+            vocab,
+        })
+    }
+
+    /// Load the Python-initialized parameter vector (`lm_init.bin`).
+    pub fn initial_params(&self) -> Result<Vec<f32>> {
+        let e = self.engine.manifest.entry(self.entry)?;
+        let init = e
+            .extra
+            .get("init_file")
+            .as_str()
+            .ok_or_else(|| anyhow!("lm_step has no init_file"))?;
+        let bytes = std::fs::read(self.engine.manifest.dir.join(init))?;
+        ensure!(
+            bytes.len() == self.param_count * 4,
+            "lm_init.bin size {} != 4·{}",
+            bytes.len(),
+            self.param_count
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// One forward+backward: tokens is `[batch, seq+1]` row-major i32.
+    pub fn step(&self, params: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        ensure!(params.len() == self.param_count, "params len");
+        ensure!(tokens.len() == self.batch * (self.seq + 1), "tokens len");
+        for &t in tokens {
+            ensure!((t as usize) < self.vocab, "token {t} out of vocab");
+        }
+        let args = vec![
+            lit_f32(params, &[self.param_count as i64])?,
+            lit_i32(tokens, &[self.batch as i64, (self.seq + 1) as i64])?,
+        ];
+        let out = self.engine.run(self.entry, &args)?;
+        ensure!(out.len() == 2, "lm_step returns (loss, grads)");
+        let loss = to_f32(&out[0])?;
+        let grads = to_f32(&out[1])?;
+        ensure!(grads.len() == self.param_count, "grads len");
+        Ok((loss[0], grads))
+    }
+}
+
+/// HLO-backed fused shifted-compress: `h + mask ⊙ (g − h) · scale`
+/// (the Layer-1 kernel exercised end-to-end through PJRT).
+pub struct HloShiftedCompress<'e> {
+    engine: &'e Engine,
+    pub d: usize,
+}
+
+impl<'e> HloShiftedCompress<'e> {
+    pub fn new(engine: &'e Engine) -> Result<Self> {
+        let e = engine.manifest.entry("shifted_compress")?;
+        let d = e.extra.get("d").as_usize().ok_or_else(|| anyhow!("d"))?;
+        Ok(Self { engine, d })
+    }
+
+    pub fn apply(&self, g: &[f64], h: &[f64], mask: &[f64], scale: f64) -> Result<Vec<f64>> {
+        ensure!(g.len() == self.d && h.len() == self.d && mask.len() == self.d);
+        let args = vec![
+            lit_f64(g, &[self.d as i64])?,
+            lit_f64(h, &[self.d as i64])?,
+            lit_f64(mask, &[self.d as i64])?,
+            lit_f64(&[scale], &[1])?,
+        ];
+        let out = self.engine.run("shifted_compress", &args)?;
+        to_f64(&out[0])
+    }
+}
+
+/// HLO-backed natural-dithering quantizer (s = 8 levels baked at AOT time).
+pub struct HloNatDither<'e> {
+    engine: &'e Engine,
+    pub d: usize,
+    pub s: usize,
+}
+
+impl<'e> HloNatDither<'e> {
+    pub fn new(engine: &'e Engine) -> Result<Self> {
+        let e = engine.manifest.entry("nat_dither_quantize")?;
+        let d = e.extra.get("d").as_usize().ok_or_else(|| anyhow!("d"))?;
+        let s = e.extra.get("s").as_usize().ok_or_else(|| anyhow!("s"))?;
+        Ok(Self { engine, d, s })
+    }
+
+    /// `x` quantized to `norm·{0, 2^{1−s}, …, 1}` with external uniforms `u`.
+    pub fn quantize(&self, x: &[f64], u: &[f64], norm: f64) -> Result<Vec<f64>> {
+        ensure!(x.len() == self.d && u.len() == self.d);
+        let args = vec![
+            lit_f64(x, &[self.d as i64])?,
+            lit_f64(u, &[self.d as i64])?,
+            lit_f64(&[norm], &[1])?,
+        ];
+        let out = self.engine.run("nat_dither_quantize", &args)?;
+        to_f64(&out[0])
+    }
+}

@@ -1,0 +1,422 @@
+//! Step-size rules and iteration-complexity formulas from the paper's
+//! Theorems 1–6 and Table 1.
+//!
+//! The analyses all instantiate the unified framework of Gorbunov, Hanzely &
+//! Richtárik (2020a, Theorem 4.1): an unbiased estimator `g^k` with
+//!
+//! ```text
+//! E‖g^k − ∇f(x*)‖² ≤ 2 A · D_f(x^k, x*) + B · σ^k                (ES)
+//! E σ^{k+1}        ≤ (1 − ρ) σ^k + 2 C · D_f(x^k, x*)           (REC)
+//! ```
+//!
+//! yields, with Lyapunov `V^k = ‖x^k − x*‖² + M γ² σ^k`, step size
+//! `γ ≤ 1/(A + M C)` and any `M > B/ρ`,
+//!
+//! ```text
+//! E V^k ≤ max{ (1 − γμ)^k , (1 − ρ + B/M)^k } · V⁰.
+//! ```
+//!
+//! Each method below supplies its (A, B, C, ρ) and a default `M`.
+
+use crate::problems::Problem;
+
+/// Everything an algorithm instance needs from the theory.
+#[derive(Clone, Copy, Debug)]
+pub struct StepSizes {
+    /// main step size γ
+    pub gamma: f64,
+    /// shift-learning step size α (DIANA-like; 0 when unused)
+    pub alpha: f64,
+    /// model-mixing step size η (GDCI family; 0 when unused)
+    pub eta: f64,
+    /// Lyapunov constant M (0 when unused)
+    pub m: f64,
+    /// linear rate bound per round: error contracts by ≤ this factor
+    pub rate: f64,
+}
+
+impl StepSizes {
+    /// `O~` iteration complexity to reach ε: log(1/ε) / −log(rate).
+    pub fn iters_for(&self, eps: f64) -> f64 {
+        assert!(eps > 0.0 && eps < 1.0);
+        (1.0 / eps).ln() / -(self.rate.min(1.0 - 1e-15)).ln()
+    }
+}
+
+// ---------------------------------------------------------------- Theorem 1
+
+/// DCGD with fixed shifts: `γ ≤ 1/(L + 2 max_i(L_i ω_i)/n)`.
+/// Converges linearly to a neighborhood of radius
+/// `(2γ/μ)·(1/n)Σ (ω_i/n)‖∇f_i(x*) − h_i‖²`.
+pub fn dcgd_fixed(p: &dyn Problem, omega: &[f64]) -> StepSizes {
+    let n = p.n_workers() as f64;
+    let max_lw = (0..p.n_workers())
+        .map(|i| p.l_i(i) * omega[i])
+        .fold(0.0, f64::max);
+    let gamma = 1.0 / (p.l() + 2.0 * max_lw / n);
+    StepSizes {
+        gamma,
+        alpha: 0.0,
+        eta: 0.0,
+        m: 0.0,
+        rate: 1.0 - gamma * p.mu(),
+    }
+}
+
+/// The oscillation-neighborhood radius of Theorem 1 (relative to
+/// ‖x⁰ − x*‖² when `rel_to` is provided):
+/// `(2γ/μ)·(1/n²)·Σ ω_i ‖∇f_i(x*) − h_i‖²`.
+pub fn dcgd_fixed_neighborhood(
+    p: &dyn Problem,
+    omega: &[f64],
+    shifts: &[Vec<f64>],
+    gamma: f64,
+) -> f64 {
+    let n = p.n_workers();
+    let mut acc = 0.0;
+    for i in 0..n {
+        acc += omega[i] * crate::linalg::dist_sq(p.grad_star(i), &shifts[i]);
+    }
+    2.0 * gamma / p.mu() * acc / (n * n) as f64
+}
+
+// ---------------------------------------------------------------- Theorem 2
+
+/// DCGD-STAR: `γ ≤ 1/(L + max_i(L_i ω_i (1 − δ_i))/n)`; exact linear
+/// convergence.
+pub fn dcgd_star(p: &dyn Problem, omega: &[f64], delta: &[f64]) -> StepSizes {
+    let n = p.n_workers() as f64;
+    let max_term = (0..p.n_workers())
+        .map(|i| p.l_i(i) * omega[i] * (1.0 - delta[i]))
+        .fold(0.0, f64::max);
+    let gamma = 1.0 / (p.l() + max_term / n);
+    StepSizes {
+        gamma,
+        alpha: 0.0,
+        eta: 0.0,
+        m: 0.0,
+        rate: 1.0 - gamma * p.mu(),
+    }
+}
+
+// ---------------------------------------------------------------- Theorem 3
+
+/// Generalized DIANA (Theorem 3 via the unified framework):
+///
+/// effective variance ω̃_i = ω_i(1 − δ_i) (induced compressor),
+/// `α ≤ 1/(1 + max_i ω̃_i)`,
+/// (A, B, C, ρ) = (2 max(ω̃_i L_i)/n + L_max, 2/n, α max(ω̃_i L_i), α),
+/// `M = margin·B/ρ`, `γ ≤ 1/(A + MC)`.
+pub fn diana(p: &dyn Problem, omega: &[f64], delta: &[f64], m_margin: f64) -> StepSizes {
+    let n = p.n_workers() as f64;
+    let wt: Vec<f64> = omega
+        .iter()
+        .zip(delta.iter())
+        .map(|(&w, &d)| w * (1.0 - d))
+        .collect();
+    let max_wt = wt.iter().fold(0.0f64, |a, &b| a.max(b));
+    let alpha = 1.0 / (1.0 + max_wt);
+    let max_wl = (0..p.n_workers())
+        .map(|i| wt[i] * p.l_i(i))
+        .fold(0.0, f64::max);
+    let a = 2.0 * max_wl / n + p.l_max();
+    let b = 2.0 / n;
+    let c = alpha * max_wl;
+    let rho = alpha;
+    let m = m_margin * b / rho; // M > B/ρ
+    let gamma = 1.0 / (a + m * c);
+    let rate_x = 1.0 - gamma * p.mu();
+    let rate_sigma = 1.0 - rho + b / m;
+    StepSizes {
+        gamma,
+        alpha,
+        eta: 0.0,
+        m,
+        rate: rate_x.max(rate_sigma),
+    }
+}
+
+// ---------------------------------------------------------------- Theorem 4
+
+/// Rand-DIANA (Theorem 4):
+/// `γ ≤ 1/((1 + 2ω/n) L_max + M max_i(p_i L_i))`, `M > 2ω/(n p_m)`,
+/// rate `max{1 − γμ, 1 − p_m + 2ω/(nM)}`.
+///
+/// `m_override`: pass a specific M (the Figure-2 stability study sets
+/// `M = b·M'`), else the paper's `M = 4ω/(n p_m)` is used.
+pub fn rand_diana(
+    p: &dyn Problem,
+    omega_max: f64,
+    probs: &[f64],
+    m_override: Option<f64>,
+) -> StepSizes {
+    let n = p.n_workers() as f64;
+    let p_m = probs.iter().fold(f64::INFINITY, |a, &b| a.min(b));
+    let max_pl = (0..p.n_workers())
+        .map(|i| probs[i] * p.l_i(i))
+        .fold(0.0, f64::max);
+    let m_prime = 2.0 * omega_max / (n * p_m);
+    let m = m_override.unwrap_or(2.0 * m_prime); // paper: M = 4ω/(np_m)
+    let gamma = 1.0 / ((1.0 + 2.0 * omega_max / n) * p.l_max() + m * max_pl);
+    let rate_x = 1.0 - gamma * p.mu();
+    let rate_sigma = 1.0 - p_m + 2.0 * omega_max / (n * m);
+    StepSizes {
+        gamma,
+        alpha: 0.0,
+        eta: 0.0,
+        m,
+        rate: rate_x.max(rate_sigma),
+    }
+}
+
+/// The paper's recommended refresh probability `p = 1/(ω+1)`.
+pub fn rand_diana_default_p(omega: f64) -> f64 {
+    1.0 / (omega + 1.0)
+}
+
+// ---------------------------------------------------------------- Theorem 5
+
+/// GDCI (Theorem 5):
+/// `η ≤ [L/μ + (2ω/n)(L_max/μ − 1)]⁻¹`,
+/// `γ ≤ (1 + 2ηω/n) / (η (L + 2 L_max ω/n))`.
+/// Converges linearly (rate 1−η) to a neighborhood
+/// `η (2ω/n) (1/n) Σ ‖x* − γ∇f_i(x*)‖²`.
+pub fn gdci(p: &dyn Problem, omega: f64) -> StepSizes {
+    let n = p.n_workers() as f64;
+    let (l, mu, lmax) = (p.l(), p.mu(), p.l_max());
+    let eta = 1.0 / (l / mu + (2.0 * omega / n) * (lmax / mu - 1.0));
+    let gamma = (1.0 + 2.0 * eta * omega / n) / (eta * (l + 2.0 * lmax * omega / n));
+    StepSizes {
+        gamma,
+        alpha: 0.0,
+        eta,
+        m: 0.0,
+        rate: 1.0 - eta,
+    }
+}
+
+/// The GDCI neighborhood radius: `η·(2ω/n)·(1/n)Σ‖x* − γ∇f_i(x*)‖²`.
+pub fn gdci_neighborhood(p: &dyn Problem, omega: f64, gamma: f64, eta: f64) -> f64 {
+    let n = p.n_workers();
+    let d = p.dim();
+    let mut acc = 0.0;
+    let x_star = p.x_star();
+    for i in 0..n {
+        let gs = p.grad_star(i);
+        let mut t = 0.0;
+        for j in 0..d {
+            let v = x_star[j] - gamma * gs[j];
+            t += v * v;
+        }
+        acc += t;
+    }
+    eta * (2.0 * omega / n as f64) * acc / n as f64
+}
+
+// ---------------------------------------------------------------- Theorem 6
+
+/// VR-GDCI (Theorem 6): `α ≤ 1/(ω+1)`,
+/// `η = [L/μ + (6ω/n)(L_max/μ − 1)]⁻¹`,
+/// `γ ≤ (1 + 6ωη/n)/(η(L + 6 L_max ω/n))`,
+/// rate `1 − min{α/2, η}` — exact convergence.
+pub fn vr_gdci(p: &dyn Problem, omega: f64) -> StepSizes {
+    let n = p.n_workers() as f64;
+    let (l, mu, lmax) = (p.l(), p.mu(), p.l_max());
+    let alpha = 1.0 / (omega + 1.0);
+    let eta = 1.0 / (l / mu + (6.0 * omega / n) * (lmax / mu - 1.0));
+    let gamma = (1.0 + 6.0 * omega * eta / n) / (eta * (l + 6.0 * lmax * omega / n));
+    StepSizes {
+        gamma,
+        alpha,
+        eta,
+        m: 4.0 * eta * eta * omega / (alpha * n),
+        rate: 1.0 - (alpha / 2.0).min(eta),
+    }
+}
+
+// ------------------------------------------------------------------ Table 1
+
+/// Iteration complexities (Õ, dropping log 1/ε) from Table 1, in the
+/// simplified regime ω_i ≡ ω, δ_i ≡ δ, L_i ≡ L, p_i ≡ p.
+#[derive(Clone, Copy, Debug)]
+pub struct Complexity {
+    pub ours: f64,
+    /// best previously known (NaN when the method is new in this paper)
+    pub previous: f64,
+}
+
+pub fn table1_complexities(
+    kappa: f64,
+    omega: f64,
+    delta: f64,
+    p_refresh: f64,
+    n: usize,
+) -> Vec<(&'static str, Complexity)> {
+    let n = n as f64;
+    vec![
+        (
+            "DCGD-FIXED",
+            Complexity {
+                ours: kappa * (1.0 + omega / n),
+                previous: f64::NAN,
+            },
+        ),
+        (
+            "DCGD-STAR",
+            Complexity {
+                ours: kappa * (1.0 + omega / n * (1.0 - delta)),
+                previous: f64::NAN,
+            },
+        ),
+        (
+            "DIANA",
+            Complexity {
+                ours: (kappa * (1.0 + omega / n * (1.0 - delta))).max(omega * (1.0 - delta)),
+                previous: (kappa * (1.0 + omega / n)).max(omega),
+            },
+        ),
+        (
+            "RAND-DIANA",
+            Complexity {
+                ours: (kappa * (1.0 + omega / n * (1.0 - delta))).max(1.0 / p_refresh),
+                previous: f64::NAN,
+            },
+        ),
+        (
+            "GDCI",
+            Complexity {
+                ours: kappa * (1.0 + omega / n),
+                previous: kappa * kappa * (1.0 + omega / n),
+            },
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::{Quadratic, Ridge};
+
+    fn prob() -> Quadratic {
+        Quadratic::random(10, 4, 1.0, 20.0, 1)
+    }
+
+    #[test]
+    fn theorem1_gamma_formula() {
+        let p = prob();
+        let omega = vec![4.0; 4];
+        let ss = dcgd_fixed(&p, &omega);
+        let max_lw = (0..4).map(|i| p.l_i(i) * 4.0).fold(0.0, f64::max);
+        let expect = 1.0 / (p.l() + 2.0 * max_lw / 4.0);
+        assert!((ss.gamma - expect).abs() < 1e-15);
+        assert!(ss.rate < 1.0 && ss.rate > 0.0);
+    }
+
+    #[test]
+    fn star_beats_fixed_gamma() {
+        // (1−δ) < 1 plus the missing factor 2 ⇒ STAR's γ is larger.
+        let p = prob();
+        let omega = vec![9.0; 4];
+        let delta = vec![0.5; 4];
+        let fixed = dcgd_fixed(&p, &omega);
+        let star = dcgd_star(&p, &omega, &delta);
+        assert!(star.gamma > fixed.gamma);
+        assert!(star.rate < fixed.rate);
+    }
+
+    #[test]
+    fn diana_alpha_and_m_satisfy_constraints() {
+        let p = prob();
+        let omega = vec![9.0; 4];
+        let delta = vec![0.0; 4];
+        let ss = diana(&p, &omega, &delta, 2.0);
+        assert!((ss.alpha - 0.1).abs() < 1e-12); // 1/(1+9)
+        // M > B/ρ = (2/n)/α
+        assert!(ss.m > (2.0 / 4.0) / ss.alpha);
+        assert!(ss.rate < 1.0);
+        // biased C with δ=0.5 improves α and rate
+        let ss2 = diana(&p, &omega, &vec![0.5; 4], 2.0);
+        assert!(ss2.alpha > ss.alpha);
+        assert!(ss2.gamma >= ss.gamma);
+    }
+
+    #[test]
+    fn rand_diana_matches_paper_formulas() {
+        let p = prob();
+        let omega = 9.0;
+        let pr = rand_diana_default_p(omega);
+        assert!((pr - 0.1).abs() < 1e-12);
+        let probs = vec![pr; 4];
+        let ss = rand_diana(&p, omega, &probs, None);
+        let n = 4.0;
+        let m = 4.0 * omega / (n * pr);
+        assert!((ss.m - m).abs() < 1e-12);
+        let max_pl = (0..4).map(|i| pr * p.l_i(i)).fold(0.0, f64::max);
+        let expect_gamma = 1.0 / ((1.0 + 2.0 * omega / n) * p.l_max() + m * max_pl);
+        assert!((ss.gamma - expect_gamma).abs() < 1e-15);
+        // second rate: 1 − p + 2ω/(nM) = 1 − p + p/2 < 1
+        assert!((ss.rate - (1.0 - ss.gamma * p.mu()).max(1.0 - pr / 2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rand_diana_m_below_mprime_flagged_by_rate() {
+        // M < M' = 2ω/(np) ⇒ σ-rate ≥ 1: no contraction guarantee.
+        let p = prob();
+        let omega = 9.0;
+        let probs = vec![0.1; 4];
+        let m_prime = 2.0 * omega / (4.0 * 0.1);
+        let ss = rand_diana(&p, omega, &probs, Some(0.5 * m_prime));
+        assert!(ss.rate >= 1.0, "rate {} should signal instability", ss.rate);
+    }
+
+    #[test]
+    fn gdci_step_sizes_positive_and_rate_sane() {
+        let p = Ridge::paper_default(0);
+        let ss = gdci(&p, 9.0);
+        assert!(ss.eta > 0.0 && ss.eta < 1.0);
+        assert!(ss.gamma > 0.0);
+        assert!(ss.rate < 1.0);
+        let radius = gdci_neighborhood(&p, 9.0, ss.gamma, ss.eta);
+        assert!(radius > 0.0, "non-interpolating ⇒ nonzero neighborhood");
+    }
+
+    #[test]
+    fn vr_gdci_removes_neighborhood_with_sane_rates() {
+        let p = Ridge::paper_default(0);
+        let ss = vr_gdci(&p, 9.0);
+        assert!(ss.alpha <= 1.0 / 10.0 + 1e-12);
+        assert!(ss.eta > 0.0 && ss.gamma > 0.0);
+        assert!(ss.rate < 1.0);
+    }
+
+    #[test]
+    fn table1_orderings() {
+        let t = table1_complexities(100.0, 9.0, 0.5, 0.1, 10);
+        let get = |name: &str| t.iter().find(|(n, _)| *n == name).unwrap().1;
+        // STAR ≤ FIXED
+        assert!(get("DCGD-STAR").ours <= get("DCGD-FIXED").ours);
+        // our DIANA ≤ previous DIANA
+        let d = get("DIANA");
+        assert!(d.ours <= d.previous);
+        // our GDCI improves κ² → κ
+        let g = get("GDCI");
+        assert!(g.ours < g.previous);
+        assert!((g.previous / g.ours - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn iteration_count_scales_with_rate() {
+        let fast = StepSizes {
+            gamma: 0.0,
+            alpha: 0.0,
+            eta: 0.0,
+            m: 0.0,
+            rate: 0.9,
+        };
+        let slow = StepSizes {
+            rate: 0.99,
+            ..fast
+        };
+        assert!(slow.iters_for(1e-6) > 5.0 * fast.iters_for(1e-6));
+    }
+}

@@ -1,0 +1,186 @@
+//! Micro-benchmark harness (criterion substitute).
+//!
+//! `cargo bench` targets in this repo are plain binaries (`harness = false`)
+//! built on this module: warmup, multiple timed samples, robust statistics
+//! (median + MAD), and human-readable + CSV reporting. Black-boxing is done
+//! with `std::hint::black_box`.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+    pub iters_per_sample: u64,
+}
+
+impl BenchStats {
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+
+    pub fn mad(&self) -> f64 {
+        let med = self.median();
+        let mut dev: Vec<f64> = self.samples.iter().map(|&x| (x - med).abs()).collect();
+        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = dev.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n % 2 == 1 {
+            dev[n / 2]
+        } else {
+            0.5 * (dev[n / 2 - 1] + dev[n / 2])
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let med = self.median();
+        format!(
+            "{:<44} {:>12}/iter  (± {} MAD, {} samples × {} iters)",
+            self.name,
+            fmt_duration(med),
+            fmt_duration(self.mad()),
+            self.samples.len(),
+            self.iters_per_sample,
+        )
+    }
+}
+
+pub fn fmt_duration(secs: f64) -> String {
+    if !secs.is_finite() {
+        return "n/a".into();
+    }
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Benchmark a closure: auto-calibrated iteration count targeting
+/// ~`sample_time` per sample, `n_samples` samples after `warmup` time.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchStats {
+    bench_config(name, Duration::from_millis(150), 12, Duration::from_millis(200), &mut f)
+}
+
+/// Like [`bench`] but for slower bodies: fewer samples, shorter targets.
+pub fn bench_slow<F: FnMut()>(name: &str, mut f: F) -> BenchStats {
+    bench_config(name, Duration::from_millis(300), 5, Duration::from_millis(100), &mut f)
+}
+
+pub fn bench_config<F: FnMut()>(
+    name: &str,
+    sample_time: Duration,
+    n_samples: usize,
+    warmup: Duration,
+    f: &mut F,
+) -> BenchStats {
+    // Warmup
+    let start = Instant::now();
+    let mut warm_iters = 0u64;
+    while start.elapsed() < warmup {
+        f();
+        warm_iters += 1;
+    }
+    let per_iter = warmup.as_secs_f64() / warm_iters.max(1) as f64;
+    let iters = ((sample_time.as_secs_f64() / per_iter.max(1e-9)).ceil() as u64).max(1);
+
+    let mut samples = Vec::with_capacity(n_samples);
+    for _ in 0..n_samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    let stats = BenchStats {
+        name: name.to_string(),
+        samples,
+        iters_per_sample: iters,
+    };
+    println!("{}", stats.report());
+    stats
+}
+
+/// Time a single run of a long-ish workload (used by figure benches, which
+/// care about produced CSVs rather than ns-level timings).
+pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = black_box(f());
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{:<44} completed in {}", name, fmt_duration(dt));
+    (out, dt)
+}
+
+/// Write bench results as a CSV file under `results/`.
+pub fn write_csv(path: &str, header: &str, rows: &[String]) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut body = String::with_capacity(rows.len() * 32 + header.len() + 1);
+    body.push_str(header);
+    body.push('\n');
+    for r in rows {
+        body.push_str(r);
+        body.push('\n');
+    }
+    std::fs::write(path, body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_and_mad() {
+        let s = BenchStats {
+            name: "t".into(),
+            samples: vec![1.0, 2.0, 3.0, 10.0],
+            iters_per_sample: 1,
+        };
+        assert_eq!(s.median(), 2.5);
+        assert_eq!(s.mad(), 1.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_duration(2.0).ends_with(" s"));
+        assert!(fmt_duration(2e-3).ends_with(" ms"));
+        assert!(fmt_duration(2e-6).ends_with(" µs"));
+        assert!(fmt_duration(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut acc = 0u64;
+        let stats = bench_config(
+            "noop",
+            Duration::from_millis(5),
+            3,
+            Duration::from_millis(5),
+            &mut || {
+                acc = acc.wrapping_add(bb(1));
+            },
+        );
+        assert_eq!(stats.samples.len(), 3);
+        assert!(stats.median() >= 0.0);
+    }
+}

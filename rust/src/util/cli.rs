@@ -1,0 +1,258 @@
+//! Tiny declarative command-line parser (clap substitute for the offline
+//! environment).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and subcommands. Generates `--help` text from declared specs.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_bool: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub args: Vec<ArgSpec>,
+    pub positionals: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            args: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: Some(default),
+            is_bool: false,
+        });
+        self
+    }
+    pub fn required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_bool: false,
+        });
+        self
+    }
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_bool: false,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  shiftcomp {}", self.name, self.about, self.name);
+        for p in &self.positionals {
+            s.push_str(&format!(" <{}>", p.name));
+        }
+        s.push_str(" [OPTIONS]\n\nOPTIONS:\n");
+        for a in &self.args {
+            let default = a
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{:<18} {}{}\n", a.name, a.help, default));
+        }
+        for p in &self.positionals {
+            s.push_str(&format!("  <{:<18}> {}\n", p.name, p.help));
+        }
+        s
+    }
+
+    /// Parse `argv` (not including the subcommand token itself).
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut pos_values: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .args
+                    .iter()
+                    .find(|a| a.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_bool {
+                    values.insert(key, "true".into());
+                } else if let Some(v) = inline_val {
+                    values.insert(key, v);
+                } else {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| format!("option --{key} needs a value"))?;
+                    values.insert(key, v.clone());
+                }
+            } else {
+                pos_values.push(tok.clone());
+            }
+            i += 1;
+        }
+        if pos_values.len() > self.positionals.len() {
+            return Err(format!(
+                "unexpected positional argument '{}'\n\n{}",
+                pos_values[self.positionals.len()],
+                self.usage()
+            ));
+        }
+        // defaults
+        for a in &self.args {
+            if let Some(d) = a.default {
+                values.entry(a.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        // required non-bool args without default must be present
+        for a in &self.args {
+            if !a.is_bool && a.default.is_none() && !values.contains_key(a.name) {
+                return Err(format!("missing required option --{}\n\n{}", a.name, self.usage()));
+            }
+        }
+        let mut positionals = BTreeMap::new();
+        for (spec, v) in self.positionals.iter().zip(pos_values.iter()) {
+            positionals.insert(spec.name.to_string(), v.clone());
+        }
+        Ok(Parsed {
+            values,
+            positionals,
+        })
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    positionals: BTreeMap<String, String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+    pub fn positional(&self, name: &str) -> Option<&str> {
+        self.positionals.get(name).map(|s| s.as_str())
+    }
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+    pub fn get_u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+    /// Comma-separated f64 list.
+    pub fn get_f64_list(&self, name: &str) -> Result<Vec<f64>, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().map_err(|e| format!("--{name}: {e}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("run", "run an experiment")
+            .opt("steps", "100", "number of rounds")
+            .opt("gamma", "0.1", "step size")
+            .flag("verbose", "chatty output")
+            .required("method", "algorithm name")
+            .positional("config", "config path")
+    }
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_defaults() {
+        let p = cmd()
+            .parse(&argv(&["--method", "diana", "--steps=500", "--verbose", "cfg.json"]))
+            .unwrap();
+        assert_eq!(p.get("method"), Some("diana"));
+        assert_eq!(p.get_usize("steps").unwrap(), 500);
+        assert_eq!(p.get_f64("gamma").unwrap(), 0.1);
+        assert!(p.get_bool("verbose"));
+        assert_eq!(p.positional("config"), Some("cfg.json"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let err = cmd().parse(&argv(&["cfg.json"])).unwrap_err();
+        assert!(err.contains("--method"), "{err}");
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let err = cmd()
+            .parse(&argv(&["--method", "x", "--bogus", "1"]))
+            .unwrap_err();
+        assert!(err.contains("bogus"));
+    }
+
+    #[test]
+    fn f64_list() {
+        let p = Command::new("t", "")
+            .opt("qs", "0.1,0.5,0.9", "q values")
+            .parse(&[])
+            .unwrap();
+        assert_eq!(p.get_f64_list("qs").unwrap(), vec![0.1, 0.5, 0.9]);
+    }
+
+    #[test]
+    fn help_is_usage_error() {
+        let err = cmd().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("USAGE"));
+    }
+}

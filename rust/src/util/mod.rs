@@ -1,0 +1,11 @@
+//! Small self-contained substrates: RNG, JSON, CLI parsing, property
+//! testing, and the micro-benchmark harness. These replace external crates
+//! (`rand`, `serde_json`, `clap`, `proptest`, `criterion`) that are
+//! unavailable in the offline build environment — see DESIGN.md
+//! §Substitutions.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest_lite;
+pub mod rng;

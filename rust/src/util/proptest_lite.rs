@@ -1,0 +1,155 @@
+//! A miniature property-based testing framework (proptest substitute).
+//!
+//! Usage:
+//! ```ignore
+//! proptest_lite::run(100, 0xC0FFEE, |g| {
+//!     let d = g.usize_in(1, 512);
+//!     let x = g.vec_f64(d, -10.0, 10.0);
+//!     // ... assertions; return Err(msg) to fail, Ok(()) to pass
+//!     Ok(())
+//! });
+//! ```
+//!
+//! On failure it reports the case index and the per-case seed so the exact
+//! input can be replayed deterministically (`replay(seed, f)`).
+
+use crate::util::rng::Pcg64;
+
+/// Generator handed to each property case.
+pub struct Gen {
+    pub rng: Pcg64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.rng.uniform(lo, hi)).collect()
+    }
+    pub fn vec_normal(&mut self, n: usize, sigma: f64) -> Vec<f64> {
+        (0..n).map(|_| self.rng.normal() * sigma).collect()
+    }
+    /// A vector drawn from a mix of scales (exercises denormals-ish, large,
+    /// zero entries) — good for compressor edge cases.
+    pub fn vec_mixed_scale(&mut self, n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|_| match self.rng.below(5) {
+                0 => 0.0,
+                1 => self.rng.normal() * 1e-8,
+                2 => self.rng.normal(),
+                3 => self.rng.normal() * 1e6,
+                _ => self.rng.normal() * 1e-3,
+            })
+            .collect()
+    }
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Run `cases` property evaluations; panic with a replayable report on the
+/// first failure.
+pub fn run<F>(cases: usize, seed: u64, mut property: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut root = Pcg64::new(seed);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let mut g = Gen {
+            rng: Pcg64::new(case_seed),
+        };
+        if let Err(msg) = property(&mut g) {
+            panic!(
+                "property failed at case {case}/{cases} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by its reported seed.
+pub fn replay<F>(case_seed: u64, mut property: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen {
+        rng: Pcg64::new(case_seed),
+    };
+    if let Err(msg) = property(&mut g) {
+        panic!("replayed property failed (seed {case_seed:#x}): {msg}");
+    }
+}
+
+/// Assert two slices are elementwise close. Returns Err for use inside
+/// properties.
+pub fn check_close(a: &[f64], b: &[f64], atol: f64, rtol: f64, what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * x.abs().max(y.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("{what}: index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        run(50, 1, |g| {
+            count += 1;
+            let n = g.usize_in(1, 10);
+            let v = g.vec_f64(n, -1.0, 1.0);
+            if v.len() == n {
+                Ok(())
+            } else {
+                Err("len".into())
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        run(50, 2, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            if x < 0.9 {
+                Ok(())
+            } else {
+                Err(format!("x = {x}"))
+            }
+        });
+    }
+
+    #[test]
+    fn check_close_detects_mismatch() {
+        assert!(check_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9, 0.0, "t").is_ok());
+        assert!(check_close(&[1.0], &[1.1], 1e-9, 0.0, "t").is_err());
+        assert!(check_close(&[1.0], &[1.0, 2.0], 1e-9, 0.0, "t").is_err());
+    }
+
+    #[test]
+    fn mixed_scale_hits_zero_and_large() {
+        let mut g = Gen {
+            rng: Pcg64::new(5),
+        };
+        let v = g.vec_mixed_scale(1000);
+        assert!(v.iter().any(|&x| x == 0.0));
+        assert!(v.iter().any(|&x| x.abs() > 1e4));
+    }
+}

@@ -1,0 +1,260 @@
+//! Integration tests: every theorem's qualitative claim, measured.
+
+use shiftcomp::prelude::*;
+
+fn ridge() -> Ridge {
+    Ridge::paper_default(77)
+}
+
+fn opts(max_rounds: usize, tol: f64) -> RunOpts {
+    RunOpts {
+        max_rounds,
+        tol,
+        record_every: 20,
+        ..Default::default()
+    }
+}
+
+/// Theorem 1: DCGD converges linearly *to a neighborhood* whose radius is
+/// controlled by γ·(1/n²)Σω‖∇f_i(x*)‖² — measured floor within a modest
+/// factor of the theoretical radius.
+#[test]
+fn thm1_dcgd_neighborhood_matches_theory() {
+    let p = ridge();
+    let d = p.dim();
+    let q = RandK::with_q(d, 0.25);
+    let omega = q.omega().unwrap();
+    let mut alg = DcgdShift::dcgd(&p, q, 7);
+    let gamma = alg.gamma;
+    let trace = alg.run(&p, &opts(60_000, 1e-30));
+    assert!(!trace.diverged);
+    let floor = trace.error_floor();
+
+    let x0 = shiftcomp::algorithms::paper_x0(d, 7);
+    let denom = shiftcomp::linalg::dist_sq(&x0, p.x_star());
+    let shifts = vec![vec![0.0; d]; p.n_workers()];
+    let radius = shiftcomp::theory::dcgd_fixed_neighborhood(
+        &p,
+        &vec![omega; p.n_workers()],
+        &shifts,
+        gamma,
+    ) / denom;
+    assert!(
+        floor <= radius * 20.0,
+        "floor {floor:e} far above theoretical radius {radius:e}"
+    );
+    assert!(
+        floor >= radius / 1e5,
+        "floor {floor:e} suspiciously far below radius {radius:e}"
+    );
+}
+
+/// Theorem 1 with a *good fixed shift* (h_i = ∇f_i(x*)): neighborhood
+/// vanishes even without any learning.
+#[test]
+fn thm1_optimal_fixed_shift_is_exact() {
+    let p = ridge();
+    let d = p.dim();
+    let shifts: Vec<Vec<f64>> = (0..p.n_workers()).map(|i| p.grad_star(i).to_vec()).collect();
+    let mut alg = DcgdShift::fixed_shift(&p, RandK::with_q(d, 0.25), shifts, 9);
+    let trace = alg.run(&p, &opts(120_000, 1e-20));
+    assert!(trace.converged, "floor {:e}", trace.error_floor());
+}
+
+/// Theorem 2: DCGD-STAR with a contractive C reaches the exact optimum and
+/// its step size beats plain DCGD's.
+#[test]
+fn thm2_star_with_topk_compressor() {
+    let p = ridge();
+    let d = p.dim();
+    let c: Box<dyn Compressor> = Box::new(TopK::with_q(d, 0.5));
+    let mut alg = DcgdShift::star(&p, RandK::with_q(d, 0.25), Some(c), 11);
+    let trace = alg.run(&p, &opts(120_000, 1e-20));
+    assert!(trace.converged, "floor {:e}", trace.error_floor());
+}
+
+/// Theorem 3 (generalized DIANA): biased C_i in the shift update still
+/// converges exactly, and the effective ω(1−δ) yields a larger α.
+#[test]
+fn thm3_diana_with_biased_c() {
+    let p = ridge();
+    let d = p.dim();
+    let c: Box<dyn Compressor> = Box::new(TopK::with_q(d, 0.5));
+    let mut alg = DcgdShift::diana(&p, RandK::with_q(d, 0.25), Some(c), 13);
+    let trace = alg.run(&p, &opts(120_000, 1e-18));
+    assert!(
+        trace.converged || trace.error_floor() < 1e-14,
+        "floor {:e}",
+        trace.error_floor()
+    );
+}
+
+/// Theorem 4: Rand-DIANA converges exactly on the non-interpolating ridge,
+/// and its empirical rate is no worse than the theoretical bound by a large
+/// factor (sanity of the rate formula, not exactness).
+#[test]
+fn thm4_rand_diana_rate_sanity() {
+    let p = ridge();
+    let d = p.dim();
+    let q = RandK::with_q(d, 0.5);
+    let omega = q.omega().unwrap();
+    let pr = shiftcomp::theory::rand_diana_default_p(omega);
+    let ss = shiftcomp::theory::rand_diana(&p, omega, &vec![pr; p.n_workers()], None);
+    let mut alg = DcgdShift::rand_diana(&p, q, None, 15);
+    let trace = alg.run(&p, &opts(120_000, 1e-16));
+    assert!(trace.converged, "floor {:e}", trace.error_floor());
+    // measured rounds ≤ 5× the theoretical bound for the target
+    let measured = trace.rounds_to_tol(1e-10).unwrap() as f64;
+    let bound = (1.0f64 / 1e-10).ln() / -(ss.rate.ln());
+    assert!(
+        measured <= bound * 5.0,
+        "measured {measured} vs theory bound {bound}"
+    );
+}
+
+/// Theorems 5/6 qualitative: GDCI floors, VR-GDCI doesn't; the improved
+/// GDCI steps converge much faster than the Chraibi-et-al rate.
+#[test]
+fn thm5_thm6_gdci_family() {
+    let p = ridge();
+    let d = p.dim();
+    let o = opts(60_000, 1e-26);
+    let gdci = Gdci::new(&p, RandK::with_q(d, 0.5), 17).run(&p, &o);
+    let old = Gdci::new_chraibi(&p, RandK::with_q(d, 0.5), 17).run(&p, &o);
+    let vr = VrGdci::new(&p, RandK::with_q(d, 0.5), 17).run(&p, &o);
+
+    assert!(!gdci.diverged && !old.diverged && !vr.diverged);
+    // VR removes the floor
+    assert!(
+        vr.error_floor() < gdci.error_floor() * 1e-2,
+        "vr {:e} vs gdci {:e}",
+        vr.error_floor(),
+        gdci.error_floor()
+    );
+    // our steps reach the GDCI floor much faster than the old rate:
+    // compare error at the same (early) round
+    let at = |t: &Trace, round: usize| {
+        t.records
+            .iter()
+            .find(|r| r.round >= round)
+            .map(|r| r.rel_err)
+            .unwrap_or(f64::NAN)
+    };
+    let ours_err = at(&gdci, 3_000);
+    let old_err = at(&old, 3_000);
+    assert!(
+        ours_err < old_err * 1e-2 || old_err > 0.5,
+        "at round 3000: ours {ours_err:e}, chraibi {old_err:e}"
+    );
+}
+
+/// Interpolation regime: DCGD alone reaches the exact optimum (the paper's
+/// Theorem-1 discussion) — no shifts needed.
+#[test]
+fn interpolation_makes_dcgd_exact() {
+    let p = Quadratic::interpolating(30, 6, 1.0, 15.0, 19);
+    let mut alg = DcgdShift::dcgd(&p, RandK::with_q(30, 0.2), 19);
+    let trace = alg.run(&p, &opts(60_000, 1e-20));
+    assert!(trace.converged, "floor {:e}", trace.error_floor());
+}
+
+/// Bits-efficiency headline (Figure 1 left, shape): at q = 0.1,
+/// Rand-DIANA matches DIANA in rounds and beats it under the paper's
+/// gradient-message bit accounting. (Under *total*-traffic accounting that
+/// also counts Rand-DIANA's dense shift refreshes, DIANA wins — both
+/// conventions are reported; see EXPERIMENTS.md §Deviations.)
+#[test]
+fn rand_diana_beats_diana_in_message_bits_at_low_q() {
+    let p = ridge();
+    let d = p.dim();
+    let o = opts(200_000, 1e-10);
+    let diana = DcgdShift::diana(&p, RandK::with_q(d, 0.1), None, 21).run(&p, &o);
+    let rand = DcgdShift::rand_diana(&p, RandK::with_q(d, 0.1), None, 21).run(&p, &o);
+    let db = diana.bits_to_tol_messages_only(1e-8);
+    let rb = rand.bits_to_tol_messages_only(1e-8);
+    assert!(db.is_some() && rb.is_some(), "both must reach 1e-8: {db:?} {rb:?}");
+    assert!(
+        rb.unwrap() < db.unwrap(),
+        "rand-diana {rb:?} should beat diana {db:?} (message bits) at q=0.1"
+    );
+    // rounds within 1.25× of each other (complexities match, Table 1)
+    let dr = diana.rounds_to_tol(1e-8).unwrap() as f64;
+    let rr = rand.rounds_to_tol(1e-8).unwrap() as f64;
+    assert!(rr <= dr * 1.25, "rounds: rand {rr} vs diana {dr}");
+}
+
+/// Logistic regression (Figure 4 shape): both VR methods drive the error
+/// well below any DCGD floor on the w2a-like problem.
+#[test]
+fn logistic_vr_methods_converge() {
+    let p = Logistic::w2a_default(10, 5);
+    let d = p.dim();
+    let o = opts(40_000, 1e-10);
+    let diana = DcgdShift::diana(&p, RandK::with_q(d, 0.5), None, 23).run(&p, &o);
+    let rand = DcgdShift::rand_diana(&p, RandK::with_q(d, 0.5), None, 23).run(&p, &o);
+    assert!(
+        diana.converged || diana.final_relative_error() < 1e-6,
+        "diana {:e}",
+        diana.final_relative_error()
+    );
+    assert!(
+        rand.converged || rand.final_relative_error() < 1e-6,
+        "rand {:e}",
+        rand.final_relative_error()
+    );
+}
+
+/// Heterogeneous fleets (§3.2.1's bandwidth remark): per-worker Rand-K at
+/// different q, DIANA shift learning, exact convergence with step sizes
+/// driven by the worst-case ω_i.
+#[test]
+fn heterogeneous_compressors_converge() {
+    use shiftcomp::algorithms::ShiftRule;
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|i| {
+            let q = 0.8 - 0.6 * (i as f64) / (n as f64 - 1.0); // 0.8 → 0.2
+            Box::new(RandK::with_q(d, q)) as Box<dyn Compressor>
+        })
+        .collect();
+    let omegas: Vec<f64> = qs.iter().map(|q| q.omega().unwrap()).collect();
+    let ss = shiftcomp::theory::diana(&p, &omegas, &vec![0.0; n], 2.0);
+    let rules = (0..n)
+        .map(|_| ShiftRule::Diana {
+            alpha: ss.alpha,
+            c: None,
+        })
+        .collect();
+    let mut alg = DcgdShift::custom(
+        "diana-hetero",
+        &p,
+        qs,
+        rules,
+        vec![vec![0.0; d]; n],
+        ss.gamma,
+        31,
+    );
+    let trace = alg.run(&p, &opts(120_000, 1e-14));
+    assert!(
+        trace.converged || trace.error_floor() < 1e-12,
+        "floor {:e}",
+        trace.error_floor()
+    );
+}
+
+/// Natural dithering end-to-end: the compressor the paper grid-searches in
+/// Figure 1 right drives DIANA to exact convergence.
+#[test]
+fn diana_with_natural_dithering_converges() {
+    let p = ridge();
+    let d = p.dim();
+    let mut alg = DcgdShift::diana(&p, shiftcomp::compressors::NaturalDithering::l2(d, 6), None, 33);
+    let trace = alg.run(&p, &opts(80_000, 1e-14));
+    assert!(
+        trace.converged || trace.error_floor() < 1e-12,
+        "floor {:e}",
+        trace.error_floor()
+    );
+}

@@ -1,0 +1,249 @@
+//! The threaded coordinator must be **bit-identical** to the single-process
+//! driver: same seed ⇒ same trajectory, same bits — for every method.
+
+use std::sync::Arc;
+
+use shiftcomp::algorithms::{Algorithm, DcgdShift, RunOpts};
+use shiftcomp::compressors::{Compressor, NaturalDithering, RandK, TopK, ValPrec};
+use shiftcomp::coordinator::{ClusterConfig, DistributedRunner, MethodKind};
+use shiftcomp::net::LinkModel;
+use shiftcomp::problems::{Problem, Ridge};
+
+fn ridge() -> Arc<Ridge> {
+    Arc::new(Ridge::paper_default(3))
+}
+
+fn assert_trajectories_match(
+    mut single: DcgdShift,
+    mut dist: DistributedRunner,
+    p: &dyn Problem,
+    rounds: usize,
+) {
+    let mut bits_single = 0u64;
+    let mut bits_dist = 0u64;
+    for k in 0..rounds {
+        bits_single += single.step(p).bits_up;
+        bits_dist += dist.step(p).bits_up;
+        let xs = single.x();
+        let xd = dist.x();
+        assert_eq!(xs, xd, "iterates diverged at round {k}");
+    }
+    assert_eq!(bits_single, bits_dist, "bit accounting diverged");
+}
+
+#[test]
+fn dcgd_bit_identical() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let single = DcgdShift::dcgd(p.as_ref(), RandK::with_q(d, 0.3), 11);
+    let gamma = single.gamma;
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(RandK::with_q(d, 0.3)) as Box<dyn Compressor>)
+        .collect();
+    let dist = DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::Fixed,
+            gamma,
+            prec: ValPrec::F64,
+            seed: 11,
+            links: None,
+        },
+    );
+    assert_trajectories_match(single, dist, p.as_ref(), 60);
+}
+
+#[test]
+fn diana_bit_identical() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let single = DcgdShift::diana(p.as_ref(), NaturalDithering::l2(d, 4), None, 13);
+    let gamma = single.gamma;
+    // recover alpha from theory exactly as the constructor does
+    let omega = NaturalDithering::l2(d, 4).omega().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(NaturalDithering::l2(d, 4)) as Box<dyn Compressor>)
+        .collect();
+    let dist = DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::Diana {
+                alpha: ss.alpha,
+                with_c: false,
+            },
+            gamma,
+            prec: ValPrec::F64,
+            seed: 13,
+            links: None,
+        },
+    );
+    assert_trajectories_match(single, dist, p.as_ref(), 60);
+}
+
+#[test]
+fn diana_with_c_bit_identical() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let c: Box<dyn Compressor> = Box::new(TopK::with_q(d, 0.5));
+    let single = DcgdShift::diana(p.as_ref(), RandK::with_q(d, 0.3), Some(c.clone_box()), 15);
+    let gamma = single.gamma;
+    let omega = RandK::with_q(d, 0.3).omega().unwrap();
+    let delta = c.delta().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![delta; n], 2.0);
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(RandK::with_q(d, 0.3)) as Box<dyn Compressor>)
+        .collect();
+    let cs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(TopK::with_q(d, 0.5)) as Box<dyn Compressor>)
+        .collect();
+    let dist = DistributedRunner::new(
+        p.clone(),
+        qs,
+        Some(cs),
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::Diana {
+                alpha: ss.alpha,
+                with_c: true,
+            },
+            gamma,
+            prec: ValPrec::F64,
+            seed: 15,
+            links: None,
+        },
+    );
+    assert_trajectories_match(single, dist, p.as_ref(), 50);
+}
+
+#[test]
+fn rand_diana_bit_identical() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let single = DcgdShift::rand_diana(p.as_ref(), RandK::with_q(d, 0.2), Some(0.2), 17);
+    let gamma = single.gamma;
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(RandK::with_q(d, 0.2)) as Box<dyn Compressor>)
+        .collect();
+    let dist = DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::RandDiana { p: 0.2 },
+            gamma,
+            prec: ValPrec::F64,
+            seed: 17,
+            links: None,
+        },
+    );
+    assert_trajectories_match(single, dist, p.as_ref(), 80);
+}
+
+#[test]
+fn star_bit_identical() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let single = DcgdShift::star(p.as_ref(), RandK::with_q(d, 0.4), None, 19);
+    let gamma = single.gamma;
+    let shifts: Vec<Vec<f64>> = (0..n).map(|i| p.grad_star(i).to_vec()).collect();
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(RandK::with_q(d, 0.4)) as Box<dyn Compressor>)
+        .collect();
+    let dist = DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        shifts,
+        ClusterConfig {
+            method: MethodKind::Star { with_c: false },
+            gamma,
+            prec: ValPrec::F64,
+            seed: 19,
+            links: None,
+        },
+    );
+    assert_trajectories_match(single, dist, p.as_ref(), 60);
+}
+
+#[test]
+fn network_accounting_reflects_straggler() {
+    let p = ridge();
+    let n = p.n_workers();
+    let d = p.dim();
+    // one worker 100× slower
+    let mut links = vec![
+        LinkModel {
+            up_bps: 1e9,
+            down_bps: 1e9,
+            latency: 0.0,
+        };
+        n
+    ];
+    links[n - 1].up_bps = 1e7;
+    let mut runner = DistributedRunner::rand_diana(
+        p.clone(),
+        RandK::with_q(d, 0.5),
+        None,
+        21,
+        Some(links),
+    );
+    for _ in 0..20 {
+        runner.step(p.as_ref());
+    }
+    let slow_time = runner.simulated_time();
+
+    let fast_links = vec![
+        LinkModel {
+            up_bps: 1e9,
+            down_bps: 1e9,
+            latency: 0.0,
+        };
+        n
+    ];
+    let mut fast = DistributedRunner::rand_diana(
+        p.clone(),
+        RandK::with_q(d, 0.5),
+        None,
+        21,
+        Some(fast_links),
+    );
+    for _ in 0..20 {
+        fast.step(p.as_ref());
+    }
+    assert!(
+        slow_time > fast.simulated_time() * 10.0,
+        "straggler must dominate: {slow_time} vs {}",
+        fast.simulated_time()
+    );
+}
+
+#[test]
+fn distributed_runner_survives_many_rounds() {
+    let p = ridge();
+    let d = p.dim();
+    let mut runner = DistributedRunner::diana(p.clone(), RandK::with_q(d, 0.5), 23, None);
+    let trace = runner.run(
+        p.as_ref(),
+        &RunOpts {
+            max_rounds: 500,
+            tol: 0.0,
+            record_every: 50,
+            ..Default::default()
+        },
+    );
+    assert_eq!(trace.rounds(), 501);
+    assert!(!trace.diverged);
+}

@@ -1,0 +1,248 @@
+//! Property-based tests (proptest_lite) over the framework's invariants.
+
+use shiftcomp::algorithms::{Algorithm, DcgdShift, Gd, RunOpts};
+use shiftcomp::compressors::{
+    combinators::{scale_packet, Induced, Shifted},
+    BernoulliP, Compressor, Identity, NaturalCompression, NaturalDithering, RandK,
+    StandardDithering, Ternary, TopK, ZeroCompressor,
+};
+use shiftcomp::problems::Quadratic;
+use shiftcomp::util::proptest_lite::{check_close, run, Gen};
+use shiftcomp::util::rng::Pcg64;
+use shiftcomp::wire;
+
+fn random_unbiased(g: &mut Gen, d: usize) -> Box<dyn Compressor> {
+    match g.usize_in(0, 5) {
+        0 => Box::new(Identity::new(d)),
+        1 => Box::new(RandK::new(d, g.usize_in(1, d))),
+        2 => Box::new(NaturalDithering::l2(d, g.usize_in(1, 10) as u8)),
+        3 => Box::new(NaturalCompression::new(d)),
+        4 => Box::new(BernoulliP::new(d, g.f64_in(0.05, 1.0))),
+        _ => Box::new(Ternary::new(d)),
+    }
+}
+
+fn random_biased(g: &mut Gen, d: usize) -> Box<dyn Compressor> {
+    match g.usize_in(0, 2) {
+        0 => Box::new(TopK::new(d, g.usize_in(1, d))),
+        1 => Box::new(ZeroCompressor::new(d)),
+        _ => Box::new(shiftcomp::compressors::SignScaled::new(d)),
+    }
+}
+
+/// Every unbiased compressor: Monte-Carlo mean ≈ x and empirical variance
+/// within the advertised ω (with CI slack).
+#[test]
+fn prop_unbiased_contract() {
+    run(20, 0xB1A5, |g| {
+        let d = g.usize_in(2, 60);
+        let c = random_unbiased(g, d);
+        let x = g.vec_normal(d, 2.0);
+        if x.iter().all(|&v| v == 0.0) {
+            return Ok(());
+        }
+        let mut rng = Pcg64::new(g.rng.next_u64());
+        let bias = shiftcomp::compressors::empirical_bias_ratio(c.as_ref(), &mut rng, &x, 4_000);
+        if bias > 0.2 {
+            return Err(format!("{}: bias ratio {bias}", c.name()));
+        }
+        let ratio =
+            shiftcomp::compressors::empirical_variance_ratio(c.as_ref(), &mut rng, &x, 1_500);
+        let omega = c.omega().unwrap();
+        if ratio > omega * 1.35 + 0.1 {
+            return Err(format!("{}: variance {ratio} > ω {omega}", c.name()));
+        }
+        Ok(())
+    });
+}
+
+/// Every contractive compressor: ‖C(x) − x‖² ≤ (1 − δ)‖x‖² empirically.
+#[test]
+fn prop_contractive_contract() {
+    run(30, 0xB1A6, |g| {
+        let d = g.usize_in(2, 60);
+        let c = random_biased(g, d);
+        let x = g.vec_mixed_scale(d);
+        let n2 = shiftcomp::linalg::nrm2_sq(&x);
+        if n2 == 0.0 {
+            return Ok(());
+        }
+        let mut rng = Pcg64::new(g.rng.next_u64());
+        let mut acc: f64 = 0.0;
+        let trials = 300;
+        for _ in 0..trials {
+            let out = c.compress(&mut rng, &x).decode();
+            acc += shiftcomp::linalg::dist_sq(&out, &x);
+        }
+        let ratio = acc / trials as f64 / n2;
+        let delta = c.delta().unwrap();
+        if ratio > (1.0 - delta) * 1.05 + 1e-12 {
+            return Err(format!("{}: {ratio} > 1 − δ = {}", c.name(), 1.0 - delta));
+        }
+        Ok(())
+    });
+}
+
+/// Wire: encode ∘ decode = identity for every packet any compressor emits.
+#[test]
+fn prop_wire_roundtrip_all_compressors() {
+    run(60, 0x3172, |g| {
+        let d = g.usize_in(1, 100);
+        let c: Box<dyn Compressor> = if g.bool() {
+            random_unbiased(g, d)
+        } else {
+            random_biased(g, d)
+        };
+        let x = g.vec_mixed_scale(d);
+        let mut rng = Pcg64::new(g.rng.next_u64());
+        let pkt = c.compress(&mut rng, &x);
+        let bytes = wire::encode(&pkt, shiftcomp::compressors::ValPrec::F64);
+        let back = wire::decode(&bytes).map_err(|e| format!("{}: {e}", c.name()))?;
+        if back != pkt {
+            return Err(format!("{}: packet mutated on the wire", c.name()));
+        }
+        Ok(())
+    });
+}
+
+/// Lemma 1 (shift composition): v + Q_h(x − v) has zero variance at
+/// x = h + v and is unbiased everywhere.
+#[test]
+fn prop_lemma1_shift_composition() {
+    run(20, 0x1e44a1, |g| {
+        let d = g.usize_in(2, 40);
+        let h = g.vec_normal(d, 1.5);
+        let v = g.vec_normal(d, 1.5);
+        let q = Shifted::new(h.clone(), random_unbiased(g, d));
+        let mut rng = Pcg64::new(g.rng.next_u64());
+        // zero variance at the composed shift point
+        let hv: Vec<f64> = h.iter().zip(v.iter()).map(|(a, b)| a + b).collect();
+        let arg: Vec<f64> = hv.iter().zip(v.iter()).map(|(a, b)| a - b).collect();
+        let mut out = q.apply(&mut rng, &arg);
+        for j in 0..d {
+            out[j] += v[j];
+        }
+        check_close(&out, &hv, 1e-9, 1e-9, "Q(h+v) must equal h+v exactly")
+    });
+}
+
+/// Lemma 3 (induced compressor): empirical variance ≤ ω(1−δ) and mean ≈ x.
+#[test]
+fn prop_induced_omega() {
+    run(15, 0x17d, |g| {
+        let d = g.usize_in(4, 40);
+        let ind = Induced::new(random_biased(g, d), random_unbiased(g, d));
+        let omega = match ind.omega() {
+            Some(w) => w,
+            None => return Ok(()),
+        };
+        let x = g.vec_normal(d, 2.0);
+        let n2 = shiftcomp::linalg::nrm2_sq(&x);
+        if n2 == 0.0 {
+            return Ok(());
+        }
+        let mut rng = Pcg64::new(g.rng.next_u64());
+        let trials = 1_500;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let out = ind.apply(&mut rng, &x).decode();
+            acc += shiftcomp::linalg::dist_sq(&out, &x);
+        }
+        let ratio = acc / trials as f64 / n2;
+        if ratio > omega * 1.35 + 0.1 {
+            return Err(format!(
+                "induced({}, {}): {ratio} > ω(1−δ) = {omega}",
+                ind.c.name(),
+                ind.q.name()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// scale_packet(pkt, a).decode() == a * pkt.decode() for random packets.
+#[test]
+fn prop_scale_packet_linearity() {
+    run(40, 0x5ca1e, |g| {
+        let d = g.usize_in(1, 50);
+        let c: Box<dyn Compressor> = if g.bool() {
+            random_unbiased(g, d)
+        } else {
+            random_biased(g, d)
+        };
+        let x = g.vec_normal(d, 1.0);
+        let a = g.f64_in(-3.0, 3.0);
+        let mut r1 = Pcg64::new(77);
+        let mut r2 = Pcg64::new(77);
+        let plain = c.compress(&mut r1, &x).decode();
+        let scaled = scale_packet(c.compress(&mut r2, &x), a).decode();
+        let expect: Vec<f64> = plain.iter().map(|v| v * a).collect();
+        check_close(&scaled, &expect, 1e-10, 1e-10, &c.name())
+    });
+}
+
+/// Algorithmic reduction: DCGD-SHIFT with the Identity compressor follows
+/// exact distributed GD for any quadratic and any seed.
+#[test]
+fn prop_identity_reduces_to_gd() {
+    run(8, 0x6d, |g| {
+        let d = g.usize_in(3, 15);
+        let n = g.usize_in(2, 5);
+        let seed = g.rng.next_u64();
+        let p = Quadratic::random(d, n, 0.5, 8.0, seed);
+        let mut alg = DcgdShift::dcgd(&p, Identity::new(d), seed);
+        let gamma = alg.gamma;
+        let mut gd = Gd::with_gamma(&p, gamma, seed);
+        for _ in 0..40 {
+            alg.step(&p);
+            gd.step(&p);
+        }
+        check_close(alg.x(), gd.x(), 1e-9, 1e-9, "identity ≠ GD")
+    });
+}
+
+/// StandardDithering also respects its QSGD ω bound.
+#[test]
+fn prop_standard_dithering_bound() {
+    run(12, 0x5d, |g| {
+        let d = g.usize_in(4, 80);
+        let s = g.usize_in(1, 16) as u32;
+        let c = StandardDithering::new(d, s);
+        let x = g.vec_normal(d, 3.0);
+        let mut rng = Pcg64::new(g.rng.next_u64());
+        let ratio = shiftcomp::compressors::empirical_variance_ratio(&c, &mut rng, &x, 1_500);
+        let omega = c.omega().unwrap();
+        if ratio > omega * 1.35 + 0.05 {
+            return Err(format!("std-dith(s={s}, d={d}): {ratio} > {omega}"));
+        }
+        Ok(())
+    });
+}
+
+/// Determinism: the full stack is reproducible from the seed.
+#[test]
+fn prop_full_run_deterministic() {
+    run(4, 0xde7e44, |g| {
+        let seed = g.rng.next_u64();
+        let p = Quadratic::random(10, 3, 1.0, 10.0, seed);
+        let mk = || {
+            let mut alg = DcgdShift::rand_diana(&p, RandK::new(10, 3), None, seed);
+            let t = alg.run(
+                &p,
+                &RunOpts {
+                    max_rounds: 200,
+                    tol: 0.0,
+                    record_every: 10,
+                    ..Default::default()
+                },
+            );
+            (alg.x().to_vec(), t.total_bits_up())
+        };
+        let (x1, b1) = mk();
+        let (x2, b2) = mk();
+        if x1 != x2 || b1 != b2 {
+            return Err("same seed produced different runs".into());
+        }
+        Ok(())
+    });
+}

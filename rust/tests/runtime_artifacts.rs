@@ -1,0 +1,221 @@
+//! Whole-stack integration: the AOT artifacts (L1 Pallas → L2 JAX → HLO)
+//! executed through PJRT must agree with the native Rust implementations.
+//!
+//! These tests are gated on `artifacts/manifest.json` (run `make artifacts`
+//! first); they *skip* rather than fail when artifacts are absent so the
+//! pure-Rust test suite stays green on a fresh checkout.
+
+use shiftcomp::compressors::{Compressor, RandK};
+use shiftcomp::linalg::Mat;
+use shiftcomp::problems::Problem;
+use shiftcomp::runtime::oracles::{HloNatDither, HloShiftedCompress};
+use shiftcomp::runtime::{Engine, HloRidgeOracle, LmSession};
+use shiftcomp::util::rng::Pcg64;
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping runtime test: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::cpu("artifacts").expect("engine"))
+}
+
+#[test]
+fn hlo_ridge_grad_matches_rust_problem() {
+    let Some(engine) = engine() else { return };
+    let oracle = HloRidgeOracle::new(&engine).expect("ridge oracle");
+    assert_eq!(oracle.d, 80);
+    assert_eq!(oracle.m_i, 10);
+
+    // Build a rust-side worker with the same shapes and compare gradients.
+    let mut rng = Pcg64::new(1);
+    let m_i = oracle.m_i;
+    let d = oracle.d;
+    let mut a = Mat::zeros(m_i, d);
+    rng.fill_normal(&mut a.data);
+    let y: Vec<f64> = (0..m_i).map(|_| rng.normal()).collect();
+    let lam = 0.01;
+    let n = 10.0;
+    let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+
+    let got = oracle.grad(&x, &a.data, &y, lam, n).expect("hlo grad");
+
+    // native: n·Aᵀ(Ax − y) + λx
+    let mut resid = a.matvec(&x);
+    for (r, t) in resid.iter_mut().zip(y.iter()) {
+        *r -= t;
+    }
+    let mut want = a.t_matvec(&resid);
+    for j in 0..d {
+        want[j] = n * want[j] + lam * x[j];
+    }
+
+    for j in 0..d {
+        assert!(
+            (got[j] - want[j]).abs() <= 1e-9 * (1.0 + want[j].abs()),
+            "coord {j}: hlo {} vs rust {}",
+            got[j],
+            want[j]
+        );
+    }
+}
+
+#[test]
+fn hlo_ridge_grad_matches_full_problem_stack() {
+    let Some(engine) = engine() else { return };
+    let oracle = HloRidgeOracle::new(&engine).expect("oracle");
+    // The actual paper problem: feed worker 0's shard through PJRT and
+    // compare against Problem::local_grad_into.
+    let p = shiftcomp::problems::Ridge::paper_default(4);
+    let mut rng = Pcg64::new(5);
+    let x: Vec<f64> = (0..p.dim()).map(|_| rng.normal()).collect();
+    let mut want = vec![0.0; p.dim()];
+    p.local_grad_into(0, &x, &mut want);
+
+    // reconstruct worker 0's shard exactly as Ridge::from_data partitions
+    let ds = shiftcomp::data::make_regression(&shiftcomp::data::RegressionOpts {
+        n_samples: 100,
+        n_features: 80,
+        seed: 4,
+        ..Default::default()
+    });
+    let mut part_rng = Pcg64::with_stream(4, 0x9a47);
+    let parts = shiftcomp::data::partition_evenly(100, 10, &mut part_rng);
+    let rows = &parts[0];
+    let mut a = Vec::with_capacity(rows.len() * 80);
+    let mut yv = Vec::with_capacity(rows.len());
+    for &r in rows {
+        a.extend_from_slice(ds.a.row(r));
+        yv.push(ds.y[r]);
+    }
+    let got = oracle.grad(&x, &a, &yv, 0.01, 10.0).expect("hlo grad");
+    for j in 0..p.dim() {
+        assert!(
+            (got[j] - want[j]).abs() <= 1e-8 * (1.0 + want[j].abs()),
+            "coord {j}: {} vs {}",
+            got[j],
+            want[j]
+        );
+    }
+}
+
+#[test]
+fn hlo_shifted_compress_matches_rand_k_semantics() {
+    let Some(engine) = engine() else { return };
+    let kernel = HloShiftedCompress::new(&engine).expect("kernel");
+    let d = kernel.d;
+    let mut rng = Pcg64::new(7);
+    let g: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let h: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+
+    // Rand-K mask with k = 8 → scale d/k; decoded result must equal
+    // h + mask·(g−h)·scale, which is exactly h + Q(g−h) for Rand-K.
+    let k = 8;
+    let idx = rng.subset(d, k);
+    let mut mask = vec![0.0; d];
+    for &i in &idx {
+        mask[i as usize] = 1.0;
+    }
+    let scale = d as f64 / k as f64;
+    let got = kernel.apply(&g, &h, &mask, scale).expect("hlo");
+    for j in 0..d {
+        let want = h[j] + mask[j] * (g[j] - h[j]) * scale;
+        assert!(
+            (got[j] - want).abs() <= 1e-12 * (1.0 + want.abs()),
+            "coord {j}: {} vs {want}",
+            got[j]
+        );
+    }
+    // exactness at the shift: g = h ⇒ out = h bit-for-bit
+    let same = kernel.apply(&h, &h, &mask, scale).expect("hlo");
+    assert_eq!(same, h);
+}
+
+#[test]
+fn hlo_nat_dither_is_on_grid_and_unbiased_shape() {
+    let Some(engine) = engine() else { return };
+    let kernel = HloNatDither::new(&engine).expect("kernel");
+    let d = kernel.d;
+    let s = kernel.s as i32;
+    let mut rng = Pcg64::new(9);
+    let x: Vec<f64> = (0..d).map(|_| rng.normal() * 2.0).collect();
+    let norm = shiftcomp::linalg::nrm2(&x);
+    let u: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+    let out = kernel.quantize(&x, &u, norm).expect("hlo");
+    for (j, &v) in out.iter().enumerate() {
+        if v != 0.0 {
+            let t = v.abs() / norm;
+            let l = t.log2();
+            assert!(
+                (l - l.round()).abs() < 1e-9,
+                "coord {j}: {t} not a binary level"
+            );
+            assert!(l.round() >= (1 - s) as f64 - 1e-9 && l.round() <= 0.0 + 1e-9);
+            assert_eq!(v >= 0.0, x[j] >= 0.0, "sign preserved");
+        }
+    }
+}
+
+#[test]
+fn lm_session_executes_and_losses_are_sane() {
+    let Some(engine) = engine() else { return };
+    let session = LmSession::new(&engine).expect("session");
+    assert!(session.param_count > 3_000_000);
+    let params = session.initial_params().expect("init params");
+    assert_eq!(params.len(), session.param_count);
+
+    let mut rng = Pcg64::new(11);
+    let tokens: Vec<i32> = (0..session.batch * (session.seq + 1))
+        .map(|_| rng.below(session.vocab as u64) as i32)
+        .collect();
+    let (loss, grads) = session.step(&params, &tokens).expect("lm step");
+    // fresh init ⇒ loss ≈ ln(vocab)
+    let expect = (session.vocab as f32).ln();
+    assert!(
+        (loss - expect).abs() < 0.5,
+        "initial loss {loss} vs ln V = {expect}"
+    );
+    assert!(grads.iter().all(|g| g.is_finite()));
+    let gnorm: f32 = grads.iter().map(|g| g * g).sum::<f32>().sqrt();
+    assert!(gnorm > 1e-3, "gradients should be nonzero: {gnorm}");
+
+    // one SGD step reduces the loss on the same batch
+    let params2: Vec<f32> = params
+        .iter()
+        .zip(grads.iter())
+        .map(|(p, g)| p - 0.5 * g)
+        .collect();
+    let (loss2, _) = session.step(&params2, &tokens).expect("lm step 2");
+    assert!(loss2 < loss, "descent failed: {loss} → {loss2}");
+}
+
+#[test]
+fn lm_compressed_round_preserves_descent() {
+    // Mini end-to-end: one DIANA-compressed round through the real
+    // artifact must still make progress comparable to the dense round.
+    let Some(engine) = engine() else { return };
+    let session = LmSession::new(&engine).expect("session");
+    let params = session.initial_params().expect("init");
+    let p = session.param_count;
+
+    let mut rng = Pcg64::new(13);
+    let tokens: Vec<i32> = (0..session.batch * (session.seq + 1))
+        .map(|_| rng.below(session.vocab as u64) as i32)
+        .collect();
+    let (loss0, grads) = session.step(&params, &tokens).expect("step");
+
+    // compress the gradient with rand-k(1%) + zero shift
+    let comp = RandK::with_q(p, 0.05);
+    let g64: Vec<f64> = grads.iter().map(|&v| v as f64).collect();
+    let decoded = comp.compress(&mut rng, &g64).decode();
+    let params2: Vec<f32> = params
+        .iter()
+        .zip(decoded.iter())
+        .map(|(pp, g)| pp - 0.25 * (*g as f32))
+        .collect();
+    let (loss1, _) = session.step(&params2, &tokens).expect("step");
+    assert!(
+        loss1 < loss0 + 0.05,
+        "compressed step exploded: {loss0} → {loss1}"
+    );
+}

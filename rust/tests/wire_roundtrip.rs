@@ -1,0 +1,160 @@
+//! Exhaustive wire-format property tests on hand-constructed packets
+//! (beyond what compressors happen to emit), including adversarial inputs.
+
+use shiftcomp::compressors::{Packet, ValPrec};
+use shiftcomp::util::proptest_lite::{run, Gen};
+use shiftcomp::wire;
+
+fn random_packet(g: &mut Gen) -> Packet {
+    let d = g.usize_in(1, 300);
+    match g.usize_in(0, 6) {
+        0 => Packet::Dense(g.vec_mixed_scale(d)),
+        1 => {
+            let k = g.usize_in(0, d);
+            let mut idx: Vec<u32> = Vec::new();
+            let mut cur = 0u32;
+            for _ in 0..k {
+                let step = g.usize_in(1, 3) as u32;
+                if (cur + step) as usize > d {
+                    break;
+                }
+                cur += step;
+                idx.push(cur - 1);
+            }
+            let vals = g.vec_mixed_scale(idx.len());
+            Packet::Sparse {
+                dim: d as u32,
+                indices: idx,
+                values: vals,
+                scale: g.f64_in(-100.0, 100.0),
+            }
+        }
+        2 => {
+            let s = g.usize_in(1, 15) as u8;
+            Packet::Levels {
+                dim: d as u32,
+                norm: g.f64_in(0.0, 1e6),
+                s,
+                signs: (0..d).map(|_| g.bool()).collect(),
+                levels: (0..d).map(|_| g.usize_in(0, s as usize) as u8).collect(),
+            }
+        }
+        3 => {
+            let s = g.usize_in(1, 200) as u32;
+            Packet::LevelsLinear {
+                dim: d as u32,
+                norm: g.f64_in(0.0, 1e3),
+                s,
+                signs: (0..d).map(|_| g.bool()).collect(),
+                levels: (0..d)
+                    .map(|_| g.usize_in(0, (s as usize).min(255)) as u8)
+                    .collect(),
+            }
+        }
+        4 => Packet::NatExp {
+            dim: d as u32,
+            signs: (0..d).map(|_| g.bool()).collect(),
+            exps: (0..d)
+                .map(|_| {
+                    if g.bool() {
+                        i8::MIN
+                    } else {
+                        g.usize_in(0, 250) as i32 as i8
+                    }
+                })
+                .collect(),
+        },
+        5 => Packet::SignScale {
+            dim: d as u32,
+            scale: g.f64_in(0.0, 1e3),
+            signs: (0..d).map(|_| g.bool()).collect(),
+        },
+        _ => {
+            let mask: Vec<bool> = (0..d).map(|_| g.bool()).collect();
+            let nnz = mask.iter().filter(|&&b| b).count();
+            Packet::TernaryPkt {
+                dim: d as u32,
+                scale: g.f64_in(0.0, 1e3),
+                mask,
+                signs: (0..nnz).map(|_| g.bool()).collect(),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_roundtrip_f64_exact() {
+    run(200, 0x77133, |g| {
+        let pkt = random_packet(g);
+        let bytes = wire::encode(&pkt, ValPrec::F64);
+        let back = wire::decode(&bytes).map_err(|e| e.to_string())?;
+        if back != pkt {
+            return Err(format!("roundtrip mutated {pkt:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_roundtrip_f32_structure_preserved() {
+    run(120, 0x77134, |g| {
+        let pkt = random_packet(g);
+        let bytes = wire::encode(&pkt, ValPrec::F32);
+        let back = wire::decode(&bytes).map_err(|e| e.to_string())?;
+        if back.dim() != pkt.dim() {
+            return Err("dim changed".into());
+        }
+        let a = back.decode();
+        let b = pkt.decode();
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            // f32 rounding tolerance, relative to magnitude
+            let tol = 2e-6 * y.abs().max(1e-30) + 1e-30;
+            // Levels/NatExp/Ternary carry one scale: error compounds once more
+            if (x - y).abs() > tol * 4.0 && (y.abs() > 1e-25) {
+                return Err(format!("coord {i}: {x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truncation_always_errors_or_roundtrips() {
+    // Chopping bytes off a valid message must produce an error, never a
+    // silently wrong packet of the same content length.
+    run(80, 0x77135, |g| {
+        let pkt = random_packet(g);
+        let bytes = wire::encode(&pkt, ValPrec::F64);
+        if bytes.len() <= 1 {
+            return Ok(());
+        }
+        let cut = g.usize_in(1, bytes.len() - 1);
+        match wire::decode(&bytes[..cut]) {
+            Err(_) => Ok(()),
+            Ok(decoded) => {
+                // tolerated only if truncation removed nothing semantic
+                if decoded == pkt {
+                    Ok(())
+                } else {
+                    // a *different* but valid decode is acceptable only when
+                    // the packet's own payload genuinely ends early (e.g.
+                    // trailing zero-length fields); reject everything else
+                    Err(format!(
+                        "truncated decode returned a different packet (cut {cut}/{})",
+                        bytes.len()
+                    ))
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn garbage_never_panics() {
+    run(300, 0x77136, |g| {
+        let len = g.usize_in(0, 64);
+        let junk: Vec<u8> = (0..len).map(|_| g.usize_in(0, 255) as u8).collect();
+        let _ = wire::decode(&junk); // must not panic
+        Ok(())
+    });
+}
