@@ -1,16 +1,28 @@
-//! L3 micro-benchmarks: compressor + wire throughput on the hot path.
-//! `cargo bench --bench perf_compressors`
+//! L3 micro-benchmarks: compressor + wire throughput on the hot path,
+//! including the allocation-free reuse paths (`compress_into`,
+//! `encode_into`/`decode_into`, `add_scaled_into`).
+//!
+//! `cargo bench --bench perf_compressors [-- --smoke]`
 
 use shiftcomp::compressors::{
-    Compressor, NaturalCompression, NaturalDithering, RandK, Ternary, TopK, ValPrec,
+    Compressor, NaturalCompression, NaturalDithering, Packet, RandK, Ternary, TopK, ValPrec,
 };
-use shiftcomp::util::bench::{bb, bench, write_csv};
+use shiftcomp::util::bench::{
+    bb, bench_maybe_smoke, smoke_mode, write_bench_json, write_csv, JsonScenario,
+};
 use shiftcomp::util::rng::Pcg64;
 use shiftcomp::wire;
 
 fn main() {
+    let smoke = smoke_mode();
     let mut rows = Vec::new();
-    for &d in &[80usize, 1_000, 100_000] {
+    let mut json = Vec::new();
+    let dims: &[usize] = if smoke {
+        &[80, 1_000]
+    } else {
+        &[80, 1_000, 100_000]
+    };
+    for &d in dims {
         let mut rng = Pcg64::new(1);
         let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
         let comps: Vec<Box<dyn Compressor>> = vec![
@@ -21,30 +33,55 @@ fn main() {
             Box::new(Ternary::new(d)),
         ];
         for c in &comps {
-            let name = format!("compress {} d={d}", c.name());
+            // allocation-free reuse path (the hot path in the round loop)
             let mut r = Pcg64::new(2);
-            let stats = bench(&name, || {
-                bb(c.compress(&mut r, bb(&x)));
+            let mut pkt = Packet::Zero { dim: d as u32 };
+            let stats = bench_maybe_smoke(&format!("compress_into {} d={d}", c.name()), smoke, || {
+                c.compress_into(&mut r, bb(&x), &mut pkt);
+                bb(&pkt);
             });
             rows.push(format!("{},{},{:.3e}", c.name(), d, stats.median()));
 
-            // encode+decode roundtrip cost
+            // allocating path, for the before/after comparison
+            let mut r = Pcg64::new(2);
+            let stats = bench_maybe_smoke(&format!("compress (alloc) {} d={d}", c.name()), smoke, || {
+                bb(c.compress(&mut r, bb(&x)));
+            });
+            rows.push(format!("alloc-{},{},{:.3e}", c.name(), d, stats.median()));
+
+            // encode+decode roundtrip cost through recycled buffers
             let mut r2 = Pcg64::new(3);
             let pkt = c.compress(&mut r2, &x);
-            let stats = bench(&format!("wire roundtrip {} d={d}", c.name()), || {
-                let bytes = wire::encode(bb(&pkt), ValPrec::F64);
-                bb(wire::decode(&bytes).unwrap());
-            });
+            let mut buf = Vec::new();
+            let mut back = Packet::Zero { dim: d as u32 };
+            let stats =
+                bench_maybe_smoke(&format!("wire roundtrip {} d={d}", c.name()), smoke, || {
+                    wire::encode_into(bb(&pkt), ValPrec::F64, &mut buf);
+                    wire::decode_into(&buf, &mut back).unwrap();
+                    bb(&back);
+                });
             rows.push(format!("wire-{},{},{:.3e}", c.name(), d, stats.median()));
         }
-        // decode-into (allocation-free consumer path)
+
+        // sparse-aware consumption vs dense decode (Rand-K at 10 %)
         let mut r3 = Pcg64::new(4);
         let pkt = RandK::with_q(d, 0.1).compress(&mut r3, &x);
         let mut out = vec![0.0; d];
-        let stats = bench(&format!("decode_into rand-k d={d}"), || {
+        let stats = bench_maybe_smoke(&format!("decode_into rand-k d={d}"), smoke, || {
             pkt.decode_into(bb(&mut out));
         });
         rows.push(format!("decode_into,{},{:.3e}", d, stats.median()));
+        let stats = bench_maybe_smoke(&format!("add_scaled_into rand-k d={d}"), smoke, || {
+            pkt.add_scaled_into(0.1, bb(&mut out));
+        });
+        rows.push(format!("add_scaled_into,{},{:.3e}", d, stats.median()));
+        if d == *dims.last().unwrap() {
+            json.push(JsonScenario::new(
+                format!("consume_randk_d{d}"),
+                stats.median(),
+                Some(pkt.nnz() as f64 / stats.median()),
+            ));
+        }
     }
     write_csv(
         "results/perf_compressors.csv",
@@ -52,5 +89,6 @@ fn main() {
         &rows,
     )
     .expect("csv");
-    println!("\nwritten: results/perf_compressors.csv");
+    write_bench_json("results/BENCH_perf.json", &json).expect("json");
+    println!("\nwritten: results/perf_compressors.csv + results/BENCH_perf.json");
 }

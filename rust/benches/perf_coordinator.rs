@@ -1,56 +1,173 @@
 //! L3 end-to-end round benchmarks: single-process driver vs threaded
-//! coordinator, per-round latency and coordinates/second.
-//! `cargo bench --bench perf_coordinator`
+//! coordinator, per-round latency and coordinates/second, plus the
+//! dense-decode vs sparse-aware aggregation comparison that motivates the
+//! O(nnz) hot path.
+//!
+//! `cargo bench --bench perf_coordinator [-- --smoke]`
+//!
+//! `--smoke` shrinks dimensions/sample counts to fit tier-1 time budgets.
+//! Results go to `results/perf_coordinator.csv` and are merged into the
+//! machine-readable `results/BENCH_perf.json` (scenario → median sec,
+//! coords/s) so the perf trajectory is tracked across PRs.
 
 use std::sync::Arc;
 
 use shiftcomp::algorithms::{Algorithm, DcgdShift};
-use shiftcomp::compressors::RandK;
+use shiftcomp::compressors::{Compressor, RandK};
 use shiftcomp::coordinator::DistributedRunner;
-use shiftcomp::problems::{Problem, Quadratic, Ridge};
-use shiftcomp::util::bench::{bench_slow, write_csv};
+use shiftcomp::linalg::{axpy, zero};
+use shiftcomp::problems::{Problem, Ridge};
+use shiftcomp::util::bench::{
+    bench_maybe_smoke, smoke_mode, write_bench_json, write_csv, JsonScenario,
+};
+use shiftcomp::util::rng::Pcg64;
 
 fn main() {
+    let smoke = smoke_mode();
     let mut rows = Vec::new();
+    let mut json = Vec::new();
 
     // paper-sized problem (d = 80, n = 10)
     {
         let p = Ridge::paper_default(1);
         let mut alg = DcgdShift::diana(&p, RandK::with_q(p.dim(), 0.1), None, 1);
-        let stats = bench_slow("single-loop diana round (ridge d=80 n=10)", || {
+        let stats = bench_maybe_smoke("single-loop diana round (ridge d=80 n=10)", smoke, || {
             alg.step(&p);
         });
         rows.push(format!("single_ridge,{:.3e}", stats.median()));
+        json.push(JsonScenario::new("single_ridge", stats.median(), None));
 
         let pa = Arc::new(Ridge::paper_default(1));
         let mut dist = DistributedRunner::diana(pa.clone(), RandK::with_q(80, 0.1), 1, None);
-        let stats = bench_slow("threaded diana round (ridge d=80 n=10)", || {
+        let stats = bench_maybe_smoke("threaded diana round (ridge d=80 n=10)", smoke, || {
             dist.step(pa.as_ref());
         });
         rows.push(format!("threaded_ridge,{:.3e}", stats.median()));
+        json.push(JsonScenario::new("threaded_ridge", stats.median(), None));
     }
 
-    // larger synthetic problem (d = 20k, n = 8) — wide-vector regime
+    // larger synthetic problem — wide-vector regime (gradient is a cheap
+    // subtraction, so coordinator overheads dominate)
     {
-        let d = 20_000;
-        let p = Quadratic::random(64, 8, 1.0, 10.0, 2); // spectral part small...
-        let _ = p;
-        // gradient cost dominated problems hide coordinator costs; use a
-        // quadratic of modest dim but a wide compressor dim via ridge-like
-        // synthetic: here we time pure compressor+aggregate on d=20k.
-        let pq = WideProblem::new(d, 8, 3);
+        let (d, n) = if smoke { (2_000, 8) } else { (20_000, 8) };
+        let pq = WideProblem::new(d, n, 3);
         let mut alg = DcgdShift::diana(&pq, RandK::with_q(d, 0.01), None, 3);
-        let stats = bench_slow("single-loop diana round (wide d=20k n=8)", || {
-            alg.step(&pq);
-        });
+        let stats = bench_maybe_smoke(
+            &format!("single-loop diana round (wide d={d} n={n})"),
+            smoke,
+            || {
+                alg.step(&pq);
+            },
+        );
         rows.push(format!("single_wide,{:.3e}", stats.median()));
-        let rate = (d * 8) as f64 / stats.median();
+        let rate = (d * n) as f64 / stats.median();
         println!("  → {rate:.3e} coordinate-compressions/s across the fleet");
         rows.push(format!("single_wide_coords_per_s,{rate:.3e}"));
+        json.push(JsonScenario::new(
+            format!("single_wide_d{d}n{n}"),
+            stats.median(),
+            Some(rate),
+        ));
+    }
+
+    // ------------------------------------------------------- wide-sparse
+    // The tentpole scenario: d = 200k, Rand-K at K = 0.5 % (k = 1000),
+    // n = 16. End-to-end round latency plus an isolated aggregation
+    // comparison: dense decode + axpy (the old master path) vs
+    // Packet::add_scaled_into (the sparse-aware path).
+    {
+        let (d, n) = if smoke { (20_000, 4) } else { (200_000, 16) };
+        let q = 0.005;
+        let pq = WideProblem::new(d, n, 7);
+        let mut alg = DcgdShift::diana(&pq, RandK::with_q(d, q), None, 7);
+        let stats = bench_maybe_smoke(
+            &format!("single-loop diana round (sparse d={d} K=0.5% n={n})"),
+            smoke,
+            || {
+                alg.step(&pq);
+            },
+        );
+        rows.push(format!("single_sparse_wide,{:.3e}", stats.median()));
+        let rate = (d * n) as f64 / stats.median();
+        println!("  → {rate:.3e} coords/s end-to-end");
+        json.push(JsonScenario::new(
+            format!("round_sparse_wide_d{d}n{n}"),
+            stats.median(),
+            Some(rate),
+        ));
+
+        let pa = Arc::new(WideProblem::new(d, n, 7));
+        let mut dist = DistributedRunner::diana(pa.clone(), RandK::with_q(d, q), 7, None);
+        let stats = bench_maybe_smoke(
+            &format!("threaded diana round (sparse d={d} K=0.5% n={n})"),
+            smoke,
+            || {
+                dist.step(pa.as_ref());
+            },
+        );
+        rows.push(format!("threaded_sparse_wide,{:.3e}", stats.median()));
+        json.push(JsonScenario::new(
+            format!("round_sparse_wide_threaded_d{d}n{n}"),
+            stats.median(),
+            Some((d * n) as f64 / stats.median()),
+        ));
+
+        // isolated aggregation: one fleet of Rand-K packets, two consumers
+        let comp = RandK::with_q(d, q);
+        let mut rng = Pcg64::new(11);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let pkts: Vec<_> = (0..n).map(|_| comp.compress(&mut rng, &x)).collect();
+        let inv_n = 1.0 / n as f64;
+        let mut est = vec![0.0; d];
+        let mut decoded = vec![0.0; d];
+
+        let dense = bench_maybe_smoke(
+            &format!("aggregate dense-decode baseline (d={d} n={n})"),
+            smoke,
+            || {
+                zero(&mut est);
+                for pkt in &pkts {
+                    pkt.decode_into(&mut decoded);
+                    axpy(inv_n, &decoded, &mut est);
+                }
+            },
+        );
+        let dense_rate = (d * n) as f64 / dense.median();
+        rows.push(format!("agg_dense,{:.3e}", dense.median()));
+        json.push(JsonScenario::new(
+            format!("agg_dense_d{d}n{n}"),
+            dense.median(),
+            Some(dense_rate),
+        ));
+
+        let sparse = bench_maybe_smoke(
+            &format!("aggregate sparse-aware add_scaled (d={d} n={n})"),
+            smoke,
+            || {
+                zero(&mut est);
+                for pkt in &pkts {
+                    pkt.add_scaled_into(inv_n, &mut est);
+                }
+            },
+        );
+        let sparse_rate = (d * n) as f64 / sparse.median();
+        rows.push(format!("agg_sparse,{:.3e}", sparse.median()));
+        json.push(JsonScenario::new(
+            format!("agg_sparse_d{d}n{n}"),
+            sparse.median(),
+            Some(sparse_rate),
+        ));
+        println!(
+            "  → sparse-aware aggregation speedup: {:.1}× ({:.3e} vs {:.3e} coords/s)",
+            sparse_rate / dense_rate,
+            sparse_rate,
+            dense_rate
+        );
     }
 
     write_csv("results/perf_coordinator.csv", "name,median_sec", &rows).expect("csv");
-    println!("\nwritten: results/perf_coordinator.csv");
+    write_bench_json("results/BENCH_perf.json", &json).expect("json");
+    println!("\nwritten: results/perf_coordinator.csv + results/BENCH_perf.json");
 }
 
 /// A cheap synthetic problem with a wide parameter vector: gradient =
@@ -66,7 +183,7 @@ struct WideProblem {
 
 impl WideProblem {
     fn new(d: usize, n: usize, seed: u64) -> Self {
-        let mut rng = shiftcomp::util::rng::Pcg64::new(seed);
+        let mut rng = Pcg64::new(seed);
         let targets: Vec<Vec<f64>> = (0..n)
             .map(|_| (0..d).map(|_| rng.normal()).collect())
             .collect();

@@ -12,11 +12,30 @@
 //! aggregate shift `h^k` is maintained incrementally from the same wire
 //! messages the workers send (never from private worker state), so the
 //! driver is faithful to what a real deployment can know.
+//!
+//! # Zero-allocation round contract
+//!
+//! `step` is two-phase, mirroring [`crate::coordinator::DistributedRunner`]
+//! op for op (the coordinator tests pin the trajectories to be
+//! bit-identical):
+//!
+//! 1. **worker phase** — each slot computes its gradient, compresses into
+//!    its *recycled* scratch packets ([`Compressor::compress_into`]) and
+//!    applies its own shift update straight from the packets
+//!    ([`Packet::add_scaled_into`]);
+//! 2. **master phase** — the gradient estimator is seeded from the
+//!    maintained aggregate `h_sum` in one O(d) pass, then each worker's
+//!    packets are folded in at O(nnz).
+//!
+//! Every buffer (gradients, diffs, packets, the estimator, `h_sum`) is
+//! preallocated at construction; steady-state rounds perform **zero heap
+//! allocations** (enforced by `tests/alloc_free.rs`). Aggregation cost is
+//! O(d + Σᵢ nnzᵢ) per round instead of the former O(n·d).
 
 use crate::algorithms::shift_rules::ShiftRule;
 use crate::algorithms::{Algorithm, StepStats};
 use crate::compressors::{Compressor, Packet, ValPrec};
-use crate::linalg::{axpy, sub_into, zero};
+use crate::linalg::{ax_into, axpy, sub_into};
 use crate::problems::Problem;
 use crate::theory;
 use crate::util::rng::Pcg64;
@@ -28,11 +47,14 @@ struct WorkerSlot {
     /// current shift h_i^k
     h: Vec<f64>,
     rng: Pcg64,
-    // scratch buffers (allocation-free hot path)
+    // scratch buffers and recycled packets (allocation-free hot path)
     grad: Vec<f64>,
     diff: Vec<f64>,
-    decoded: Vec<f64>,
     update: Vec<f64>,
+    q_pkt: Packet,
+    c_pkt: Packet,
+    /// Rand-DIANA: did this round refresh the shift?
+    refreshed: bool,
 }
 
 pub struct DcgdShift {
@@ -42,12 +64,13 @@ pub struct DcgdShift {
     /// wire precision used for bit accounting inside `step`
     pub prec: ValPrec,
     workers: Vec<WorkerSlot>,
-    /// master's aggregate shift h^k = (1/n) Σ h_i^k
-    h_master: Vec<f64>,
-    // master scratch
-    m_sum: Vec<f64>,
-    g: Vec<f64>,
-    h_delta: Vec<f64>,
+    /// master's maintained aggregate Σᵢ h_i^k over workers with a non-STAR
+    /// rule (STAR rebuilds its shift from the current gradient every round
+    /// and contributes densely per worker; see `step`). Updated only from
+    /// wire-observable content, never from private worker state.
+    h_sum: Vec<f64>,
+    /// gradient estimator g^k (master scratch)
+    est: Vec<f64>,
 }
 
 impl DcgdShift {
@@ -200,9 +223,15 @@ impl DcgdShift {
         assert_eq!(qs.len(), n);
         assert_eq!(shifts.len(), n);
         let mut root = Pcg64::with_stream(seed, 0xa160);
-        let mut h_master = vec![0.0; d];
-        for h in &shifts {
-            axpy(1.0 / n as f64, h, &mut h_master);
+        // Σ h_i over non-STAR workers (STAR shifts are rebuilt every round
+        // and aggregated densely; keeping them out of h_sum keeps the
+        // maintained sum exact). Worker order matters for bit-identity with
+        // the threaded coordinator.
+        let mut h_sum = vec![0.0; d];
+        for (rule, h) in rules.iter().zip(shifts.iter()) {
+            if !matches!(rule, ShiftRule::Star { .. }) {
+                axpy(1.0, h, &mut h_sum);
+            }
         }
         let workers = qs
             .into_iter()
@@ -216,8 +245,10 @@ impl DcgdShift {
                 rng: root.stream(i as u64 + 1),
                 grad: vec![0.0; d],
                 diff: vec![0.0; d],
-                decoded: vec![0.0; d],
                 update: vec![0.0; d],
+                q_pkt: Packet::Zero { dim: d as u32 },
+                c_pkt: Packet::Zero { dim: d as u32 },
+                refreshed: false,
             })
             .collect();
         Self {
@@ -226,10 +257,8 @@ impl DcgdShift {
             gamma,
             prec: ValPrec::F64,
             workers,
-            h_master,
-            m_sum: vec![0.0; d],
-            g: vec![0.0; d],
-            h_delta: vec![0.0; d],
+            h_sum,
+            est: vec![0.0; d],
         }
     }
 
@@ -285,28 +314,19 @@ impl Algorithm for DcgdShift {
         let inv_n = 1.0 / n as f64;
         let mut bits_up: u64 = 0;
         let mut bits_refresh: u64 = 0;
-        // g^k = (1/n) Σ [h_i^{used} + decoded messages] — accumulated
-        // per-worker so every rule (including STAR, whose shift is rebuilt
-        // from the *current* gradient, cf. B.3) uses the same-round shift.
-        zero(&mut self.m_sum);
-        // h^{k+1} master-side bookkeeping (observable from wire content).
-        zero(&mut self.h_delta);
-        let h_master_delta = &mut self.h_delta;
 
+        // ---- phase 1: workers (mirrors coordinator::worker_loop op for op)
         for (wi, w) in self.workers.iter_mut().enumerate() {
             // line 6: local gradient
             p.local_grad_into(wi, &self.x, &mut w.grad);
+            w.refreshed = false;
 
             match &mut w.rule {
                 // -------------------------------------------------- Fixed
                 ShiftRule::Fixed => {
                     sub_into(&w.grad, &w.h, &mut w.diff);
-                    let pkt = w.q.compress(&mut w.rng, &w.diff);
-                    bits_up += pkt.payload_bits(self.prec);
-                    pkt.decode_into(&mut w.decoded);
-                    // contribution: h_i + m_i
-                    axpy(inv_n, &w.h, &mut self.m_sum);
-                    axpy(inv_n, &w.decoded, &mut self.m_sum);
+                    w.q.compress_into(&mut w.rng, &w.diff, &mut w.q_pkt);
+                    bits_up += w.q_pkt.payload_bits(self.prec);
                     // h unchanged
                 }
                 // --------------------------------------------------- Star
@@ -314,91 +334,95 @@ impl Algorithm for DcgdShift {
                     // h_i^k = ∇f_i(x*) + C_i(∇f_i(x^k) − ∇f_i(x*))  (B.3:
                     // rebuilt from the current gradient every round)
                     let gs = p.grad_star(wi);
-                    let c_pkt: Option<Packet> = match c {
-                        Some(cc) => {
-                            sub_into(&w.grad, gs, &mut w.diff);
-                            let pkt = cc.compress(&mut w.rng, &w.diff);
-                            bits_up += pkt.payload_bits(self.prec);
-                            Some(pkt)
-                        }
-                        None => None,
-                    };
-                    // h_new built in the scratch buffer; h_old stays in w.h
-                    w.update.copy_from_slice(gs);
-                    if let Some(pkt) = &c_pkt {
-                        pkt.decode_into(&mut w.decoded);
-                        axpy(1.0, &w.decoded, &mut w.update);
+                    if let Some(cc) = c {
+                        sub_into(&w.grad, gs, &mut w.diff);
+                        cc.compress_into(&mut w.rng, &w.diff, &mut w.c_pkt);
+                        bits_up += w.c_pkt.payload_bits(self.prec);
+                        // h_new built in scratch, then swapped in
+                        w.update.copy_from_slice(gs);
+                        w.c_pkt.add_scaled_into(1.0, &mut w.update);
+                        std::mem::swap(&mut w.h, &mut w.update);
+                    } else {
+                        w.h.copy_from_slice(gs);
                     }
-                    for j in 0..d {
-                        h_master_delta[j] += inv_n * (w.update[j] - w.h[j]);
-                    }
-                    std::mem::swap(&mut w.h, &mut w.update);
-                    // m_i = Q_i(∇f_i − h_i^k); contribution h_i^k + m_i
+                    // m_i = Q_i(∇f_i − h_i^k)
                     sub_into(&w.grad, &w.h, &mut w.diff);
-                    let pkt = w.q.compress(&mut w.rng, &w.diff);
-                    bits_up += pkt.payload_bits(self.prec);
-                    pkt.decode_into(&mut w.decoded);
-                    axpy(inv_n, &w.h, &mut self.m_sum);
-                    axpy(inv_n, &w.decoded, &mut self.m_sum);
+                    w.q.compress_into(&mut w.rng, &w.diff, &mut w.q_pkt);
+                    bits_up += w.q_pkt.payload_bits(self.prec);
                 }
                 // -------------------------------------------------- DIANA
                 ShiftRule::Diana { alpha, c } => {
                     // v = ∇f_i − h_i^k
                     sub_into(&w.grad, &w.h, &mut w.diff);
-                    // c_i^k = C_i(v) (optional); update = (c + q) decoded
-                    zero(&mut w.update);
                     if let Some(cc) = c {
-                        let c_pkt = cc.compress(&mut w.rng, &w.diff);
-                        bits_up += c_pkt.payload_bits(self.prec);
-                        c_pkt.decode_into(&mut w.decoded);
-                        w.update.copy_from_slice(&w.decoded);
-                        // residual v − c
-                        for j in 0..d {
-                            w.diff[j] -= w.decoded[j];
-                        }
+                        // c_i^k = C_i(v); residual v − c stays in diff
+                        cc.compress_into(&mut w.rng, &w.diff, &mut w.c_pkt);
+                        bits_up += w.c_pkt.payload_bits(self.prec);
+                        w.c_pkt.add_scaled_into(-1.0, &mut w.diff);
                     }
                     // m_i^k = Q_i(v − c)
-                    let q_pkt = w.q.compress(&mut w.rng, &w.diff);
-                    bits_up += q_pkt.payload_bits(self.prec);
-                    q_pkt.decode_into(&mut w.decoded);
-                    axpy(1.0, &w.decoded, &mut w.update);
-                    // contribution: h_i^k + (c + q)  (estimator (5))
-                    axpy(inv_n, &w.h, &mut self.m_sum);
-                    axpy(inv_n, &w.update, &mut self.m_sum);
-                    // shift learning: h_i += α (c + q)
-                    axpy(*alpha, &w.update, &mut w.h);
-                    for j in 0..d {
-                        h_master_delta[j] += inv_n * *alpha * w.update[j];
+                    w.q.compress_into(&mut w.rng, &w.diff, &mut w.q_pkt);
+                    bits_up += w.q_pkt.payload_bits(self.prec);
+                    // shift learning h_i += α(c + q), straight from the
+                    // packets at O(nnz)
+                    if c.is_some() {
+                        w.c_pkt.add_scaled_into(*alpha, &mut w.h);
                     }
+                    w.q_pkt.add_scaled_into(*alpha, &mut w.h);
                 }
                 // --------------------------------------------- Rand-DIANA
                 ShiftRule::RandDiana { p: pr } => {
                     sub_into(&w.grad, &w.h, &mut w.diff);
-                    let pkt = w.q.compress(&mut w.rng, &w.diff);
-                    bits_up += pkt.payload_bits(self.prec);
-                    pkt.decode_into(&mut w.decoded);
-                    // contribution: h_i^k + m_i
-                    axpy(inv_n, &w.h, &mut self.m_sum);
-                    axpy(inv_n, &w.decoded, &mut self.m_sum);
-                    // w_i^{k+1} = x^k w.p. p — refresh ⇒ h_i^{k+1} = ∇f_i(x^k)
-                    // = the gradient just computed; the worker uploads the
-                    // new shift (dense, rare).
+                    w.q.compress_into(&mut w.rng, &w.diff, &mut w.q_pkt);
+                    bits_up += w.q_pkt.payload_bits(self.prec);
+                    // w_i^{k+1} = x^k w.p. p — refresh ⇒ h_i^{k+1} =
+                    // ∇f_i(x^k); the copy is deferred to the master phase
+                    // (which needs h_i^k to update h_sum), matching what the
+                    // wire-observing distributed master reconstructs.
                     if w.rng.bernoulli(*pr) {
-                        for j in 0..d {
-                            h_master_delta[j] += inv_n * (w.grad[j] - w.h[j]);
-                        }
-                        w.h.copy_from_slice(&w.grad);
+                        w.refreshed = true;
                         bits_refresh += d as u64 * self.prec.bits();
                     }
                 }
             }
         }
 
-        // master: g^k = (1/n) Σ (h_i + m_i); gradient step.
-        self.g.copy_from_slice(&self.m_sum);
-        axpy(-self.gamma, &self.g, &mut self.x);
-        // h^{k+1}
-        axpy(1.0, &h_master_delta, &mut self.h_master);
+        // ---- phase 2: master aggregation (mirrors DistributedRunner::step)
+        // g^k = (1/n) Σ (h_i^{used} + m_i): seed from the maintained h_sum
+        // in one O(d) pass, then fold packets in at O(nnz).
+        ax_into(inv_n, &self.h_sum, &mut self.est);
+        for w in self.workers.iter_mut() {
+            match &w.rule {
+                ShiftRule::Fixed => {
+                    w.q_pkt.add_scaled_into(inv_n, &mut self.est);
+                }
+                ShiftRule::Star { .. } => {
+                    // same-round rebuilt shift, aggregated densely (STAR is
+                    // the paper's "impractical but insightful" method)
+                    axpy(inv_n, &w.h, &mut self.est);
+                    w.q_pkt.add_scaled_into(inv_n, &mut self.est);
+                }
+                ShiftRule::Diana { alpha, c } => {
+                    if c.is_some() {
+                        w.c_pkt.add_scaled_into(inv_n, &mut self.est);
+                        w.c_pkt.add_scaled_into(*alpha, &mut self.h_sum);
+                    }
+                    w.q_pkt.add_scaled_into(inv_n, &mut self.est);
+                    w.q_pkt.add_scaled_into(*alpha, &mut self.h_sum);
+                }
+                ShiftRule::RandDiana { .. } => {
+                    w.q_pkt.add_scaled_into(inv_n, &mut self.est);
+                    if w.refreshed {
+                        for j in 0..d {
+                            self.h_sum[j] += w.grad[j] - w.h[j];
+                        }
+                        w.h.copy_from_slice(&w.grad);
+                    }
+                }
+            }
+        }
+        // gradient step (no clone: est and x are disjoint buffers)
+        axpy(-self.gamma, &self.est, &mut self.x);
 
         StepStats {
             bits_up,
@@ -619,7 +643,7 @@ mod tests {
     }
 
     #[test]
-    fn master_shift_tracks_worker_mean() {
+    fn master_shift_sum_tracks_workers() {
         let p = ridge();
         let mut alg = DcgdShift::rand_diana(&p, RandK::with_q(p.dim(), 0.5), Some(0.3), 23);
         for _ in 0..200 {
@@ -627,11 +651,12 @@ mod tests {
         }
         let d = p.dim();
         let n = p.n_workers();
-        let mut mean = vec![0.0; d];
+        let mut sum = vec![0.0; d];
         for w in 0..n {
-            crate::linalg::axpy(1.0 / n as f64, alg.shift(w), &mut mean);
+            crate::linalg::axpy(1.0, alg.shift(w), &mut sum);
         }
-        let diff = crate::linalg::dist_sq(&mean, &alg.h_master).sqrt();
+        let diff = crate::linalg::dist_sq(&sum, &alg.h_sum).sqrt()
+            / crate::linalg::nrm2(&sum).max(1e-12);
         assert!(diff < 1e-9, "master shift drift {diff}");
     }
 }

@@ -17,7 +17,7 @@
 //! eliminating the compression neighborhood entirely.
 
 use crate::algorithms::{Algorithm, StepStats};
-use crate::compressors::{Compressor, ValPrec};
+use crate::compressors::{Compressor, Packet, ValPrec};
 use crate::linalg::{axpy, zero};
 use crate::problems::Problem;
 use crate::theory;
@@ -34,7 +34,8 @@ pub struct Gdci {
     rngs: Vec<Pcg64>,
     grad: Vec<f64>,
     t_buf: Vec<f64>,
-    decoded: Vec<f64>,
+    /// recycled compression scratch (workers are driven sequentially)
+    pkt: Packet,
     mix: Vec<f64>,
 }
 
@@ -81,7 +82,7 @@ impl Gdci {
             rngs: (0..n).map(|i| root.stream(i as u64 + 1)).collect(),
             grad: vec![0.0; d],
             t_buf: vec![0.0; d],
-            decoded: vec![0.0; d],
+            pkt: Packet::Zero { dim: d as u32 },
             mix: vec![0.0; d],
         }
     }
@@ -114,10 +115,10 @@ impl Algorithm for Gdci {
             for j in 0..d {
                 self.t_buf[j] = self.x[j] - self.gamma * self.grad[j];
             }
-            let pkt = self.qs[i].compress(&mut self.rngs[i], &self.t_buf);
-            bits_up += pkt.payload_bits(self.prec);
-            pkt.decode_into(&mut self.decoded);
-            axpy(inv_n, &self.decoded, &mut self.mix);
+            self.qs[i].compress_into(&mut self.rngs[i], &self.t_buf, &mut self.pkt);
+            bits_up += self.pkt.payload_bits(self.prec);
+            // sparse-aware O(nnz) aggregation, no dense decode
+            self.pkt.add_scaled_into(inv_n, &mut self.mix);
         }
         // x^{k+1} = (1−η) x + η mix
         for j in 0..d {
@@ -147,7 +148,8 @@ pub struct VrGdci {
     h_master: Vec<f64>,
     grad: Vec<f64>,
     t_buf: Vec<f64>,
-    decoded: Vec<f64>,
+    /// recycled compression scratch (workers are driven sequentially)
+    pkt: Packet,
     delta_sum: Vec<f64>,
 }
 
@@ -183,7 +185,7 @@ impl VrGdci {
             h_master: vec![0.0; d],
             grad: vec![0.0; d],
             t_buf: vec![0.0; d],
-            decoded: vec![0.0; d],
+            pkt: Packet::Zero { dim: d as u32 },
             delta_sum: vec![0.0; d],
         }
     }
@@ -220,12 +222,11 @@ impl Algorithm for VrGdci {
             for j in 0..d {
                 self.t_buf[j] = self.x[j] - self.gamma * self.grad[j] - self.h[i][j];
             }
-            let pkt = self.qs[i].compress(&mut self.rngs[i], &self.t_buf);
-            bits_up += pkt.payload_bits(self.prec);
-            pkt.decode_into(&mut self.decoded);
-            // h_i^{k+1} = h_i^k + α δ_i
-            axpy(self.alpha, &self.decoded, &mut self.h[i]);
-            axpy(inv_n, &self.decoded, &mut self.delta_sum);
+            self.qs[i].compress_into(&mut self.rngs[i], &self.t_buf, &mut self.pkt);
+            bits_up += self.pkt.payload_bits(self.prec);
+            // h_i^{k+1} = h_i^k + α δ_i — applied at O(nnz) from the packet
+            self.pkt.add_scaled_into(self.alpha, &mut self.h[i]);
+            self.pkt.add_scaled_into(inv_n, &mut self.delta_sum);
         }
         // master: Δ = δ + h^k; x = (1−η)x + ηΔ; h^{k+1} = h^k + αδ
         for j in 0..d {

@@ -6,6 +6,15 @@ use crate::compressors::Compressor;
 use crate::linalg::nrm1;
 use crate::util::rng::Pcg64;
 
+thread_local! {
+    /// Selection scratch for [`TopK::compress_into`]: the d-length index
+    /// permutation used by `select_nth_unstable_by`. Thread-local so the
+    /// (immutable) compressor can recycle it across rounds — part of the
+    /// zero-allocation round contract (see `compressors::packet`).
+    static TOPK_ORDER: std::cell::RefCell<Vec<u32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
 // ---------------------------------------------------------------------- Zero
 
 /// The zero operator `O`: maps everything to 0. This is the `C_i` of plain
@@ -32,6 +41,10 @@ impl Compressor for ZeroCompressor {
     fn compress(&self, _rng: &mut Pcg64, x: &[f64]) -> Packet {
         assert_eq!(x.len(), self.d);
         Packet::Zero { dim: self.d as u32 }
+    }
+    fn compress_into(&self, _rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
+        assert_eq!(x.len(), self.d);
+        *out = Packet::Zero { dim: self.d as u32 };
     }
     fn omega(&self) -> Option<f64> {
         None // biased (E C(x) = 0 ≠ x)
@@ -73,25 +86,49 @@ impl Compressor for TopK {
     fn dim(&self) -> usize {
         self.d
     }
-    fn compress(&self, _rng: &mut Pcg64, x: &[f64]) -> Packet {
+    fn compress(&self, rng: &mut Pcg64, x: &[f64]) -> Packet {
+        let mut out = Packet::Zero { dim: self.d as u32 };
+        self.compress_into(rng, x, &mut out);
+        out
+    }
+    fn compress_into(&self, _rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
         assert_eq!(x.len(), self.d);
-        // Partial selection of the K largest |x_i|.
-        let mut order: Vec<u32> = (0..self.d as u32).collect();
-        order.select_nth_unstable_by(self.k.saturating_sub(1), |&a, &b| {
-            x[b as usize]
-                .abs()
-                .partial_cmp(&x[a as usize].abs())
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
-        let mut indices: Vec<u32> = order[..self.k].to_vec();
-        indices.sort_unstable();
-        let values: Vec<f64> = indices.iter().map(|&i| x[i as usize]).collect();
-        Packet::Sparse {
-            dim: self.d as u32,
+        if !matches!(out, Packet::Sparse { .. }) {
+            *out = Packet::Sparse {
+                dim: 0,
+                indices: Vec::new(),
+                values: Vec::new(),
+                scale: 0.0,
+            };
+        }
+        let Packet::Sparse {
+            dim,
             indices,
             values,
-            scale: 1.0,
-        }
+            scale,
+        } = out
+        else {
+            unreachable!()
+        };
+        *dim = self.d as u32;
+        *scale = 1.0;
+        // Partial selection of the K largest |x_i| in recycled scratch.
+        TOPK_ORDER.with(|o| {
+            let mut order = o.borrow_mut();
+            order.clear();
+            order.extend(0..self.d as u32);
+            order.select_nth_unstable_by(self.k.saturating_sub(1), |&a, &b| {
+                x[b as usize]
+                    .abs()
+                    .partial_cmp(&x[a as usize].abs())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            indices.clear();
+            indices.extend_from_slice(&order[..self.k]);
+        });
+        indices.sort_unstable();
+        values.clear();
+        values.extend(indices.iter().map(|&i| x[i as usize]));
     }
     fn omega(&self) -> Option<f64> {
         None // biased
@@ -128,15 +165,27 @@ impl Compressor for SignScaled {
     fn dim(&self) -> usize {
         self.d
     }
-    fn compress(&self, _rng: &mut Pcg64, x: &[f64]) -> Packet {
+    fn compress(&self, rng: &mut Pcg64, x: &[f64]) -> Packet {
+        let mut out = Packet::Zero { dim: self.d as u32 };
+        self.compress_into(rng, x, &mut out);
+        out
+    }
+    fn compress_into(&self, _rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
         assert_eq!(x.len(), self.d);
-        let scale = nrm1(x) / self.d as f64;
-        let signs = x.iter().map(|&v| v >= 0.0).collect();
-        Packet::SignScale {
-            dim: self.d as u32,
-            scale,
-            signs,
+        if !matches!(out, Packet::SignScale { .. }) {
+            *out = Packet::SignScale {
+                dim: 0,
+                scale: 0.0,
+                signs: Vec::new(),
+            };
         }
+        let Packet::SignScale { dim, scale, signs } = out else {
+            unreachable!()
+        };
+        *dim = self.d as u32;
+        *scale = nrm1(x) / self.d as f64;
+        signs.clear();
+        signs.extend(x.iter().map(|&v| v >= 0.0));
     }
     fn omega(&self) -> Option<f64> {
         None

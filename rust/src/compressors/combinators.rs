@@ -187,6 +187,10 @@ impl Compressor for Scaled {
         let pkt = self.inner.compress(rng, x);
         scale_packet(pkt, self.alpha)
     }
+    fn compress_into(&self, rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
+        self.inner.compress_into(rng, x, out);
+        scale_packet_mut(out, self.alpha);
+    }
     fn omega(&self) -> Option<f64> {
         // α·Q is biased for α ≠ 1 (E[αQ(x)] = αx).
         if self.alpha == 1.0 {
@@ -215,93 +219,51 @@ impl Compressor for Scaled {
 }
 
 /// Multiply a packet's decoded value by `a` without densifying.
-pub fn scale_packet(pkt: Packet, a: f64) -> Packet {
+pub fn scale_packet(mut pkt: Packet, a: f64) -> Packet {
+    scale_packet_mut(&mut pkt, a);
+    pkt
+}
+
+/// In-place variant of [`scale_packet`] for the zero-allocation hot path:
+/// every variant except [`Packet::NatExp`] is rescaled without touching the
+/// heap (NatExp has no scale knob on its power-of-two grid, so general
+/// scaling densifies it — documented allocation).
+pub fn scale_packet_mut(pkt: &mut Packet, a: f64) {
+    if matches!(pkt, Packet::NatExp { .. }) {
+        // general scaling leaves the power-of-two grid; densify
+        let mut v = pkt.decode();
+        for x in v.iter_mut() {
+            *x *= a;
+        }
+        *pkt = Packet::Dense(v);
+        return;
+    }
+    let flip = a < 0.0;
     match pkt {
-        Packet::Dense(mut v) => {
+        Packet::Dense(v) => {
             for x in v.iter_mut() {
                 *x *= a;
             }
-            Packet::Dense(v)
         }
-        Packet::Sparse {
-            dim,
-            indices,
-            values,
-            scale,
-        } => Packet::Sparse {
-            dim,
-            indices,
-            values,
-            scale: scale * a,
-        },
-        Packet::Levels {
-            dim,
-            norm,
-            s,
-            signs,
-            levels,
-        } => Packet::Levels {
-            dim,
-            norm: norm * a.abs(),
-            s,
-            signs: if a >= 0.0 {
-                signs
-            } else {
-                signs.into_iter().map(|b| !b).collect()
-            },
-            levels,
-        },
-        Packet::LevelsLinear {
-            dim,
-            norm,
-            s,
-            signs,
-            levels,
-        } => Packet::LevelsLinear {
-            dim,
-            norm: norm * a.abs(),
-            s,
-            signs: if a >= 0.0 {
-                signs
-            } else {
-                signs.into_iter().map(|b| !b).collect()
-            },
-            levels,
-        },
-        Packet::NatExp { dim, signs, exps } => {
-            // general scaling leaves the power-of-two grid; densify
-            let tmp = Packet::NatExp { dim, signs, exps };
-            let mut v = tmp.decode();
-            for x in v.iter_mut() {
-                *x *= a;
+        Packet::Sparse { scale, .. } => *scale *= a,
+        Packet::Levels { norm, signs, .. } | Packet::LevelsLinear { norm, signs, .. } => {
+            *norm *= a.abs();
+            if flip {
+                for b in signs.iter_mut() {
+                    *b = !*b;
+                }
             }
-            Packet::Dense(v)
         }
-        Packet::SignScale { dim, scale, signs } => Packet::SignScale {
-            dim,
-            scale: scale * a.abs(),
-            signs: if a >= 0.0 {
-                signs
-            } else {
-                signs.into_iter().map(|b| !b).collect()
-            },
-        },
-        Packet::TernaryPkt {
-            dim,
-            scale,
-            mask,
-            signs,
-        } => Packet::TernaryPkt {
-            dim,
-            scale: scale * a.abs(),
-            mask,
-            signs: if a >= 0.0 {
-                signs
-            } else {
-                signs.into_iter().map(|b| !b).collect()
-            },
-        },
-        Packet::Zero { dim } => Packet::Zero { dim },
+        Packet::SignScale { scale, signs, .. } | Packet::TernaryPkt { scale, signs, .. } => {
+            *scale *= a.abs();
+            if flip {
+                for b in signs.iter_mut() {
+                    *b = !*b;
+                }
+            }
+        }
+        Packet::NatExp { .. } => unreachable!("handled above"),
+        Packet::Zero { .. } => {}
     }
 }
 
@@ -473,6 +435,29 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn scaled_compress_into_matches_compress() {
+        let d = 12;
+        let x = test_vec(d, 23);
+        for &a in &[0.2, -1.5] {
+            let c = Scaled::new(a, Box::new(RandK::new(d, 3)));
+            let mut r1 = Pcg64::new(9);
+            let mut r2 = r1.clone();
+            let fresh = c.compress(&mut r1, &x);
+            // dirty scratch of a mismatched variant
+            let mut scratch = Packet::Zero { dim: d as u32 };
+            c.compress_into(&mut r2, &x, &mut scratch);
+            assert_eq!(fresh, scratch);
+            // nat-comp inner: scaling densifies on both paths identically
+            let c = Scaled::new(a, Box::new(crate::compressors::NaturalCompression::new(d)));
+            let mut r1 = Pcg64::new(10);
+            let mut r2 = r1.clone();
+            let fresh = c.compress(&mut r1, &x);
+            c.compress_into(&mut r2, &x, &mut scratch);
+            assert_eq!(fresh, scratch);
         }
     }
 

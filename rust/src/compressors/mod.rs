@@ -41,6 +41,22 @@ pub trait Compressor: Send + Sync {
     /// Apply the operator to `x` using the caller's RNG stream.
     fn compress(&self, rng: &mut Pcg64, x: &[f64]) -> Packet;
 
+    /// Apply the operator, writing the result into `out` and reusing its
+    /// buffers (indices/values/signs/levels vectors) when `out` already
+    /// holds the matching [`Packet`] variant. This is the zero-allocation
+    /// hot path: steady-state rounds recycle one scratch packet per
+    /// compressor and never reallocate.
+    ///
+    /// Contract: the resulting packet — and the sequence of draws taken
+    /// from `rng` — must be **identical** to what [`compress`](Self::compress)
+    /// produces from the same generator state, regardless of `out`'s prior
+    /// contents (pinned by property tests in `tests/properties.rs`). The
+    /// default implementation falls back to `compress` (allocating);
+    /// in-tree compressors override it.
+    fn compress_into(&self, rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
+        *out = self.compress(rng, x);
+    }
+
     /// Unbiased variance parameter ω with `E‖Q(x) − x‖² ≤ ω‖x‖²`,
     /// or `None` if the operator is biased.
     fn omega(&self) -> Option<f64>;

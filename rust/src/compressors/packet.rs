@@ -5,6 +5,32 @@
 //! packet structure itself (what an efficient encoder actually needs), so
 //! the x-axis of the paper's figures — *communicated bits* — is measured,
 //! not assumed.
+//!
+//! # Sparse-aware consumption and the zero-allocation round contract
+//!
+//! The hot path never materializes a dense decode of a sparse message:
+//! consumers fold packets straight into their accumulators with
+//! [`Packet::add_scaled_into`], which costs O(nnz) for [`Packet::Sparse`] /
+//! [`Packet::TernaryPkt`] / [`Packet::Zero`] payloads and O(d) — but
+//! allocation-free — for the dense-shaped ones. [`Packet::decode_into`] and
+//! [`Packet::decode`] remain as the reference implementations; property
+//! tests in `tests/properties.rs` pin `add_scaled_into` to be bit-identical
+//! to `decode` + `axpy` for every variant.
+//!
+//! Buffer ownership in a steady-state round:
+//!
+//! * each *worker* (a [`crate::algorithms::DcgdShift`] slot or a
+//!   [`crate::coordinator`] thread) owns one scratch `Packet` per
+//!   compressor and refills it in place every round via
+//!   [`crate::compressors::Compressor::compress_into`];
+//! * the *master* owns one scratch `Packet` per frame kind and refills it
+//!   via [`crate::wire::decode_into`]; wire frames themselves are recycled
+//!   by shipping the consumed buffers back to the worker with the next
+//!   round command.
+//!
+//! After warm-up no `Packet` buffer is ever reallocated: index/value/sign
+//! vectors are `clear()`ed and refilled at constant capacity (the counting
+//! allocator test in `tests/alloc_free.rs` enforces this end to end).
 
 /// Floating-point precision used for values on the wire.
 ///
@@ -200,6 +226,108 @@ impl Packet {
         out
     }
 
+    /// `out += alpha * decode(self)` without materializing the decode.
+    ///
+    /// This is the sparse-aware aggregation primitive: Sparse/Ternary/Zero
+    /// payloads are applied at O(nnz) (coordinates the packet does not
+    /// carry are untouched), everything else at O(d) with zero heap
+    /// traffic. Per-coordinate arithmetic reproduces `decode` + `axpy`
+    /// bit-for-bit: each touched coordinate receives exactly
+    /// `alpha * v_i` where `v_i` is the value `decode` would produce.
+    /// (The only representational difference is that explicit zeros are
+    /// skipped instead of adding `alpha * 0.0`, which can normalize a
+    /// `-0.0` accumulator entry to `+0.0` in the dense path — invisible to
+    /// `==` and to every downstream computation.)
+    pub fn add_scaled_into(&self, alpha: f64, out: &mut [f64]) {
+        assert_eq!(out.len(), self.dim(), "add_scaled dim mismatch");
+        match self {
+            Packet::Dense(v) => crate::linalg::axpy(alpha, v, out),
+            Packet::Sparse {
+                indices,
+                values,
+                scale,
+                ..
+            } => {
+                if *scale == 1.0 {
+                    crate::linalg::scatter_axpy(alpha, indices, values, out);
+                } else {
+                    for (i, v) in indices.iter().zip(values.iter()) {
+                        out[*i as usize] += alpha * (*scale * *v);
+                    }
+                }
+            }
+            Packet::Levels {
+                norm,
+                s,
+                signs,
+                levels,
+                ..
+            } => {
+                for i in 0..out.len() {
+                    let lvl = levels[i];
+                    if lvl != 0 {
+                        let mag = norm * 2f64.powi(lvl as i32 - *s as i32);
+                        out[i] += alpha * if signs[i] { mag } else { -mag };
+                    }
+                }
+            }
+            Packet::LevelsLinear {
+                norm,
+                s,
+                signs,
+                levels,
+                ..
+            } => {
+                for i in 0..out.len() {
+                    if levels[i] != 0 {
+                        let mag = norm * levels[i] as f64 / *s as f64;
+                        out[i] += alpha * if signs[i] { mag } else { -mag };
+                    }
+                }
+            }
+            Packet::NatExp { signs, exps, .. } => {
+                for i in 0..out.len() {
+                    if exps[i] != i8::MIN {
+                        let mag = 2f64.powi(exps[i] as i32);
+                        out[i] += alpha * if signs[i] { mag } else { -mag };
+                    }
+                }
+            }
+            Packet::SignScale { scale, signs, .. } => {
+                for i in 0..out.len() {
+                    out[i] += alpha * if signs[i] { *scale } else { -*scale };
+                }
+            }
+            Packet::TernaryPkt {
+                scale,
+                mask,
+                signs,
+                ..
+            } => {
+                let mut sign_cursor = 0;
+                for i in 0..out.len() {
+                    if mask[i] {
+                        out[i] += alpha * if signs[sign_cursor] { *scale } else { -*scale };
+                        sign_cursor += 1;
+                    }
+                }
+            }
+            Packet::Zero { .. } => {}
+        }
+    }
+
+    /// Number of coordinates this packet actually carries (what
+    /// [`add_scaled_into`](Self::add_scaled_into) will touch) — `dim` for
+    /// dense-shaped payloads, the support size for sparse ones.
+    pub fn nnz(&self) -> usize {
+        match self {
+            Packet::Sparse { indices, .. } => indices.len(),
+            Packet::TernaryPkt { signs, .. } => signs.len(),
+            Packet::Zero { .. } => 0,
+            _ => self.dim(),
+        }
+    }
+
     /// Exact number of payload bits an efficient encoder needs for this
     /// packet (matches [`crate::wire`]'s bit-level encoding, excluding the
     /// fixed per-message header). This is what the "communicated bits"
@@ -327,6 +455,98 @@ mod tests {
         };
         assert_eq!(t.decode(), vec![-3.0, 0.0, 0.0, 3.0]);
         assert_eq!(t.payload_bits(ValPrec::F64), 64 + 4 + 2);
+    }
+
+    #[test]
+    fn add_scaled_matches_decode_axpy_per_variant() {
+        let pkts = vec![
+            Packet::Dense(vec![1.5, -2.0, 0.25]),
+            Packet::Sparse {
+                dim: 3,
+                indices: vec![0, 2],
+                values: vec![2.0, -4.0],
+                scale: 1.5,
+            },
+            Packet::Sparse {
+                dim: 3,
+                indices: vec![1],
+                values: vec![3.0],
+                scale: 1.0,
+            },
+            Packet::Levels {
+                dim: 3,
+                norm: 8.0,
+                s: 3,
+                signs: vec![true, false, true],
+                levels: vec![3, 2, 0],
+            },
+            Packet::LevelsLinear {
+                dim: 3,
+                norm: 2.0,
+                s: 4,
+                signs: vec![false, true, true],
+                levels: vec![4, 0, 1],
+            },
+            Packet::NatExp {
+                dim: 3,
+                signs: vec![true, false, true],
+                exps: vec![2, -1, i8::MIN],
+            },
+            Packet::SignScale {
+                dim: 3,
+                scale: 0.5,
+                signs: vec![true, false, true],
+            },
+            Packet::TernaryPkt {
+                dim: 3,
+                scale: 3.0,
+                mask: vec![true, false, true],
+                signs: vec![false, true],
+            },
+            Packet::Zero { dim: 3 },
+        ];
+        for pkt in &pkts {
+            for &alpha in &[1.0, -0.75, 0.0, 2.5] {
+                let acc0 = [0.5, -1.25, 2.0];
+                // reference: dense decode + axpy
+                let mut want = acc0;
+                let dec = pkt.decode();
+                for j in 0..3 {
+                    want[j] += alpha * dec[j];
+                }
+                let mut got = acc0;
+                pkt.add_scaled_into(alpha, &mut got);
+                for j in 0..3 {
+                    assert_eq!(
+                        got[j].to_bits(),
+                        want[j].to_bits(),
+                        "{pkt:?} alpha={alpha} coord {j}: {} vs {}",
+                        got[j],
+                        want[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nnz_reports_support_size() {
+        assert_eq!(Packet::Zero { dim: 9 }.nnz(), 0);
+        assert_eq!(Packet::Dense(vec![0.0; 4]).nnz(), 4);
+        let p = Packet::Sparse {
+            dim: 100,
+            indices: vec![3, 7],
+            values: vec![1.0, 2.0],
+            scale: 1.0,
+        };
+        assert_eq!(p.nnz(), 2);
+        let t = Packet::TernaryPkt {
+            dim: 6,
+            scale: 1.0,
+            mask: vec![true, false, false, true, false, false],
+            signs: vec![true, false],
+        };
+        assert_eq!(t.nnz(), 2);
     }
 
     #[test]

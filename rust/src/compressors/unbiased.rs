@@ -61,6 +61,14 @@ impl Compressor for Identity {
     fn compress(&self, _rng: &mut Pcg64, x: &[f64]) -> Packet {
         Packet::Dense(x.to_vec())
     }
+    fn compress_into(&self, _rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
+        if let Packet::Dense(v) = out {
+            v.clear();
+            v.extend_from_slice(x);
+        } else {
+            *out = Packet::Dense(x.to_vec());
+        }
+    }
     fn omega(&self) -> Option<f64> {
         Some(0.0)
     }
@@ -105,15 +113,34 @@ impl Compressor for RandK {
         self.d
     }
     fn compress(&self, rng: &mut Pcg64, x: &[f64]) -> Packet {
+        let mut out = Packet::Zero { dim: self.d as u32 };
+        self.compress_into(rng, x, &mut out);
+        out
+    }
+    fn compress_into(&self, rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
         assert_eq!(x.len(), self.d);
-        let indices = rng.subset(self.d, self.k);
-        let values: Vec<f64> = indices.iter().map(|&i| x[i as usize]).collect();
-        Packet::Sparse {
-            dim: self.d as u32,
+        if !matches!(out, Packet::Sparse { .. }) {
+            *out = Packet::Sparse {
+                dim: 0,
+                indices: Vec::new(),
+                values: Vec::new(),
+                scale: 0.0,
+            };
+        }
+        let Packet::Sparse {
+            dim,
             indices,
             values,
-            scale: self.d as f64 / self.k as f64,
-        }
+            scale,
+        } = out
+        else {
+            unreachable!()
+        };
+        *dim = self.d as u32;
+        *scale = self.d as f64 / self.k as f64;
+        rng.subset_into(self.d, self.k, indices);
+        values.clear();
+        values.extend(indices.iter().map(|&i| x[i as usize]));
     }
     fn omega(&self) -> Option<f64> {
         Some(self.d as f64 / self.k as f64 - 1.0)
@@ -164,21 +191,44 @@ impl Compressor for NaturalDithering {
         self.d
     }
     fn compress(&self, rng: &mut Pcg64, x: &[f64]) -> Packet {
+        let mut out = Packet::Zero { dim: self.d as u32 };
+        self.compress_into(rng, x, &mut out);
+        out
+    }
+    fn compress_into(&self, rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
         assert_eq!(x.len(), self.d);
-        let norm = nrmp(x, self.p);
-        let s = self.s;
-        let mut signs = vec![false; self.d];
-        let mut levels = vec![0u8; self.d];
-        if norm == 0.0 {
-            return Packet::Levels {
-                dim: self.d as u32,
+        if !matches!(out, Packet::Levels { .. }) {
+            *out = Packet::Levels {
+                dim: 0,
                 norm: 0.0,
-                s,
-                signs,
-                levels,
+                s: 0,
+                signs: Vec::new(),
+                levels: Vec::new(),
             };
         }
-        let inv_norm = 1.0 / norm; // one divide, d multiplies (§Perf)
+        let Packet::Levels {
+            dim,
+            norm,
+            s: out_s,
+            signs,
+            levels,
+        } = out
+        else {
+            unreachable!()
+        };
+        let s = self.s;
+        *dim = self.d as u32;
+        *out_s = s;
+        signs.clear();
+        signs.resize(self.d, false);
+        levels.clear();
+        levels.resize(self.d, 0u8);
+        let nrm = nrmp(x, self.p);
+        *norm = nrm;
+        if nrm == 0.0 {
+            return;
+        }
+        let inv_norm = 1.0 / nrm; // one divide, d multiplies (§Perf)
         let tiny = exp2_i(1 - s as i32); // smallest positive grid level
         for i in 0..self.d {
             let v = x[i];
@@ -230,13 +280,6 @@ impl Compressor for NaturalDithering {
                 (log2_floor(chosen) + s as i32) as u8
             };
         }
-        Packet::Levels {
-            dim: self.d as u32,
-            norm,
-            s,
-            signs,
-            levels,
-        }
     }
     fn omega(&self) -> Option<f64> {
         Some(Self::omega_formula(self.d, self.s, self.p))
@@ -271,31 +314,53 @@ impl Compressor for StandardDithering {
         self.d
     }
     fn compress(&self, rng: &mut Pcg64, x: &[f64]) -> Packet {
+        let mut out = Packet::Zero { dim: self.d as u32 };
+        self.compress_into(rng, x, &mut out);
+        out
+    }
+    fn compress_into(&self, rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
         assert_eq!(x.len(), self.d);
         assert!(self.s <= 255, "StandardDithering supports s ≤ 255");
-        let norm = nrm2(x);
+        if !matches!(out, Packet::LevelsLinear { .. }) {
+            *out = Packet::LevelsLinear {
+                dim: 0,
+                norm: 0.0,
+                s: 0,
+                signs: Vec::new(),
+                levels: Vec::new(),
+            };
+        }
+        let Packet::LevelsLinear {
+            dim,
+            norm,
+            s: out_s,
+            signs,
+            levels,
+        } = out
+        else {
+            unreachable!()
+        };
+        *dim = self.d as u32;
+        *out_s = self.s;
+        signs.clear();
+        signs.resize(self.d, false);
+        levels.clear();
+        levels.resize(self.d, 0u8);
+        let nrm = nrm2(x);
+        *norm = nrm;
         let s = self.s as f64;
-        let mut signs = vec![false; self.d];
-        let mut levels = vec![0u8; self.d];
-        if norm > 0.0 {
+        if nrm > 0.0 {
             for i in 0..self.d {
                 let v = x[i];
                 signs[i] = v >= 0.0;
                 // Randomized rounding on the uniform grid {0, 1/s, ..., 1}:
                 // level q satisfies E[q/s] = |v|/norm.
-                let u = v.abs() / norm * s; // ∈ [0, s]
+                let u = v.abs() / nrm * s; // ∈ [0, s]
                 let lo = u.floor();
                 let p_hi = u - lo;
                 let q = lo + if rng.bernoulli(p_hi) { 1.0 } else { 0.0 };
                 levels[i] = q as u8;
             }
-        }
-        Packet::LevelsLinear {
-            dim: self.d as u32,
-            norm,
-            s: self.s,
-            signs,
-            levels,
         }
     }
     fn omega(&self) -> Option<f64> {
@@ -332,9 +397,27 @@ impl Compressor for NaturalCompression {
         self.d
     }
     fn compress(&self, rng: &mut Pcg64, x: &[f64]) -> Packet {
+        let mut out = Packet::Zero { dim: self.d as u32 };
+        self.compress_into(rng, x, &mut out);
+        out
+    }
+    fn compress_into(&self, rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
         assert_eq!(x.len(), self.d);
-        let mut signs = vec![false; self.d];
-        let mut exps = vec![i8::MIN; self.d];
+        if !matches!(out, Packet::NatExp { .. }) {
+            *out = Packet::NatExp {
+                dim: 0,
+                signs: Vec::new(),
+                exps: Vec::new(),
+            };
+        }
+        let Packet::NatExp { dim, signs, exps } = out else {
+            unreachable!()
+        };
+        *dim = self.d as u32;
+        signs.clear();
+        signs.resize(self.d, false);
+        exps.clear();
+        exps.resize(self.d, i8::MIN);
         for i in 0..self.d {
             let v = x[i];
             signs[i] = v >= 0.0;
@@ -352,11 +435,6 @@ impl Compressor for NaturalCompression {
             let chosen_e = if rng.bernoulli(p_hi) { e + 1 } else { e };
             // clamp to i8 exponent range (|x| ∈ [2^-126, 2^127] covers f32)
             exps[i] = chosen_e.clamp(-126, 127) as i8;
-        }
-        Packet::NatExp {
-            dim: self.d as u32,
-            signs,
-            exps,
         }
     }
     fn omega(&self) -> Option<f64> {
@@ -394,11 +472,23 @@ impl Compressor for BernoulliP {
         self.d
     }
     fn compress(&self, rng: &mut Pcg64, x: &[f64]) -> Packet {
+        let mut out = Packet::Zero { dim: self.d as u32 };
+        self.compress_into(rng, x, &mut out);
+        out
+    }
+    fn compress_into(&self, rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
         assert_eq!(x.len(), self.d);
         if rng.bernoulli(self.p) {
-            Packet::Dense(x.iter().map(|v| v / self.p).collect())
+            if let Packet::Dense(v) = out {
+                v.clear();
+                v.extend(x.iter().map(|v| v / self.p));
+            } else {
+                *out = Packet::Dense(x.iter().map(|v| v / self.p).collect());
+            }
         } else {
-            Packet::Zero { dim: self.d as u32 }
+            // miss: one flag bit on the wire. (The hit↔miss flip drops the
+            // dense buffer — Bernoulli is not on the zero-alloc bench path.)
+            *out = Packet::Zero { dim: self.d as u32 };
         }
     }
     fn omega(&self) -> Option<f64> {
@@ -433,24 +523,43 @@ impl Compressor for Ternary {
         self.d
     }
     fn compress(&self, rng: &mut Pcg64, x: &[f64]) -> Packet {
+        let mut out = Packet::Zero { dim: self.d as u32 };
+        self.compress_into(rng, x, &mut out);
+        out
+    }
+    fn compress_into(&self, rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
         assert_eq!(x.len(), self.d);
-        let scale = nrm_inf(x);
-        let mut mask = vec![false; self.d];
-        let mut signs = Vec::new();
-        if scale > 0.0 {
+        if !matches!(out, Packet::TernaryPkt { .. }) {
+            *out = Packet::TernaryPkt {
+                dim: 0,
+                scale: 0.0,
+                mask: Vec::new(),
+                signs: Vec::new(),
+            };
+        }
+        let Packet::TernaryPkt {
+            dim,
+            scale,
+            mask,
+            signs,
+        } = out
+        else {
+            unreachable!()
+        };
+        *dim = self.d as u32;
+        mask.clear();
+        mask.resize(self.d, false);
+        signs.clear();
+        let sc = nrm_inf(x);
+        *scale = sc;
+        if sc > 0.0 {
             for i in 0..self.d {
-                let p = x[i].abs() / scale;
+                let p = x[i].abs() / sc;
                 if rng.bernoulli(p) {
                     mask[i] = true;
                     signs.push(x[i] >= 0.0);
                 }
             }
-        }
-        Packet::TernaryPkt {
-            dim: self.d as u32,
-            scale,
-            mask,
-            signs,
         }
     }
     fn omega(&self) -> Option<f64> {

@@ -25,12 +25,34 @@ use crate::data::{RegressionOpts, W2aOpts};
 use crate::problems::{Logistic, Problem, Quadratic, Ridge};
 use crate::util::json::Json;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("config: {0}")]
     Invalid(String),
-    #[error(transparent)]
-    Json(#[from] crate::util::json::JsonError),
+    Json(crate::util::json::JsonError),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Invalid(msg) => write!(f, "config: {msg}"),
+            ConfigError::Json(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::util::json::JsonError> for ConfigError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        ConfigError::Json(e)
+    }
 }
 
 fn bad(msg: impl Into<String>) -> ConfigError {

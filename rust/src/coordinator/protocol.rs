@@ -18,7 +18,18 @@ pub enum MethodKind {
 /// Master → worker.
 pub enum WorkerCommand {
     /// Start round k with the broadcast iterate.
-    Round { k: usize, x: Arc<Vec<f64>> },
+    ///
+    /// `recycled` returns the frame buffers the master consumed from this
+    /// worker's *previous* round so the worker can encode into them again —
+    /// the buffer half of the zero-allocation round pipeline (the master's
+    /// half recycles its decode packets; see
+    /// [`crate::coordinator::DistributedRunner`]). The first round ships
+    /// empty (default) frames.
+    Round {
+        k: usize,
+        x: Arc<Vec<f64>>,
+        recycled: FrameSet,
+    },
     /// Clean shutdown.
     Shutdown,
 }

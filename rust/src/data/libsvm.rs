@@ -8,12 +8,34 @@
 
 use crate::data::sparse::{SparseDataset, SparseRow};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LibsvmError {
-    #[error("line {line}: {msg}")]
     Parse { line: usize, msg: String },
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for LibsvmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LibsvmError::Parse { line, msg } => write!(f, "line {line}: {msg}"),
+            LibsvmError::Io(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for LibsvmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            LibsvmError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for LibsvmError {
+    fn from(e: std::io::Error) -> Self {
+        LibsvmError::Io(e)
+    }
 }
 
 /// Parse LibSVM text. Indices are converted to 0-based. Features indices

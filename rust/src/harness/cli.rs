@@ -150,6 +150,13 @@ fn cmd_table(argv: &[String]) -> i32 {
     0
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train_lm(_argv: &[String]) -> i32 {
+    eprintln!("train-lm requires the PJRT runtime: rebuild with `--features pjrt`");
+    2
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train_lm(argv: &[String]) -> i32 {
     let cmd = Command::new("train-lm", "distributed compressed LM training")
         .opt("artifacts", "artifacts", "AOT artifacts directory")

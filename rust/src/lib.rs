@@ -45,10 +45,12 @@ pub mod coordinator;
 pub mod data;
 pub mod harness;
 pub mod linalg;
+#[cfg(feature = "pjrt")]
 pub mod lm;
 pub mod metrics;
 pub mod net;
 pub mod problems;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod theory;
 pub mod util;

@@ -12,13 +12,25 @@ pub struct Cholesky {
     pub l: Mat,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SolveError {
-    #[error("matrix is not positive definite (pivot {pivot} at index {index})")]
     NotPositiveDefinite { index: usize, pivot: f64 },
-    #[error("dimension mismatch: {0}")]
     Dim(String),
 }
+
+impl std::fmt::Display for SolveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolveError::NotPositiveDefinite { index, pivot } => write!(
+                f,
+                "matrix is not positive definite (pivot {pivot} at index {index})"
+            ),
+            SolveError::Dim(msg) => write!(f, "dimension mismatch: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
 
 impl Cholesky {
     /// Factor an SPD matrix. O(n³/3).

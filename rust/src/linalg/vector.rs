@@ -67,6 +67,29 @@ pub fn scale(a: f64, x: &mut [f64]) {
     }
 }
 
+/// `y[indices[j]] += a * values[j]` — the sparse aggregation kernel behind
+/// [`crate::compressors::Packet::add_scaled_into`]: consuming a K-sparse
+/// message costs O(K) instead of the O(d) of a dense decode + [`axpy`].
+/// Indices must be in-bounds for `y` (compressor packets guarantee this).
+#[inline]
+pub fn scatter_axpy(a: f64, indices: &[u32], values: &[f64], y: &mut [f64]) {
+    assert_eq!(indices.len(), values.len());
+    for (&i, &v) in indices.iter().zip(values.iter()) {
+        y[i as usize] += a * v;
+    }
+}
+
+/// `out = a * x` (elementwise), overwriting `out`. Used by the round
+/// pipeline to seed the gradient estimator from the aggregate shift in one
+/// pass instead of `zero` + `axpy`.
+#[inline]
+pub fn ax_into(a: f64, x: &[f64], out: &mut [f64]) {
+    assert_eq!(x.len(), out.len());
+    for i in 0..x.len() {
+        out[i] = a * x[i];
+    }
+}
+
 /// `out = x - y` into a preallocated buffer.
 #[inline]
 pub fn sub_into(x: &[f64], y: &[f64], out: &mut [f64]) {
@@ -186,6 +209,24 @@ mod tests {
         let mut out = [0.0, 0.0];
         mean_into(&[&a, &b], &mut out);
         assert_eq!(out, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn scatter_axpy_touches_only_listed_indices() {
+        let mut y = [1.0, 2.0, 3.0, 4.0, 5.0];
+        scatter_axpy(2.0, &[1, 4], &[10.0, -1.0], &mut y);
+        assert_eq!(y, [1.0, 22.0, 3.0, 4.0, 3.0]);
+        // empty index set is a no-op
+        scatter_axpy(3.0, &[], &[], &mut y);
+        assert_eq!(y, [1.0, 22.0, 3.0, 4.0, 3.0]);
+    }
+
+    #[test]
+    fn ax_into_overwrites() {
+        let x = [1.0, -2.0, 0.5];
+        let mut out = [9.0, 9.0, 9.0];
+        ax_into(0.5, &x, &mut out);
+        assert_eq!(out, [0.5, -1.0, 0.25]);
     }
 
     #[test]

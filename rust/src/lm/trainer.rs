@@ -13,7 +13,7 @@
 //! message is compressed/decoded exactly as the coordinator does, and
 //! uplink bits are accounted per worker.
 
-use anyhow::Result;
+use crate::util::AnyResult as Result;
 
 use crate::compressors::{Compressor, ValPrec};
 use crate::lm::corpus::MarkovCorpus;

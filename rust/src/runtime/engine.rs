@@ -5,7 +5,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::{any_err, AnyResult as Result};
 
 use crate::util::json::Json;
 
@@ -31,32 +31,36 @@ impl Manifest {
     pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         let dir = artifacts_dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            any_err(format!(
+                "reading {} — run `make artifacts` first: {e}",
+                path.display()
+            ))
+        })?;
+        let j = Json::parse(&text).map_err(|e| any_err(format!("manifest.json: {e}")))?;
         let mut entries = HashMap::new();
         let obj = j
             .get("entries")
             .as_obj()
-            .ok_or_else(|| anyhow!("manifest.json: missing entries object"))?;
+            .ok_or_else(|| any_err(format!("manifest.json: missing entries object")))?;
         for (name, e) in obj {
             let parse_specs = |key: &str| -> Result<Vec<(Vec<usize>, String)>> {
                 e.get(key)
                     .as_arr()
-                    .ok_or_else(|| anyhow!("entry {name}: missing {key}"))?
+                    .ok_or_else(|| any_err(format!("entry {name}: missing {key}")))?
                     .iter()
                     .map(|s| {
                         let shape = s
                             .get("shape")
                             .as_arr()
-                            .ok_or_else(|| anyhow!("entry {name}: bad shape"))?
+                            .ok_or_else(|| any_err(format!("entry {name}: bad shape")))?
                             .iter()
-                            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                            .map(|d| d.as_usize().ok_or_else(|| any_err(format!("bad dim"))))
                             .collect::<Result<Vec<_>>>()?;
                         let dtype = s
                             .get("dtype")
                             .as_str()
-                            .ok_or_else(|| anyhow!("entry {name}: bad dtype"))?
+                            .ok_or_else(|| any_err(format!("entry {name}: bad dtype")))?
                             .to_string();
                         Ok((shape, dtype))
                     })
@@ -69,7 +73,7 @@ impl Manifest {
                     file: e
                         .get("file")
                         .as_str()
-                        .ok_or_else(|| anyhow!("entry {name}: missing file"))?
+                        .ok_or_else(|| any_err(format!("entry {name}: missing file")))?
                         .to_string(),
                     inputs: parse_specs("inputs")?,
                     outputs: parse_specs("outputs")?,
@@ -83,7 +87,7 @@ impl Manifest {
     pub fn entry(&self, name: &str) -> Result<&EntryInfo> {
         self.entries
             .get(name)
-            .ok_or_else(|| anyhow!("manifest has no entry '{name}'"))
+            .ok_or_else(|| any_err(format!("manifest has no entry '{name}'")))
     }
 }
 
@@ -98,7 +102,7 @@ impl Engine {
     /// Create a CPU engine over an artifacts directory.
     pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| any_err(format!("PJRT cpu client: {e:?}")))?;
         Ok(Self {
             client,
             manifest,
@@ -114,12 +118,12 @@ impl Engine {
         let entry = self.manifest.entry(name)?;
         let path = self.manifest.dir.join(&entry.file);
         let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            .map_err(|e| any_err(format!("parsing {}: {e:?}", path.display())))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            .map_err(|e| any_err(format!("compiling {name}: {e:?}")))?;
         let exe = std::sync::Arc::new(exe);
         self.cache
             .lock()
@@ -134,14 +138,14 @@ impl Engine {
         let exe = self.executable(name)?;
         let result = exe
             .execute::<xla::Literal>(args)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+            .map_err(|e| any_err(format!("executing {name}: {e:?}")))?;
         let lit = result
             .first()
             .and_then(|r| r.first())
-            .ok_or_else(|| anyhow!("{name}: no output buffer"))?
+            .ok_or_else(|| any_err(format!("{name}: no output buffer")))?
             .to_literal_sync()
-            .map_err(|e| anyhow!("{name}: readback: {e:?}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("{name}: tuple: {e:?}"))
+            .map_err(|e| any_err(format!("{name}: readback: {e:?}")))?;
+        lit.to_tuple().map_err(|e| any_err(format!("{name}: tuple: {e:?}")))
     }
 }
 
@@ -152,7 +156,7 @@ pub fn lit_f64(v: &[f64], dims: &[i64]) -> Result<xla::Literal> {
     if dims.len() == 1 {
         return Ok(flat);
     }
-    flat.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+    flat.reshape(dims).map_err(|e| any_err(format!("reshape: {e:?}")))
 }
 
 pub fn lit_f32(v: &[f32], dims: &[i64]) -> Result<xla::Literal> {
@@ -160,7 +164,7 @@ pub fn lit_f32(v: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     if dims.len() == 1 {
         return Ok(flat);
     }
-    flat.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+    flat.reshape(dims).map_err(|e| any_err(format!("reshape: {e:?}")))
 }
 
 pub fn lit_i32(v: &[i32], dims: &[i64]) -> Result<xla::Literal> {
@@ -168,7 +172,7 @@ pub fn lit_i32(v: &[i32], dims: &[i64]) -> Result<xla::Literal> {
     if dims.len() == 1 {
         return Ok(flat);
     }
-    flat.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+    flat.reshape(dims).map_err(|e| any_err(format!("reshape: {e:?}")))
 }
 
 pub fn lit_scalar_f64(v: f64) -> xla::Literal {
@@ -176,11 +180,11 @@ pub fn lit_scalar_f64(v: f64) -> xla::Literal {
 }
 
 pub fn to_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
-    lit.to_vec::<f64>().map_err(|e| anyhow!("to_vec f64: {e:?}"))
+    lit.to_vec::<f64>().map_err(|e| any_err(format!("to_vec f64: {e:?}")))
 }
 
 pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+    lit.to_vec::<f32>().map_err(|e| any_err(format!("to_vec f32: {e:?}")))
 }
 
 #[cfg(test)]

@@ -1,7 +1,24 @@
 //! Typed wrappers over AOT entries: gradient oracles and the LM training
 //! session used by `examples/train_lm.rs`.
 
-use anyhow::{anyhow, ensure, Result};
+use crate::util::{any_err, AnyResult as Result};
+
+/// Local stand-in for `anyhow::ensure!` (offline build, no anyhow).
+macro_rules! ensure {
+    ($cond:expr) => {
+        if !($cond) {
+            return Err($crate::util::any_err(format!(
+                "ensure failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err($crate::util::any_err(format!($($fmt)+)));
+        }
+    };
+}
 
 use crate::runtime::engine::{lit_f32, lit_f64, lit_i32, to_f32, to_f64, Engine};
 
@@ -19,8 +36,8 @@ pub struct HloRidgeOracle<'e> {
 impl<'e> HloRidgeOracle<'e> {
     pub fn new(engine: &'e Engine) -> Result<Self> {
         let e = engine.manifest.entry("ridge_grad")?;
-        let m_i = e.extra.get("m_i").as_usize().ok_or_else(|| anyhow!("m_i"))?;
-        let d = e.extra.get("d").as_usize().ok_or_else(|| anyhow!("d"))?;
+        let m_i = e.extra.get("m_i").as_usize().ok_or_else(|| any_err("m_i"))?;
+        let d = e.extra.get("d").as_usize().ok_or_else(|| any_err("d"))?;
         Ok(Self { engine, m_i, d })
     }
 
@@ -72,11 +89,11 @@ impl<'e> LmSession<'e> {
             .extra
             .get("param_count")
             .as_usize()
-            .ok_or_else(|| anyhow!("param_count"))?;
-        let batch = e.extra.get("batch").as_usize().ok_or_else(|| anyhow!("batch"))?;
+            .ok_or_else(|| any_err("param_count"))?;
+        let batch = e.extra.get("batch").as_usize().ok_or_else(|| any_err("batch"))?;
         let cfg = e.extra.get("config");
-        let seq = cfg.get("seq").as_usize().ok_or_else(|| anyhow!("seq"))?;
-        let vocab = cfg.get("vocab").as_usize().ok_or_else(|| anyhow!("vocab"))?;
+        let seq = cfg.get("seq").as_usize().ok_or_else(|| any_err("seq"))?;
+        let vocab = cfg.get("vocab").as_usize().ok_or_else(|| any_err("vocab"))?;
         Ok(Self {
             engine,
             entry,
@@ -94,7 +111,7 @@ impl<'e> LmSession<'e> {
             .extra
             .get("init_file")
             .as_str()
-            .ok_or_else(|| anyhow!("lm_step has no init_file"))?;
+            .ok_or_else(|| any_err("lm_step has no init_file"))?;
         let bytes = std::fs::read(self.engine.manifest.dir.join(init))?;
         ensure!(
             bytes.len() == self.param_count * 4,
@@ -138,7 +155,7 @@ pub struct HloShiftedCompress<'e> {
 impl<'e> HloShiftedCompress<'e> {
     pub fn new(engine: &'e Engine) -> Result<Self> {
         let e = engine.manifest.entry("shifted_compress")?;
-        let d = e.extra.get("d").as_usize().ok_or_else(|| anyhow!("d"))?;
+        let d = e.extra.get("d").as_usize().ok_or_else(|| any_err("d"))?;
         Ok(Self { engine, d })
     }
 
@@ -165,8 +182,8 @@ pub struct HloNatDither<'e> {
 impl<'e> HloNatDither<'e> {
     pub fn new(engine: &'e Engine) -> Result<Self> {
         let e = engine.manifest.entry("nat_dither_quantize")?;
-        let d = e.extra.get("d").as_usize().ok_or_else(|| anyhow!("d"))?;
-        let s = e.extra.get("s").as_usize().ok_or_else(|| anyhow!("s"))?;
+        let d = e.extra.get("d").as_usize().ok_or_else(|| any_err("d"))?;
+        let s = e.extra.get("s").as_usize().ok_or_else(|| any_err("s"))?;
         Ok(Self { engine, d, s })
     }
 

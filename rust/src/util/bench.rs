@@ -130,6 +130,82 @@ pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
     (out, dt)
 }
 
+/// Was the bench binary invoked with `--smoke`? Perf benches use this to
+/// shrink dimensions and sample counts so they fit tier-1 time budgets
+/// while still exercising every scenario end to end.
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+/// Like [`bench_slow`], but drops to a few milliseconds per sample when
+/// `smoke` is set.
+pub fn bench_maybe_smoke<F: FnMut()>(name: &str, smoke: bool, mut f: F) -> BenchStats {
+    if smoke {
+        bench_config(
+            name,
+            Duration::from_millis(10),
+            3,
+            Duration::from_millis(10),
+            &mut f,
+        )
+    } else {
+        bench_config(
+            name,
+            Duration::from_millis(300),
+            5,
+            Duration::from_millis(100),
+            &mut f,
+        )
+    }
+}
+
+/// One scenario row of the machine-readable perf report.
+#[derive(Clone, Debug)]
+pub struct JsonScenario {
+    pub scenario: String,
+    pub median_sec: f64,
+    /// aggregate throughput, when the scenario has a natural coordinate
+    /// count (used to track the sparse-aggregation win across PRs)
+    pub coords_per_s: Option<f64>,
+}
+
+impl JsonScenario {
+    pub fn new(scenario: impl Into<String>, median_sec: f64, coords_per_s: Option<f64>) -> Self {
+        Self {
+            scenario: scenario.into(),
+            median_sec,
+            coords_per_s,
+        }
+    }
+}
+
+/// Merge scenario rows into a JSON report (scenario → {median_sec,
+/// coords_per_s}). Existing entries for other scenarios are preserved so
+/// the perf benches can each contribute to one `results/BENCH_perf.json`
+/// and the perf trajectory can be diffed across PRs.
+pub fn write_bench_json(path: &str, rows: &[JsonScenario]) -> std::io::Result<()> {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+
+    let mut merged: BTreeMap<String, Json> = BTreeMap::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(Json::Obj(obj)) = Json::parse(&text) {
+            merged = obj;
+        }
+    }
+    for r in rows {
+        let mut fields = vec![("median_sec", Json::num(r.median_sec))];
+        if let Some(c) = r.coords_per_s {
+            fields.push(("coords_per_s", Json::num(c)));
+        }
+        merged.insert(r.scenario.clone(), Json::obj(fields));
+    }
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, Json::Obj(merged).to_pretty())
+}
+
 /// Write bench results as a CSV file under `results/`.
 pub fn write_csv(path: &str, header: &str, rows: &[String]) -> std::io::Result<()> {
     if let Some(parent) = std::path::Path::new(path).parent() {
@@ -166,6 +242,34 @@ mod tests {
         assert!(fmt_duration(2e-3).ends_with(" ms"));
         assert!(fmt_duration(2e-6).ends_with(" µs"));
         assert!(fmt_duration(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn bench_json_merges_scenarios() {
+        let dir = std::env::temp_dir().join("shiftcomp_bench_json");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("BENCH_perf.json");
+        let path_s = path.to_str().unwrap();
+        write_bench_json(
+            path_s,
+            &[JsonScenario::new("a", 0.5, Some(1e6))],
+        )
+        .unwrap();
+        // second write adds a scenario and overwrites the first
+        write_bench_json(
+            path_s,
+            &[
+                JsonScenario::new("a", 0.25, Some(2e6)),
+                JsonScenario::new("b", 1.5, None),
+            ],
+        )
+        .unwrap();
+        let j = crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("a").get("median_sec").as_f64(), Some(0.25));
+        assert_eq!(j.get("a").get("coords_per_s").as_f64(), Some(2e6));
+        assert_eq!(j.get("b").get("median_sec").as_f64(), Some(1.5));
+        assert!(j.get("b").get("coords_per_s").is_null());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

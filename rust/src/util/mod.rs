@@ -9,3 +9,15 @@ pub mod cli;
 pub mod json;
 pub mod proptest_lite;
 pub mod rng;
+
+/// Boxed dynamic error used by fallible I/O-ish paths (replaces `anyhow`,
+/// unavailable in the offline build environment).
+pub type AnyError = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// `Result` alias over [`AnyError`] (replaces `anyhow::Result`).
+pub type AnyResult<T> = std::result::Result<T, AnyError>;
+
+/// Construct an [`AnyError`] from a message (replaces `anyhow!`).
+pub fn any_err(msg: impl Into<String>) -> AnyError {
+    msg.into().into()
+}

@@ -19,17 +19,28 @@ use crate::compressors::packet::{bits_for_levels, index_bits, Packet, ValPrec};
 
 pub const HEADER_BITS: u64 = 48;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum WireError {
-    #[error("truncated message: needed {needed} bytes, had {have}")]
     Truncated { needed: usize, have: usize },
-    #[error("unknown packet tag {0}")]
     BadTag(u8),
-    #[error("unknown precision tag {0}")]
     BadPrec(u8),
-    #[error("malformed payload: {0}")]
     Malformed(String),
 }
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { needed, have } => {
+                write!(f, "truncated message: needed {needed} bytes, had {have}")
+            }
+            WireError::BadTag(t) => write!(f, "unknown packet tag {t}"),
+            WireError::BadPrec(p) => write!(f, "unknown precision tag {p}"),
+            WireError::Malformed(msg) => write!(f, "malformed payload: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
 
 const TAG_DENSE: u8 = 1;
 const TAG_SPARSE: u8 = 2;
@@ -42,18 +53,19 @@ const TAG_ZERO: u8 = 8;
 
 // --------------------------------------------------------------- bit writer
 
-struct BitWriter {
-    buf: Vec<u8>,
+/// Bit-packer over a borrowed, caller-recycled byte buffer (the
+/// zero-allocation round pipeline reuses frame buffers across rounds; after
+/// warm-up the buffer capacity is stable and writes never allocate).
+struct BitWriter<'a> {
+    buf: &'a mut Vec<u8>,
     /// number of valid bits in the last byte (0 ⇒ byte-aligned)
     bit_pos: u8,
 }
 
-impl BitWriter {
-    fn new() -> Self {
-        Self {
-            buf: Vec::new(),
-            bit_pos: 0,
-        }
+impl<'a> BitWriter<'a> {
+    fn new(buf: &'a mut Vec<u8>) -> Self {
+        buf.clear();
+        Self { buf, bit_pos: 0 }
     }
 
     fn write_bits(&mut self, value: u64, nbits: u64) {
@@ -200,12 +212,13 @@ fn write_signs(w: &mut BitWriter, signs: &[bool]) {
     }
 }
 
-fn read_signs(r: &mut BitReader, n: usize) -> Result<Vec<bool>, WireError> {
-    let mut out = Vec::with_capacity(n);
+fn read_signs_into(r: &mut BitReader, n: usize, out: &mut Vec<bool>) -> Result<(), WireError> {
+    out.clear();
+    out.reserve(n);
     for _ in 0..n {
         out.push(r.read_bits(1)? == 1);
     }
-    Ok(out)
+    Ok(())
 }
 
 // ------------------------------------------------------------------- encode
@@ -214,7 +227,15 @@ fn read_signs(r: &mut BitReader, n: usize) -> Result<Vec<bool>, WireError> {
 /// the default experiment precision is F64, matching the paper's float64
 /// simulations).
 pub fn encode(pkt: &Packet, prec: ValPrec) -> Vec<u8> {
-    let mut w = BitWriter::new();
+    let mut buf = Vec::new();
+    encode_into(pkt, prec, &mut buf);
+    buf
+}
+
+/// Like [`encode`] but writes into a caller-recycled buffer (cleared
+/// first). Byte-for-byte identical output; after warm-up, no allocation.
+pub fn encode_into(pkt: &Packet, prec: ValPrec, out: &mut Vec<u8>) {
+    let mut w = BitWriter::new(out);
     let prec_tag = match prec {
         ValPrec::F32 => 0u8,
         ValPrec::F64 => 1u8,
@@ -329,13 +350,41 @@ pub fn encode(pkt: &Packet, prec: ValPrec) -> Vec<u8> {
             w.write_u32(*dim);
         }
     }
-    w.buf
+}
+
+/// Write a [`Packet::Dense`] frame directly from a slice — byte-identical
+/// to `encode_into(&Packet::Dense(values.to_vec()), ..)` without building
+/// the packet. Used by the Rand-DIANA shift-refresh path so the (dense,
+/// rare) refresh upload does not clone the shift vector.
+pub fn encode_dense_into(values: &[f64], prec: ValPrec, out: &mut Vec<u8>) {
+    let mut w = BitWriter::new(out);
+    let prec_tag = match prec {
+        ValPrec::F32 => 0u8,
+        ValPrec::F64 => 1u8,
+    };
+    w.write_u8(TAG_DENSE);
+    w.write_u8(prec_tag);
+    w.write_u32(values.len() as u32);
+    for &x in values {
+        w.write_val(x, prec);
+    }
 }
 
 // ------------------------------------------------------------------- decode
 
 /// Deserialize a packet previously produced by [`encode`].
 pub fn decode(bytes: &[u8]) -> Result<Packet, WireError> {
+    let mut pkt = Packet::Zero { dim: 0 };
+    decode_into(bytes, &mut pkt)?;
+    Ok(pkt)
+}
+
+/// Deserialize into a caller-recycled [`Packet`], reusing its vectors when
+/// `out` already holds the frame's variant (the steady-state case: a master
+/// decoding the same worker/compressor shape every round never allocates
+/// after warm-up). Produces exactly what [`decode`] produces. On `Err`,
+/// `out` is left in a valid but unspecified state.
+pub fn decode_into(bytes: &[u8], out: &mut Packet) -> Result<(), WireError> {
     let mut r = BitReader::new(bytes);
     let tag = r.read_u8()?;
     let prec = match r.read_u8()? {
@@ -346,20 +395,44 @@ pub fn decode(bytes: &[u8]) -> Result<Packet, WireError> {
     let dim = r.read_u32()?;
     match tag {
         TAG_DENSE => {
-            let mut v = Vec::with_capacity(dim as usize);
+            if !matches!(out, Packet::Dense(_)) {
+                *out = Packet::Dense(Vec::new());
+            }
+            let Packet::Dense(v) = out else { unreachable!() };
+            v.clear();
+            v.reserve(dim as usize);
             for _ in 0..dim {
                 v.push(r.read_val(prec)?);
             }
-            Ok(Packet::Dense(v))
+            Ok(())
         }
         TAG_SPARSE => {
             let k = r.read_u32()?;
             if k > dim {
                 return Err(WireError::Malformed(format!("k={k} > dim={dim}")));
             }
-            let scale = r.read_val(prec)?;
+            let scale_v = r.read_val(prec)?;
+            if !matches!(out, Packet::Sparse { .. }) {
+                *out = Packet::Sparse {
+                    dim: 0,
+                    indices: Vec::new(),
+                    values: Vec::new(),
+                    scale: 0.0,
+                };
+            }
+            let Packet::Sparse {
+                dim: out_dim,
+                indices,
+                values,
+                scale,
+            } = out
+            else {
+                unreachable!()
+            };
+            *out_dim = dim;
+            *scale = scale_v;
             let ib = index_bits(dim);
-            let mut indices = Vec::with_capacity(k as usize);
+            indices.clear();
             for _ in 0..k {
                 let idx = r.read_bits(ib)? as u32;
                 if idx >= dim {
@@ -368,93 +441,170 @@ pub fn decode(bytes: &[u8]) -> Result<Packet, WireError> {
                 indices.push(idx);
             }
             r.align();
-            let mut values = Vec::with_capacity(k as usize);
+            values.clear();
             for _ in 0..k {
                 values.push(r.read_val(prec)?);
             }
-            Ok(Packet::Sparse {
-                dim,
-                indices,
-                values,
-                scale,
-            })
+            Ok(())
         }
         TAG_LEVELS => {
-            let s = r.read_u8()?;
-            let norm = r.read_val(prec)?;
-            let signs = read_signs(&mut r, dim as usize)?;
-            r.align();
-            let lb = bits_for_levels(s);
-            let mut levels = Vec::with_capacity(dim as usize);
-            for _ in 0..dim {
-                let l = r.read_bits(lb)? as u8;
-                if l > s {
-                    return Err(WireError::Malformed(format!("level {l} > s {s}")));
-                }
-                levels.push(l);
+            let s_v = r.read_u8()?;
+            let norm_v = r.read_val(prec)?;
+            if !matches!(out, Packet::Levels { .. }) {
+                *out = Packet::Levels {
+                    dim: 0,
+                    norm: 0.0,
+                    s: 0,
+                    signs: Vec::new(),
+                    levels: Vec::new(),
+                };
             }
-            Ok(Packet::Levels {
-                dim,
+            let Packet::Levels {
+                dim: out_dim,
                 norm,
                 s,
                 signs,
                 levels,
-            })
+            } = out
+            else {
+                unreachable!()
+            };
+            *out_dim = dim;
+            *norm = norm_v;
+            *s = s_v;
+            read_signs_into(&mut r, dim as usize, signs)?;
+            r.align();
+            let lb = bits_for_levels(s_v);
+            levels.clear();
+            for _ in 0..dim {
+                let l = r.read_bits(lb)? as u8;
+                if l > s_v {
+                    return Err(WireError::Malformed(format!("level {l} > s {s_v}")));
+                }
+                levels.push(l);
+            }
+            Ok(())
         }
         TAG_LEVELS_LINEAR => {
-            let s = r.read_u32()?;
-            let norm = r.read_val(prec)?;
-            let signs = read_signs(&mut r, dim as usize)?;
+            let s_v = r.read_u32()?;
+            let norm_v = r.read_val(prec)?;
+            if !matches!(out, Packet::LevelsLinear { .. }) {
+                *out = Packet::LevelsLinear {
+                    dim: 0,
+                    norm: 0.0,
+                    s: 0,
+                    signs: Vec::new(),
+                    levels: Vec::new(),
+                };
+            }
+            let Packet::LevelsLinear {
+                dim: out_dim,
+                norm,
+                s,
+                signs,
+                levels,
+            } = out
+            else {
+                unreachable!()
+            };
+            *out_dim = dim;
+            *norm = norm_v;
+            *s = s_v;
+            read_signs_into(&mut r, dim as usize, signs)?;
             r.align();
-            let n = s + 1;
+            let n = s_v + 1;
             let lb = if n <= 1 {
                 1
             } else {
                 (32 - (n - 1).leading_zeros()) as u64
             };
-            let mut levels = Vec::with_capacity(dim as usize);
+            levels.clear();
             for _ in 0..dim {
                 levels.push(r.read_bits(lb)? as u8);
             }
-            Ok(Packet::LevelsLinear {
-                dim,
-                norm,
-                s,
-                signs,
-                levels,
-            })
+            Ok(())
         }
         TAG_NATEXP => {
-            let signs = read_signs(&mut r, dim as usize)?;
+            if !matches!(out, Packet::NatExp { .. }) {
+                *out = Packet::NatExp {
+                    dim: 0,
+                    signs: Vec::new(),
+                    exps: Vec::new(),
+                };
+            }
+            let Packet::NatExp {
+                dim: out_dim,
+                signs,
+                exps,
+            } = out
+            else {
+                unreachable!()
+            };
+            *out_dim = dim;
+            read_signs_into(&mut r, dim as usize, signs)?;
             r.align();
-            let mut exps = Vec::with_capacity(dim as usize);
+            exps.clear();
             for _ in 0..dim {
                 exps.push(r.read_bits(8)? as u8 as i8);
             }
-            Ok(Packet::NatExp { dim, signs, exps })
+            Ok(())
         }
         TAG_SIGNSCALE => {
-            let scale = r.read_val(prec)?;
-            let signs = read_signs(&mut r, dim as usize)?;
-            Ok(Packet::SignScale { dim, scale, signs })
+            let scale_v = r.read_val(prec)?;
+            if !matches!(out, Packet::SignScale { .. }) {
+                *out = Packet::SignScale {
+                    dim: 0,
+                    scale: 0.0,
+                    signs: Vec::new(),
+                };
+            }
+            let Packet::SignScale {
+                dim: out_dim,
+                scale,
+                signs,
+            } = out
+            else {
+                unreachable!()
+            };
+            *out_dim = dim;
+            *scale = scale_v;
+            read_signs_into(&mut r, dim as usize, signs)?;
+            Ok(())
         }
         TAG_TERNARY => {
-            let scale = r.read_val(prec)?;
-            let mask = read_signs(&mut r, dim as usize)?;
+            let scale_v = r.read_val(prec)?;
+            if !matches!(out, Packet::TernaryPkt { .. }) {
+                *out = Packet::TernaryPkt {
+                    dim: 0,
+                    scale: 0.0,
+                    mask: Vec::new(),
+                    signs: Vec::new(),
+                };
+            }
+            let Packet::TernaryPkt {
+                dim: out_dim,
+                scale,
+                mask,
+                signs,
+            } = out
+            else {
+                unreachable!()
+            };
+            *out_dim = dim;
+            *scale = scale_v;
+            read_signs_into(&mut r, dim as usize, mask)?;
             r.align();
             let nnz = r.read_u32()? as usize;
             if nnz != mask.iter().filter(|&&b| b).count() {
                 return Err(WireError::Malformed("ternary nnz mismatch".into()));
             }
-            let signs = read_signs(&mut r, nnz)?;
-            Ok(Packet::TernaryPkt {
-                dim,
-                scale,
-                mask,
-                signs,
-            })
+            read_signs_into(&mut r, nnz, signs)?;
+            Ok(())
         }
-        TAG_ZERO => Ok(Packet::Zero { dim }),
+        TAG_ZERO => {
+            *out = Packet::Zero { dim };
+            Ok(())
+        }
         t => Err(WireError::BadTag(t)),
     }
 }
@@ -558,6 +708,61 @@ mod tests {
                 bytes <= bits + HEADER_BITS + 64,
                 "too much overhead: {bytes} vs {bits}"
             );
+        }
+    }
+
+    #[test]
+    fn encode_into_and_decode_into_reuse_buffers() {
+        let pkts = vec![
+            Packet::Dense(vec![1.5, -2.25, 0.0]),
+            Packet::Sparse {
+                dim: 80,
+                indices: vec![0, 7, 79],
+                values: vec![1.0, -0.5, 3.25],
+                scale: 10.0,
+            },
+            Packet::Levels {
+                dim: 5,
+                norm: 4.5,
+                s: 3,
+                signs: vec![true, false, true, true, false],
+                levels: vec![0, 1, 2, 3, 1],
+            },
+            Packet::TernaryPkt {
+                dim: 6,
+                scale: 1.0,
+                mask: vec![true, false, true, false, false, true],
+                signs: vec![true, false, true],
+            },
+            Packet::Zero { dim: 100 },
+        ];
+        // deliberately dirty scratch: reused across mismatched variants
+        let mut buf = vec![0xAAu8; 64];
+        let mut scratch = Packet::SignScale {
+            dim: 3,
+            scale: 9.0,
+            signs: vec![true; 3],
+        };
+        for pkt in &pkts {
+            let fresh = encode(pkt, ValPrec::F64);
+            encode_into(pkt, ValPrec::F64, &mut buf);
+            assert_eq!(fresh, buf, "encode_into must be byte-identical");
+            decode_into(&buf, &mut scratch).unwrap();
+            assert_eq!(&scratch, pkt, "decode_into must reproduce decode");
+            // second pass now hits the matched-variant reuse path
+            decode_into(&buf, &mut scratch).unwrap();
+            assert_eq!(&scratch, pkt);
+        }
+    }
+
+    #[test]
+    fn encode_dense_into_matches_dense_packet() {
+        let v = vec![0.5, -1.25, 3.0, 1e-9];
+        for prec in [ValPrec::F64, ValPrec::F32] {
+            let via_packet = encode(&Packet::Dense(v.clone()), prec);
+            let mut direct = vec![7u8; 3];
+            encode_dense_into(&v, prec, &mut direct);
+            assert_eq!(via_packet, direct);
         }
     }
 

@@ -1,0 +1,222 @@
+//! Counting-allocator verification of the zero-allocation round contract
+//! (see `compressors::packet` and `coordinator::runner` module docs).
+//!
+//! The allocator counts per-thread: worker threads own their (recycled)
+//! buffers, so only the calling thread's allocations are asserted. The
+//! whole file is one test binary so no unrelated test threads run
+//! concurrently with the armed allocator.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use shiftcomp::algorithms::{Algorithm, DcgdShift, Gdci};
+use shiftcomp::compressors::RandK;
+use shiftcomp::coordinator::DistributedRunner;
+use shiftcomp::problems::Problem;
+
+// ------------------------------------------------------ counting allocator
+
+struct CountingAlloc;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+#[inline]
+fn bump() {
+    if ARMED.load(Ordering::Relaxed) {
+        // try_with: never panic during TLS teardown
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Serializes the tests in this binary: `ARMED` is global, so concurrent
+/// arm/disarm windows could otherwise truncate each other's measurement.
+static TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Count heap allocations made by `f` **on this thread**.
+fn thread_allocs<F: FnOnce()>(f: F) -> u64 {
+    ALLOCS.with(|c| c.set(0));
+    ARMED.store(true, Ordering::SeqCst);
+    f();
+    ARMED.store(false, Ordering::SeqCst);
+    ALLOCS.with(|c| c.get())
+}
+
+// ------------------------------------------------- allocation-free problem
+
+/// Gradient = x − target per worker; `local_grad_into` touches no heap.
+struct MeanProblem {
+    d: usize,
+    n: usize,
+    targets: Vec<Vec<f64>>,
+    x_star: Vec<f64>,
+    grad_star: Vec<Vec<f64>>,
+}
+
+impl MeanProblem {
+    fn new(d: usize, n: usize, seed: u64) -> Self {
+        let mut rng = shiftcomp::util::rng::Pcg64::new(seed);
+        let targets: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.normal()).collect())
+            .collect();
+        let mut x_star = vec![0.0; d];
+        for t in &targets {
+            shiftcomp::linalg::axpy(1.0 / n as f64, t, &mut x_star);
+        }
+        let grad_star = targets
+            .iter()
+            .map(|t| x_star.iter().zip(t).map(|(x, t)| x - t).collect())
+            .collect();
+        Self {
+            d,
+            n,
+            targets,
+            x_star,
+            grad_star,
+        }
+    }
+}
+
+impl Problem for MeanProblem {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn n_workers(&self) -> usize {
+        self.n
+    }
+    fn local_grad_into(&self, worker: usize, x: &[f64], out: &mut [f64]) {
+        for j in 0..self.d {
+            out[j] = x[j] - self.targets[worker][j];
+        }
+    }
+    fn local_loss(&self, worker: usize, x: &[f64]) -> f64 {
+        0.5 * shiftcomp::linalg::dist_sq(x, &self.targets[worker])
+    }
+    fn l_i(&self, _worker: usize) -> f64 {
+        1.0
+    }
+    fn l(&self) -> f64 {
+        1.0
+    }
+    fn mu(&self) -> f64 {
+        1.0
+    }
+    fn x_star(&self) -> &[f64] {
+        &self.x_star
+    }
+    fn grad_star(&self, worker: usize) -> &[f64] {
+        &self.grad_star[worker]
+    }
+}
+
+// ------------------------------------------------------------------- tests
+
+/// Steady-state `DcgdShift::step` (DIANA + Rand-K, the common production
+/// configuration) performs **zero** heap allocations after warm-up.
+#[test]
+fn single_process_round_is_allocation_free() {
+    let _guard = TEST_LOCK.lock().unwrap();
+    let d = 4096;
+    let p = MeanProblem::new(d, 4, 1);
+    let mut alg = DcgdShift::diana(&p, RandK::with_q(d, 0.01), None, 1);
+    // warm-up: fill packet/scratch capacities and thread-local bitmaps
+    for _ in 0..5 {
+        alg.step(&p);
+    }
+    let allocs = thread_allocs(|| {
+        for _ in 0..10 {
+            alg.step(&p);
+        }
+    });
+    assert_eq!(allocs, 0, "DcgdShift::step allocated {allocs} times in 10 rounds");
+
+    // Fixed-shift DCGD too
+    let mut alg = DcgdShift::dcgd(&p, RandK::with_q(d, 0.01), 2);
+    for _ in 0..5 {
+        alg.step(&p);
+    }
+    let allocs = thread_allocs(|| {
+        for _ in 0..10 {
+            alg.step(&p);
+        }
+    });
+    assert_eq!(allocs, 0, "dcgd step allocated {allocs} times in 10 rounds");
+}
+
+/// GDCI's compressed-iterates loop is allocation-free too.
+#[test]
+fn gdci_round_is_allocation_free() {
+    let _guard = TEST_LOCK.lock().unwrap();
+    let d = 2048;
+    let p = MeanProblem::new(d, 4, 3);
+    let mut alg = Gdci::new(&p, RandK::with_q(d, 0.01), 3);
+    for _ in 0..5 {
+        alg.step(&p);
+    }
+    let allocs = thread_allocs(|| {
+        for _ in 0..10 {
+            alg.step(&p);
+        }
+    });
+    assert_eq!(allocs, 0, "Gdci::step allocated {allocs} times in 10 rounds");
+}
+
+/// The threaded coordinator's master thread: frame buffers, decode
+/// packets, gather slots and the broadcast Arc are all recycled, and the
+/// bounded channels send through preallocated slots. A small constant
+/// slack is allowed for channel-internal bookkeeping; the count must not
+/// scale with the dimension (i.e. no per-round O(d) or per-packet
+/// allocations survive).
+#[test]
+fn distributed_master_round_is_allocation_light() {
+    let _guard = TEST_LOCK.lock().unwrap();
+    let rounds = 10u64;
+    let mut counts = Vec::new();
+    for &d in &[1024usize, 8192] {
+        let n = 4;
+        let p = Arc::new(MeanProblem::new(d, n, 5));
+        let mut runner = DistributedRunner::diana(p.clone(), RandK::with_q(d, 0.01), 5, None);
+        for _ in 0..5 {
+            runner.step(p.as_ref());
+        }
+        let allocs = thread_allocs(|| {
+            for _ in 0..rounds {
+                runner.step(p.as_ref());
+            }
+        });
+        counts.push(allocs);
+        assert!(
+            allocs <= rounds * 2,
+            "master thread allocated {allocs} times in {rounds} rounds (d={d})"
+        );
+    }
+    assert_eq!(
+        counts[0], counts[1],
+        "master allocations must not scale with dimension: {counts:?}"
+    );
+}

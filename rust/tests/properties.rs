@@ -219,6 +219,118 @@ fn prop_standard_dithering_bound() {
     });
 }
 
+/// `add_scaled_into` is bit-identical to dense `decode` + axpy for every
+/// packet variant any compressor emits (the sparse-aware aggregation path
+/// must not perturb trajectories).
+#[test]
+fn prop_add_scaled_into_matches_decode_axpy() {
+    run(60, 0xadd5, |g| {
+        let d = g.usize_in(1, 80);
+        let c: Box<dyn Compressor> = if g.bool() {
+            random_unbiased(g, d)
+        } else {
+            random_biased(g, d)
+        };
+        let x = g.vec_mixed_scale(d);
+        let alpha = g.f64_in(-3.0, 3.0);
+        let mut rng = Pcg64::new(g.rng.next_u64());
+        let pkt = c.compress(&mut rng, &x);
+        // accumulator with no ±0.0 entries (the sparse path skips explicit
+        // zeros, which would otherwise normalize -0.0 to +0.0)
+        let acc: Vec<f64> = (0..d).map(|_| g.f64_in(0.5, 2.0)).collect();
+        let mut want = acc.clone();
+        let dec = pkt.decode();
+        for j in 0..d {
+            want[j] += alpha * dec[j];
+        }
+        let mut got = acc;
+        pkt.add_scaled_into(alpha, &mut got);
+        for j in 0..d {
+            if got[j].to_bits() != want[j].to_bits() {
+                return Err(format!(
+                    "{}: coord {j}: {} vs {} (alpha {alpha})",
+                    c.name(),
+                    got[j],
+                    want[j]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `compress_into` produces the identical packet — and consumes the RNG
+/// identically — to `compress`, regardless of what the reused scratch
+/// packet previously held.
+#[test]
+fn prop_compress_into_matches_compress() {
+    run(60, 0xc0137, |g| {
+        let d = g.usize_in(1, 80);
+        let c: Box<dyn Compressor> = if g.bool() {
+            random_unbiased(g, d)
+        } else {
+            random_biased(g, d)
+        };
+        let seed = g.rng.next_u64();
+        // dirty scratch from a different random compressor (often a
+        // mismatched variant, exercising the replace path)
+        let other: Box<dyn Compressor> = if g.bool() {
+            random_unbiased(g, d)
+        } else {
+            random_biased(g, d)
+        };
+        let mut scratch = other.compress(&mut Pcg64::new(seed ^ 1), &g.vec_normal(d, 1.0));
+
+        for trial in 0..2 {
+            // trial 1 reuses the now variant-matched scratch
+            let x = g.vec_mixed_scale(d);
+            let mut r1 = Pcg64::new(seed.wrapping_add(trial));
+            let mut r2 = r1.clone();
+            let fresh = c.compress(&mut r1, &x);
+            c.compress_into(&mut r2, &x, &mut scratch);
+            if fresh != scratch {
+                return Err(format!("{}: packet mismatch (trial {trial})", c.name()));
+            }
+            if r1.next_u64() != r2.next_u64() {
+                return Err(format!("{}: RNG streams diverged (trial {trial})", c.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Wire reuse paths: `encode_into` is byte-identical to `encode` and
+/// `decode_into` reproduces `decode` into dirty recycled packets.
+#[test]
+fn prop_wire_into_paths_match() {
+    run(60, 0x317e2, |g| {
+        let d = g.usize_in(1, 100);
+        let c: Box<dyn Compressor> = if g.bool() {
+            random_unbiased(g, d)
+        } else {
+            random_biased(g, d)
+        };
+        let x = g.vec_mixed_scale(d);
+        let mut rng = Pcg64::new(g.rng.next_u64());
+        let pkt = c.compress(&mut rng, &x);
+        let prec = shiftcomp::compressors::ValPrec::F64;
+        let fresh = wire::encode(&pkt, prec);
+        let mut buf = vec![0xA5u8; g.usize_in(0, 32)];
+        wire::encode_into(&pkt, prec, &mut buf);
+        if fresh != buf {
+            return Err(format!("{}: encode_into bytes differ", c.name()));
+        }
+        // decode into a dirty scratch packet of some other shape
+        let other: Box<dyn Compressor> = random_unbiased(g, d);
+        let mut scratch = other.compress(&mut Pcg64::new(7), &x);
+        wire::decode_into(&buf, &mut scratch).map_err(|e| format!("{}: {e}", c.name()))?;
+        if scratch != pkt {
+            return Err(format!("{}: decode_into packet differs", c.name()));
+        }
+        Ok(())
+    });
+}
+
 /// Determinism: the full stack is reproducible from the seed.
 #[test]
 fn prop_full_run_deterministic() {
