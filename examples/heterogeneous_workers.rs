@@ -57,6 +57,7 @@ fn run_fleet(name: &str, problem: Arc<Ridge>, qs: Vec<Box<dyn Compressor>>, roun
             prec: ValPrec::F64,
             seed: 42,
             links: Some(links),
+            resync_every: 0,
         },
     );
     let trace = runner.run(

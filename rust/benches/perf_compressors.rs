@@ -83,6 +83,34 @@ fn main() {
             ));
         }
     }
+    // wide sparse frame: 1000 18-bit indices — the word-at-a-time
+    // BitWriter/BitReader hot path (formerly one bit per loop iteration)
+    {
+        let d = if smoke { 20_000 } else { 200_000 };
+        let mut rng = Pcg64::new(9);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let comp = RandK::with_q(d, 0.005);
+        let pkt = comp.compress(&mut rng, &x);
+        let nnz = pkt.nnz();
+        let mut buf = Vec::new();
+        let mut back = Packet::Zero { dim: d as u32 };
+        let stats = bench_maybe_smoke(
+            &format!("wire roundtrip sparse-wide rand-k d={d} k={nnz}"),
+            smoke,
+            || {
+                wire::encode_into(bb(&pkt), ValPrec::F64, &mut buf);
+                wire::decode_into(&buf, &mut back).unwrap();
+                bb(&back);
+            },
+        );
+        rows.push(format!("wire-sparse-wide,{},{:.3e}", d, stats.median()));
+        json.push(JsonScenario::new(
+            format!("wire_sparse_wide_d{d}"),
+            stats.median(),
+            Some(nnz as f64 / stats.median()),
+        ));
+    }
+
     write_csv(
         "results/perf_compressors.csv",
         "name,dim,median_sec_per_iter",

@@ -13,8 +13,8 @@
 use std::sync::Arc;
 
 use shiftcomp::algorithms::{Algorithm, DcgdShift};
-use shiftcomp::compressors::{Compressor, RandK};
-use shiftcomp::coordinator::DistributedRunner;
+use shiftcomp::compressors::{Compressor, RandK, ValPrec};
+use shiftcomp::coordinator::{ClusterConfig, DistributedRunner, MethodKind};
 use shiftcomp::linalg::{axpy, zero};
 use shiftcomp::problems::{Problem, Ridge};
 use shiftcomp::util::bench::{
@@ -162,6 +162,169 @@ fn main() {
             sparse_rate / dense_rate,
             sparse_rate,
             dense_rate
+        );
+    }
+
+    // ------------------------------------------------- delta downlink
+    // The tentpole scenario of PR 2: plain DCGD keeps the aggregate
+    // n·K-sparse, so the broadcast delta is O(nnz) — measured per-worker
+    // downlink bytes/round vs the former dense d·8.
+    {
+        let (d, n) = if smoke { (20_000, 4) } else { (200_000, 16) };
+        let q = 0.005;
+        let pa = Arc::new(WideProblem::new(d, n, 9));
+        let mut dist = DistributedRunner::dcgd(pa.clone(), RandK::with_q(d, q), 9, None);
+        dist.step(pa.as_ref()); // round 0 ships the dense resync
+        let mut down_bits = 0u64;
+        let mut rounds = 0u64;
+        let stats = bench_maybe_smoke(
+            &format!("threaded dcgd delta-downlink round (d={d} n={n})"),
+            smoke,
+            || {
+                let s = dist.step(pa.as_ref());
+                down_bits += s.bits_down;
+                rounds += 1;
+            },
+        );
+        let down_bytes = down_bits as f64 / 8.0 / rounds as f64 / n as f64;
+        let dense_bytes = d as f64 * 8.0;
+        println!(
+            "  → downlink {down_bytes:.0} B/worker/round vs dense {dense_bytes:.0} ({:.1}× smaller)",
+            dense_bytes / down_bytes
+        );
+        rows.push(format!("downlink_delta_bytes_per_worker,{down_bytes:.3e}"));
+        json.push(
+            JsonScenario::new(
+                format!("downlink_delta_dcgd_d{d}n{n}"),
+                stats.median(),
+                Some((d * n) as f64 / stats.median()),
+            )
+            .with_down_bytes(down_bytes),
+        );
+    }
+
+    // --------------------------------------------------- n = 64 fleet
+    {
+        let (d, n) = if smoke { (5_000, 16) } else { (50_000, 64) };
+        let pa = Arc::new(WideProblem::new(d, n, 11));
+        let mut dist = DistributedRunner::diana(pa.clone(), RandK::with_q(d, 0.01), 11, None);
+        dist.step(pa.as_ref());
+        let mut down_bits = 0u64;
+        let mut rounds = 0u64;
+        let stats = bench_maybe_smoke(
+            &format!("threaded diana round (fleet d={d} n={n})"),
+            smoke,
+            || {
+                let s = dist.step(pa.as_ref());
+                down_bits += s.bits_down;
+                rounds += 1;
+            },
+        );
+        rows.push(format!("fleet_n{n},{:.3e}", stats.median()));
+        json.push(
+            JsonScenario::new(
+                format!("fleet_diana_d{d}n{n}"),
+                stats.median(),
+                Some((d * n) as f64 / stats.median()),
+            )
+            .with_down_bytes(down_bits as f64 / 8.0 / rounds as f64 / n as f64),
+        );
+    }
+
+    // --------------------------------------- heterogeneous-K fleet
+    // Worker i keeps K_i coordinates, K geometric from 0.1 % to ~3 % —
+    // exercises per-worker packet-shape caches and mixed frame sizes.
+    {
+        let (d, n) = if smoke { (10_000, 4) } else { (100_000, 16) };
+        let pa = Arc::new(WideProblem::new(d, n, 13));
+        let ks: Vec<usize> = (0..n)
+            .map(|i| {
+                let f = 0.001 * 1.25f64.powi(i as i32);
+                ((f * d as f64) as usize).clamp(1, d)
+            })
+            .collect();
+        let omegas: Vec<f64> = ks.iter().map(|&k| d as f64 / k as f64 - 1.0).collect();
+        let ss = shiftcomp::theory::dcgd_fixed(pa.as_ref(), &omegas);
+        let qs: Vec<Box<dyn Compressor>> = ks
+            .iter()
+            .map(|&k| Box::new(RandK::new(d, k)) as Box<dyn Compressor>)
+            .collect();
+        let mut dist = DistributedRunner::new(
+            pa.clone(),
+            qs,
+            None,
+            vec![vec![0.0; d]; n],
+            ClusterConfig {
+                method: MethodKind::Fixed,
+                gamma: ss.gamma,
+                prec: ValPrec::F64,
+                seed: 13,
+                links: None,
+                resync_every: 0,
+            },
+        );
+        dist.step(pa.as_ref());
+        let stats = bench_maybe_smoke(
+            &format!("threaded dcgd round (heterogeneous K, d={d} n={n})"),
+            smoke,
+            || {
+                dist.step(pa.as_ref());
+            },
+        );
+        rows.push(format!("hetero_k,{:.3e}", stats.median()));
+        json.push(JsonScenario::new(
+            format!("hetero_k_dcgd_d{d}n{n}"),
+            stats.median(),
+            Some((d * n) as f64 / stats.median()),
+        ));
+    }
+
+    // --------------------------------------------- f32 wire precision
+    {
+        let (d, n) = if smoke { (10_000, 4) } else { (100_000, 16) };
+        let pa = Arc::new(WideProblem::new(d, n, 15));
+        let omega = RandK::with_q(d, 0.005).omega().unwrap();
+        let ss = shiftcomp::theory::diana(pa.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+        let qs: Vec<Box<dyn Compressor>> = (0..n)
+            .map(|_| Box::new(RandK::with_q(d, 0.005)) as Box<dyn Compressor>)
+            .collect();
+        let mut dist = DistributedRunner::new(
+            pa.clone(),
+            qs,
+            None,
+            vec![vec![0.0; d]; n],
+            ClusterConfig {
+                method: MethodKind::Diana {
+                    alpha: ss.alpha,
+                    with_c: false,
+                },
+                gamma: ss.gamma,
+                prec: ValPrec::F32,
+                seed: 15,
+                links: None,
+                resync_every: 0,
+            },
+        );
+        dist.step(pa.as_ref());
+        let mut down_bits = 0u64;
+        let mut rounds = 0u64;
+        let stats = bench_maybe_smoke(
+            &format!("threaded diana round (f32 wire, d={d} n={n})"),
+            smoke,
+            || {
+                let s = dist.step(pa.as_ref());
+                down_bits += s.bits_down;
+                rounds += 1;
+            },
+        );
+        rows.push(format!("f32_wire,{:.3e}", stats.median()));
+        json.push(
+            JsonScenario::new(
+                format!("f32_wire_diana_d{d}n{n}"),
+                stats.median(),
+                Some((d * n) as f64 / stats.median()),
+            )
+            .with_down_bytes(down_bits as f64 / 8.0 / rounds as f64 / n as f64),
         );
     }
 

@@ -31,14 +31,23 @@
 //! preallocated at construction; steady-state rounds perform **zero heap
 //! allocations** (enforced by `tests/alloc_free.rs`). Aggregation cost is
 //! O(d + Σᵢ nnzᵢ) per round instead of the former O(n·d).
+//!
+//! The gradient step itself goes through the same downlink delta packet
+//! the threaded coordinator broadcasts ([`wire::build_update_packet`]):
+//! `x += 1·(−γ·g)` with identical roundings, so the two drivers stay
+//! bit-identical coordinate for coordinate, and `bits_down` reports the
+//! measured delta-frame size (O(nnz) when the aggregate is sparse)
+//! instead of the dense `n·d` formula. Rand-DIANA refreshes likewise
+//! mirror the coordinator's sparse shift-refresh delta.
 
 use crate::algorithms::shift_rules::ShiftRule;
 use crate::algorithms::{Algorithm, StepStats};
-use crate::compressors::{Compressor, Packet, ValPrec};
+use crate::compressors::{Compressor, Packet, PayloadBitsCache, ValPrec};
 use crate::linalg::{ax_into, axpy, sub_into};
 use crate::problems::Problem;
 use crate::theory;
 use crate::util::rng::Pcg64;
+use crate::wire;
 
 /// Per-worker state (compressor, shift, rule, RNG stream, scratch).
 struct WorkerSlot {
@@ -50,9 +59,14 @@ struct WorkerSlot {
     // scratch buffers and recycled packets (allocation-free hot path)
     grad: Vec<f64>,
     diff: Vec<f64>,
-    update: Vec<f64>,
     q_pkt: Packet,
     c_pkt: Packet,
+    /// Rand-DIANA refresh-delta builder (mirrors the coordinator worker)
+    refresh: wire::DeltaScratch,
+    /// per-shape payload-bits caches (Q / C / refresh frames)
+    q_bits: PayloadBitsCache,
+    c_bits: PayloadBitsCache,
+    r_bits: PayloadBitsCache,
     /// Rand-DIANA: did this round refresh the shift?
     refreshed: bool,
 }
@@ -71,6 +85,12 @@ pub struct DcgdShift {
     h_sum: Vec<f64>,
     /// gradient estimator g^k (master scratch)
     est: Vec<f64>,
+    /// downlink delta builder (master scratch, pre-sized to d)
+    delta: wire::DeltaScratch,
+    /// per-worker bits of the downlink frame the *next* round broadcasts —
+    /// mirrors the coordinator, whose round-k frame (round-0 resync, then
+    /// the previous round's delta) is encoded before round k runs
+    next_down_bits: u64,
 }
 
 impl DcgdShift {
@@ -245,9 +265,12 @@ impl DcgdShift {
                 rng: root.stream(i as u64 + 1),
                 grad: vec![0.0; d],
                 diff: vec![0.0; d],
-                update: vec![0.0; d],
                 q_pkt: Packet::Zero { dim: d as u32 },
                 c_pkt: Packet::Zero { dim: d as u32 },
+                refresh: wire::DeltaScratch::with_capacity(0),
+                q_bits: PayloadBitsCache::new(),
+                c_bits: PayloadBitsCache::new(),
+                r_bits: PayloadBitsCache::new(),
                 refreshed: false,
             })
             .collect();
@@ -259,11 +282,17 @@ impl DcgdShift {
             workers,
             h_sum,
             est: vec![0.0; d],
+            delta: wire::DeltaScratch::with_capacity(d),
+            // round 0 broadcasts the dense resync that bootstraps replicas
+            next_down_bits: wire::resync_frame_bits(d),
         }
     }
 
     pub fn set_x0(&mut self, x0: Vec<f64>) {
         assert_eq!(x0.len(), self.x.len());
+        // the coordinator would resync its replicas after an out-of-band
+        // iterate change; mirror the accounting
+        self.next_down_bits = wire::resync_frame_bits(self.x.len());
         self.x = x0;
     }
 
@@ -274,12 +303,6 @@ impl DcgdShift {
     /// Access a worker's current shift (tests).
     pub fn shift(&self, worker: usize) -> &[f64] {
         &self.workers[worker].h
-    }
-
-    /// Broadcast cost of one round: the master sends x^k (dense) to each of
-    /// the n workers.
-    fn broadcast_bits(&self) -> u64 {
-        self.workers.len() as u64 * self.x.len() as u64 * self.prec.bits()
     }
 }
 
@@ -310,7 +333,6 @@ impl Algorithm for DcgdShift {
 
     fn step(&mut self, p: &dyn Problem) -> StepStats {
         let n = self.workers.len();
-        let d = self.x.len();
         let inv_n = 1.0 / n as f64;
         let mut bits_up: u64 = 0;
         let mut bits_refresh: u64 = 0;
@@ -326,7 +348,7 @@ impl Algorithm for DcgdShift {
                 ShiftRule::Fixed => {
                     sub_into(&w.grad, &w.h, &mut w.diff);
                     w.q.compress_into(&mut w.rng, &w.diff, &mut w.q_pkt);
-                    bits_up += w.q_pkt.payload_bits(self.prec);
+                    bits_up += w.q_bits.bits(&w.q_pkt, self.prec);
                     // h unchanged
                 }
                 // --------------------------------------------------- Star
@@ -337,18 +359,18 @@ impl Algorithm for DcgdShift {
                     if let Some(cc) = c {
                         sub_into(&w.grad, gs, &mut w.diff);
                         cc.compress_into(&mut w.rng, &w.diff, &mut w.c_pkt);
-                        bits_up += w.c_pkt.payload_bits(self.prec);
-                        // h_new built in scratch, then swapped in
-                        w.update.copy_from_slice(gs);
-                        w.c_pkt.add_scaled_into(1.0, &mut w.update);
-                        std::mem::swap(&mut w.h, &mut w.update);
+                        bits_up += w.c_bits.bits(&w.c_pkt, self.prec);
+                        // h_i = ∇f_i(x*) + C_i(…), in place like the
+                        // coordinator worker
+                        w.h.copy_from_slice(gs);
+                        w.c_pkt.add_scaled_into(1.0, &mut w.h);
                     } else {
                         w.h.copy_from_slice(gs);
                     }
                     // m_i = Q_i(∇f_i − h_i^k)
                     sub_into(&w.grad, &w.h, &mut w.diff);
                     w.q.compress_into(&mut w.rng, &w.diff, &mut w.q_pkt);
-                    bits_up += w.q_pkt.payload_bits(self.prec);
+                    bits_up += w.q_bits.bits(&w.q_pkt, self.prec);
                 }
                 // -------------------------------------------------- DIANA
                 ShiftRule::Diana { alpha, c } => {
@@ -357,12 +379,12 @@ impl Algorithm for DcgdShift {
                     if let Some(cc) = c {
                         // c_i^k = C_i(v); residual v − c stays in diff
                         cc.compress_into(&mut w.rng, &w.diff, &mut w.c_pkt);
-                        bits_up += w.c_pkt.payload_bits(self.prec);
+                        bits_up += w.c_bits.bits(&w.c_pkt, self.prec);
                         w.c_pkt.add_scaled_into(-1.0, &mut w.diff);
                     }
                     // m_i^k = Q_i(v − c)
                     w.q.compress_into(&mut w.rng, &w.diff, &mut w.q_pkt);
-                    bits_up += w.q_pkt.payload_bits(self.prec);
+                    bits_up += w.q_bits.bits(&w.q_pkt, self.prec);
                     // shift learning h_i += α(c + q), straight from the
                     // packets at O(nnz)
                     if c.is_some() {
@@ -374,14 +396,19 @@ impl Algorithm for DcgdShift {
                 ShiftRule::RandDiana { p: pr } => {
                     sub_into(&w.grad, &w.h, &mut w.diff);
                     w.q.compress_into(&mut w.rng, &w.diff, &mut w.q_pkt);
-                    bits_up += w.q_pkt.payload_bits(self.prec);
-                    // w_i^{k+1} = x^k w.p. p — refresh ⇒ h_i^{k+1} =
-                    // ∇f_i(x^k); the copy is deferred to the master phase
-                    // (which needs h_i^k to update h_sum), matching what the
-                    // wire-observing distributed master reconstructs.
+                    bits_up += w.q_bits.bits(&w.q_pkt, self.prec);
+                    // w_i^{k+1} = x^k w.p. p — refresh ships a delta of the
+                    // shift vs the master's replica: h_new = ∇f = h + diff,
+                    // so only diff's support travels (sparse when x moved
+                    // sparsely since the last refresh). Both ends apply the
+                    // identical quantized packet; h lands within one
+                    // rounding of ∇f_i(x^k).
                     if w.rng.bernoulli(*pr) {
                         w.refreshed = true;
-                        bits_refresh += d as u64 * self.prec.bits();
+                        let r_pkt =
+                            wire::build_update_packet(&w.diff, 1.0, self.prec, &mut w.refresh);
+                        r_pkt.add_scaled_into(1.0, &mut w.h);
+                        bits_refresh += w.r_bits.bits(r_pkt, self.prec);
                     }
                 }
             }
@@ -413,20 +440,28 @@ impl Algorithm for DcgdShift {
                 ShiftRule::RandDiana { .. } => {
                     w.q_pkt.add_scaled_into(inv_n, &mut self.est);
                     if w.refreshed {
-                        for j in 0..d {
-                            self.h_sum[j] += w.grad[j] - w.h[j];
-                        }
-                        w.h.copy_from_slice(&w.grad);
+                        // same packet the worker applied to its shift
+                        w.refresh.packet().add_scaled_into(1.0, &mut self.h_sum);
                     }
                 }
             }
         }
-        // gradient step (no clone: est and x are disjoint buffers)
-        axpy(-self.gamma, &self.est, &mut self.x);
+        // gradient step, via the same downlink delta packet the threaded
+        // coordinator broadcasts: x += 1·(−γ·g) with identical roundings
+        // (bit-identical to axpy(−γ, g, x) on every touched coordinate)
+        let delta = wire::build_update_packet(&self.est, -self.gamma, self.prec, &mut self.delta);
+        delta.add_scaled_into(1.0, &mut self.x);
+        // Measured broadcast cost, mirroring the coordinator frame for
+        // frame: this round shipped the frame decided last round (round 0:
+        // the dense bootstrap resync), and the delta just built ships next
+        // round. (Periodic `resync_every` redundancy is a runner-only
+        // operational knob and is not mirrored here.)
+        let bits_down = n as u64 * self.next_down_bits;
+        self.next_down_bits = wire::down_frame_bits(delta, self.prec);
 
         StepStats {
             bits_up,
-            bits_down: self.broadcast_bits(),
+            bits_down,
             bits_refresh,
         }
     }

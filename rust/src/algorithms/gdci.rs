@@ -17,7 +17,7 @@
 //! eliminating the compression neighborhood entirely.
 
 use crate::algorithms::{Algorithm, StepStats};
-use crate::compressors::{Compressor, Packet, ValPrec};
+use crate::compressors::{Compressor, Packet, PayloadBitsCache, ValPrec};
 use crate::linalg::{axpy, zero};
 use crate::problems::Problem;
 use crate::theory;
@@ -36,6 +36,8 @@ pub struct Gdci {
     t_buf: Vec<f64>,
     /// recycled compression scratch (workers are driven sequentially)
     pkt: Packet,
+    /// per-shape payload-bits cache (homogeneous fleets hit every round)
+    bits_cache: PayloadBitsCache,
     mix: Vec<f64>,
 }
 
@@ -83,6 +85,7 @@ impl Gdci {
             grad: vec![0.0; d],
             t_buf: vec![0.0; d],
             pkt: Packet::Zero { dim: d as u32 },
+            bits_cache: PayloadBitsCache::new(),
             mix: vec![0.0; d],
         }
     }
@@ -116,7 +119,7 @@ impl Algorithm for Gdci {
                 self.t_buf[j] = self.x[j] - self.gamma * self.grad[j];
             }
             self.qs[i].compress_into(&mut self.rngs[i], &self.t_buf, &mut self.pkt);
-            bits_up += self.pkt.payload_bits(self.prec);
+            bits_up += self.bits_cache.bits(&self.pkt, self.prec);
             // sparse-aware O(nnz) aggregation, no dense decode
             self.pkt.add_scaled_into(inv_n, &mut self.mix);
         }
@@ -150,6 +153,8 @@ pub struct VrGdci {
     t_buf: Vec<f64>,
     /// recycled compression scratch (workers are driven sequentially)
     pkt: Packet,
+    /// per-shape payload-bits cache (homogeneous fleets hit every round)
+    bits_cache: PayloadBitsCache,
     delta_sum: Vec<f64>,
 }
 
@@ -186,6 +191,7 @@ impl VrGdci {
             grad: vec![0.0; d],
             t_buf: vec![0.0; d],
             pkt: Packet::Zero { dim: d as u32 },
+            bits_cache: PayloadBitsCache::new(),
             delta_sum: vec![0.0; d],
         }
     }
@@ -223,7 +229,7 @@ impl Algorithm for VrGdci {
                 self.t_buf[j] = self.x[j] - self.gamma * self.grad[j] - self.h[i][j];
             }
             self.qs[i].compress_into(&mut self.rngs[i], &self.t_buf, &mut self.pkt);
-            bits_up += self.pkt.payload_bits(self.prec);
+            bits_up += self.bits_cache.bits(&self.pkt, self.prec);
             // h_i^{k+1} = h_i^k + α δ_i — applied at O(nnz) from the packet
             self.pkt.add_scaled_into(self.alpha, &mut self.h[i]);
             self.pkt.add_scaled_into(inv_n, &mut self.delta_sum);

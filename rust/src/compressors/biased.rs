@@ -93,23 +93,7 @@ impl Compressor for TopK {
     }
     fn compress_into(&self, _rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
         assert_eq!(x.len(), self.d);
-        if !matches!(out, Packet::Sparse { .. }) {
-            *out = Packet::Sparse {
-                dim: 0,
-                indices: Vec::new(),
-                values: Vec::new(),
-                scale: 0.0,
-            };
-        }
-        let Packet::Sparse {
-            dim,
-            indices,
-            values,
-            scale,
-        } = out
-        else {
-            unreachable!()
-        };
+        let (dim, indices, values, scale) = out.ensure_sparse();
         *dim = self.d as u32;
         *scale = 1.0;
         // Partial selection of the K largest |x_i| in recycled scratch.
@@ -172,16 +156,7 @@ impl Compressor for SignScaled {
     }
     fn compress_into(&self, _rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
         assert_eq!(x.len(), self.d);
-        if !matches!(out, Packet::SignScale { .. }) {
-            *out = Packet::SignScale {
-                dim: 0,
-                scale: 0.0,
-                signs: Vec::new(),
-            };
-        }
-        let Packet::SignScale { dim, scale, signs } = out else {
-            unreachable!()
-        };
+        let (dim, scale, signs) = out.ensure_signscale();
         *dim = self.d as u32;
         *scale = nrm1(x) / self.d as f64;
         signs.clear();

@@ -23,7 +23,7 @@ pub mod unbiased;
 
 pub use biased::{SignScaled, TopK, ZeroCompressor};
 pub use combinators::{Induced, Scaled, Shifted};
-pub use packet::{index_bits, Packet, ValPrec};
+pub use packet::{index_bits, Packet, PayloadBitsCache, ValPrec};
 pub use unbiased::{
     BernoulliP, Identity, NaturalCompression, NaturalDithering, RandK, StandardDithering, Ternary,
 };

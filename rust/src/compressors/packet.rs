@@ -51,6 +51,20 @@ impl ValPrec {
             ValPrec::F64 => 64,
         }
     }
+
+    /// Round `v` to this wire precision (identity for [`F64`]). Idempotent,
+    /// and encoding a quantized value is lossless — state updates applied
+    /// from a quantized packet are therefore reproducible on both ends of
+    /// the link (the downlink delta and shift-refresh paths rely on this).
+    ///
+    /// [`F64`]: ValPrec::F64
+    #[inline]
+    pub fn quantize(self, v: f64) -> f64 {
+        match self {
+            ValPrec::F32 => v as f32 as f64,
+            ValPrec::F64 => v,
+        }
+    }
 }
 
 /// Compressed message payloads.
@@ -366,6 +380,215 @@ impl Packet {
     }
 }
 
+/// `ensure_*` accessors: make `self` hold the named variant — reusing its
+/// buffers when the variant already matches, replacing it with an empty
+/// instance otherwise — and return mutable references to the variant's
+/// fields. These centralize the "reset scratch packet to variant X,
+/// destructure, refill" pattern shared by every `compress_into` /
+/// `decode_into` implementation. Buffers are **not** cleared: callers
+/// refill them (and keep their capacity, which is what makes the
+/// steady-state round pipeline allocation-free).
+impl Packet {
+    pub fn ensure_dense(&mut self) -> &mut Vec<f64> {
+        if !matches!(self, Packet::Dense(_)) {
+            *self = Packet::Dense(Vec::new());
+        }
+        let Packet::Dense(v) = self else { unreachable!() };
+        v
+    }
+
+    /// Returns `(dim, indices, values, scale)`.
+    pub fn ensure_sparse(&mut self) -> (&mut u32, &mut Vec<u32>, &mut Vec<f64>, &mut f64) {
+        if !matches!(self, Packet::Sparse { .. }) {
+            *self = Packet::Sparse {
+                dim: 0,
+                indices: Vec::new(),
+                values: Vec::new(),
+                scale: 0.0,
+            };
+        }
+        let Packet::Sparse {
+            dim,
+            indices,
+            values,
+            scale,
+        } = self
+        else {
+            unreachable!()
+        };
+        (dim, indices, values, scale)
+    }
+
+    /// Returns `(dim, norm, s, signs, levels)`.
+    pub fn ensure_levels(
+        &mut self,
+    ) -> (&mut u32, &mut f64, &mut u8, &mut Vec<bool>, &mut Vec<u8>) {
+        if !matches!(self, Packet::Levels { .. }) {
+            *self = Packet::Levels {
+                dim: 0,
+                norm: 0.0,
+                s: 0,
+                signs: Vec::new(),
+                levels: Vec::new(),
+            };
+        }
+        let Packet::Levels {
+            dim,
+            norm,
+            s,
+            signs,
+            levels,
+        } = self
+        else {
+            unreachable!()
+        };
+        (dim, norm, s, signs, levels)
+    }
+
+    /// Returns `(dim, norm, s, signs, levels)`.
+    pub fn ensure_levels_linear(
+        &mut self,
+    ) -> (&mut u32, &mut f64, &mut u32, &mut Vec<bool>, &mut Vec<u8>) {
+        if !matches!(self, Packet::LevelsLinear { .. }) {
+            *self = Packet::LevelsLinear {
+                dim: 0,
+                norm: 0.0,
+                s: 0,
+                signs: Vec::new(),
+                levels: Vec::new(),
+            };
+        }
+        let Packet::LevelsLinear {
+            dim,
+            norm,
+            s,
+            signs,
+            levels,
+        } = self
+        else {
+            unreachable!()
+        };
+        (dim, norm, s, signs, levels)
+    }
+
+    /// Returns `(dim, signs, exps)`.
+    pub fn ensure_natexp(&mut self) -> (&mut u32, &mut Vec<bool>, &mut Vec<i8>) {
+        if !matches!(self, Packet::NatExp { .. }) {
+            *self = Packet::NatExp {
+                dim: 0,
+                signs: Vec::new(),
+                exps: Vec::new(),
+            };
+        }
+        let Packet::NatExp { dim, signs, exps } = self else {
+            unreachable!()
+        };
+        (dim, signs, exps)
+    }
+
+    /// Returns `(dim, scale, signs)`.
+    pub fn ensure_signscale(&mut self) -> (&mut u32, &mut f64, &mut Vec<bool>) {
+        if !matches!(self, Packet::SignScale { .. }) {
+            *self = Packet::SignScale {
+                dim: 0,
+                scale: 0.0,
+                signs: Vec::new(),
+            };
+        }
+        let Packet::SignScale { dim, scale, signs } = self else {
+            unreachable!()
+        };
+        (dim, scale, signs)
+    }
+
+    /// Returns `(dim, scale, mask, signs)`.
+    pub fn ensure_ternary(&mut self) -> (&mut u32, &mut f64, &mut Vec<bool>, &mut Vec<bool>) {
+        if !matches!(self, Packet::TernaryPkt { .. }) {
+            *self = Packet::TernaryPkt {
+                dim: 0,
+                scale: 0.0,
+                mask: Vec::new(),
+                signs: Vec::new(),
+            };
+        }
+        let Packet::TernaryPkt {
+            dim,
+            scale,
+            mask,
+            signs,
+        } = self
+        else {
+            unreachable!()
+        };
+        (dim, scale, mask, signs)
+    }
+}
+
+/// Cached [`Packet::payload_bits`] evaluator.
+///
+/// A worker emits the same packet *shape* (variant, dimension, level count,
+/// precision) every round; only the item count (sparse support, ternary
+/// hits) varies. This memoizes the shape-derived constants — index/level
+/// bit widths and fixed per-message terms — so the steady-state bit
+/// accounting is one multiply-add instead of a recomputation of
+/// `leading_zeros`-based formulas. Always returns exactly what
+/// [`Packet::payload_bits`] returns (pinned by tests).
+#[derive(Clone, Debug, Default)]
+pub struct PayloadBitsCache {
+    key: Option<(u8, u32, u32, u8)>,
+    fixed: u64,
+    per_item: u64,
+}
+
+impl PayloadBitsCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn bits(&mut self, pkt: &Packet, prec: ValPrec) -> u64 {
+        let vb = prec.bits();
+        // (variant tag, dim, shape param) identifies the formula constants;
+        // the item count is applied per call.
+        let (tag, dim, sp, count) = match pkt {
+            Packet::Dense(v) => (0u8, 0u32, 0u32, v.len() as u64),
+            Packet::Sparse { dim, indices, .. } => (1, *dim, 0, indices.len() as u64),
+            Packet::Levels { dim, s, .. } => (2, *dim, *s as u32, 0),
+            Packet::LevelsLinear { dim, s, .. } => (3, *dim, *s, 0),
+            Packet::NatExp { dim, .. } => (4, *dim, 0, 0),
+            Packet::SignScale { dim, .. } => (5, *dim, 0, 0),
+            Packet::TernaryPkt { dim, signs, .. } => (6, *dim, 0, signs.len() as u64),
+            Packet::Zero { .. } => (7, 0, 0, 0),
+        };
+        let key = (tag, dim, sp, prec.bits() as u8);
+        if self.key != Some(key) {
+            let (fixed, per_item) = match pkt {
+                Packet::Dense(_) => (0, vb),
+                Packet::Sparse { dim, .. } => (vb, index_bits(*dim) + vb),
+                Packet::Levels { dim, s, .. } => {
+                    (vb + *dim as u64 * (1 + bits_for_levels(*s)), 0)
+                }
+                Packet::LevelsLinear { dim, s, .. } => {
+                    let n = s + 1;
+                    let lb = if n <= 1 {
+                        1
+                    } else {
+                        (32 - (n - 1).leading_zeros()) as u64
+                    };
+                    (vb + *dim as u64 * (1 + lb), 0)
+                }
+                Packet::NatExp { dim, .. } => (*dim as u64 * 9, 0),
+                Packet::SignScale { dim, .. } => (vb + *dim as u64, 0),
+                Packet::TernaryPkt { dim, .. } => (vb + *dim as u64, 1),
+                Packet::Zero { .. } => (1, 0),
+            };
+            self.key = Some(key);
+            self.fixed = fixed;
+            self.per_item = per_item;
+        }
+        self.fixed + self.per_item * count
+    }
+}
+
 /// Bits needed per index for a vector of dimension `dim`.
 #[inline]
 pub fn index_bits(dim: u32) -> u64 {
@@ -564,6 +787,111 @@ mod tests {
         assert_eq!(index_bits(80), 7);
         assert_eq!(index_bits(256), 8);
         assert_eq!(index_bits(257), 9);
+    }
+
+    #[test]
+    fn ensure_accessors_reuse_matching_buffers() {
+        let mut p = Packet::Sparse {
+            dim: 9,
+            indices: Vec::with_capacity(123),
+            values: vec![1.0, 2.0],
+            scale: 4.0,
+        };
+        {
+            let (dim, indices, values, scale) = p.ensure_sparse();
+            assert_eq!(indices.capacity(), 123, "matching variant keeps buffers");
+            assert_eq!(values, &vec![1.0, 2.0], "buffers are not cleared");
+            *dim = 5;
+            *scale = 1.0;
+        }
+        // mismatched variant is replaced by an empty instance
+        let v = p.ensure_dense();
+        assert!(v.is_empty());
+        v.extend_from_slice(&[7.0, 8.0]);
+        assert_eq!(p, Packet::Dense(vec![7.0, 8.0]));
+        let (dim, norm, s, signs, levels) = p.ensure_levels();
+        *dim = 2;
+        *norm = 1.0;
+        *s = 1;
+        signs.extend_from_slice(&[true, false]);
+        levels.extend_from_slice(&[1, 0]);
+        assert_eq!(p.decode(), vec![1.0, 0.0]);
+        let _ = p.ensure_levels_linear();
+        assert!(matches!(p, Packet::LevelsLinear { .. }));
+        let _ = p.ensure_natexp();
+        assert!(matches!(p, Packet::NatExp { .. }));
+        let _ = p.ensure_signscale();
+        assert!(matches!(p, Packet::SignScale { .. }));
+        let _ = p.ensure_ternary();
+        assert!(matches!(p, Packet::TernaryPkt { .. }));
+    }
+
+    #[test]
+    fn payload_bits_cache_matches_direct_formula() {
+        let pkts = vec![
+            Packet::Dense(vec![1.0; 7]),
+            Packet::Sparse {
+                dim: 80,
+                indices: vec![0, 9, 79],
+                values: vec![1.0; 3],
+                scale: 1.0,
+            },
+            Packet::Sparse {
+                dim: 80,
+                indices: vec![5],
+                values: vec![2.0],
+                scale: 1.0,
+            },
+            Packet::Levels {
+                dim: 5,
+                norm: 1.0,
+                s: 3,
+                signs: vec![true; 5],
+                levels: vec![1; 5],
+            },
+            Packet::LevelsLinear {
+                dim: 5,
+                norm: 1.0,
+                s: 9,
+                signs: vec![true; 5],
+                levels: vec![1; 5],
+            },
+            Packet::NatExp {
+                dim: 4,
+                signs: vec![true; 4],
+                exps: vec![0; 4],
+            },
+            Packet::SignScale {
+                dim: 6,
+                scale: 1.0,
+                signs: vec![true; 6],
+            },
+            Packet::TernaryPkt {
+                dim: 6,
+                scale: 1.0,
+                mask: vec![true, false, true, false, false, true],
+                signs: vec![true, false, true],
+            },
+            Packet::Zero { dim: 11 },
+        ];
+        // one shared cache driven across mismatched shapes (worst case for
+        // the keying), plus repeated hits on the same shape
+        let mut cache = PayloadBitsCache::new();
+        for prec in [ValPrec::F64, ValPrec::F32] {
+            for pkt in &pkts {
+                assert_eq!(cache.bits(pkt, prec), pkt.payload_bits(prec), "{pkt:?}");
+                assert_eq!(cache.bits(pkt, prec), pkt.payload_bits(prec), "hit {pkt:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_roundtrips_through_f32() {
+        assert_eq!(ValPrec::F64.quantize(0.1), 0.1);
+        let q = ValPrec::F32.quantize(0.1);
+        assert_ne!(q, 0.1);
+        assert_eq!(ValPrec::F32.quantize(q), q, "quantize must be idempotent");
+        assert_eq!(q as f32 as f64, q);
     }
 
     #[test]

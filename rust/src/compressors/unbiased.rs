@@ -62,12 +62,9 @@ impl Compressor for Identity {
         Packet::Dense(x.to_vec())
     }
     fn compress_into(&self, _rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
-        if let Packet::Dense(v) = out {
-            v.clear();
-            v.extend_from_slice(x);
-        } else {
-            *out = Packet::Dense(x.to_vec());
-        }
+        let v = out.ensure_dense();
+        v.clear();
+        v.extend_from_slice(x);
     }
     fn omega(&self) -> Option<f64> {
         Some(0.0)
@@ -119,23 +116,7 @@ impl Compressor for RandK {
     }
     fn compress_into(&self, rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
         assert_eq!(x.len(), self.d);
-        if !matches!(out, Packet::Sparse { .. }) {
-            *out = Packet::Sparse {
-                dim: 0,
-                indices: Vec::new(),
-                values: Vec::new(),
-                scale: 0.0,
-            };
-        }
-        let Packet::Sparse {
-            dim,
-            indices,
-            values,
-            scale,
-        } = out
-        else {
-            unreachable!()
-        };
+        let (dim, indices, values, scale) = out.ensure_sparse();
         *dim = self.d as u32;
         *scale = self.d as f64 / self.k as f64;
         rng.subset_into(self.d, self.k, indices);
@@ -197,25 +178,7 @@ impl Compressor for NaturalDithering {
     }
     fn compress_into(&self, rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
         assert_eq!(x.len(), self.d);
-        if !matches!(out, Packet::Levels { .. }) {
-            *out = Packet::Levels {
-                dim: 0,
-                norm: 0.0,
-                s: 0,
-                signs: Vec::new(),
-                levels: Vec::new(),
-            };
-        }
-        let Packet::Levels {
-            dim,
-            norm,
-            s: out_s,
-            signs,
-            levels,
-        } = out
-        else {
-            unreachable!()
-        };
+        let (dim, norm, out_s, signs, levels) = out.ensure_levels();
         let s = self.s;
         *dim = self.d as u32;
         *out_s = s;
@@ -321,25 +284,7 @@ impl Compressor for StandardDithering {
     fn compress_into(&self, rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
         assert_eq!(x.len(), self.d);
         assert!(self.s <= 255, "StandardDithering supports s ≤ 255");
-        if !matches!(out, Packet::LevelsLinear { .. }) {
-            *out = Packet::LevelsLinear {
-                dim: 0,
-                norm: 0.0,
-                s: 0,
-                signs: Vec::new(),
-                levels: Vec::new(),
-            };
-        }
-        let Packet::LevelsLinear {
-            dim,
-            norm,
-            s: out_s,
-            signs,
-            levels,
-        } = out
-        else {
-            unreachable!()
-        };
+        let (dim, norm, out_s, signs, levels) = out.ensure_levels_linear();
         *dim = self.d as u32;
         *out_s = self.s;
         signs.clear();
@@ -403,16 +348,7 @@ impl Compressor for NaturalCompression {
     }
     fn compress_into(&self, rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
         assert_eq!(x.len(), self.d);
-        if !matches!(out, Packet::NatExp { .. }) {
-            *out = Packet::NatExp {
-                dim: 0,
-                signs: Vec::new(),
-                exps: Vec::new(),
-            };
-        }
-        let Packet::NatExp { dim, signs, exps } = out else {
-            unreachable!()
-        };
+        let (dim, signs, exps) = out.ensure_natexp();
         *dim = self.d as u32;
         signs.clear();
         signs.resize(self.d, false);
@@ -479,12 +415,9 @@ impl Compressor for BernoulliP {
     fn compress_into(&self, rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
         assert_eq!(x.len(), self.d);
         if rng.bernoulli(self.p) {
-            if let Packet::Dense(v) = out {
-                v.clear();
-                v.extend(x.iter().map(|v| v / self.p));
-            } else {
-                *out = Packet::Dense(x.iter().map(|v| v / self.p).collect());
-            }
+            let v = out.ensure_dense();
+            v.clear();
+            v.extend(x.iter().map(|v| v / self.p));
         } else {
             // miss: one flag bit on the wire. (The hit↔miss flip drops the
             // dense buffer — Bernoulli is not on the zero-alloc bench path.)
@@ -529,23 +462,7 @@ impl Compressor for Ternary {
     }
     fn compress_into(&self, rng: &mut Pcg64, x: &[f64], out: &mut Packet) {
         assert_eq!(x.len(), self.d);
-        if !matches!(out, Packet::TernaryPkt { .. }) {
-            *out = Packet::TernaryPkt {
-                dim: 0,
-                scale: 0.0,
-                mask: Vec::new(),
-                signs: Vec::new(),
-            };
-        }
-        let Packet::TernaryPkt {
-            dim,
-            scale,
-            mask,
-            signs,
-        } = out
-        else {
-            unreachable!()
-        };
+        let (dim, scale, mask, signs) = out.ensure_ternary();
         *dim = self.d as u32;
         mask.clear();
         mask.resize(self.d, false);

@@ -15,12 +15,25 @@
 //!
 //! `shiftcomp run --config file.json` drives exactly this path; the harness
 //! builds the same specs programmatically.
+//!
+//! An optional `"cluster"` object configures the threaded coordinator
+//! ([`ExperimentConfig::build_distributed`]): wire precision for the
+//! compressed frames and the dense-resync cadence of the delta-compressed
+//! broadcast downlink:
+//!
+//! ```json
+//! { "cluster": {"prec": "f32", "resync_every": 1000} }
+//! ```
+
+use std::sync::Arc;
 
 use crate::algorithms::{Algorithm, DcgdShift, Gd, Gdci, RunOpts, VrGdci};
 use crate::compressors::{
     BernoulliP, Compressor, Identity, NaturalCompression, NaturalDithering, RandK,
-    StandardDithering, Ternary, TopK,
+    StandardDithering, Ternary, TopK, ValPrec,
 };
+use crate::coordinator::{ClusterConfig, DistributedRunner, MethodKind};
+use crate::theory;
 use crate::data::{RegressionOpts, W2aOpts};
 use crate::problems::{Logistic, Problem, Quadratic, Ridge};
 use crate::util::json::Json;
@@ -241,6 +254,49 @@ impl CompressorSpec {
     }
 }
 
+// ------------------------------------------------------------------ cluster
+
+/// Coordinator-level knobs (the `"cluster"` JSON object, all optional).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClusterSpec {
+    /// broadcast a dense resync frame every this many rounds (0 = only on
+    /// round 0 and after `set_x0`)
+    pub resync_every: usize,
+    /// wire precision for compressed frames (delta values are pre-quantized
+    /// so replicas stay bit-exact; resync frames are always f64)
+    pub prec: ValPrec,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        Self {
+            resync_every: 0,
+            prec: ValPrec::F64,
+        }
+    }
+}
+
+impl ClusterSpec {
+    pub fn parse(j: &Json) -> Result<Self, ConfigError> {
+        if j.is_null() {
+            return Ok(Self::default());
+        }
+        let prec = match j.get("prec").as_str() {
+            None | Some("f64") => ValPrec::F64,
+            Some("f32") => ValPrec::F32,
+            Some(other) => return Err(bad(format!("unknown cluster.prec '{other}'"))),
+        };
+        let re_j = j.get("resync_every");
+        let resync_every = if re_j.is_null() {
+            0
+        } else {
+            re_j.as_usize()
+                .ok_or_else(|| bad("cluster.resync_every must be a non-negative integer"))?
+        };
+        Ok(Self { resync_every, prec })
+    }
+}
+
 // ---------------------------------------------------------------- algorithm
 
 #[derive(Clone, Debug, PartialEq)]
@@ -348,6 +404,7 @@ pub struct ExperimentConfig {
     pub algorithm: AlgorithmSpec,
     pub compressor: CompressorSpec,
     pub run: RunOpts,
+    pub cluster: ClusterSpec,
     pub seed: u64,
 }
 
@@ -365,12 +422,14 @@ impl ExperimentConfig {
             record_loss: run_j.get("record_loss").as_bool().unwrap_or(false),
             ..Default::default()
         };
+        let cluster = ClusterSpec::parse(j.get("cluster"))?;
         let seed = j.get("seed").as_f64().unwrap_or(42.0) as u64;
         Ok(Self {
             problem,
             algorithm,
             compressor,
             run,
+            cluster,
             seed,
         })
     }
@@ -386,6 +445,62 @@ impl ExperimentConfig {
         let problem = self.problem.build()?;
         let mut alg = self.algorithm.build(problem.as_ref(), &self.compressor, self.seed);
         Ok(alg.run(problem.as_ref(), &self.run))
+    }
+
+    /// Build the threaded coordinator for this experiment (same seeds,
+    /// shifts and step sizes as the single-process driver, plus the
+    /// `"cluster"` knobs). Errors on algorithms without a distributed
+    /// method mapping (GD/GDCI families) or biased compressors.
+    pub fn build_distributed(&self) -> Result<(Arc<dyn Problem>, DistributedRunner), ConfigError> {
+        let problem: Arc<dyn Problem> = Arc::from(self.problem.build()?);
+        let d = problem.dim();
+        let n = problem.n_workers();
+        let omega = self
+            .compressor
+            .omega(d)
+            .ok_or_else(|| bad("distributed runs need an unbiased compressor"))?;
+        let (method, gamma) = match &self.algorithm {
+            AlgorithmSpec::Dcgd => {
+                let ss = theory::dcgd_fixed(problem.as_ref(), &vec![omega; n]);
+                (MethodKind::Fixed, ss.gamma)
+            }
+            AlgorithmSpec::Diana { with_top_k_c: None } => {
+                let ss = theory::diana(problem.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+                (
+                    MethodKind::Diana {
+                        alpha: ss.alpha,
+                        with_c: false,
+                    },
+                    ss.gamma,
+                )
+            }
+            AlgorithmSpec::RandDiana { p, .. } => {
+                let pr = p.unwrap_or_else(|| theory::rand_diana_default_p(omega));
+                let ss = theory::rand_diana(problem.as_ref(), omega, &vec![pr; n], None);
+                (MethodKind::RandDiana { p: pr }, ss.gamma)
+            }
+            other => {
+                return Err(bad(format!(
+                    "algorithm {other:?} has no distributed-runner mapping"
+                )))
+            }
+        };
+        let qs: Vec<Box<dyn Compressor>> = (0..n).map(|_| self.compressor.build(d)).collect();
+        let runner = DistributedRunner::new(
+            problem.clone(),
+            qs,
+            None,
+            vec![vec![0.0; d]; n],
+            ClusterConfig {
+                method,
+                gamma,
+                prec: self.cluster.prec,
+                seed: self.seed,
+                links: None,
+                resync_every: self.cluster.resync_every,
+            },
+        );
+        Ok((problem, runner))
     }
 }
 
@@ -440,6 +555,53 @@ mod tests {
             }
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn cluster_spec_parses_and_defaults() {
+        let cfg = ExperimentConfig::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.cluster, ClusterSpec::default());
+        let with = r#"{
+            "problem": {"kind": "quadratic", "d": 10, "workers": 3, "seed": 1},
+            "algorithm": {"kind": "diana"},
+            "compressor": {"kind": "rand-k", "q": 0.3},
+            "cluster": {"prec": "f32", "resync_every": 25}
+        }"#;
+        let cfg = ExperimentConfig::parse(with).unwrap();
+        assert_eq!(cfg.cluster.resync_every, 25);
+        assert_eq!(cfg.cluster.prec, ValPrec::F32);
+        let bad = with.replace("f32", "f16");
+        assert!(ExperimentConfig::parse(&bad).is_err());
+        // a wrong-typed resync_every must error, not silently become 0
+        let bad = with.replace("25", "\"25\"");
+        assert!(ExperimentConfig::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn build_distributed_matches_single_process() {
+        // the config-built coordinator must track the config-built
+        // single-process driver bit for bit
+        let cfg = ExperimentConfig::parse(SAMPLE).unwrap();
+        let problem = cfg.problem.build().unwrap();
+        let mut single = cfg
+            .algorithm
+            .build(problem.as_ref(), &cfg.compressor, cfg.seed);
+        let (p, mut dist) = cfg.build_distributed().unwrap();
+        for k in 0..40 {
+            single.step(problem.as_ref());
+            dist.step(p.as_ref());
+            assert_eq!(single.x(), dist.x(), "diverged at round {k}");
+        }
+    }
+
+    #[test]
+    fn build_distributed_rejects_unmapped_algorithms() {
+        let text = SAMPLE.replace("rand-diana", "gdci");
+        let cfg = ExperimentConfig::parse(&text).unwrap();
+        assert!(cfg.build_distributed().is_err());
+        let text = SAMPLE.replace("rand-k", "top-k");
+        let cfg = ExperimentConfig::parse(&text).unwrap();
+        assert!(cfg.build_distributed().is_err());
     }
 
     #[test]

@@ -17,7 +17,14 @@ pub enum MethodKind {
 
 /// Master → worker.
 pub enum WorkerCommand {
-    /// Start round k with the broadcast iterate.
+    /// Start round k with the broadcast downlink frame.
+    ///
+    /// `down` is one wire-encoded frame (see [`crate::wire`]'s downlink
+    /// format) shared by every worker through the `Arc`: either an iterate
+    /// **delta** (x^k − x^{k−1}, applied to the worker's local replica at
+    /// O(nnz)) or a dense **resync** (round 0, periodic drift checks,
+    /// out-of-band iterate changes). The dense n·d broadcast of the old
+    /// protocol is gone — downlink cost is the frame's actual byte size.
     ///
     /// `recycled` returns the frame buffers the master consumed from this
     /// worker's *previous* round so the worker can encode into them again —
@@ -27,7 +34,7 @@ pub enum WorkerCommand {
     /// empty (default) frames.
     Round {
         k: usize,
-        x: Arc<Vec<f64>>,
+        down: Arc<Vec<u8>>,
         recycled: FrameSet,
     },
     /// Clean shutdown.
@@ -41,7 +48,8 @@ pub struct FrameSet {
     pub c_frame: Option<Vec<u8>>,
     /// main Q_i frame (always present)
     pub q_frame: Vec<u8>,
-    /// Rand-DIANA dense shift refresh, if this round refreshed
+    /// Rand-DIANA shift-refresh delta (sparse vs the master's replica of
+    /// this worker's shift), if this round refreshed
     pub refresh: Option<Vec<u8>>,
 }
 

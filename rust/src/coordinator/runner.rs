@@ -1,5 +1,25 @@
 //! Master/worker threaded runtime.
 //!
+//! # Delta-compressed broadcast downlink
+//!
+//! The master never ships the dense iterate. Each worker maintains a local
+//! **replica** of x and the master broadcasts one shared wire frame per
+//! round (see [`crate::wire`]'s downlink format):
+//!
+//! * a **delta** frame carrying x^{k} − x^{k−1} = −γ·g^{k−1} — already
+//!   sparse when the aggregate is sparse (plain DCGD with Rand-K at
+//!   K = 0.5 % ships ~0.5 % of the former d·8 bytes/worker), applied to
+//!   the replica via [`Packet::add_scaled_into`] at O(nnz);
+//! * a dense **resync** frame on round 0 (replica bootstrap for joiners),
+//!   every [`ClusterConfig::resync_every`] rounds (drift checks), and after
+//!   out-of-band iterate changes ([`DistributedRunner::set_x0`]).
+//!
+//! The master applies the *identical* delta packet to its own iterate, so
+//! master and replicas stay bit-equal — delta application is exact f64
+//! arithmetic and trajectories are bit-identical to the dense broadcast
+//! (pinned by `tests/coordinator.rs`). `StepStats::bits_down` is the
+//! measured frame size, not a dense formula.
+//!
 //! # Zero-allocation round pipeline
 //!
 //! Steady-state rounds recycle every buffer in the system; after warm-up
@@ -7,15 +27,15 @@
 //! (enforced by `tests/alloc_free.rs`):
 //!
 //! * **workers** own one scratch [`Packet`] per compressor
-//!   ([`Compressor::compress_into`]) plus the wire frame buffers, which the
-//!   master ships back inside the next [`WorkerCommand::Round`] after
-//!   consuming them;
+//!   ([`Compressor::compress_into`]), the iterate replica and its downlink
+//!   decode packet, plus the wire frame buffers, which the master ships
+//!   back inside the next [`WorkerCommand::Round`] after consuming them;
 //! * the **master** owns one scratch [`Packet`] per worker and frame kind
-//!   ([`wire::decode_into`]), pre-sized gather slots, and a double-buffered
-//!   `Arc` pair for the broadcast iterate — by the time a buffer's turn
-//!   comes round again, every worker has provably dropped its handle from
-//!   two rounds ago, so `Arc::get_mut` succeeds and the iterate is copied
-//!   in place;
+//!   ([`wire::decode_into`]), pre-sized gather slots, a pre-sized
+//!   [`wire::DeltaScratch`] for the downlink delta, and a double-buffered
+//!   `Arc` pair for the broadcast frame — by the time a buffer's turn
+//!   comes round again, every worker has provably dropped its handle, so
+//!   `Arc::get_mut` succeeds and the frame is encoded in place;
 //! * channels are **bounded** (`sync_channel`), so sends go through
 //!   preallocated slots instead of heap nodes.
 //!
@@ -25,22 +45,22 @@
 //! K = 0.5 % costs ~0.5 % of the former dense-decode aggregation. The
 //! single-process [`crate::algorithms::DcgdShift`] mirrors the same
 //! operation order so trajectories stay bit-identical (see
-//! `tests/coordinator.rs`). The only steady-state allocations left are the
-//! rare Rand-DIANA refresh frames on rounds where no recycled refresh
-//! buffer is available.
+//! `tests/coordinator.rs`). Rand-DIANA refreshes upload a sparse delta of
+//! the shift vs the master's replica instead of the former dense d-length
+//! spike.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::algorithms::{Algorithm, StepStats};
-use crate::compressors::{Compressor, Packet, ValPrec};
+use crate::compressors::{Compressor, Packet, PayloadBitsCache, ValPrec};
 use crate::coordinator::protocol::{FrameSet, MethodKind, WorkerCommand, WorkerUpdate};
 use crate::linalg::{ax_into, axpy, sub_into};
 use crate::net::{LinkModel, NetworkAccountant};
 use crate::problems::Problem;
 use crate::util::rng::Pcg64;
-use crate::wire;
+use crate::wire::{self, DownKind};
 
 /// Cluster-level configuration.
 pub struct ClusterConfig {
@@ -50,6 +70,9 @@ pub struct ClusterConfig {
     pub seed: u64,
     /// per-worker link models; `None` disables the time simulation
     pub links: Option<Vec<LinkModel>>,
+    /// broadcast a dense resync frame every this many rounds (0 = only on
+    /// round 0 and after `set_x0`); see the module doc
+    pub resync_every: usize,
 }
 
 struct WorkerThread {
@@ -89,17 +112,26 @@ pub struct DistributedRunner {
     wire_bits: Vec<u64>,
     /// consumed frame buffers, shipped back to their worker next round
     frames_pool: Vec<FrameSet>,
-    /// double-buffered broadcast iterate (parity = round % 2)
-    x_bufs: [Arc<Vec<f64>>; 2],
+    /// double-buffered broadcast frame (parity = round % 2): the frame sent
+    /// in round k is encoded either at the end of round k−1 (delta) or at
+    /// the start of round k (resync)
+    down_bufs: [Arc<Vec<u8>>; 2],
+    /// downlink delta builder scratch (both representations pre-sized to d)
+    delta: wire::DeltaScratch,
+    /// next broadcast must be a dense resync (round 0, after `set_x0`)
+    needs_resync: bool,
+    resync_every: usize,
     round: usize,
 }
 
 /// Worker-side loop: one thread per worker.
 ///
-/// All scratch (gradient/diff vectors, compression packets, frame buffers)
-/// is owned by the loop and recycled: frame buffers travel to the master
-/// inside the [`WorkerUpdate`] and come back, consumed, inside the next
-/// [`WorkerCommand::Round`].
+/// The worker owns a local replica of the iterate, updated per round from
+/// the broadcast downlink frame (delta applied in place, or dense resync).
+/// All scratch (replica, gradient/diff vectors, compression packets, frame
+/// buffers) is owned by the loop and recycled: frame buffers travel to the
+/// master inside the [`WorkerUpdate`] and come back, consumed, inside the
+/// next [`WorkerCommand::Round`].
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     wi: usize,
@@ -114,19 +146,44 @@ fn worker_loop(
     up_tx: SyncSender<WorkerUpdate>,
 ) {
     let d = problem.dim();
+    // local replica of the broadcast iterate (bootstrapped by the round-0
+    // resync frame, then maintained by delta application)
+    let mut x = vec![0.0; d];
+    let mut down_pkt = Packet::Zero { dim: d as u32 };
     let mut grad = vec![0.0; d];
     let mut diff = vec![0.0; d];
     let mut q_pkt = Packet::Zero { dim: d as u32 };
     let mut c_pkt = Packet::Zero { dim: d as u32 };
+    // Rand-DIANA refresh-delta builder (capacity grows to the refresh
+    // support on first use, then stays)
+    let mut refresh_scratch = wire::DeltaScratch::with_capacity(0);
+    // per-shape payload-bits caches (steady-state accounting is one
+    // multiply-add instead of a formula recompute)
+    let mut q_bits = PayloadBitsCache::new();
+    let mut c_bits = PayloadBitsCache::new();
+    let mut r_bits = PayloadBitsCache::new();
     // spare buffers reclaimed from recycled frames whose slot is optional
     let mut c_buf: Vec<u8> = Vec::new();
     let mut refresh_buf: Vec<u8> = Vec::new();
 
     while let Ok(cmd) = cmd_rx.recv() {
-        let (k, x, mut frames) = match cmd {
-            WorkerCommand::Round { k, x, recycled } => (k, x, recycled),
+        let (k, down, mut frames) = match cmd {
+            WorkerCommand::Round { k, down, recycled } => (k, down, recycled),
             WorkerCommand::Shutdown => break,
         };
+        // apply the downlink frame to the replica, then release the shared
+        // broadcast buffer before the heavy work — the master re-encodes
+        // into it once every worker has dropped its handle
+        match wire::decode_down_into(&down, &mut down_pkt).expect("malformed downlink frame") {
+            DownKind::Resync => {
+                let Packet::Dense(vals) = &down_pkt else {
+                    panic!("resync frame must be dense");
+                };
+                x.copy_from_slice(vals);
+            }
+            DownKind::Delta => down_pkt.add_scaled_into(1.0, &mut x),
+        }
+        drop(down);
         // reclaim the optional buffers so this round can reuse them even if
         // the corresponding frame is absent this time
         if let Some(b) = frames.c_frame.take() {
@@ -144,7 +201,7 @@ fn worker_loop(
             MethodKind::Fixed => {
                 sub_into(&grad, &h, &mut diff);
                 q.compress_into(&mut rng, &diff, &mut q_pkt);
-                payload_bits += q_pkt.payload_bits(prec);
+                payload_bits += q_bits.bits(&q_pkt, prec);
                 wire::encode_into(&q_pkt, prec, &mut frames.q_frame);
             }
             MethodKind::Star { with_c } => {
@@ -153,7 +210,7 @@ fn worker_loop(
                     let cc = c.as_mut().expect("star with_c needs a C compressor");
                     sub_into(&grad, gs, &mut diff);
                     cc.compress_into(&mut rng, &diff, &mut c_pkt);
-                    payload_bits += c_pkt.payload_bits(prec);
+                    payload_bits += c_bits.bits(&c_pkt, prec);
                     // worker's own new shift h = ∇f(x*) + C(∇f − ∇f(x*))
                     h.copy_from_slice(gs);
                     c_pkt.add_scaled_into(1.0, &mut h);
@@ -164,7 +221,7 @@ fn worker_loop(
                 }
                 sub_into(&grad, &h, &mut diff);
                 q.compress_into(&mut rng, &diff, &mut q_pkt);
-                payload_bits += q_pkt.payload_bits(prec);
+                payload_bits += q_bits.bits(&q_pkt, prec);
                 wire::encode_into(&q_pkt, prec, &mut frames.q_frame);
             }
             MethodKind::Diana { alpha, with_c } => {
@@ -172,14 +229,14 @@ fn worker_loop(
                 if with_c {
                     let cc = c.as_mut().expect("diana with_c needs a C compressor");
                     cc.compress_into(&mut rng, &diff, &mut c_pkt);
-                    payload_bits += c_pkt.payload_bits(prec);
+                    payload_bits += c_bits.bits(&c_pkt, prec);
                     // residual v − c stays in diff (O(nnz) application)
                     c_pkt.add_scaled_into(-1.0, &mut diff);
                     wire::encode_into(&c_pkt, prec, &mut c_buf);
                     frames.c_frame = Some(std::mem::take(&mut c_buf));
                 }
                 q.compress_into(&mut rng, &diff, &mut q_pkt);
-                payload_bits += q_pkt.payload_bits(prec);
+                payload_bits += q_bits.bits(&q_pkt, prec);
                 // shift learning h += α(c + q), straight from the packets —
                 // the master applies the identical update to its replica
                 if with_c {
@@ -191,13 +248,19 @@ fn worker_loop(
             MethodKind::RandDiana { p } => {
                 sub_into(&grad, &h, &mut diff);
                 q.compress_into(&mut rng, &diff, &mut q_pkt);
-                payload_bits += q_pkt.payload_bits(prec);
+                payload_bits += q_bits.bits(&q_pkt, prec);
                 wire::encode_into(&q_pkt, prec, &mut frames.q_frame);
                 if rng.bernoulli(p) {
-                    h.copy_from_slice(&grad);
-                    refresh_bits += d as u64 * prec.bits();
-                    // dense upload without cloning the shift vector
-                    wire::encode_dense_into(&h, prec, &mut refresh_buf);
+                    // Shift refresh as a delta vs the master's replica:
+                    // h_new = ∇f = h + diff, so only diff's support travels
+                    // (sparse when x moved sparsely since the last refresh).
+                    // Both ends apply the identical quantized packet, so
+                    // the replicas stay bit-equal; h lands within one
+                    // rounding of ∇f_i(x^k).
+                    let r_pkt = wire::build_update_packet(&diff, 1.0, prec, &mut refresh_scratch);
+                    r_pkt.add_scaled_into(1.0, &mut h);
+                    refresh_bits += r_bits.bits(r_pkt, prec);
+                    wire::encode_into(r_pkt, prec, &mut refresh_buf);
                     frames.refresh = Some(std::mem::take(&mut refresh_buf));
                 }
             }
@@ -306,14 +369,28 @@ impl DistributedRunner {
             slots: (0..n).map(|_| None).collect(),
             wire_bits: vec![0u64; n],
             frames_pool: (0..n).map(|_| FrameSet::default()).collect(),
-            x_bufs: [Arc::new(vec![0.0; d]), Arc::new(vec![0.0; d])],
+            // Worst-case downlink frame: a sparse delta is only chosen
+            // while its body is under the dense 8d bytes, and a resync is
+            // 8d + 7 — so 8d + 32 bounds every frame. Pre-sizing keeps
+            // steady-state encodes off the allocator even while the
+            // delta's support is still growing.
+            down_bufs: [
+                Arc::new(Vec::with_capacity(d * 8 + 32)),
+                Arc::new(Vec::with_capacity(d * 8 + 32)),
+            ],
+            delta: wire::DeltaScratch::with_capacity(d),
+            needs_resync: true,
+            resync_every: cfg.resync_every,
             round: 0,
         }
     }
 
+    /// Replace the iterate out of band. The next broadcast ships a dense
+    /// resync frame so worker replicas re-converge to the new state.
     pub fn set_x0(&mut self, x0: Vec<f64>) {
         assert_eq!(x0.len(), self.x.len());
         self.x = x0;
+        self.needs_resync = true;
     }
 
     /// Master-side reconstruction of a worker's shift (tests).
@@ -348,27 +425,37 @@ impl Algorithm for DistributedRunner {
         let n = self.workers.len();
         let d = self.x.len();
         let inv_n = 1.0 / n as f64;
+        let parity = self.round % 2;
 
-        // broadcast: copy the iterate into the double-buffered Arc. The
-        // buffer for this parity was last used two rounds ago; every worker
-        // has since completed a later `recv`, which happens only after it
-        // dropped that round's handle — so the refcount is 1 and the copy
-        // is in place. (Defensive fallback allocates; unreachable in
-        // steady state.)
-        {
-            let buf = &mut self.x_bufs[self.round % 2];
-            if let Some(v) = Arc::get_mut(buf) {
-                v.copy_from_slice(&self.x);
+        // broadcast: this round's downlink frame. The delta was pre-encoded
+        // at the end of the previous round into the double-buffered Arc;
+        // resync rounds overwrite it with the dense iterate (always f64 —
+        // resync re-establishes bit-exact replica state regardless of the
+        // delta precision). The buffer for this parity was last broadcast
+        // two rounds ago; every worker has since completed a later `recv`,
+        // which happens only after it dropped that round's handle — so the
+        // refcount is 1 and the encode is in place. (Defensive fallback
+        // allocates; unreachable in steady state.)
+        let resync = self.needs_resync
+            || (self.resync_every != 0 && self.round % self.resync_every == 0);
+        if resync {
+            let buf = &mut self.down_bufs[parity];
+            if let Some(b) = Arc::get_mut(buf) {
+                wire::encode_down_dense(DownKind::Resync, &self.x, ValPrec::F64, b);
             } else {
-                *buf = Arc::new(self.x.clone());
+                let mut b = Vec::with_capacity(d * 8 + 32);
+                wire::encode_down_dense(DownKind::Resync, &self.x, ValPrec::F64, &mut b);
+                *buf = Arc::new(b);
             }
+            self.needs_resync = false;
         }
+        let down_frame_bits = self.down_bufs[parity].len() as u64 * 8;
         for (wi, w) in self.workers.iter().enumerate() {
             let recycled = std::mem::take(&mut self.frames_pool[wi]);
             w.cmd_tx
                 .send(WorkerCommand::Round {
                     k: self.round,
-                    x: self.x_bufs[self.round % 2].clone(),
+                    down: self.down_bufs[parity].clone(),
                     recycled,
                 })
                 .expect("worker thread died");
@@ -435,15 +522,13 @@ impl Algorithm for DistributedRunner {
                         .expect("malformed frame from worker");
                     self.q_scratch[wi].add_scaled_into(inv_n, &mut self.est);
                     if let Some(refresh) = &upd.frames.refresh {
+                        // sparse shift-refresh delta: h_new = h + Δ, applied
+                        // identically to the replica and the maintained sum
+                        // (the worker applied the same packet to its h)
                         wire::decode_into(refresh, &mut self.c_scratch[wi])
                             .expect("malformed frame from worker");
-                        let Packet::Dense(vals) = &self.c_scratch[wi] else {
-                            panic!("refresh frame must be dense");
-                        };
-                        for j in 0..d {
-                            self.h_sum[j] += vals[j] - self.h[wi][j];
-                        }
-                        self.h[wi].copy_from_slice(vals);
+                        self.c_scratch[wi].add_scaled_into(1.0, &mut self.h[wi]);
+                        self.c_scratch[wi].add_scaled_into(1.0, &mut self.h_sum);
                     }
                 }
             }
@@ -451,13 +536,31 @@ impl Algorithm for DistributedRunner {
             self.frames_pool[wi] = upd.frames;
         }
 
-        // gradient step (no clone: est and x are disjoint buffers)
-        axpy(-self.gamma, &self.est, &mut self.x);
+        // gradient step, via the same delta packet the workers will apply:
+        // x += 1·(−γ·g) with identical roundings on both ends, so master
+        // and replicas stay bit-equal (and bit-identical to the dense
+        // axpy(−γ, g, x) reference on every touched coordinate)
+        let delta = wire::build_update_packet(&self.est, -self.gamma, self.prec, &mut self.delta);
+        delta.add_scaled_into(1.0, &mut self.x);
+        // pre-encode next round's downlink into the buffer this round
+        // retired (all round-k updates are in, so every worker has dropped
+        // its handle from round k−1)
+        {
+            let buf = &mut self.down_bufs[(self.round + 1) % 2];
+            if let Some(b) = Arc::get_mut(buf) {
+                wire::encode_down_into(DownKind::Delta, delta, self.prec, b);
+            } else {
+                let mut b = Vec::with_capacity(d * 8 + 32);
+                wire::encode_down_into(DownKind::Delta, delta, self.prec, &mut b);
+                *buf = Arc::new(b);
+            }
+        }
         self.round += 1;
 
-        let bits_down = (n * d) as u64 * self.prec.bits();
+        // measured downlink cost: the frame each worker actually received
+        let bits_down = n as u64 * down_frame_bits;
         if let Some(net) = &mut self.net {
-            net.round(&self.wire_bits, d as u64 * self.prec.bits());
+            net.round(&self.wire_bits, down_frame_bits);
         }
 
         StepStats {
@@ -512,6 +615,7 @@ impl DistributedRunner {
                 prec: ValPrec::F64,
                 seed,
                 links,
+                resync_every: 0,
             },
         )
     }
@@ -543,6 +647,7 @@ impl DistributedRunner {
                 prec: ValPrec::F64,
                 seed,
                 links,
+                resync_every: 0,
             },
         )
     }
@@ -572,6 +677,7 @@ impl DistributedRunner {
                 prec: ValPrec::F64,
                 seed,
                 links,
+                resync_every: 0,
             },
         )
     }

@@ -42,7 +42,7 @@ impl Manifest {
         let obj = j
             .get("entries")
             .as_obj()
-            .ok_or_else(|| any_err(format!("manifest.json: missing entries object")))?;
+            .ok_or_else(|| any_err("manifest.json: missing entries object"))?;
         for (name, e) in obj {
             let parse_specs = |key: &str| -> Result<Vec<(Vec<usize>, String)>> {
                 e.get(key)
@@ -55,7 +55,7 @@ impl Manifest {
                             .as_arr()
                             .ok_or_else(|| any_err(format!("entry {name}: bad shape")))?
                             .iter()
-                            .map(|d| d.as_usize().ok_or_else(|| any_err(format!("bad dim"))))
+                            .map(|d| d.as_usize().ok_or_else(|| any_err("bad dim")))
                             .collect::<Result<Vec<_>>>()?;
                         let dtype = s
                             .get("dtype")

@@ -167,6 +167,9 @@ pub struct JsonScenario {
     /// aggregate throughput, when the scenario has a natural coordinate
     /// count (used to track the sparse-aggregation win across PRs)
     pub coords_per_s: Option<f64>,
+    /// measured broadcast cost, when the scenario drives the coordinator
+    /// (tracks the delta-downlink win across PRs)
+    pub down_bytes_per_round: Option<f64>,
 }
 
 impl JsonScenario {
@@ -175,7 +178,14 @@ impl JsonScenario {
             scenario: scenario.into(),
             median_sec,
             coords_per_s,
+            down_bytes_per_round: None,
         }
+    }
+
+    /// Attach the measured per-worker downlink bytes/round.
+    pub fn with_down_bytes(mut self, bytes_per_round: f64) -> Self {
+        self.down_bytes_per_round = Some(bytes_per_round);
+        self
     }
 }
 
@@ -197,6 +207,9 @@ pub fn write_bench_json(path: &str, rows: &[JsonScenario]) -> std::io::Result<()
         let mut fields = vec![("median_sec", Json::num(r.median_sec))];
         if let Some(c) = r.coords_per_s {
             fields.push(("coords_per_s", Json::num(c)));
+        }
+        if let Some(b) = r.down_bytes_per_round {
+            fields.push(("down_bytes_per_round", Json::num(b)));
         }
         merged.insert(r.scenario.clone(), Json::obj(fields));
     }
@@ -260,7 +273,7 @@ mod tests {
             path_s,
             &[
                 JsonScenario::new("a", 0.25, Some(2e6)),
-                JsonScenario::new("b", 1.5, None),
+                JsonScenario::new("b", 1.5, None).with_down_bytes(512.0),
             ],
         )
         .unwrap();
@@ -269,6 +282,7 @@ mod tests {
         assert_eq!(j.get("a").get("coords_per_s").as_f64(), Some(2e6));
         assert_eq!(j.get("b").get("median_sec").as_f64(), Some(1.5));
         assert!(j.get("b").get("coords_per_s").is_null());
+        assert_eq!(j.get("b").get("down_bytes_per_round").as_f64(), Some(512.0));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

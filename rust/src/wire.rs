@@ -1,9 +1,11 @@
-//! Byte-level wire format for compressed messages.
+//! Byte-level wire format for compressed messages — uplink packet frames
+//! and the downlink broadcast frames.
 //!
 //! The coordinator serializes every [`Packet`] before handing it to the
 //! simulated network, so the "communicated bits" axis of the figures is the
-//! size of a *real decodable encoding*, not a formula. The format is
-//! self-describing and bit-packed:
+//! size of a *real decodable encoding*, not a formula.
+//!
+//! # Uplink packet frames
 //!
 //! ```text
 //! header: 1 byte tag | 1 byte prec | 4 bytes dim (LE)
@@ -13,7 +15,48 @@
 //!
 //! `Packet::payload_bits` counts only the body (the interesting,
 //! per-coordinate cost); `encode` adds the 6-byte header, reported
-//! separately by [`HEADER_BITS`].
+//! separately by [`HEADER_BITS`]. [`encoded_len`] gives the exact byte size
+//! of a frame without materializing it.
+//!
+//! # Downlink (broadcast) frames
+//!
+//! The master never ships the dense iterate: it broadcasts one frame per
+//! round, shared by every worker, that is either a **delta** or a
+//! **resync**:
+//!
+//! ```text
+//! downlink frame: 1 byte kind | packet frame (header + body as above)
+//!   kind = 1 (Delta):  packet decodes to x^{k+1} − x^k = −γ·g^k; workers
+//!                      apply it to their local replica with
+//!                      `add_scaled_into(1.0, &mut x)`. Sparse when the
+//!                      aggregate is sparse (exact bit accounting picks the
+//!                      cheaper of Sparse/Dense — see [`build_update_packet`]).
+//!   kind = 2 (Resync): a Dense packet of the full iterate; workers
+//!                      overwrite their replica. Sent on round 0 (replica
+//!                      bootstrap for joiners), every `resync_every` rounds,
+//!                      and after out-of-band iterate changes (`set_x0`).
+//!                      Resync frames are always f64 — they re-establish
+//!                      bit-exact replica state regardless of the delta
+//!                      precision.
+//! ```
+//!
+//! Delta application is exact f64 arithmetic: the packet carries the
+//! estimator values with scale −γ, so every touched coordinate computes
+//! `x[j] += (−γ)·g[j]` with the same two roundings as the dense
+//! `axpy(−γ, g, x)` reference — trajectories are bit-identical to a dense
+//! broadcast (pinned by `tests/coordinator.rs` and `tests/properties.rs`).
+//! Under f32 wire precision the values are pre-quantized so the encode →
+//! decode round-trip is lossless and master and replicas still agree bit
+//! for bit.
+//!
+//! # Alignment rules
+//!
+//! Bit-packed runs (signs, indices, levels) are written LSB-first within
+//! each byte by a word-at-a-time packer ([`BitWriter::write_bits`] /
+//! [`BitReader::read_bits`] move up to 64 bits per shift/mask operation —
+//! no per-bit loop). Multi-byte scalars (u32 lengths, f32/f64 values)
+//! always start on a byte boundary: writers pad the current byte with zero
+//! bits (`align`), readers skip to the next boundary.
 
 use crate::compressors::packet::{bits_for_levels, index_bits, Packet, ValPrec};
 
@@ -51,6 +94,28 @@ const TAG_SIGNSCALE: u8 = 6;
 const TAG_TERNARY: u8 = 7;
 const TAG_ZERO: u8 = 8;
 
+const DOWN_DELTA: u8 = 1;
+const DOWN_RESYNC: u8 = 2;
+
+/// What a downlink broadcast frame carries (see the module doc).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DownKind {
+    /// Iterate delta x^{k+1} − x^k, applied to the replica in place.
+    Delta,
+    /// Full dense iterate, overwriting the replica.
+    Resync,
+}
+
+/// Low `n` bits set (`n ≤ 64`).
+#[inline]
+fn mask(n: u64) -> u64 {
+    if n >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << n) - 1
+    }
+}
+
 // --------------------------------------------------------------- bit writer
 
 /// Bit-packer over a borrowed, caller-recycled byte buffer (the
@@ -68,16 +133,30 @@ impl<'a> BitWriter<'a> {
         Self { buf, bit_pos: 0 }
     }
 
+    /// Append the low `nbits` of `value`, LSB-first. Word-at-a-time: the
+    /// partial tail byte is topped up with one shift/mask, then whole bytes
+    /// are emitted directly — no per-bit loop.
     fn write_bits(&mut self, value: u64, nbits: u64) {
         debug_assert!(nbits <= 64);
-        for i in 0..nbits {
-            let bit = (value >> i) & 1;
-            if self.bit_pos == 0 {
-                self.buf.push(0);
-            }
+        let mut v = value & mask(nbits);
+        let mut left = nbits;
+        if self.bit_pos != 0 {
+            let free = (8 - self.bit_pos) as u64;
+            let take = left.min(free);
             let last = self.buf.len() - 1;
-            self.buf[last] |= (bit as u8) << self.bit_pos;
-            self.bit_pos = (self.bit_pos + 1) % 8;
+            self.buf[last] |= ((v & mask(take)) as u8) << self.bit_pos;
+            self.bit_pos = ((self.bit_pos as u64 + take) % 8) as u8;
+            v >>= take;
+            left -= take;
+        }
+        while left >= 8 {
+            self.buf.push(v as u8);
+            v >>= 8;
+            left -= 8;
+        }
+        if left > 0 {
+            self.buf.push(v as u8);
+            self.bit_pos = left as u8;
         }
     }
 
@@ -121,22 +200,43 @@ impl<'a> BitReader<'a> {
         }
     }
 
+    /// Bits left to read from the current position.
+    fn avail_bits(&self) -> u64 {
+        (self.buf.len() - self.byte_pos) as u64 * 8 - self.bit_pos as u64
+    }
+
+    /// Read `nbits` LSB-first. Mirrors [`BitWriter::write_bits`]: one
+    /// shift/mask for the partial head byte, then whole bytes.
     fn read_bits(&mut self, nbits: u64) -> Result<u64, WireError> {
+        debug_assert!(nbits <= 64);
+        let avail = self.avail_bits();
+        if nbits > avail {
+            return Err(WireError::Truncated {
+                needed: self.byte_pos + ((self.bit_pos as u64 + nbits + 7) / 8) as usize,
+                have: self.buf.len(),
+            });
+        }
         let mut out = 0u64;
-        for i in 0..nbits {
-            if self.byte_pos >= self.buf.len() {
-                return Err(WireError::Truncated {
-                    needed: self.byte_pos + 1,
-                    have: self.buf.len(),
-                });
-            }
-            let bit = (self.buf[self.byte_pos] >> self.bit_pos) & 1;
-            out |= (bit as u64) << i;
-            self.bit_pos += 1;
-            if self.bit_pos == 8 {
-                self.bit_pos = 0;
+        let mut got = 0u64;
+        if self.bit_pos != 0 {
+            let free = (8 - self.bit_pos) as u64;
+            let take = nbits.min(free);
+            out = ((self.buf[self.byte_pos] >> self.bit_pos) as u64) & mask(take);
+            got = take;
+            self.bit_pos = ((self.bit_pos as u64 + take) % 8) as u8;
+            if self.bit_pos == 0 {
                 self.byte_pos += 1;
             }
+        }
+        while nbits - got >= 8 {
+            out |= (self.buf[self.byte_pos] as u64) << got;
+            self.byte_pos += 1;
+            got += 8;
+        }
+        let rem = nbits - got;
+        if rem > 0 {
+            out |= ((self.buf[self.byte_pos] as u64) & mask(rem)) << got;
+            self.bit_pos = rem as u8;
         }
         Ok(out)
     }
@@ -206,17 +306,39 @@ impl<'a> BitReader<'a> {
     }
 }
 
+/// Sign/mask runs go through the packer 64 bools per word (bit i of the
+/// word is element i of the chunk — LSB-first, so the stream is
+/// byte-identical to one `write_bits(…, 1)` call per element).
 fn write_signs(w: &mut BitWriter, signs: &[bool]) {
-    for &s in signs {
-        w.write_bits(s as u64, 1);
+    for chunk in signs.chunks(64) {
+        let mut word = 0u64;
+        for (i, &s) in chunk.iter().enumerate() {
+            word |= (s as u64) << i;
+        }
+        w.write_bits(word, chunk.len() as u64);
     }
 }
 
 fn read_signs_into(r: &mut BitReader, n: usize, out: &mut Vec<bool>) -> Result<(), WireError> {
+    // Bound the reservation by the actual input before trusting a
+    // header-supplied count: a corrupted `dim` must produce `Truncated`,
+    // not a multi-gigabyte allocation attempt.
+    if n as u64 > r.avail_bits() {
+        return Err(WireError::Truncated {
+            needed: r.byte_pos + (n + 7) / 8,
+            have: r.buf.len(),
+        });
+    }
     out.clear();
     out.reserve(n);
-    for _ in 0..n {
-        out.push(r.read_bits(1)? == 1);
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(64);
+        let word = r.read_bits(take as u64)?;
+        for i in 0..take {
+            out.push((word >> i) & 1 == 1);
+        }
+        left -= take;
     }
     Ok(())
 }
@@ -236,19 +358,22 @@ pub fn encode(pkt: &Packet, prec: ValPrec) -> Vec<u8> {
 /// first). Byte-for-byte identical output; after warm-up, no allocation.
 pub fn encode_into(pkt: &Packet, prec: ValPrec, out: &mut Vec<u8>) {
     let mut w = BitWriter::new(out);
-    let prec_tag = match prec {
+    encode_packet(pkt, prec, &mut w);
+}
+
+fn prec_tag(prec: ValPrec) -> u8 {
+    match prec {
         ValPrec::F32 => 0u8,
         ValPrec::F64 => 1u8,
-    };
+    }
+}
+
+/// Write one packet frame (header + body) through an open writer — shared
+/// by the uplink ([`encode_into`]) and downlink ([`encode_down_into`])
+/// paths.
+fn encode_packet(pkt: &Packet, prec: ValPrec, w: &mut BitWriter) {
     match pkt {
-        Packet::Dense(v) => {
-            w.write_u8(TAG_DENSE);
-            w.write_u8(prec_tag);
-            w.write_u32(v.len() as u32);
-            for &x in v {
-                w.write_val(x, prec);
-            }
-        }
+        Packet::Dense(v) => encode_dense_body(v, prec, w),
         Packet::Sparse {
             dim,
             indices,
@@ -256,7 +381,7 @@ pub fn encode_into(pkt: &Packet, prec: ValPrec, out: &mut Vec<u8>) {
             scale,
         } => {
             w.write_u8(TAG_SPARSE);
-            w.write_u8(prec_tag);
+            w.write_u8(prec_tag(prec));
             w.write_u32(*dim);
             w.write_u32(indices.len() as u32);
             w.write_val(*scale, prec);
@@ -277,11 +402,11 @@ pub fn encode_into(pkt: &Packet, prec: ValPrec, out: &mut Vec<u8>) {
             levels,
         } => {
             w.write_u8(TAG_LEVELS);
-            w.write_u8(prec_tag);
+            w.write_u8(prec_tag(prec));
             w.write_u32(*dim);
             w.write_u8(*s);
             w.write_val(*norm, prec);
-            write_signs(&mut w, signs);
+            write_signs(w, signs);
             w.align();
             let lb = bits_for_levels(*s);
             for &l in levels {
@@ -296,11 +421,11 @@ pub fn encode_into(pkt: &Packet, prec: ValPrec, out: &mut Vec<u8>) {
             levels,
         } => {
             w.write_u8(TAG_LEVELS_LINEAR);
-            w.write_u8(prec_tag);
+            w.write_u8(prec_tag(prec));
             w.write_u32(*dim);
             w.write_u32(*s);
             w.write_val(*norm, prec);
-            write_signs(&mut w, signs);
+            write_signs(w, signs);
             w.align();
             let n = s + 1;
             let lb = if n <= 1 {
@@ -314,9 +439,9 @@ pub fn encode_into(pkt: &Packet, prec: ValPrec, out: &mut Vec<u8>) {
         }
         Packet::NatExp { dim, signs, exps } => {
             w.write_u8(TAG_NATEXP);
-            w.write_u8(prec_tag);
+            w.write_u8(prec_tag(prec));
             w.write_u32(*dim);
-            write_signs(&mut w, signs);
+            write_signs(w, signs);
             w.align();
             for &e in exps {
                 w.write_bits(e as u8 as u64, 8);
@@ -324,10 +449,10 @@ pub fn encode_into(pkt: &Packet, prec: ValPrec, out: &mut Vec<u8>) {
         }
         Packet::SignScale { dim, scale, signs } => {
             w.write_u8(TAG_SIGNSCALE);
-            w.write_u8(prec_tag);
+            w.write_u8(prec_tag(prec));
             w.write_u32(*dim);
             w.write_val(*scale, prec);
-            write_signs(&mut w, signs);
+            write_signs(w, signs);
         }
         Packet::TernaryPkt {
             dim,
@@ -336,37 +461,206 @@ pub fn encode_into(pkt: &Packet, prec: ValPrec, out: &mut Vec<u8>) {
             signs,
         } => {
             w.write_u8(TAG_TERNARY);
-            w.write_u8(prec_tag);
+            w.write_u8(prec_tag(prec));
             w.write_u32(*dim);
             w.write_val(*scale, prec);
-            write_signs(&mut w, mask);
+            write_signs(w, mask);
             w.align();
             w.write_u32(signs.len() as u32);
-            write_signs(&mut w, signs);
+            write_signs(w, signs);
         }
         Packet::Zero { dim } => {
             w.write_u8(TAG_ZERO);
-            w.write_u8(prec_tag);
+            w.write_u8(prec_tag(prec));
             w.write_u32(*dim);
         }
     }
 }
 
-/// Write a [`Packet::Dense`] frame directly from a slice — byte-identical
-/// to `encode_into(&Packet::Dense(values.to_vec()), ..)` without building
-/// the packet. Used by the Rand-DIANA shift-refresh path so the (dense,
-/// rare) refresh upload does not clone the shift vector.
-pub fn encode_dense_into(values: &[f64], prec: ValPrec, out: &mut Vec<u8>) {
-    let mut w = BitWriter::new(out);
-    let prec_tag = match prec {
-        ValPrec::F32 => 0u8,
-        ValPrec::F64 => 1u8,
-    };
+fn encode_dense_body(values: &[f64], prec: ValPrec, w: &mut BitWriter) {
     w.write_u8(TAG_DENSE);
-    w.write_u8(prec_tag);
+    w.write_u8(prec_tag(prec));
     w.write_u32(values.len() as u32);
     for &x in values {
         w.write_val(x, prec);
+    }
+}
+
+/// Exact encoded byte length of [`encode`]'s output for `pkt` (header
+/// included; the downlink kind byte is *not* — see [`down_frame_bits`]).
+/// Used for bit accounting without materializing a frame; pinned to
+/// `encode(pkt, prec).len()` by unit tests.
+pub fn encoded_len(pkt: &Packet, prec: ValPrec) -> usize {
+    let vb = match prec {
+        ValPrec::F32 => 4usize,
+        ValPrec::F64 => 8,
+    };
+    let hdr = 6usize;
+    match pkt {
+        Packet::Dense(v) => hdr + v.len() * vb,
+        Packet::Sparse { dim, indices, values, .. } => {
+            let ib = index_bits(*dim) as usize;
+            hdr + 4 + vb + (indices.len() * ib + 7) / 8 + values.len() * vb
+        }
+        Packet::Levels { dim, s, .. } => {
+            let lb = bits_for_levels(*s) as usize;
+            let d = *dim as usize;
+            hdr + 1 + vb + (d + 7) / 8 + (d * lb + 7) / 8
+        }
+        Packet::LevelsLinear { dim, s, .. } => {
+            let n = s + 1;
+            let lb = if n <= 1 {
+                1usize
+            } else {
+                (32 - (n - 1).leading_zeros()) as usize
+            };
+            let d = *dim as usize;
+            hdr + 4 + vb + (d + 7) / 8 + (d * lb + 7) / 8
+        }
+        Packet::NatExp { dim, .. } => hdr + (*dim as usize + 7) / 8 + *dim as usize,
+        Packet::SignScale { dim, .. } => hdr + vb + (*dim as usize + 7) / 8,
+        Packet::TernaryPkt { dim, signs, .. } => {
+            hdr + vb + (*dim as usize + 7) / 8 + 4 + (signs.len() + 7) / 8
+        }
+        Packet::Zero { .. } => hdr,
+    }
+}
+
+// -------------------------------------------------------- downlink framing
+
+/// Serialize a downlink frame: 1 kind byte, then the packet frame. The
+/// broadcast is one buffer shared (via `Arc`) by every worker.
+pub fn encode_down_into(kind: DownKind, pkt: &Packet, prec: ValPrec, out: &mut Vec<u8>) {
+    let mut w = BitWriter::new(out);
+    w.write_u8(down_tag(kind));
+    encode_packet(pkt, prec, &mut w);
+}
+
+/// Downlink resync frame straight from the iterate slice (no Dense packet
+/// is built): 1 kind byte + a Dense frame. Byte-identical to
+/// `encode_down_into(DownKind::Resync, &Packet::Dense(x.to_vec()), ..)`.
+pub fn encode_down_dense(kind: DownKind, values: &[f64], prec: ValPrec, out: &mut Vec<u8>) {
+    let mut w = BitWriter::new(out);
+    w.write_u8(down_tag(kind));
+    encode_dense_body(values, prec, &mut w);
+}
+
+fn down_tag(kind: DownKind) -> u8 {
+    match kind {
+        DownKind::Delta => DOWN_DELTA,
+        DownKind::Resync => DOWN_RESYNC,
+    }
+}
+
+/// Deserialize a downlink frame into a caller-recycled packet, returning
+/// what kind of frame it was. Same reuse semantics as [`decode_into`].
+pub fn decode_down_into(bytes: &[u8], out: &mut Packet) -> Result<DownKind, WireError> {
+    let mut r = BitReader::new(bytes);
+    let kind = match r.read_u8()? {
+        DOWN_DELTA => DownKind::Delta,
+        DOWN_RESYNC => DownKind::Resync,
+        t => return Err(WireError::BadTag(t)),
+    };
+    decode_packet(&mut r, out)?;
+    Ok(kind)
+}
+
+/// Size in bits of the downlink frame that would carry `pkt` (kind byte +
+/// header + body) — the measured per-worker broadcast cost.
+pub fn down_frame_bits(pkt: &Packet, prec: ValPrec) -> u64 {
+    8 + encoded_len(pkt, prec) as u64 * 8
+}
+
+/// Size in bits of a dense resync frame for a `d`-dimensional iterate
+/// (kind byte + header + d f64 values — resync frames are always f64).
+/// Equals what [`encode_down_dense`] emits; the single-process driver uses
+/// it to mirror the coordinator's round-0 bootstrap accounting.
+pub fn resync_frame_bits(d: usize) -> u64 {
+    (7 + 8 * d as u64) * 8
+}
+
+// ------------------------------------------------- update (delta) building
+
+/// Scratch for [`build_update_packet`]: both candidate representations
+/// stay allocated so the sparse↔dense choice can flip between rounds
+/// without touching the allocator.
+pub struct DeltaScratch {
+    sparse: Packet,
+    dense: Packet,
+    use_sparse: bool,
+}
+
+impl DeltaScratch {
+    /// `cap` pre-sizes the buffers (pass the dimension on hot master paths
+    /// so steady-state rounds never reallocate even while the aggregate's
+    /// support is still growing; pass 0 where warm-up growth is fine).
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            sparse: Packet::Sparse {
+                dim: 0,
+                indices: Vec::with_capacity(cap),
+                values: Vec::with_capacity(cap),
+                scale: 1.0,
+            },
+            dense: Packet::Dense(Vec::with_capacity(cap)),
+            use_sparse: true,
+        }
+    }
+
+    /// The representation chosen by the last [`build_update_packet`] call.
+    pub fn packet(&self) -> &Packet {
+        if self.use_sparse {
+            &self.sparse
+        } else {
+            &self.dense
+        }
+    }
+}
+
+/// Build a wire packet that decodes to `scale · v` on the nonzero support
+/// of `v`, choosing the cheaper of the Sparse and Dense representations by
+/// exact payload-bit accounting. This is the downlink delta builder
+/// (`v = g^k`, `scale = −γ`) and the Rand-DIANA refresh-delta builder
+/// (`v = ∇f_i − h_i`, `scale = 1`).
+///
+/// Values are pre-quantized to `prec`, so the encode → decode round-trip
+/// is lossless and *both* ends of the link can apply the identical packet
+/// (via `add_scaled_into(1.0, ..)`) — replicas stay bit-equal. At f64 every
+/// touched coordinate receives exactly `scale · v[j]` with the same two
+/// roundings as the dense `axpy(scale, v, out)` reference; coordinates
+/// where `v[j] == 0.0` exactly are skipped by the Sparse representation
+/// (invisible to `==`: the dense path would only normalize a `-0.0`).
+pub fn build_update_packet<'a>(
+    v: &[f64],
+    scale: f64,
+    prec: ValPrec,
+    scratch: &'a mut DeltaScratch,
+) -> &'a Packet {
+    let d = v.len();
+    let nnz = v.iter().filter(|&&x| x != 0.0).count();
+    let vb = prec.bits();
+    let ib = index_bits(d as u32);
+    let sparse_bits = nnz as u64 * (ib + vb) + vb;
+    let dense_bits = d as u64 * vb;
+    scratch.use_sparse = sparse_bits < dense_bits;
+    if scratch.use_sparse {
+        let (dim, indices, values, pscale) = scratch.sparse.ensure_sparse();
+        *dim = d as u32;
+        *pscale = prec.quantize(scale);
+        indices.clear();
+        values.clear();
+        for (j, &x) in v.iter().enumerate() {
+            if x != 0.0 {
+                indices.push(j as u32);
+                values.push(prec.quantize(x));
+            }
+        }
+        &scratch.sparse
+    } else {
+        let values = scratch.dense.ensure_dense();
+        values.clear();
+        values.extend(v.iter().map(|&x| prec.quantize(scale * x)));
+        &scratch.dense
     }
 }
 
@@ -386,6 +680,13 @@ pub fn decode(bytes: &[u8]) -> Result<Packet, WireError> {
 /// `out` is left in a valid but unspecified state.
 pub fn decode_into(bytes: &[u8], out: &mut Packet) -> Result<(), WireError> {
     let mut r = BitReader::new(bytes);
+    decode_packet(&mut r, out)
+}
+
+/// Read one packet frame (header + body) through an open reader — shared
+/// by the uplink ([`decode_into`]) and downlink ([`decode_down_into`])
+/// paths.
+fn decode_packet(r: &mut BitReader, out: &mut Packet) -> Result<(), WireError> {
     let tag = r.read_u8()?;
     let prec = match r.read_u8()? {
         0 => ValPrec::F32,
@@ -395,10 +696,18 @@ pub fn decode_into(bytes: &[u8], out: &mut Packet) -> Result<(), WireError> {
     let dim = r.read_u32()?;
     match tag {
         TAG_DENSE => {
-            if !matches!(out, Packet::Dense(_)) {
-                *out = Packet::Dense(Vec::new());
+            // bound the reservation by the input before trusting `dim`
+            // (values are byte-aligned, so avail_bits is the right budget
+            // up to one alignment byte — a marginal pass still errors
+            // cleanly in read_val)
+            let vb = prec.bits();
+            if dim as u64 * vb > r.avail_bits() {
+                return Err(WireError::Truncated {
+                    needed: r.byte_pos + (dim as u64 * vb / 8) as usize,
+                    have: r.buf.len(),
+                });
             }
-            let Packet::Dense(v) = out else { unreachable!() };
+            let v = out.ensure_dense();
             v.clear();
             v.reserve(dim as usize);
             for _ in 0..dim {
@@ -412,23 +721,7 @@ pub fn decode_into(bytes: &[u8], out: &mut Packet) -> Result<(), WireError> {
                 return Err(WireError::Malformed(format!("k={k} > dim={dim}")));
             }
             let scale_v = r.read_val(prec)?;
-            if !matches!(out, Packet::Sparse { .. }) {
-                *out = Packet::Sparse {
-                    dim: 0,
-                    indices: Vec::new(),
-                    values: Vec::new(),
-                    scale: 0.0,
-                };
-            }
-            let Packet::Sparse {
-                dim: out_dim,
-                indices,
-                values,
-                scale,
-            } = out
-            else {
-                unreachable!()
-            };
+            let (out_dim, indices, values, scale) = out.ensure_sparse();
             *out_dim = dim;
             *scale = scale_v;
             let ib = index_bits(dim);
@@ -450,29 +743,11 @@ pub fn decode_into(bytes: &[u8], out: &mut Packet) -> Result<(), WireError> {
         TAG_LEVELS => {
             let s_v = r.read_u8()?;
             let norm_v = r.read_val(prec)?;
-            if !matches!(out, Packet::Levels { .. }) {
-                *out = Packet::Levels {
-                    dim: 0,
-                    norm: 0.0,
-                    s: 0,
-                    signs: Vec::new(),
-                    levels: Vec::new(),
-                };
-            }
-            let Packet::Levels {
-                dim: out_dim,
-                norm,
-                s,
-                signs,
-                levels,
-            } = out
-            else {
-                unreachable!()
-            };
+            let (out_dim, norm, s, signs, levels) = out.ensure_levels();
             *out_dim = dim;
             *norm = norm_v;
             *s = s_v;
-            read_signs_into(&mut r, dim as usize, signs)?;
+            read_signs_into(r, dim as usize, signs)?;
             r.align();
             let lb = bits_for_levels(s_v);
             levels.clear();
@@ -487,30 +762,19 @@ pub fn decode_into(bytes: &[u8], out: &mut Packet) -> Result<(), WireError> {
         }
         TAG_LEVELS_LINEAR => {
             let s_v = r.read_u32()?;
-            let norm_v = r.read_val(prec)?;
-            if !matches!(out, Packet::LevelsLinear { .. }) {
-                *out = Packet::LevelsLinear {
-                    dim: 0,
-                    norm: 0.0,
-                    s: 0,
-                    signs: Vec::new(),
-                    levels: Vec::new(),
-                };
+            // wire-supplied: bound before the `s + 1` arithmetic below (and
+            // in Packet::payload_bits) can overflow
+            if s_v == u32::MAX {
+                return Err(WireError::Malformed(format!(
+                    "levels-linear s={s_v} out of range"
+                )));
             }
-            let Packet::LevelsLinear {
-                dim: out_dim,
-                norm,
-                s,
-                signs,
-                levels,
-            } = out
-            else {
-                unreachable!()
-            };
+            let norm_v = r.read_val(prec)?;
+            let (out_dim, norm, s, signs, levels) = out.ensure_levels_linear();
             *out_dim = dim;
             *norm = norm_v;
             *s = s_v;
-            read_signs_into(&mut r, dim as usize, signs)?;
+            read_signs_into(r, dim as usize, signs)?;
             r.align();
             let n = s_v + 1;
             let lb = if n <= 1 {
@@ -520,28 +784,20 @@ pub fn decode_into(bytes: &[u8], out: &mut Packet) -> Result<(), WireError> {
             };
             levels.clear();
             for _ in 0..dim {
-                levels.push(r.read_bits(lb)? as u8);
+                let l = r.read_bits(lb)?;
+                // levels are u8 grid indices in 0..=s — reject instead of
+                // silently truncating hostile values
+                if l > s_v as u64 || l > u8::MAX as u64 {
+                    return Err(WireError::Malformed(format!("level {l} > s {s_v}")));
+                }
+                levels.push(l as u8);
             }
             Ok(())
         }
         TAG_NATEXP => {
-            if !matches!(out, Packet::NatExp { .. }) {
-                *out = Packet::NatExp {
-                    dim: 0,
-                    signs: Vec::new(),
-                    exps: Vec::new(),
-                };
-            }
-            let Packet::NatExp {
-                dim: out_dim,
-                signs,
-                exps,
-            } = out
-            else {
-                unreachable!()
-            };
+            let (out_dim, signs, exps) = out.ensure_natexp();
             *out_dim = dim;
-            read_signs_into(&mut r, dim as usize, signs)?;
+            read_signs_into(r, dim as usize, signs)?;
             r.align();
             exps.clear();
             for _ in 0..dim {
@@ -551,54 +807,24 @@ pub fn decode_into(bytes: &[u8], out: &mut Packet) -> Result<(), WireError> {
         }
         TAG_SIGNSCALE => {
             let scale_v = r.read_val(prec)?;
-            if !matches!(out, Packet::SignScale { .. }) {
-                *out = Packet::SignScale {
-                    dim: 0,
-                    scale: 0.0,
-                    signs: Vec::new(),
-                };
-            }
-            let Packet::SignScale {
-                dim: out_dim,
-                scale,
-                signs,
-            } = out
-            else {
-                unreachable!()
-            };
+            let (out_dim, scale, signs) = out.ensure_signscale();
             *out_dim = dim;
             *scale = scale_v;
-            read_signs_into(&mut r, dim as usize, signs)?;
+            read_signs_into(r, dim as usize, signs)?;
             Ok(())
         }
         TAG_TERNARY => {
             let scale_v = r.read_val(prec)?;
-            if !matches!(out, Packet::TernaryPkt { .. }) {
-                *out = Packet::TernaryPkt {
-                    dim: 0,
-                    scale: 0.0,
-                    mask: Vec::new(),
-                    signs: Vec::new(),
-                };
-            }
-            let Packet::TernaryPkt {
-                dim: out_dim,
-                scale,
-                mask,
-                signs,
-            } = out
-            else {
-                unreachable!()
-            };
+            let (out_dim, scale, mask, signs) = out.ensure_ternary();
             *out_dim = dim;
             *scale = scale_v;
-            read_signs_into(&mut r, dim as usize, mask)?;
+            read_signs_into(r, dim as usize, mask)?;
             r.align();
             let nnz = r.read_u32()? as usize;
             if nnz != mask.iter().filter(|&&b| b).count() {
                 return Err(WireError::Malformed("ternary nnz mismatch".into()));
             }
-            read_signs_into(&mut r, nnz, signs)?;
+            read_signs_into(r, nnz, signs)?;
             Ok(())
         }
         TAG_ZERO => {
@@ -612,6 +838,7 @@ pub fn decode_into(bytes: &[u8], out: &mut Packet) -> Result<(), WireError> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest_lite::run;
 
     fn roundtrip(pkt: Packet) {
         for prec in [ValPrec::F64, ValPrec::F32] {
@@ -673,6 +900,233 @@ mod tests {
             signs: vec![true, false, true],
         });
         roundtrip(Packet::Zero { dim: 100 });
+    }
+
+    /// The word-at-a-time packer must agree, bit for bit, with a naive
+    /// one-bit-per-iteration reference on random unaligned write/read
+    /// sequences spanning every width 0..=64 and byte-boundary phase.
+    #[test]
+    fn word_at_a_time_matches_per_bit_reference() {
+        struct RefWriter {
+            buf: Vec<u8>,
+            bit_pos: u8,
+        }
+        impl RefWriter {
+            fn write_bits(&mut self, value: u64, nbits: u64) {
+                for i in 0..nbits {
+                    let bit = (value >> i) & 1;
+                    if self.bit_pos == 0 {
+                        self.buf.push(0);
+                    }
+                    let last = self.buf.len() - 1;
+                    self.buf[last] |= (bit as u8) << self.bit_pos;
+                    self.bit_pos = (self.bit_pos + 1) % 8;
+                }
+            }
+        }
+        run(300, 0xb17_f00d, |g| {
+            let n_ops = g.usize_in(1, 40);
+            let ops: Vec<(u64, u64)> = (0..n_ops)
+                .map(|_| {
+                    let nbits = g.usize_in(0, 64) as u64;
+                    let v = g.rng.next_u64();
+                    (v, nbits)
+                })
+                .collect();
+            let mut fast_buf = vec![0xEEu8; 8]; // dirty, recycled
+            let mut fast = BitWriter::new(&mut fast_buf);
+            let mut reference = RefWriter {
+                buf: Vec::new(),
+                bit_pos: 0,
+            };
+            for &(v, n) in &ops {
+                fast.write_bits(v, n);
+                reference.write_bits(v, n);
+                // occasionally re-align both, as frame encoders do
+                if n % 7 == 3 {
+                    fast.align();
+                    reference.bit_pos = 0;
+                }
+            }
+            if fast_buf != reference.buf {
+                return Err(format!("writer bytes diverged on {ops:?}"));
+            }
+            // read everything back
+            let mut r = BitReader::new(&fast_buf);
+            for &(v, n) in &ops {
+                let got = r.read_bits(n).map_err(|e| e.to_string())?;
+                if got != v & mask(n) {
+                    return Err(format!("read {got:#x} want {:#x} (n={n})", v & mask(n)));
+                }
+                if n % 7 == 3 {
+                    r.align();
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn read_bits_rejects_truncation_at_any_phase() {
+        let mut buf = Vec::new();
+        let mut w = BitWriter::new(&mut buf);
+        w.write_bits(0x5a5a, 16);
+        w.write_bits(0x3, 3);
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_bits(16).unwrap(), 0x5a5a);
+        assert_eq!(r.read_bits(3).unwrap(), 0x3);
+        assert!(r.read_bits(6).is_err(), "only 5 padding bits remain");
+        // a fresh reader asking for more than the buffer holds
+        let mut r = BitReader::new(&buf);
+        assert!(r.read_bits(64).is_err());
+    }
+
+    #[test]
+    fn encoded_len_matches_encode_exactly() {
+        let pkts = vec![
+            Packet::Dense(vec![1.5, -2.25, 0.0]),
+            Packet::Sparse {
+                dim: 200_000,
+                indices: vec![0, 77, 131_071, 199_999],
+                values: vec![1.0, -0.5, 3.25, 9.0],
+                scale: 2.0,
+            },
+            Packet::Sparse {
+                dim: 80,
+                indices: (0..80).collect(),
+                values: vec![0.5; 80],
+                scale: 1.0,
+            },
+            Packet::Levels {
+                dim: 13,
+                norm: 4.5,
+                s: 5,
+                signs: vec![true; 13],
+                levels: vec![1; 13],
+            },
+            Packet::LevelsLinear {
+                dim: 9,
+                norm: 2.0,
+                s: 200,
+                signs: vec![false; 9],
+                levels: vec![3; 9],
+            },
+            Packet::NatExp {
+                dim: 17,
+                signs: vec![true; 17],
+                exps: vec![0; 17],
+            },
+            Packet::SignScale {
+                dim: 9,
+                scale: 0.125,
+                signs: vec![true; 9],
+            },
+            Packet::TernaryPkt {
+                dim: 11,
+                scale: 1.0,
+                mask: vec![true, false, true, false, false, true, true, true, false, false, true],
+                signs: vec![true; 6],
+            },
+            Packet::Zero { dim: 100 },
+        ];
+        for pkt in &pkts {
+            for prec in [ValPrec::F64, ValPrec::F32] {
+                assert_eq!(
+                    encoded_len(pkt, prec),
+                    encode(pkt, prec).len(),
+                    "{pkt:?} {prec:?}"
+                );
+                let mut down = Vec::new();
+                encode_down_into(DownKind::Delta, pkt, prec, &mut down);
+                assert_eq!(
+                    down_frame_bits(pkt, prec),
+                    down.len() as u64 * 8,
+                    "{pkt:?} {prec:?} downlink"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn down_frames_roundtrip_and_reject_garbage() {
+        let pkt = Packet::Sparse {
+            dim: 1000,
+            indices: vec![3, 999],
+            values: vec![0.5, -2.0],
+            scale: -0.125,
+        };
+        let mut buf = Vec::new();
+        for kind in [DownKind::Delta, DownKind::Resync] {
+            encode_down_into(kind, &pkt, ValPrec::F64, &mut buf);
+            let mut out = Packet::Zero { dim: 0 };
+            assert_eq!(decode_down_into(&buf, &mut out).unwrap(), kind);
+            assert_eq!(out, pkt);
+            // truncation at every cut must error
+            for cut in 1..buf.len() {
+                assert!(decode_down_into(&buf[..cut], &mut out).is_err(), "cut {cut}");
+            }
+        }
+        // unknown kind byte
+        buf[0] = 99;
+        let mut out = Packet::Zero { dim: 0 };
+        assert!(decode_down_into(&buf, &mut out).is_err());
+        assert!(decode_down_into(&[], &mut out).is_err());
+        // resync fast path is byte-identical to the packet path
+        let x = vec![0.25, -1.5, 3.0];
+        let mut direct = Vec::new();
+        encode_down_dense(DownKind::Resync, &x, ValPrec::F64, &mut direct);
+        let mut via_pkt = Vec::new();
+        encode_down_into(DownKind::Resync, &Packet::Dense(x.clone()), ValPrec::F64, &mut via_pkt);
+        assert_eq!(direct, via_pkt);
+    }
+
+    #[test]
+    fn build_update_packet_matches_dense_axpy() {
+        // sparse regime: few nonzeros
+        let mut v = vec![0.0; 64];
+        v[3] = 1.5;
+        v[40] = -2.25;
+        v[63] = 1e-3;
+        let gamma = 0.37;
+        let mut scratch = DeltaScratch::with_capacity(0);
+        let pkt = build_update_packet(&v, -gamma, ValPrec::F64, &mut scratch);
+        assert!(matches!(pkt, Packet::Sparse { .. }), "sparse regime must pick Sparse");
+        let mut got = vec![1.0; 64];
+        let mut want = vec![1.0; 64];
+        pkt.add_scaled_into(1.0, &mut got);
+        crate::linalg::axpy(-gamma, &v, &mut want);
+        for j in 0..64 {
+            assert_eq!(got[j].to_bits(), want[j].to_bits(), "coord {j}");
+        }
+        // dense regime: all nonzero ⇒ Dense is cheaper
+        let v: Vec<f64> = (0..64).map(|i| (i as f64) - 31.5).collect();
+        let pkt = build_update_packet(&v, -gamma, ValPrec::F64, &mut scratch);
+        assert!(matches!(pkt, Packet::Dense(_)), "dense regime must pick Dense");
+        let mut got = vec![1.0; 64];
+        let mut want = vec![1.0; 64];
+        pkt.add_scaled_into(1.0, &mut got);
+        crate::linalg::axpy(-gamma, &v, &mut want);
+        for j in 0..64 {
+            assert_eq!(got[j].to_bits(), want[j].to_bits(), "coord {j}");
+        }
+        // `packet()` re-exposes the representation chosen by the last build
+        assert!(matches!(scratch.packet(), Packet::Dense(_)));
+    }
+
+    #[test]
+    fn build_update_packet_f32_is_wire_stable() {
+        // f32-quantized packets must survive the encode → decode round-trip
+        // unchanged, so master and replicas apply identical updates.
+        let mut v = vec![0.0; 32];
+        v[1] = 0.1; // not representable in f32 — must be pre-quantized
+        v[30] = -7.3;
+        let mut scratch = DeltaScratch::with_capacity(0);
+        let pkt = build_update_packet(&v, -0.123, ValPrec::F32, &mut scratch);
+        let mut buf = Vec::new();
+        encode_down_into(DownKind::Delta, pkt, ValPrec::F32, &mut buf);
+        let mut back = Packet::Zero { dim: 0 };
+        assert_eq!(decode_down_into(&buf, &mut back).unwrap(), DownKind::Delta);
+        assert_eq!(&back, pkt, "f32 round-trip must be lossless on quantized values");
     }
 
     #[test]
@@ -756,13 +1210,49 @@ mod tests {
     }
 
     #[test]
-    fn encode_dense_into_matches_dense_packet() {
+    fn encode_down_dense_matches_dense_packet() {
         let v = vec![0.5, -1.25, 3.0, 1e-9];
         for prec in [ValPrec::F64, ValPrec::F32] {
-            let via_packet = encode(&Packet::Dense(v.clone()), prec);
+            let mut via_packet = Vec::new();
+            encode_down_into(DownKind::Resync, &Packet::Dense(v.clone()), prec, &mut via_packet);
             let mut direct = vec![7u8; 3];
-            encode_dense_into(&v, prec, &mut direct);
+            encode_down_dense(DownKind::Resync, &v, prec, &mut direct);
             assert_eq!(via_packet, direct);
+        }
+    }
+
+    #[test]
+    fn corrupted_dim_errors_without_huge_allocation() {
+        // a 6-byte header claiming dim = u32::MAX must produce Truncated,
+        // not attempt a ~34 GB reservation
+        let mut bytes = vec![TAG_DENSE, 1];
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode(&bytes), Err(WireError::Truncated { .. })));
+        // signs-bearing variant goes through read_signs_into's guard
+        let mut bytes = vec![TAG_SIGNSCALE, 1];
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&1.0f64.to_le_bytes());
+        assert!(matches!(decode(&bytes), Err(WireError::Truncated { .. })));
+        // and through the downlink path the workers .expect() on
+        let mut down = vec![DOWN_DELTA, TAG_DENSE, 1];
+        down.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut out = Packet::Zero { dim: 0 };
+        assert!(decode_down_into(&down, &mut out).is_err());
+        // levels-linear with s = u32::MAX must error, not overflow s + 1
+        let mut bytes = vec![TAG_LEVELS_LINEAR, 1];
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&1.0f64.to_le_bytes());
+        assert!(matches!(decode(&bytes), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn resync_frame_bits_matches_encoder() {
+        for d in [0usize, 1, 7, 80, 1000] {
+            let x = vec![0.5; d];
+            let mut buf = Vec::new();
+            encode_down_dense(DownKind::Resync, &x, ValPrec::F64, &mut buf);
+            assert_eq!(resync_frame_bits(d), buf.len() as u64 * 8, "d={d}");
         }
     }
 

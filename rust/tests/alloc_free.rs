@@ -220,3 +220,27 @@ fn distributed_master_round_is_allocation_light() {
         "master allocations must not scale with dimension: {counts:?}"
     );
 }
+
+/// Rand-DIANA with p = 1 refreshes every round, driving the sparse
+/// shift-refresh delta and the downlink delta builder through their
+/// maximum support during warm-up — after which rounds must stay
+/// allocation-free.
+#[test]
+fn rand_diana_refresh_round_is_allocation_free() {
+    let _guard = TEST_LOCK.lock().unwrap();
+    let d = 2048;
+    let p = MeanProblem::new(d, 4, 7);
+    let mut alg = DcgdShift::rand_diana(&p, RandK::with_q(d, 0.01), Some(1.0), 7);
+    for _ in 0..5 {
+        alg.step(&p);
+    }
+    let allocs = thread_allocs(|| {
+        for _ in 0..10 {
+            alg.step(&p);
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "rand-diana refresh step allocated {allocs} times in 10 rounds"
+    );
+}

@@ -52,6 +52,7 @@ fn dcgd_bit_identical() {
             prec: ValPrec::F64,
             seed: 11,
             links: None,
+            resync_every: 0,
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 60);
@@ -84,6 +85,7 @@ fn diana_bit_identical() {
             prec: ValPrec::F64,
             seed: 13,
             links: None,
+            resync_every: 0,
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 60);
@@ -120,6 +122,7 @@ fn diana_with_c_bit_identical() {
             prec: ValPrec::F64,
             seed: 15,
             links: None,
+            resync_every: 0,
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 50);
@@ -146,6 +149,7 @@ fn rand_diana_bit_identical() {
             prec: ValPrec::F64,
             seed: 17,
             links: None,
+            resync_every: 0,
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 80);
@@ -173,6 +177,7 @@ fn star_bit_identical() {
             prec: ValPrec::F64,
             seed: 19,
             links: None,
+            resync_every: 0,
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 60);
@@ -246,4 +251,215 @@ fn distributed_runner_survives_many_rounds() {
     );
     assert_eq!(trace.rounds(), 501);
     assert!(!trace.diverged);
+}
+
+// ------------------------------------------------- delta downlink protocol
+
+/// Periodic dense resync frames must not perturb the trajectory: the
+/// resync carries exactly the master iterate, so a cluster resyncing every
+/// 3 rounds stays bit-identical to the single-process driver (which has no
+/// replicas at all).
+#[test]
+fn resync_rounds_stay_bit_identical() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let single = DcgdShift::diana(p.as_ref(), RandK::with_q(d, 0.3), None, 31);
+    let gamma = single.gamma;
+    let omega = RandK::with_q(d, 0.3).omega().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(RandK::with_q(d, 0.3)) as Box<dyn Compressor>)
+        .collect();
+    let dist = DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::Diana {
+                alpha: ss.alpha,
+                with_c: false,
+            },
+            gamma,
+            prec: ValPrec::F64,
+            seed: 31,
+            links: None,
+            resync_every: 3,
+        },
+    );
+    assert_trajectories_match(single, dist, p.as_ref(), 40);
+}
+
+/// `set_x0` mid-run replaces the master iterate out of band; the next
+/// broadcast must resync the worker replicas or every later round diverges.
+#[test]
+fn set_x0_mid_run_resyncs_replicas() {
+    let p = ridge();
+    let d = p.dim();
+    let mut single = DcgdShift::diana(p.as_ref(), RandK::with_q(d, 0.4), None, 33);
+    let gamma = single.gamma;
+    let n = p.n_workers();
+    let omega = RandK::with_q(d, 0.4).omega().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(RandK::with_q(d, 0.4)) as Box<dyn Compressor>)
+        .collect();
+    let mut dist = DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::Diana {
+                alpha: ss.alpha,
+                with_c: false,
+            },
+            gamma,
+            prec: ValPrec::F64,
+            seed: 33,
+            links: None,
+            resync_every: 0,
+        },
+    );
+    for _ in 0..5 {
+        single.step(p.as_ref());
+        dist.step(p.as_ref());
+    }
+    // out-of-band drift: both drivers jump to a fresh iterate
+    let x_new: Vec<f64> = (0..d).map(|j| 0.25 * (j as f64 + 1.0)).collect();
+    single.set_x0(x_new.clone());
+    dist.set_x0(x_new);
+    for k in 0..20 {
+        single.step(p.as_ref());
+        dist.step(p.as_ref());
+        assert_eq!(single.x(), dist.x(), "diverged {k} rounds after set_x0");
+    }
+}
+
+/// Downlink accounting is measured, not assumed: after the round-0 resync,
+/// a sparse-aggregate method's broadcast must cost O(nnz) — far below the
+/// dense d·prec bits/worker of the old protocol — and the resync round
+/// itself must cost about the dense size.
+#[test]
+fn downlink_bits_drop_to_nnz_after_resync() {
+    let p = ridge(); // d = 80, n = 10
+    let d = p.dim();
+    let n = p.n_workers();
+    // plain DCGD: zero shifts, so g^k is the ≤ n·K-sparse Rand-K union
+    let mut runner = DistributedRunner::dcgd(p.clone(), RandK::new(d, 2), 35, None);
+    let dense_bits_per_worker = d as u64 * 64;
+    let s0 = runner.step(p.as_ref());
+    assert!(
+        s0.bits_down >= n as u64 * dense_bits_per_worker,
+        "round 0 must ship a dense resync: {} bits",
+        s0.bits_down
+    );
+    let mut max_later = 0u64;
+    for _ in 0..10 {
+        let s = runner.step(p.as_ref());
+        max_later = max_later.max(s.bits_down);
+    }
+    // union of 10 workers × K=2 ⇒ ≤ 20 coords at ~72 bits/coord + frame
+    // overhead: far under half the dense 5120 bits/worker
+    assert!(
+        max_later < n as u64 * dense_bits_per_worker / 2,
+        "steady-state delta frames too large: {max_later} bits"
+    );
+    // and with a K = 1 fleet the delta is tiny
+    let mut runner = DistributedRunner::dcgd(p.clone(), RandK::new(d, 1), 36, None);
+    runner.step(p.as_ref());
+    let s = runner.step(p.as_ref());
+    assert!(
+        s.bits_down < n as u64 * dense_bits_per_worker / 4,
+        "K=1 delta should be near-empty: {} bits",
+        s.bits_down
+    );
+}
+
+/// An f32-precision cluster: deltas are quantized on the wire, but master
+/// and replicas still apply identical updates, so the run converges and the
+/// trajectory stays reproducible.
+#[test]
+fn f32_wire_precision_cluster_converges() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let omega = RandK::with_q(d, 0.5).omega().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+    let mk = || {
+        let qs: Vec<Box<dyn Compressor>> = (0..n)
+            .map(|_| Box::new(RandK::with_q(d, 0.5)) as Box<dyn Compressor>)
+            .collect();
+        DistributedRunner::new(
+            p.clone(),
+            qs,
+            None,
+            vec![vec![0.0; d]; n],
+            ClusterConfig {
+                method: MethodKind::Diana {
+                    alpha: ss.alpha,
+                    with_c: false,
+                },
+                gamma: ss.gamma,
+                prec: ValPrec::F32,
+                seed: 37,
+                links: None,
+                resync_every: 50,
+            },
+        )
+    };
+    let mut a = mk();
+    let mut b = mk();
+    for k in 0..120 {
+        a.step(p.as_ref());
+        b.step(p.as_ref());
+        assert_eq!(a.x(), b.x(), "f32 cluster not reproducible at round {k}");
+    }
+    let err = shiftcomp::linalg::dist_sq(a.x(), p.x_star())
+        / shiftcomp::linalg::dist_sq(&shiftcomp::algorithms::paper_x0(d, 37), p.x_star());
+    assert!(
+        err.is_finite() && err < 2.0,
+        "f32 cluster diverged: rel err {err}"
+    );
+}
+
+/// With `resync_every = 0` the single-process driver's downlink accounting
+/// mirrors the runner frame for frame: the round-0 dense bootstrap resync,
+/// then each round the delta frame built the round before.
+#[test]
+fn downlink_accounting_mirrors_runner() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let mut single = DcgdShift::diana(p.as_ref(), RandK::with_q(d, 0.2), None, 39);
+    let gamma = single.gamma;
+    let omega = RandK::with_q(d, 0.2).omega().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(RandK::with_q(d, 0.2)) as Box<dyn Compressor>)
+        .collect();
+    let mut dist = DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::Diana {
+                alpha: ss.alpha,
+                with_c: false,
+            },
+            gamma,
+            prec: ValPrec::F64,
+            seed: 39,
+            links: None,
+            resync_every: 0,
+        },
+    );
+    for k in 0..30 {
+        let a = single.step(p.as_ref());
+        let b = dist.step(p.as_ref());
+        assert_eq!(a.bits_down, b.bits_down, "downlink accounting at round {k}");
+        assert_eq!(a.bits_up, b.bits_up, "uplink accounting at round {k}");
+    }
 }

@@ -358,3 +358,86 @@ fn prop_full_run_deterministic() {
         Ok(())
     });
 }
+
+/// The downlink/refresh delta builder: applying the packet it returns is
+/// bit-identical to the dense `axpy(scale, v, out)` reference on every
+/// coordinate `v` carries, regardless of which representation it picked —
+/// the invariant that keeps delta-broadcast trajectories equal to the
+/// dense broadcast.
+#[test]
+fn prop_update_packet_matches_dense_axpy() {
+    use shiftcomp::compressors::ValPrec;
+    run(80, 0xde17a, |g| {
+        let d = g.usize_in(1, 120);
+        // mixed density: some runs near-empty, some fully dense
+        let keep = g.f64_in(0.0, 1.0);
+        let v: Vec<f64> = (0..d)
+            .map(|_| {
+                if g.f64_in(0.0, 1.0) < keep {
+                    g.f64_in(-5.0, 5.0)
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let scale = g.f64_in(-3.0, 3.0);
+        let mut scratch = wire::DeltaScratch::with_capacity(0);
+        let pkt = wire::build_update_packet(&v, scale, ValPrec::F64, &mut scratch);
+        let acc: Vec<f64> = (0..d).map(|_| g.f64_in(0.5, 2.0)).collect();
+        let mut want = acc.clone();
+        shiftcomp::linalg::axpy(scale, &v, &mut want);
+        let mut got = acc.clone();
+        pkt.add_scaled_into(1.0, &mut got);
+        for j in 0..d {
+            if v[j] != 0.0 && got[j].to_bits() != want[j].to_bits() {
+                return Err(format!("coord {j}: {} vs {} (scale {scale})", got[j], want[j]));
+            }
+            if v[j] == 0.0 && got[j] != want[j] {
+                return Err(format!("untouched coord {j} changed: {} vs {}", got[j], want[j]));
+            }
+        }
+        // the packet must survive the wire round-trip bit-exactly (both
+        // precisions — values are pre-quantized)
+        for prec in [ValPrec::F64, ValPrec::F32] {
+            let pkt = wire::build_update_packet(&v, scale, prec, &mut scratch);
+            let mut buf = Vec::new();
+            wire::encode_down_into(wire::DownKind::Delta, pkt, prec, &mut buf);
+            let mut back = shiftcomp::compressors::Packet::Zero { dim: 0 };
+            wire::decode_down_into(&buf, &mut back).map_err(|e| e.to_string())?;
+            if &back != pkt {
+                return Err(format!("{prec:?} wire round-trip not lossless"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The payload-bits cache returns exactly what the direct formula returns
+/// for every packet any compressor emits, across shape changes.
+#[test]
+fn prop_payload_bits_cache_exact() {
+    use shiftcomp::compressors::PayloadBitsCache;
+    run(60, 0xcac4e, |g| {
+        let mut cache = PayloadBitsCache::new();
+        for _ in 0..4 {
+            let d = g.usize_in(1, 90);
+            let c: Box<dyn Compressor> = if g.bool() {
+                random_unbiased(g, d)
+            } else {
+                random_biased(g, d)
+            };
+            let x = g.vec_mixed_scale(d);
+            let mut rng = Pcg64::new(g.rng.next_u64());
+            let pkt = c.compress(&mut rng, &x);
+            for prec in [
+                shiftcomp::compressors::ValPrec::F64,
+                shiftcomp::compressors::ValPrec::F32,
+            ] {
+                if cache.bits(&pkt, prec) != pkt.payload_bits(prec) {
+                    return Err(format!("{}: cache mismatch", c.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}

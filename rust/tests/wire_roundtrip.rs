@@ -158,3 +158,74 @@ fn garbage_never_panics() {
         Ok(())
     });
 }
+
+/// Word-boundary torture for the word-at-a-time packer: index widths from
+/// 1 to 21 bits (dims up to 2^21), support at both ends of the range, and
+/// every alignment phase hit by mixing in single-sign runs.
+#[test]
+fn wide_dim_unaligned_sparse_roundtrips() {
+    for pow in 1..=21u32 {
+        for extra in [0i64, -1, 1] {
+            let dim = ((1i64 << pow) + extra).max(2) as u32;
+            let mut indices = vec![0, 1, dim / 3, dim / 2, dim - 2, dim - 1];
+            indices.sort_unstable();
+            indices.dedup();
+            let values: Vec<f64> = (0..indices.len()).map(|i| i as f64 - 2.5).collect();
+            let pkt = Packet::Sparse {
+                dim,
+                indices,
+                values,
+                scale: 0.75,
+            };
+            let bytes = wire::encode(&pkt, ValPrec::F64);
+            assert_eq!(
+                bytes.len(),
+                wire::encoded_len(&pkt, ValPrec::F64),
+                "dim {dim}: length accounting"
+            );
+            let back = wire::decode(&bytes).unwrap();
+            assert_eq!(back, pkt, "dim {dim}");
+        }
+    }
+}
+
+/// Downlink frames round-trip for every packet shape any compressor emits,
+/// and truncations always error.
+#[test]
+fn prop_down_frames_roundtrip() {
+    run(120, 0x77137, |g| {
+        let pkt = random_packet(g);
+        let kind = if g.bool() {
+            wire::DownKind::Delta
+        } else {
+            wire::DownKind::Resync
+        };
+        let mut buf = vec![0x5Au8; g.usize_in(0, 16)];
+        wire::encode_down_into(kind, &pkt, ValPrec::F64, &mut buf);
+        let mut out = Packet::Zero { dim: 0 };
+        let got = wire::decode_down_into(&buf, &mut out).map_err(|e| e.to_string())?;
+        if got != kind {
+            return Err(format!("kind mutated: {got:?} vs {kind:?}"));
+        }
+        if out != pkt {
+            return Err(format!("downlink roundtrip mutated {pkt:?}"));
+        }
+        let cut = g.usize_in(0, buf.len() - 1);
+        if wire::decode_down_into(&buf[..cut], &mut out).is_ok() && out != pkt {
+            return Err(format!("truncated downlink decoded differently (cut {cut})"));
+        }
+        Ok(())
+    });
+}
+
+/// Garbage downlink bytes must never panic.
+#[test]
+fn down_garbage_never_panics() {
+    run(200, 0x77138, |g| {
+        let len = g.usize_in(0, 64);
+        let junk: Vec<u8> = (0..len).map(|_| g.usize_in(0, 255) as u8).collect();
+        let mut out = Packet::Zero { dim: 0 };
+        let _ = wire::decode_down_into(&junk, &mut out); // must not panic
+        Ok(())
+    });
+}
