@@ -58,6 +58,7 @@ fn run_fleet(name: &str, problem: Arc<Ridge>, qs: Vec<Box<dyn Compressor>>, roun
             seed: 42,
             links: Some(links),
             resync_every: 0,
+            downlink: None,
         },
     );
     let trace = runner.run(

@@ -13,7 +13,7 @@
 use std::sync::Arc;
 
 use shiftcomp::algorithms::{Algorithm, DcgdShift};
-use shiftcomp::compressors::{Compressor, RandK, ValPrec};
+use shiftcomp::compressors::{Compressor, RandK, TopK, ValPrec};
 use shiftcomp::coordinator::{ClusterConfig, DistributedRunner, MethodKind};
 use shiftcomp::linalg::{axpy, zero};
 use shiftcomp::problems::{Problem, Ridge};
@@ -189,7 +189,8 @@ fn main() {
         let down_bytes = down_bits as f64 / 8.0 / rounds as f64 / n as f64;
         let dense_bytes = d as f64 * 8.0;
         println!(
-            "  → downlink {down_bytes:.0} B/worker/round vs dense {dense_bytes:.0} ({:.1}× smaller)",
+            "  → downlink {down_bytes:.0} B/worker/round vs dense {dense_bytes:.0} \
+             ({:.1}× smaller)",
             dense_bytes / down_bytes
         );
         rows.push(format!("downlink_delta_bytes_per_worker,{down_bytes:.3e}"));
@@ -200,6 +201,90 @@ fn main() {
                 Some((d * n) as f64 / stats.median()),
             )
             .with_down_bytes(down_bytes),
+        );
+    }
+
+    // ------------------------------------------- EF-compressed downlink
+    // PR 3's tentpole scenario: Rand-DIANA on the wide-sparse problem with
+    // an aggressive refresh probability, so the learned shifts densify
+    // within a couple of rounds and the *exact* delta broadcast collapses
+    // to the dense 8d-byte frame. The Top-K error-fed-back downlink keeps
+    // the broadcast O(K) through the densification; both configurations
+    // are recorded so the ratio is visible in results/BENCH_perf.json.
+    {
+        let (d, n) = if smoke { (20_000, 4) } else { (200_000, 16) };
+        let q = 0.005;
+        let pr = 0.5; // refresh often ⇒ shifts (and the exact delta) densify fast
+        let omega = RandK::with_q(d, q).omega().unwrap();
+        let mk = |downlink: Option<Box<dyn Compressor>>, seed: u64| {
+            let pa = Arc::new(WideProblem::new(d, n, seed));
+            let ss = shiftcomp::theory::rand_diana(pa.as_ref(), omega, &vec![pr; n], None);
+            let qs: Vec<Box<dyn Compressor>> = (0..n)
+                .map(|_| Box::new(RandK::with_q(d, q)) as Box<dyn Compressor>)
+                .collect();
+            let dist = DistributedRunner::new(
+                pa.clone(),
+                qs,
+                None,
+                vec![vec![0.0; d]; n],
+                ClusterConfig {
+                    method: MethodKind::RandDiana { p: pr },
+                    gamma: ss.gamma,
+                    prec: ValPrec::F64,
+                    seed,
+                    links: None,
+                    resync_every: 0,
+                    downlink,
+                },
+            );
+            (pa, dist)
+        };
+        let dense_bytes = d as f64 * 8.0;
+        let mut results = Vec::new();
+        for (label, downlink) in [
+            ("exact", None::<Box<dyn Compressor>>),
+            ("ef_topk", Some(Box::new(TopK::with_q(d, q)) as Box<dyn Compressor>)),
+        ] {
+            let (pa, mut dist) = mk(downlink, 17);
+            // warm-up: round-0 resync + enough rounds for the shifts to
+            // densify (every worker refreshes w.h.p. within 5 rounds)
+            for _ in 0..5 {
+                dist.step(pa.as_ref());
+            }
+            let mut down_bits = 0u64;
+            let mut rounds = 0u64;
+            let stats = bench_maybe_smoke(
+                &format!("rand-diana densified downlink [{label}] (d={d} n={n})"),
+                smoke,
+                || {
+                    let s = dist.step(pa.as_ref());
+                    down_bits += s.bits_down;
+                    rounds += 1;
+                },
+            );
+            let down_bytes = down_bits as f64 / 8.0 / rounds as f64 / n as f64;
+            println!(
+                "  → [{label}] downlink {down_bytes:.0} B/worker/round vs dense {dense_bytes:.0} \
+                 ({:.1}× smaller)",
+                dense_bytes / down_bytes
+            );
+            rows.push(format!("downlink_{label}_rand_diana_bytes,{down_bytes:.3e}"));
+            json.push(
+                JsonScenario::new(
+                    format!("downlink_{label}_rand_diana_d{d}n{n}"),
+                    stats.median(),
+                    Some((d * n) as f64 / stats.median()),
+                )
+                .with_down_bytes(down_bytes),
+            );
+            results.push((label, down_bytes));
+        }
+        let exact_bytes = results[0].1;
+        let ef_bytes = results[1].1;
+        println!(
+            "  → EF Top-K keeps the densified broadcast {:.1}× below the exact path \
+             ({ef_bytes:.0} vs {exact_bytes:.0} B/worker/round; dense frame {dense_bytes:.0} B)",
+            exact_bytes / ef_bytes
         );
     }
 
@@ -261,6 +346,7 @@ fn main() {
                 seed: 13,
                 links: None,
                 resync_every: 0,
+                downlink: None,
             },
         );
         dist.step(pa.as_ref());
@@ -303,6 +389,7 @@ fn main() {
                 seed: 15,
                 links: None,
                 resync_every: 0,
+                downlink: None,
             },
         );
         dist.step(pa.as_ref());

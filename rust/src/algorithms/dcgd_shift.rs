@@ -38,11 +38,26 @@
 //! bit-identical coordinate for coordinate, and `bits_down` reports the
 //! measured delta-frame size (O(nnz) when the aggregate is sparse)
 //! instead of the dense `n·d` formula. Rand-DIANA refreshes likewise
-//! mirror the coordinator's sparse shift-refresh delta.
+//! mirror the coordinator's sparse shift-refresh delta, and every
+//! compressed packet is quantized to the wire precision at the source
+//! (`Packet::quantize`), so an f32-precision run is bit-identical to an
+//! f32 cluster — shift state included.
+//!
+//! # Error-fed-back downlink mirror
+//!
+//! [`DcgdShift::set_downlink`] arms the same lossy broadcast the
+//! coordinator supports ([`crate::downlink::EfDownlink`]): the driver then
+//! keeps one shared worker replica `x̂` (the broadcast reaches every
+//! worker identically), evaluates all local gradients at `x̂`, and after
+//! the exact master step folds the delta into the EF accumulator,
+//! compresses, and applies the compressed packet to `x̂` — op for op what
+//! the threaded cluster does, so trajectories and `bits_down` stay
+//! bit-identical across drivers (pinned by `tests/coordinator.rs`).
 
 use crate::algorithms::shift_rules::ShiftRule;
 use crate::algorithms::{Algorithm, StepStats};
 use crate::compressors::{Compressor, Packet, PayloadBitsCache, ValPrec};
+use crate::downlink::EfDownlink;
 use crate::linalg::{ax_into, axpy, sub_into};
 use crate::problems::Problem;
 use crate::theory;
@@ -87,6 +102,16 @@ pub struct DcgdShift {
     est: Vec<f64>,
     /// downlink delta builder (master scratch, pre-sized to d)
     delta: wire::DeltaScratch,
+    /// error-fed-back downlink mirror (`None` = exact deltas); see the
+    /// module doc
+    downlink: Option<EfDownlink>,
+    /// shared worker replica x̂ of the broadcast iterate (EF path only —
+    /// the broadcast is identical for every worker, so one vector mirrors
+    /// them all; empty on the exact path, where x̂ ≡ x bit for bit)
+    x_rep: Vec<f64>,
+    /// dedicated RNG stream for the downlink compressor — derived exactly
+    /// as in the coordinator (worker streams are 1..=n, this is n+1)
+    dl_rng: Pcg64,
     /// per-worker bits of the downlink frame the *next* round broadcasts —
     /// mirrors the coordinator, whose round-k frame (round-0 resync, then
     /// the previous round's delta) is encoded before round k runs
@@ -253,7 +278,7 @@ impl DcgdShift {
                 axpy(1.0, h, &mut h_sum);
             }
         }
-        let workers = qs
+        let workers: Vec<WorkerSlot> = qs
             .into_iter()
             .zip(rules)
             .zip(shifts)
@@ -274,6 +299,9 @@ impl DcgdShift {
                 refreshed: false,
             })
             .collect();
+        // downlink compressor stream: worker streams are 1..=n, so n+1 —
+        // identical derivation to the coordinator's
+        let dl_rng = root.stream(workers.len() as u64 + 1);
         Self {
             name: name.to_string(),
             x: crate::algorithms::paper_x0(d, seed),
@@ -283,17 +311,54 @@ impl DcgdShift {
             h_sum,
             est: vec![0.0; d],
             delta: wire::DeltaScratch::with_capacity(d),
+            downlink: None,
+            x_rep: Vec::new(),
+            dl_rng,
             // round 0 broadcasts the dense resync that bootstraps replicas
             next_down_bits: wire::resync_frame_bits(d),
         }
     }
 
+    /// Arm the error-fed-back downlink mirror (see the module doc); the
+    /// equivalent of setting [`crate::coordinator::ClusterConfig`]'s
+    /// `downlink` on the threaded cluster. The replica is bootstrapped
+    /// from the current iterate — the same state the coordinator's next
+    /// dense resync would broadcast.
+    pub fn set_downlink(&mut self, comp: Box<dyn Compressor>) {
+        let d = self.x.len();
+        self.x_rep = self.x.clone();
+        self.downlink = Some(EfDownlink::new(comp, d, self.dl_rng.clone()));
+        self.next_down_bits = wire::resync_frame_bits(d);
+    }
+
+    /// Builder-style [`set_downlink`](Self::set_downlink).
+    pub fn with_downlink(mut self, comp: Box<dyn Compressor>) -> Self {
+        self.set_downlink(comp);
+        self
+    }
+
+    /// The EF downlink's error accumulator (`None` on the exact path).
+    pub fn ef_error(&self) -> Option<&[f64]> {
+        self.downlink.as_ref().map(|ef| ef.error())
+    }
+
+    /// The shared worker replica x̂ (`None` on the exact path, where the
+    /// replicas are bit-equal to [`Algorithm::x`] by construction).
+    pub fn replica(&self) -> Option<&[f64]> {
+        self.downlink.as_ref().map(|_| self.x_rep.as_slice())
+    }
+
     pub fn set_x0(&mut self, x0: Vec<f64>) {
         assert_eq!(x0.len(), self.x.len());
         // the coordinator would resync its replicas after an out-of-band
-        // iterate change; mirror the accounting
+        // iterate change; mirror the accounting — and on the EF path the
+        // resync overwrites the replica and flushes the accumulator
         self.next_down_bits = wire::resync_frame_bits(self.x.len());
         self.x = x0;
+        if let Some(ef) = &mut self.downlink {
+            ef.flush();
+            self.x_rep.copy_from_slice(&self.x);
+        }
     }
 
     pub fn set_gamma(&mut self, gamma: f64) {
@@ -336,11 +401,15 @@ impl Algorithm for DcgdShift {
         let inv_n = 1.0 / n as f64;
         let mut bits_up: u64 = 0;
         let mut bits_refresh: u64 = 0;
+        // EF path: workers evaluate at their (shared) replica of the lossy
+        // broadcast, not at the master iterate
+        let use_replica = self.downlink.is_some();
 
         // ---- phase 1: workers (mirrors coordinator::worker_loop op for op)
         for (wi, w) in self.workers.iter_mut().enumerate() {
-            // line 6: local gradient
-            p.local_grad_into(wi, &self.x, &mut w.grad);
+            // line 6: local gradient at the iterate the worker actually has
+            let x_eval: &[f64] = if use_replica { &self.x_rep } else { &self.x };
+            p.local_grad_into(wi, x_eval, &mut w.grad);
             w.refreshed = false;
 
             match &mut w.rule {
@@ -348,6 +417,7 @@ impl Algorithm for DcgdShift {
                 ShiftRule::Fixed => {
                     sub_into(&w.grad, &w.h, &mut w.diff);
                     w.q.compress_into(&mut w.rng, &w.diff, &mut w.q_pkt);
+                    w.q_pkt.quantize(self.prec);
                     bits_up += w.q_bits.bits(&w.q_pkt, self.prec);
                     // h unchanged
                 }
@@ -359,6 +429,7 @@ impl Algorithm for DcgdShift {
                     if let Some(cc) = c {
                         sub_into(&w.grad, gs, &mut w.diff);
                         cc.compress_into(&mut w.rng, &w.diff, &mut w.c_pkt);
+                        w.c_pkt.quantize(self.prec);
                         bits_up += w.c_bits.bits(&w.c_pkt, self.prec);
                         // h_i = ∇f_i(x*) + C_i(…), in place like the
                         // coordinator worker
@@ -370,6 +441,7 @@ impl Algorithm for DcgdShift {
                     // m_i = Q_i(∇f_i − h_i^k)
                     sub_into(&w.grad, &w.h, &mut w.diff);
                     w.q.compress_into(&mut w.rng, &w.diff, &mut w.q_pkt);
+                    w.q_pkt.quantize(self.prec);
                     bits_up += w.q_bits.bits(&w.q_pkt, self.prec);
                 }
                 // -------------------------------------------------- DIANA
@@ -379,11 +451,13 @@ impl Algorithm for DcgdShift {
                     if let Some(cc) = c {
                         // c_i^k = C_i(v); residual v − c stays in diff
                         cc.compress_into(&mut w.rng, &w.diff, &mut w.c_pkt);
+                        w.c_pkt.quantize(self.prec);
                         bits_up += w.c_bits.bits(&w.c_pkt, self.prec);
                         w.c_pkt.add_scaled_into(-1.0, &mut w.diff);
                     }
                     // m_i^k = Q_i(v − c)
                     w.q.compress_into(&mut w.rng, &w.diff, &mut w.q_pkt);
+                    w.q_pkt.quantize(self.prec);
                     bits_up += w.q_bits.bits(&w.q_pkt, self.prec);
                     // shift learning h_i += α(c + q), straight from the
                     // packets at O(nnz)
@@ -396,6 +470,7 @@ impl Algorithm for DcgdShift {
                 ShiftRule::RandDiana { p: pr } => {
                     sub_into(&w.grad, &w.h, &mut w.diff);
                     w.q.compress_into(&mut w.rng, &w.diff, &mut w.q_pkt);
+                    w.q_pkt.quantize(self.prec);
                     bits_up += w.q_bits.bits(&w.q_pkt, self.prec);
                     // w_i^{k+1} = x^k w.p. p — refresh ships a delta of the
                     // shift vs the master's replica: h_new = ∇f = h + diff,
@@ -453,11 +528,20 @@ impl Algorithm for DcgdShift {
         delta.add_scaled_into(1.0, &mut self.x);
         // Measured broadcast cost, mirroring the coordinator frame for
         // frame: this round shipped the frame decided last round (round 0:
-        // the dense bootstrap resync), and the delta just built ships next
-        // round. (Periodic `resync_every` redundancy is a runner-only
-        // operational knob and is not mirrored here.)
+        // the dense bootstrap resync), and the frame just built ships next
+        // round. On the EF path the broadcast is the compressed C(e + Δ),
+        // applied to the shared replica with the same op the workers use.
+        // (Periodic `resync_every` redundancy is a runner-only operational
+        // knob and is not mirrored here.)
         let bits_down = n as u64 * self.next_down_bits;
-        self.next_down_bits = wire::down_frame_bits(delta, self.prec);
+        self.next_down_bits = match &mut self.downlink {
+            Some(ef) => {
+                let c = ef.fold_and_compress(delta, self.prec);
+                c.add_scaled_into(1.0, &mut self.x_rep);
+                wire::down_frame_bits(c, self.prec)
+            }
+            None => wire::down_frame_bits(delta, self.prec),
+        };
 
         StepStats {
             bits_up,

@@ -15,13 +15,127 @@
 //! x^{k+1} = (1 − η) x^k + η (h^k + δ^k)
 //! ```
 //! eliminating the compression neighborhood entirely.
+//!
+//! # Downlink
+//!
+//! Both drivers account the broadcast the same way the DCGD-SHIFT family
+//! does: a round-0 dense resync, then one measured delta frame
+//! `x^{k+1} − x^k` per round ([`wire::build_update_packet`]) instead of
+//! the former dense `n·d·prec` formula — and [`Gdci::set_downlink`] /
+//! [`VrGdci::set_downlink`] arm the same error-fed-back compressed
+//! broadcast ([`crate::downlink::EfDownlink`]) the coordinator supports,
+//! with workers evaluating their gradient maps at the shared lossy
+//! replica. The GDCI mixing update touches every coordinate, so the exact
+//! delta is dense — exactly the regime where a Top-K EF downlink keeps
+//! the broadcast O(K).
 
 use crate::algorithms::{Algorithm, StepStats};
 use crate::compressors::{Compressor, Packet, PayloadBitsCache, ValPrec};
+use crate::downlink::EfDownlink;
 use crate::linalg::{axpy, zero};
 use crate::problems::Problem;
 use crate::theory;
 use crate::util::rng::Pcg64;
+use crate::wire;
+
+// ----------------------------------------------------------- downlink state
+
+/// Broadcast-side state shared by the GDCI drivers: measured delta-frame
+/// accounting (round-0 dense resync, then one `x^{k+1} − x^k` frame per
+/// round) and the optional error-fed-back compressed downlink with its
+/// shared worker replica. Mirrors the DCGD-SHIFT drivers' downlink
+/// conventions so `bits_down` means the same thing across the library.
+struct DownlinkState {
+    ef: Option<EfDownlink>,
+    /// shared worker replica x̂ (EF path only; empty when exact)
+    x_rep: Vec<f64>,
+    /// dedicated RNG stream for the downlink compressor
+    dl_rng: Pcg64,
+    /// x^k snapshot the broadcast delta is built against
+    x_prev: Vec<f64>,
+    /// x^{k+1} − x^k scratch
+    diff: Vec<f64>,
+    /// delta builder scratch (both representations pre-sized to d)
+    delta: wire::DeltaScratch,
+    /// per-worker bits of the frame the *next* round broadcasts
+    next_down_bits: u64,
+}
+
+impl DownlinkState {
+    fn new(x0: &[f64], dl_rng: Pcg64) -> Self {
+        let d = x0.len();
+        Self {
+            ef: None,
+            x_rep: Vec::new(),
+            dl_rng,
+            x_prev: x0.to_vec(),
+            diff: vec![0.0; d],
+            delta: wire::DeltaScratch::with_capacity(d),
+            // round 0 broadcasts the dense bootstrap resync
+            next_down_bits: wire::resync_frame_bits(d),
+        }
+    }
+
+    /// Arm the error-fed-back compressed broadcast; the replica boots from
+    /// the current iterate (what the next dense resync would carry).
+    fn arm(&mut self, comp: Box<dyn Compressor>, x: &[f64]) {
+        self.x_rep = x.to_vec();
+        self.ef = Some(EfDownlink::new(comp, x.len(), self.dl_rng.clone()));
+        self.next_down_bits = wire::resync_frame_bits(x.len());
+    }
+
+    /// The iterate the workers actually hold this round.
+    fn x_eval<'a>(&'a self, x: &'a [f64]) -> &'a [f64] {
+        if self.ef.is_some() {
+            &self.x_rep
+        } else {
+            x
+        }
+    }
+
+    /// Account this round's broadcast and build the next frame from
+    /// `x_new − x_prev`, EF-compressed when armed (replica updated with
+    /// the same packet the workers apply). Returns this round's
+    /// `bits_down` across `n` workers.
+    fn finish_round(&mut self, x_new: &[f64], n: usize, prec: ValPrec) -> u64 {
+        let bits_down = n as u64 * self.next_down_bits;
+        for j in 0..x_new.len() {
+            self.diff[j] = x_new[j] - self.x_prev[j];
+        }
+        self.next_down_bits = match &mut self.ef {
+            Some(ef) => {
+                // fold the *raw* difference: the GDCI mixing update does
+                // not advance x through a pre-quantized packet, so the
+                // accumulator must capture the quantization residual too
+                // or the replica would drift unboundedly under f32
+                let c = ef.fold_slice_and_compress(&self.diff, prec);
+                c.add_scaled_into(1.0, &mut self.x_rep);
+                wire::down_frame_bits(c, prec)
+            }
+            None => {
+                let delta = wire::build_update_packet(&self.diff, 1.0, prec, &mut self.delta);
+                wire::down_frame_bits(delta, prec)
+            }
+        };
+        self.x_prev.copy_from_slice(x_new);
+        bits_down
+    }
+
+    /// Out-of-band iterate change: next broadcast is a dense resync, which
+    /// flushes the EF accumulator and overwrites the replica.
+    fn resync(&mut self, x: &[f64]) {
+        self.next_down_bits = wire::resync_frame_bits(x.len());
+        self.x_prev.copy_from_slice(x);
+        if let Some(ef) = &mut self.ef {
+            ef.flush();
+            self.x_rep.copy_from_slice(x);
+        }
+    }
+
+    fn ef_error(&self) -> Option<&[f64]> {
+        self.ef.as_ref().map(|ef| ef.error())
+    }
+}
 
 // ---------------------------------------------------------------------- GDCI
 
@@ -39,6 +153,7 @@ pub struct Gdci {
     /// per-shape payload-bits cache (homogeneous fleets hit every round)
     bits_cache: PayloadBitsCache,
     mix: Vec<f64>,
+    downlink: DownlinkState,
 }
 
 impl Gdci {
@@ -73,25 +188,40 @@ impl Gdci {
         let n = p.n_workers();
         let d = p.dim();
         let mut root = Pcg64::with_stream(seed, 0x6dc1);
+        let x = crate::algorithms::paper_x0(d, seed);
+        let rngs: Vec<Pcg64> = (0..n).map(|i| root.stream(i as u64 + 1)).collect();
+        let downlink = DownlinkState::new(&x, root.stream(n as u64 + 1));
         Self {
-            x: crate::algorithms::paper_x0(d, seed),
+            x,
             gamma,
             eta,
             prec: ValPrec::F64,
             qs: (0..n)
                 .map(|_| Box::new(q.clone()) as Box<dyn Compressor>)
                 .collect(),
-            rngs: (0..n).map(|i| root.stream(i as u64 + 1)).collect(),
+            rngs,
             grad: vec![0.0; d],
             t_buf: vec![0.0; d],
             pkt: Packet::Zero { dim: d as u32 },
             bits_cache: PayloadBitsCache::new(),
             mix: vec![0.0; d],
+            downlink,
         }
     }
 
     pub fn set_x0(&mut self, x0: Vec<f64>) {
         self.x = x0;
+        self.downlink.resync(&self.x);
+    }
+
+    /// Arm the error-fed-back compressed broadcast (see the module doc).
+    pub fn set_downlink(&mut self, comp: Box<dyn Compressor>) {
+        self.downlink.arm(comp, &self.x);
+    }
+
+    /// The EF downlink's error accumulator (`None` on the exact path).
+    pub fn ef_error(&self) -> Option<&[f64]> {
+        self.downlink.ef_error()
     }
 }
 
@@ -113,12 +243,15 @@ impl Algorithm for Gdci {
         let mut bits_up = 0;
         zero(&mut self.mix);
         for i in 0..n {
-            p.local_grad_into(i, &self.x, &mut self.grad);
-            // T_i(x) = x − γ ∇f_i(x)
+            // workers hold the (possibly lossy) broadcast replica
+            let x_eval = self.downlink.x_eval(&self.x);
+            p.local_grad_into(i, x_eval, &mut self.grad);
+            // T_i(x̂) = x̂ − γ ∇f_i(x̂)
             for j in 0..d {
-                self.t_buf[j] = self.x[j] - self.gamma * self.grad[j];
+                self.t_buf[j] = x_eval[j] - self.gamma * self.grad[j];
             }
             self.qs[i].compress_into(&mut self.rngs[i], &self.t_buf, &mut self.pkt);
+            self.pkt.quantize(self.prec);
             bits_up += self.bits_cache.bits(&self.pkt, self.prec);
             // sparse-aware O(nnz) aggregation, no dense decode
             self.pkt.add_scaled_into(inv_n, &mut self.mix);
@@ -127,9 +260,10 @@ impl Algorithm for Gdci {
         for j in 0..d {
             self.x[j] = (1.0 - self.eta) * self.x[j] + self.eta * self.mix[j];
         }
+        let bits_down = self.downlink.finish_round(&self.x, n, self.prec);
         StepStats {
             bits_up,
-            bits_down: (n * d) as u64 * self.prec.bits(),
+            bits_down,
             bits_refresh: 0,
         }
     }
@@ -156,6 +290,7 @@ pub struct VrGdci {
     /// per-shape payload-bits cache (homogeneous fleets hit every round)
     bits_cache: PayloadBitsCache,
     delta_sum: Vec<f64>,
+    downlink: DownlinkState,
 }
 
 impl VrGdci {
@@ -176,8 +311,11 @@ impl VrGdci {
         let n = p.n_workers();
         let d = p.dim();
         let mut root = Pcg64::with_stream(seed, 0x76dc);
+        let x = crate::algorithms::paper_x0(d, seed);
+        let rngs: Vec<Pcg64> = (0..n).map(|i| root.stream(i as u64 + 1)).collect();
+        let downlink = DownlinkState::new(&x, root.stream(n as u64 + 1));
         Self {
-            x: crate::algorithms::paper_x0(d, seed),
+            x,
             gamma,
             eta,
             alpha,
@@ -185,7 +323,7 @@ impl VrGdci {
             qs: (0..n)
                 .map(|_| Box::new(q.clone()) as Box<dyn Compressor>)
                 .collect(),
-            rngs: (0..n).map(|i| root.stream(i as u64 + 1)).collect(),
+            rngs,
             h: vec![vec![0.0; d]; n],
             h_master: vec![0.0; d],
             grad: vec![0.0; d],
@@ -193,11 +331,23 @@ impl VrGdci {
             pkt: Packet::Zero { dim: d as u32 },
             bits_cache: PayloadBitsCache::new(),
             delta_sum: vec![0.0; d],
+            downlink,
         }
     }
 
     pub fn set_x0(&mut self, x0: Vec<f64>) {
         self.x = x0;
+        self.downlink.resync(&self.x);
+    }
+
+    /// Arm the error-fed-back compressed broadcast (see the module doc).
+    pub fn set_downlink(&mut self, comp: Box<dyn Compressor>) {
+        self.downlink.arm(comp, &self.x);
+    }
+
+    /// The EF downlink's error accumulator (`None` on the exact path).
+    pub fn ef_error(&self) -> Option<&[f64]> {
+        self.downlink.ef_error()
     }
 
     pub fn shift(&self, worker: usize) -> &[f64] {
@@ -223,12 +373,15 @@ impl Algorithm for VrGdci {
         let mut bits_up = 0;
         zero(&mut self.delta_sum);
         for i in 0..n {
-            p.local_grad_into(i, &self.x, &mut self.grad);
-            // compress shifted local model: δ_i = Q_i(T_i(x) − h_i)
+            // workers hold the (possibly lossy) broadcast replica
+            let x_eval = self.downlink.x_eval(&self.x);
+            p.local_grad_into(i, x_eval, &mut self.grad);
+            // compress shifted local model: δ_i = Q_i(T_i(x̂) − h_i)
             for j in 0..d {
-                self.t_buf[j] = self.x[j] - self.gamma * self.grad[j] - self.h[i][j];
+                self.t_buf[j] = x_eval[j] - self.gamma * self.grad[j] - self.h[i][j];
             }
             self.qs[i].compress_into(&mut self.rngs[i], &self.t_buf, &mut self.pkt);
+            self.pkt.quantize(self.prec);
             bits_up += self.bits_cache.bits(&self.pkt, self.prec);
             // h_i^{k+1} = h_i^k + α δ_i — applied at O(nnz) from the packet
             self.pkt.add_scaled_into(self.alpha, &mut self.h[i]);
@@ -240,9 +393,10 @@ impl Algorithm for VrGdci {
             self.x[j] = (1.0 - self.eta) * self.x[j] + self.eta * big_delta;
         }
         axpy(self.alpha, &self.delta_sum, &mut self.h_master);
+        let bits_down = self.downlink.finish_round(&self.x, n, self.prec);
         StepStats {
             bits_up,
-            bits_down: (n * d) as u64 * self.prec.bits(),
+            bits_down,
             bits_refresh: 0,
         }
     }

@@ -330,6 +330,42 @@ impl Packet {
         }
     }
 
+    /// Round every floating-point field (values, scales, norms) to the
+    /// wire precision, in place. A quantized packet survives the
+    /// encode → decode round-trip bit for bit, so *both* ends of a link
+    /// can apply the identical packet and stay bit-equal — the downlink
+    /// delta path has always relied on this ([`crate::wire::build_update_packet`]),
+    /// and workers quantize their uplink packets before folding them into
+    /// local shift state so `h` matches the master's wire-reconstructed
+    /// replica under f32 precision too. Idempotent; a no-op for
+    /// [`ValPrec::F64`]. Exponent/level/sign fields are integers and are
+    /// exact on the wire already.
+    pub fn quantize(&mut self, prec: ValPrec) {
+        if prec == ValPrec::F64 {
+            return;
+        }
+        match self {
+            Packet::Dense(v) => {
+                for x in v.iter_mut() {
+                    *x = prec.quantize(*x);
+                }
+            }
+            Packet::Sparse { values, scale, .. } => {
+                *scale = prec.quantize(*scale);
+                for x in values.iter_mut() {
+                    *x = prec.quantize(*x);
+                }
+            }
+            Packet::Levels { norm, .. } | Packet::LevelsLinear { norm, .. } => {
+                *norm = prec.quantize(*norm);
+            }
+            Packet::SignScale { scale, .. } | Packet::TernaryPkt { scale, .. } => {
+                *scale = prec.quantize(*scale);
+            }
+            Packet::NatExp { .. } | Packet::Zero { .. } => {}
+        }
+    }
+
     /// Number of coordinates this packet actually carries (what
     /// [`add_scaled_into`](Self::add_scaled_into) will touch) — `dim` for
     /// dense-shaped payloads, the support size for sparse ones.
@@ -892,6 +928,78 @@ mod tests {
         assert_ne!(q, 0.1);
         assert_eq!(ValPrec::F32.quantize(q), q, "quantize must be idempotent");
         assert_eq!(q as f32 as f64, q);
+    }
+
+    #[test]
+    fn quantize_rounds_every_float_field() {
+        let mut pkts = vec![
+            Packet::Dense(vec![0.1, -0.2, 0.0]),
+            Packet::Sparse {
+                dim: 9,
+                indices: vec![1, 7],
+                values: vec![0.1, -7.3],
+                scale: 0.3,
+            },
+            Packet::Levels {
+                dim: 2,
+                norm: 0.1,
+                s: 3,
+                signs: vec![true, false],
+                levels: vec![1, 2],
+            },
+            Packet::LevelsLinear {
+                dim: 2,
+                norm: 0.7,
+                s: 5,
+                signs: vec![true, false],
+                levels: vec![1, 2],
+            },
+            Packet::NatExp {
+                dim: 2,
+                signs: vec![true, false],
+                exps: vec![3, i8::MIN],
+            },
+            Packet::SignScale {
+                dim: 2,
+                scale: 0.1,
+                signs: vec![true, false],
+            },
+            Packet::TernaryPkt {
+                dim: 2,
+                scale: 0.1,
+                mask: vec![true, false],
+                signs: vec![true],
+            },
+            Packet::Zero { dim: 4 },
+        ];
+        for pkt in pkts.iter_mut() {
+            // F64 is the identity
+            let before = pkt.clone();
+            pkt.quantize(ValPrec::F64);
+            assert_eq!(*pkt, before, "f64 quantize must be a no-op");
+            // F32 rounds every float *field* to an f32-representable double
+            // (decoded products like norm·2^(l−s) may still leave f32 range;
+            // what matters is that the fields survive the wire round-trip)
+            pkt.quantize(ValPrec::F32);
+            let fields: Vec<f64> = match &*pkt {
+                Packet::Dense(v) => v.clone(),
+                Packet::Sparse { values, scale, .. } => {
+                    values.iter().copied().chain([*scale]).collect()
+                }
+                Packet::Levels { norm, .. } | Packet::LevelsLinear { norm, .. } => vec![*norm],
+                Packet::SignScale { scale, .. } | Packet::TernaryPkt { scale, .. } => {
+                    vec![*scale]
+                }
+                Packet::NatExp { .. } | Packet::Zero { .. } => vec![],
+            };
+            for v in fields {
+                assert_eq!(v as f32 as f64, v, "{pkt:?} field {v} not f32-exact");
+            }
+            // idempotent
+            let once = pkt.clone();
+            pkt.quantize(ValPrec::F32);
+            assert_eq!(*pkt, once, "f32 quantize must be idempotent");
+        }
     }
 
     #[test]

@@ -18,11 +18,15 @@
 //!
 //! An optional `"cluster"` object configures the threaded coordinator
 //! ([`ExperimentConfig::build_distributed`]): wire precision for the
-//! compressed frames and the dense-resync cadence of the delta-compressed
-//! broadcast downlink:
+//! compressed frames, the dense-resync cadence of the delta-compressed
+//! broadcast downlink, and the optional error-fed-back downlink
+//! compressor (`top-k` with `q` = K/d or `k` = K, `identity` for the
+//! exact-equivalent EF path; omit the object — or set `"exact": true` —
+//! for today's exact delta frames):
 //!
 //! ```json
-//! { "cluster": {"prec": "f32", "resync_every": 1000} }
+//! { "cluster": {"prec": "f32", "resync_every": 1000,
+//!               "downlink": {"compressor": "top-k", "q": 0.005}} }
 //! ```
 
 use std::sync::Arc;
@@ -256,6 +260,67 @@ impl CompressorSpec {
 
 // ------------------------------------------------------------------ cluster
 
+/// The `"cluster.downlink"` object: which (contractive, deterministic)
+/// compressor the master's error-fed-back broadcast uses, if any. The
+/// dropped residual accumulates server-side and is retried next round —
+/// see [`crate::downlink::EfDownlink`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum DownlinkSpec {
+    /// exact delta frames (today's lossless path; the default)
+    #[default]
+    Exact,
+    /// identity EF compressor — drops nothing; reproduces the exact path
+    /// bit for bit (useful for A/B-validating EF configurations)
+    Identity,
+    /// Top-K EF compressor with fractional K = round(q·d), 0 < q ≤ 1
+    TopK { q: f64 },
+    /// Top-K EF compressor with absolute K ≥ 1 (clamped to d at build)
+    TopKAbs { k: usize },
+}
+
+impl DownlinkSpec {
+    pub fn parse(j: &Json) -> Result<Self, ConfigError> {
+        if j.is_null() || j.get("exact").as_bool() == Some(true) {
+            return Ok(DownlinkSpec::Exact);
+        }
+        match j.get("compressor").as_str() {
+            Some("identity") => Ok(DownlinkSpec::Identity),
+            Some("top-k") => {
+                let q = j.get("q").as_f64();
+                let k = j.get("k").as_usize();
+                match (q, k) {
+                    (Some(qv), None) if qv > 0.0 && qv <= 1.0 => {
+                        Ok(DownlinkSpec::TopK { q: qv })
+                    }
+                    (None, Some(kv)) if kv >= 1 => Ok(DownlinkSpec::TopKAbs { k: kv }),
+                    (Some(_), Some(_)) => {
+                        Err(bad("cluster.downlink: give either q or k, not both"))
+                    }
+                    (None, None) => Err(bad("cluster.downlink top-k needs q = K/d or k = K")),
+                    _ => Err(bad(
+                        "cluster.downlink top-k needs 0 < q ≤ 1 or k ≥ 1",
+                    )),
+                }
+            }
+            Some(other) => Err(bad(format!(
+                "cluster.downlink compressor '{other}' unsupported \
+                 (contractive & deterministic required: identity or top-k)"
+            ))),
+            None => Err(bad("cluster.downlink needs a compressor (or exact: true)")),
+        }
+    }
+
+    /// Build the EF compressor for dimension `d` (`None` = exact path).
+    pub fn build(&self, d: usize) -> Option<Box<dyn Compressor>> {
+        match self {
+            DownlinkSpec::Exact => None,
+            DownlinkSpec::Identity => Some(Box::new(Identity::new(d))),
+            DownlinkSpec::TopK { q } => Some(Box::new(TopK::with_q(d, *q))),
+            DownlinkSpec::TopKAbs { k } => Some(Box::new(TopK::new(d, (*k).clamp(1, d)))),
+        }
+    }
+}
+
 /// Coordinator-level knobs (the `"cluster"` JSON object, all optional).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ClusterSpec {
@@ -265,6 +330,8 @@ pub struct ClusterSpec {
     /// wire precision for compressed frames (delta values are pre-quantized
     /// so replicas stay bit-exact; resync frames are always f64)
     pub prec: ValPrec,
+    /// error-fed-back downlink compressor (default: exact delta frames)
+    pub downlink: DownlinkSpec,
 }
 
 impl Default for ClusterSpec {
@@ -272,6 +339,7 @@ impl Default for ClusterSpec {
         Self {
             resync_every: 0,
             prec: ValPrec::F64,
+            downlink: DownlinkSpec::Exact,
         }
     }
 }
@@ -293,7 +361,12 @@ impl ClusterSpec {
             re_j.as_usize()
                 .ok_or_else(|| bad("cluster.resync_every must be a non-negative integer"))?
         };
-        Ok(Self { resync_every, prec })
+        let downlink = DownlinkSpec::parse(j.get("downlink"))?;
+        Ok(Self {
+            resync_every,
+            prec,
+            downlink,
+        })
     }
 }
 
@@ -498,6 +571,7 @@ impl ExperimentConfig {
                 seed: self.seed,
                 links: None,
                 resync_every: self.cluster.resync_every,
+                downlink: self.cluster.downlink.build(d),
             },
         );
         Ok((problem, runner))
@@ -575,6 +649,68 @@ mod tests {
         // a wrong-typed resync_every must error, not silently become 0
         let bad = with.replace("25", "\"25\"");
         assert!(ExperimentConfig::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn downlink_spec_parses_builds_and_rejects() {
+        let with = r#"{
+            "problem": {"kind": "quadratic", "d": 10, "workers": 3, "seed": 1},
+            "algorithm": {"kind": "diana"},
+            "compressor": {"kind": "rand-k", "q": 0.3},
+            "cluster": {"downlink": {"compressor": "top-k", "q": 0.2}}
+        }"#;
+        let cfg = ExperimentConfig::parse(with).unwrap();
+        assert_eq!(cfg.cluster.downlink, DownlinkSpec::TopK { q: 0.2 });
+        let comp = cfg.cluster.downlink.build(10).unwrap();
+        assert_eq!(comp.name(), "top-k(2/10)");
+        // k-form
+        let cfg =
+            ExperimentConfig::parse(&with.replace(r#""q": 0.2"#, r#""k": 3"#)).unwrap();
+        assert_eq!(
+            cfg.cluster.downlink.build(10).unwrap().name(),
+            "top-k(3/10)"
+        );
+        // identity + exact fallback
+        let cfg = ExperimentConfig::parse(
+            &with.replace(r#""compressor": "top-k", "q": 0.2"#, r#""compressor": "identity""#),
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.downlink, DownlinkSpec::Identity);
+        assert!(cfg.cluster.downlink.build(10).is_some());
+        let cfg = ExperimentConfig::parse(
+            &with.replace(r#""compressor": "top-k", "q": 0.2"#, r#""exact": true"#),
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.downlink, DownlinkSpec::Exact);
+        assert!(cfg.cluster.downlink.build(10).is_none());
+        // rejections: unsupported compressor, missing K, both q and k,
+        // and out-of-range q/k (validated at parse time, not at build)
+        assert!(ExperimentConfig::parse(&with.replace("top-k", "rand-k")).is_err());
+        assert!(ExperimentConfig::parse(&with.replace(r#", "q": 0.2"#, "")).is_err());
+        assert!(
+            ExperimentConfig::parse(&with.replace(r#""q": 0.2"#, r#""q": 0.2, "k": 2"#))
+                .is_err()
+        );
+        assert!(ExperimentConfig::parse(&with.replace(r#""q": 0.2"#, r#""k": 0"#)).is_err());
+        assert!(ExperimentConfig::parse(&with.replace(r#""q": 0.2"#, r#""q": 0.0"#)).is_err());
+        assert!(ExperimentConfig::parse(&with.replace(r#""q": 0.2"#, r#""q": 1.5"#)).is_err());
+    }
+
+    #[test]
+    fn distributed_identity_downlink_matches_exact_config() {
+        // the EF path with an identity compressor must reproduce the exact
+        // delta path bit for bit, end to end through the config layer
+        let exact = ExperimentConfig::parse(SAMPLE).unwrap();
+        let mut ident = ExperimentConfig::parse(SAMPLE).unwrap();
+        ident.cluster.downlink = DownlinkSpec::Identity;
+        let (p_a, mut a) = exact.build_distributed().unwrap();
+        let (p_b, mut b) = ident.build_distributed().unwrap();
+        for k in 0..30 {
+            let sa = a.step(p_a.as_ref());
+            let sb = b.step(p_b.as_ref());
+            assert_eq!(a.x(), b.x(), "diverged at round {k}");
+            assert_eq!(sa.bits_down, sb.bits_down, "downlink bits at round {k}");
+        }
     }
 
     #[test]

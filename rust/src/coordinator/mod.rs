@@ -11,13 +11,18 @@
 //!
 //! Protocol per round k:
 //! ```text
-//! master ──► workers : Broadcast(x^k)                      (dense, d·prec)
+//! master ──► workers : downlink frame (shared Arc): Delta | EfDelta | Resync
 //! worker i ─► master : Frames { [c_i^k]?, m_i^k, [h-refresh]? }   (encoded)
 //! master: decode, reconstruct h_i, g^k = (1/n)Σ(h_i + msgs), step, repeat
 //! ```
+//!
+//! The downlink is delta-compressed (and optionally lossy with server-side
+//! error feedback — see [`crate::downlink`]); workers maintain an iterate
+//! replica instead of receiving the dense x^k. See [`crate::wire`] for the
+//! frame formats and [`runner`] for the broadcast protocol details.
 
 pub mod protocol;
 pub mod runner;
 
-pub use protocol::{FrameSet, MethodKind, WorkerCommand, WorkerUpdate};
+pub use protocol::{FrameSet, MethodKind, WorkerCommand, WorkerSnapshot, WorkerUpdate};
 pub use runner::{ClusterConfig, DistributedRunner};

@@ -1,5 +1,6 @@
 //! Message types exchanged between the master and worker threads.
 
+use std::sync::mpsc::SyncSender;
 use std::sync::Arc;
 
 /// What shift rule the cluster runs (worker- and master-side behaviour).
@@ -37,8 +38,26 @@ pub enum WorkerCommand {
         down: Arc<Vec<u8>>,
         recycled: FrameSet,
     },
+    /// Debug/ops introspection: snapshot this worker's private state
+    /// (current shift and iterate replica) and send it back on `reply`.
+    /// Sent between rounds, when the worker is idle; the clones allocate,
+    /// which is fine off the hot path. Tests use this to verify that the
+    /// master's wire-reconstructed shift replicas and EF replica mirror
+    /// are bit-equal to what the workers actually hold.
+    Inspect { reply: SyncSender<WorkerSnapshot> },
     /// Clean shutdown.
     Shutdown,
+}
+
+/// A worker's private state at the time an [`WorkerCommand::Inspect`]
+/// command was processed.
+#[derive(Clone, Debug)]
+pub struct WorkerSnapshot {
+    pub worker: usize,
+    /// the worker's current shift h_i
+    pub h: Vec<f64>,
+    /// the worker's local replica of the broadcast iterate
+    pub x_replica: Vec<f64>,
 }
 
 /// The encoded frames one worker uploads in one round.

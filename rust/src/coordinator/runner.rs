@@ -11,14 +11,32 @@
 //!   K = 0.5 % ships ~0.5 % of the former d·8 bytes/worker), applied to
 //!   the replica via [`Packet::add_scaled_into`] at O(nnz);
 //! * a dense **resync** frame on round 0 (replica bootstrap for joiners),
-//!   every [`ClusterConfig::resync_every`] rounds (drift checks), and after
-//!   out-of-band iterate changes ([`DistributedRunner::set_x0`]).
+//!   every [`ClusterConfig::resync_every`] rounds (drift checks; round 0
+//!   itself is skipped — the bootstrap resync already covers it), and
+//!   after out-of-band iterate changes ([`DistributedRunner::set_x0`]);
+//! * with [`ClusterConfig::downlink`] set, a lossy **EF delta** frame
+//!   carrying `C(e^k + Δ^k)` from the master's error-fed-back downlink
+//!   compressor ([`crate::downlink::EfDownlink`]) — the broadcast stays
+//!   O(nnz) even when DIANA-family shifts densify the exact delta, the
+//!   dropped residual is retried next round, and any resync flushes the
+//!   accumulator so replicas re-converge exactly.
 //!
-//! The master applies the *identical* delta packet to its own iterate, so
-//! master and replicas stay bit-equal — delta application is exact f64
-//! arithmetic and trajectories are bit-identical to the dense broadcast
-//! (pinned by `tests/coordinator.rs`). `StepStats::bits_down` is the
-//! measured frame size, not a dense formula.
+//! On the exact path the master applies the *identical* delta packet to
+//! its own iterate, so master and replicas stay bit-equal — delta
+//! application is exact f64 arithmetic and trajectories are bit-identical
+//! to the dense broadcast (pinned by `tests/coordinator.rs`). On the EF
+//! path the master additionally maintains a bit-exact mirror of the
+//! replica state (same packets, same ops), and the EF invariant
+//! `x_replica + e = x_master` bounds the drift. `StepStats::bits_down` is
+//! the measured frame size, not a dense formula.
+//!
+//! Wire-precision symmetry: workers quantize every uplink packet to the
+//! cluster precision *before* folding it into local shift state, so under
+//! `prec = f32` the worker's `h` is bit-equal to the master's replica
+//! reconstructed from the (identically quantized) wire frames — and the
+//! whole cluster is bit-identical to [`crate::algorithms::DcgdShift`]
+//! running at the same precision. (Encoding a quantized packet is
+//! lossless, so the wire bytes are unchanged.)
 //!
 //! # Zero-allocation round pipeline
 //!
@@ -55,7 +73,10 @@ use std::thread::JoinHandle;
 
 use crate::algorithms::{Algorithm, StepStats};
 use crate::compressors::{Compressor, Packet, PayloadBitsCache, ValPrec};
-use crate::coordinator::protocol::{FrameSet, MethodKind, WorkerCommand, WorkerUpdate};
+use crate::coordinator::protocol::{
+    FrameSet, MethodKind, WorkerCommand, WorkerSnapshot, WorkerUpdate,
+};
+use crate::downlink::EfDownlink;
 use crate::linalg::{ax_into, axpy, sub_into};
 use crate::net::{LinkModel, NetworkAccountant};
 use crate::problems::Problem;
@@ -73,6 +94,12 @@ pub struct ClusterConfig {
     /// broadcast a dense resync frame every this many rounds (0 = only on
     /// round 0 and after `set_x0`); see the module doc
     pub resync_every: usize,
+    /// error-fed-back downlink compressor (`None` = exact delta frames).
+    /// Contractive operators (Top-K, Identity) are the intended choices:
+    /// the dropped residual accumulates in the master's error state and is
+    /// retried next round — see [`crate::downlink::EfDownlink`]. Identity
+    /// reproduces the exact path bit for bit.
+    pub downlink: Option<Box<dyn Compressor>>,
 }
 
 struct WorkerThread {
@@ -118,6 +145,17 @@ pub struct DistributedRunner {
     down_bufs: [Arc<Vec<u8>>; 2],
     /// downlink delta builder scratch (both representations pre-sized to d)
     delta: wire::DeltaScratch,
+    /// error-fed-back downlink compressor state (`None` = exact deltas)
+    ef: Option<EfDownlink>,
+    /// bit-exact mirror of the worker replicas (EF path only), updated by
+    /// applying the same broadcast packets the workers apply. The mirror
+    /// *leads by the one in-flight frame*: the round-k+1 EfDelta is folded
+    /// and applied here at the end of round k, while workers apply it at
+    /// the start of round k+1 — so between steps this equals what every
+    /// worker's local `x` will be bit for bit *during the next round*
+    /// (tests verify the lagged equality via [`WorkerCommand::Inspect`]).
+    /// Empty on the exact path, where the master iterate plays this role.
+    x_rep: Vec<f64>,
     /// next broadcast must be a dense resync (round 0, after `set_x0`)
     needs_resync: bool,
     resync_every: usize,
@@ -169,6 +207,14 @@ fn worker_loop(
     while let Ok(cmd) = cmd_rx.recv() {
         let (k, down, mut frames) = match cmd {
             WorkerCommand::Round { k, down, recycled } => (k, down, recycled),
+            WorkerCommand::Inspect { reply } => {
+                let _ = reply.send(WorkerSnapshot {
+                    worker: wi,
+                    h: h.clone(),
+                    x_replica: x.clone(),
+                });
+                continue;
+            }
             WorkerCommand::Shutdown => break,
         };
         // apply the downlink frame to the replica, then release the shared
@@ -181,7 +227,9 @@ fn worker_loop(
                 };
                 x.copy_from_slice(vals);
             }
-            DownKind::Delta => down_pkt.add_scaled_into(1.0, &mut x),
+            // exact and error-fed-back deltas apply identically; the EF
+            // residual is the master's business, not the worker's
+            DownKind::Delta | DownKind::EfDelta => down_pkt.add_scaled_into(1.0, &mut x),
         }
         drop(down);
         // reclaim the optional buffers so this round can reuse them even if
@@ -197,10 +245,17 @@ fn worker_loop(
         let mut payload_bits = 0u64;
         let mut refresh_bits = 0u64;
 
+        // Every compressed packet is quantized to the wire precision at
+        // the source, *before* it touches local state or the encoder:
+        // encoding a quantized packet is lossless, so the wire bytes are
+        // unchanged, and the shift updates below use exactly the values
+        // the master will reconstruct from the frames — under f32 the
+        // worker's h stays bit-equal to the master's replica.
         match method {
             MethodKind::Fixed => {
                 sub_into(&grad, &h, &mut diff);
                 q.compress_into(&mut rng, &diff, &mut q_pkt);
+                q_pkt.quantize(prec);
                 payload_bits += q_bits.bits(&q_pkt, prec);
                 wire::encode_into(&q_pkt, prec, &mut frames.q_frame);
             }
@@ -210,6 +265,7 @@ fn worker_loop(
                     let cc = c.as_mut().expect("star with_c needs a C compressor");
                     sub_into(&grad, gs, &mut diff);
                     cc.compress_into(&mut rng, &diff, &mut c_pkt);
+                    c_pkt.quantize(prec);
                     payload_bits += c_bits.bits(&c_pkt, prec);
                     // worker's own new shift h = ∇f(x*) + C(∇f − ∇f(x*))
                     h.copy_from_slice(gs);
@@ -221,6 +277,7 @@ fn worker_loop(
                 }
                 sub_into(&grad, &h, &mut diff);
                 q.compress_into(&mut rng, &diff, &mut q_pkt);
+                q_pkt.quantize(prec);
                 payload_bits += q_bits.bits(&q_pkt, prec);
                 wire::encode_into(&q_pkt, prec, &mut frames.q_frame);
             }
@@ -229,6 +286,7 @@ fn worker_loop(
                 if with_c {
                     let cc = c.as_mut().expect("diana with_c needs a C compressor");
                     cc.compress_into(&mut rng, &diff, &mut c_pkt);
+                    c_pkt.quantize(prec);
                     payload_bits += c_bits.bits(&c_pkt, prec);
                     // residual v − c stays in diff (O(nnz) application)
                     c_pkt.add_scaled_into(-1.0, &mut diff);
@@ -236,6 +294,7 @@ fn worker_loop(
                     frames.c_frame = Some(std::mem::take(&mut c_buf));
                 }
                 q.compress_into(&mut rng, &diff, &mut q_pkt);
+                q_pkt.quantize(prec);
                 payload_bits += q_bits.bits(&q_pkt, prec);
                 // shift learning h += α(c + q), straight from the packets —
                 // the master applies the identical update to its replica
@@ -248,6 +307,7 @@ fn worker_loop(
             MethodKind::RandDiana { p } => {
                 sub_into(&grad, &h, &mut diff);
                 q.compress_into(&mut rng, &diff, &mut q_pkt);
+                q_pkt.quantize(prec);
                 payload_bits += q_bits.bits(&q_pkt, prec);
                 wire::encode_into(&q_pkt, prec, &mut frames.q_frame);
                 if rng.bernoulli(p) {
@@ -352,6 +412,16 @@ impl DistributedRunner {
             }
         }
 
+        // Dedicated RNG stream for the downlink compressor (workers use
+        // streams 1..=n) — the single-process drivers derive the identical
+        // stream, so randomized downlink compressors stay bit-identical
+        // across drivers.
+        let dl_rng = root.stream(n as u64 + 1);
+        let ef = cfg.downlink.map(|c| EfDownlink::new(c, d, dl_rng));
+        // mirror of the worker replicas (EF only): workers boot with a
+        // zero replica until the round-0 resync overwrites it
+        let x_rep = if ef.is_some() { vec![0.0; d] } else { Vec::new() };
+
         Self {
             method: cfg.method,
             gamma: cfg.gamma,
@@ -379,6 +449,8 @@ impl DistributedRunner {
                 Arc::new(Vec::with_capacity(d * 8 + 32)),
             ],
             delta: wire::DeltaScratch::with_capacity(d),
+            ef,
+            x_rep,
             needs_resync: true,
             resync_every: cfg.resync_every,
             round: 0,
@@ -396,6 +468,34 @@ impl DistributedRunner {
     /// Master-side reconstruction of a worker's shift (tests).
     pub fn shift(&self, worker: usize) -> &[f64] {
         &self.h[worker]
+    }
+
+    /// Snapshot a worker thread's private state (shift + iterate replica)
+    /// via an [`WorkerCommand::Inspect`] round-trip. Debug/ops only — the
+    /// worker must be idle, which it is between [`Algorithm::step`] calls.
+    pub fn worker_snapshot(&self, worker: usize) -> WorkerSnapshot {
+        let (tx, rx) = sync_channel(1);
+        self.workers[worker]
+            .cmd_tx
+            .send(WorkerCommand::Inspect { reply: tx })
+            .expect("worker thread died");
+        rx.recv().expect("worker thread died")
+    }
+
+    /// The EF downlink's error accumulator `x_master − x_replica`
+    /// (`None` on the exact path). Zero right after any resync.
+    pub fn ef_error(&self) -> Option<&[f64]> {
+        self.ef.as_ref().map(|ef| ef.error())
+    }
+
+    /// Master-side bit-exact mirror of the worker replicas (`None` on the
+    /// exact path, where the master iterate itself is the mirror). Between
+    /// steps the mirror leads the workers by the one in-flight frame: it
+    /// already includes the next round's EfDelta, which workers apply at
+    /// the start of their next round — compare a [`Self::worker_snapshot`]
+    /// taken after step k+1 against the mirror read after step k.
+    pub fn replica_mirror(&self) -> Option<&[f64]> {
+        self.ef.as_ref().map(|_| self.x_rep.as_slice())
     }
 
     pub fn simulated_time(&self) -> f64 {
@@ -436,8 +536,14 @@ impl Algorithm for DistributedRunner {
         // which happens only after it dropped that round's handle — so the
         // refcount is 1 and the encode is in place. (Defensive fallback
         // allocates; unreachable in steady state.)
+        // Periodic resyncs skip round 0: the bootstrap resync
+        // (`needs_resync`, set at construction) already covers it. The
+        // `round != 0` guard makes that explicit rather than changing the
+        // schedule — round 0 short-circuits on `needs_resync` either way —
+        // so the periodic term can never silently become the only thing
+        // standing between a fresh replica and an unsynced round 0.
         let resync = self.needs_resync
-            || (self.resync_every != 0 && self.round % self.resync_every == 0);
+            || (self.resync_every != 0 && self.round != 0 && self.round % self.resync_every == 0);
         if resync {
             let buf = &mut self.down_bufs[parity];
             if let Some(b) = Arc::get_mut(buf) {
@@ -448,6 +554,13 @@ impl Algorithm for DistributedRunner {
                 *buf = Arc::new(b);
             }
             self.needs_resync = false;
+            // a resync overwrites every replica with the master iterate:
+            // flush the EF error accumulator (nothing is pending any more)
+            // and bring the replica mirror back to exact equality
+            if let Some(ef) = &mut self.ef {
+                ef.flush();
+                self.x_rep.copy_from_slice(&self.x);
+            }
         }
         let down_frame_bits = self.down_bufs[parity].len() as u64 * 8;
         for (wi, w) in self.workers.iter().enumerate() {
@@ -539,19 +652,36 @@ impl Algorithm for DistributedRunner {
         // gradient step, via the same delta packet the workers will apply:
         // x += 1·(−γ·g) with identical roundings on both ends, so master
         // and replicas stay bit-equal (and bit-identical to the dense
-        // axpy(−γ, g, x) reference on every touched coordinate)
+        // axpy(−γ, g, x) reference on every touched coordinate). On the EF
+        // path the master still steps exactly; the *broadcast* is the
+        // compressed C(e + Δ) and the residual stays in the accumulator.
+        let kind = if self.ef.is_some() {
+            DownKind::EfDelta
+        } else {
+            DownKind::Delta
+        };
         let delta = wire::build_update_packet(&self.est, -self.gamma, self.prec, &mut self.delta);
         delta.add_scaled_into(1.0, &mut self.x);
+        let bcast: &Packet = match &mut self.ef {
+            Some(ef) => {
+                let c = ef.fold_and_compress(delta, self.prec);
+                // keep the replica mirror bit-equal to the workers: same
+                // packet, same operation
+                c.add_scaled_into(1.0, &mut self.x_rep);
+                c
+            }
+            None => delta,
+        };
         // pre-encode next round's downlink into the buffer this round
         // retired (all round-k updates are in, so every worker has dropped
         // its handle from round k−1)
         {
             let buf = &mut self.down_bufs[(self.round + 1) % 2];
             if let Some(b) = Arc::get_mut(buf) {
-                wire::encode_down_into(DownKind::Delta, delta, self.prec, b);
+                wire::encode_down_into(kind, bcast, self.prec, b);
             } else {
                 let mut b = Vec::with_capacity(d * 8 + 32);
-                wire::encode_down_into(DownKind::Delta, delta, self.prec, &mut b);
+                wire::encode_down_into(kind, bcast, self.prec, &mut b);
                 *buf = Arc::new(b);
             }
         }
@@ -616,6 +746,7 @@ impl DistributedRunner {
                 seed,
                 links,
                 resync_every: 0,
+                downlink: None,
             },
         )
     }
@@ -648,6 +779,7 @@ impl DistributedRunner {
                 seed,
                 links,
                 resync_every: 0,
+                downlink: None,
             },
         )
     }
@@ -678,6 +810,7 @@ impl DistributedRunner {
                 seed,
                 links,
                 resync_every: 0,
+                downlink: None,
             },
         )
     }
@@ -715,8 +848,13 @@ mod tests {
     fn network_accounting_advances() {
         let p = Arc::new(Ridge::paper_default(6));
         let links = vec![LinkModel::default(); p.n_workers()];
-        let mut runner =
-            DistributedRunner::rand_diana(p.clone(), RandK::with_q(p.dim(), 0.2), None, 6, Some(links));
+        let mut runner = DistributedRunner::rand_diana(
+            p.clone(),
+            RandK::with_q(p.dim(), 0.2),
+            None,
+            6,
+            Some(links),
+        );
         for _ in 0..10 {
             runner.step(p.as_ref());
         }

@@ -38,11 +38,21 @@
 //! println!("final error: {:.3e}", trace.final_relative_error());
 //! ```
 
+// Deliberate idioms used pervasively (CI runs `clippy -- -D warnings`):
+// explicit `(bits + 7) / 8` mirrors the wire-format spec text, and indexed
+// loops over parallel slices match the linalg kernels' style.
+#![allow(
+    clippy::manual_div_ceil,
+    clippy::needless_range_loop,
+    clippy::too_many_arguments
+)]
+
 pub mod algorithms;
 pub mod compressors;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod downlink;
 pub mod harness;
 pub mod linalg;
 #[cfg(feature = "pjrt")]
@@ -66,7 +76,10 @@ pub mod prelude {
         Scaled, SignScaled, Ternary, TopK, ZeroCompressor,
     };
     pub use crate::coordinator::{ClusterConfig, DistributedRunner};
-    pub use crate::data::{make_regression, partition_evenly, synthetic_w2a, RegressionOpts, W2aOpts};
+    pub use crate::downlink::EfDownlink;
+    pub use crate::data::{
+        make_regression, partition_evenly, synthetic_w2a, RegressionOpts, W2aOpts,
+    };
     pub use crate::metrics::Trace;
     pub use crate::problems::{Logistic, Problem, Quadratic, Ridge};
     pub use crate::theory::{self, StepSizes};

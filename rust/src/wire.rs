@@ -21,23 +21,35 @@
 //! # Downlink (broadcast) frames
 //!
 //! The master never ships the dense iterate: it broadcasts one frame per
-//! round, shared by every worker, that is either a **delta** or a
-//! **resync**:
+//! round, shared by every worker, that is a **delta**, an error-fed-back
+//! **EF delta**, or a **resync**:
 //!
 //! ```text
 //! downlink frame: 1 byte kind | packet frame (header + body as above)
-//!   kind = 1 (Delta):  packet decodes to x^{k+1} − x^k = −γ·g^k; workers
-//!                      apply it to their local replica with
-//!                      `add_scaled_into(1.0, &mut x)`. Sparse when the
-//!                      aggregate is sparse (exact bit accounting picks the
-//!                      cheaper of Sparse/Dense — see [`build_update_packet`]).
-//!   kind = 2 (Resync): a Dense packet of the full iterate; workers
-//!                      overwrite their replica. Sent on round 0 (replica
-//!                      bootstrap for joiners), every `resync_every` rounds,
-//!                      and after out-of-band iterate changes (`set_x0`).
-//!                      Resync frames are always f64 — they re-establish
-//!                      bit-exact replica state regardless of the delta
-//!                      precision.
+//!   kind = 1 (Delta):   packet decodes to x^{k+1} − x^k = −γ·g^k; workers
+//!                       apply it to their local replica with
+//!                       `add_scaled_into(1.0, &mut x)`. Sparse when the
+//!                       aggregate is sparse (exact bit accounting picks the
+//!                       cheaper of Sparse/Dense — see [`build_update_packet`]).
+//!   kind = 3 (EfDelta): a *lossy* replica update C(e^k + (x^{k+1} − x^k))
+//!                       produced by the master's error-fed-back downlink
+//!                       compressor (see [`crate::downlink::EfDownlink`]).
+//!                       Workers apply it exactly like a Delta; the part the
+//!                       compressor dropped stays in the master's error
+//!                       accumulator e and is retried next round, so the
+//!                       EF invariant  x_replica + e = x_master  holds (to
+//!                       fp rounding; bit-exactly right after a resync).
+//!                       Keeps the broadcast O(nnz) even when DIANA-family
+//!                       shifts densify the exact delta.
+//!   kind = 2 (Resync):  a Dense packet of the full iterate; workers
+//!                       overwrite their replica. Sent on round 0 (replica
+//!                       bootstrap for joiners), every `resync_every` rounds
+//!                       (round 0 itself is skipped — the bootstrap resync
+//!                       already covers it), and after out-of-band iterate
+//!                       changes (`set_x0`). Resync frames are always f64 —
+//!                       they re-establish bit-exact replica state
+//!                       regardless of the delta precision — and flush the
+//!                       EF error accumulator to zero.
 //! ```
 //!
 //! Delta application is exact f64 arithmetic: the packet carries the
@@ -96,6 +108,7 @@ const TAG_ZERO: u8 = 8;
 
 const DOWN_DELTA: u8 = 1;
 const DOWN_RESYNC: u8 = 2;
+const DOWN_EF_DELTA: u8 = 3;
 
 /// What a downlink broadcast frame carries (see the module doc).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -104,6 +117,10 @@ pub enum DownKind {
     Delta,
     /// Full dense iterate, overwriting the replica.
     Resync,
+    /// Error-fed-back compressed replica update C(e + Δ), applied to the
+    /// replica exactly like a [`Delta`](DownKind::Delta); the residual
+    /// stays in the master's error accumulator.
+    EfDelta,
 }
 
 /// Low `n` bits set (`n ≤ 64`).
@@ -549,6 +566,7 @@ fn down_tag(kind: DownKind) -> u8 {
     match kind {
         DownKind::Delta => DOWN_DELTA,
         DownKind::Resync => DOWN_RESYNC,
+        DownKind::EfDelta => DOWN_EF_DELTA,
     }
 }
 
@@ -559,6 +577,7 @@ pub fn decode_down_into(bytes: &[u8], out: &mut Packet) -> Result<DownKind, Wire
     let kind = match r.read_u8()? {
         DOWN_DELTA => DownKind::Delta,
         DOWN_RESYNC => DownKind::Resync,
+        DOWN_EF_DELTA => DownKind::EfDelta,
         t => return Err(WireError::BadTag(t)),
     };
     decode_packet(&mut r, out)?;
@@ -1056,7 +1075,7 @@ mod tests {
             scale: -0.125,
         };
         let mut buf = Vec::new();
-        for kind in [DownKind::Delta, DownKind::Resync] {
+        for kind in [DownKind::Delta, DownKind::Resync, DownKind::EfDelta] {
             encode_down_into(kind, &pkt, ValPrec::F64, &mut buf);
             let mut out = Packet::Zero { dim: 0 };
             assert_eq!(decode_down_into(&buf, &mut out).unwrap(), kind);

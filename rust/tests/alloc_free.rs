@@ -168,6 +168,28 @@ fn single_process_round_is_allocation_free() {
     assert_eq!(allocs, 0, "dcgd step allocated {allocs} times in 10 rounds");
 }
 
+/// The error-fed-back Top-K downlink reuses its compressor scratch, error
+/// accumulator and re-pack buffers: steady-state EF rounds are
+/// allocation-free too (the Top-K selection scratch is thread-local and
+/// warmed by the first rounds).
+#[test]
+fn ef_downlink_round_is_allocation_free() {
+    let _guard = TEST_LOCK.lock().unwrap();
+    let d = 4096;
+    let p = MeanProblem::new(d, 4, 9);
+    let mut alg = DcgdShift::diana(&p, RandK::with_q(d, 0.01), None, 9)
+        .with_downlink(Box::new(shiftcomp::compressors::TopK::with_q(d, 0.01)));
+    for _ in 0..5 {
+        alg.step(&p);
+    }
+    let allocs = thread_allocs(|| {
+        for _ in 0..10 {
+            alg.step(&p);
+        }
+    });
+    assert_eq!(allocs, 0, "EF downlink step allocated {allocs} times in 10 rounds");
+}
+
 /// GDCI's compressed-iterates loop is allocation-free too.
 #[test]
 fn gdci_round_is_allocation_free() {

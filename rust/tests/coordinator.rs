@@ -53,6 +53,7 @@ fn dcgd_bit_identical() {
             seed: 11,
             links: None,
             resync_every: 0,
+            downlink: None,
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 60);
@@ -86,6 +87,7 @@ fn diana_bit_identical() {
             seed: 13,
             links: None,
             resync_every: 0,
+            downlink: None,
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 60);
@@ -123,6 +125,7 @@ fn diana_with_c_bit_identical() {
             seed: 15,
             links: None,
             resync_every: 0,
+            downlink: None,
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 50);
@@ -150,6 +153,7 @@ fn rand_diana_bit_identical() {
             seed: 17,
             links: None,
             resync_every: 0,
+            downlink: None,
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 80);
@@ -178,6 +182,7 @@ fn star_bit_identical() {
             seed: 19,
             links: None,
             resync_every: 0,
+            downlink: None,
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 60);
@@ -286,6 +291,7 @@ fn resync_rounds_stay_bit_identical() {
             seed: 31,
             links: None,
             resync_every: 3,
+            downlink: None,
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 40);
@@ -320,6 +326,7 @@ fn set_x0_mid_run_resyncs_replicas() {
             seed: 33,
             links: None,
             resync_every: 0,
+            downlink: None,
         },
     );
     for _ in 0..5 {
@@ -406,6 +413,7 @@ fn f32_wire_precision_cluster_converges() {
                 seed: 37,
                 links: None,
                 resync_every: 50,
+                downlink: None,
             },
         )
     };
@@ -454,6 +462,7 @@ fn downlink_accounting_mirrors_runner() {
             seed: 39,
             links: None,
             resync_every: 0,
+            downlink: None,
         },
     );
     for k in 0..30 {
@@ -461,5 +470,441 @@ fn downlink_accounting_mirrors_runner() {
         let b = dist.step(p.as_ref());
         assert_eq!(a.bits_down, b.bits_down, "downlink accounting at round {k}");
         assert_eq!(a.bits_up, b.bits_up, "uplink accounting at round {k}");
+    }
+}
+
+// ------------------------------------------- error-fed-back (EF) downlink
+
+/// EF downlink with the identity compressor drops nothing: trajectories
+/// and downlink bit accounting are bit-identical to the exact delta path
+/// (and therefore to the single-process driver).
+#[test]
+fn ef_identity_downlink_bit_identical_to_exact() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let mut single = DcgdShift::diana(p.as_ref(), RandK::with_q(d, 0.3), None, 41);
+    let gamma = single.gamma;
+    let omega = RandK::with_q(d, 0.3).omega().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(RandK::with_q(d, 0.3)) as Box<dyn Compressor>)
+        .collect();
+    let mut dist = DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::Diana {
+                alpha: ss.alpha,
+                with_c: false,
+            },
+            gamma,
+            prec: ValPrec::F64,
+            seed: 41,
+            links: None,
+            resync_every: 0,
+            downlink: Some(Box::new(shiftcomp::compressors::Identity::new(d))),
+        },
+    );
+    for k in 0..40 {
+        let a = single.step(p.as_ref());
+        let b = dist.step(p.as_ref());
+        assert_eq!(single.x(), dist.x(), "iterates diverged at round {k}");
+        assert_eq!(a.bits_up, b.bits_up, "uplink bits at round {k}");
+        assert_eq!(a.bits_down, b.bits_down, "downlink bits at round {k}");
+    }
+    // identity keeps the error accumulator exactly zero
+    assert!(dist.ef_error().unwrap().iter().all(|&v| v == 0.0));
+    // and the single-process EF-identity mirror is also bit-identical
+    let mut exact = DcgdShift::diana(p.as_ref(), RandK::with_q(d, 0.3), None, 41);
+    let mut ef_single = DcgdShift::diana(p.as_ref(), RandK::with_q(d, 0.3), None, 41)
+        .with_downlink(Box::new(shiftcomp::compressors::Identity::new(d)));
+    for k in 0..40 {
+        let a = exact.step(p.as_ref());
+        let b = ef_single.step(p.as_ref());
+        assert_eq!(exact.x(), ef_single.x(), "single drivers diverged at round {k}");
+        assert_eq!(a.bits_down, b.bits_down, "single bits_down at round {k}");
+    }
+}
+
+/// Top-K EF downlink: the threaded cluster and the single-process mirror
+/// follow the same (lossy-broadcast) trajectory bit for bit, with the same
+/// measured bit accounting.
+#[test]
+fn ef_topk_cluster_matches_single_process_mirror() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let mut single = DcgdShift::diana(p.as_ref(), RandK::with_q(d, 0.3), None, 43)
+        .with_downlink(Box::new(TopK::with_q(d, 0.25)));
+    let gamma = single.gamma;
+    let omega = RandK::with_q(d, 0.3).omega().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(RandK::with_q(d, 0.3)) as Box<dyn Compressor>)
+        .collect();
+    let mut dist = DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::Diana {
+                alpha: ss.alpha,
+                with_c: false,
+            },
+            gamma,
+            prec: ValPrec::F64,
+            seed: 43,
+            links: None,
+            resync_every: 0,
+            downlink: Some(Box::new(TopK::with_q(d, 0.25))),
+        },
+    );
+    for k in 0..60 {
+        let a = single.step(p.as_ref());
+        let b = dist.step(p.as_ref());
+        assert_eq!(single.x(), dist.x(), "iterates diverged at round {k}");
+        assert_eq!(a.bits_up, b.bits_up, "uplink bits at round {k}");
+        assert_eq!(a.bits_down, b.bits_down, "downlink bits at round {k}");
+        assert_eq!(
+            single.replica(),
+            dist.replica_mirror(),
+            "replicas diverged at round {k}"
+        );
+        assert_eq!(
+            single.ef_error(),
+            dist.ef_error(),
+            "EF accumulators diverged at round {k}"
+        );
+    }
+    // the lossy broadcast must not destabilize the run (the conservative
+    // theory step makes per-round progress tiny on the ill-conditioned
+    // ridge, so pin boundedness here; convergence itself is covered by the
+    // long-horizon tests on the exact path)
+    let x0 = shiftcomp::algorithms::paper_x0(d, 43);
+    let err = shiftcomp::linalg::dist_sq(dist.x(), p.x_star())
+        / shiftcomp::linalg::dist_sq(&x0, p.x_star());
+    assert!(err.is_finite() && err < 1.5, "EF-TopK run blew up: rel err {err}");
+}
+
+/// The EF machinery, observed from inside the cluster: worker replicas are
+/// bit-equal to the master's mirror (lagged by the one in-flight frame),
+/// the EF invariant x̂ + e = x holds to rounding, the Top-K residual obeys
+/// the contraction bound, and a periodic resync restores exact equality.
+#[test]
+fn ef_topk_invariant_drift_and_resync() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let resync_every = 7usize;
+    let delta_contr = TopK::with_q(d, 0.2).delta().unwrap();
+    let omega = RandK::with_q(d, 0.4).omega().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(RandK::with_q(d, 0.4)) as Box<dyn Compressor>)
+        .collect();
+    let mut dist = DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::Diana {
+                alpha: ss.alpha,
+                with_c: false,
+            },
+            gamma: ss.gamma,
+            prec: ValPrec::F64,
+            seed: 45,
+            links: None,
+            resync_every,
+            downlink: Some(Box::new(TopK::with_q(d, 0.2))),
+        },
+    );
+    let mut prev_mirror: Option<Vec<f64>> = None;
+    let mut prev_e: Vec<f64> = vec![0.0; d];
+    let mut prev_x: Vec<f64> = dist.x().to_vec();
+    for k in 0..30 {
+        let is_resync_round = k == 0 || k % resync_every == 0;
+        let x_at_resync = dist.x().to_vec();
+        dist.step(p.as_ref());
+        // worker replicas during round k hold what the mirror held after
+        // round k−1 — unless round k resynced, which overwrites them with
+        // the master iterate as of the start of the round
+        let snap0 = dist.worker_snapshot(0);
+        let snap_last = dist.worker_snapshot(n - 1);
+        assert_eq!(snap0.x_replica, snap_last.x_replica, "replicas differ at {k}");
+        if is_resync_round {
+            assert_eq!(
+                snap0.x_replica, x_at_resync,
+                "round {k}: resync must overwrite replicas with the master iterate"
+            );
+        } else {
+            let expect = prev_mirror.as_ref().expect("non-resync round after round 0");
+            assert_eq!(
+                &snap0.x_replica, expect,
+                "round {k}: worker replica != master mirror (lagged)"
+            );
+        }
+        let mirror = dist.replica_mirror().unwrap().to_vec();
+        let e = dist.ef_error().unwrap().to_vec();
+        // EF invariant x̂ + e = x, to fp rounding
+        let x = dist.x();
+        for j in 0..d {
+            let lhs = mirror[j] + e[j];
+            assert!(
+                (lhs - x[j]).abs() <= 1e-9 * x[j].abs().max(1.0),
+                "round {k} coord {j}: invariant broken ({lhs} vs {})",
+                x[j]
+            );
+        }
+        // contraction: ‖e_k‖² ≤ (1 − δ)‖e_{k−1} + Δ_k‖² (resync flushes
+        // e_{k−1} to zero first); small slack for the Δ reconstruction
+        let mut u = if is_resync_round { vec![0.0; d] } else { prev_e.clone() };
+        for j in 0..d {
+            u[j] += x[j] - prev_x[j];
+        }
+        let bound = (1.0 - delta_contr) * shiftcomp::linalg::nrm2_sq(&u);
+        let e_sq = shiftcomp::linalg::nrm2_sq(&e);
+        assert!(
+            e_sq <= bound * (1.0 + 1e-9) + 1e-18,
+            "round {k}: residual {e_sq} above contraction bound {bound}"
+        );
+        prev_mirror = Some(mirror);
+        prev_e = e;
+        prev_x = x.to_vec();
+    }
+}
+
+// ------------------------------------------------ f32 shift-replica parity
+
+/// Headline bugfix: under f32 wire precision the worker's shift h must be
+/// bit-equal to the master's replica reconstructed from the quantized wire
+/// frames (workers now apply the pre-quantized packet, as the iterate path
+/// always has).
+#[test]
+fn f32_worker_shifts_bit_equal_master_replicas() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let omega = NaturalDithering::l2(d, 4).omega().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(NaturalDithering::l2(d, 4)) as Box<dyn Compressor>)
+        .collect();
+    let mut dist = DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::Diana {
+                alpha: ss.alpha,
+                with_c: false,
+            },
+            gamma: ss.gamma,
+            prec: ValPrec::F32,
+            seed: 47,
+            links: None,
+            resync_every: 0,
+            downlink: None,
+        },
+    );
+    for _ in 0..50 {
+        dist.step(p.as_ref());
+    }
+    for wi in 0..n {
+        let snap = dist.worker_snapshot(wi);
+        let master = dist.shift(wi);
+        for j in 0..d {
+            assert_eq!(
+                snap.h[j].to_bits(),
+                master[j].to_bits(),
+                "worker {wi} coord {j}: shift replicas diverged under f32"
+            );
+        }
+    }
+    // Rand-DIANA refreshes (always-quantized delta path) stay bit-equal too
+    let omega_rk = RandK::with_q(d, 0.3).omega().unwrap();
+    let ss_rd = shiftcomp::theory::rand_diana(p.as_ref(), omega_rk, &vec![0.3; n], None);
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(RandK::with_q(d, 0.3)) as Box<dyn Compressor>)
+        .collect();
+    let mut dist = DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::RandDiana { p: 0.3 },
+            gamma: ss_rd.gamma,
+            prec: ValPrec::F32,
+            seed: 48,
+            links: None,
+            resync_every: 0,
+            downlink: None,
+        },
+    );
+    for _ in 0..50 {
+        dist.step(p.as_ref());
+    }
+    for wi in 0..n {
+        let snap = dist.worker_snapshot(wi);
+        assert_eq!(snap.h, dist.shift(wi), "worker {wi} rand-diana shift");
+    }
+}
+
+/// With shift updates quantized at the source on both drivers, an f32
+/// cluster is bit-identical to the f32 single-process driver — iterates,
+/// shifts and bit accounting.
+#[test]
+fn f32_single_process_mirrors_cluster_bit_exactly() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let mut single = DcgdShift::diana(p.as_ref(), RandK::with_q(d, 0.4), None, 49);
+    single.prec = ValPrec::F32;
+    let gamma = single.gamma;
+    let omega = RandK::with_q(d, 0.4).omega().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(RandK::with_q(d, 0.4)) as Box<dyn Compressor>)
+        .collect();
+    let mut dist = DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::Diana {
+                alpha: ss.alpha,
+                with_c: false,
+            },
+            gamma,
+            prec: ValPrec::F32,
+            seed: 49,
+            links: None,
+            resync_every: 0,
+            downlink: None,
+        },
+    );
+    for k in 0..60 {
+        let a = single.step(p.as_ref());
+        let b = dist.step(p.as_ref());
+        assert_eq!(single.x(), dist.x(), "f32 iterates diverged at round {k}");
+        assert_eq!(a.bits_up, b.bits_up, "f32 uplink bits at round {k}");
+        assert_eq!(a.bits_down, b.bits_down, "f32 downlink bits at round {k}");
+    }
+    for wi in 0..n {
+        assert_eq!(single.shift(wi), dist.shift(wi), "f32 shift of worker {wi}");
+    }
+}
+
+/// `resync_every = 1` semantics, pinned: the round-0 resync is the
+/// bootstrap's job (`needs_resync`), periodic dense resyncs cover every
+/// later round — so every round is dense (that is what the knob asks
+/// for), the trajectory stays bit-identical to the single-process driver,
+/// and the accounting reflects dense frames.
+#[test]
+fn resync_every_round_stays_exact_and_dense() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let mut single = DcgdShift::diana(p.as_ref(), RandK::with_q(d, 0.3), None, 51);
+    let gamma = single.gamma;
+    let omega = RandK::with_q(d, 0.3).omega().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(RandK::with_q(d, 0.3)) as Box<dyn Compressor>)
+        .collect();
+    let mut dist = DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::Diana {
+                alpha: ss.alpha,
+                with_c: false,
+            },
+            gamma,
+            prec: ValPrec::F64,
+            seed: 51,
+            links: None,
+            resync_every: 1,
+            downlink: None,
+        },
+    );
+    let dense_frame_bits = shiftcomp::wire::resync_frame_bits(d);
+    for k in 0..20 {
+        single.step(p.as_ref());
+        let s = dist.step(p.as_ref());
+        assert_eq!(single.x(), dist.x(), "diverged at round {k}");
+        assert_eq!(
+            s.bits_down,
+            n as u64 * dense_frame_bits,
+            "round {k} must broadcast one dense resync frame per worker"
+        );
+    }
+}
+
+/// A forced resync flushes the EF accumulator: after `set_x0` the replicas
+/// re-converge to the master exactly, even mid-flight on a Top-K downlink.
+#[test]
+fn set_x0_flushes_ef_accumulator() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let omega = RandK::with_q(d, 0.4).omega().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(RandK::with_q(d, 0.4)) as Box<dyn Compressor>)
+        .collect();
+    let mut dist = DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::Diana {
+                alpha: ss.alpha,
+                with_c: false,
+            },
+            gamma: ss.gamma,
+            prec: ValPrec::F64,
+            seed: 53,
+            links: None,
+            resync_every: 0,
+            downlink: Some(Box::new(TopK::with_q(d, 0.1))),
+        },
+    );
+    for _ in 0..10 {
+        dist.step(p.as_ref());
+    }
+    assert!(
+        dist.ef_error().unwrap().iter().any(|&v| v != 0.0),
+        "a K=10% downlink must leave some residual"
+    );
+    let x_new: Vec<f64> = (0..d).map(|j| 0.5 - 0.01 * j as f64).collect();
+    dist.set_x0(x_new.clone());
+    dist.step(p.as_ref());
+    // the resync round broadcast x_new: every replica holds it exactly
+    // and the accumulator was flushed before the round's new fold
+    let snap = dist.worker_snapshot(0);
+    assert_eq!(snap.x_replica, x_new, "resync must deliver the exact new iterate");
+    // invariant holds exactly right after the flush + one fold
+    let mirror = dist.replica_mirror().unwrap();
+    let e = dist.ef_error().unwrap();
+    let x = dist.x();
+    for j in 0..d {
+        let lhs = mirror[j] + e[j];
+        assert!(
+            (lhs - x[j]).abs() <= 1e-12 * x[j].abs().max(1.0),
+            "coord {j}: {lhs} vs {}",
+            x[j]
+        );
     }
 }

@@ -105,6 +105,49 @@ fn prop_wire_roundtrip_all_compressors() {
     });
 }
 
+/// `Packet::quantize` is exactly "what the f32 wire does": a quantized
+/// packet equals its own encode → decode round-trip at f32, the raw
+/// packet's f32 round-trip lands on the quantized packet, and the encoded
+/// bytes of raw and quantized packets are identical — the invariant the
+/// shift-replica symmetry fix relies on (workers apply the quantized
+/// packet, the master applies the decoded frame; they must agree).
+#[test]
+fn prop_quantize_equals_f32_wire_roundtrip() {
+    use shiftcomp::compressors::ValPrec;
+    run(60, 0x94a17, |g| {
+        let d = g.usize_in(1, 100);
+        let c: Box<dyn Compressor> = if g.bool() {
+            random_unbiased(g, d)
+        } else {
+            random_biased(g, d)
+        };
+        let x = g.vec_mixed_scale(d);
+        let mut rng = Pcg64::new(g.rng.next_u64());
+        let pkt = c.compress(&mut rng, &x);
+        let mut quantized = pkt.clone();
+        quantized.quantize(ValPrec::F32);
+        let raw_bytes = wire::encode(&pkt, ValPrec::F32);
+        let q_bytes = wire::encode(&quantized, ValPrec::F32);
+        if raw_bytes != q_bytes {
+            return Err(format!("{}: quantize changed the wire bytes", c.name()));
+        }
+        let back = wire::decode(&raw_bytes).map_err(|e| format!("{}: {e}", c.name()))?;
+        if back != quantized {
+            return Err(format!(
+                "{}: f32 wire round-trip != quantize ({back:?} vs {quantized:?})",
+                c.name()
+            ));
+        }
+        // idempotence: a second round-trip is the identity
+        let again = wire::decode(&wire::encode(&back, ValPrec::F32))
+            .map_err(|e| format!("{}: {e}", c.name()))?;
+        if again != back {
+            return Err(format!("{}: f32 round-trip not idempotent", c.name()));
+        }
+        Ok(())
+    });
+}
+
 /// Lemma 1 (shift composition): v + Q_h(x − v) has zero variance at
 /// x = h + v and is unbiased everywhere.
 #[test]

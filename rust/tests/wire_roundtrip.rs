@@ -195,10 +195,10 @@ fn wide_dim_unaligned_sparse_roundtrips() {
 fn prop_down_frames_roundtrip() {
     run(120, 0x77137, |g| {
         let pkt = random_packet(g);
-        let kind = if g.bool() {
-            wire::DownKind::Delta
-        } else {
-            wire::DownKind::Resync
+        let kind = match g.usize_in(0, 2) {
+            0 => wire::DownKind::Delta,
+            1 => wire::DownKind::Resync,
+            _ => wire::DownKind::EfDelta,
         };
         let mut buf = vec![0x5Au8; g.usize_in(0, 16)];
         wire::encode_down_into(kind, &pkt, ValPrec::F64, &mut buf);
