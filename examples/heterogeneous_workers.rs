@@ -25,7 +25,8 @@ use shiftcomp::prelude::*;
 fn run_fleet(name: &str, problem: Arc<Ridge>, qs: Vec<Box<dyn Compressor>>, rounds: usize) {
     let n = problem.n_workers();
     let d = problem.dim();
-    // links degrade with worker index (worker 9 is ~4x slower than worker 0)
+    // links degrade with worker index (worker 9 is ~4x slower than worker
+    // 0, in both bandwidth and latency — the spreads are independent knobs)
     let links = LinkModel::heterogeneous_fleet(
         n,
         LinkModel {
@@ -33,6 +34,7 @@ fn run_fleet(name: &str, problem: Arc<Ridge>, qs: Vec<Box<dyn Compressor>>, roun
             down_bps: 100e6,
             latency: 1e-3,
         },
+        0.35,
         0.35,
     );
     // DIANA across the mixed fleet: α from the *largest* ω in the fleet
@@ -58,6 +60,8 @@ fn run_fleet(name: &str, problem: Arc<Ridge>, qs: Vec<Box<dyn Compressor>>, roun
             seed: 42,
             links: Some(links),
             resync_every: 0,
+            local_steps: 1,
+            pipeline: false,
             downlink: None,
         },
     );

@@ -52,13 +52,25 @@
 //! the exact master step folds the delta into the EF accumulator,
 //! compresses, and applies the compressed packet to `x̂` — op for op what
 //! the threaded cluster does, so trajectories and `bits_down` stay
-//! bit-identical across drivers (pinned by `tests/coordinator.rs`).
+//! bit-identical across drivers (pinned by `tests/coordinator.rs`). The
+//! glue lives in the shared [`crate::downlink::DownlinkState`].
+//!
+//! # Local-step batched rounds
+//!
+//! [`DcgdShift::set_local_steps`] = τ mirrors
+//! [`crate::coordinator::ClusterConfig::local_steps`] bit for bit: each
+//! worker slot performs τ local shifted sub-steps per round (gradient at a
+//! local iterate, quantized packet, local step `x̂ ← x̂ − γ(h + q_t)`, DIANA
+//! shift learning per sub-step), and the master phase replays the fold
+//! sub-step-major — exactly the order in which the threaded master decodes
+//! the batched frames — before shipping the composite delta. τ = 1 is
+//! today's per-round protocol, verbatim.
 
 use crate::algorithms::shift_rules::ShiftRule;
 use crate::algorithms::{Algorithm, StepStats};
 use crate::compressors::{Compressor, Packet, PayloadBitsCache, ValPrec};
-use crate::downlink::EfDownlink;
-use crate::linalg::{ax_into, axpy, sub_into};
+use crate::downlink::DownlinkState;
+use crate::linalg::{ax_into, axpy, sub_into, zero};
 use crate::problems::Problem;
 use crate::theory;
 use crate::util::rng::Pcg64;
@@ -84,6 +96,10 @@ struct WorkerSlot {
     r_bits: PayloadBitsCache,
     /// Rand-DIANA: did this round refresh the shift?
     refreshed: bool,
+    /// batched rounds: the round's τ sub-step packets in sub-step order
+    /// (the single-process stand-in for the wire batch frame; empty while
+    /// `local_steps = 1`)
+    batch: Vec<Packet>,
 }
 
 pub struct DcgdShift {
@@ -102,20 +118,20 @@ pub struct DcgdShift {
     est: Vec<f64>,
     /// downlink delta builder (master scratch, pre-sized to d)
     delta: wire::DeltaScratch,
-    /// error-fed-back downlink mirror (`None` = exact deltas); see the
-    /// module doc
-    downlink: Option<EfDownlink>,
-    /// shared worker replica x̂ of the broadcast iterate (EF path only —
-    /// the broadcast is identical for every worker, so one vector mirrors
-    /// them all; empty on the exact path, where x̂ ≡ x bit for bit)
-    x_rep: Vec<f64>,
-    /// dedicated RNG stream for the downlink compressor — derived exactly
-    /// as in the coordinator (worker streams are 1..=n, this is n+1)
-    dl_rng: Pcg64,
-    /// per-worker bits of the downlink frame the *next* round broadcasts —
-    /// mirrors the coordinator, whose round-k frame (round-0 resync, then
-    /// the previous round's delta) is encoded before round k runs
-    next_down_bits: u64,
+    /// shared driver-side downlink glue ([`crate::downlink::DownlinkState`]):
+    /// the optional error-fed-back broadcast mirror (shared worker replica
+    /// x̂, EF accumulator — see the module doc) and the measured
+    /// next-frame accounting, which mirrors the coordinator: its round-k
+    /// frame (round-0 resync, then the previous round's delta) is encoded
+    /// before round k runs
+    dl: DownlinkState,
+    /// local sub-steps per communication round (≥ 1; see the module doc)
+    local_steps: usize,
+    /// batched rounds: Σ_t est^t accumulator (empty while τ = 1)
+    g_acc: Vec<f64>,
+    /// batched rounds: shared local-iterate scratch, one worker at a time
+    /// (empty while τ = 1)
+    x_loc: Vec<f64>,
 }
 
 impl DcgdShift {
@@ -297,25 +313,29 @@ impl DcgdShift {
                 c_bits: PayloadBitsCache::new(),
                 r_bits: PayloadBitsCache::new(),
                 refreshed: false,
+                batch: Vec::new(),
             })
             .collect();
         // downlink compressor stream: worker streams are 1..=n, so n+1 —
-        // identical derivation to the coordinator's
+        // identical derivation to the coordinator's. DownlinkState starts
+        // with round 0 broadcasting the dense resync that bootstraps
+        // replicas.
         let dl_rng = root.stream(workers.len() as u64 + 1);
+        let x = crate::algorithms::paper_x0(d, seed);
+        let dl = DownlinkState::new(&x, dl_rng);
         Self {
             name: name.to_string(),
-            x: crate::algorithms::paper_x0(d, seed),
+            x,
             gamma,
             prec: ValPrec::F64,
             workers,
             h_sum,
             est: vec![0.0; d],
             delta: wire::DeltaScratch::with_capacity(d),
-            downlink: None,
-            x_rep: Vec::new(),
-            dl_rng,
-            // round 0 broadcasts the dense resync that bootstraps replicas
-            next_down_bits: wire::resync_frame_bits(d),
+            dl,
+            local_steps: 1,
+            g_acc: Vec::new(),
+            x_loc: Vec::new(),
         }
     }
 
@@ -325,10 +345,7 @@ impl DcgdShift {
     /// from the current iterate — the same state the coordinator's next
     /// dense resync would broadcast.
     pub fn set_downlink(&mut self, comp: Box<dyn Compressor>) {
-        let d = self.x.len();
-        self.x_rep = self.x.clone();
-        self.downlink = Some(EfDownlink::new(comp, d, self.dl_rng.clone()));
-        self.next_down_bits = wire::resync_frame_bits(d);
+        self.dl.arm(comp, &self.x);
     }
 
     /// Builder-style [`set_downlink`](Self::set_downlink).
@@ -337,15 +354,47 @@ impl DcgdShift {
         self
     }
 
+    /// Batch `tau` local shifted sub-steps per communication round — the
+    /// bit-identical single-process mirror of
+    /// [`crate::coordinator::ClusterConfig::local_steps`] (see the module
+    /// doc). Supported for the fixed-shift and DIANA-without-C rules;
+    /// panics otherwise. `1` restores the per-round protocol verbatim.
+    pub fn set_local_steps(&mut self, tau: usize) {
+        assert!(
+            tau >= 1 && tau <= u16::MAX as usize,
+            "local_steps must be in 1..=65535 (the batch frame's count field)"
+        );
+        if tau > 1 {
+            assert!(
+                self.workers.iter().all(|w| matches!(
+                    w.rule,
+                    ShiftRule::Fixed | ShiftRule::Diana { c: None, .. }
+                )),
+                "local-step batching (local_steps > 1) supports the fixed-shift and \
+                 DIANA-without-C rules; this driver ships one frame per round"
+            );
+            let d = self.x.len();
+            self.g_acc = vec![0.0; d];
+            self.x_loc = vec![0.0; d];
+        }
+        self.local_steps = tau;
+    }
+
+    /// Builder-style [`set_local_steps`](Self::set_local_steps).
+    pub fn with_local_steps(mut self, tau: usize) -> Self {
+        self.set_local_steps(tau);
+        self
+    }
+
     /// The EF downlink's error accumulator (`None` on the exact path).
     pub fn ef_error(&self) -> Option<&[f64]> {
-        self.downlink.as_ref().map(|ef| ef.error())
+        self.dl.ef_error()
     }
 
     /// The shared worker replica x̂ (`None` on the exact path, where the
     /// replicas are bit-equal to [`Algorithm::x`] by construction).
     pub fn replica(&self) -> Option<&[f64]> {
-        self.downlink.as_ref().map(|_| self.x_rep.as_slice())
+        self.dl.replica()
     }
 
     pub fn set_x0(&mut self, x0: Vec<f64>) {
@@ -353,12 +402,8 @@ impl DcgdShift {
         // the coordinator would resync its replicas after an out-of-band
         // iterate change; mirror the accounting — and on the EF path the
         // resync overwrites the replica and flushes the accumulator
-        self.next_down_bits = wire::resync_frame_bits(self.x.len());
         self.x = x0;
-        if let Some(ef) = &mut self.downlink {
-            ef.flush();
-            self.x_rep.copy_from_slice(&self.x);
-        }
+        self.dl.resync(&self.x);
     }
 
     pub fn set_gamma(&mut self, gamma: f64) {
@@ -397,18 +442,19 @@ impl Algorithm for DcgdShift {
     }
 
     fn step(&mut self, p: &dyn Problem) -> StepStats {
+        if self.local_steps > 1 {
+            return self.step_batched(p);
+        }
         let n = self.workers.len();
         let inv_n = 1.0 / n as f64;
         let mut bits_up: u64 = 0;
         let mut bits_refresh: u64 = 0;
-        // EF path: workers evaluate at their (shared) replica of the lossy
-        // broadcast, not at the master iterate
-        let use_replica = self.downlink.is_some();
 
         // ---- phase 1: workers (mirrors coordinator::worker_loop op for op)
         for (wi, w) in self.workers.iter_mut().enumerate() {
-            // line 6: local gradient at the iterate the worker actually has
-            let x_eval: &[f64] = if use_replica { &self.x_rep } else { &self.x };
+            // line 6: local gradient at the iterate the worker actually
+            // has (the shared lossy-broadcast replica on the EF path)
+            let x_eval: &[f64] = self.dl.x_eval(&self.x);
             p.local_grad_into(wi, x_eval, &mut w.grad);
             w.refreshed = false;
 
@@ -533,20 +579,74 @@ impl Algorithm for DcgdShift {
         // applied to the shared replica with the same op the workers use.
         // (Periodic `resync_every` redundancy is a runner-only operational
         // knob and is not mirrored here.)
-        let bits_down = n as u64 * self.next_down_bits;
-        self.next_down_bits = match &mut self.downlink {
-            Some(ef) => {
-                let c = ef.fold_and_compress(delta, self.prec);
-                c.add_scaled_into(1.0, &mut self.x_rep);
-                wire::down_frame_bits(c, self.prec)
-            }
-            None => wire::down_frame_bits(delta, self.prec),
-        };
+        let bits_down = self.dl.finish_round_packet(delta, n, self.prec);
 
         StepStats {
             bits_up,
             bits_down,
             bits_refresh,
+        }
+    }
+}
+
+impl DcgdShift {
+    /// Batched round: τ local shifted sub-steps per worker, then a
+    /// sub-step-major master replay — op for op what the threaded
+    /// coordinator does with the batched wire frames (see the module doc),
+    /// pinned bit-identical by `tests/coordinator.rs`.
+    fn step_batched(&mut self, p: &dyn Problem) -> StepStats {
+        let n = self.workers.len();
+        let tau = self.local_steps;
+        let inv_n = 1.0 / n as f64;
+        let mut bits_up: u64 = 0;
+
+        // ---- phase 1: workers — τ local sub-steps each, packets kept in
+        // sub-step order (the stand-in for the batched wire frame)
+        for (wi, w) in self.workers.iter_mut().enumerate() {
+            while w.batch.len() < tau {
+                w.batch.push(Packet::Zero {
+                    dim: self.x.len() as u32,
+                });
+            }
+            let x_eval: &[f64] = self.dl.x_eval(&self.x);
+            self.x_loc.copy_from_slice(x_eval);
+            for t in 0..tau {
+                p.local_grad_into(wi, &self.x_loc, &mut w.grad);
+                sub_into(&w.grad, &w.h, &mut w.diff);
+                w.q.compress_into(&mut w.rng, &w.diff, &mut w.batch[t]);
+                w.batch[t].quantize(self.prec);
+                bits_up += w.q_bits.bits(&w.batch[t], self.prec);
+                // local step x̂ ← x̂ − γ(h + q_t), h as used this sub-step
+                axpy(-self.gamma, &w.h, &mut self.x_loc);
+                w.batch[t].add_scaled_into(-self.gamma, &mut self.x_loc);
+                if let ShiftRule::Diana { alpha, .. } = &w.rule {
+                    w.batch[t].add_scaled_into(*alpha, &mut w.h);
+                }
+            }
+        }
+
+        // ---- phase 2: master — sub-step-major replay, worker order
+        // within each sub-step, matching the threaded master's batched
+        // fold bit for bit
+        zero(&mut self.g_acc);
+        for t in 0..tau {
+            ax_into(inv_n, &self.h_sum, &mut self.est);
+            for w in self.workers.iter_mut() {
+                w.batch[t].add_scaled_into(inv_n, &mut self.est);
+                if let ShiftRule::Diana { alpha, .. } = &w.rule {
+                    w.batch[t].add_scaled_into(*alpha, &mut self.h_sum);
+                }
+            }
+            axpy(1.0, &self.est, &mut self.g_acc);
+        }
+        let delta = wire::build_update_packet(&self.g_acc, -self.gamma, self.prec, &mut self.delta);
+        delta.add_scaled_into(1.0, &mut self.x);
+        let bits_down = self.dl.finish_round_packet(delta, n, self.prec);
+
+        StepStats {
+            bits_up,
+            bits_down,
+            bits_refresh: 0,
         }
     }
 }

@@ -20,7 +20,7 @@
 //!
 //! Both drivers account the broadcast the same way the DCGD-SHIFT family
 //! does: a round-0 dense resync, then one measured delta frame
-//! `x^{k+1} − x^k` per round ([`wire::build_update_packet`]) instead of
+//! `x^{k+1} − x^k` per round ([`crate::wire::build_update_packet`]) instead of
 //! the former dense `n·d·prec` formula — and [`Gdci::set_downlink`] /
 //! [`VrGdci::set_downlink`] arm the same error-fed-back compressed
 //! broadcast ([`crate::downlink::EfDownlink`]) the coordinator supports,
@@ -31,111 +31,17 @@
 
 use crate::algorithms::{Algorithm, StepStats};
 use crate::compressors::{Compressor, Packet, PayloadBitsCache, ValPrec};
-use crate::downlink::EfDownlink;
+use crate::downlink::DownlinkState;
 use crate::linalg::{axpy, zero};
 use crate::problems::Problem;
 use crate::theory;
 use crate::util::rng::Pcg64;
-use crate::wire;
 
-// ----------------------------------------------------------- downlink state
-
-/// Broadcast-side state shared by the GDCI drivers: measured delta-frame
-/// accounting (round-0 dense resync, then one `x^{k+1} − x^k` frame per
-/// round) and the optional error-fed-back compressed downlink with its
-/// shared worker replica. Mirrors the DCGD-SHIFT drivers' downlink
-/// conventions so `bits_down` means the same thing across the library.
-struct DownlinkState {
-    ef: Option<EfDownlink>,
-    /// shared worker replica x̂ (EF path only; empty when exact)
-    x_rep: Vec<f64>,
-    /// dedicated RNG stream for the downlink compressor
-    dl_rng: Pcg64,
-    /// x^k snapshot the broadcast delta is built against
-    x_prev: Vec<f64>,
-    /// x^{k+1} − x^k scratch
-    diff: Vec<f64>,
-    /// delta builder scratch (both representations pre-sized to d)
-    delta: wire::DeltaScratch,
-    /// per-worker bits of the frame the *next* round broadcasts
-    next_down_bits: u64,
-}
-
-impl DownlinkState {
-    fn new(x0: &[f64], dl_rng: Pcg64) -> Self {
-        let d = x0.len();
-        Self {
-            ef: None,
-            x_rep: Vec::new(),
-            dl_rng,
-            x_prev: x0.to_vec(),
-            diff: vec![0.0; d],
-            delta: wire::DeltaScratch::with_capacity(d),
-            // round 0 broadcasts the dense bootstrap resync
-            next_down_bits: wire::resync_frame_bits(d),
-        }
-    }
-
-    /// Arm the error-fed-back compressed broadcast; the replica boots from
-    /// the current iterate (what the next dense resync would carry).
-    fn arm(&mut self, comp: Box<dyn Compressor>, x: &[f64]) {
-        self.x_rep = x.to_vec();
-        self.ef = Some(EfDownlink::new(comp, x.len(), self.dl_rng.clone()));
-        self.next_down_bits = wire::resync_frame_bits(x.len());
-    }
-
-    /// The iterate the workers actually hold this round.
-    fn x_eval<'a>(&'a self, x: &'a [f64]) -> &'a [f64] {
-        if self.ef.is_some() {
-            &self.x_rep
-        } else {
-            x
-        }
-    }
-
-    /// Account this round's broadcast and build the next frame from
-    /// `x_new − x_prev`, EF-compressed when armed (replica updated with
-    /// the same packet the workers apply). Returns this round's
-    /// `bits_down` across `n` workers.
-    fn finish_round(&mut self, x_new: &[f64], n: usize, prec: ValPrec) -> u64 {
-        let bits_down = n as u64 * self.next_down_bits;
-        for j in 0..x_new.len() {
-            self.diff[j] = x_new[j] - self.x_prev[j];
-        }
-        self.next_down_bits = match &mut self.ef {
-            Some(ef) => {
-                // fold the *raw* difference: the GDCI mixing update does
-                // not advance x through a pre-quantized packet, so the
-                // accumulator must capture the quantization residual too
-                // or the replica would drift unboundedly under f32
-                let c = ef.fold_slice_and_compress(&self.diff, prec);
-                c.add_scaled_into(1.0, &mut self.x_rep);
-                wire::down_frame_bits(c, prec)
-            }
-            None => {
-                let delta = wire::build_update_packet(&self.diff, 1.0, prec, &mut self.delta);
-                wire::down_frame_bits(delta, prec)
-            }
-        };
-        self.x_prev.copy_from_slice(x_new);
-        bits_down
-    }
-
-    /// Out-of-band iterate change: next broadcast is a dense resync, which
-    /// flushes the EF accumulator and overwrites the replica.
-    fn resync(&mut self, x: &[f64]) {
-        self.next_down_bits = wire::resync_frame_bits(x.len());
-        self.x_prev.copy_from_slice(x);
-        if let Some(ef) = &mut self.ef {
-            ef.flush();
-            self.x_rep.copy_from_slice(x);
-        }
-    }
-
-    fn ef_error(&self) -> Option<&[f64]> {
-        self.ef.as_ref().map(|ef| ef.error())
-    }
-}
+// The broadcast-side glue (measured delta-frame accounting, the optional
+// error-fed-back downlink with its shared worker replica) lives in the
+// library-wide [`DownlinkState`] — the GDCI drivers use its raw-difference
+// [`DownlinkState::finish_round`] flavor, which folds the quantization
+// residual of the mixing update into the EF accumulator too.
 
 // ---------------------------------------------------------------------- GDCI
 
@@ -190,7 +96,8 @@ impl Gdci {
         let mut root = Pcg64::with_stream(seed, 0x6dc1);
         let x = crate::algorithms::paper_x0(d, seed);
         let rngs: Vec<Pcg64> = (0..n).map(|i| root.stream(i as u64 + 1)).collect();
-        let downlink = DownlinkState::new(&x, root.stream(n as u64 + 1));
+        let mut downlink = DownlinkState::new(&x, root.stream(n as u64 + 1));
+        downlink.track_deltas(&x);
         Self {
             x,
             gamma,
@@ -313,7 +220,8 @@ impl VrGdci {
         let mut root = Pcg64::with_stream(seed, 0x76dc);
         let x = crate::algorithms::paper_x0(d, seed);
         let rngs: Vec<Pcg64> = (0..n).map(|i| root.stream(i as u64 + 1)).collect();
-        let downlink = DownlinkState::new(&x, root.stream(n as u64 + 1));
+        let mut downlink = DownlinkState::new(&x, root.stream(n as u64 + 1));
+        downlink.track_deltas(&x);
         Self {
             x,
             gamma,

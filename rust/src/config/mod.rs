@@ -19,13 +19,18 @@
 //! An optional `"cluster"` object configures the threaded coordinator
 //! ([`ExperimentConfig::build_distributed`]): wire precision for the
 //! compressed frames, the dense-resync cadence of the delta-compressed
-//! broadcast downlink, and the optional error-fed-back downlink
-//! compressor (`top-k` with `q` = K/d or `k` = K, `identity` for the
+//! broadcast downlink, the optional error-fed-back downlink compressor
+//! (`top-k` with `q` = K/d or `k` = K, `identity` for the
 //! exact-equivalent EF path; omit the object — or set `"exact": true` —
-//! for today's exact delta frames):
+//! for today's exact delta frames), the local-step batching factor
+//! (`local_steps` ≥ 1 sub-steps per communication round, batched into one
+//! uplink frame; requires the `dcgd` or plain `diana` algorithm when > 1)
+//! and the pipelined wall-clock pricing toggle (`pipeline`, affects the
+//! simulated time only):
 //!
 //! ```json
-//! { "cluster": {"prec": "f32", "resync_every": 1000,
+//! { "cluster": {"prec": "f32", "resync_every": 1000, "local_steps": 8,
+//!               "pipeline": true,
 //!               "downlink": {"compressor": "top-k", "q": 0.005}} }
 //! ```
 
@@ -330,6 +335,12 @@ pub struct ClusterSpec {
     /// wire precision for compressed frames (delta values are pre-quantized
     /// so replicas stay bit-exact; resync frames are always f64)
     pub prec: ValPrec,
+    /// local shifted sub-steps per communication round, batched into one
+    /// uplink frame (1 = the per-round protocol)
+    pub local_steps: usize,
+    /// price rounds with the overlap-aware pipelined wall-clock model
+    /// (simulated time only; trajectories are identical)
+    pub pipeline: bool,
     /// error-fed-back downlink compressor (default: exact delta frames)
     pub downlink: DownlinkSpec,
 }
@@ -339,6 +350,8 @@ impl Default for ClusterSpec {
         Self {
             resync_every: 0,
             prec: ValPrec::F64,
+            local_steps: 1,
+            pipeline: false,
             downlink: DownlinkSpec::Exact,
         }
     }
@@ -361,10 +374,35 @@ impl ClusterSpec {
             re_j.as_usize()
                 .ok_or_else(|| bad("cluster.resync_every must be a non-negative integer"))?
         };
+        let ls_j = j.get("local_steps");
+        let local_steps = if ls_j.is_null() {
+            1
+        } else {
+            // the batch frame's count field is a u16 — reject out-of-range
+            // values here so build_distributed never trips the runner's
+            // assert on a config-supplied value
+            match ls_j.as_usize() {
+                Some(v) if (1..=u16::MAX as usize).contains(&v) => v,
+                _ => {
+                    return Err(bad(
+                        "cluster.local_steps must be an integer in 1..=65535",
+                    ))
+                }
+            }
+        };
+        let pl_j = j.get("pipeline");
+        let pipeline = if pl_j.is_null() {
+            false
+        } else {
+            pl_j.as_bool()
+                .ok_or_else(|| bad("cluster.pipeline must be a boolean"))?
+        };
         let downlink = DownlinkSpec::parse(j.get("downlink"))?;
         Ok(Self {
             resync_every,
             prec,
+            local_steps,
+            pipeline,
             downlink,
         })
     }
@@ -558,6 +596,17 @@ impl ExperimentConfig {
                 )))
             }
         };
+        if self.cluster.local_steps > 1
+            && !matches!(
+                method,
+                MethodKind::Fixed | MethodKind::Diana { with_c: false, .. }
+            )
+        {
+            return Err(bad(format!(
+                "cluster.local_steps > 1 supports the fixed-shift and \
+                 DIANA-without-C methods, not {method:?}"
+            )));
+        }
         let qs: Vec<Box<dyn Compressor>> = (0..n).map(|_| self.compressor.build(d)).collect();
         let runner = DistributedRunner::new(
             problem.clone(),
@@ -571,6 +620,8 @@ impl ExperimentConfig {
                 seed: self.seed,
                 links: None,
                 resync_every: self.cluster.resync_every,
+                local_steps: self.cluster.local_steps,
+                pipeline: self.cluster.pipeline,
                 downlink: self.cluster.downlink.build(d),
             },
         );
@@ -649,6 +700,51 @@ mod tests {
         // a wrong-typed resync_every must error, not silently become 0
         let bad = with.replace("25", "\"25\"");
         assert!(ExperimentConfig::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn local_steps_and_pipeline_parse_and_validate() {
+        let with = r#"{
+            "problem": {"kind": "quadratic", "d": 10, "workers": 3, "seed": 1},
+            "algorithm": {"kind": "dcgd"},
+            "compressor": {"kind": "rand-k", "q": 0.3},
+            "cluster": {"local_steps": 8, "pipeline": true}
+        }"#;
+        let cfg = ExperimentConfig::parse(with).unwrap();
+        assert_eq!(cfg.cluster.local_steps, 8);
+        assert!(cfg.cluster.pipeline);
+        assert!(cfg.build_distributed().is_ok());
+        // defaults
+        let cfg = ExperimentConfig::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.cluster.local_steps, 1);
+        assert!(!cfg.cluster.pipeline);
+        // parse-time validation: zero / out-of-range / wrong-typed values
+        // error (the wire count field is a u16)
+        assert!(
+            ExperimentConfig::parse(&with.replace(r#""local_steps": 8"#, r#""local_steps": 0"#))
+                .is_err()
+        );
+        assert!(ExperimentConfig::parse(
+            &with.replace(r#""local_steps": 8"#, r#""local_steps": 70000"#)
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            &with.replace(r#""local_steps": 8"#, r#""local_steps": "8""#)
+        )
+        .is_err());
+        assert!(
+            ExperimentConfig::parse(&with.replace(r#""pipeline": true"#, r#""pipeline": 1"#))
+                .is_err()
+        );
+        // rand-diana has no per-sub-step batching mapping: build must error
+        let cfg =
+            ExperimentConfig::parse(&with.replace(r#""kind": "dcgd""#, r#""kind": "rand-diana""#))
+                .unwrap();
+        assert!(cfg.build_distributed().is_err());
+        // plain diana maps fine
+        let cfg = ExperimentConfig::parse(&with.replace(r#""kind": "dcgd""#, r#""kind": "diana""#))
+            .unwrap();
+        assert!(cfg.build_distributed().is_ok());
     }
 
     #[test]

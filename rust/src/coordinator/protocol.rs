@@ -65,7 +65,9 @@ pub struct WorkerSnapshot {
 pub struct FrameSet {
     /// C_i-compressor frame (STAR displacement / DIANA c-part), if any
     pub c_frame: Option<Vec<u8>>,
-    /// main Q_i frame (always present)
+    /// main Q_i frame (always present): one packet frame per round, or —
+    /// with `local_steps > 1` — one batched frame carrying the round's τ
+    /// sub-step packets (see [`crate::wire`]'s batch format)
     pub q_frame: Vec<u8>,
     /// Rand-DIANA shift-refresh delta (sparse vs the master's replica of
     /// this worker's shift), if this round refreshed
@@ -100,4 +102,10 @@ pub struct WorkerUpdate {
     pub refresh_bits: u64,
     /// encoded byte size actually shipped (wire accounting incl. headers)
     pub wire_bytes: usize,
+    /// wall-clock seconds this worker spent in its compute phase (downlink
+    /// apply + gradients + compression + local sub-steps + frame encode) —
+    /// the compute input of the staged network pricing
+    /// ([`crate::net::NetworkAccountant::round_staged`] /
+    /// [`crate::net::NetworkAccountant::round_pipelined`])
+    pub compute_secs: f64,
 }

@@ -66,6 +66,36 @@
 //! `tests/coordinator.rs`). Rand-DIANA refreshes upload a sparse delta of
 //! the shift vs the master's replica instead of the former dense d-length
 //! spike.
+//!
+//! # Local-step batched rounds and pipelined pricing
+//!
+//! Once frames shrink to O(K) bytes the round-trip *latency* dominates the
+//! simulated wall clock. [`ClusterConfig::local_steps`] = τ attacks it
+//! directly: each worker performs τ local shifted sub-steps per
+//! communication round — sub-step t computes the gradient at a local
+//! iterate x̂ (booted from the replica), compresses the shifted difference,
+//! takes the local step `x̂ ← x̂ − γ(h + q_t)` with the *quantized* packet,
+//! and (DIANA) learns `h += α·q_t` — then ships all τ packets in **one**
+//! batched uplink frame (see [`crate::wire`]'s batch format): one latency
+//! round trip instead of τ. The master replays the fold sub-step-major
+//! from the wire packets — `est^t` seeded from the maintained shift sum as
+//! of sub-step t, Diana shift learning applied per sub-step exactly as the
+//! workers did locally — accumulates `Σ_t est^t`, and ships the composite
+//! step as one downlink delta, so in exact arithmetic `x^{k+1}` is the
+//! average of the workers' local trajectories (a local-steps/FedAvg-style
+//! variant of the shifted-compression method; supported for the
+//! fixed-shift and DIANA-without-C methods). `local_steps = 1` takes
+//! today's code path verbatim and is bit-identical to the per-round
+//! protocol; [`crate::algorithms::DcgdShift::set_local_steps`] is the
+//! bit-identical single-process mirror of the τ-step fold.
+//!
+//! [`ClusterConfig::pipeline`] prices batched rounds with the
+//! overlap-aware two-stage model
+//! ([`crate::net::NetworkAccountant::round_pipelined`]): within a round
+//! the worker streams each sub-step packet as it is produced, so sub-step
+//! compute overlaps the uplink transfer (workers report their measured
+//! compute seconds in each [`WorkerUpdate`]). The toggle affects only the
+//! simulated wall clock — trajectories are bit-identical either way.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
@@ -76,8 +106,8 @@ use crate::compressors::{Compressor, Packet, PayloadBitsCache, ValPrec};
 use crate::coordinator::protocol::{
     FrameSet, MethodKind, WorkerCommand, WorkerSnapshot, WorkerUpdate,
 };
-use crate::downlink::EfDownlink;
-use crate::linalg::{ax_into, axpy, sub_into};
+use crate::downlink::DownlinkState;
+use crate::linalg::{ax_into, axpy, sub_into, zero};
 use crate::net::{LinkModel, NetworkAccountant};
 use crate::problems::Problem;
 use crate::util::rng::Pcg64;
@@ -94,6 +124,14 @@ pub struct ClusterConfig {
     /// broadcast a dense resync frame every this many rounds (0 = only on
     /// round 0 and after `set_x0`); see the module doc
     pub resync_every: usize,
+    /// local shifted sub-steps per communication round, batched into one
+    /// uplink frame (1 = today's one-frame-per-round protocol, bit
+    /// identical; > 1 requires the fixed-shift or DIANA-without-C method —
+    /// see the module doc)
+    pub local_steps: usize,
+    /// price rounds with the overlap-aware pipelined model instead of the
+    /// staged one (simulated wall clock only; trajectories are identical)
+    pub pipeline: bool,
     /// error-fed-back downlink compressor (`None` = exact delta frames).
     /// Contractive operators (Top-K, Identity) are the intended choices:
     /// the dropped residual accumulates in the master's error state and is
@@ -145,21 +183,44 @@ pub struct DistributedRunner {
     down_bufs: [Arc<Vec<u8>>; 2],
     /// downlink delta builder scratch (both representations pre-sized to d)
     delta: wire::DeltaScratch,
-    /// error-fed-back downlink compressor state (`None` = exact deltas)
-    ef: Option<EfDownlink>,
-    /// bit-exact mirror of the worker replicas (EF path only), updated by
-    /// applying the same broadcast packets the workers apply. The mirror
-    /// *leads by the one in-flight frame*: the round-k+1 EfDelta is folded
-    /// and applied here at the end of round k, while workers apply it at
-    /// the start of round k+1 — so between steps this equals what every
-    /// worker's local `x` will be bit for bit *during the next round*
-    /// (tests verify the lagged equality via [`WorkerCommand::Inspect`]).
-    /// Empty on the exact path, where the master iterate plays this role.
-    x_rep: Vec<f64>,
+    /// shared driver-side downlink glue ([`crate::downlink::DownlinkState`]):
+    /// the optional EF compressor state and — on the EF path — the
+    /// bit-exact mirror of the worker replicas, updated by applying the
+    /// same broadcast packets the workers apply. The mirror *leads by the
+    /// one in-flight frame*: the round-k+1 EfDelta is folded and applied
+    /// here at the end of round k, while workers apply it at the start of
+    /// round k+1 — so between steps this equals what every worker's local
+    /// `x` will be bit for bit *during the next round* (tests verify the
+    /// lagged equality via [`WorkerCommand::Inspect`]). On the exact path
+    /// the master iterate itself plays the mirror's role.
+    dl: DownlinkState,
+    /// local sub-steps per communication round (≥ 1; see the module doc)
+    local_steps: usize,
+    /// overlap-aware wall-clock pricing for batched rounds
+    pipeline: bool,
+    /// Σ_t est^t accumulator for batched rounds (empty when τ = 1)
+    g_acc: Vec<f64>,
+    /// per-worker byte cursors into the batched uplink frames
+    offsets: Vec<usize>,
+    /// per-worker measured compute seconds of the current round (staged /
+    /// pipelined pricing input — each worker is charged its own compute)
+    compute: Vec<f64>,
     /// next broadcast must be a dense resync (round 0, after `set_x0`)
     needs_resync: bool,
     resync_every: usize,
     round: usize,
+}
+
+/// Per-worker static configuration, fixed for the run (bundled so the
+/// worker thread entry point stays readable).
+struct WorkerCfg {
+    wi: usize,
+    method: MethodKind,
+    prec: ValPrec,
+    /// step size — workers need it for local sub-steps when τ > 1
+    gamma: f64,
+    /// local sub-steps per round (τ; 1 = per-round protocol)
+    local_steps: usize,
 }
 
 /// Worker-side loop: one thread per worker.
@@ -169,24 +230,34 @@ pub struct DistributedRunner {
 /// All scratch (replica, gradient/diff vectors, compression packets, frame
 /// buffers) is owned by the loop and recycled: frame buffers travel to the
 /// master inside the [`WorkerUpdate`] and come back, consumed, inside the
-/// next [`WorkerCommand::Round`].
+/// next [`WorkerCommand::Round`]. With `local_steps = τ > 1` the worker
+/// additionally owns a local iterate x̂ for the τ shifted sub-steps of each
+/// round, and encodes the τ packets incrementally into one batched frame
+/// as they are produced (the code-level analog of streaming them).
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    wi: usize,
+    cfg: WorkerCfg,
     problem: Arc<dyn Problem>,
     q: Box<dyn Compressor>,
     mut c: Option<Box<dyn Compressor>>,
-    method: MethodKind,
     mut h: Vec<f64>,
     mut rng: Pcg64,
-    prec: ValPrec,
     cmd_rx: Receiver<WorkerCommand>,
     up_tx: SyncSender<WorkerUpdate>,
 ) {
+    let WorkerCfg {
+        wi,
+        method,
+        prec,
+        gamma,
+        local_steps,
+    } = cfg;
     let d = problem.dim();
     // local replica of the broadcast iterate (bootstrapped by the round-0
     // resync frame, then maintained by delta application)
     let mut x = vec![0.0; d];
+    // local iterate for the τ sub-steps of a batched round
+    let mut x_loc = if local_steps > 1 { vec![0.0; d] } else { Vec::new() };
     let mut down_pkt = Packet::Zero { dim: d as u32 };
     let mut grad = vec![0.0; d];
     let mut diff = vec![0.0; d];
@@ -217,6 +288,9 @@ fn worker_loop(
             }
             WorkerCommand::Shutdown => break,
         };
+        // measured compute stage (downlink apply → frame encode): the
+        // staged network pricing's compute input
+        let t0 = std::time::Instant::now();
         // apply the downlink frame to the replica, then release the shared
         // broadcast buffer before the heavy work — the master re-encodes
         // into it once every worker has dropped its handle
@@ -241,9 +315,54 @@ fn worker_loop(
             refresh_buf = b;
         }
 
-        problem.local_grad_into(wi, &x, &mut grad);
         let mut payload_bits = 0u64;
         let mut refresh_bits = 0u64;
+
+        if local_steps > 1 {
+            // ---- batched round: τ local shifted sub-steps, one frame.
+            // The local iterate boots from the freshly-updated replica;
+            // each sub-step compresses the shifted difference, appends the
+            // quantized packet to the batch frame, then steps locally with
+            // the *packet* values — `x̂ ← x̂ − γ·h` then `x̂ += (−γ)·q_t` —
+            // so the master can replay the identical aggregate from the
+            // wire. DIANA learns `h += α·q_t` per sub-step, mirrored by
+            // the master's sub-step-major fold.
+            x_loc.copy_from_slice(&x);
+            wire::begin_batch_frame(local_steps, &mut frames.q_frame);
+            for _ in 0..local_steps {
+                problem.local_grad_into(wi, &x_loc, &mut grad);
+                sub_into(&grad, &h, &mut diff);
+                q.compress_into(&mut rng, &diff, &mut q_pkt);
+                q_pkt.quantize(prec);
+                payload_bits += q_bits.bits(&q_pkt, prec);
+                wire::append_batch_packet(&q_pkt, prec, &mut frames.q_frame);
+                axpy(-gamma, &h, &mut x_loc);
+                q_pkt.add_scaled_into(-gamma, &mut x_loc);
+                match method {
+                    MethodKind::Fixed => {}
+                    MethodKind::Diana { alpha, .. } => q_pkt.add_scaled_into(alpha, &mut h),
+                    _ => unreachable!("local_steps > 1 is validated at construction"),
+                }
+            }
+            let wire_bytes = frames.q_frame.len();
+            if up_tx
+                .send(WorkerUpdate {
+                    worker: wi,
+                    k,
+                    frames,
+                    payload_bits,
+                    refresh_bits,
+                    wire_bytes,
+                    compute_secs: t0.elapsed().as_secs_f64(),
+                })
+                .is_err()
+            {
+                break; // master gone
+            }
+            continue;
+        }
+
+        problem.local_grad_into(wi, &x, &mut grad);
 
         // Every compressed packet is quantized to the wire precision at
         // the source, *before* it touches local state or the encoder:
@@ -337,6 +456,7 @@ fn worker_loop(
                 payload_bits,
                 refresh_bits,
                 wire_bytes,
+                compute_secs: t0.elapsed().as_secs_f64(),
             })
             .is_err()
         {
@@ -374,6 +494,21 @@ impl DistributedRunner {
                 "method requires one C_i per worker"
             );
         }
+        assert!(
+            cfg.local_steps >= 1 && cfg.local_steps <= u16::MAX as usize,
+            "local_steps must be in 1..=65535 (the batch frame's count field)"
+        );
+        if cfg.local_steps > 1 {
+            assert!(
+                matches!(
+                    cfg.method,
+                    MethodKind::Fixed | MethodKind::Diana { with_c: false, .. }
+                ),
+                "local-step batching (local_steps > 1) supports the fixed-shift and \
+                 DIANA-without-C methods; {:?} ships one frame per round",
+                cfg.method
+            );
+        }
 
         let mut root = Pcg64::with_stream(cfg.seed, 0xa160);
         // Bounded at n: at most one in-flight update per worker, so sends
@@ -389,13 +524,18 @@ impl DistributedRunner {
             let (cmd_tx, cmd_rx) = sync_channel::<WorkerCommand>(2);
             let up_tx = up_tx.clone();
             let problem = problem.clone();
-            let method = cfg.method;
-            let prec = cfg.prec;
+            let wcfg = WorkerCfg {
+                wi,
+                method: cfg.method,
+                prec: cfg.prec,
+                gamma: cfg.gamma,
+                local_steps: cfg.local_steps,
+            };
             let h0 = shifts[wi].clone();
             let c = if needs_c { cs_iter.next() } else { None };
             let handle = std::thread::Builder::new()
                 .name(format!("shiftcomp-worker-{wi}"))
-                .spawn(move || worker_loop(wi, problem, q, c, method, h0, rng, prec, cmd_rx, up_tx))
+                .spawn(move || worker_loop(wcfg, problem, q, c, h0, rng, cmd_rx, up_tx))
                 .expect("spawn worker thread");
             workers.push(WorkerThread {
                 cmd_tx,
@@ -415,18 +555,20 @@ impl DistributedRunner {
         // Dedicated RNG stream for the downlink compressor (workers use
         // streams 1..=n) — the single-process drivers derive the identical
         // stream, so randomized downlink compressors stay bit-identical
-        // across drivers.
-        let dl_rng = root.stream(n as u64 + 1);
-        let ef = cfg.downlink.map(|c| EfDownlink::new(c, d, dl_rng));
-        // mirror of the worker replicas (EF only): workers boot with a
-        // zero replica until the round-0 resync overwrites it
-        let x_rep = if ef.is_some() { vec![0.0; d] } else { Vec::new() };
+        // across drivers. The round-0 bootstrap resync overwrites the
+        // replica mirror before the first fold, so the arm-time boot value
+        // never reaches a trajectory.
+        let x = crate::algorithms::paper_x0(d, cfg.seed);
+        let mut dl = DownlinkState::new(&x, root.stream(n as u64 + 1));
+        if let Some(c) = cfg.downlink {
+            dl.arm(c, &x);
+        }
 
         Self {
             method: cfg.method,
             gamma: cfg.gamma,
             prec: cfg.prec,
-            x: crate::algorithms::paper_x0(d, cfg.seed),
+            x,
             h: shifts,
             h_sum,
             grad_star,
@@ -449,8 +591,16 @@ impl DistributedRunner {
                 Arc::new(Vec::with_capacity(d * 8 + 32)),
             ],
             delta: wire::DeltaScratch::with_capacity(d),
-            ef,
-            x_rep,
+            dl,
+            local_steps: cfg.local_steps,
+            pipeline: cfg.pipeline,
+            g_acc: if cfg.local_steps > 1 {
+                vec![0.0; d]
+            } else {
+                Vec::new()
+            },
+            offsets: vec![0usize; n],
+            compute: vec![0.0; n],
             needs_resync: true,
             resync_every: cfg.resync_every,
             round: 0,
@@ -485,7 +635,7 @@ impl DistributedRunner {
     /// The EF downlink's error accumulator `x_master − x_replica`
     /// (`None` on the exact path). Zero right after any resync.
     pub fn ef_error(&self) -> Option<&[f64]> {
-        self.ef.as_ref().map(|ef| ef.error())
+        self.dl.ef_error()
     }
 
     /// Master-side bit-exact mirror of the worker replicas (`None` on the
@@ -495,7 +645,7 @@ impl DistributedRunner {
     /// the start of their next round — compare a [`Self::worker_snapshot`]
     /// taken after step k+1 against the mirror read after step k.
     pub fn replica_mirror(&self) -> Option<&[f64]> {
-        self.ef.as_ref().map(|_| self.x_rep.as_slice())
+        self.dl.replica()
     }
 
     pub fn simulated_time(&self) -> f64 {
@@ -557,10 +707,7 @@ impl Algorithm for DistributedRunner {
             // a resync overwrites every replica with the master iterate:
             // flush the EF error accumulator (nothing is pending any more)
             // and bring the replica mirror back to exact equality
-            if let Some(ef) = &mut self.ef {
-                ef.flush();
-                self.x_rep.copy_from_slice(&self.x);
-            }
+            self.dl.resync(&self.x);
         }
         let down_frame_bits = self.down_bufs[parity].len() as u64 * 8;
         for (wi, w) in self.workers.iter().enumerate() {
@@ -580,14 +727,63 @@ impl Algorithm for DistributedRunner {
             let upd = self.up_rx.recv().expect("worker channel closed");
             debug_assert_eq!(upd.k, self.round);
             let wi = upd.worker;
+            // each worker is charged its own measured compute when the
+            // round is priced (staged/pipelined models)
+            self.compute[wi] = upd.compute_secs;
             self.slots[wi] = Some(upd);
+        }
+
+        let mut bits_up = 0u64;
+        let mut bits_refresh = 0u64;
+
+        if self.local_steps > 1 {
+            // ---- batched fold: sub-step-major replay of the τ local
+            // steps. est^t is seeded from the maintained shift sum *as of
+            // sub-step t*, each worker's t-th wire packet is folded in at
+            // O(nnz), and Diana shift learning advances per sub-step
+            // exactly as the workers applied it locally; the round's
+            // aggregate Σ_t est^t accumulates in g_acc and ships as one
+            // composite downlink delta. DcgdShift::step_batched mirrors
+            // this loop op for op.
+            zero(&mut self.g_acc);
+            for wi in 0..n {
+                let upd = self.slots[wi].as_ref().unwrap();
+                bits_up += upd.payload_bits;
+                bits_refresh += upd.refresh_bits;
+                self.wire_bits[wi] = upd.wire_bytes as u64 * 8;
+                let (count, off) = wire::split_batch_frame(&upd.frames.q_frame)
+                    .expect("malformed batch frame from worker");
+                assert_eq!(count, self.local_steps, "worker {wi} batch count");
+                self.offsets[wi] = off;
+            }
+            for _t in 0..self.local_steps {
+                ax_into(inv_n, &self.h_sum, &mut self.est);
+                for wi in 0..n {
+                    let upd = self.slots[wi].as_ref().unwrap();
+                    self.offsets[wi] = wire::decode_batch_packet(
+                        &upd.frames.q_frame,
+                        self.offsets[wi],
+                        &mut self.q_scratch[wi],
+                    )
+                    .expect("malformed frame from worker");
+                    self.q_scratch[wi].add_scaled_into(inv_n, &mut self.est);
+                    if let MethodKind::Diana { alpha, .. } = self.method {
+                        self.q_scratch[wi].add_scaled_into(alpha, &mut self.h[wi]);
+                        self.q_scratch[wi].add_scaled_into(alpha, &mut self.h_sum);
+                    }
+                }
+                axpy(1.0, &self.est, &mut self.g_acc);
+            }
+            for wi in 0..n {
+                let upd = self.slots[wi].take().unwrap();
+                self.frames_pool[wi] = upd.frames;
+            }
+            return self.finish_step(n, down_frame_bits, bits_up, bits_refresh);
         }
 
         // g^k seeded from the maintained shift sum in one O(d) pass, then
         // each compressed message folded in at O(nnz).
         ax_into(inv_n, &self.h_sum, &mut self.est);
-        let mut bits_up = 0u64;
-        let mut bits_refresh = 0u64;
 
         for wi in 0..n {
             let upd = self.slots[wi].take().unwrap();
@@ -649,29 +845,44 @@ impl Algorithm for DistributedRunner {
             self.frames_pool[wi] = upd.frames;
         }
 
+        self.finish_step(n, down_frame_bits, bits_up, bits_refresh)
+    }
+}
+
+impl DistributedRunner {
+    /// Shared tail of both round shapes: take the gradient step through
+    /// the downlink delta packet, pre-encode next round's broadcast into
+    /// the retired buffer, advance the round counter and price the round.
+    fn finish_step(
+        &mut self,
+        n: usize,
+        down_frame_bits: u64,
+        bits_up: u64,
+        bits_refresh: u64,
+    ) -> StepStats {
+        let d = self.x.len();
         // gradient step, via the same delta packet the workers will apply:
         // x += 1·(−γ·g) with identical roundings on both ends, so master
         // and replicas stay bit-equal (and bit-identical to the dense
-        // axpy(−γ, g, x) reference on every touched coordinate). On the EF
-        // path the master still steps exactly; the *broadcast* is the
+        // axpy(−γ, g, x) reference on every touched coordinate). Batched
+        // rounds ship the composite Σ_t est^t the same way. On the EF path
+        // the master still steps exactly; the *broadcast* is the
         // compressed C(e + Δ) and the residual stays in the accumulator.
-        let kind = if self.ef.is_some() {
+        let kind = if self.dl.is_armed() {
             DownKind::EfDelta
         } else {
             DownKind::Delta
         };
-        let delta = wire::build_update_packet(&self.est, -self.gamma, self.prec, &mut self.delta);
-        delta.add_scaled_into(1.0, &mut self.x);
-        let bcast: &Packet = match &mut self.ef {
-            Some(ef) => {
-                let c = ef.fold_and_compress(delta, self.prec);
-                // keep the replica mirror bit-equal to the workers: same
-                // packet, same operation
-                c.add_scaled_into(1.0, &mut self.x_rep);
-                c
-            }
-            None => delta,
+        let g: &[f64] = if self.local_steps > 1 {
+            &self.g_acc
+        } else {
+            &self.est
         };
+        let delta = wire::build_update_packet(g, -self.gamma, self.prec, &mut self.delta);
+        delta.add_scaled_into(1.0, &mut self.x);
+        // keep the replica mirror bit-equal to the workers: same packet,
+        // same operation
+        let bcast: &Packet = self.dl.fold_packet(delta, self.prec);
         // pre-encode next round's downlink into the buffer this round
         // retired (all round-k updates are in, so every worker has dropped
         // its handle from round k−1)
@@ -687,10 +898,25 @@ impl Algorithm for DistributedRunner {
         }
         self.round += 1;
 
-        // measured downlink cost: the frame each worker actually received
+        // measured downlink cost: the frame each worker actually received.
+        // The legacy per-round protocol keeps the historical comm-only
+        // pricing (existing τ = 1 sim clocks stay comparable across PRs);
+        // batched rounds price each worker's own measured compute too,
+        // overlapped with its uplink transfer when pipelining is on.
         let bits_down = n as u64 * down_frame_bits;
         if let Some(net) = &mut self.net {
-            net.round(&self.wire_bits, down_frame_bits);
+            if self.pipeline {
+                net.round_pipelined(
+                    &self.wire_bits,
+                    down_frame_bits,
+                    &self.compute,
+                    self.local_steps,
+                );
+            } else if self.local_steps > 1 {
+                net.round_staged(&self.wire_bits, down_frame_bits, &self.compute);
+            } else {
+                net.round(&self.wire_bits, down_frame_bits);
+            }
         }
 
         StepStats {
@@ -746,6 +972,8 @@ impl DistributedRunner {
                 seed,
                 links,
                 resync_every: 0,
+                local_steps: 1,
+                pipeline: false,
                 downlink: None,
             },
         )
@@ -779,6 +1007,8 @@ impl DistributedRunner {
                 seed,
                 links,
                 resync_every: 0,
+                local_steps: 1,
+                pipeline: false,
                 downlink: None,
             },
         )
@@ -810,6 +1040,8 @@ impl DistributedRunner {
                 seed,
                 links,
                 resync_every: 0,
+                local_steps: 1,
+                pipeline: false,
                 downlink: None,
             },
         )

@@ -44,7 +44,10 @@
 //! Used by [`crate::coordinator::DistributedRunner`] and mirrored op for
 //! op by the single-process drivers ([`crate::algorithms::DcgdShift`],
 //! [`crate::algorithms::Gdci`], [`crate::algorithms::VrGdci`]) so
-//! trajectories stay bit-identical across drivers.
+//! trajectories stay bit-identical across drivers. The driver-side glue —
+//! replica bootstrap, resync flush, next-frame accounting — lives in one
+//! place, [`DownlinkState`], shared by every driver: one copy to keep
+//! bit-identical.
 
 use crate::compressors::{Compressor, Packet, ValPrec};
 use crate::util::rng::Pcg64;
@@ -145,6 +148,184 @@ impl EfDownlink {
     /// Human-readable compressor identifier (logs, bench labels).
     pub fn comp_name(&self) -> String {
         self.comp.name()
+    }
+}
+
+// ------------------------------------------------------ driver-side glue
+
+/// Broadcast-side state shared by every driver: measured delta-frame
+/// accounting (round-0 dense resync, then one update frame per round) and
+/// the optional error-fed-back compressed downlink with its shared worker
+/// replica. This is the single copy of the glue the threaded coordinator
+/// and the single-process drivers ([`crate::algorithms::DcgdShift`],
+/// [`crate::algorithms::Gdci`], [`crate::algorithms::VrGdci`]) all reuse,
+/// so `bits_down` means the same thing across the library and the EF fold
+/// stays bit-identical across drivers by construction.
+///
+/// Two finishing flavors cover the two ways a master iterate advances:
+///
+/// * [`finish_round_packet`](Self::finish_round_packet) — the DCGD-SHIFT
+///   family, whose step goes through a pre-quantized delta packet (the
+///   same packet is folded, so the accumulator sees exactly what the
+///   master applied);
+/// * [`finish_round`](Self::finish_round) — the GDCI family, whose mixing
+///   update touches every coordinate without a packet; the *raw*
+///   difference `x^{k+1} − x^k` is folded so the quantization residual
+///   stays in the accumulator.
+pub struct DownlinkState {
+    ef: Option<EfDownlink>,
+    /// shared worker replica x̂ (EF path only; empty when exact)
+    x_rep: Vec<f64>,
+    /// dedicated RNG stream for the downlink compressor
+    dl_rng: Pcg64,
+    /// x^k snapshot the broadcast delta is built against — allocated only
+    /// by [`Self::track_deltas`] (the GDCI flavor); packet-driven drivers
+    /// hand their delta packet in directly and never pay for this scratch
+    x_prev: Vec<f64>,
+    /// x^{k+1} − x^k scratch ([`Self::track_deltas`] only)
+    diff: Vec<f64>,
+    /// delta builder scratch ([`Self::track_deltas`] only; both
+    /// representations pre-sized to d)
+    delta: wire::DeltaScratch,
+    /// per-worker bits of the frame the *next* round broadcasts
+    next_down_bits: u64,
+}
+
+impl DownlinkState {
+    /// `dl_rng` is the master's dedicated downlink compressor stream
+    /// (worker streams are 1..=n, this is n+1 — every driver derives it
+    /// identically so randomized downlink compressors stay bit-identical
+    /// across drivers). `x0` fixes the dimension; drivers that account
+    /// the broadcast from raw iterate differences must also call
+    /// [`Self::track_deltas`].
+    pub fn new(x0: &[f64], dl_rng: Pcg64) -> Self {
+        Self {
+            ef: None,
+            x_rep: Vec::new(),
+            dl_rng,
+            x_prev: Vec::new(),
+            diff: Vec::new(),
+            delta: wire::DeltaScratch::with_capacity(0),
+            // round 0 broadcasts the dense bootstrap resync
+            next_down_bits: wire::resync_frame_bits(x0.len()),
+        }
+    }
+
+    /// Allocate the iterate-difference tracking scratch (~4·d f64) and
+    /// snapshot `x0` as the baseline the first broadcast delta is built
+    /// against. Required before [`Self::finish_round`]; drivers on the
+    /// packet flavor ([`Self::finish_round_packet`]) skip it and stay
+    /// scratch-free.
+    pub fn track_deltas(&mut self, x0: &[f64]) {
+        let d = x0.len();
+        self.x_prev = x0.to_vec();
+        self.diff = vec![0.0; d];
+        self.delta = wire::DeltaScratch::with_capacity(d);
+    }
+
+    /// Arm the error-fed-back compressed broadcast; the replica boots from
+    /// the current iterate (what the next dense resync would carry).
+    pub fn arm(&mut self, comp: Box<dyn Compressor>, x: &[f64]) {
+        self.x_rep = x.to_vec();
+        self.ef = Some(EfDownlink::new(comp, x.len(), self.dl_rng.clone()));
+        self.next_down_bits = wire::resync_frame_bits(x.len());
+    }
+
+    /// Is the lossy EF broadcast armed (vs exact delta frames)?
+    pub fn is_armed(&self) -> bool {
+        self.ef.is_some()
+    }
+
+    /// The iterate the workers actually hold this round.
+    pub fn x_eval<'a>(&'a self, x: &'a [f64]) -> &'a [f64] {
+        if self.ef.is_some() {
+            &self.x_rep
+        } else {
+            x
+        }
+    }
+
+    /// The shared worker replica x̂ (`None` on the exact path, where the
+    /// replicas are bit-equal to the master iterate by construction).
+    pub fn replica(&self) -> Option<&[f64]> {
+        self.ef.as_ref().map(|_| self.x_rep.as_slice())
+    }
+
+    /// The EF error accumulator `x_master − x_replica` (`None` when exact).
+    pub fn ef_error(&self) -> Option<&[f64]> {
+        self.ef.as_ref().map(|ef| ef.error())
+    }
+
+    /// EF-fold a pre-quantized delta packet (the exact step the master
+    /// just applied to its own iterate) and apply the compressed broadcast
+    /// to the replica mirror with the same op the workers use; returns the
+    /// packet to broadcast (`delta` itself on the exact path).
+    pub fn fold_packet<'a>(&'a mut self, delta: &'a Packet, prec: ValPrec) -> &'a Packet {
+        match &mut self.ef {
+            Some(ef) => {
+                let c = ef.fold_and_compress(delta, prec);
+                c.add_scaled_into(1.0, &mut self.x_rep);
+                c
+            }
+            None => delta,
+        }
+    }
+
+    /// Account this round's broadcast for a driver whose iterate advances
+    /// through a pre-quantized delta packet (the DCGD-SHIFT family):
+    /// returns this round's `bits_down` across `n` workers and builds the
+    /// next frame from `delta` via [`fold_packet`](Self::fold_packet).
+    pub fn finish_round_packet(&mut self, delta: &Packet, n: usize, prec: ValPrec) -> u64 {
+        let bits_down = n as u64 * self.next_down_bits;
+        let next = wire::down_frame_bits(self.fold_packet(delta, prec), prec);
+        self.next_down_bits = next;
+        bits_down
+    }
+
+    /// Account this round's broadcast and build the next frame from
+    /// `x_new − x_prev`, EF-compressed when armed (replica updated with
+    /// the same packet the workers apply). Returns this round's
+    /// `bits_down` across `n` workers. The GDCI flavor: the raw difference
+    /// is folded so the quantization residual stays in the accumulator.
+    /// Requires [`Self::track_deltas`] at construction.
+    pub fn finish_round(&mut self, x_new: &[f64], n: usize, prec: ValPrec) -> u64 {
+        assert_eq!(
+            self.x_prev.len(),
+            x_new.len(),
+            "finish_round needs track_deltas(x0) at construction"
+        );
+        let bits_down = n as u64 * self.next_down_bits;
+        for j in 0..x_new.len() {
+            self.diff[j] = x_new[j] - self.x_prev[j];
+        }
+        self.next_down_bits = match &mut self.ef {
+            Some(ef) => {
+                let c = ef.fold_slice_and_compress(&self.diff, prec);
+                c.add_scaled_into(1.0, &mut self.x_rep);
+                wire::down_frame_bits(c, prec)
+            }
+            None => {
+                let delta = wire::build_update_packet(&self.diff, 1.0, prec, &mut self.delta);
+                wire::down_frame_bits(delta, prec)
+            }
+        };
+        self.x_prev.copy_from_slice(x_new);
+        bits_down
+    }
+
+    /// Out-of-band iterate change (or a scheduled dense broadcast): the
+    /// next frame is a dense resync, which flushes the EF accumulator and
+    /// overwrites the replica mirror with `x` (and the delta-tracking
+    /// baseline, when armed).
+    pub fn resync(&mut self, x: &[f64]) {
+        self.next_down_bits = wire::resync_frame_bits(x.len());
+        if !self.x_prev.is_empty() {
+            self.x_prev.copy_from_slice(x);
+        }
+        if let Some(ef) = &mut self.ef {
+            ef.flush();
+            self.x_rep.copy_from_slice(x);
+        }
     }
 }
 

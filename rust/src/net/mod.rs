@@ -7,6 +7,31 @@
 //! into the simulated wall-clock series reported alongside the figures, and
 //! what makes heterogeneous-compressor experiments (slow links get more
 //! aggressive compressors — §3.2.1's remark) meaningful.
+//!
+//! # Staged rounds and pipelined overlap
+//!
+//! [`NetworkAccountant::round`] prices communication only (the historical
+//! model). Batched local-step rounds also account the compute stage, with
+//! per-worker measured compute seconds:
+//!
+//! * [`NetworkAccountant::round_staged`] — the three stages run back to
+//!   back: broadcast, then compute, then uplink; the slowest worker's
+//!   `down_i + compute_i + up_i` defines the round.
+//! * [`NetworkAccountant::round_pipelined`] — within a batched round the
+//!   worker streams each of its `stages` sub-step packets as soon as it is
+//!   produced, so sub-step compute overlaps the uplink *transfer* (the
+//!   broadcast and the uplink latency cannot overlap — the first packet
+//!   must exist before anything is sent). Per worker the round costs
+//!   `down + L_up + max(C_i + x_i/τ, C_i/τ + x_i)` where `C_i` is the
+//!   worker's total compute, `x_i` its uplink transfer time and τ the
+//!   stage count — the exact finish time of a homogeneous τ-stage
+//!   two-phase pipeline. With τ = 1 this degenerates to the staged cost
+//!   (nothing can overlap), and it is always ≥ max of the stage costs and
+//!   ≤ the staged cost, so the simulated wall clock honestly reflects the
+//!   overlap instead of charging `compute + comm`.
+//!
+//! Trajectories never depend on which pricing is used — only `sim_time`
+//! does.
 
 /// One worker's link to the master.
 #[derive(Clone, Copy, Debug)]
@@ -31,6 +56,29 @@ impl Default for LinkModel {
 }
 
 impl LinkModel {
+    /// Panics unless the link is physically meaningful: bandwidths must be
+    /// positive and finite, latency non-negative and finite. Called by
+    /// every constructor-like entry point ([`NetworkAccountant::new`],
+    /// [`Self::heterogeneous_fleet`]) so a bad link fails loudly at
+    /// construction instead of producing NaN/∞ wall clocks mid-run.
+    pub fn validate(&self) {
+        assert!(
+            self.up_bps > 0.0 && self.up_bps.is_finite(),
+            "LinkModel.up_bps must be positive and finite, got {}",
+            self.up_bps
+        );
+        assert!(
+            self.down_bps > 0.0 && self.down_bps.is_finite(),
+            "LinkModel.down_bps must be positive and finite, got {}",
+            self.down_bps
+        );
+        assert!(
+            self.latency >= 0.0 && self.latency.is_finite(),
+            "LinkModel.latency must be non-negative and finite, got {}",
+            self.latency
+        );
+    }
+
     pub fn uplink_time(&self, bits: u64) -> f64 {
         self.latency + bits as f64 / self.up_bps
     }
@@ -38,14 +86,32 @@ impl LinkModel {
         self.latency + bits as f64 / self.down_bps
     }
 
-    /// A heterogeneous fleet: worker i gets bandwidth scaled by
-    /// `1/(1 + i·spread)` — used by the heterogeneous example.
-    pub fn heterogeneous_fleet(n: usize, base: LinkModel, spread: f64) -> Vec<LinkModel> {
+    /// A heterogeneous fleet: worker i's bandwidths shrink by
+    /// `1/(1 + i·bw_spread)` and its latency grows by
+    /// `(1 + i·lat_spread)` — the two degradations are independently
+    /// configurable (a far-away worker has high latency but not
+    /// necessarily a thin pipe, and vice versa). Both spreads must be
+    /// ≥ 0 and the base link valid.
+    pub fn heterogeneous_fleet(
+        n: usize,
+        base: LinkModel,
+        bw_spread: f64,
+        lat_spread: f64,
+    ) -> Vec<LinkModel> {
+        base.validate();
+        assert!(
+            bw_spread >= 0.0 && bw_spread.is_finite(),
+            "bw_spread must be non-negative and finite, got {bw_spread}"
+        );
+        assert!(
+            lat_spread >= 0.0 && lat_spread.is_finite(),
+            "lat_spread must be non-negative and finite, got {lat_spread}"
+        );
         (0..n)
             .map(|i| LinkModel {
-                up_bps: base.up_bps / (1.0 + i as f64 * spread),
-                down_bps: base.down_bps / (1.0 + i as f64 * spread),
-                latency: base.latency * (1.0 + i as f64 * spread),
+                up_bps: base.up_bps / (1.0 + i as f64 * bw_spread),
+                down_bps: base.down_bps / (1.0 + i as f64 * bw_spread),
+                latency: base.latency * (1.0 + i as f64 * lat_spread),
             })
             .collect()
     }
@@ -63,6 +129,9 @@ pub struct NetworkAccountant {
 
 impl NetworkAccountant {
     pub fn new(links: Vec<LinkModel>) -> Self {
+        for link in &links {
+            link.validate();
+        }
         Self {
             links,
             ..Default::default()
@@ -75,13 +144,61 @@ impl NetworkAccountant {
 
     /// Price one synchronous round: `up_bits[i]` is worker i's uplink
     /// payload, `down_bits` the per-worker broadcast size. Returns the
-    /// round's wall-clock contribution.
+    /// round's wall-clock contribution. Communication-only (the
+    /// historical pricing; compute-aware rounds use
+    /// [`Self::round_staged`] / [`Self::round_pipelined`]).
     pub fn round(&mut self, up_bits: &[u64], down_bits: u64) -> f64 {
+        self.finish_round(up_bits, down_bits, |link, bits, _wi| {
+            link.uplink_time(bits) + link.downlink_time(down_bits)
+        })
+    }
+
+    /// Price one staged round: broadcast, then `compute_secs[i]` of
+    /// worker i's compute, then the uplink — the slowest worker's
+    /// `down_i + compute_i + up_i` defines the round.
+    pub fn round_staged(&mut self, up_bits: &[u64], down_bits: u64, compute_secs: &[f64]) -> f64 {
+        assert_eq!(compute_secs.len(), self.links.len());
+        self.finish_round(up_bits, down_bits, |link, bits, wi| {
+            link.downlink_time(down_bits) + compute_secs[wi] + link.uplink_time(bits)
+        })
+    }
+
+    /// Price one pipelined batched round (see the module doc): each worker
+    /// streams its `stages` sub-step packets as they are produced, so its
+    /// compute overlaps its uplink transfer. Never less than the max of a
+    /// worker's stage costs; equal to [`Self::round_staged`] when
+    /// `stages == 1`.
+    pub fn round_pipelined(
+        &mut self,
+        up_bits: &[u64],
+        down_bits: u64,
+        compute_secs: &[f64],
+        stages: usize,
+    ) -> f64 {
+        assert_eq!(compute_secs.len(), self.links.len());
+        let s = stages.max(1) as f64;
+        self.finish_round(up_bits, down_bits, |link, bits, wi| {
+            let x = bits as f64 / link.up_bps;
+            let c = compute_secs[wi];
+            let overlapped = (c + x / s).max(c / s + x);
+            link.downlink_time(down_bits) + link.latency + overlapped
+        })
+    }
+
+    /// Shared straggler fold: `worker_time(link, up_bits, worker)` prices
+    /// one worker's round; the slowest worker defines the round's
+    /// wall-clock contribution, and the traffic totals accumulate either
+    /// way.
+    fn finish_round(
+        &mut self,
+        up_bits: &[u64],
+        down_bits: u64,
+        worker_time: impl Fn(&LinkModel, u64, usize) -> f64,
+    ) -> f64 {
         assert_eq!(up_bits.len(), self.links.len());
         let mut slowest: f64 = 0.0;
-        for (bits, link) in up_bits.iter().zip(self.links.iter()) {
-            let t = link.uplink_time(*bits) + link.downlink_time(down_bits);
-            slowest = slowest.max(t);
+        for (wi, (bits, link)) in up_bits.iter().zip(self.links.iter()).enumerate() {
+            slowest = slowest.max(worker_time(link, *bits, wi));
             self.total_up_bits += bits;
         }
         self.total_down_bits += down_bits * self.links.len() as u64;
@@ -137,8 +254,92 @@ mod tests {
 
     #[test]
     fn heterogeneous_fleet_degrades() {
-        let fleet = LinkModel::heterogeneous_fleet(4, LinkModel::default(), 1.0);
+        let fleet = LinkModel::heterogeneous_fleet(4, LinkModel::default(), 1.0, 1.0);
         assert!(fleet[0].up_bps > fleet[3].up_bps * 3.0);
         assert!(fleet[3].latency > fleet[0].latency * 3.0);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_spreads_are_independent() {
+        // latency-only spread: bandwidths stay flat, latency degrades
+        let fleet = LinkModel::heterogeneous_fleet(4, LinkModel::default(), 0.0, 2.0);
+        assert_eq!(fleet[0].up_bps, fleet[3].up_bps);
+        assert_eq!(fleet[0].down_bps, fleet[3].down_bps);
+        assert!(fleet[3].latency > fleet[0].latency * 6.0);
+        // bandwidth-only spread: latency stays flat
+        let fleet = LinkModel::heterogeneous_fleet(4, LinkModel::default(), 2.0, 0.0);
+        assert_eq!(fleet[0].latency, fleet[3].latency);
+        assert!(fleet[0].up_bps > fleet[3].up_bps * 6.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "up_bps must be positive")]
+    fn rejects_non_positive_bandwidth() {
+        NetworkAccountant::uniform(
+            2,
+            LinkModel {
+                up_bps: 0.0,
+                down_bps: 1e6,
+                latency: 0.01,
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "latency must be non-negative")]
+    fn rejects_negative_latency() {
+        LinkModel::heterogeneous_fleet(
+            2,
+            LinkModel {
+                up_bps: 1e6,
+                down_bps: 1e6,
+                latency: -0.5,
+            },
+            1.0,
+            1.0,
+        );
+    }
+
+    #[test]
+    fn staged_round_adds_compute_to_the_straggler() {
+        let link = LinkModel {
+            up_bps: 1e6,
+            down_bps: 1e6,
+            latency: 0.01,
+        };
+        let mut comm_only = NetworkAccountant::uniform(2, link);
+        let t0 = comm_only.round(&[1_000_000, 500_000], 100_000);
+        let mut staged = NetworkAccountant::uniform(2, link);
+        let t1 = staged.round_staged(&[1_000_000, 500_000], 100_000, &[0.25, 0.25]);
+        assert!((t1 - (t0 + 0.25)).abs() < 1e-12, "{t1} vs {t0} + 0.25");
+        // per-worker compute: the straggler is whoever's *sum* is worst,
+        // not comm-straggler + fleet-max compute. Worker 0: 1.01 up +
+        // 0.11 down + 0.0 = 1.12; worker 1: 0.51 + 0.11 + 1.0 = 1.62.
+        let mut hetero = NetworkAccountant::uniform(2, link);
+        let t2 = hetero.round_staged(&[1_000_000, 500_000], 100_000, &[0.0, 1.0]);
+        assert!((t2 - 1.62).abs() < 1e-12, "hetero staged round {t2}");
+    }
+
+    #[test]
+    fn pipelined_round_overlaps_compute_with_uplink_transfer() {
+        // latency-free link so the numbers are exact: down = 0.1 s,
+        // up transfer x = 1.0 s, compute C = 1.0 s, τ = 4.
+        let link = LinkModel {
+            up_bps: 1e6,
+            down_bps: 1e7,
+            latency: 0.0,
+        };
+        let mut acc = NetworkAccountant::uniform(1, link);
+        let t = acc.round_pipelined(&[1_000_000], 1_000_000, &[1.0], 4);
+        // down + max(C + x/4, C/4 + x) = 0.1 + 1.25
+        assert!((t - 1.35).abs() < 1e-12, "pipelined round {t}");
+        // the staged (no-overlap) cost of the same round
+        let mut seq = NetworkAccountant::uniform(1, link);
+        let ts = seq.round_staged(&[1_000_000], 1_000_000, &[1.0]);
+        assert!((ts - 2.1).abs() < 1e-12, "staged round {ts}");
+        // one stage ⇒ nothing can overlap: pipelined == staged
+        let mut one = NetworkAccountant::uniform(1, link);
+        let t1 = one.round_pipelined(&[1_000_000], 1_000_000, &[1.0], 1);
+        assert!((t1 - ts).abs() < 1e-12, "{t1} vs staged {ts}");
     }
 }

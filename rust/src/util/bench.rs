@@ -170,6 +170,10 @@ pub struct JsonScenario {
     /// measured broadcast cost, when the scenario drives the coordinator
     /// (tracks the delta-downlink win across PRs)
     pub down_bytes_per_round: Option<f64>,
+    /// simulated wall clock of the scenario's run, when it prices a
+    /// `LinkModel` fleet (tracks the latency-amortization win across PRs —
+    /// scenarios record it with and without pipelining as separate rows)
+    pub sim_time_sec: Option<f64>,
 }
 
 impl JsonScenario {
@@ -179,12 +183,19 @@ impl JsonScenario {
             median_sec,
             coords_per_s,
             down_bytes_per_round: None,
+            sim_time_sec: None,
         }
     }
 
     /// Attach the measured per-worker downlink bytes/round.
     pub fn with_down_bytes(mut self, bytes_per_round: f64) -> Self {
         self.down_bytes_per_round = Some(bytes_per_round);
+        self
+    }
+
+    /// Attach the simulated wall clock (`NetworkAccountant::sim_time`).
+    pub fn with_sim_time(mut self, sim_time_sec: f64) -> Self {
+        self.sim_time_sec = Some(sim_time_sec);
         self
     }
 }
@@ -210,6 +221,9 @@ pub fn write_bench_json(path: &str, rows: &[JsonScenario]) -> std::io::Result<()
         }
         if let Some(b) = r.down_bytes_per_round {
             fields.push(("down_bytes_per_round", Json::num(b)));
+        }
+        if let Some(t) = r.sim_time_sec {
+            fields.push(("sim_time_sec", Json::num(t)));
         }
         merged.insert(r.scenario.clone(), Json::obj(fields));
     }
@@ -273,16 +287,20 @@ mod tests {
             path_s,
             &[
                 JsonScenario::new("a", 0.25, Some(2e6)),
-                JsonScenario::new("b", 1.5, None).with_down_bytes(512.0),
+                JsonScenario::new("b", 1.5, None)
+                    .with_down_bytes(512.0)
+                    .with_sim_time(42.5),
             ],
         )
         .unwrap();
         let j = crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(j.get("a").get("median_sec").as_f64(), Some(0.25));
         assert_eq!(j.get("a").get("coords_per_s").as_f64(), Some(2e6));
+        assert!(j.get("a").get("sim_time_sec").is_null());
         assert_eq!(j.get("b").get("median_sec").as_f64(), Some(1.5));
         assert!(j.get("b").get("coords_per_s").is_null());
         assert_eq!(j.get("b").get("down_bytes_per_round").as_f64(), Some(512.0));
+        assert_eq!(j.get("b").get("sim_time_sec").as_f64(), Some(42.5));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

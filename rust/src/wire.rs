@@ -18,6 +18,35 @@
 //! separately by [`HEADER_BITS`]. [`encoded_len`] gives the exact byte size
 //! of a frame without materializing it.
 //!
+//! # Batched uplink frames (local steps)
+//!
+//! With `local_steps = τ > 1` a worker performs τ local shifted
+//! sub-steps per communication round and ships all τ compressed
+//! gradient-difference packets in **one** `Batch` frame — one round trip
+//! of latency instead of τ:
+//!
+//! ```text
+//! batch frame: 1 byte tag (9) | 2 bytes count τ (LE) | τ packet frames
+//! ```
+//!
+//! Each body is an ordinary packet frame (header + bit-packed body as
+//! above, byte-aligned), appended in sub-step order with
+//! [`append_batch_packet`] and decoded incrementally with
+//! [`decode_batch_packet`] so the master can replay the τ sub-step folds
+//! with one recycled scratch packet per worker. A `count` of 0 is
+//! malformed; τ = 1 runs ship plain packet frames (tags 1–8), keeping the
+//! wire bytes of the per-round protocol unchanged.
+//!
+//! # Frame kinds at a glance
+//!
+//! | dir      | kind                  | first byte | body                          | purpose                                        |
+//! |----------|-----------------------|------------|-------------------------------|------------------------------------------------|
+//! | uplink   | packet                | tag 1–8    | one packet frame              | one compressed message (Q/C/refresh frame)     |
+//! | uplink   | `Batch`               | tag 9      | count (u16) + τ packet frames | τ local-step packets, one latency round trip   |
+//! | downlink | [`DownKind::Delta`]   | kind 1     | packet frame                  | exact iterate delta x^{k+1} − x^k              |
+//! | downlink | [`DownKind::Resync`]  | kind 2     | dense f64 packet frame        | full iterate, replica bootstrap / drift reset  |
+//! | downlink | [`DownKind::EfDelta`] | kind 3     | packet frame                  | lossy EF replica update C(e + Δ)               |
+//!
 //! # Downlink (broadcast) frames
 //!
 //! The master never ships the dense iterate: it broadcasts one frame per
@@ -105,6 +134,7 @@ const TAG_NATEXP: u8 = 5;
 const TAG_SIGNSCALE: u8 = 6;
 const TAG_TERNARY: u8 = 7;
 const TAG_ZERO: u8 = 8;
+const TAG_BATCH: u8 = 9;
 
 const DOWN_DELTA: u8 = 1;
 const DOWN_RESYNC: u8 = 2;
@@ -147,6 +177,14 @@ struct BitWriter<'a> {
 impl<'a> BitWriter<'a> {
     fn new(buf: &'a mut Vec<u8>) -> Self {
         buf.clear();
+        Self { buf, bit_pos: 0 }
+    }
+
+    /// Like [`new`](Self::new) but appends to the buffer's current content
+    /// instead of clearing it — batched frames concatenate packet frames,
+    /// and every packet frame begins and ends on a byte boundary, so
+    /// appending is byte-identical to one continuous aligned writer.
+    fn append(buf: &'a mut Vec<u8>) -> Self {
         Self { buf, bit_pos: 0 }
     }
 
@@ -596,6 +634,74 @@ pub fn down_frame_bits(pkt: &Packet, prec: ValPrec) -> u64 {
 /// it to mirror the coordinator's round-0 bootstrap accounting.
 pub fn resync_frame_bits(d: usize) -> u64 {
     (7 + 8 * d as u64) * 8
+}
+
+// ------------------------------------------------- batched uplink framing
+
+/// Byte size of a batched uplink frame's header ([`begin_batch_frame`]):
+/// 1 tag byte + 2 count bytes.
+pub const BATCH_HEADER_BYTES: usize = 3;
+
+/// Start a batched uplink frame (the `Batch` kind of the module doc's
+/// table): clears `out` and writes the 3-byte header
+/// `tag | count (u16 LE)`. The body is `count` ordinary packet frames
+/// appended with [`append_batch_packet`], one per local sub-step, in
+/// sub-step order.
+pub fn begin_batch_frame(count: usize, out: &mut Vec<u8>) {
+    assert!(
+        (1..=u16::MAX as usize).contains(&count),
+        "batch count {count} out of range"
+    );
+    out.clear();
+    out.push(TAG_BATCH);
+    out.extend_from_slice(&(count as u16).to_le_bytes());
+}
+
+/// Append one packet frame to a batched uplink frame begun with
+/// [`begin_batch_frame`]. The appended bytes are identical to what
+/// [`encode_into`] would produce for the same packet.
+pub fn append_batch_packet(pkt: &Packet, prec: ValPrec, out: &mut Vec<u8>) {
+    let mut w = BitWriter::append(out);
+    encode_packet(pkt, prec, &mut w);
+}
+
+/// Validate a batched uplink frame's header, returning the sub-step count
+/// and the byte offset of the first packet frame.
+pub fn split_batch_frame(bytes: &[u8]) -> Result<(usize, usize), WireError> {
+    if bytes.len() < BATCH_HEADER_BYTES {
+        return Err(WireError::Truncated {
+            needed: BATCH_HEADER_BYTES,
+            have: bytes.len(),
+        });
+    }
+    if bytes[0] != TAG_BATCH {
+        return Err(WireError::BadTag(bytes[0]));
+    }
+    let count = u16::from_le_bytes([bytes[1], bytes[2]]) as usize;
+    if count == 0 {
+        return Err(WireError::Malformed("empty batch frame".into()));
+    }
+    Ok((count, BATCH_HEADER_BYTES))
+}
+
+/// Decode the packet frame starting at byte `offset` of a batched uplink
+/// frame into a caller-recycled packet (same reuse semantics as
+/// [`decode_into`]); returns the offset of the next packet frame. The
+/// caller walks the frame by feeding each returned offset back in,
+/// [`split_batch_frame`]'s count times.
+pub fn decode_batch_packet(
+    bytes: &[u8],
+    offset: usize,
+    out: &mut Packet,
+) -> Result<usize, WireError> {
+    let tail = bytes.get(offset..).ok_or(WireError::Truncated {
+        needed: offset,
+        have: bytes.len(),
+    })?;
+    let mut r = BitReader::new(tail);
+    decode_packet(&mut r, out)?;
+    r.align();
+    Ok(offset + r.byte_pos)
 }
 
 // ------------------------------------------------- update (delta) building
@@ -1146,6 +1252,90 @@ mod tests {
         let mut back = Packet::Zero { dim: 0 };
         assert_eq!(decode_down_into(&buf, &mut back).unwrap(), DownKind::Delta);
         assert_eq!(&back, pkt, "f32 round-trip must be lossless on quantized values");
+    }
+
+    #[test]
+    fn batch_frames_roundtrip_all_variants() {
+        // a batch mixing every shape a Q compressor can emit
+        let pkts = vec![
+            Packet::Sparse {
+                dim: 120,
+                indices: vec![0, 17, 119],
+                values: vec![1.0, -0.5, 3.25],
+                scale: 2.0,
+            },
+            Packet::Dense(vec![1.5, -2.25, 0.0, 1e-3]),
+            Packet::Levels {
+                dim: 5,
+                norm: 4.5,
+                s: 3,
+                signs: vec![true, false, true, true, false],
+                levels: vec![0, 1, 2, 3, 1],
+            },
+            Packet::Zero { dim: 100 },
+            Packet::TernaryPkt {
+                dim: 6,
+                scale: 1.0,
+                mask: vec![true, false, true, false, false, true],
+                signs: vec![true, false, true],
+            },
+        ];
+        for prec in [ValPrec::F64, ValPrec::F32] {
+            let mut buf = vec![0xEEu8; 16]; // dirty, recycled
+            begin_batch_frame(pkts.len(), &mut buf);
+            for pkt in &pkts {
+                append_batch_packet(pkt, prec, &mut buf);
+            }
+            // body bytes are exactly the concatenated standalone encodings
+            let mut want = Vec::new();
+            for pkt in &pkts {
+                want.extend_from_slice(&encode(pkt, prec));
+            }
+            assert_eq!(&buf[BATCH_HEADER_BYTES..], &want[..], "{prec:?} body");
+            // walk the frame back with one recycled scratch packet
+            let (count, mut off) = split_batch_frame(&buf).unwrap();
+            assert_eq!(count, pkts.len());
+            let mut scratch = Packet::Zero { dim: 0 };
+            for (i, pkt) in pkts.iter().enumerate() {
+                off = decode_batch_packet(&buf, off, &mut scratch).unwrap();
+                match prec {
+                    ValPrec::F64 => assert_eq!(&scratch, pkt, "packet {i}"),
+                    ValPrec::F32 => assert_eq!(scratch.dim(), pkt.dim(), "packet {i}"),
+                }
+            }
+            assert_eq!(off, buf.len(), "batch walk must consume the whole frame");
+        }
+    }
+
+    #[test]
+    fn batch_frames_reject_garbage() {
+        let mut buf = Vec::new();
+        begin_batch_frame(2, &mut buf);
+        append_batch_packet(&Packet::Zero { dim: 4 }, ValPrec::F64, &mut buf);
+        append_batch_packet(&Packet::Dense(vec![1.0, 2.0]), ValPrec::F64, &mut buf);
+        assert!(split_batch_frame(&buf).is_ok());
+        // too-short header / wrong tag / zero count
+        assert!(split_batch_frame(&[]).is_err());
+        assert!(split_batch_frame(&buf[..2]).is_err());
+        let mut bad = buf.clone();
+        bad[0] = TAG_DENSE;
+        assert!(split_batch_frame(&bad).is_err());
+        let mut bad = buf.clone();
+        bad[1] = 0;
+        bad[2] = 0;
+        assert!(split_batch_frame(&bad).is_err());
+        // truncated body errors at every cut
+        let (_, first_off) = split_batch_frame(&buf).unwrap();
+        let mut scratch = Packet::Zero { dim: 0 };
+        for cut in first_off..buf.len() {
+            let walked = decode_batch_packet(&buf[..cut], first_off, &mut scratch)
+                .and_then(|off| decode_batch_packet(&buf[..cut], off, &mut scratch));
+            assert!(walked.is_err(), "cut {cut} must not decode both packets");
+        }
+        // offsets beyond the buffer error instead of panicking
+        assert!(decode_batch_packet(&buf, buf.len() + 7, &mut scratch).is_err());
+        // a batch frame is not a plain packet frame
+        assert!(matches!(decode(&buf), Err(WireError::BadTag(TAG_BATCH))));
     }
 
     #[test]

@@ -190,6 +190,29 @@ fn ef_downlink_round_is_allocation_free() {
     assert_eq!(allocs, 0, "EF downlink step allocated {allocs} times in 10 rounds");
 }
 
+/// Local-step batched rounds recycle their extra scratch too (per-worker
+/// sub-step packets, the shared local iterate, the Σ_t est^t accumulator):
+/// after warm-up a τ = 4 batched round performs zero heap allocations.
+#[test]
+fn local_steps_batched_round_is_allocation_free() {
+    let _guard = TEST_LOCK.lock().unwrap();
+    let d = 2048;
+    let p = MeanProblem::new(d, 4, 11);
+    let mut alg = DcgdShift::diana(&p, RandK::with_q(d, 0.01), None, 11).with_local_steps(4);
+    for _ in 0..5 {
+        alg.step(&p);
+    }
+    let allocs = thread_allocs(|| {
+        for _ in 0..10 {
+            alg.step(&p);
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "batched DcgdShift::step allocated {allocs} times in 10 rounds"
+    );
+}
+
 /// GDCI's compressed-iterates loop is allocation-free too.
 #[test]
 fn gdci_round_is_allocation_free() {

@@ -484,3 +484,93 @@ fn prop_payload_bits_cache_exact() {
         Ok(())
     });
 }
+
+// ------------------------------------------------- network straggler props
+
+fn random_link(g: &mut Gen) -> shiftcomp::net::LinkModel {
+    shiftcomp::net::LinkModel {
+        up_bps: g.f64_in(1e3, 1e9),
+        down_bps: g.f64_in(1e3, 1e9),
+        latency: g.f64_in(0.0, 0.5),
+    }
+}
+
+/// The round cost equals the slowest worker's uplink + broadcast, exactly,
+/// under arbitrary heterogeneous fleets — no other worker can stretch (or
+/// shrink) the round.
+#[test]
+fn prop_round_cost_is_the_straggler() {
+    use shiftcomp::net::NetworkAccountant;
+    run(300, 0x57A6, |g| {
+        let n = g.usize_in(1, 12);
+        let links: Vec<_> = (0..n).map(|_| random_link(g)).collect();
+        let up_bits: Vec<u64> = (0..n).map(|_| g.usize_in(0, 1 << 20) as u64).collect();
+        let down_bits = g.usize_in(0, 1 << 20) as u64;
+        let mut acc = NetworkAccountant::new(links.clone());
+        let t = acc.round(&up_bits, down_bits);
+        let reference = up_bits
+            .iter()
+            .zip(links.iter())
+            .map(|(b, l)| l.uplink_time(*b) + l.downlink_time(down_bits))
+            .fold(0.0f64, f64::max);
+        if t != reference {
+            return Err(format!("round {t} != straggler reference {reference}"));
+        }
+        if acc.sim_time != t || acc.rounds != 1 {
+            return Err("accumulation mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+/// Staged and pipelined pricing are honest under heterogeneous fleets and
+/// per-worker compute: the staged round equals the slowest worker's
+/// `down + compute + up` exactly; the pipelined round is never below any
+/// stage cost (the comm-only round, any worker's compute), never above
+/// the staged no-overlap cost, and exactly the staged cost when there is
+/// a single stage to overlap.
+#[test]
+fn prop_pipelined_bounded_by_stages() {
+    use shiftcomp::net::NetworkAccountant;
+    run(300, 0x9173, |g| {
+        let n = g.usize_in(1, 10);
+        let links: Vec<_> = (0..n).map(|_| random_link(g)).collect();
+        let up_bits: Vec<u64> = (0..n).map(|_| g.usize_in(0, 1 << 22) as u64).collect();
+        let down_bits = g.usize_in(0, 1 << 22) as u64;
+        let compute: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 2.0)).collect();
+        let stages = g.usize_in(1, 32);
+        let comm = NetworkAccountant::new(links.clone()).round(&up_bits, down_bits);
+        let staged =
+            NetworkAccountant::new(links.clone()).round_staged(&up_bits, down_bits, &compute);
+        let piped = NetworkAccountant::new(links.clone()).round_pipelined(
+            &up_bits, down_bits, &compute, stages,
+        );
+        // the staged straggler, recomputed per worker with its own compute
+        let reference = (0..n)
+            .map(|i| links[i].downlink_time(down_bits) + compute[i] + links[i].uplink_time(up_bits[i]))
+            .fold(0.0f64, f64::max);
+        if staged != reference {
+            return Err(format!("staged {staged} != per-worker reference {reference}"));
+        }
+        let max_compute = compute.iter().fold(0.0f64, |a, &b| a.max(b));
+        let tol = 1e-12 * staged.abs().max(1.0);
+        if piped < comm.max(max_compute) - tol {
+            return Err(format!(
+                "pipelined {piped} below stage max {} (comm {comm}, max compute {max_compute})",
+                comm.max(max_compute)
+            ));
+        }
+        if piped > staged + tol {
+            return Err(format!("pipelined {piped} above staged {staged}"));
+        }
+        let one_stage = NetworkAccountant::new(links.clone()).round_pipelined(
+            &up_bits, down_bits, &compute, 1,
+        );
+        if (one_stage - staged).abs() > tol {
+            return Err(format!(
+                "one-stage pipeline {one_stage} must equal staged {staged}"
+            ));
+        }
+        Ok(())
+    });
+}

@@ -229,3 +229,70 @@ fn down_garbage_never_panics() {
         Ok(())
     });
 }
+
+/// Batched uplink frames: any sequence of random packets concatenates into
+/// one frame and walks back packet-for-packet with a single recycled
+/// scratch, consuming exactly the whole frame.
+#[test]
+fn prop_batch_frames_roundtrip() {
+    run(120, 0x77139, |g| {
+        let count = g.usize_in(1, 12);
+        let pkts: Vec<Packet> = (0..count).map(|_| random_packet(g)).collect();
+        let mut buf = vec![0xA5u8; g.usize_in(0, 16)]; // dirty, recycled
+        wire::begin_batch_frame(count, &mut buf);
+        for pkt in &pkts {
+            wire::append_batch_packet(pkt, ValPrec::F64, &mut buf);
+        }
+        let (n, mut off) = wire::split_batch_frame(&buf).map_err(|e| e.to_string())?;
+        if n != count {
+            return Err(format!("count mutated: {n} vs {count}"));
+        }
+        let mut scratch = Packet::Zero { dim: 0 };
+        for (i, pkt) in pkts.iter().enumerate() {
+            off = wire::decode_batch_packet(&buf, off, &mut scratch)
+                .map_err(|e| e.to_string())?;
+            if &scratch != pkt {
+                return Err(format!("batch packet {i} mutated"));
+            }
+        }
+        if off != buf.len() {
+            return Err(format!("walk consumed {off} of {} bytes", buf.len()));
+        }
+        // truncation anywhere inside the body must error while walking
+        let cut = g.usize_in(wire::BATCH_HEADER_BYTES, buf.len() - 1);
+        let mut o = wire::BATCH_HEADER_BYTES;
+        let mut ok = true;
+        for _ in 0..count {
+            match wire::decode_batch_packet(&buf[..cut], o, &mut scratch) {
+                Ok(next) => o = next,
+                Err(_) => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if ok {
+            return Err(format!("cut {cut} decoded all {count} packets"));
+        }
+        Ok(())
+    });
+}
+
+/// Garbage batch bytes must never panic.
+#[test]
+fn batch_garbage_never_panics() {
+    run(200, 0x7713A, |g| {
+        let len = g.usize_in(0, 64);
+        let junk: Vec<u8> = (0..len).map(|_| g.usize_in(0, 255) as u8).collect();
+        let mut out = Packet::Zero { dim: 0 };
+        if let Ok((_, mut off)) = wire::split_batch_frame(&junk) {
+            for _ in 0..4 {
+                match wire::decode_batch_packet(&junk, off, &mut out) {
+                    Ok(next) => off = next,
+                    Err(_) => break,
+                }
+            }
+        }
+        Ok(())
+    });
+}
