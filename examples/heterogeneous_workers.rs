@@ -12,7 +12,7 @@
 //! wall-clock from the byte-priced network model.
 //!
 //! ```bash
-//! cargo run --release --example heterogeneous_workers
+//! cargo run --release --example heterogeneous_workers [-- --rounds 200]
 //! ```
 
 use std::sync::Arc;
@@ -63,6 +63,7 @@ fn run_fleet(name: &str, problem: Arc<Ridge>, qs: Vec<Box<dyn Compressor>>, roun
             local_steps: 1,
             pipeline: false,
             downlink: None,
+            uplink_ef: false,
         },
     );
     let trace = runner.run(
@@ -88,7 +89,13 @@ fn main() {
     let problem = Arc::new(Ridge::paper_default(42));
     let n = problem.n_workers();
     let d = problem.dim();
-    let rounds = 8_000;
+    // `-- --rounds N` shrinks the round budget (the CI examples smoke job
+    // runs a tiny config so the example can't silently rot)
+    let rounds = std::env::args()
+        .skip_while(|a| a != "--rounds")
+        .nth(1)
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(8_000);
 
     println!("fleet: worker 0 fastest → worker {} slowest (≈4× degradation)\n", n - 1);
 

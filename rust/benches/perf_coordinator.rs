@@ -217,11 +217,24 @@ fn main() {
         let q = 0.005;
         let pr = 0.5; // refresh often ⇒ shifts (and the exact delta) densify fast
         let omega = RandK::with_q(d, q).omega().unwrap();
-        let mk = |downlink: Option<Box<dyn Compressor>>, seed: u64| {
+        let mk = |downlink: Option<Box<dyn Compressor>>, uplink_ef: bool, seed: u64| {
             let pa = Arc::new(WideProblem::new(d, n, seed));
-            let ss = shiftcomp::theory::rand_diana(pa.as_ref(), omega, &vec![pr; n], None);
+            // the duplex configuration runs Top-K workers (no ω): γ from
+            // the EF-BV rule; the unbiased configurations keep Theorem 4
+            let gamma = if uplink_ef {
+                let delta = TopK::with_q(d, q).delta().unwrap();
+                shiftcomp::theory::ef_uplink(pa.as_ref(), &vec![delta; n]).gamma
+            } else {
+                shiftcomp::theory::rand_diana(pa.as_ref(), omega, &vec![pr; n], None).gamma
+            };
             let qs: Vec<Box<dyn Compressor>> = (0..n)
-                .map(|_| Box::new(RandK::with_q(d, q)) as Box<dyn Compressor>)
+                .map(|_| {
+                    if uplink_ef {
+                        Box::new(TopK::with_q(d, q)) as Box<dyn Compressor>
+                    } else {
+                        Box::new(RandK::with_q(d, q)) as Box<dyn Compressor>
+                    }
+                })
                 .collect();
             let dist = DistributedRunner::new(
                 pa.clone(),
@@ -230,7 +243,7 @@ fn main() {
                 vec![vec![0.0; d]; n],
                 ClusterConfig {
                     method: MethodKind::RandDiana { p: pr },
-                    gamma: ss.gamma,
+                    gamma,
                     prec: ValPrec::F64,
                     seed,
                     links: None,
@@ -238,23 +251,37 @@ fn main() {
                     local_steps: 1,
                     pipeline: false,
                     downlink,
+                    uplink_ef,
                 },
             );
             (pa, dist)
         };
         let dense_bytes = d as f64 * 8.0;
         let mut results = Vec::new();
-        for (label, downlink) in [
-            ("exact", None::<Box<dyn Compressor>>),
-            ("ef_topk", Some(Box::new(TopK::with_q(d, q)) as Box<dyn Compressor>)),
+        for (label, downlink, uplink_ef) in [
+            ("exact", None::<Box<dyn Compressor>>, false),
+            (
+                "ef_topk",
+                Some(Box::new(TopK::with_q(d, q)) as Box<dyn Compressor>),
+                false,
+            ),
+            // the full-duplex EF configuration this PR unlocks: Top-K with
+            // worker-side error feedback on the *uplink* too — previously
+            // impossible (biased Q was rejected outright)
+            (
+                "ef_topk_duplex",
+                Some(Box::new(TopK::with_q(d, q)) as Box<dyn Compressor>),
+                true,
+            ),
         ] {
-            let (pa, mut dist) = mk(downlink, 17);
+            let (pa, mut dist) = mk(downlink, uplink_ef, 17);
             // warm-up: round-0 resync + enough rounds for the shifts to
             // densify (every worker refreshes w.h.p. within 5 rounds)
             for _ in 0..5 {
                 dist.step(pa.as_ref());
             }
             let mut down_bits = 0u64;
+            let mut up_bits = 0u64;
             let mut rounds = 0u64;
             let stats = bench_maybe_smoke(
                 &format!("rand-diana densified downlink [{label}] (d={d} n={n})"),
@@ -262,25 +289,30 @@ fn main() {
                 || {
                     let s = dist.step(pa.as_ref());
                     down_bits += s.bits_down;
+                    up_bits += s.bits_up;
                     rounds += 1;
                 },
             );
             let down_bytes = down_bits as f64 / 8.0 / rounds as f64 / n as f64;
+            let up_bytes = up_bits as f64 / 8.0 / rounds as f64 / n as f64;
             println!(
-                "  → [{label}] downlink {down_bytes:.0} B/worker/round vs dense {dense_bytes:.0} \
-                 ({:.1}× smaller)",
-                dense_bytes / down_bytes
+                "  → [{label}] downlink {down_bytes:.0} B/worker/round, uplink {up_bytes:.0} \
+                 B/worker/round vs dense {dense_bytes:.0} ({:.1}× / {:.1}× smaller)",
+                dense_bytes / down_bytes,
+                dense_bytes / up_bytes
             );
             rows.push(format!("downlink_{label}_rand_diana_bytes,{down_bytes:.3e}"));
+            rows.push(format!("uplink_{label}_rand_diana_bytes,{up_bytes:.3e}"));
             json.push(
                 JsonScenario::new(
                     format!("downlink_{label}_rand_diana_d{d}n{n}"),
                     stats.median(),
                     Some((d * n) as f64 / stats.median()),
                 )
-                .with_down_bytes(down_bytes),
+                .with_down_bytes(down_bytes)
+                .with_up_bytes(up_bytes),
             );
-            results.push((label, down_bytes));
+            results.push((label, down_bytes, up_bytes));
         }
         let exact_bytes = results[0].1;
         let ef_bytes = results[1].1;
@@ -288,6 +320,12 @@ fn main() {
             "  → EF Top-K keeps the densified broadcast {:.1}× below the exact path \
              ({ef_bytes:.0} vs {exact_bytes:.0} B/worker/round; dense frame {dense_bytes:.0} B)",
             exact_bytes / ef_bytes
+        );
+        let duplex_up = results[2].2;
+        println!(
+            "  → EF Top-K uplink (duplex) ships {duplex_up:.0} B/worker/round — O(K) vs the \
+             {dense_bytes:.0} B dense frame ({:.1}× smaller)",
+            dense_bytes / duplex_up
         );
     }
 
@@ -352,6 +390,7 @@ fn main() {
                 local_steps: 1,
                 pipeline: false,
                 downlink: None,
+                uplink_ef: false,
             },
         );
         dist.step(pa.as_ref());
@@ -397,6 +436,7 @@ fn main() {
                 local_steps: 1,
                 pipeline: false,
                 downlink: None,
+                uplink_ef: false,
             },
         );
         dist.step(pa.as_ref());
@@ -466,6 +506,7 @@ fn main() {
                     local_steps: tau,
                     pipeline,
                     downlink: None,
+                    uplink_ef: false,
                 },
             );
             (pa, dist)

@@ -55,6 +55,21 @@
 //! bit-identical across drivers (pinned by `tests/coordinator.rs`). The
 //! glue lives in the shared [`crate::downlink::DownlinkState`].
 //!
+//! # Error-fed-back uplink mirror
+//!
+//! [`DcgdShift::set_uplink_ef`] arms the single-process mirror of
+//! [`crate::coordinator::ClusterConfig::uplink_ef`]: every worker slot
+//! keeps an accumulator `e_i` ([`crate::ef::EfUplink`]) and its Q-frame
+//! ships `c_i = C_i(e_i + m_i)` instead of `Q_i(m_i)` — the EF-BV
+//! construction that makes contractive (biased) per-worker compressors
+//! like Top-K valid on the uplink. The compression goes through the same
+//! [`crate::ef::compress_uplink`] helper the threaded worker loop uses, in
+//! the same operation order, so cluster and mirror stay bit-identical —
+//! including the per-sub-step fold under `local_steps` batching and the
+//! accumulator flush on `set_x0` (the mirror of the cluster's
+//! resync-flushes-the-uplink rule). Step sizes for the contractive regime
+//! come from [`crate::theory::ef_uplink`].
+//!
 //! # Local-step batched rounds
 //!
 //! [`DcgdShift::set_local_steps`] = τ mirrors
@@ -70,6 +85,7 @@ use crate::algorithms::shift_rules::ShiftRule;
 use crate::algorithms::{Algorithm, StepStats};
 use crate::compressors::{Compressor, Packet, PayloadBitsCache, ValPrec};
 use crate::downlink::DownlinkState;
+use crate::ef::{self, EfUplink};
 use crate::linalg::{ax_into, axpy, sub_into, zero};
 use crate::problems::Problem;
 use crate::theory;
@@ -100,6 +116,17 @@ struct WorkerSlot {
     /// (the single-process stand-in for the wire batch frame; empty while
     /// `local_steps = 1`)
     batch: Vec<Packet>,
+    /// worker-side error feedback on the uplink (`None` = exact uplink);
+    /// the Q-frame then ships `C(e + m)` — see the module doc
+    ef: Option<EfUplink>,
+}
+
+impl WorkerSlot {
+    /// The Q-frame packet this round shipped: the EF re-pack when the EF
+    /// uplink is armed, the recycled compressor scratch otherwise.
+    fn q_packet(&self) -> &Packet {
+        self.ef.as_ref().map_or(&self.q_pkt, |ef| ef.packet())
+    }
 }
 
 pub struct DcgdShift {
@@ -142,6 +169,25 @@ impl DcgdShift {
         let n = p.n_workers();
         let shifts = vec![vec![0.0; p.dim()]; n];
         Self::fixed_shift(p, q, shifts, seed)
+    }
+
+    /// Plain DCGD with an error-fed-back uplink (EF-BV): zero fixed
+    /// shifts, every worker ships `C(e_i + ∇f_i)` from its accumulator,
+    /// and γ comes from [`theory::ef_uplink`] using the compressor's
+    /// contraction δ. This is the constructor that accepts contractive
+    /// (biased) compressors like Top-K — [`dcgd`](Self::dcgd) requires an
+    /// unbiased Q. With `C = Identity` (δ = 1) it reduces to exact DGD
+    /// with γ = 1/L.
+    pub fn dcgd_ef(p: &dyn Problem, c: impl Compressor + Clone + 'static, seed: u64) -> Self {
+        let n = p.n_workers();
+        let delta = c.delta().unwrap_or(0.0);
+        let ss = theory::ef_uplink(p, &vec![delta; n]);
+        let qs: Vec<Box<dyn Compressor>> = (0..n)
+            .map(|_| Box::new(c.clone()) as Box<dyn Compressor>)
+            .collect();
+        let rules = (0..n).map(|_| ShiftRule::Fixed).collect();
+        let shifts = vec![vec![0.0; p.dim()]; n];
+        Self::build("dcgd-ef", p, qs, rules, shifts, ss.gamma, seed).with_uplink_ef()
     }
 
     /// DCGD-SHIFT with arbitrary fixed shifts (Theorem 1).
@@ -314,6 +360,7 @@ impl DcgdShift {
                 r_bits: PayloadBitsCache::new(),
                 refreshed: false,
                 batch: Vec::new(),
+                ef: None,
             })
             .collect();
         // downlink compressor stream: worker streams are 1..=n, so n+1 —
@@ -352,6 +399,32 @@ impl DcgdShift {
     pub fn with_downlink(mut self, comp: Box<dyn Compressor>) -> Self {
         self.set_downlink(comp);
         self
+    }
+
+    /// Arm worker-side error feedback on the uplink (see the module doc);
+    /// the bit-identical mirror of
+    /// [`crate::coordinator::ClusterConfig::uplink_ef`]. Each worker's
+    /// Q-frame then ships `C_i(e_i + m_i)` from a fresh accumulator,
+    /// unlocking contractive (biased) per-worker compressors. Arm before
+    /// the first step: a mid-run arm starts from empty accumulators, which
+    /// the threaded cluster has no protocol for.
+    pub fn set_uplink_ef(&mut self) {
+        let d = self.x.len();
+        for w in &mut self.workers {
+            w.ef = Some(EfUplink::new(d));
+        }
+    }
+
+    /// Builder-style [`set_uplink_ef`](Self::set_uplink_ef).
+    pub fn with_uplink_ef(mut self) -> Self {
+        self.set_uplink_ef();
+        self
+    }
+
+    /// A worker's EF uplink accumulator `Σ (m − c)` (`None` on the exact
+    /// uplink). Tests compare this against the cluster's worker snapshots.
+    pub fn uplink_error(&self, worker: usize) -> Option<&[f64]> {
+        self.workers[worker].ef.as_ref().map(|ef| ef.error())
     }
 
     /// Batch `tau` local shifted sub-steps per communication round — the
@@ -404,6 +477,14 @@ impl DcgdShift {
         // resync overwrites the replica and flushes the accumulator
         self.x = x0;
         self.dl.resync(&self.x);
+        // the cluster's workers flush their EF uplink accumulators when
+        // the resync frame arrives; mirror that here (nothing stale is
+        // retried against the re-established state)
+        for w in &mut self.workers {
+            if let Some(ef) = &mut w.ef {
+                ef.flush();
+            }
+        }
     }
 
     pub fn set_gamma(&mut self, gamma: f64) {
@@ -462,9 +543,15 @@ impl Algorithm for DcgdShift {
                 // -------------------------------------------------- Fixed
                 ShiftRule::Fixed => {
                     sub_into(&w.grad, &w.h, &mut w.diff);
-                    w.q.compress_into(&mut w.rng, &w.diff, &mut w.q_pkt);
-                    w.q_pkt.quantize(self.prec);
-                    bits_up += w.q_bits.bits(&w.q_pkt, self.prec);
+                    let pkt = ef::compress_uplink(
+                        w.q.as_ref(),
+                        &mut w.rng,
+                        w.ef.as_mut(),
+                        &w.diff,
+                        self.prec,
+                        &mut w.q_pkt,
+                    );
+                    bits_up += w.q_bits.bits(pkt, self.prec);
                     // h unchanged
                 }
                 // --------------------------------------------------- Star
@@ -486,9 +573,15 @@ impl Algorithm for DcgdShift {
                     }
                     // m_i = Q_i(∇f_i − h_i^k)
                     sub_into(&w.grad, &w.h, &mut w.diff);
-                    w.q.compress_into(&mut w.rng, &w.diff, &mut w.q_pkt);
-                    w.q_pkt.quantize(self.prec);
-                    bits_up += w.q_bits.bits(&w.q_pkt, self.prec);
+                    let pkt = ef::compress_uplink(
+                        w.q.as_ref(),
+                        &mut w.rng,
+                        w.ef.as_mut(),
+                        &w.diff,
+                        self.prec,
+                        &mut w.q_pkt,
+                    );
+                    bits_up += w.q_bits.bits(pkt, self.prec);
                 }
                 // -------------------------------------------------- DIANA
                 ShiftRule::Diana { alpha, c } => {
@@ -501,23 +594,35 @@ impl Algorithm for DcgdShift {
                         bits_up += w.c_bits.bits(&w.c_pkt, self.prec);
                         w.c_pkt.add_scaled_into(-1.0, &mut w.diff);
                     }
-                    // m_i^k = Q_i(v − c)
-                    w.q.compress_into(&mut w.rng, &w.diff, &mut w.q_pkt);
-                    w.q_pkt.quantize(self.prec);
-                    bits_up += w.q_bits.bits(&w.q_pkt, self.prec);
+                    // m_i^k = Q_i(v − c)  (EF: C_i(e_i + v − c), same slot)
+                    let pkt = ef::compress_uplink(
+                        w.q.as_ref(),
+                        &mut w.rng,
+                        w.ef.as_mut(),
+                        &w.diff,
+                        self.prec,
+                        &mut w.q_pkt,
+                    );
+                    bits_up += w.q_bits.bits(pkt, self.prec);
                     // shift learning h_i += α(c + q), straight from the
                     // packets at O(nnz)
                     if c.is_some() {
                         w.c_pkt.add_scaled_into(*alpha, &mut w.h);
                     }
-                    w.q_pkt.add_scaled_into(*alpha, &mut w.h);
+                    pkt.add_scaled_into(*alpha, &mut w.h);
                 }
                 // --------------------------------------------- Rand-DIANA
                 ShiftRule::RandDiana { p: pr } => {
                     sub_into(&w.grad, &w.h, &mut w.diff);
-                    w.q.compress_into(&mut w.rng, &w.diff, &mut w.q_pkt);
-                    w.q_pkt.quantize(self.prec);
-                    bits_up += w.q_bits.bits(&w.q_pkt, self.prec);
+                    let pkt = ef::compress_uplink(
+                        w.q.as_ref(),
+                        &mut w.rng,
+                        w.ef.as_mut(),
+                        &w.diff,
+                        self.prec,
+                        &mut w.q_pkt,
+                    );
+                    bits_up += w.q_bits.bits(pkt, self.prec);
                     // w_i^{k+1} = x^k w.p. p — refresh ships a delta of the
                     // shift vs the master's replica: h_new = ∇f = h + diff,
                     // so only diff's support travels (sparse when x moved
@@ -542,24 +647,24 @@ impl Algorithm for DcgdShift {
         for w in self.workers.iter_mut() {
             match &w.rule {
                 ShiftRule::Fixed => {
-                    w.q_pkt.add_scaled_into(inv_n, &mut self.est);
+                    w.q_packet().add_scaled_into(inv_n, &mut self.est);
                 }
                 ShiftRule::Star { .. } => {
                     // same-round rebuilt shift, aggregated densely (STAR is
                     // the paper's "impractical but insightful" method)
                     axpy(inv_n, &w.h, &mut self.est);
-                    w.q_pkt.add_scaled_into(inv_n, &mut self.est);
+                    w.q_packet().add_scaled_into(inv_n, &mut self.est);
                 }
                 ShiftRule::Diana { alpha, c } => {
                     if c.is_some() {
                         w.c_pkt.add_scaled_into(inv_n, &mut self.est);
                         w.c_pkt.add_scaled_into(*alpha, &mut self.h_sum);
                     }
-                    w.q_pkt.add_scaled_into(inv_n, &mut self.est);
-                    w.q_pkt.add_scaled_into(*alpha, &mut self.h_sum);
+                    w.q_packet().add_scaled_into(inv_n, &mut self.est);
+                    w.q_packet().add_scaled_into(*alpha, &mut self.h_sum);
                 }
                 ShiftRule::RandDiana { .. } => {
-                    w.q_pkt.add_scaled_into(inv_n, &mut self.est);
+                    w.q_packet().add_scaled_into(inv_n, &mut self.est);
                     if w.refreshed {
                         // same packet the worker applied to its shift
                         w.refresh.packet().add_scaled_into(1.0, &mut self.h_sum);
@@ -613,8 +718,21 @@ impl DcgdShift {
             for t in 0..tau {
                 p.local_grad_into(wi, &self.x_loc, &mut w.grad);
                 sub_into(&w.grad, &w.h, &mut w.diff);
-                w.q.compress_into(&mut w.rng, &w.diff, &mut w.batch[t]);
-                w.batch[t].quantize(self.prec);
+                match w.ef.as_mut() {
+                    // per-sub-step EF fold, mirroring the threaded worker
+                    // op for op; the batch slot (this driver's stand-in
+                    // for the wire frame) receives a copy of the re-packed
+                    // c_t = C(e + m_t), already quantized
+                    Some(ef) => {
+                        let c =
+                            ef.fold_and_compress(w.q.as_ref(), &mut w.rng, &w.diff, self.prec);
+                        w.batch[t].copy_from(c);
+                    }
+                    None => {
+                        w.q.compress_into(&mut w.rng, &w.diff, &mut w.batch[t]);
+                        w.batch[t].quantize(self.prec);
+                    }
+                }
                 bits_up += w.q_bits.bits(&w.batch[t], self.prec);
                 // local step x̂ ← x̂ − γ(h + q_t), h as used this sub-step
                 axpy(-self.gamma, &w.h, &mut self.x_loc);

@@ -366,6 +366,37 @@ impl Packet {
         }
     }
 
+    /// Copy `src` into `self`, reusing the existing buffers when the
+    /// variants match (the recycled-scratch analog of `clone_from`; the
+    /// derived `Clone` would reallocate every call). Only the Sparse and
+    /// Dense arms are on hot paths ([`crate::wire::build_update_packet`]
+    /// outputs, staged per-sub-step in batched EF-uplink rounds); other
+    /// variants fall back to a plain clone.
+    pub fn copy_from(&mut self, src: &Packet) {
+        match src {
+            Packet::Sparse {
+                dim,
+                indices,
+                values,
+                scale,
+            } => {
+                let (d, i, v, s) = self.ensure_sparse();
+                *d = *dim;
+                *s = *scale;
+                i.clear();
+                i.extend_from_slice(indices);
+                v.clear();
+                v.extend_from_slice(values);
+            }
+            Packet::Dense(vals) => {
+                let v = self.ensure_dense();
+                v.clear();
+                v.extend_from_slice(vals);
+            }
+            other => *self = other.clone(),
+        }
+    }
+
     /// Number of coordinates this packet actually carries (what
     /// [`add_scaled_into`](Self::add_scaled_into) will touch) — `dim` for
     /// dense-shaped payloads, the support size for sparse ones.

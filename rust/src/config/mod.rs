@@ -22,7 +22,11 @@
 //! broadcast downlink, the optional error-fed-back downlink compressor
 //! (`top-k` with `q` = K/d or `k` = K, `identity` for the
 //! exact-equivalent EF path; omit the object — or set `"exact": true` —
-//! for today's exact delta frames), the local-step batching factor
+//! for today's exact delta frames), the error-fed-back **uplink** toggle
+//! (`uplink: {"error_feedback": true}` — workers ship `C(e + m)` from an
+//! accumulator, which is what makes a *biased* main compressor like
+//! `top-k` a valid choice; see the pairing matrix on
+//! [`ExperimentConfig::parse`]), the local-step batching factor
 //! (`local_steps` ≥ 1 sub-steps per communication round, batched into one
 //! uplink frame; requires the `dcgd` or plain `diana` algorithm when > 1)
 //! and the pipelined wall-clock pricing toggle (`pipeline`, affects the
@@ -31,6 +35,7 @@
 //! ```json
 //! { "cluster": {"prec": "f32", "resync_every": 1000, "local_steps": 8,
 //!               "pipeline": true,
+//!               "uplink": {"error_feedback": true},
 //!               "downlink": {"compressor": "top-k", "q": 0.005}} }
 //! ```
 
@@ -326,6 +331,50 @@ impl DownlinkSpec {
     }
 }
 
+/// The `"cluster.uplink"` object: whether workers run the error-fed-back
+/// (EF-BV-style) uplink — each ships `C_i(e_i + m_i)` from a worker-side
+/// accumulator instead of `Q_i(m_i)`, making contractive (biased)
+/// compressors valid on the worker → master path. See
+/// [`crate::ef::EfUplink`]; the algorithm × compressor pairing matrix is
+/// validated at parse time (see [`ExperimentConfig::parse`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum UplinkSpec {
+    /// exact uplink: workers ship `Q_i(m_i)` (the default; requires an
+    /// unbiased Q for every algorithm that compresses gradients)
+    #[default]
+    Exact,
+    /// error-fed-back uplink: workers ship `C_i(e_i + m_i)` and retry the
+    /// residual next round
+    ErrorFeedback,
+}
+
+impl UplinkSpec {
+    pub fn parse(j: &Json) -> Result<Self, ConfigError> {
+        if j.is_null() {
+            return Ok(UplinkSpec::Exact);
+        }
+        let exact = j.get("exact").as_bool();
+        let ef = j.get("error_feedback").as_bool();
+        match (exact, ef) {
+            (Some(true), Some(true)) => Err(bad(
+                "cluster.uplink: exact and error_feedback are mutually exclusive",
+            )),
+            (Some(false), Some(false)) => Err(bad(
+                "cluster.uplink: both modes negated — say which one you want \
+                 (exact: true or error_feedback: true)",
+            )),
+            (Some(false), None) => Err(bad(
+                "cluster.uplink: exact: false is ambiguous — say error_feedback: true|false",
+            )),
+            (Some(true), _) | (None, Some(false)) => Ok(UplinkSpec::Exact),
+            (_, Some(true)) => Ok(UplinkSpec::ErrorFeedback),
+            (None, None) => Err(bad(
+                "cluster.uplink needs error_feedback: true|false (or exact: true)",
+            )),
+        }
+    }
+}
+
 /// Coordinator-level knobs (the `"cluster"` JSON object, all optional).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ClusterSpec {
@@ -343,6 +392,8 @@ pub struct ClusterSpec {
     pub pipeline: bool,
     /// error-fed-back downlink compressor (default: exact delta frames)
     pub downlink: DownlinkSpec,
+    /// error-fed-back uplink toggle (default: exact `Q_i(m_i)` frames)
+    pub uplink: UplinkSpec,
 }
 
 impl Default for ClusterSpec {
@@ -353,6 +404,7 @@ impl Default for ClusterSpec {
             local_steps: 1,
             pipeline: false,
             downlink: DownlinkSpec::Exact,
+            uplink: UplinkSpec::Exact,
         }
     }
 }
@@ -398,12 +450,14 @@ impl ClusterSpec {
                 .ok_or_else(|| bad("cluster.pipeline must be a boolean"))?
         };
         let downlink = DownlinkSpec::parse(j.get("downlink"))?;
+        let uplink = UplinkSpec::parse(j.get("uplink"))?;
         Ok(Self {
             resync_every,
             prec,
             local_steps,
             pipeline,
             downlink,
+            uplink,
         })
     }
 }
@@ -444,37 +498,92 @@ impl AlgorithmSpec {
         }
     }
 
-    /// Build a ready-to-run algorithm instance. Panics on specs that need
-    /// an unbiased compressor if given a biased one (surface early).
+    /// Build a ready-to-run algorithm instance. `uplink_ef` arms the
+    /// error-fed-back uplink on the DCGD-SHIFT family (the single-process
+    /// mirror of `cluster.uplink`). Invalid algorithm × compressor ×
+    /// uplink pairings return a descriptive [`ConfigError`] — the matrix
+    /// [`ExperimentConfig::parse`] already checks up front, kept here as a
+    /// second line of defense for programmatic callers (this used to be a
+    /// `panic!` deep inside the compressor dispatch).
     pub fn build(
         &self,
         p: &dyn Problem,
         comp: &CompressorSpec,
         seed: u64,
-    ) -> Box<dyn Algorithm> {
+        uplink_ef: bool,
+    ) -> Result<Box<dyn Algorithm>, ConfigError> {
         let d = p.dim();
         macro_rules! with_q {
             ($ctor:expr) => {
                 match comp {
-                    CompressorSpec::Identity => $ctor(Identity::new(d)),
-                    CompressorSpec::RandK { q } => $ctor(RandK::with_q(d, *q)),
+                    CompressorSpec::Identity => Ok($ctor(Identity::new(d))),
+                    CompressorSpec::RandK { q } => Ok($ctor(RandK::with_q(d, *q))),
                     CompressorSpec::NaturalDithering { s, p: np } => {
-                        $ctor(NaturalDithering::new(d, *s, *np))
+                        Ok($ctor(NaturalDithering::new(d, *s, *np)))
                     }
                     CompressorSpec::StandardDithering { s } => {
-                        $ctor(StandardDithering::new(d, *s))
+                        Ok($ctor(StandardDithering::new(d, *s)))
                     }
-                    CompressorSpec::NaturalCompression => $ctor(NaturalCompression::new(d)),
-                    CompressorSpec::Bernoulli { p: bp } => $ctor(BernoulliP::new(d, *bp)),
-                    CompressorSpec::Ternary => $ctor(Ternary::new(d)),
-                    CompressorSpec::TopK { .. } => {
-                        panic!("{self:?} needs an unbiased Q; top-k is biased")
-                    }
+                    CompressorSpec::NaturalCompression => Ok($ctor(NaturalCompression::new(d))),
+                    CompressorSpec::Bernoulli { p: bp } => Ok($ctor(BernoulliP::new(d, *bp))),
+                    CompressorSpec::Ternary => Ok($ctor(Ternary::new(d))),
+                    CompressorSpec::TopK { .. } => Err(bad(format!(
+                        "{self:?} needs an unbiased Q on the exact uplink; top-k is \
+                         biased — arm cluster.uplink {{\"error_feedback\": true}} with \
+                         the dcgd algorithm to use contractive compressors"
+                    ))),
                 }
             };
         }
+        // the EF uplink is a DCGD-SHIFT-family construction; algorithms
+        // without a worker-accumulator mapping reject it up front
+        if uplink_ef
+            && !matches!(
+                self,
+                AlgorithmSpec::Dcgd
+                    | AlgorithmSpec::Diana { with_top_k_c: None }
+                    | AlgorithmSpec::RandDiana { .. }
+            )
+        {
+            return Err(bad(format!(
+                "cluster.uplink error feedback supports dcgd, plain diana and \
+                 rand-diana; {self:?} has no EF-uplink mapping"
+            )));
+        }
         match self {
-            AlgorithmSpec::Dgd => Box::new(Gd::new(p, seed)),
+            AlgorithmSpec::Dgd => Ok(Box::new(Gd::new(p, seed))),
+            AlgorithmSpec::Dcgd if uplink_ef => {
+                // EF unlocks contractive compressors for plain DCGD: every
+                // in-tree operator reports a contraction δ, and γ comes
+                // from the EF-BV rule inside DcgdShift::dcgd_ef
+                Ok(match comp {
+                    CompressorSpec::Identity => {
+                        Box::new(DcgdShift::dcgd_ef(p, Identity::new(d), seed))
+                            as Box<dyn Algorithm>
+                    }
+                    CompressorSpec::RandK { q } => {
+                        Box::new(DcgdShift::dcgd_ef(p, RandK::with_q(d, *q), seed))
+                    }
+                    CompressorSpec::TopK { q } => {
+                        Box::new(DcgdShift::dcgd_ef(p, TopK::with_q(d, *q), seed))
+                    }
+                    CompressorSpec::NaturalDithering { s, p: np } => {
+                        Box::new(DcgdShift::dcgd_ef(p, NaturalDithering::new(d, *s, *np), seed))
+                    }
+                    CompressorSpec::StandardDithering { s } => {
+                        Box::new(DcgdShift::dcgd_ef(p, StandardDithering::new(d, *s), seed))
+                    }
+                    CompressorSpec::NaturalCompression => {
+                        Box::new(DcgdShift::dcgd_ef(p, NaturalCompression::new(d), seed))
+                    }
+                    CompressorSpec::Bernoulli { p: bp } => {
+                        Box::new(DcgdShift::dcgd_ef(p, BernoulliP::new(d, *bp), seed))
+                    }
+                    CompressorSpec::Ternary => {
+                        Box::new(DcgdShift::dcgd_ef(p, Ternary::new(d), seed))
+                    }
+                })
+            }
             AlgorithmSpec::Dcgd => {
                 with_q!(|q| Box::new(DcgdShift::dcgd(p, q, seed)) as Box<dyn Algorithm>)
             }
@@ -484,18 +593,33 @@ impl AlgorithmSpec {
             AlgorithmSpec::Diana { with_top_k_c } => {
                 let c: Option<Box<dyn Compressor>> = with_top_k_c
                     .map(|cq| Box::new(TopK::with_q(d, cq)) as Box<dyn Compressor>);
-                with_q!(|q| Box::new(DcgdShift::diana(p, q, c.clone(), seed))
-                    as Box<dyn Algorithm>)
+                with_q!(|q| {
+                    let mut alg = DcgdShift::diana(p, q, c.clone(), seed);
+                    if uplink_ef {
+                        alg.set_uplink_ef();
+                    }
+                    Box::new(alg) as Box<dyn Algorithm>
+                })
             }
             AlgorithmSpec::RandDiana { p: pr, m_factor } => {
-                let m_override = m_factor.map(|b| {
-                    let omega = comp.omega(d).expect("rand-diana needs unbiased Q");
-                    let n = p.n_workers() as f64;
-                    let prr = pr.unwrap_or(1.0 / (omega + 1.0));
-                    b * 2.0 * omega / (n * prr)
-                });
-                with_q!(|q| Box::new(DcgdShift::rand_diana_with_m(p, q, *pr, m_override, seed))
-                    as Box<dyn Algorithm>)
+                let m_override = match m_factor {
+                    Some(b) => {
+                        let omega = comp
+                            .omega(d)
+                            .ok_or_else(|| bad("rand-diana m_factor needs an unbiased Q"))?;
+                        let n = p.n_workers() as f64;
+                        let prr = pr.unwrap_or(1.0 / (omega + 1.0));
+                        Some(b * 2.0 * omega / (n * prr))
+                    }
+                    None => None,
+                };
+                with_q!(|q| {
+                    let mut alg = DcgdShift::rand_diana_with_m(p, q, *pr, m_override, seed);
+                    if uplink_ef {
+                        alg.set_uplink_ef();
+                    }
+                    Box::new(alg) as Box<dyn Algorithm>
+                })
             }
             AlgorithmSpec::Gdci => {
                 with_q!(|q| Box::new(Gdci::new(p, q, seed)) as Box<dyn Algorithm>)
@@ -535,14 +659,70 @@ impl ExperimentConfig {
         };
         let cluster = ClusterSpec::parse(j.get("cluster"))?;
         let seed = j.get("seed").as_f64().unwrap_or(42.0) as u64;
-        Ok(Self {
+        let cfg = Self {
             problem,
             algorithm,
             compressor,
             run,
             cluster,
             seed,
-        })
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// The algorithm × compressor × uplink pairing matrix, checked in one
+    /// place at parse time so an invalid configuration is a descriptive
+    /// [`ConfigError`] up front — not a build-time panic deep inside the
+    /// algorithm factory:
+    ///
+    /// | `cluster.uplink`     | unbiased Q                    | biased (top-k)       |
+    /// |----------------------|-------------------------------|----------------------|
+    /// | exact (default)      | every algorithm               | dgd only             |
+    /// | error feedback       | dcgd, plain diana, rand-diana | dcgd (γ from EF-BV)  |
+    ///
+    /// The EF row is the point of the uplink section: worker-side error
+    /// feedback makes contractive compressors sound on the worker → master
+    /// path ([`crate::ef::EfUplink`]). DIANA-family methods keep their
+    /// ω-based step rules, so they stay unbiased-only even under EF.
+    fn validate(&self) -> Result<(), ConfigError> {
+        let biased = matches!(self.compressor, CompressorSpec::TopK { .. });
+        match self.cluster.uplink {
+            UplinkSpec::Exact => {
+                if biased && !matches!(self.algorithm, AlgorithmSpec::Dgd) {
+                    return Err(bad(format!(
+                        "algorithm {:?} needs an unbiased Q on the exact uplink; top-k \
+                         is biased. Arm the error-fed-back uplink (cluster.uplink: \
+                         {{\"error_feedback\": true}}, dcgd algorithm) to use \
+                         contractive compressors",
+                        self.algorithm
+                    )));
+                }
+            }
+            UplinkSpec::ErrorFeedback => match (&self.algorithm, biased) {
+                (AlgorithmSpec::Dcgd, _) => {}
+                (AlgorithmSpec::Diana { with_top_k_c: None }, false) => {}
+                (AlgorithmSpec::RandDiana { .. }, false) => {}
+                (
+                    AlgorithmSpec::Diana { with_top_k_c: None }
+                    | AlgorithmSpec::RandDiana { .. },
+                    true,
+                ) => {
+                    return Err(bad(format!(
+                        "{:?} with a biased Q has no step-size rule (α and M need ω); \
+                         use the dcgd algorithm for the contractive EF uplink",
+                        self.algorithm
+                    )));
+                }
+                (other, _) => {
+                    return Err(bad(format!(
+                        "cluster.uplink error feedback supports dcgd, plain diana and \
+                         rand-diana; {other:?} has no EF-uplink mapping"
+                    )));
+                }
+            },
+        }
+        Ok(())
     }
 
     pub fn load(path: &str) -> Result<Self, ConfigError> {
@@ -551,10 +731,17 @@ impl ExperimentConfig {
         Self::parse(&text)
     }
 
-    /// Build problem + algorithm and run to completion.
+    /// Build problem + algorithm and run to completion. The cluster's
+    /// uplink mode applies to the single-process driver too (the EF-uplink
+    /// mirror), so one config means one method across drivers.
     pub fn execute(&self) -> Result<crate::metrics::Trace, ConfigError> {
         let problem = self.problem.build()?;
-        let mut alg = self.algorithm.build(problem.as_ref(), &self.compressor, self.seed);
+        let mut alg = self.algorithm.build(
+            problem.as_ref(),
+            &self.compressor,
+            self.seed,
+            self.cluster.uplink == UplinkSpec::ErrorFeedback,
+        )?;
         Ok(alg.run(problem.as_ref(), &self.run))
     }
 
@@ -566,16 +753,36 @@ impl ExperimentConfig {
         let problem: Arc<dyn Problem> = Arc::from(self.problem.build()?);
         let d = problem.dim();
         let n = problem.n_workers();
-        let omega = self
-            .compressor
-            .omega(d)
-            .ok_or_else(|| bad("distributed runs need an unbiased compressor"))?;
+        let ef = self.cluster.uplink == UplinkSpec::ErrorFeedback;
+        // a biased compressor is only reachable here with the EF uplink
+        // armed (parse validates the pairing matrix); every other mapping
+        // needs ω
+        let omega = self.compressor.omega(d);
+        let need_omega = || {
+            omega.ok_or_else(|| {
+                bad("distributed runs need an unbiased compressor (or the error-fed-back uplink)")
+            })
+        };
         let (method, gamma) = match &self.algorithm {
+            AlgorithmSpec::Dcgd if ef => {
+                // EF-BV step from the compressor's contraction δ — the
+                // same γ DcgdShift::dcgd_ef derives, so the config-built
+                // cluster and single-process mirror agree bit for bit
+                let delta = self
+                    .compressor
+                    .build(d)
+                    .delta()
+                    .filter(|dl| *dl > 0.0)
+                    .ok_or_else(|| bad("the EF uplink needs a contractive compressor (δ > 0)"))?;
+                let ss = theory::ef_uplink(problem.as_ref(), &vec![delta; n]);
+                (MethodKind::Fixed, ss.gamma)
+            }
             AlgorithmSpec::Dcgd => {
-                let ss = theory::dcgd_fixed(problem.as_ref(), &vec![omega; n]);
+                let ss = theory::dcgd_fixed(problem.as_ref(), &vec![need_omega()?; n]);
                 (MethodKind::Fixed, ss.gamma)
             }
             AlgorithmSpec::Diana { with_top_k_c: None } => {
+                let omega = need_omega()?;
                 let ss = theory::diana(problem.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
                 (
                     MethodKind::Diana {
@@ -586,6 +793,7 @@ impl ExperimentConfig {
                 )
             }
             AlgorithmSpec::RandDiana { p, .. } => {
+                let omega = need_omega()?;
                 let pr = p.unwrap_or_else(|| theory::rand_diana_default_p(omega));
                 let ss = theory::rand_diana(problem.as_ref(), omega, &vec![pr; n], None);
                 (MethodKind::RandDiana { p: pr }, ss.gamma)
@@ -623,6 +831,7 @@ impl ExperimentConfig {
                 local_steps: self.cluster.local_steps,
                 pipeline: self.cluster.pipeline,
                 downlink: self.cluster.downlink.build(d),
+                uplink_ef: ef,
             },
         );
         Ok((problem, runner))
@@ -817,7 +1026,8 @@ mod tests {
         let problem = cfg.problem.build().unwrap();
         let mut single = cfg
             .algorithm
-            .build(problem.as_ref(), &cfg.compressor, cfg.seed);
+            .build(problem.as_ref(), &cfg.compressor, cfg.seed, false)
+            .unwrap();
         let (p, mut dist) = cfg.build_distributed().unwrap();
         for k in 0..40 {
             single.step(problem.as_ref());
@@ -831,9 +1041,126 @@ mod tests {
         let text = SAMPLE.replace("rand-diana", "gdci");
         let cfg = ExperimentConfig::parse(&text).unwrap();
         assert!(cfg.build_distributed().is_err());
+    }
+
+    #[test]
+    fn biased_q_on_exact_uplink_is_a_parse_error_not_a_panic() {
+        // the former behaviour was a panic at *build* time deep inside the
+        // compressor dispatch; the pairing matrix now rejects the config
+        // at parse with a descriptive message
         let text = SAMPLE.replace("rand-k", "top-k");
-        let cfg = ExperimentConfig::parse(&text).unwrap();
-        assert!(cfg.build_distributed().is_err());
+        let err = ExperimentConfig::parse(&text).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unbiased"), "unhelpful message: {msg}");
+        assert!(msg.contains("error_feedback"), "should point at the EF uplink: {msg}");
+        // the factory second line of defense errors too (no panic) for
+        // programmatic callers that skip parse
+        let cfg = ExperimentConfig::parse(SAMPLE).unwrap();
+        let problem = cfg.problem.build().unwrap();
+        let biased = CompressorSpec::TopK { q: 0.2 };
+        assert!(cfg
+            .algorithm
+            .build(problem.as_ref(), &biased, 1, false)
+            .is_err());
+    }
+
+    #[test]
+    fn uplink_spec_parses_and_rejects() {
+        let with = |uplink: &str| {
+            format!(
+                r#"{{
+                    "problem": {{"kind": "quadratic", "d": 10, "workers": 3, "seed": 1}},
+                    "algorithm": {{"kind": "dcgd"}},
+                    "compressor": {{"kind": "rand-k", "q": 0.3}},
+                    "cluster": {{"uplink": {uplink}}}
+                }}"#
+            )
+        };
+        let cfg = ExperimentConfig::parse(&with(r#"{"error_feedback": true}"#)).unwrap();
+        assert_eq!(cfg.cluster.uplink, UplinkSpec::ErrorFeedback);
+        let cfg = ExperimentConfig::parse(&with(r#"{"exact": true}"#)).unwrap();
+        assert_eq!(cfg.cluster.uplink, UplinkSpec::Exact);
+        let cfg = ExperimentConfig::parse(&with(r#"{"error_feedback": false}"#)).unwrap();
+        assert_eq!(cfg.cluster.uplink, UplinkSpec::Exact);
+        // defaults to exact when the object is absent
+        let cfg = ExperimentConfig::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.cluster.uplink, UplinkSpec::Exact);
+        // rejections: empty object, contradictory flags, ambiguous or
+        // double negation
+        assert!(ExperimentConfig::parse(&with("{}")).is_err());
+        assert!(
+            ExperimentConfig::parse(&with(r#"{"exact": true, "error_feedback": true}"#)).is_err()
+        );
+        assert!(ExperimentConfig::parse(&with(r#"{"exact": false}"#)).is_err());
+        assert!(
+            ExperimentConfig::parse(&with(r#"{"exact": false, "error_feedback": false}"#))
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn ef_uplink_pairing_matrix() {
+        let cfg_text = |alg: &str, comp: &str| {
+            format!(
+                r#"{{
+                    "problem": {{"kind": "quadratic", "d": 12, "workers": 3, "seed": 2}},
+                    "algorithm": {{"kind": "{alg}"}},
+                    "compressor": {comp},
+                    "cluster": {{"uplink": {{"error_feedback": true}}}}
+                }}"#
+            )
+        };
+        let randk = r#"{"kind": "rand-k", "q": 0.3}"#;
+        let topk = r#"{"kind": "top-k", "q": 0.3}"#;
+        // EF + dcgd: any compressor, including the biased one
+        assert!(ExperimentConfig::parse(&cfg_text("dcgd", randk)).is_ok());
+        assert!(ExperimentConfig::parse(&cfg_text("dcgd", topk)).is_ok());
+        // EF + diana/rand-diana: unbiased only (α and M need ω)
+        assert!(ExperimentConfig::parse(&cfg_text("diana", randk)).is_ok());
+        assert!(ExperimentConfig::parse(&cfg_text("rand-diana", randk)).is_ok());
+        assert!(ExperimentConfig::parse(&cfg_text("diana", topk)).is_err());
+        assert!(ExperimentConfig::parse(&cfg_text("rand-diana", topk)).is_err());
+        // EF + algorithms without an accumulator mapping
+        for alg in ["gdci", "vr-gdci", "star", "dgd"] {
+            assert!(
+                ExperimentConfig::parse(&cfg_text(alg, randk)).is_err(),
+                "{alg} must reject the EF uplink"
+            );
+        }
+    }
+
+    #[test]
+    fn ef_uplink_topk_config_builds_and_matches_across_drivers() {
+        // the headline unlock: dcgd + top-k, EF uplink armed — parses,
+        // executes, and the config-built cluster tracks the config-built
+        // single-process mirror bit for bit
+        let text = r#"{
+            "problem": {"kind": "quadratic", "d": 12, "workers": 3, "mu": 1.0, "l": 10.0, "seed": 5},
+            "algorithm": {"kind": "dcgd"},
+            "compressor": {"kind": "top-k", "q": 0.25},
+            "run": {"max_rounds": 400, "tol": 1e-8},
+            "cluster": {"uplink": {"error_feedback": true}},
+            "seed": 5
+        }"#;
+        let cfg = ExperimentConfig::parse(text).unwrap();
+        let problem = cfg.problem.build().unwrap();
+        let mut single = cfg
+            .algorithm
+            .build(problem.as_ref(), &cfg.compressor, cfg.seed, true)
+            .unwrap();
+        let (p, mut dist) = cfg.build_distributed().unwrap();
+        for k in 0..40 {
+            single.step(problem.as_ref());
+            dist.step(p.as_ref());
+            assert_eq!(single.x(), dist.x(), "diverged at round {k}");
+        }
+        // and the whole config executes end to end (EF keeps Top-K stable)
+        let trace = cfg.execute().unwrap();
+        assert!(
+            !trace.diverged,
+            "EF-TopK run diverged: err {:e}",
+            trace.final_relative_error()
+        );
     }
 
     #[test]

@@ -24,5 +24,5 @@
 pub mod protocol;
 pub mod runner;
 
-pub use protocol::{FrameSet, MethodKind, WorkerCommand, WorkerSnapshot, WorkerUpdate};
+pub use protocol::{FrameSet, MethodKind, WorkerCommand, WorkerFailure, WorkerSnapshot, WorkerUpdate};
 pub use runner::{ClusterConfig, DistributedRunner};

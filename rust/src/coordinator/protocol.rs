@@ -58,7 +58,46 @@ pub struct WorkerSnapshot {
     pub h: Vec<f64>,
     /// the worker's local replica of the broadcast iterate
     pub x_replica: Vec<f64>,
+    /// the EF uplink's error accumulator `Σ (m − c)` (`None` when the
+    /// exact uplink is running)
+    pub uplink_error: Option<Vec<f64>>,
 }
+
+/// A fatal worker-side protocol failure (malformed or mis-kinded downlink
+/// frame), reported through [`WorkerUpdate::failure`] so the master can
+/// fail fast with full context — round and worker id — instead of
+/// deadlocking on a reply that will never come. The worker thread exits
+/// after sending it; the cluster is unrecoverable and must be dropped.
+#[derive(Clone, Debug)]
+pub struct WorkerFailure {
+    /// failing worker id, or [`WorkerFailure::NO_WORKER`] when the
+    /// failure cannot be attributed to one worker (every thread gone)
+    pub worker: usize,
+    pub round: usize,
+    pub detail: String,
+}
+
+impl WorkerFailure {
+    /// Sentinel `worker` value for cluster-wide failures that no single
+    /// worker owns; [`Display`](std::fmt::Display) omits the worker id.
+    pub const NO_WORKER: usize = usize::MAX;
+}
+
+impl std::fmt::Display for WorkerFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.worker == Self::NO_WORKER {
+            write!(f, "cluster failed at round {}: {}", self.round, self.detail)
+        } else {
+            write!(
+                f,
+                "worker {} failed at round {}: {}",
+                self.worker, self.round, self.detail
+            )
+        }
+    }
+}
+
+impl std::error::Error for WorkerFailure {}
 
 /// The encoded frames one worker uploads in one round.
 #[derive(Debug, Default)]
@@ -108,4 +147,8 @@ pub struct WorkerUpdate {
     /// ([`crate::net::NetworkAccountant::round_staged`] /
     /// [`crate::net::NetworkAccountant::round_pipelined`])
     pub compute_secs: f64,
+    /// set when the worker hit a fatal protocol error this round (all
+    /// other fields are then zero/default); the sender thread exits right
+    /// after this update
+    pub failure: Option<WorkerFailure>,
 }

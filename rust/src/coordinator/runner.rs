@@ -38,6 +38,36 @@
 //! running at the same precision. (Encoding a quantized packet is
 //! lossless, so the wire bytes are unchanged.)
 //!
+//! # Error-fed-back uplink (EF-BV workers)
+//!
+//! [`ClusterConfig::uplink_ef`] arms the uplink twin of the EF downlink:
+//! each worker keeps an accumulator `e_i` ([`crate::ef::EfUplink`]), ships
+//! `c_i = C_i(e_i + m_i)` where `m_i = ∇f_i(x̂) − h_i` is the shifted
+//! message it would normally compress, and retries the residual
+//! `e_i ← e_i + m_i − c_i` next round — so **contractive** compressors
+//! (Top-K, or any `C ∈ B(δ)`) become valid on the worker → master path:
+//! the per-round bias is corrected over rounds instead of accumulating in
+//! the trajectory, and `bits_up` stays O(K). The master needs no new
+//! state: it folds the wire packets exactly as before (DIANA shift
+//! learning included — both ends apply the identical `c_i`), and the
+//! packets are pre-quantized by the EF re-pack, so the f32 shift-replica
+//! symmetry above carries over unchanged. A dense resync flushes every
+//! worker accumulator (nothing stale is retried against re-established
+//! state); [`crate::algorithms::DcgdShift`] mirrors the whole construction
+//! op for op (`set_uplink_ef`), including the per-sub-step fold when
+//! composed with `local_steps` batching. Step sizes for the contractive
+//! regime come from [`crate::theory::ef_uplink`].
+//!
+//! # Protocol failures fail fast
+//!
+//! A malformed or mis-kinded downlink frame used to abort the worker
+//! thread mid-round, deadlocking the master on a gather that would never
+//! complete. Workers now report a structured [`WorkerFailure`] (round +
+//! worker id + detail) through [`WorkerUpdate::failure`] and exit;
+//! [`DistributedRunner::try_step`] surfaces it as an `Err` (the
+//! [`Algorithm::step`] wrapper panics with the same context). After a
+//! failure the cluster is unrecoverable and must be dropped.
+//!
 //! # Zero-allocation round pipeline
 //!
 //! Steady-state rounds recycle every buffer in the system; after warm-up
@@ -104,9 +134,10 @@ use std::thread::JoinHandle;
 use crate::algorithms::{Algorithm, StepStats};
 use crate::compressors::{Compressor, Packet, PayloadBitsCache, ValPrec};
 use crate::coordinator::protocol::{
-    FrameSet, MethodKind, WorkerCommand, WorkerSnapshot, WorkerUpdate,
+    FrameSet, MethodKind, WorkerCommand, WorkerFailure, WorkerSnapshot, WorkerUpdate,
 };
 use crate::downlink::DownlinkState;
+use crate::ef::{self, EfUplink};
 use crate::linalg::{ax_into, axpy, sub_into, zero};
 use crate::net::{LinkModel, NetworkAccountant};
 use crate::problems::Problem;
@@ -138,6 +169,25 @@ pub struct ClusterConfig {
     /// retried next round — see [`crate::downlink::EfDownlink`]. Identity
     /// reproduces the exact path bit for bit.
     pub downlink: Option<Box<dyn Compressor>>,
+    /// arm worker-side error feedback on the uplink: workers ship
+    /// `C_i(e_i + m_i)` from an accumulator instead of `Q_i(m_i)`,
+    /// unlocking contractive (biased) per-worker compressors — see the
+    /// module doc. With `Identity` compressors and f64 wire precision the
+    /// path is bit-identical to the exact uplink (`e_i` stays exactly
+    /// zero); under f32 even Identity leaves the quantization residual
+    /// `m − quantize(m)` in the accumulator and retries it, which the
+    /// exact path cannot — a (tiny, corrective) trajectory difference.
+    ///
+    /// Interaction with [`ClusterConfig::resync_every`]: scheduled dense
+    /// resyncs flush every worker accumulator, dropping pending
+    /// residuals. Like the EF *downlink* under periodic resync, this is a
+    /// runner-only operational reset that the single-process
+    /// [`crate::algorithms::DcgdShift`] mirror does not replay (it has no
+    /// periodic-resync path) — combine `resync_every > 0` with EF and the
+    /// two drivers legitimately diverge from the first scheduled resync
+    /// on. The bit-identity guarantees hold for `resync_every = 0` plus
+    /// `set_x0`-forced resyncs, which both drivers mirror.
+    pub uplink_ef: bool,
 }
 
 struct WorkerThread {
@@ -221,6 +271,8 @@ struct WorkerCfg {
     gamma: f64,
     /// local sub-steps per round (τ; 1 = per-round protocol)
     local_steps: usize,
+    /// worker-side error feedback on the uplink (see the module doc)
+    uplink_ef: bool,
 }
 
 /// Worker-side loop: one thread per worker.
@@ -251,8 +303,11 @@ fn worker_loop(
         prec,
         gamma,
         local_steps,
+        uplink_ef,
     } = cfg;
     let d = problem.dim();
+    // worker-side EF uplink accumulator (None = exact uplink)
+    let mut uplink = if uplink_ef { Some(EfUplink::new(d)) } else { None };
     // local replica of the broadcast iterate (bootstrapped by the round-0
     // resync frame, then maintained by delta application)
     let mut x = vec![0.0; d];
@@ -283,6 +338,7 @@ fn worker_loop(
                     worker: wi,
                     h: h.clone(),
                     x_replica: x.clone(),
+                    uplink_error: uplink.as_ref().map(|u| u.error().to_vec()),
                 });
                 continue;
             }
@@ -293,17 +349,55 @@ fn worker_loop(
         let t0 = std::time::Instant::now();
         // apply the downlink frame to the replica, then release the shared
         // broadcast buffer before the heavy work — the master re-encodes
-        // into it once every worker has dropped its handle
-        match wire::decode_down_into(&down, &mut down_pkt).expect("malformed downlink frame") {
-            DownKind::Resync => {
-                let Packet::Dense(vals) = &down_pkt else {
-                    panic!("resync frame must be dense");
-                };
-                x.copy_from_slice(vals);
+        // into it once every worker has dropped its handle. A decode or
+        // framing defect is a fatal protocol error: report it with round +
+        // worker id through the update channel and exit, so the master
+        // fails fast instead of deadlocking on a gather that will never
+        // complete.
+        let defect: Option<String> = match wire::decode_down_into(&down, &mut down_pkt) {
+            Err(e) => Some(format!("malformed downlink frame: {e}")),
+            Ok(_) if down_pkt.dim() != d => Some(format!(
+                "downlink frame dimension mismatch: frame carries {}, replica is {d}",
+                down_pkt.dim()
+            )),
+            Ok(DownKind::Resync) => {
+                if let Packet::Dense(vals) = &down_pkt {
+                    x.copy_from_slice(vals);
+                    // a resync re-establishes exact state on both ends:
+                    // nothing stale may be retried against it, so the EF
+                    // uplink accumulator flushes too (mirrored by
+                    // DcgdShift::set_x0)
+                    if let Some(u) = uplink.as_mut() {
+                        u.flush();
+                    }
+                    None
+                } else {
+                    Some("resync frame must be dense".into())
+                }
             }
             // exact and error-fed-back deltas apply identically; the EF
             // residual is the master's business, not the worker's
-            DownKind::Delta | DownKind::EfDelta => down_pkt.add_scaled_into(1.0, &mut x),
+            Ok(DownKind::Delta | DownKind::EfDelta) => {
+                down_pkt.add_scaled_into(1.0, &mut x);
+                None
+            }
+        };
+        if let Some(detail) = defect {
+            let _ = up_tx.send(WorkerUpdate {
+                worker: wi,
+                k,
+                frames,
+                payload_bits: 0,
+                refresh_bits: 0,
+                wire_bytes: 0,
+                compute_secs: 0.0,
+                failure: Some(WorkerFailure {
+                    worker: wi,
+                    round: k,
+                    detail,
+                }),
+            });
+            break;
         }
         drop(down);
         // reclaim the optional buffers so this round can reuse them even if
@@ -332,15 +426,24 @@ fn worker_loop(
             for _ in 0..local_steps {
                 problem.local_grad_into(wi, &x_loc, &mut grad);
                 sub_into(&grad, &h, &mut diff);
-                q.compress_into(&mut rng, &diff, &mut q_pkt);
-                q_pkt.quantize(prec);
-                payload_bits += q_bits.bits(&q_pkt, prec);
-                wire::append_batch_packet(&q_pkt, prec, &mut frames.q_frame);
+                // per-sub-step EF fold when the EF uplink is armed: each
+                // sub-step's shifted message goes through the accumulator
+                // and the batch frame carries the τ compressed c_t packets
+                let pkt = ef::compress_uplink(
+                    q.as_ref(),
+                    &mut rng,
+                    uplink.as_mut(),
+                    &diff,
+                    prec,
+                    &mut q_pkt,
+                );
+                payload_bits += q_bits.bits(pkt, prec);
+                wire::append_batch_packet(pkt, prec, &mut frames.q_frame);
                 axpy(-gamma, &h, &mut x_loc);
-                q_pkt.add_scaled_into(-gamma, &mut x_loc);
+                pkt.add_scaled_into(-gamma, &mut x_loc);
                 match method {
                     MethodKind::Fixed => {}
-                    MethodKind::Diana { alpha, .. } => q_pkt.add_scaled_into(alpha, &mut h),
+                    MethodKind::Diana { alpha, .. } => pkt.add_scaled_into(alpha, &mut h),
                     _ => unreachable!("local_steps > 1 is validated at construction"),
                 }
             }
@@ -354,6 +457,7 @@ fn worker_loop(
                     refresh_bits,
                     wire_bytes,
                     compute_secs: t0.elapsed().as_secs_f64(),
+                    failure: None,
                 })
                 .is_err()
             {
@@ -373,10 +477,10 @@ fn worker_loop(
         match method {
             MethodKind::Fixed => {
                 sub_into(&grad, &h, &mut diff);
-                q.compress_into(&mut rng, &diff, &mut q_pkt);
-                q_pkt.quantize(prec);
-                payload_bits += q_bits.bits(&q_pkt, prec);
-                wire::encode_into(&q_pkt, prec, &mut frames.q_frame);
+                let pkt =
+                    ef::compress_uplink(q.as_ref(), &mut rng, uplink.as_mut(), &diff, prec, &mut q_pkt);
+                payload_bits += q_bits.bits(pkt, prec);
+                wire::encode_into(pkt, prec, &mut frames.q_frame);
             }
             MethodKind::Star { with_c } => {
                 let gs = problem.grad_star(wi);
@@ -395,10 +499,10 @@ fn worker_loop(
                     h.copy_from_slice(gs);
                 }
                 sub_into(&grad, &h, &mut diff);
-                q.compress_into(&mut rng, &diff, &mut q_pkt);
-                q_pkt.quantize(prec);
-                payload_bits += q_bits.bits(&q_pkt, prec);
-                wire::encode_into(&q_pkt, prec, &mut frames.q_frame);
+                let pkt =
+                    ef::compress_uplink(q.as_ref(), &mut rng, uplink.as_mut(), &diff, prec, &mut q_pkt);
+                payload_bits += q_bits.bits(pkt, prec);
+                wire::encode_into(pkt, prec, &mut frames.q_frame);
             }
             MethodKind::Diana { alpha, with_c } => {
                 sub_into(&grad, &h, &mut diff);
@@ -412,23 +516,24 @@ fn worker_loop(
                     wire::encode_into(&c_pkt, prec, &mut c_buf);
                     frames.c_frame = Some(std::mem::take(&mut c_buf));
                 }
-                q.compress_into(&mut rng, &diff, &mut q_pkt);
-                q_pkt.quantize(prec);
-                payload_bits += q_bits.bits(&q_pkt, prec);
+                let pkt =
+                    ef::compress_uplink(q.as_ref(), &mut rng, uplink.as_mut(), &diff, prec, &mut q_pkt);
+                payload_bits += q_bits.bits(pkt, prec);
                 // shift learning h += α(c + q), straight from the packets —
                 // the master applies the identical update to its replica
+                // (on the EF path c is the wire packet C(e + v), same deal)
                 if with_c {
                     c_pkt.add_scaled_into(alpha, &mut h);
                 }
-                q_pkt.add_scaled_into(alpha, &mut h);
-                wire::encode_into(&q_pkt, prec, &mut frames.q_frame);
+                pkt.add_scaled_into(alpha, &mut h);
+                wire::encode_into(pkt, prec, &mut frames.q_frame);
             }
             MethodKind::RandDiana { p } => {
                 sub_into(&grad, &h, &mut diff);
-                q.compress_into(&mut rng, &diff, &mut q_pkt);
-                q_pkt.quantize(prec);
-                payload_bits += q_bits.bits(&q_pkt, prec);
-                wire::encode_into(&q_pkt, prec, &mut frames.q_frame);
+                let pkt =
+                    ef::compress_uplink(q.as_ref(), &mut rng, uplink.as_mut(), &diff, prec, &mut q_pkt);
+                payload_bits += q_bits.bits(pkt, prec);
+                wire::encode_into(pkt, prec, &mut frames.q_frame);
                 if rng.bernoulli(p) {
                     // Shift refresh as a delta vs the master's replica:
                     // h_new = ∇f = h + diff, so only diff's support travels
@@ -457,6 +562,7 @@ fn worker_loop(
                 refresh_bits,
                 wire_bytes,
                 compute_secs: t0.elapsed().as_secs_f64(),
+                failure: None,
             })
             .is_err()
         {
@@ -530,6 +636,7 @@ impl DistributedRunner {
                 prec: cfg.prec,
                 gamma: cfg.gamma,
                 local_steps: cfg.local_steps,
+                uplink_ef: cfg.uplink_ef,
             };
             let h0 = shifts[wi].clone();
             let c = if needs_c { cs_iter.next() } else { None };
@@ -671,9 +778,64 @@ impl Algorithm for DistributedRunner {
         &self.x
     }
 
-    fn step(&mut self, _p: &dyn Problem) -> StepStats {
+    fn step(&mut self, p: &dyn Problem) -> StepStats {
+        // the panic-free path is try_step; this trait wrapper preserves
+        // the Algorithm contract by panicking with the structured context
+        // (round + worker id + detail) the failure carries
+        match self.try_step(p) {
+            Ok(stats) => stats,
+            Err(f) => panic!("{f}"),
+        }
+    }
+}
+
+/// `what` names the offending frame in a master-side decode failure.
+fn frame_failure(wi: usize, round: usize, what: &str, e: wire::WireError) -> WorkerFailure {
+    WorkerFailure {
+        worker: wi,
+        round,
+        detail: format!("malformed {what} from worker: {e}"),
+    }
+}
+
+/// Master-side uplink decode with the same dimension guard the workers
+/// apply to downlink frames: a well-formed packet of the wrong dimension
+/// must surface as a structured failure, not as the `assert` inside
+/// `add_scaled_into` (which would break [`DistributedRunner::try_step`]'s
+/// panic-free contract).
+fn decode_checked(
+    bytes: &[u8],
+    out: &mut Packet,
+    d: usize,
+    wi: usize,
+    round: usize,
+    what: &str,
+) -> Result<(), WorkerFailure> {
+    wire::decode_into(bytes, out).map_err(|e| frame_failure(wi, round, what, e))?;
+    if out.dim() != d {
+        return Err(WorkerFailure {
+            worker: wi,
+            round,
+            detail: format!(
+                "{what} dimension mismatch: frame carries {}, expected {d}",
+                out.dim()
+            ),
+        });
+    }
+    Ok(())
+}
+
+impl DistributedRunner {
+    /// One round, surfacing worker-side protocol failures (and master-side
+    /// uplink decode failures) as a structured [`WorkerFailure`] instead
+    /// of panicking — or, worse, deadlocking on a worker thread that has
+    /// already exited. On `Err` the cluster is mid-round and
+    /// unrecoverable: drop it. [`Algorithm::step`] wraps this and panics
+    /// with the same round + worker context.
+    pub fn try_step(&mut self, _p: &dyn Problem) -> Result<StepStats, WorkerFailure> {
         let n = self.workers.len();
         let d = self.x.len();
+        let round = self.round;
         let inv_n = 1.0 / n as f64;
         let parity = self.round % 2;
 
@@ -712,25 +874,49 @@ impl Algorithm for DistributedRunner {
         let down_frame_bits = self.down_bufs[parity].len() as u64 * 8;
         for (wi, w) in self.workers.iter().enumerate() {
             let recycled = std::mem::take(&mut self.frames_pool[wi]);
-            w.cmd_tx
-                .send(WorkerCommand::Round {
-                    k: self.round,
-                    down: self.down_bufs[parity].clone(),
-                    recycled,
-                })
-                .expect("worker thread died");
+            let sent = w.cmd_tx.send(WorkerCommand::Round {
+                k: self.round,
+                down: self.down_bufs[parity].clone(),
+                recycled,
+            });
+            if sent.is_err() {
+                return Err(WorkerFailure {
+                    worker: wi,
+                    round,
+                    detail: "worker thread has exited (it reported a failure in an \
+                             earlier round); the cluster must be dropped"
+                        .into(),
+                });
+            }
         }
 
         // gather (any arrival order; processed in worker order for exact
         // fp-reproducibility)
         for _ in 0..n {
-            let upd = self.up_rx.recv().expect("worker channel closed");
+            let Ok(upd) = self.up_rx.recv() else {
+                return Err(WorkerFailure {
+                    worker: WorkerFailure::NO_WORKER,
+                    round,
+                    detail: "all worker threads have exited".into(),
+                });
+            };
             debug_assert_eq!(upd.k, self.round);
             let wi = upd.worker;
             // each worker is charged its own measured compute when the
             // round is priced (staged/pipelined models)
             self.compute[wi] = upd.compute_secs;
             self.slots[wi] = Some(upd);
+        }
+        // fail fast on any worker-reported protocol failure: the failing
+        // thread has already exited, so folding this round would corrupt
+        // state and the next broadcast would deadlock
+        for wi in 0..n {
+            if let Some(f) = self.slots[wi].as_ref().and_then(|u| u.failure.clone()) {
+                for slot in &mut self.slots {
+                    *slot = None;
+                }
+                return Err(f);
+            }
         }
 
         let mut bits_up = 0u64;
@@ -752,8 +938,17 @@ impl Algorithm for DistributedRunner {
                 bits_refresh += upd.refresh_bits;
                 self.wire_bits[wi] = upd.wire_bytes as u64 * 8;
                 let (count, off) = wire::split_batch_frame(&upd.frames.q_frame)
-                    .expect("malformed batch frame from worker");
-                assert_eq!(count, self.local_steps, "worker {wi} batch count");
+                    .map_err(|e| frame_failure(wi, round, "batch frame", e))?;
+                if count != self.local_steps {
+                    return Err(WorkerFailure {
+                        worker: wi,
+                        round,
+                        detail: format!(
+                            "batch frame carries {count} packets, expected {}",
+                            self.local_steps
+                        ),
+                    });
+                }
                 self.offsets[wi] = off;
             }
             for _t in 0..self.local_steps {
@@ -765,7 +960,17 @@ impl Algorithm for DistributedRunner {
                         self.offsets[wi],
                         &mut self.q_scratch[wi],
                     )
-                    .expect("malformed frame from worker");
+                    .map_err(|e| frame_failure(wi, round, "batch packet", e))?;
+                    if self.q_scratch[wi].dim() != d {
+                        return Err(WorkerFailure {
+                            worker: wi,
+                            round,
+                            detail: format!(
+                                "batch packet dimension mismatch: frame carries {}, expected {d}",
+                                self.q_scratch[wi].dim()
+                            ),
+                        });
+                    }
                     self.q_scratch[wi].add_scaled_into(inv_n, &mut self.est);
                     if let MethodKind::Diana { alpha, .. } = self.method {
                         self.q_scratch[wi].add_scaled_into(alpha, &mut self.h[wi]);
@@ -778,7 +983,7 @@ impl Algorithm for DistributedRunner {
                 let upd = self.slots[wi].take().unwrap();
                 self.frames_pool[wi] = upd.frames;
             }
-            return self.finish_step(n, down_frame_bits, bits_up, bits_refresh);
+            return Ok(self.finish_step(n, down_frame_bits, bits_up, bits_refresh));
         }
 
         // g^k seeded from the maintained shift sum in one O(d) pass, then
@@ -793,49 +998,50 @@ impl Algorithm for DistributedRunner {
 
             match self.method {
                 MethodKind::Fixed => {
-                    wire::decode_into(&upd.frames.q_frame, &mut self.q_scratch[wi])
-                        .expect("malformed frame from worker");
+                    decode_checked(&upd.frames.q_frame, &mut self.q_scratch[wi], d, wi, round, "Q frame")?;
                     self.q_scratch[wi].add_scaled_into(inv_n, &mut self.est);
                 }
                 MethodKind::Star { with_c } => {
                     // reconstruct the worker's same-round shift in place
                     self.h[wi].copy_from_slice(&self.grad_star[wi]);
                     if with_c {
-                        let cf = upd.frames.c_frame.as_deref().expect("missing C frame");
-                        wire::decode_into(cf, &mut self.c_scratch[wi])
-                            .expect("malformed frame from worker");
+                        let cf = upd.frames.c_frame.as_deref().ok_or_else(|| WorkerFailure {
+                            worker: wi,
+                            round,
+                            detail: "missing C frame".into(),
+                        })?;
+                        decode_checked(cf, &mut self.c_scratch[wi], d, wi, round, "C frame")?;
                         self.c_scratch[wi].add_scaled_into(1.0, &mut self.h[wi]);
                     }
                     axpy(inv_n, &self.h[wi], &mut self.est);
-                    wire::decode_into(&upd.frames.q_frame, &mut self.q_scratch[wi])
-                        .expect("malformed frame from worker");
+                    decode_checked(&upd.frames.q_frame, &mut self.q_scratch[wi], d, wi, round, "Q frame")?;
                     self.q_scratch[wi].add_scaled_into(inv_n, &mut self.est);
                 }
                 MethodKind::Diana { alpha, with_c } => {
                     if with_c {
-                        let cf = upd.frames.c_frame.as_deref().expect("missing C frame");
-                        wire::decode_into(cf, &mut self.c_scratch[wi])
-                            .expect("malformed frame from worker");
+                        let cf = upd.frames.c_frame.as_deref().ok_or_else(|| WorkerFailure {
+                            worker: wi,
+                            round,
+                            detail: "missing C frame".into(),
+                        })?;
+                        decode_checked(cf, &mut self.c_scratch[wi], d, wi, round, "C frame")?;
                         self.c_scratch[wi].add_scaled_into(inv_n, &mut self.est);
                         self.c_scratch[wi].add_scaled_into(alpha, &mut self.h[wi]);
                         self.c_scratch[wi].add_scaled_into(alpha, &mut self.h_sum);
                     }
-                    wire::decode_into(&upd.frames.q_frame, &mut self.q_scratch[wi])
-                        .expect("malformed frame from worker");
+                    decode_checked(&upd.frames.q_frame, &mut self.q_scratch[wi], d, wi, round, "Q frame")?;
                     self.q_scratch[wi].add_scaled_into(inv_n, &mut self.est);
                     self.q_scratch[wi].add_scaled_into(alpha, &mut self.h[wi]);
                     self.q_scratch[wi].add_scaled_into(alpha, &mut self.h_sum);
                 }
                 MethodKind::RandDiana { .. } => {
-                    wire::decode_into(&upd.frames.q_frame, &mut self.q_scratch[wi])
-                        .expect("malformed frame from worker");
+                    decode_checked(&upd.frames.q_frame, &mut self.q_scratch[wi], d, wi, round, "Q frame")?;
                     self.q_scratch[wi].add_scaled_into(inv_n, &mut self.est);
                     if let Some(refresh) = &upd.frames.refresh {
                         // sparse shift-refresh delta: h_new = h + Δ, applied
                         // identically to the replica and the maintained sum
                         // (the worker applied the same packet to its h)
-                        wire::decode_into(refresh, &mut self.c_scratch[wi])
-                            .expect("malformed frame from worker");
+                        decode_checked(refresh, &mut self.c_scratch[wi], d, wi, round, "refresh frame")?;
                         self.c_scratch[wi].add_scaled_into(1.0, &mut self.h[wi]);
                         self.c_scratch[wi].add_scaled_into(1.0, &mut self.h_sum);
                     }
@@ -845,7 +1051,7 @@ impl Algorithm for DistributedRunner {
             self.frames_pool[wi] = upd.frames;
         }
 
-        self.finish_step(n, down_frame_bits, bits_up, bits_refresh)
+        Ok(self.finish_step(n, down_frame_bits, bits_up, bits_refresh))
     }
 }
 
@@ -975,6 +1181,7 @@ impl DistributedRunner {
                 local_steps: 1,
                 pipeline: false,
                 downlink: None,
+                uplink_ef: false,
             },
         )
     }
@@ -1010,6 +1217,7 @@ impl DistributedRunner {
                 local_steps: 1,
                 pipeline: false,
                 downlink: None,
+                uplink_ef: false,
             },
         )
     }
@@ -1043,6 +1251,7 @@ impl DistributedRunner {
                 local_steps: 1,
                 pipeline: false,
                 downlink: None,
+                uplink_ef: false,
             },
         )
     }
@@ -1104,5 +1313,121 @@ mod tests {
                 DistributedRunner::dcgd(p.clone(), RandK::with_q(p.dim(), 0.5), 7, None);
             runner.step(p.as_ref());
         } // drop must join all threads without hanging
+    }
+
+    // -------------------------------------- protocol failures (fail fast)
+
+    /// Spawn a bare worker thread with direct channel handles so tests can
+    /// feed it hand-crafted (defective) downlink frames.
+    fn spawn_bare_worker(
+        wi: usize,
+    ) -> (
+        SyncSender<WorkerCommand>,
+        Receiver<WorkerUpdate>,
+        JoinHandle<()>,
+        usize,
+    ) {
+        let p: Arc<dyn Problem> = Arc::new(Ridge::paper_default(9));
+        let d = p.dim();
+        let (cmd_tx, cmd_rx) = sync_channel(2);
+        let (up_tx, up_rx) = sync_channel(1);
+        let cfg = WorkerCfg {
+            wi,
+            method: MethodKind::Fixed,
+            prec: ValPrec::F64,
+            gamma: 0.1,
+            local_steps: 1,
+            uplink_ef: false,
+        };
+        let q: Box<dyn Compressor> = Box::new(RandK::with_q(d, 0.5));
+        let h = vec![0.0; d];
+        let rng = Pcg64::with_stream(1, wi as u64 + 1);
+        let handle =
+            std::thread::spawn(move || worker_loop(cfg, p, q, None, h, rng, cmd_rx, up_tx));
+        (cmd_tx, up_rx, handle, d)
+    }
+
+    fn round_cmd(k: usize, frame: Vec<u8>) -> WorkerCommand {
+        WorkerCommand::Round {
+            k,
+            down: Arc::new(frame),
+            recycled: FrameSet::default(),
+        }
+    }
+
+    /// A garbage downlink frame must produce a structured failure carrying
+    /// the round and worker id — and a clean thread exit, not a panic that
+    /// leaves the master deadlocked on the gather.
+    #[test]
+    fn malformed_downlink_reports_structured_failure() {
+        let (cmd_tx, up_rx, handle, _d) = spawn_bare_worker(3);
+        cmd_tx
+            .send(round_cmd(7, vec![0xBA, 0xAD, 0xF0, 0x0D]))
+            .unwrap();
+        let upd = up_rx.recv().expect("the failure update must arrive");
+        let f = upd.failure.expect("failure must be set");
+        assert_eq!(f.worker, 3);
+        assert_eq!(f.round, 7);
+        assert!(
+            f.detail.contains("malformed downlink frame"),
+            "unhelpful detail: {}",
+            f.detail
+        );
+        // the Display form carries the full context the master panics with
+        let msg = f.to_string();
+        assert!(msg.contains("worker 3") && msg.contains("round 7"), "{msg}");
+        handle.join().expect("worker must exit cleanly, not panic");
+    }
+
+    /// A resync frame whose packet is not dense is mis-kinded: structured
+    /// failure, clean exit.
+    #[test]
+    fn non_dense_resync_reports_structured_failure() {
+        let (cmd_tx, up_rx, handle, d) = spawn_bare_worker(1);
+        let pkt = Packet::Sparse {
+            dim: d as u32,
+            indices: vec![0],
+            values: vec![1.0],
+            scale: 1.0,
+        };
+        let mut frame = Vec::new();
+        wire::encode_down_into(DownKind::Resync, &pkt, ValPrec::F64, &mut frame);
+        cmd_tx.send(round_cmd(2, frame)).unwrap();
+        let f = up_rx.recv().unwrap().failure.expect("failure must be set");
+        assert_eq!((f.worker, f.round), (1, 2));
+        assert!(f.detail.contains("resync frame must be dense"), "{}", f.detail);
+        handle.join().unwrap();
+    }
+
+    /// The master-side twin of the worker's dimension guard: a decodable
+    /// uplink packet of the wrong dimension must yield a structured
+    /// failure from `decode_checked`, not reach `add_scaled_into`'s
+    /// assert (which would panic inside the panic-free `try_step`).
+    #[test]
+    fn master_decode_guard_catches_wrong_dimension() {
+        let pkt = Packet::Zero { dim: 5 };
+        let bytes = wire::encode(&pkt, ValPrec::F64);
+        let mut out = Packet::Zero { dim: 0 };
+        assert!(decode_checked(&bytes, &mut out, 5, 0, 0, "Q frame").is_ok());
+        let err = decode_checked(&bytes, &mut out, 6, 2, 3, "Q frame").unwrap_err();
+        assert_eq!((err.worker, err.round), (2, 3));
+        assert!(err.detail.contains("dimension mismatch"), "{}", err.detail);
+    }
+
+    /// A well-formed frame of the wrong dimension must not abort the
+    /// thread inside `copy_from_slice`/`add_scaled_into`: structured
+    /// failure, clean exit.
+    #[test]
+    fn wrong_dimension_downlink_reports_structured_failure() {
+        let (cmd_tx, up_rx, handle, d) = spawn_bare_worker(0);
+        let pkt = Packet::Zero {
+            dim: (d + 1) as u32,
+        };
+        let mut frame = Vec::new();
+        wire::encode_down_into(DownKind::Delta, &pkt, ValPrec::F64, &mut frame);
+        cmd_tx.send(round_cmd(0, frame)).unwrap();
+        let f = up_rx.recv().unwrap().failure.expect("failure must be set");
+        assert!(f.detail.contains("dimension mismatch"), "{}", f.detail);
+        handle.join().unwrap();
     }
 }

@@ -47,27 +47,27 @@
 //! trajectories stay bit-identical across drivers. The driver-side glue —
 //! replica bootstrap, resync flush, next-frame accounting — lives in one
 //! place, [`DownlinkState`], shared by every driver: one copy to keep
-//! bit-identical.
+//! bit-identical. The fold/compress/flush cycle itself is the
+//! direction-agnostic [`crate::ef::EfCore`], shared with the worker-side
+//! [`crate::ef::EfUplink`] that applies the same construction to the
+//! uplink.
 
 use crate::compressors::{Compressor, Packet, ValPrec};
+use crate::ef::EfCore;
 use crate::util::rng::Pcg64;
 use crate::wire;
 
 /// Master-side state of the error-fed-back downlink: the compressor, its
-/// RNG stream, the error accumulator `e`, and recycled packet scratch
-/// (steady-state rounds never touch the allocator once the compressed
-/// support has reached its working size).
+/// RNG stream, and the shared error-feedback core ([`crate::ef::EfCore`] —
+/// accumulator `e` plus the recycled compress/re-pack scratch; the
+/// identical fold/flush cycle drives the worker-side
+/// [`crate::ef::EfUplink`], so the two directions can never drift apart).
+/// Steady-state rounds never touch the allocator once the compressed
+/// support has reached its working size.
 pub struct EfDownlink {
     comp: Box<dyn Compressor>,
     rng: Pcg64,
-    /// error accumulator: what the replicas are still missing
-    e: Vec<f64>,
-    /// raw compressor output scratch
-    pkt: Packet,
-    /// dense view of the compressor output (re-pack staging)
-    dense_scratch: Vec<f64>,
-    /// sparse/dense re-pack scratch — the broadcast packet lives here
-    repack: wire::DeltaScratch,
+    core: EfCore,
 }
 
 impl EfDownlink {
@@ -80,20 +80,22 @@ impl EfDownlink {
         Self {
             comp,
             rng,
-            e: vec![0.0; d],
-            pkt: Packet::Zero { dim: d as u32 },
-            dense_scratch: vec![0.0; d],
-            repack: wire::DeltaScratch::with_capacity(d),
+            core: EfCore::new(d),
         }
     }
 
     /// One round of error feedback: fold the exact step `delta` (the
     /// packet the master applied to its own iterate) into `e`, compress
     /// `e + Δ`, keep the residual, and return the quantized broadcast
-    /// packet.
+    /// packet. The compressor output is re-packed through
+    /// [`wire::build_update_packet`]'s exact bit accounting (see
+    /// [`EfCore::compress_pending`]), so the frame takes the cheaper of
+    /// the Sparse/Dense representations — Identity reproduces the exact
+    /// delta path frame for frame, and a near-dense Top-K never ships a
+    /// sparse encoding that costs more than the dense one.
     pub fn fold_and_compress(&mut self, delta: &Packet, prec: ValPrec) -> &Packet {
-        delta.add_scaled_into(1.0, &mut self.e);
-        self.compress_pending(prec)
+        self.core.fold_packet(delta);
+        self.core.compress_pending(self.comp.as_ref(), &mut self.rng, prec)
     }
 
     /// Like [`fold_and_compress`](Self::fold_and_compress) but folding a
@@ -103,41 +105,25 @@ impl EfDownlink {
     /// would silently drop the quantization residual from the accumulator
     /// and let the replica drift unboundedly under f32 wire precision.
     pub fn fold_slice_and_compress(&mut self, delta: &[f64], prec: ValPrec) -> &Packet {
-        crate::linalg::axpy(1.0, delta, &mut self.e);
-        self.compress_pending(prec)
-    }
-
-    /// Compress the pending error, keep the residual, return the
-    /// broadcast packet. The compressor output is always re-packed
-    /// through [`wire::build_update_packet`]'s exact bit accounting (one
-    /// O(d) staging pass), so the frame takes the cheaper of the
-    /// Sparse/Dense representations — Identity reproduces the exact delta
-    /// path frame for frame, and a near-dense Top-K never ships a sparse
-    /// encoding that costs more than the dense one. `build_update_packet`
-    /// also pre-quantizes, so the encode → decode round-trip is lossless.
-    fn compress_pending(&mut self, prec: ValPrec) -> &Packet {
-        self.comp.compress_into(&mut self.rng, &self.e, &mut self.pkt);
-        self.pkt.decode_into(&mut self.dense_scratch);
-        let bcast = wire::build_update_packet(&self.dense_scratch, 1.0, prec, &mut self.repack);
-        bcast.add_scaled_into(-1.0, &mut self.e);
-        bcast
+        self.core.fold_slice(delta);
+        self.core.compress_pending(self.comp.as_ref(), &mut self.rng, prec)
     }
 
     /// The packet returned by the last compress call.
     pub fn packet(&self) -> &Packet {
-        self.repack.packet()
+        self.core.packet()
     }
 
     /// Zero the error accumulator. Must be called whenever a dense resync
     /// frame is broadcast: the replicas then hold `x_master` exactly, so
     /// nothing is pending.
     pub fn flush(&mut self) {
-        crate::linalg::zero(&mut self.e);
+        self.core.flush();
     }
 
     /// The error accumulator `x_master − x_replica` (tests, diagnostics).
     pub fn error(&self) -> &[f64] {
-        &self.e
+        self.core.error()
     }
 
     /// Contraction parameter δ of the configured compressor, if known.

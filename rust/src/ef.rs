@@ -1,0 +1,300 @@
+//! Shared error-feedback core: the accumulator machinery behind both
+//! lossy directions of the protocol.
+//!
+//! The EF21/EF-BV construction (Richtárik et al., 2021; Condat et al.,
+//! 2022, arXiv:2205.04180) is direction-agnostic: keep an error
+//! accumulator `e`, ship the contractive compression `c = C(e + m)` of the
+//! pending message `m`, and retry the residual `e ← e + m − c` next round.
+//! The *same* fold/compress/flush cycle drives
+//!
+//! * the **downlink** ([`crate::downlink::EfDownlink`]): `m` is the
+//!   master's iterate step `Δ = x^{k+1} − x^k` and the invariant is
+//!   `x_replica + e = x_master`;
+//! * the **uplink** ([`EfUplink`]): `m` is the worker's shifted message
+//!   `∇f_i(x^k) − h_i^k` and the invariant is `e_i = Σ_k (m_i^k − c_i^k)`
+//!   — everything the worker's compressor has dropped so far and still
+//!   owes the master. This is what lets the DCGD/DIANA family run Top-K
+//!   (or any contractive `C_i`) on the worker → master path: the bias of
+//!   each individual `c_i` is corrected over rounds instead of
+//!   accumulating in the trajectory.
+//!
+//! Both wrap one [`EfCore`], so the fold order, the quantize-at-source
+//! re-pack and the flush semantics can never drift apart between the two
+//! directions — or between the threaded coordinator and the single-process
+//! mirrors, which share this code by construction.
+//!
+//! The compressor output is always re-packed through
+//! [`wire::build_update_packet`]'s exact bit accounting (one O(d) staging
+//! pass): the wire frame takes the cheaper of the Sparse/Dense
+//! representations, and values are pre-quantized to the wire precision so
+//! the encode → decode round-trip is lossless and **both** ends fold the
+//! identical packet — under f32 the quantization residual `m − c` stays in
+//! the accumulator and is retried like any other dropped mass.
+
+use crate::compressors::{Compressor, Packet, ValPrec};
+use crate::util::rng::Pcg64;
+use crate::wire;
+
+/// The direction-agnostic error-feedback state: accumulator `e` plus the
+/// recycled compress/re-pack scratch. Steady-state rounds never touch the
+/// allocator once the compressed support has reached its working size
+/// (enforced by `tests/alloc_free.rs` for both directions).
+pub struct EfCore {
+    /// error accumulator: everything compressed away so far
+    e: Vec<f64>,
+    /// raw compressor output scratch
+    pkt: Packet,
+    /// dense view of the compressor output (re-pack staging)
+    dense_scratch: Vec<f64>,
+    /// sparse/dense re-pack scratch — the shipped packet lives here
+    repack: wire::DeltaScratch,
+}
+
+impl EfCore {
+    pub fn new(d: usize) -> Self {
+        Self {
+            e: vec![0.0; d],
+            pkt: Packet::Zero { dim: d as u32 },
+            dense_scratch: vec![0.0; d],
+            repack: wire::DeltaScratch::with_capacity(d),
+        }
+    }
+
+    /// Fold a pending message given as a raw slice: `e += m`.
+    pub fn fold_slice(&mut self, m: &[f64]) {
+        crate::linalg::axpy(1.0, m, &mut self.e);
+    }
+
+    /// Fold a pending message given as a packet: `e += Δ` at O(nnz).
+    pub fn fold_packet(&mut self, delta: &Packet) {
+        delta.add_scaled_into(1.0, &mut self.e);
+    }
+
+    /// Compress the pending error with `comp`, keep the residual, and
+    /// return the quantized wire packet `c = C(e)`; afterwards
+    /// `e ← e − c`. `rng` is the caller's stream (deterministic
+    /// compressors like Top-K and Identity never draw from it, but passing
+    /// it through keeps randomized compressors reproducible and
+    /// bit-identical across drivers).
+    pub fn compress_pending(
+        &mut self,
+        comp: &dyn Compressor,
+        rng: &mut Pcg64,
+        prec: ValPrec,
+    ) -> &Packet {
+        comp.compress_into(rng, &self.e, &mut self.pkt);
+        self.pkt.decode_into(&mut self.dense_scratch);
+        let c = wire::build_update_packet(&self.dense_scratch, 1.0, prec, &mut self.repack);
+        c.add_scaled_into(-1.0, &mut self.e);
+        c
+    }
+
+    /// The packet returned by the last [`compress_pending`](Self::compress_pending).
+    pub fn packet(&self) -> &Packet {
+        self.repack.packet()
+    }
+
+    /// Zero the accumulator: nothing is pending any more. Called whenever
+    /// the protocol re-establishes exact state out of band (a dense resync
+    /// on the downlink; the worker receiving one on the uplink).
+    pub fn flush(&mut self) {
+        crate::linalg::zero(&mut self.e);
+    }
+
+    /// The error accumulator (tests, diagnostics).
+    pub fn error(&self) -> &[f64] {
+        &self.e
+    }
+}
+
+// ------------------------------------------------------------------ uplink
+
+/// Worker-side error feedback for the uplink (EF-BV): the worker folds the
+/// shifted message it would normally compress into its accumulator, ships
+/// `c_i = C_i(e_i + m_i)`, and retries the residual next round.
+///
+/// Unlike the downlink twin, the compressor and RNG stream are *not* owned
+/// here — they are the worker's own `Q_i` slot and stream, passed through
+/// [`fold_and_compress`](Self::fold_and_compress), so arming EF changes
+/// what travels on the wire without re-deriving any randomness: the
+/// threaded worker loop and the [`crate::algorithms::DcgdShift`] mirror
+/// stay bit-identical by construction.
+///
+/// A dense resync re-establishes exact replica state, so workers
+/// [`flush`](Self::flush) the accumulator when they receive one (mirrored
+/// by `DcgdShift::set_x0`): after a resync nothing stale is retried.
+pub struct EfUplink {
+    core: EfCore,
+}
+
+impl EfUplink {
+    pub fn new(d: usize) -> Self {
+        Self {
+            core: EfCore::new(d),
+        }
+    }
+
+    /// One round of worker-side error feedback: fold the shifted message
+    /// `m = ∇f_i − h_i` into the accumulator, compress `e + m` with the
+    /// worker's own compressor and stream, keep the residual, and return
+    /// the quantized wire packet.
+    pub fn fold_and_compress(
+        &mut self,
+        comp: &dyn Compressor,
+        rng: &mut Pcg64,
+        m: &[f64],
+        prec: ValPrec,
+    ) -> &Packet {
+        self.core.fold_slice(m);
+        self.core.compress_pending(comp, rng, prec)
+    }
+
+    /// The packet returned by the last compress call.
+    pub fn packet(&self) -> &Packet {
+        self.core.packet()
+    }
+
+    /// Drop everything pending (dense resync received; see the type doc).
+    pub fn flush(&mut self) {
+        self.core.flush();
+    }
+
+    /// The accumulator `Σ (m − c)` (tests, diagnostics).
+    pub fn error(&self) -> &[f64] {
+        self.core.error()
+    }
+}
+
+/// Compress one uplink message, shared verbatim by the threaded worker
+/// loop and the single-process mirror so both drivers perform the
+/// identical operations in the identical order:
+///
+/// * **EF armed** — fold `m` into the worker's accumulator and ship
+///   `C(e + m)` (already quantized by the re-pack);
+/// * **exact** — compress `m` directly into the recycled `scratch` packet
+///   and quantize it at the source (the pre-EF protocol, unchanged).
+pub fn compress_uplink<'a>(
+    q: &dyn Compressor,
+    rng: &mut Pcg64,
+    ef: Option<&'a mut EfUplink>,
+    m: &[f64],
+    prec: ValPrec,
+    scratch: &'a mut Packet,
+) -> &'a Packet {
+    match ef {
+        Some(ef) => ef.fold_and_compress(q, rng, m, prec),
+        None => {
+            q.compress_into(rng, m, scratch);
+            scratch.quantize(prec);
+            scratch
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::{Identity, RandK, TopK};
+    use crate::linalg::nrm2_sq;
+
+    fn rng() -> Pcg64 {
+        Pcg64::with_stream(9, 0xef01)
+    }
+
+    #[test]
+    fn identity_uplink_keeps_zero_error_and_matches_exact() {
+        let d = 24;
+        let q = Identity::new(d);
+        let mut ef = EfUplink::new(d);
+        let mut r1 = rng();
+        let mut r2 = rng();
+        let mut scratch = Packet::Zero { dim: d as u32 };
+        let m: Vec<f64> = (0..d).map(|j| 0.25 * (j as f64 + 1.0)).collect();
+        for prec in [ValPrec::F64, ValPrec::F32] {
+            let c = ef.fold_and_compress(&q, &mut r1, &m, prec);
+            let mut from_ef = vec![0.0; d];
+            c.add_scaled_into(1.0, &mut from_ef);
+            let exact = compress_uplink(&q, &mut r2, None, &m, prec, &mut scratch);
+            let mut from_exact = vec![0.0; d];
+            exact.add_scaled_into(1.0, &mut from_exact);
+            for j in 0..d {
+                assert_eq!(from_ef[j].to_bits(), from_exact[j].to_bits(), "coord {j}");
+            }
+            assert!(ef.error().iter().all(|&v| v == 0.0), "identity must keep e = 0");
+        }
+    }
+
+    #[test]
+    fn topk_uplink_contracts_and_retries_the_residual() {
+        let d = 64;
+        let k = 8;
+        let q = TopK::new(d, k);
+        let delta = q.delta().unwrap();
+        let mut ef = EfUplink::new(d);
+        let mut r = rng();
+        let mut g = Pcg64::new(3);
+        let mut shipped = vec![0.0; d];
+        let mut sent_m = vec![0.0; d];
+        for round in 0..40 {
+            let m: Vec<f64> = (0..d).map(|_| g.normal()).collect();
+            crate::linalg::axpy(1.0, &m, &mut sent_m);
+            let u_sq = {
+                let mut u = ef.error().to_vec();
+                crate::linalg::axpy(1.0, &m, &mut u);
+                nrm2_sq(&u)
+            };
+            let c = ef.fold_and_compress(&q, &mut r, &m, ValPrec::F64);
+            assert_eq!(c.nnz(), k, "top-k ships exactly k coordinates");
+            c.add_scaled_into(1.0, &mut shipped);
+            // contraction: ‖e_new‖² ≤ (1 − δ)‖e_old + m‖²
+            let e_sq = nrm2_sq(ef.error());
+            let bound = (1.0 - delta) * u_sq;
+            assert!(e_sq <= bound + 1e-12, "round {round}: {e_sq} > {bound}");
+            // invariant: shipped + e = Σ m, to fp rounding
+            for j in 0..d {
+                let lhs = shipped[j] + ef.error()[j];
+                assert!(
+                    (lhs - sent_m[j]).abs() <= 1e-9 * sent_m[j].abs().max(1.0),
+                    "round {round} coord {j}: {lhs} vs {}",
+                    sent_m[j]
+                );
+            }
+        }
+        ef.flush();
+        assert!(ef.error().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn compress_uplink_exact_path_is_quantized_at_source() {
+        let d = 16;
+        let q = RandK::new(d, 4);
+        let mut r1 = rng();
+        let mut r2 = rng();
+        let m: Vec<f64> = (0..d).map(|j| 0.1 * (j as f64 + 0.3)).collect();
+        let mut scratch = Packet::Zero { dim: d as u32 };
+        let pkt = compress_uplink(&q, &mut r1, None, &m, ValPrec::F32, &mut scratch);
+        // identical draws as the raw compressor; values f32-quantized
+        let mut want = q.compress(&mut r2, &m);
+        want.quantize(ValPrec::F32);
+        assert_eq!(pkt, &want);
+    }
+
+    #[test]
+    fn f32_residual_keeps_the_quantization_error() {
+        // under f32 the shipped packet is quantized; the (f64) accumulator
+        // must retain exactly m − c so nothing is silently lost
+        let d = 8;
+        let q = TopK::new(d, d); // keep everything: c = quantize(e + m)
+        let mut ef = EfUplink::new(d);
+        let mut r = rng();
+        let m = vec![0.1; d]; // 0.1 is not representable in f32
+        let c = ef.fold_and_compress(&q, &mut r, &m, ValPrec::F32);
+        let mut shipped = vec![0.0; d];
+        c.add_scaled_into(1.0, &mut shipped);
+        for j in 0..d {
+            let resid = m[j] - shipped[j];
+            assert!(resid != 0.0, "f32 must round 0.1");
+            assert_eq!(ef.error()[j], resid, "coord {j}");
+        }
+    }
+}

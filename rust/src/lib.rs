@@ -53,6 +53,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod downlink;
+pub mod ef;
 pub mod harness;
 pub mod linalg;
 #[cfg(feature = "pjrt")]
@@ -77,6 +78,7 @@ pub mod prelude {
     };
     pub use crate::coordinator::{ClusterConfig, DistributedRunner};
     pub use crate::downlink::EfDownlink;
+    pub use crate::ef::EfUplink;
     pub use crate::data::{
         make_regression, partition_evenly, synthetic_w2a, RegressionOpts, W2aOpts,
     };

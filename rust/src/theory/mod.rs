@@ -174,6 +174,48 @@ pub fn rand_diana_default_p(omega: f64) -> f64 {
     1.0 / (omega + 1.0)
 }
 
+// ------------------------------------------- EF-BV uplink (arXiv:2205.04180)
+
+/// EF21/EF-BV-style step size for the error-fed-back uplink: each worker
+/// ships `c_i = C_i(e_i + m_i)` with a contractive `C_i ∈ B(δ_i)` and
+/// retries the residual next round (see [`crate::ef::EfUplink`]).
+///
+/// With `δ = min_i δ_i`, the standard EF21 constants are
+///
+/// ```text
+/// θ = 1 − √(1 − δ),   β = (1 − δ)/θ,
+/// γ ≤ 1 / (L + L̃ √(β/θ)),   L̃ = √((1/n) Σ L_i²),
+/// ```
+///
+/// and the residual recursion contracts at θ, giving the rate bound
+/// `max{1 − γμ, 1 − θ/2}` under strong convexity. `C = Identity` (δ = 1)
+/// recovers exact gradient descent: θ = 1, β = 0, γ = 1/L.
+///
+/// EF-BV (Condat et al., 2022) tightens these constants with a second
+/// (η, β̃) characterization of the compressor class; the δ-only form here
+/// is its conservative specialization, which every in-tree compressor can
+/// supply through [`crate::compressors::Compressor::delta`].
+pub fn ef_uplink(p: &dyn Problem, delta: &[f64]) -> StepSizes {
+    let n = p.n_workers() as f64;
+    assert_eq!(delta.len(), p.n_workers());
+    let dmin = delta.iter().fold(1.0f64, |a, &b| a.min(b)).clamp(0.0, 1.0);
+    assert!(
+        dmin > 0.0,
+        "the EF uplink needs contractive compressors (δ > 0); δ_min = {dmin}"
+    );
+    let theta = 1.0 - (1.0 - dmin).sqrt();
+    let beta = (1.0 - dmin) / theta;
+    let l_tilde = ((0..p.n_workers()).map(|i| p.l_i(i) * p.l_i(i)).sum::<f64>() / n).sqrt();
+    let gamma = 1.0 / (p.l() + l_tilde * (beta / theta).sqrt());
+    StepSizes {
+        gamma,
+        alpha: 0.0,
+        eta: 0.0,
+        m: 0.0,
+        rate: (1.0 - gamma * p.mu()).max(1.0 - theta / 2.0),
+    }
+}
+
 // ---------------------------------------------------------------- Theorem 5
 
 /// GDCI (Theorem 5):
@@ -367,6 +409,39 @@ mod tests {
         let m_prime = 2.0 * omega / (4.0 * 0.1);
         let ss = rand_diana(&p, omega, &probs, Some(0.5 * m_prime));
         assert!(ss.rate >= 1.0, "rate {} should signal instability", ss.rate);
+    }
+
+    #[test]
+    fn ef_uplink_identity_recovers_exact_gd() {
+        // δ = 1 ⇒ θ = 1, β = 0 ⇒ γ = 1/L, and the rate is the GD rate
+        let p = prob();
+        let ss = ef_uplink(&p, &vec![1.0; 4]);
+        assert!((ss.gamma - 1.0 / p.l()).abs() < 1e-15);
+        assert!((ss.rate - (1.0 - ss.gamma * p.mu())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ef_uplink_gamma_shrinks_with_contraction() {
+        // harsher compression (smaller δ) must not enlarge the step
+        let p = prob();
+        let mut prev = f64::INFINITY;
+        for &delta in &[1.0, 0.5, 0.1, 0.01] {
+            let ss = ef_uplink(&p, &vec![delta; 4]);
+            assert!(ss.gamma > 0.0 && ss.gamma <= prev + 1e-18, "δ = {delta}");
+            assert!(ss.rate < 1.0, "δ = {delta}: rate {} must contract", ss.rate);
+            prev = ss.gamma;
+        }
+        // the minimum δ across a heterogeneous fleet governs
+        let hom = ef_uplink(&p, &vec![0.1; 4]);
+        let het = ef_uplink(&p, &[0.9, 0.5, 0.1, 1.0]);
+        assert!((hom.gamma - het.gamma).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "contractive")]
+    fn ef_uplink_rejects_non_contractive() {
+        let p = prob();
+        let _ = ef_uplink(&p, &vec![0.0; 4]);
     }
 
     #[test]

@@ -170,6 +170,9 @@ pub struct JsonScenario {
     /// measured broadcast cost, when the scenario drives the coordinator
     /// (tracks the delta-downlink win across PRs)
     pub down_bytes_per_round: Option<f64>,
+    /// measured per-worker uplink payload bytes/round (tracks the EF
+    /// uplink's O(K) guarantee across PRs)
+    pub up_bytes_per_round: Option<f64>,
     /// simulated wall clock of the scenario's run, when it prices a
     /// `LinkModel` fleet (tracks the latency-amortization win across PRs —
     /// scenarios record it with and without pipelining as separate rows)
@@ -183,6 +186,7 @@ impl JsonScenario {
             median_sec,
             coords_per_s,
             down_bytes_per_round: None,
+            up_bytes_per_round: None,
             sim_time_sec: None,
         }
     }
@@ -190,6 +194,12 @@ impl JsonScenario {
     /// Attach the measured per-worker downlink bytes/round.
     pub fn with_down_bytes(mut self, bytes_per_round: f64) -> Self {
         self.down_bytes_per_round = Some(bytes_per_round);
+        self
+    }
+
+    /// Attach the measured per-worker uplink payload bytes/round.
+    pub fn with_up_bytes(mut self, bytes_per_round: f64) -> Self {
+        self.up_bytes_per_round = Some(bytes_per_round);
         self
     }
 
@@ -221,6 +231,9 @@ pub fn write_bench_json(path: &str, rows: &[JsonScenario]) -> std::io::Result<()
         }
         if let Some(b) = r.down_bytes_per_round {
             fields.push(("down_bytes_per_round", Json::num(b)));
+        }
+        if let Some(b) = r.up_bytes_per_round {
+            fields.push(("up_bytes_per_round", Json::num(b)));
         }
         if let Some(t) = r.sim_time_sec {
             fields.push(("sim_time_sec", Json::num(t)));

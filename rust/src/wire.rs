@@ -18,6 +18,13 @@
 //! separately by [`HEADER_BITS`]. [`encoded_len`] gives the exact byte size
 //! of a frame without materializing it.
 //!
+//! The uplink frame format is payload-agnostic: with the error-fed-back
+//! uplink armed (`cluster.uplink`, [`crate::ef::EfUplink`]) the Q-frame
+//! carries `C_i(e_i + m_i)` — the worker's accumulator-fed compression —
+//! instead of `Q_i(m_i)`, re-packed through [`build_update_packet`] into
+//! the ordinary Sparse/Dense packet frames below. No new tag is needed;
+//! the master folds whatever packet arrives.
+//!
 //! # Batched uplink frames (local steps)
 //!
 //! With `local_steps = τ > 1` a worker performs τ local shifted
@@ -41,7 +48,7 @@
 //!
 //! | dir      | kind                  | first byte | body                          | purpose                                        |
 //! |----------|-----------------------|------------|-------------------------------|------------------------------------------------|
-//! | uplink   | packet                | tag 1–8    | one packet frame              | one compressed message (Q/C/refresh frame)     |
+//! | uplink   | packet                | tag 1–8    | one packet frame              | one compressed message (Q/C/refresh frame; EF uplink ships C(e + m) here) |
 //! | uplink   | `Batch`               | tag 9      | count (u16) + τ packet frames | τ local-step packets, one latency round trip   |
 //! | downlink | [`DownKind::Delta`]   | kind 1     | packet frame                  | exact iterate delta x^{k+1} − x^k              |
 //! | downlink | [`DownKind::Resync`]  | kind 2     | dense f64 packet frame        | full iterate, replica bootstrap / drift reset  |

@@ -190,6 +190,46 @@ fn ef_downlink_round_is_allocation_free() {
     assert_eq!(allocs, 0, "EF downlink step allocated {allocs} times in 10 rounds");
 }
 
+/// The error-fed-back Top-K *uplink* recycles its per-worker accumulator,
+/// compressor output and re-pack scratch ([`shiftcomp::ef::EfUplink`]):
+/// steady-state EF-uplink rounds are allocation-free once the compressed
+/// support has reached its working size.
+#[test]
+fn ef_uplink_round_is_allocation_free() {
+    let _guard = TEST_LOCK.lock().unwrap();
+    let d = 4096;
+    let p = MeanProblem::new(d, 4, 13);
+    let mut alg = DcgdShift::dcgd_ef(&p, shiftcomp::compressors::TopK::with_q(d, 0.01), 13);
+    for _ in 0..5 {
+        alg.step(&p);
+    }
+    let allocs = thread_allocs(|| {
+        for _ in 0..10 {
+            alg.step(&p);
+        }
+    });
+    assert_eq!(allocs, 0, "EF uplink step allocated {allocs} times in 10 rounds");
+
+    // composed with the EF downlink and local-step batching (the batch
+    // slots copy the re-packed packets through recycled buffers)
+    let mut alg = DcgdShift::diana(&p, RandK::with_q(d, 0.01), None, 14)
+        .with_downlink(Box::new(shiftcomp::compressors::TopK::with_q(d, 0.01)))
+        .with_local_steps(4)
+        .with_uplink_ef();
+    for _ in 0..5 {
+        alg.step(&p);
+    }
+    let allocs = thread_allocs(|| {
+        for _ in 0..10 {
+            alg.step(&p);
+        }
+    });
+    assert_eq!(
+        allocs, 0,
+        "EF uplink × EF downlink × τ=4 step allocated {allocs} times in 10 rounds"
+    );
+}
+
 /// Local-step batched rounds recycle their extra scratch too (per-worker
 /// sub-step packets, the shared local iterate, the Σ_t est^t accumulator):
 /// after warm-up a τ = 4 batched round performs zero heap allocations.

@@ -3,8 +3,8 @@
 
 use std::sync::Arc;
 
-use shiftcomp::algorithms::{Algorithm, DcgdShift, RunOpts};
-use shiftcomp::compressors::{Compressor, NaturalDithering, RandK, TopK, ValPrec};
+use shiftcomp::algorithms::{Algorithm, DcgdShift, ShiftRule, RunOpts};
+use shiftcomp::compressors::{Compressor, Identity, NaturalDithering, RandK, TopK, ValPrec};
 use shiftcomp::coordinator::{ClusterConfig, DistributedRunner, MethodKind};
 use shiftcomp::net::LinkModel;
 use shiftcomp::problems::{Problem, Ridge};
@@ -56,6 +56,7 @@ fn dcgd_bit_identical() {
             local_steps: 1,
             pipeline: false,
             downlink: None,
+            uplink_ef: false,
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 60);
@@ -92,6 +93,7 @@ fn diana_bit_identical() {
             local_steps: 1,
             pipeline: false,
             downlink: None,
+            uplink_ef: false,
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 60);
@@ -132,6 +134,7 @@ fn diana_with_c_bit_identical() {
             local_steps: 1,
             pipeline: false,
             downlink: None,
+            uplink_ef: false,
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 50);
@@ -162,6 +165,7 @@ fn rand_diana_bit_identical() {
             local_steps: 1,
             pipeline: false,
             downlink: None,
+            uplink_ef: false,
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 80);
@@ -193,6 +197,7 @@ fn star_bit_identical() {
             local_steps: 1,
             pipeline: false,
             downlink: None,
+            uplink_ef: false,
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 60);
@@ -304,6 +309,7 @@ fn resync_rounds_stay_bit_identical() {
             local_steps: 1,
             pipeline: false,
             downlink: None,
+            uplink_ef: false,
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 40);
@@ -341,6 +347,7 @@ fn set_x0_mid_run_resyncs_replicas() {
             local_steps: 1,
             pipeline: false,
             downlink: None,
+            uplink_ef: false,
         },
     );
     for _ in 0..5 {
@@ -430,6 +437,7 @@ fn f32_wire_precision_cluster_converges() {
                 local_steps: 1,
                 pipeline: false,
                 downlink: None,
+                uplink_ef: false,
             },
         )
     };
@@ -481,6 +489,7 @@ fn downlink_accounting_mirrors_runner() {
             local_steps: 1,
             pipeline: false,
             downlink: None,
+            uplink_ef: false,
         },
     );
     for k in 0..30 {
@@ -526,6 +535,7 @@ fn ef_identity_downlink_bit_identical_to_exact() {
             local_steps: 1,
             pipeline: false,
             downlink: Some(Box::new(shiftcomp::compressors::Identity::new(d))),
+            uplink_ef: false,
         },
     );
     for k in 0..40 {
@@ -583,6 +593,7 @@ fn ef_topk_cluster_matches_single_process_mirror() {
             local_steps: 1,
             pipeline: false,
             downlink: Some(Box::new(TopK::with_q(d, 0.25))),
+            uplink_ef: false,
         },
     );
     for k in 0..60 {
@@ -646,6 +657,7 @@ fn ef_topk_invariant_drift_and_resync() {
             local_steps: 1,
             pipeline: false,
             downlink: Some(Box::new(TopK::with_q(d, 0.2))),
+            uplink_ef: false,
         },
     );
     let mut prev_mirror: Option<Vec<f64>> = None;
@@ -737,6 +749,7 @@ fn f32_worker_shifts_bit_equal_master_replicas() {
             local_steps: 1,
             pipeline: false,
             downlink: None,
+            uplink_ef: false,
         },
     );
     for _ in 0..50 {
@@ -774,6 +787,7 @@ fn f32_worker_shifts_bit_equal_master_replicas() {
             local_steps: 1,
             pipeline: false,
             downlink: None,
+            uplink_ef: false,
         },
     );
     for _ in 0..50 {
@@ -819,6 +833,7 @@ fn f32_single_process_mirrors_cluster_bit_exactly() {
             local_steps: 1,
             pipeline: false,
             downlink: None,
+            uplink_ef: false,
         },
     );
     for k in 0..60 {
@@ -868,6 +883,7 @@ fn resync_every_round_stays_exact_and_dense() {
             local_steps: 1,
             pipeline: false,
             downlink: None,
+            uplink_ef: false,
         },
     );
     let dense_frame_bits = shiftcomp::wire::resync_frame_bits(d);
@@ -913,6 +929,7 @@ fn set_x0_flushes_ef_accumulator() {
             local_steps: 1,
             pipeline: false,
             downlink: Some(Box::new(TopK::with_q(d, 0.1))),
+            uplink_ef: false,
         },
     );
     for _ in 0..10 {
@@ -977,6 +994,7 @@ fn mk_batched_cluster(
             local_steps: tau,
             pipeline,
             downlink,
+            uplink_ef: false,
         },
     )
 }
@@ -1175,6 +1193,7 @@ fn local_steps_pipelining_cut_latency_bound_wall_clock() {
                 local_steps: tau,
                 pipeline,
                 downlink: None,
+                uplink_ef: false,
             },
         )
     };
@@ -1213,4 +1232,351 @@ fn local_steps_batched_rounds_make_progress() {
     }
     let err = shiftcomp::linalg::dist_sq(alg.x(), p.x_star()) / denom;
     assert!(err.is_finite() && err < 0.9, "batched run made no progress: rel err {err}");
+}
+
+// --------------------------------------------- error-fed-back (EF) uplink
+
+/// Build a cluster with the EF uplink armed. Per-worker compressors are
+/// clones of `q`; `method`/`gamma` are the caller's (Top-K fleets have no
+/// ω, so the step comes from `theory::ef_uplink`).
+#[allow(clippy::too_many_arguments)]
+fn mk_ef_uplink_cluster(
+    p: &Arc<Ridge>,
+    method: MethodKind,
+    gamma: f64,
+    q: &(impl Compressor + Clone + 'static),
+    seed: u64,
+    prec: ValPrec,
+    local_steps: usize,
+    downlink: Option<Box<dyn Compressor>>,
+) -> DistributedRunner {
+    let d = p.dim();
+    let n = p.n_workers();
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(q.clone()) as Box<dyn Compressor>)
+        .collect();
+    DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method,
+            gamma,
+            prec,
+            seed,
+            links: None,
+            resync_every: 0,
+            local_steps,
+            pipeline: false,
+            downlink,
+            uplink_ef: true,
+        },
+    )
+}
+
+/// EF with Identity compressors drops nothing: `e_i` stays exactly zero
+/// and both drivers are bit-identical to the exact uplink — trajectory,
+/// uplink/downlink bit accounting included.
+#[test]
+fn ef_uplink_identity_bit_identical_to_exact() {
+    let p = ridge();
+    let d = p.dim();
+    let q = Identity::new(d);
+    // single-process: exact vs EF-armed
+    let mut exact = DcgdShift::dcgd(p.as_ref(), q.clone(), 81);
+    let mut ef = DcgdShift::dcgd(p.as_ref(), q.clone(), 81).with_uplink_ef();
+    let gamma = exact.gamma;
+    for k in 0..30 {
+        let a = exact.step(p.as_ref());
+        let b = ef.step(p.as_ref());
+        assert_eq!(exact.x(), ef.x(), "single drivers diverged at round {k}");
+        assert_eq!(a.bits_up, b.bits_up, "single bits_up at round {k}");
+        assert_eq!(a.bits_down, b.bits_down, "single bits_down at round {k}");
+    }
+    for w in 0..p.n_workers() {
+        assert!(
+            ef.uplink_error(w).unwrap().iter().all(|&v| v == 0.0),
+            "identity EF must keep worker {w}'s accumulator at zero"
+        );
+    }
+    // threaded cluster with EF ≡ the (exact) single-process driver
+    let mut exact = DcgdShift::dcgd(p.as_ref(), q.clone(), 81);
+    let mut dist = mk_ef_uplink_cluster(
+        &p,
+        MethodKind::Fixed,
+        gamma,
+        &q,
+        81,
+        ValPrec::F64,
+        1,
+        None,
+    );
+    for k in 0..30 {
+        let a = exact.step(p.as_ref());
+        let b = dist.step(p.as_ref());
+        assert_eq!(exact.x(), dist.x(), "cluster diverged at round {k}");
+        assert_eq!(a.bits_up, b.bits_up, "cluster bits_up at round {k}");
+    }
+    let snap = dist.worker_snapshot(0);
+    let e = snap.uplink_error.expect("EF armed ⇒ snapshot carries e");
+    assert!(e.iter().all(|&v| v == 0.0));
+}
+
+/// The tentpole guarantee: a Top-K EF uplink cluster is bit-identical to
+/// the single-process mirror — iterates, measured bits_up/bits_down,
+/// learned shifts, and the worker accumulators themselves (f64 wire).
+#[test]
+fn ef_uplink_topk_cluster_matches_mirror() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let q = TopK::with_q(d, 0.1);
+    let delta = q.delta().unwrap();
+    let ss = shiftcomp::theory::ef_uplink(p.as_ref(), &vec![delta; n]);
+    let alpha = 0.25; // any shared α pins bit-identity; theory for EF-DIANA is future work
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(q.clone()) as Box<dyn Compressor>)
+        .collect();
+    let rules = (0..n)
+        .map(|_| ShiftRule::Diana { alpha, c: None })
+        .collect();
+    let mut single = DcgdShift::custom(
+        "diana",
+        p.as_ref(),
+        qs,
+        rules,
+        vec![vec![0.0; d]; n],
+        ss.gamma,
+        83,
+    )
+    .with_uplink_ef();
+    let mut dist = mk_ef_uplink_cluster(
+        &p,
+        MethodKind::Diana {
+            alpha,
+            with_c: false,
+        },
+        ss.gamma,
+        &q,
+        83,
+        ValPrec::F64,
+        1,
+        None,
+    );
+    for k in 0..60 {
+        let a = single.step(p.as_ref());
+        let b = dist.step(p.as_ref());
+        assert_eq!(single.x(), dist.x(), "iterates diverged at round {k}");
+        assert_eq!(a.bits_up, b.bits_up, "uplink bits at round {k}");
+        assert_eq!(a.bits_down, b.bits_down, "downlink bits at round {k}");
+    }
+    for wi in 0..n {
+        assert_eq!(single.shift(wi), dist.shift(wi), "shift of worker {wi}");
+        let snap = dist.worker_snapshot(wi);
+        assert_eq!(snap.h, dist.shift(wi), "worker {wi} h vs master replica");
+        assert_eq!(
+            snap.uplink_error.as_deref(),
+            single.uplink_error(wi),
+            "worker {wi} EF accumulators diverged"
+        );
+        assert!(
+            single.uplink_error(wi).unwrap().iter().any(|&v| v != 0.0),
+            "a K=10% Top-K uplink must leave some residual in worker {wi}"
+        );
+    }
+    // the EF-corrected biased uplink must not blow up
+    let x0 = shiftcomp::algorithms::paper_x0(d, 83);
+    let err = shiftcomp::linalg::dist_sq(dist.x(), p.x_star())
+        / shiftcomp::linalg::dist_sq(&x0, p.x_star());
+    assert!(err.is_finite() && err < 1.5, "EF-TopK uplink blew up: rel err {err}");
+}
+
+/// f32 wire: the EF packet is pre-quantized by the re-pack, so worker
+/// accumulators keep the (f64) quantization residual and both drivers stay
+/// bit-identical under f32 precision too.
+#[test]
+fn ef_uplink_f32_cluster_matches_mirror() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let q = TopK::with_q(d, 0.15);
+    let delta = q.delta().unwrap();
+    let ss = shiftcomp::theory::ef_uplink(p.as_ref(), &vec![delta; n]);
+    let mut single = DcgdShift::dcgd_ef(p.as_ref(), q.clone(), 85);
+    single.prec = ValPrec::F32;
+    assert_eq!(single.gamma, ss.gamma, "dcgd_ef must take the EF-BV step");
+    let mut dist = mk_ef_uplink_cluster(
+        &p,
+        MethodKind::Fixed,
+        ss.gamma,
+        &q,
+        85,
+        ValPrec::F32,
+        1,
+        None,
+    );
+    for k in 0..50 {
+        let a = single.step(p.as_ref());
+        let b = dist.step(p.as_ref());
+        assert_eq!(single.x(), dist.x(), "f32 iterates diverged at round {k}");
+        assert_eq!(a.bits_up, b.bits_up, "f32 uplink bits at round {k}");
+        assert_eq!(a.bits_down, b.bits_down, "f32 downlink bits at round {k}");
+    }
+    for wi in 0..n {
+        let snap = dist.worker_snapshot(wi);
+        assert_eq!(
+            snap.uplink_error.as_deref(),
+            single.uplink_error(wi),
+            "f32 accumulators of worker {wi}"
+        );
+    }
+}
+
+/// The worker-side EF invariants, observed through the mirror (where the
+/// pending message is computable): the residual obeys the Top-K
+/// contraction bound every round, and a forced resync (`set_x0`) flushes
+/// every accumulator on both drivers, which stay bit-identical through it.
+#[test]
+fn ef_uplink_accumulator_invariant_and_resync_flush() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let q = TopK::with_q(d, 0.1);
+    let delta = q.delta().unwrap();
+    let mut single = DcgdShift::dcgd_ef(p.as_ref(), q.clone(), 87);
+    let gamma = single.gamma;
+    let mut dist = mk_ef_uplink_cluster(
+        &p,
+        MethodKind::Fixed,
+        gamma,
+        &q,
+        87,
+        ValPrec::F64,
+        1,
+        None,
+    );
+    let mut m = vec![0.0; d];
+    for k in 0..12 {
+        // pending message of worker 0 this round: m = ∇f_0(x) − h_0, and
+        // dcgd_ef keeps h ≡ 0
+        p.local_grad_into(0, single.x(), &mut m);
+        let mut u = single.uplink_error(0).unwrap().to_vec();
+        shiftcomp::linalg::axpy(1.0, &m, &mut u);
+        let u_sq = shiftcomp::linalg::nrm2_sq(&u);
+        single.step(p.as_ref());
+        dist.step(p.as_ref());
+        assert_eq!(single.x(), dist.x(), "diverged at round {k}");
+        let e_sq = shiftcomp::linalg::nrm2_sq(single.uplink_error(0).unwrap());
+        let bound = (1.0 - delta) * u_sq;
+        assert!(
+            e_sq <= bound * (1.0 + 1e-9) + 1e-18,
+            "round {k}: residual {e_sq} above contraction bound {bound}"
+        );
+    }
+    assert!(
+        single.uplink_error(0).unwrap().iter().any(|&v| v != 0.0),
+        "Top-K must have dropped something by now"
+    );
+    // out-of-band iterate change: the resync must flush every accumulator
+    let x_new: Vec<f64> = (0..d).map(|j| 0.3 - 0.02 * j as f64).collect();
+    single.set_x0(x_new.clone());
+    dist.set_x0(x_new);
+    for w in 0..n {
+        assert!(
+            single.uplink_error(w).unwrap().iter().all(|&v| v == 0.0),
+            "mirror worker {w} must flush on set_x0"
+        );
+    }
+    // the cluster's workers flush when the resync frame arrives (next
+    // round); bit-identity through the flush pins the equal behaviour
+    for k in 0..10 {
+        single.step(p.as_ref());
+        dist.step(p.as_ref());
+        assert_eq!(single.x(), dist.x(), "diverged {k} rounds after set_x0");
+    }
+    for w in 0..n {
+        let snap = dist.worker_snapshot(w);
+        assert_eq!(
+            snap.uplink_error.as_deref(),
+            single.uplink_error(w),
+            "worker {w} accumulators after resync"
+        );
+    }
+}
+
+/// Acceptance pin: the Top-K EF uplink ships O(K) payload bits per worker
+/// per round — far below the dense d·prec frame a biased-compression-less
+/// uplink would need once messages densify (the paper ridge's gradients
+/// are fully dense from round 0).
+#[test]
+fn ef_uplink_bits_up_stay_o_of_k() {
+    let p = ridge(); // d = 80, n = 10; dense messages every round
+    let d = p.dim();
+    let n = p.n_workers();
+    let k = 4usize;
+    let mut alg = DcgdShift::dcgd_ef(p.as_ref(), TopK::new(d, k), 89);
+    let dense_bits_per_worker = d as u64 * 64;
+    let mut max_round_bits = 0u64;
+    for _ in 0..10 {
+        let s = alg.step(p.as_ref());
+        assert!(s.bits_up > 0);
+        max_round_bits = max_round_bits.max(s.bits_up);
+    }
+    // K coords at (⌈log₂ 80⌉ + 64) bits + the scale ≈ 348 bits/worker —
+    // more than 5× under the dense 5120; pin the margin
+    assert!(
+        max_round_bits < n as u64 * dense_bits_per_worker / 5,
+        "EF-TopK uplink not O(K): {max_round_bits} bits/round"
+    );
+}
+
+/// Composition: EF uplink × EF downlink × local-step batching. The EF
+/// uplink folds once per *sub-step*, the EF downlink once per batch, and
+/// the τ-step cluster stays bit-identical to the τ-step mirror — iterate,
+/// bits, downlink replicas and both accumulator families.
+#[test]
+fn ef_uplink_composes_with_ef_downlink_and_local_steps() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let tau = 4usize;
+    let mut single = DcgdShift::diana(p.as_ref(), RandK::with_q(d, 0.3), None, 91)
+        .with_downlink(Box::new(TopK::with_q(d, 0.25)))
+        .with_local_steps(tau)
+        .with_uplink_ef();
+    let gamma = single.gamma;
+    let omega = RandK::with_q(d, 0.3).omega().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+    let mut dist = mk_ef_uplink_cluster(
+        &p,
+        MethodKind::Diana {
+            alpha: ss.alpha,
+            with_c: false,
+        },
+        gamma,
+        &RandK::with_q(d, 0.3),
+        91,
+        ValPrec::F64,
+        tau,
+        Some(Box::new(TopK::with_q(d, 0.25))),
+    );
+    for k in 0..40 {
+        let a = single.step(p.as_ref());
+        let b = dist.step(p.as_ref());
+        assert_eq!(single.x(), dist.x(), "iterates diverged at round {k}");
+        assert_eq!(a.bits_up, b.bits_up, "uplink bits at round {k}");
+        assert_eq!(a.bits_down, b.bits_down, "downlink bits at round {k}");
+        assert_eq!(single.replica(), dist.replica_mirror(), "replicas at round {k}");
+        assert_eq!(single.ef_error(), dist.ef_error(), "downlink accumulators at round {k}");
+    }
+    for wi in 0..n {
+        let snap = dist.worker_snapshot(wi);
+        assert_eq!(snap.h, dist.shift(wi), "worker {wi} h vs master replica");
+        assert_eq!(
+            snap.uplink_error.as_deref(),
+            single.uplink_error(wi),
+            "worker {wi} uplink accumulators"
+        );
+    }
 }
