@@ -14,15 +14,26 @@
 //! ```bash
 //! cargo run --release --example heterogeneous_workers [-- --rounds 200]
 //! ```
+//!
+//! `-- --kill-worker ROUND:ID` additionally crashes worker ID at the given
+//! round (deterministic fault injection): the coordinator quarantines it at
+//! the gather deadline and the surviving fleet finishes the run degraded —
+//! the post-run health line shows who was lost and why.
 
 use std::sync::Arc;
 
 use shiftcomp::compressors::{Compressor, RandK, ValPrec};
-use shiftcomp::coordinator::{ClusterConfig, DistributedRunner, MethodKind};
+use shiftcomp::coordinator::{ClusterConfig, DistributedRunner, FaultPlan, MethodKind, WorkerState};
 use shiftcomp::net::LinkModel;
 use shiftcomp::prelude::*;
 
-fn run_fleet(name: &str, problem: Arc<Ridge>, qs: Vec<Box<dyn Compressor>>, rounds: usize) {
+fn run_fleet(
+    name: &str,
+    problem: Arc<Ridge>,
+    qs: Vec<Box<dyn Compressor>>,
+    rounds: usize,
+    kill: Option<(usize, usize)>,
+) {
     let n = problem.n_workers();
     let d = problem.dim();
     // links degrade with worker index (worker 9 is ~4x slower than worker
@@ -64,6 +75,12 @@ fn run_fleet(name: &str, problem: Arc<Ridge>, qs: Vec<Box<dyn Compressor>>, roun
             pipeline: false,
             downlink: None,
             uplink_ef: false,
+            // a crashed worker is only noticed at the gather deadline, so
+            // tighten it when a kill is scheduled (healthy fleets keep the
+            // generous default and never see a timeout)
+            faults: kill.map(|(round, id)| FaultPlan::new().crash(id, round)),
+            round_timeout_ms: if kill.is_some() { 500 } else { 30_000 },
+            quarantine_after: 1,
         },
     );
     let trace = runner.run(
@@ -83,6 +100,22 @@ fn run_fleet(name: &str, problem: Arc<Ridge>, qs: Vec<Box<dyn Compressor>>, roun
         trace.total_bits_up(),
         runner.simulated_time(),
     );
+    let health = runner.health();
+    if !health.all_healthy() {
+        for (wi, state) in health.states.iter().enumerate() {
+            if *state == WorkerState::Active {
+                continue;
+            }
+            match runner.last_failure(wi) {
+                Some(f) => println!("    lost worker: {f}"),
+                None => println!("    lost worker {wi}: {state:?}"),
+            }
+        }
+        println!(
+            "    degraded rounds: {} (aggregate reweighted to {} survivors)",
+            health.degraded_rounds, health.active_workers
+        );
+    }
 }
 
 fn main() {
@@ -96,14 +129,26 @@ fn main() {
         .nth(1)
         .and_then(|v| v.parse::<usize>().ok())
         .unwrap_or(8_000);
+    // `-- --kill-worker ROUND:ID` schedules a deterministic crash
+    let kill = std::env::args()
+        .skip_while(|a| a != "--kill-worker")
+        .nth(1)
+        .and_then(|v| {
+            let (round, id) = v.split_once(':')?;
+            Some((round.parse::<usize>().ok()?, id.parse::<usize>().ok()?))
+        });
 
     println!("fleet: worker 0 fastest → worker {} slowest (≈4× degradation)\n", n - 1);
+    if let Some((round, id)) = kill {
+        assert!(id < n, "--kill-worker: worker id {id} out of range (fleet of {n})");
+        println!("fault injection: worker {id} crashes at round {round}\n");
+    }
 
     // (a) homogeneous: everyone at q = 0.5
     let qs: Vec<Box<dyn Compressor>> = (0..n)
         .map(|_| Box::new(RandK::with_q(d, 0.5)) as Box<dyn Compressor>)
         .collect();
-    run_fleet("homogeneous rand-k(q=0.5)", problem.clone(), qs, rounds);
+    run_fleet("homogeneous rand-k(q=0.5)", problem.clone(), qs, rounds, kill);
 
     // (b) bandwidth-matched: fast workers send more, slow workers compress
     // harder — same *average* q, radically better straggler time.
@@ -113,7 +158,7 @@ fn main() {
             Box::new(RandK::with_q(d, q)) as Box<dyn Compressor>
         })
         .collect();
-    run_fleet("bandwidth-matched rand-k", problem.clone(), qs, rounds);
+    run_fleet("bandwidth-matched rand-k", problem.clone(), qs, rounds, kill);
 
     println!(
         "\nBandwidth-matching compresses harder exactly where the link is slow, \

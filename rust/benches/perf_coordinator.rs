@@ -252,6 +252,7 @@ fn main() {
                     pipeline: false,
                     downlink,
                     uplink_ef,
+                    ..Default::default()
                 },
             );
             (pa, dist)
@@ -391,6 +392,7 @@ fn main() {
                 pipeline: false,
                 downlink: None,
                 uplink_ef: false,
+                ..Default::default()
             },
         );
         dist.step(pa.as_ref());
@@ -437,6 +439,7 @@ fn main() {
                 pipeline: false,
                 downlink: None,
                 uplink_ef: false,
+                ..Default::default()
             },
         );
         dist.step(pa.as_ref());
@@ -507,6 +510,7 @@ fn main() {
                     pipeline,
                     downlink: None,
                     uplink_ef: false,
+                    ..Default::default()
                 },
             );
             (pa, dist)

@@ -159,6 +159,13 @@ pub struct DcgdShift {
     /// batched rounds: shared local-iterate scratch, one worker at a time
     /// (empty while τ = 1)
     x_loc: Vec<f64>,
+    /// degraded-fleet mask ([`DcgdShift::quarantine_worker`]): an inactive
+    /// worker is skipped in both phases — no gradient, no RNG draw, no
+    /// fold — exactly what a quarantined worker contributes to a threaded
+    /// round, so this driver mirrors the cluster's degraded trajectory
+    active: Vec<bool>,
+    /// workers currently active (the aggregate reweights to 1/n_active)
+    n_active: usize,
 }
 
 impl DcgdShift {
@@ -370,6 +377,7 @@ impl DcgdShift {
         let dl_rng = root.stream(workers.len() as u64 + 1);
         let x = crate::algorithms::paper_x0(d, seed);
         let dl = DownlinkState::new(&x, dl_rng);
+        let n_active = workers.len();
         Self {
             name: name.to_string(),
             x,
@@ -383,6 +391,8 @@ impl DcgdShift {
             local_steps: 1,
             g_acc: Vec::new(),
             x_loc: Vec::new(),
+            active: vec![true; n_active],
+            n_active,
         }
     }
 
@@ -495,6 +505,51 @@ impl DcgdShift {
     pub fn shift(&self, worker: usize) -> &[f64] {
         &self.workers[worker].h
     }
+
+    /// Drop `worker` from the fleet, the single-process mirror of the
+    /// coordinator's quarantine: its shift is subtracted from the
+    /// maintained `h_sum` in one O(d) `axpy` (the identical operation the
+    /// threaded master performs, so the two drivers stay bit-equal), the
+    /// aggregate reweights to `1/n_active`, and from the next [`step`]
+    /// on the worker is skipped entirely — no gradient, no RNG draw, no
+    /// fold. No-op when the worker is already inactive.
+    ///
+    /// [`step`]: Algorithm::step
+    pub fn quarantine_worker(&mut self, worker: usize) {
+        if !self.active[worker] {
+            return;
+        }
+        self.active[worker] = false;
+        self.n_active -= 1;
+        if !matches!(self.workers[worker].rule, ShiftRule::Star { .. }) {
+            axpy(-1.0, &self.workers[worker].h, &mut self.h_sum);
+        }
+    }
+
+    /// Re-admit a quarantined worker, the mirror of
+    /// [`crate::coordinator::DistributedRunner::rejoin`]: the shift is
+    /// added back into `h_sum` (the exact fp inverse of the quarantine
+    /// subtraction) and the worker's EF uplink accumulator is flushed —
+    /// the same state-reset rule the cluster's rejoin bootstrap (a dense
+    /// resync) applies on the worker thread. No-op when already active.
+    pub fn rejoin_worker(&mut self, worker: usize) {
+        if self.active[worker] {
+            return;
+        }
+        self.active[worker] = true;
+        self.n_active += 1;
+        if !matches!(self.workers[worker].rule, ShiftRule::Star { .. }) {
+            axpy(1.0, &self.workers[worker].h, &mut self.h_sum);
+        }
+        if let Some(ef) = &mut self.workers[worker].ef {
+            ef.flush();
+        }
+    }
+
+    /// Workers currently in the fleet (n minus quarantined).
+    pub fn active_workers(&self) -> usize {
+        self.n_active
+    }
 }
 
 impl Algorithm for DcgdShift {
@@ -526,13 +581,21 @@ impl Algorithm for DcgdShift {
         if self.local_steps > 1 {
             return self.step_batched(p);
         }
-        let n = self.workers.len();
-        let inv_n = 1.0 / n as f64;
+        let inv_n = if self.n_active > 0 {
+            1.0 / self.n_active as f64
+        } else {
+            0.0
+        };
         let mut bits_up: u64 = 0;
         let mut bits_refresh: u64 = 0;
 
-        // ---- phase 1: workers (mirrors coordinator::worker_loop op for op)
+        // ---- phase 1: workers (mirrors coordinator::worker_loop op for op;
+        // quarantined workers are skipped entirely — state frozen, RNG
+        // stream untouched, exactly like a thread out of the rotation)
         for (wi, w) in self.workers.iter_mut().enumerate() {
+            if !self.active[wi] {
+                continue;
+            }
             // line 6: local gradient at the iterate the worker actually
             // has (the shared lossy-broadcast replica on the EF path)
             let x_eval: &[f64] = self.dl.x_eval(&self.x);
@@ -640,11 +703,21 @@ impl Algorithm for DcgdShift {
             }
         }
 
-        // ---- phase 2: master aggregation (mirrors DistributedRunner::step)
-        // g^k = (1/n) Σ (h_i^{used} + m_i): seed from the maintained h_sum
-        // in one O(d) pass, then fold packets in at O(nnz).
-        ax_into(inv_n, &self.h_sum, &mut self.est);
-        for w in self.workers.iter_mut() {
+        // ---- phase 2: master aggregation (mirrors DistributedRunner's
+        // try_step). g^k = (1/|active|) Σ_active (h_i^{used} + m_i): seed
+        // from the maintained h_sum in one O(d) pass, then fold the active
+        // workers' packets in at O(nnz). A fully-quarantined fleet takes a
+        // zero step (the iterate holds), like the cluster's zero-reporter
+        // round.
+        if self.n_active == 0 {
+            zero(&mut self.est);
+        } else {
+            ax_into(inv_n, &self.h_sum, &mut self.est);
+        }
+        for (wi, w) in self.workers.iter_mut().enumerate() {
+            if !self.active[wi] {
+                continue;
+            }
             match &w.rule {
                 ShiftRule::Fixed => {
                     w.q_packet().add_scaled_into(inv_n, &mut self.est);
@@ -683,13 +756,15 @@ impl Algorithm for DcgdShift {
         // round. On the EF path the broadcast is the compressed C(e + Δ),
         // applied to the shared replica with the same op the workers use.
         // (Periodic `resync_every` redundancy is a runner-only operational
-        // knob and is not mirrored here.)
-        let bits_down = self.dl.finish_round_packet(delta, n, self.prec);
+        // knob and is not mirrored here.) Degraded fleets broadcast to the
+        // active workers only, matching the cluster's per-recipient charge.
+        let bits_down = self.dl.finish_round_packet(delta, self.n_active, self.prec);
 
         StepStats {
             bits_up,
             bits_down,
             bits_refresh,
+            active_workers: self.n_active,
         }
     }
 }
@@ -700,14 +775,21 @@ impl DcgdShift {
     /// coordinator does with the batched wire frames (see the module doc),
     /// pinned bit-identical by `tests/coordinator.rs`.
     fn step_batched(&mut self, p: &dyn Problem) -> StepStats {
-        let n = self.workers.len();
         let tau = self.local_steps;
-        let inv_n = 1.0 / n as f64;
+        let inv_n = if self.n_active > 0 {
+            1.0 / self.n_active as f64
+        } else {
+            0.0
+        };
         let mut bits_up: u64 = 0;
 
         // ---- phase 1: workers — τ local sub-steps each, packets kept in
-        // sub-step order (the stand-in for the batched wire frame)
+        // sub-step order (the stand-in for the batched wire frame);
+        // quarantined workers are skipped entirely
         for (wi, w) in self.workers.iter_mut().enumerate() {
+            if !self.active[wi] {
+                continue;
+            }
             while w.batch.len() < tau {
                 w.batch.push(Packet::Zero {
                     dim: self.x.len() as u32,
@@ -743,28 +825,34 @@ impl DcgdShift {
             }
         }
 
-        // ---- phase 2: master — sub-step-major replay, worker order
-        // within each sub-step, matching the threaded master's batched
-        // fold bit for bit
+        // ---- phase 2: master — sub-step-major replay over the active
+        // workers, worker order within each sub-step, matching the
+        // threaded master's batched fold bit for bit
         zero(&mut self.g_acc);
-        for t in 0..tau {
-            ax_into(inv_n, &self.h_sum, &mut self.est);
-            for w in self.workers.iter_mut() {
-                w.batch[t].add_scaled_into(inv_n, &mut self.est);
-                if let ShiftRule::Diana { alpha, .. } = &w.rule {
-                    w.batch[t].add_scaled_into(*alpha, &mut self.h_sum);
+        if self.n_active > 0 {
+            for t in 0..tau {
+                ax_into(inv_n, &self.h_sum, &mut self.est);
+                for (wi, w) in self.workers.iter_mut().enumerate() {
+                    if !self.active[wi] {
+                        continue;
+                    }
+                    w.batch[t].add_scaled_into(inv_n, &mut self.est);
+                    if let ShiftRule::Diana { alpha, .. } = &w.rule {
+                        w.batch[t].add_scaled_into(*alpha, &mut self.h_sum);
+                    }
                 }
+                axpy(1.0, &self.est, &mut self.g_acc);
             }
-            axpy(1.0, &self.est, &mut self.g_acc);
         }
         let delta = wire::build_update_packet(&self.g_acc, -self.gamma, self.prec, &mut self.delta);
         delta.add_scaled_into(1.0, &mut self.x);
-        let bits_down = self.dl.finish_round_packet(delta, n, self.prec);
+        let bits_down = self.dl.finish_round_packet(delta, self.n_active, self.prec);
 
         StepStats {
             bits_up,
             bits_down,
             bits_refresh: 0,
+            active_workers: self.n_active,
         }
     }
 }

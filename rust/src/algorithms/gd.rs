@@ -61,6 +61,7 @@ impl Algorithm for Gd {
             bits_up: self.n_workers as u64 * d * self.prec.bits(),
             bits_down: self.n_workers as u64 * d * self.prec.bits(),
             bits_refresh: 0,
+            active_workers: self.n_workers,
         }
     }
 }

@@ -172,6 +172,7 @@ impl Algorithm for Gdci {
             bits_up,
             bits_down,
             bits_refresh: 0,
+            active_workers: n,
         }
     }
 }
@@ -306,6 +307,7 @@ impl Algorithm for VrGdci {
             bits_up,
             bits_down,
             bits_refresh: 0,
+            active_workers: n,
         }
     }
 }

@@ -68,6 +68,11 @@ pub struct StepStats {
     /// STAR displacement frames) — tracked separately so both accounting
     /// conventions can be reported
     pub bits_refresh: u64,
+    /// workers whose reports folded into this round's aggregate — the
+    /// fleet size for drivers that cannot degrade, fewer than that when
+    /// the coordinator quarantined or missed workers (see
+    /// [`crate::coordinator::DistributedRunner::health`])
+    pub active_workers: usize,
 }
 
 /// A round-synchronous distributed optimization algorithm.

@@ -29,14 +29,22 @@
 //! [`ExperimentConfig::parse`]), the local-step batching factor
 //! (`local_steps` ≥ 1 sub-steps per communication round, batched into one
 //! uplink frame; requires the `dcgd` or plain `diana` algorithm when > 1)
-//! and the pipelined wall-clock pricing toggle (`pipeline`, affects the
-//! simulated time only):
+//! the pipelined wall-clock pricing toggle (`pipeline`, affects the
+//! simulated time only), and the fault-tolerance knobs: a deterministic
+//! fault-injection schedule (`faults`, an array of
+//! `{"worker", "kind", "round"[, "rounds"]}` objects with kind ∈ crash |
+//! garbage_uplink | corrupt_downlink | straggle), the per-round gather
+//! deadline (`round_timeout_ms` > 0) and the consecutive-miss quarantine
+//! threshold (`quarantine_after` ≥ 1) — see [`crate::coordinator::faults`]
+//! and the runner module doc:
 //!
 //! ```json
 //! { "cluster": {"prec": "f32", "resync_every": 1000, "local_steps": 8,
 //!               "pipeline": true,
 //!               "uplink": {"error_feedback": true},
-//!               "downlink": {"compressor": "top-k", "q": 0.005}} }
+//!               "downlink": {"compressor": "top-k", "q": 0.005},
+//!               "round_timeout_ms": 500, "quarantine_after": 2,
+//!               "faults": [{"worker": 3, "kind": "crash", "round": 40}]} }
 //! ```
 
 use std::sync::Arc;
@@ -46,7 +54,9 @@ use crate::compressors::{
     BernoulliP, Compressor, Identity, NaturalCompression, NaturalDithering, RandK,
     StandardDithering, Ternary, TopK, ValPrec,
 };
-use crate::coordinator::{ClusterConfig, DistributedRunner, MethodKind};
+use crate::coordinator::{
+    ClusterConfig, DistributedRunner, FaultPlan, MethodKind, DEFAULT_ROUND_TIMEOUT_MS,
+};
 use crate::theory;
 use crate::data::{RegressionOpts, W2aOpts};
 use crate::problems::{Logistic, Problem, Quadratic, Ridge};
@@ -376,7 +386,7 @@ impl UplinkSpec {
 }
 
 /// Coordinator-level knobs (the `"cluster"` JSON object, all optional).
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ClusterSpec {
     /// broadcast a dense resync frame every this many rounds (0 = only on
     /// round 0 and after `set_x0`)
@@ -394,6 +404,13 @@ pub struct ClusterSpec {
     pub downlink: DownlinkSpec,
     /// error-fed-back uplink toggle (default: exact `Q_i(m_i)` frames)
     pub uplink: UplinkSpec,
+    /// deterministic fault injection schedule (`"faults"` array; default:
+    /// no faults) — see [`crate::coordinator::faults`]
+    pub faults: FaultPlan,
+    /// gather deadline per round in milliseconds (must be > 0)
+    pub round_timeout_ms: u64,
+    /// consecutive deadline misses before quarantine (must be ≥ 1)
+    pub quarantine_after: usize,
 }
 
 impl Default for ClusterSpec {
@@ -405,6 +422,9 @@ impl Default for ClusterSpec {
             pipeline: false,
             downlink: DownlinkSpec::Exact,
             uplink: UplinkSpec::Exact,
+            faults: FaultPlan::new(),
+            round_timeout_ms: DEFAULT_ROUND_TIMEOUT_MS,
+            quarantine_after: 1,
         }
     }
 }
@@ -451,6 +471,25 @@ impl ClusterSpec {
         };
         let downlink = DownlinkSpec::parse(j.get("downlink"))?;
         let uplink = UplinkSpec::parse(j.get("uplink"))?;
+        let faults = Self::parse_faults(j.get("faults"))?;
+        let rt_j = j.get("round_timeout_ms");
+        let round_timeout_ms = if rt_j.is_null() {
+            DEFAULT_ROUND_TIMEOUT_MS
+        } else {
+            match rt_j.as_usize() {
+                Some(v) if v >= 1 => v as u64,
+                _ => return Err(bad("cluster.round_timeout_ms must be a positive integer")),
+            }
+        };
+        let qa_j = j.get("quarantine_after");
+        let quarantine_after = if qa_j.is_null() {
+            1
+        } else {
+            match qa_j.as_usize() {
+                Some(v) if v >= 1 => v,
+                _ => return Err(bad("cluster.quarantine_after must be an integer >= 1")),
+            }
+        };
         Ok(Self {
             resync_every,
             prec,
@@ -458,7 +497,66 @@ impl ClusterSpec {
             pipeline,
             downlink,
             uplink,
+            faults,
+            round_timeout_ms,
+            quarantine_after,
         })
+    }
+
+    /// The `"cluster.faults"` array: each element is an object
+    /// `{"worker": i, "kind": "...", "round": k}` where kind is one of
+    /// `crash`, `garbage_uplink`, `corrupt_downlink` or `straggle`
+    /// (straggle additionally takes `"rounds": s ≥ 1`, the window length).
+    /// Worker indices are range-checked against the fleet later, by
+    /// [`DistributedRunner::new`].
+    fn parse_faults(j: &Json) -> Result<FaultPlan, ConfigError> {
+        if j.is_null() {
+            return Ok(FaultPlan::new());
+        }
+        let items = j
+            .as_arr()
+            .ok_or_else(|| bad("cluster.faults must be an array of fault objects"))?;
+        let mut plan = FaultPlan::new();
+        for (i, item) in items.iter().enumerate() {
+            let worker = item.get("worker").as_usize().ok_or_else(|| {
+                bad(format!(
+                    "cluster.faults[{i}].worker must be a non-negative integer"
+                ))
+            })?;
+            let round = item.get("round").as_usize().ok_or_else(|| {
+                bad(format!(
+                    "cluster.faults[{i}].round must be a non-negative integer"
+                ))
+            })?;
+            let kind = item
+                .get("kind")
+                .as_str()
+                .ok_or_else(|| bad(format!("cluster.faults[{i}].kind missing")))?;
+            plan = match kind {
+                "crash" => plan.crash(worker, round),
+                "garbage_uplink" => plan.garbage_uplink(worker, round),
+                "corrupt_downlink" => plan.corrupt_downlink(worker, round),
+                "straggle" => {
+                    let rounds = item
+                        .get("rounds")
+                        .as_usize()
+                        .filter(|r| *r >= 1)
+                        .ok_or_else(|| {
+                            bad(format!(
+                                "cluster.faults[{i}]: straggle needs an integer rounds >= 1"
+                            ))
+                        })?;
+                    plan.straggle(worker, round, rounds)
+                }
+                other => {
+                    return Err(bad(format!(
+                        "cluster.faults[{i}]: unknown kind '{other}' (crash | \
+                         garbage_uplink | corrupt_downlink | straggle)"
+                    )))
+                }
+            };
+        }
+        Ok(plan)
     }
 }
 
@@ -832,6 +930,10 @@ impl ExperimentConfig {
                 pipeline: self.cluster.pipeline,
                 downlink: self.cluster.downlink.build(d),
                 uplink_ef: ef,
+                faults: (!self.cluster.faults.faults.is_empty())
+                    .then(|| self.cluster.faults.clone()),
+                round_timeout_ms: self.cluster.round_timeout_ms,
+                quarantine_after: self.cluster.quarantine_after,
             },
         );
         Ok((problem, runner))
@@ -909,6 +1011,62 @@ mod tests {
         // a wrong-typed resync_every must error, not silently become 0
         let bad = with.replace("25", "\"25\"");
         assert!(ExperimentConfig::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn fault_schedule_parses_and_validates() {
+        let with = r#"{
+            "problem": {"kind": "quadratic", "d": 10, "workers": 3, "seed": 1},
+            "algorithm": {"kind": "dcgd"},
+            "compressor": {"kind": "rand-k", "q": 0.3},
+            "cluster": {
+                "round_timeout_ms": 250,
+                "quarantine_after": 2,
+                "faults": [
+                    {"worker": 2, "kind": "crash", "round": 7},
+                    {"worker": 1, "kind": "straggle", "round": 3, "rounds": 4},
+                    {"worker": 1, "kind": "garbage_uplink", "round": 12},
+                    {"worker": 0, "kind": "corrupt_downlink", "round": 5}
+                ]
+            }
+        }"#;
+        let cfg = ExperimentConfig::parse(with).unwrap();
+        assert_eq!(cfg.cluster.round_timeout_ms, 250);
+        assert_eq!(cfg.cluster.quarantine_after, 2);
+        assert_eq!(
+            cfg.cluster.faults,
+            FaultPlan::new()
+                .crash(2, 7)
+                .straggle(1, 3, 4)
+                .garbage_uplink(1, 12)
+                .corrupt_downlink(0, 5)
+        );
+        assert!(cfg.build_distributed().is_ok());
+        // defaults: no faults, generous deadline, quarantine on first miss
+        let cfg = ExperimentConfig::parse(SAMPLE).unwrap();
+        assert!(cfg.cluster.faults.faults.is_empty());
+        assert_eq!(cfg.cluster.round_timeout_ms, DEFAULT_ROUND_TIMEOUT_MS);
+        assert_eq!(cfg.cluster.quarantine_after, 1);
+        // parse-time validation: unknown kinds, missing straggle window,
+        // non-array faults, zero deadline / quarantine threshold all error
+        assert!(
+            ExperimentConfig::parse(&with.replace(r#""kind": "crash""#, r#""kind": "reboot""#))
+                .is_err()
+        );
+        assert!(ExperimentConfig::parse(&with.replace(r#", "rounds": 4"#, "")).is_err());
+        assert!(ExperimentConfig::parse(
+            &with.replace(r#""round_timeout_ms": 250"#, r#""round_timeout_ms": 0"#)
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            &with.replace(r#""quarantine_after": 2"#, r#""quarantine_after": 0"#)
+        )
+        .is_err());
+        let non_array = with.replace(
+            r#""faults": ["#,
+            r#""faults": {"worker": 0}, "ignored": ["#,
+        );
+        assert!(ExperimentConfig::parse(&non_array).is_err());
     }
 
     #[test]

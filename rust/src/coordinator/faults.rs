@@ -1,0 +1,234 @@
+//! Deterministic fault injection for the threaded coordinator.
+//!
+//! A [`FaultPlan`] is a seeded, reproducible schedule of worker faults:
+//! crash-at-round, garbage uplink frames, corrupted downlink bytes, and
+//! straggler windows. The plan is compiled per worker into a
+//! [`WorkerFaultScript`] that the worker loop consults at fixed points of
+//! its round — so every failure path of
+//! [`crate::coordinator::DistributedRunner`] (crash, timeout, protocol
+//! defect) is exercisable on purpose, with the same seed producing the
+//! same fault sequence on every run.
+//!
+//! Fault semantics, chosen so the surviving fleet stays bit-identical to a
+//! degraded single-process mirror wherever the theory allows it:
+//!
+//! * [`FaultKind::Crash`] — the worker thread exits silently at the start
+//!   of the given round, before any gradient or RNG draw. The master sees
+//!   a gather timeout (and, on a later send, a disconnected channel).
+//! * [`FaultKind::Straggle`] — for `rounds` consecutive rounds the worker
+//!   consumes its command but performs **no** processing: no downlink
+//!   apply, no gradient, no RNG draw, no reply. Its local state is frozen,
+//!   which is exactly what the dense-resync rejoin path repairs.
+//! * [`FaultKind::GarbageUplink`] — the worker computes the round normally
+//!   (RNG advanced, shift updated) but corrupts its encoded Q-frame before
+//!   sending. The master's decode rejects the frame and quarantines the
+//!   worker as a protocol defect. Because local state has already advanced,
+//!   this fault is *not* bit-identity-safe — it exists to exercise the
+//!   master's malformed-frame path.
+//! * [`FaultKind::CorruptDownlink`] — the worker corrupts its own copy of
+//!   the broadcast bytes before decoding, detects the defect, reports a
+//!   [`crate::coordinator::WorkerFailure`] and exits — the organic
+//!   worker-reported protocol failure, injected deterministically (before
+//!   any compute or RNG draw, so survivors keep bit-identity).
+
+use crate::util::rng::Pcg64;
+
+/// RNG stream tag for [`FaultPlan::seeded`] (disjoint from the runner's
+/// `0xa160` root and its derived worker streams).
+const FAULT_STREAM: u64 = 0xfa17;
+
+/// One kind of injected fault, anchored at a round index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Thread exits silently at the start of `round`.
+    Crash { round: usize },
+    /// Q-frame bytes corrupted after a normal round's compute at `round`.
+    GarbageUplink { round: usize },
+    /// Worker-local downlink bytes corrupted at `round`; the worker
+    /// reports the decode defect and exits.
+    CorruptDownlink { round: usize },
+    /// For `rounds` rounds starting at `round`, consume commands without
+    /// processing or replying.
+    Straggle { round: usize, rounds: usize },
+}
+
+/// A fault bound to a worker index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub worker: usize,
+    pub kind: FaultKind,
+}
+
+/// A reproducible schedule of worker faults (see the module doc).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Crash `worker`'s thread at the start of `round`.
+    pub fn crash(mut self, worker: usize, round: usize) -> Self {
+        self.faults.push(FaultSpec {
+            worker,
+            kind: FaultKind::Crash { round },
+        });
+        self
+    }
+
+    /// Corrupt `worker`'s uplink Q-frame at `round`.
+    pub fn garbage_uplink(mut self, worker: usize, round: usize) -> Self {
+        self.faults.push(FaultSpec {
+            worker,
+            kind: FaultKind::GarbageUplink { round },
+        });
+        self
+    }
+
+    /// Corrupt `worker`'s local copy of the `round` broadcast.
+    pub fn corrupt_downlink(mut self, worker: usize, round: usize) -> Self {
+        self.faults.push(FaultSpec {
+            worker,
+            kind: FaultKind::CorruptDownlink { round },
+        });
+        self
+    }
+
+    /// Freeze `worker` for `rounds` rounds starting at `round`.
+    pub fn straggle(mut self, worker: usize, round: usize, rounds: usize) -> Self {
+        self.faults.push(FaultSpec {
+            worker,
+            kind: FaultKind::Straggle { round, rounds },
+        });
+        self
+    }
+
+    /// A seeded random plan over an `n`-worker fleet and a `horizon` of
+    /// rounds: each worker except worker 0 (kept clean so the fleet always
+    /// has a survivor) draws one fault with probability 1/2, with a kind
+    /// and round chosen from the plan's own RNG stream. Deterministic for
+    /// a given `(seed, n, horizon)`.
+    pub fn seeded(seed: u64, n: usize, horizon: usize) -> Self {
+        assert!(horizon >= 2, "fault horizon must cover at least 2 rounds");
+        let mut rng = Pcg64::with_stream(seed, FAULT_STREAM);
+        let mut plan = Self::new();
+        for worker in 1..n {
+            if !rng.bernoulli(0.5) {
+                continue;
+            }
+            let round = 1 + rng.below(horizon as u64 - 1) as usize;
+            let kind = match rng.below(4) {
+                0 => FaultKind::Crash { round },
+                1 => FaultKind::GarbageUplink { round },
+                2 => FaultKind::CorruptDownlink { round },
+                _ => FaultKind::Straggle {
+                    round,
+                    rounds: 1 + rng.below(3) as usize,
+                },
+            };
+            plan.faults.push(FaultSpec { worker, kind });
+        }
+        plan
+    }
+
+    /// Compile the plan into one worker's script (the faults addressed to
+    /// `worker`, in insertion order).
+    pub fn script_for(&self, worker: usize) -> WorkerFaultScript {
+        WorkerFaultScript {
+            faults: self
+                .faults
+                .iter()
+                .filter(|f| f.worker == worker)
+                .map(|f| f.kind)
+                .collect(),
+        }
+    }
+}
+
+/// One worker's compiled fault schedule; queried statelessly by round so
+/// the worker loop stays trivially deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerFaultScript {
+    faults: Vec<FaultKind>,
+}
+
+impl WorkerFaultScript {
+    /// No faults scheduled at all (lets the worker loop skip the checks).
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Should the thread exit silently at the start of round `k`?
+    pub fn crash_at(&self, k: usize) -> bool {
+        self.faults
+            .iter()
+            .any(|f| matches!(f, FaultKind::Crash { round } if *round == k))
+    }
+
+    /// Is round `k` inside a straggle window?
+    pub fn straggle_at(&self, k: usize) -> bool {
+        self.faults.iter().any(|f| {
+            matches!(f, FaultKind::Straggle { round, rounds }
+                if *round <= k && k < round + rounds)
+        })
+    }
+
+    /// Should the round-`k` Q-frame be corrupted before sending?
+    pub fn garbage_uplink_at(&self, k: usize) -> bool {
+        self.faults
+            .iter()
+            .any(|f| matches!(f, FaultKind::GarbageUplink { round } if *round == k))
+    }
+
+    /// Should the worker's copy of the round-`k` broadcast be corrupted?
+    pub fn corrupt_downlink_at(&self, k: usize) -> bool {
+        self.faults
+            .iter()
+            .any(|f| matches!(f, FaultKind::CorruptDownlink { round } if *round == k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_compiles_per_worker_scripts() {
+        let plan = FaultPlan::new()
+            .crash(2, 5)
+            .straggle(1, 3, 2)
+            .garbage_uplink(1, 9)
+            .corrupt_downlink(3, 4);
+        let s0 = plan.script_for(0);
+        assert!(s0.is_empty());
+        let s1 = plan.script_for(1);
+        assert!(s1.straggle_at(3) && s1.straggle_at(4) && !s1.straggle_at(5));
+        assert!(s1.garbage_uplink_at(9) && !s1.garbage_uplink_at(8));
+        assert!(!s1.crash_at(5));
+        let s2 = plan.script_for(2);
+        assert!(s2.crash_at(5) && !s2.crash_at(4));
+        let s3 = plan.script_for(3);
+        assert!(s3.corrupt_downlink_at(4) && !s3.corrupt_downlink_at(3));
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_spare_worker_zero() {
+        let a = FaultPlan::seeded(42, 8, 50);
+        let b = FaultPlan::seeded(42, 8, 50);
+        assert_eq!(a, b);
+        assert!(a.faults.iter().all(|f| f.worker != 0));
+        assert!(a.faults.iter().all(|f| match f.kind {
+            FaultKind::Crash { round }
+            | FaultKind::GarbageUplink { round }
+            | FaultKind::CorruptDownlink { round }
+            | FaultKind::Straggle { round, .. } => (1..50).contains(&round),
+        }));
+        // a different seed moves the schedule
+        let c = FaultPlan::seeded(43, 8, 50);
+        assert_ne!(a, c);
+    }
+}

@@ -21,8 +21,19 @@
 //! replica instead of receiving the dense x^k. See [`crate::wire`] for the
 //! frame formats and [`runner`] for the broadcast protocol details.
 
+//! Rounds are fault-tolerant: the gather is deadline-bounded, a missing or
+//! misbehaving worker is quarantined (the aggregate reweights to the
+//! surviving subset, shift-consistently), stragglers can rejoin through
+//! the dense resync bootstrap, and [`faults`] can inject every failure
+//! path deterministically. See [`runner`]'s module doc for the semantics.
+
+pub mod faults;
 pub mod protocol;
 pub mod runner;
 
-pub use protocol::{FrameSet, MethodKind, WorkerCommand, WorkerFailure, WorkerSnapshot, WorkerUpdate};
-pub use runner::{ClusterConfig, DistributedRunner};
+pub use faults::{FaultKind, FaultPlan, FaultSpec, WorkerFaultScript};
+pub use protocol::{
+    FailureClass, FrameSet, MethodKind, RunnerHealth, WorkerCommand, WorkerFailure, WorkerSnapshot,
+    WorkerState, WorkerUpdate,
+};
+pub use runner::{ClusterConfig, DistributedRunner, DEFAULT_ROUND_TIMEOUT_MS};

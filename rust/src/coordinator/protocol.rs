@@ -38,6 +38,19 @@ pub enum WorkerCommand {
         down: Arc<Vec<u8>>,
         recycled: FrameSet,
     },
+    /// Re-admit a quarantined-but-alive worker (the straggler case): a
+    /// dense resync frame rebuilt from the master's *current* iterate,
+    /// plus the master's replica of this worker's shift — the worker
+    /// overwrites its local `x` and `h`, flushes its EF uplink
+    /// accumulator, and answers round `k` like any freshly bootstrapped
+    /// worker. The off-hot-path clones are fine: rejoin is an exceptional
+    /// event, not a round primitive.
+    Rejoin {
+        k: usize,
+        down: Arc<Vec<u8>>,
+        h: Vec<f64>,
+        recycled: FrameSet,
+    },
     /// Debug/ops introspection: snapshot this worker's private state
     /// (current shift and iterate replica) and send it back on `reply`.
     /// Sent between rounds, when the worker is idle; the clones allocate,
@@ -63,17 +76,46 @@ pub struct WorkerSnapshot {
     pub uplink_error: Option<Vec<f64>>,
 }
 
-/// A fatal worker-side protocol failure (malformed or mis-kinded downlink
-/// frame), reported through [`WorkerUpdate::failure`] so the master can
-/// fail fast with full context — round and worker id — instead of
-/// deadlocking on a reply that will never come. The worker thread exits
-/// after sending it; the cluster is unrecoverable and must be dropped.
+/// What broke: the failure class lets harness logs distinguish injected
+/// faults from organic ones and pick the right operator response (a
+/// [`Timeout`](Self::Timeout) worker may straggle back and rejoin; a
+/// [`Protocol`](Self::Protocol) defect means corrupted wire state).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureClass {
+    /// The worker's thread or channel is gone (crashed / disconnected).
+    Crash,
+    /// The worker missed the round deadline (straggler or hang).
+    Timeout,
+    /// A malformed or mis-kinded wire frame (either end's decode).
+    Protocol,
+}
+
+impl FailureClass {
+    /// Lower-case label used by [`WorkerFailure`]'s `Display`.
+    pub fn label(self) -> &'static str {
+        match self {
+            FailureClass::Crash => "crash",
+            FailureClass::Timeout => "timeout",
+            FailureClass::Protocol => "protocol",
+        }
+    }
+}
+
+/// A worker-side failure (crash, deadline miss, or malformed wire frame),
+/// reported through [`WorkerUpdate::failure`] or synthesized by the
+/// master's deadline-bounded gather. A failing worker is quarantined and
+/// the round completes over the survivors (see
+/// [`crate::coordinator::DistributedRunner`]'s module doc); the failure
+/// is only fatal — returned as `Err` from `try_step` — when no active
+/// worker remains.
 #[derive(Clone, Debug)]
 pub struct WorkerFailure {
     /// failing worker id, or [`WorkerFailure::NO_WORKER`] when the
     /// failure cannot be attributed to one worker (every thread gone)
     pub worker: usize,
     pub round: usize,
+    /// crash / timeout / protocol — see [`FailureClass`]
+    pub class: FailureClass,
     pub detail: String,
 }
 
@@ -86,18 +128,64 @@ impl WorkerFailure {
 impl std::fmt::Display for WorkerFailure {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         if self.worker == Self::NO_WORKER {
-            write!(f, "cluster failed at round {}: {}", self.round, self.detail)
+            write!(
+                f,
+                "cluster failed at round {} [{}]: {}",
+                self.round,
+                self.class.label(),
+                self.detail
+            )
         } else {
             write!(
                 f,
-                "worker {} failed at round {}: {}",
-                self.worker, self.round, self.detail
+                "worker {} failed at round {} [{}]: {}",
+                self.worker,
+                self.round,
+                self.class.label(),
+                self.detail
             )
         }
     }
 }
 
 impl std::error::Error for WorkerFailure {}
+
+/// A worker's participation state as the master sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerState {
+    /// In the round rotation: receives `Round` commands, owns a gather slot.
+    Active,
+    /// Out of the rotation but its thread may still be alive (deadline
+    /// miss / protocol defect); eligible for
+    /// [`crate::coordinator::DistributedRunner::rejoin`].
+    Quarantined,
+    /// Thread confirmed gone (channel disconnected); cannot rejoin.
+    Failed,
+}
+
+/// Master-side health snapshot
+/// ([`crate::coordinator::DistributedRunner::health`]): which workers are
+/// in the rotation, how degraded the run has been, and who is close to
+/// quarantine.
+#[derive(Clone, Debug)]
+pub struct RunnerHealth {
+    /// per-worker participation state
+    pub states: Vec<WorkerState>,
+    /// workers currently in the round rotation
+    pub active_workers: usize,
+    /// rounds completed with fewer reporters than configured workers
+    pub degraded_rounds: usize,
+    /// per-worker consecutive missed-deadline count (reset on report;
+    /// quarantine triggers at the configured `quarantine_after`)
+    pub consecutive_misses: Vec<u32>,
+}
+
+impl RunnerHealth {
+    /// True when every configured worker is active and no round degraded.
+    pub fn all_healthy(&self) -> bool {
+        self.degraded_rounds == 0 && self.states.iter().all(|s| *s == WorkerState::Active)
+    }
+}
 
 /// The encoded frames one worker uploads in one round.
 #[derive(Debug, Default)]

@@ -58,15 +58,51 @@
 //! composed with `local_steps` batching. Step sizes for the contractive
 //! regime come from [`crate::theory::ef_uplink`].
 //!
-//! # Protocol failures fail fast
+//! # Fault-tolerant rounds: deadline, quarantine, rejoin
 //!
-//! A malformed or mis-kinded downlink frame used to abort the worker
-//! thread mid-round, deadlocking the master on a gather that would never
-//! complete. Workers now report a structured [`WorkerFailure`] (round +
-//! worker id + detail) through [`WorkerUpdate::failure`] and exit;
-//! [`DistributedRunner::try_step`] surfaces it as an `Err` (the
-//! [`Algorithm::step`] wrapper panics with the same context). After a
-//! failure the cluster is unrecoverable and must be dropped.
+//! The shifted-compression aggregate `g = (1/|R|) Σ_{i∈R} (h_i + q_i)` is
+//! defined for whichever workers R actually report, so a failure degrades
+//! the fleet instead of killing the run:
+//!
+//! * the gather is **deadline-bounded** — [`ClusterConfig::round_timeout_ms`]
+//!   caps how long the master waits for the round's updates (`recv_timeout`,
+//!   never a bare `recv`), so no fault configuration can deadlock it;
+//! * an [`WorkerState::Active`] worker that misses
+//!   [`ClusterConfig::quarantine_after`] consecutive deadlines, ships a
+//!   malformed frame, or reports a [`WorkerFailure`] is **quarantined**:
+//!   the master subtracts its shift replica `h_i` from the maintained
+//!   `h_sum` in one O(d) pass, reweights the aggregate to `1/|active|`,
+//!   stops sending it `Round` commands and skips its gather slot — the
+//!   survivors' trajectory is bit-identical to an (n−f)-worker
+//!   [`crate::algorithms::DcgdShift`] mirror degraded at the same round
+//!   (pinned by `tests/chaos.rs`);
+//! * a worker that reports *within* the round but after some other worker
+//!   already missed is still folded: a transient miss only excludes the
+//!   missing worker's `h_i` from that round's estimator (`est −= inv·h_i`,
+//!   leaving `h_sum` untouched until quarantine actually triggers);
+//! * a quarantined worker whose thread is alive (the straggler case) can
+//!   **rejoin** ([`DistributedRunner::rejoin`]): the master re-adds its
+//!   shift to `h_sum` and ships a [`WorkerCommand::Rejoin`] bootstrap — a
+//!   dense resync of the current iterate plus the master's shift replica —
+//!   and the worker flushes its EF uplink accumulator exactly as it would
+//!   on any resync (the EF-BV state-reset rule: nothing stale is retried
+//!   against re-established state). With the EF *downlink* armed, a rejoin
+//!   also forces a full-fleet dense resync so the shared replica mirror
+//!   stays uniform;
+//! * [`DistributedRunner::health`] reports a [`RunnerHealth`] snapshot
+//!   (per-worker state, consecutive-miss counters, degraded-round count)
+//!   and `StepStats::active_workers` carries the reporter count per round,
+//!   so degradation is observable from the harness.
+//!
+//! A failure is **fatal** — `Err` from [`DistributedRunner::try_step`],
+//! panic from the [`Algorithm::step`] wrapper — only when no worker can
+//! ever report again (every thread exited). Fatal errors are sticky: the
+//! runner is poisoned and every later `try_step` returns the same
+//! [`WorkerFailure`] instead of touching the half-degraded state. Failure
+//! classes (crash / timeout / protocol, [`FailureClass`]) are carried on
+//! every [`WorkerFailure`] so harness logs can tell injected faults
+//! ([`crate::coordinator::faults::FaultPlan`], wired in via
+//! [`ClusterConfig::faults`]) from organic ones.
 //!
 //! # Zero-allocation round pipeline
 //!
@@ -127,14 +163,17 @@
 //! compute seconds in each [`WorkerUpdate`]). The toggle affects only the
 //! simulated wall clock — trajectories are bit-identical either way.
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::algorithms::{Algorithm, StepStats};
 use crate::compressors::{Compressor, Packet, PayloadBitsCache, ValPrec};
+use crate::coordinator::faults::{FaultPlan, WorkerFaultScript};
 use crate::coordinator::protocol::{
-    FrameSet, MethodKind, WorkerCommand, WorkerFailure, WorkerSnapshot, WorkerUpdate,
+    FailureClass, FrameSet, MethodKind, RunnerHealth, WorkerCommand, WorkerFailure, WorkerSnapshot,
+    WorkerState, WorkerUpdate,
 };
 use crate::downlink::DownlinkState;
 use crate::ef::{self, EfUplink};
@@ -188,6 +227,42 @@ pub struct ClusterConfig {
     /// on. The bit-identity guarantees hold for `resync_every = 0` plus
     /// `set_x0`-forced resyncs, which both drivers mirror.
     pub uplink_ef: bool,
+    /// deterministic fault injection schedule (`None` = no faults); see
+    /// [`crate::coordinator::faults`] for the per-kind semantics
+    pub faults: Option<FaultPlan>,
+    /// gather deadline per round, milliseconds (must be > 0): the master
+    /// waits at most this long for the round's worker updates before
+    /// counting the missing workers as deadline misses — see the module
+    /// doc. [`DEFAULT_ROUND_TIMEOUT_MS`] is generous enough that healthy
+    /// fleets never notice it.
+    pub round_timeout_ms: u64,
+    /// consecutive deadline misses before a worker is quarantined (≥ 1;
+    /// 1 = quarantine on the first missed round)
+    pub quarantine_after: usize,
+}
+
+/// Default [`ClusterConfig::round_timeout_ms`]: far above any healthy
+/// round, so the deadline only ever fires on genuinely stuck workers.
+pub const DEFAULT_ROUND_TIMEOUT_MS: u64 = 30_000;
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            method: MethodKind::Fixed,
+            gamma: 0.0,
+            prec: ValPrec::F64,
+            seed: 0,
+            links: None,
+            resync_every: 0,
+            local_steps: 1,
+            pipeline: false,
+            downlink: None,
+            uplink_ef: false,
+            faults: None,
+            round_timeout_ms: DEFAULT_ROUND_TIMEOUT_MS,
+            quarantine_after: 1,
+        }
+    }
 }
 
 struct WorkerThread {
@@ -259,6 +334,27 @@ pub struct DistributedRunner {
     needs_resync: bool,
     resync_every: usize,
     round: usize,
+    // ---- fault tolerance (see the module doc)
+    /// per-worker participation state
+    states: Vec<WorkerState>,
+    /// workers currently in the round rotation (`states[i] == Active`)
+    n_active: usize,
+    /// per-worker consecutive missed-deadline count (reset on report)
+    misses: Vec<u32>,
+    /// workers re-admitted via [`DistributedRunner::rejoin`] whose
+    /// bootstrap command has not shipped yet
+    rejoining: Vec<bool>,
+    /// most recent failure per worker (class + detail, kept for ops/tests)
+    last_failures: Vec<Option<WorkerFailure>>,
+    /// rounds completed with fewer reporters than configured workers
+    degraded_rounds: usize,
+    /// gather deadline per round
+    round_timeout: Duration,
+    /// consecutive misses before quarantine
+    quarantine_after: u32,
+    /// sticky fatal failure: set once the cluster can never gather again,
+    /// returned verbatim by every later `try_step`
+    poisoned: Option<WorkerFailure>,
 }
 
 /// Per-worker static configuration, fixed for the run (bundled so the
@@ -273,6 +369,8 @@ struct WorkerCfg {
     local_steps: usize,
     /// worker-side error feedback on the uplink (see the module doc)
     uplink_ef: bool,
+    /// this worker's compiled fault schedule (empty = no injected faults)
+    script: WorkerFaultScript,
 }
 
 /// Worker-side loop: one thread per worker.
@@ -304,6 +402,7 @@ fn worker_loop(
         gamma,
         local_steps,
         uplink_ef,
+        script,
     } = cfg;
     let d = problem.dim();
     // worker-side EF uplink accumulator (None = exact uplink)
@@ -333,6 +432,19 @@ fn worker_loop(
     while let Ok(cmd) = cmd_rx.recv() {
         let (k, down, mut frames) = match cmd {
             WorkerCommand::Round { k, down, recycled } => (k, down, recycled),
+            WorkerCommand::Rejoin {
+                k,
+                down,
+                h: h_boot,
+                recycled,
+            } => {
+                // re-admission bootstrap: adopt the master's replica of
+                // this worker's shift; the dense resync frame below
+                // rebuilds the iterate replica and flushes the EF uplink
+                // accumulator, then the round runs normally
+                h.copy_from_slice(&h_boot);
+                (k, down, recycled)
+            }
             WorkerCommand::Inspect { reply } => {
                 let _ = reply.send(WorkerSnapshot {
                     worker: wi,
@@ -344,17 +456,37 @@ fn worker_loop(
             }
             WorkerCommand::Shutdown => break,
         };
+        // deterministic fault injection (no-ops without a script): a crash
+        // exits the thread before any compute or RNG draw; a straggled
+        // round consumes the command without processing or replying —
+        // both leave local state exactly where the previous round left
+        // it, so the surviving fleet keeps bit-identity with the mirror.
+        if !script.is_empty() {
+            if script.crash_at(k) {
+                break;
+            }
+            if script.straggle_at(k) {
+                continue;
+            }
+        }
         // measured compute stage (downlink apply → frame encode): the
         // staged network pricing's compute input
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
+        // injected downlink corruption replaces this worker's *view* of
+        // the broadcast (the shared buffer itself is untouched — other
+        // workers must decode it cleanly); the decode below rejects it
+        // and the worker reports the defect like any organic one
+        let garbage: Option<Vec<u8>> = (!script.is_empty() && script.corrupt_downlink_at(k))
+            .then(|| vec![0xBA, 0xAD, 0xF0, 0x0D]);
+        let down_bytes: &[u8] = garbage.as_deref().unwrap_or(&down);
         // apply the downlink frame to the replica, then release the shared
         // broadcast buffer before the heavy work — the master re-encodes
         // into it once every worker has dropped its handle. A decode or
-        // framing defect is a fatal protocol error: report it with round +
+        // framing defect is a protocol failure: report it with round +
         // worker id through the update channel and exit, so the master
-        // fails fast instead of deadlocking on a gather that will never
-        // complete.
-        let defect: Option<String> = match wire::decode_down_into(&down, &mut down_pkt) {
+        // quarantines this worker instead of deadlocking on a gather that
+        // will never complete.
+        let defect: Option<String> = match wire::decode_down_into(down_bytes, &mut down_pkt) {
             Err(e) => Some(format!("malformed downlink frame: {e}")),
             Ok(_) if down_pkt.dim() != d => Some(format!(
                 "downlink frame dimension mismatch: frame carries {}, replica is {d}",
@@ -394,6 +526,7 @@ fn worker_loop(
                 failure: Some(WorkerFailure {
                     worker: wi,
                     round: k,
+                    class: FailureClass::Protocol,
                     detail,
                 }),
             });
@@ -446,6 +579,13 @@ fn worker_loop(
                     MethodKind::Diana { alpha, .. } => pkt.add_scaled_into(alpha, &mut h),
                     _ => unreachable!("local_steps > 1 is validated at construction"),
                 }
+            }
+            if !script.is_empty() && script.garbage_uplink_at(k) {
+                // local state has already advanced — this corrupts only
+                // the wire frame, exercising the master's malformed-
+                // uplink quarantine path
+                frames.q_frame.clear();
+                frames.q_frame.extend_from_slice(&[0xBA, 0xAD, 0xF0, 0x0D]);
             }
             let wire_bytes = frames.q_frame.len();
             if up_tx
@@ -550,6 +690,11 @@ fn worker_loop(
             }
         }
 
+        if !script.is_empty() && script.garbage_uplink_at(k) {
+            // see the batched-path twin above: frame-only corruption
+            frames.q_frame.clear();
+            frames.q_frame.extend_from_slice(&[0xBA, 0xAD, 0xF0, 0x0D]);
+        }
         let wire_bytes = frames.q_frame.len()
             + frames.c_frame.as_ref().map(|f| f.len()).unwrap_or(0)
             + frames.refresh.as_ref().map(|f| f.len()).unwrap_or(0);
@@ -615,6 +760,24 @@ impl DistributedRunner {
                 cfg.method
             );
         }
+        assert!(
+            cfg.round_timeout_ms > 0,
+            "round_timeout_ms must be positive — a zero deadline would count every \
+             round as missed for the whole fleet"
+        );
+        assert!(
+            cfg.quarantine_after >= 1,
+            "quarantine_after must be at least 1 (quarantine on the first miss)"
+        );
+        if let Some(plan) = &cfg.faults {
+            for f in &plan.faults {
+                assert!(
+                    f.worker < n,
+                    "fault plan addresses worker {} but the fleet has {n} workers",
+                    f.worker
+                );
+            }
+        }
 
         let mut root = Pcg64::with_stream(cfg.seed, 0xa160);
         // Bounded at n: at most one in-flight update per worker, so sends
@@ -637,6 +800,11 @@ impl DistributedRunner {
                 gamma: cfg.gamma,
                 local_steps: cfg.local_steps,
                 uplink_ef: cfg.uplink_ef,
+                script: cfg
+                    .faults
+                    .as_ref()
+                    .map(|p| p.script_for(wi))
+                    .unwrap_or_default(),
             };
             let h0 = shifts[wi].clone();
             let c = if needs_c { cs_iter.next() } else { None };
@@ -711,6 +879,15 @@ impl DistributedRunner {
             needs_resync: true,
             resync_every: cfg.resync_every,
             round: 0,
+            states: vec![WorkerState::Active; n],
+            n_active: n,
+            misses: vec![0u32; n],
+            rejoining: vec![false; n],
+            last_failures: (0..n).map(|_| None).collect(),
+            degraded_rounds: 0,
+            round_timeout: Duration::from_millis(cfg.round_timeout_ms),
+            quarantine_after: cfg.quarantine_after as u32,
+            poisoned: None,
         }
     }
 
@@ -758,6 +935,100 @@ impl DistributedRunner {
     pub fn simulated_time(&self) -> f64 {
         self.net.as_ref().map(|n| n.sim_time).unwrap_or(0.0)
     }
+
+    /// Master-side health snapshot: per-worker participation state,
+    /// consecutive-miss counters and the degraded-round count — the
+    /// observable surface of the quarantine machinery (see the module
+    /// doc).
+    pub fn health(&self) -> RunnerHealth {
+        RunnerHealth {
+            states: self.states.clone(),
+            active_workers: self.n_active,
+            degraded_rounds: self.degraded_rounds,
+            consecutive_misses: self.misses.clone(),
+        }
+    }
+
+    /// The most recent failure recorded for `worker` (quarantine reason,
+    /// or the failure the worker itself reported), if any.
+    pub fn last_failure(&self, worker: usize) -> Option<&WorkerFailure> {
+        self.last_failures[worker].as_ref()
+    }
+
+    /// Re-admit a quarantined worker whose thread is still alive (the
+    /// straggler case). The master re-adds the worker's shift replica to
+    /// the maintained `h_sum` (the exact inverse of the quarantine
+    /// subtraction, so a quarantine/rejoin pair is fp-reproducible on
+    /// both drivers) and, on the next round, ships a
+    /// [`WorkerCommand::Rejoin`] bootstrap: a dense resync of the current
+    /// iterate plus the shift replica. The worker overwrites its local
+    /// state and flushes its EF uplink accumulator — the same state-reset
+    /// rule every resync applies. With the EF downlink armed, the whole
+    /// fleet resyncs too (a private bootstrap would break the shared
+    /// replica mirror's uniformity; this also means EF-downlink rejoin
+    /// rounds are not bit-pinned against the mirror).
+    ///
+    /// `Active` workers are a no-op; `Failed` workers (thread gone)
+    /// return an error naming the crash.
+    pub fn rejoin(&mut self, worker: usize) -> Result<(), WorkerFailure> {
+        match self.states[worker] {
+            WorkerState::Active => return Ok(()),
+            WorkerState::Failed => {
+                return Err(WorkerFailure {
+                    worker,
+                    round: self.round,
+                    class: FailureClass::Crash,
+                    detail: "worker thread has exited and cannot rejoin".into(),
+                })
+            }
+            WorkerState::Quarantined => {}
+        }
+        self.states[worker] = WorkerState::Active;
+        self.n_active += 1;
+        self.misses[worker] = 0;
+        self.rejoining[worker] = true;
+        if !matches!(self.method, MethodKind::Star { .. }) {
+            axpy(1.0, &self.h[worker], &mut self.h_sum);
+        }
+        if let Some(net) = &mut self.net {
+            net.set_worker_active(worker, true);
+        }
+        if self.dl.is_armed() {
+            self.needs_resync = true;
+        }
+        Ok(())
+    }
+
+    /// Take `wi` out of the round rotation: subtract its shift replica
+    /// from the maintained `h_sum` in one O(d) pass (the aggregate then
+    /// reweights to the survivors), stop counting it toward gathers and
+    /// record why. Promoting an already-quarantined worker to `Failed`
+    /// must not subtract twice, and a `Failed` worker never demotes back
+    /// to `Quarantined`.
+    fn quarantine_worker(&mut self, wi: usize, state: WorkerState, failure: WorkerFailure) {
+        if self.states[wi] == WorkerState::Active {
+            if !matches!(self.method, MethodKind::Star { .. }) {
+                axpy(-1.0, &self.h[wi], &mut self.h_sum);
+            }
+            self.n_active -= 1;
+            if let Some(net) = &mut self.net {
+                net.set_worker_active(wi, false);
+            }
+        }
+        if self.states[wi] != WorkerState::Failed {
+            self.states[wi] = state;
+        }
+        self.misses[wi] = 0;
+        self.rejoining[wi] = false;
+        self.last_failures[wi] = Some(failure);
+    }
+
+    /// Record a fatal failure: every later `try_step` returns this same
+    /// error without touching the degraded state (sticky poisoning).
+    fn poison(&mut self, f: WorkerFailure) -> WorkerFailure {
+        self.poisoned = Some(f.clone());
+        f
+    }
 }
 
 impl Algorithm for DistributedRunner {
@@ -794,6 +1065,7 @@ fn frame_failure(wi: usize, round: usize, what: &str, e: wire::WireError) -> Wor
     WorkerFailure {
         worker: wi,
         round,
+        class: FailureClass::Protocol,
         detail: format!("malformed {what} from worker: {e}"),
     }
 }
@@ -816,6 +1088,7 @@ fn decode_checked(
         return Err(WorkerFailure {
             worker: wi,
             round,
+            class: FailureClass::Protocol,
             detail: format!(
                 "{what} dimension mismatch: frame carries {}, expected {d}",
                 out.dim()
@@ -826,18 +1099,35 @@ fn decode_checked(
 }
 
 impl DistributedRunner {
-    /// One round, surfacing worker-side protocol failures (and master-side
-    /// uplink decode failures) as a structured [`WorkerFailure`] instead
-    /// of panicking — or, worse, deadlocking on a worker thread that has
-    /// already exited. On `Err` the cluster is mid-round and
-    /// unrecoverable: drop it. [`Algorithm::step`] wraps this and panics
+    /// One round over the active fleet, degrading gracefully on worker
+    /// failures (quarantine + reweighted aggregation — see the module
+    /// doc). Returns `Err` only when the cluster can never gather again
+    /// (every worker thread exited); the error is sticky — the runner is
+    /// poisoned and every later call returns the same [`WorkerFailure`]
+    /// without touching state. [`Algorithm::step`] wraps this and panics
     /// with the same round + worker context.
     pub fn try_step(&mut self, _p: &dyn Problem) -> Result<StepStats, WorkerFailure> {
+        if let Some(f) = &self.poisoned {
+            return Err(f.clone());
+        }
         let n = self.workers.len();
         let d = self.x.len();
         let round = self.round;
-        let inv_n = 1.0 / n as f64;
         let parity = self.round % 2;
+        if self.states.iter().all(|s| *s == WorkerState::Failed) {
+            return Err(self.poison(WorkerFailure {
+                worker: WorkerFailure::NO_WORKER,
+                round,
+                class: FailureClass::Crash,
+                detail: "every worker thread has exited; the cluster cannot recover".into(),
+            }));
+        }
+        // non-reporters must not leak the previous round's traffic or
+        // compute into this round's pricing
+        for wi in 0..n {
+            self.wire_bits[wi] = 0;
+            self.compute[wi] = 0.0;
+        }
 
         // broadcast: this round's downlink frame. The delta was pre-encoded
         // at the end of the previous round into the double-buffered Arc;
@@ -872,50 +1162,136 @@ impl DistributedRunner {
             self.dl.resync(&self.x);
         }
         let down_frame_bits = self.down_bufs[parity].len() as u64 * 8;
-        for (wi, w) in self.workers.iter().enumerate() {
+        // broadcast to the active fleet only. `try_send` keeps the master
+        // deadlock-free: a hung worker eventually fills its capacity-2
+        // command queue, and a blocking send there would stall the fleet
+        // forever. A full queue counts as this round's miss; a
+        // disconnected channel is a confirmed thread exit.
+        let mut expected = 0usize;
+        for wi in 0..n {
+            if self.states[wi] != WorkerState::Active {
+                continue;
+            }
             let recycled = std::mem::take(&mut self.frames_pool[wi]);
-            let sent = w.cmd_tx.send(WorkerCommand::Round {
-                k: self.round,
-                down: self.down_bufs[parity].clone(),
-                recycled,
-            });
-            if sent.is_err() {
-                return Err(WorkerFailure {
-                    worker: wi,
-                    round,
-                    detail: "worker thread has exited (it reported a failure in an \
-                             earlier round); the cluster must be dropped"
-                        .into(),
-                });
+            let cmd = if self.rejoining[wi] {
+                // rejoin bootstrap: dense resync from the *current* iterate
+                // plus the master's replica of this worker's shift (the
+                // off-hot-path allocation is fine — rejoin is exceptional)
+                let mut b = Vec::with_capacity(d * 8 + 32);
+                wire::encode_down_dense(DownKind::Resync, &self.x, ValPrec::F64, &mut b);
+                WorkerCommand::Rejoin {
+                    k: self.round,
+                    down: Arc::new(b),
+                    h: self.h[wi].clone(),
+                    recycled,
+                }
+            } else {
+                WorkerCommand::Round {
+                    k: self.round,
+                    down: self.down_bufs[parity].clone(),
+                    recycled,
+                }
+            };
+            match self.workers[wi].cmd_tx.try_send(cmd) {
+                Ok(()) => {
+                    self.rejoining[wi] = false;
+                    expected += 1;
+                }
+                Err(TrySendError::Full(cmd)) => {
+                    // queue jammed: reclaim the buffers, let the miss
+                    // accounting below decide on quarantine
+                    let (WorkerCommand::Round { recycled, .. }
+                    | WorkerCommand::Rejoin { recycled, .. }) = cmd
+                    else {
+                        unreachable!("only round/rejoin commands are broadcast")
+                    };
+                    self.frames_pool[wi] = recycled;
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    self.quarantine_worker(
+                        wi,
+                        WorkerState::Failed,
+                        WorkerFailure {
+                            worker: wi,
+                            round,
+                            class: FailureClass::Crash,
+                            detail: "worker thread has exited (channel disconnected)".into(),
+                        },
+                    );
+                }
             }
         }
 
         // gather (any arrival order; processed in worker order for exact
-        // fp-reproducibility)
-        for _ in 0..n {
-            let Ok(upd) = self.up_rx.recv() else {
-                return Err(WorkerFailure {
-                    worker: WorkerFailure::NO_WORKER,
-                    round,
-                    detail: "all worker threads have exited".into(),
-                });
-            };
-            debug_assert_eq!(upd.k, self.round);
-            let wi = upd.worker;
-            // each worker is charged its own measured compute when the
-            // round is priced (staged/pipelined models)
-            self.compute[wi] = upd.compute_secs;
-            self.slots[wi] = Some(upd);
-        }
-        // fail fast on any worker-reported protocol failure: the failing
-        // thread has already exited, so folding this round would corrupt
-        // state and the next broadcast would deadlock
-        for wi in 0..n {
-            if let Some(f) = self.slots[wi].as_ref().and_then(|u| u.failure.clone()) {
-                for slot in &mut self.slots {
-                    *slot = None;
+        // fp-reproducibility). One deadline bounds the whole wait, so no
+        // fault configuration — hung workers, crashed threads, any mix —
+        // can stall the master past `round_timeout_ms`.
+        let deadline = Instant::now() + self.round_timeout;
+        let mut received = 0usize;
+        while received < expected {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match self.up_rx.recv_timeout(remaining) {
+                Ok(upd) => {
+                    let wi = upd.worker;
+                    if upd.k != round {
+                        // stale update from a round the sender already
+                        // missed: reclaim the buffers, don't fold
+                        self.frames_pool[wi] = upd.frames;
+                        continue;
+                    }
+                    // each worker is charged its own measured compute when
+                    // the round is priced (staged/pipelined models)
+                    self.compute[wi] = upd.compute_secs;
+                    self.slots[wi] = Some(upd);
+                    received += 1;
                 }
-                return Err(f);
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(self.poison(WorkerFailure {
+                        worker: WorkerFailure::NO_WORKER,
+                        round,
+                        class: FailureClass::Crash,
+                        detail: "every worker thread has exited".into(),
+                    }));
+                }
+            }
+        }
+
+        // a worker-reported failure means the sender's thread exits right
+        // after the update: quarantine it as Failed and keep going over
+        // the survivors
+        for wi in 0..n {
+            if self.slots[wi].as_ref().is_some_and(|u| u.failure.is_some()) {
+                let upd = self.slots[wi].take().expect("checked above");
+                let WorkerUpdate { frames, failure, .. } = upd;
+                self.frames_pool[wi] = frames;
+                self.quarantine_worker(wi, WorkerState::Failed, failure.expect("checked above"));
+            }
+        }
+
+        // deadline-miss accounting: an Active worker without a fresh slot
+        // missed this round (gather timeout or jammed command queue)
+        for wi in 0..n {
+            if self.states[wi] != WorkerState::Active {
+                continue;
+            }
+            if self.slots[wi].is_some() {
+                self.misses[wi] = 0;
+                continue;
+            }
+            self.misses[wi] += 1;
+            if self.misses[wi] >= self.quarantine_after {
+                let failure = WorkerFailure {
+                    worker: wi,
+                    round,
+                    class: FailureClass::Timeout,
+                    detail: format!(
+                        "missed the {}ms gather deadline on {} consecutive round(s)",
+                        self.round_timeout.as_millis(),
+                        self.misses[wi]
+                    ),
+                };
+                self.quarantine_worker(wi, WorkerState::Quarantined, failure);
             }
         }
 
@@ -931,117 +1307,143 @@ impl DistributedRunner {
             // aggregate Σ_t est^t accumulates in g_acc and ships as one
             // composite downlink delta. DcgdShift::step_batched mirrors
             // this loop op for op.
+            //
+            // Validation first: frame structure and every sub-step packet
+            // are decode-checked before any aggregate arithmetic, so a
+            // malformed batch quarantines its sender instead of aborting
+            // a half-replayed round.
+            for wi in 0..n {
+                let Some(upd) = self.slots[wi].take() else { continue };
+                match self.validate_batch(wi, round, d, &upd) {
+                    Ok(off) => {
+                        self.offsets[wi] = off;
+                        bits_up += upd.payload_bits;
+                        bits_refresh += upd.refresh_bits;
+                        self.wire_bits[wi] = upd.wire_bytes as u64 * 8;
+                        self.slots[wi] = Some(upd);
+                    }
+                    Err(f) => {
+                        self.frames_pool[wi] = upd.frames;
+                        self.quarantine_worker(wi, WorkerState::Quarantined, f);
+                    }
+                }
+            }
+            let reporters = self.slots.iter().filter(|s| s.is_some()).count();
             zero(&mut self.g_acc);
-            for wi in 0..n {
-                let upd = self.slots[wi].as_ref().unwrap();
-                bits_up += upd.payload_bits;
-                bits_refresh += upd.refresh_bits;
-                self.wire_bits[wi] = upd.wire_bytes as u64 * 8;
-                let (count, off) = wire::split_batch_frame(&upd.frames.q_frame)
-                    .map_err(|e| frame_failure(wi, round, "batch frame", e))?;
-                if count != self.local_steps {
-                    return Err(WorkerFailure {
-                        worker: wi,
-                        round,
-                        detail: format!(
-                            "batch frame carries {count} packets, expected {}",
-                            self.local_steps
-                        ),
-                    });
-                }
-                self.offsets[wi] = off;
-            }
-            for _t in 0..self.local_steps {
-                ax_into(inv_n, &self.h_sum, &mut self.est);
-                for wi in 0..n {
-                    let upd = self.slots[wi].as_ref().unwrap();
-                    self.offsets[wi] = wire::decode_batch_packet(
-                        &upd.frames.q_frame,
-                        self.offsets[wi],
-                        &mut self.q_scratch[wi],
-                    )
-                    .map_err(|e| frame_failure(wi, round, "batch packet", e))?;
-                    if self.q_scratch[wi].dim() != d {
-                        return Err(WorkerFailure {
-                            worker: wi,
-                            round,
-                            detail: format!(
-                                "batch packet dimension mismatch: frame carries {}, expected {d}",
-                                self.q_scratch[wi].dim()
-                            ),
-                        });
+            if reporters > 0 {
+                let inv = 1.0 / reporters as f64;
+                let star = matches!(self.method, MethodKind::Star { .. });
+                for _t in 0..self.local_steps {
+                    ax_into(inv, &self.h_sum, &mut self.est);
+                    if !star {
+                        // transiently-missed Active workers: excluded from
+                        // this sub-step's estimator without touching h_sum
+                        // (Diana's permanent shift learning keeps flowing
+                        // through the maintained sum)
+                        for wi in 0..n {
+                            if self.states[wi] == WorkerState::Active && self.slots[wi].is_none() {
+                                axpy(-inv, &self.h[wi], &mut self.est);
+                            }
+                        }
                     }
-                    self.q_scratch[wi].add_scaled_into(inv_n, &mut self.est);
-                    if let MethodKind::Diana { alpha, .. } = self.method {
-                        self.q_scratch[wi].add_scaled_into(alpha, &mut self.h[wi]);
-                        self.q_scratch[wi].add_scaled_into(alpha, &mut self.h_sum);
+                    for wi in 0..n {
+                        let Some(upd) = self.slots[wi].as_ref() else {
+                            continue;
+                        };
+                        self.offsets[wi] = wire::decode_batch_packet(
+                            &upd.frames.q_frame,
+                            self.offsets[wi],
+                            &mut self.q_scratch[wi],
+                        )
+                        .expect("batch frame validated above");
+                        self.q_scratch[wi].add_scaled_into(inv, &mut self.est);
+                        if let MethodKind::Diana { alpha, .. } = self.method {
+                            self.q_scratch[wi].add_scaled_into(alpha, &mut self.h[wi]);
+                            self.q_scratch[wi].add_scaled_into(alpha, &mut self.h_sum);
+                        }
                     }
+                    axpy(1.0, &self.est, &mut self.g_acc);
                 }
-                axpy(1.0, &self.est, &mut self.g_acc);
             }
             for wi in 0..n {
-                let upd = self.slots[wi].take().unwrap();
-                self.frames_pool[wi] = upd.frames;
+                if let Some(upd) = self.slots[wi].take() {
+                    self.frames_pool[wi] = upd.frames;
+                }
             }
-            return Ok(self.finish_step(n, down_frame_bits, bits_up, bits_refresh));
+            return Ok(self.finish_step(reporters, expected, down_frame_bits, bits_up, bits_refresh));
         }
 
+        // ---- per-round fold. Validation first (same rationale as the
+        // batched path): every reporter's frames are decoded into the
+        // per-worker scratch packets before any aggregate arithmetic.
+        for wi in 0..n {
+            let Some(upd) = self.slots[wi].take() else { continue };
+            match self.decode_update(wi, round, d, &upd) {
+                Ok(()) => self.slots[wi] = Some(upd),
+                Err(f) => {
+                    self.frames_pool[wi] = upd.frames;
+                    self.quarantine_worker(wi, WorkerState::Quarantined, f);
+                }
+            }
+        }
+        let reporters = self.slots.iter().filter(|s| s.is_some()).count();
+
+        if reporters == 0 {
+            // fully-degraded round: nobody reported, the iterate holds
+            // (the zero estimator ships as an empty delta)
+            zero(&mut self.est);
+            return Ok(self.finish_step(0, expected, down_frame_bits, bits_up, bits_refresh));
+        }
+        let inv = 1.0 / reporters as f64;
+
         // g^k seeded from the maintained shift sum in one O(d) pass, then
-        // each compressed message folded in at O(nnz).
-        ax_into(inv_n, &self.h_sum, &mut self.est);
+        // each compressed message folded in at O(nnz). Transiently-missed
+        // Active workers are excluded from this round's estimator without
+        // touching h_sum (see the module doc).
+        ax_into(inv, &self.h_sum, &mut self.est);
+        if !matches!(self.method, MethodKind::Star { .. }) {
+            for wi in 0..n {
+                if self.states[wi] == WorkerState::Active && self.slots[wi].is_none() {
+                    axpy(-inv, &self.h[wi], &mut self.est);
+                }
+            }
+        }
 
         for wi in 0..n {
-            let upd = self.slots[wi].take().unwrap();
+            let Some(upd) = self.slots[wi].take() else { continue };
             bits_up += upd.payload_bits;
             bits_refresh += upd.refresh_bits;
             self.wire_bits[wi] = upd.wire_bytes as u64 * 8;
 
             match self.method {
                 MethodKind::Fixed => {
-                    decode_checked(&upd.frames.q_frame, &mut self.q_scratch[wi], d, wi, round, "Q frame")?;
-                    self.q_scratch[wi].add_scaled_into(inv_n, &mut self.est);
+                    self.q_scratch[wi].add_scaled_into(inv, &mut self.est);
                 }
                 MethodKind::Star { with_c } => {
                     // reconstruct the worker's same-round shift in place
                     self.h[wi].copy_from_slice(&self.grad_star[wi]);
                     if with_c {
-                        let cf = upd.frames.c_frame.as_deref().ok_or_else(|| WorkerFailure {
-                            worker: wi,
-                            round,
-                            detail: "missing C frame".into(),
-                        })?;
-                        decode_checked(cf, &mut self.c_scratch[wi], d, wi, round, "C frame")?;
                         self.c_scratch[wi].add_scaled_into(1.0, &mut self.h[wi]);
                     }
-                    axpy(inv_n, &self.h[wi], &mut self.est);
-                    decode_checked(&upd.frames.q_frame, &mut self.q_scratch[wi], d, wi, round, "Q frame")?;
-                    self.q_scratch[wi].add_scaled_into(inv_n, &mut self.est);
+                    axpy(inv, &self.h[wi], &mut self.est);
+                    self.q_scratch[wi].add_scaled_into(inv, &mut self.est);
                 }
                 MethodKind::Diana { alpha, with_c } => {
                     if with_c {
-                        let cf = upd.frames.c_frame.as_deref().ok_or_else(|| WorkerFailure {
-                            worker: wi,
-                            round,
-                            detail: "missing C frame".into(),
-                        })?;
-                        decode_checked(cf, &mut self.c_scratch[wi], d, wi, round, "C frame")?;
-                        self.c_scratch[wi].add_scaled_into(inv_n, &mut self.est);
+                        self.c_scratch[wi].add_scaled_into(inv, &mut self.est);
                         self.c_scratch[wi].add_scaled_into(alpha, &mut self.h[wi]);
                         self.c_scratch[wi].add_scaled_into(alpha, &mut self.h_sum);
                     }
-                    decode_checked(&upd.frames.q_frame, &mut self.q_scratch[wi], d, wi, round, "Q frame")?;
-                    self.q_scratch[wi].add_scaled_into(inv_n, &mut self.est);
+                    self.q_scratch[wi].add_scaled_into(inv, &mut self.est);
                     self.q_scratch[wi].add_scaled_into(alpha, &mut self.h[wi]);
                     self.q_scratch[wi].add_scaled_into(alpha, &mut self.h_sum);
                 }
                 MethodKind::RandDiana { .. } => {
-                    decode_checked(&upd.frames.q_frame, &mut self.q_scratch[wi], d, wi, round, "Q frame")?;
-                    self.q_scratch[wi].add_scaled_into(inv_n, &mut self.est);
-                    if let Some(refresh) = &upd.frames.refresh {
+                    self.q_scratch[wi].add_scaled_into(inv, &mut self.est);
+                    if upd.frames.refresh.is_some() {
                         // sparse shift-refresh delta: h_new = h + Δ, applied
                         // identically to the replica and the maintained sum
                         // (the worker applied the same packet to its h)
-                        decode_checked(refresh, &mut self.c_scratch[wi], d, wi, round, "refresh frame")?;
                         self.c_scratch[wi].add_scaled_into(1.0, &mut self.h[wi]);
                         self.c_scratch[wi].add_scaled_into(1.0, &mut self.h_sum);
                     }
@@ -1051,7 +1453,83 @@ impl DistributedRunner {
             self.frames_pool[wi] = upd.frames;
         }
 
-        Ok(self.finish_step(n, down_frame_bits, bits_up, bits_refresh))
+        Ok(self.finish_step(reporters, expected, down_frame_bits, bits_up, bits_refresh))
+    }
+
+    /// Validation-pass decode of one reporter's frames into the per-worker
+    /// scratch packets (no aggregate state is touched): the Q frame
+    /// always, the C frame when the method requires one (missing ⇒
+    /// protocol failure), the Rand-DIANA refresh delta when present. Runs
+    /// before any fold arithmetic so a malformed frame cleanly
+    /// quarantines its sender.
+    fn decode_update(
+        &mut self,
+        wi: usize,
+        round: usize,
+        d: usize,
+        upd: &WorkerUpdate,
+    ) -> Result<(), WorkerFailure> {
+        let needs_c = matches!(
+            self.method,
+            MethodKind::Star { with_c: true } | MethodKind::Diana { with_c: true, .. }
+        );
+        if needs_c {
+            let cf = upd.frames.c_frame.as_deref().ok_or_else(|| WorkerFailure {
+                worker: wi,
+                round,
+                class: FailureClass::Protocol,
+                detail: "missing C frame".into(),
+            })?;
+            decode_checked(cf, &mut self.c_scratch[wi], d, wi, round, "C frame")?;
+        }
+        decode_checked(&upd.frames.q_frame, &mut self.q_scratch[wi], d, wi, round, "Q frame")?;
+        if let (MethodKind::RandDiana { .. }, Some(refresh)) = (self.method, &upd.frames.refresh) {
+            decode_checked(refresh, &mut self.c_scratch[wi], d, wi, round, "refresh frame")?;
+        }
+        Ok(())
+    }
+
+    /// Validation-pass decode of one reporter's batched frame: the header
+    /// must carry exactly `local_steps` packets and every packet must
+    /// decode at the cluster dimension. Returns the payload offset of the
+    /// first packet for the fold pass to re-walk.
+    fn validate_batch(
+        &mut self,
+        wi: usize,
+        round: usize,
+        d: usize,
+        upd: &WorkerUpdate,
+    ) -> Result<usize, WorkerFailure> {
+        let (count, first) = wire::split_batch_frame(&upd.frames.q_frame)
+            .map_err(|e| frame_failure(wi, round, "batch frame", e))?;
+        if count != self.local_steps {
+            return Err(WorkerFailure {
+                worker: wi,
+                round,
+                class: FailureClass::Protocol,
+                detail: format!(
+                    "batch frame carries {count} packets, expected {}",
+                    self.local_steps
+                ),
+            });
+        }
+        let mut off = first;
+        for _ in 0..count {
+            off = wire::decode_batch_packet(&upd.frames.q_frame, off, &mut self.q_scratch[wi])
+                .map_err(|e| frame_failure(wi, round, "batch packet", e))?;
+            if self.q_scratch[wi].dim() != d {
+                return Err(WorkerFailure {
+                    worker: wi,
+                    round,
+                    class: FailureClass::Protocol,
+                    detail: format!(
+                        "batch packet dimension mismatch: frame carries {}, expected {d}",
+                        self.q_scratch[wi].dim()
+                    ),
+                });
+            }
+        }
+        Ok(first)
     }
 }
 
@@ -1059,13 +1537,20 @@ impl DistributedRunner {
     /// Shared tail of both round shapes: take the gradient step through
     /// the downlink delta packet, pre-encode next round's broadcast into
     /// the retired buffer, advance the round counter and price the round.
+    /// `reporters` is the number of workers whose updates folded into the
+    /// round; `broadcast_count` the number that received this round's
+    /// downlink frame (they differ when a worker missed its deadline).
     fn finish_step(
         &mut self,
-        n: usize,
+        reporters: usize,
+        broadcast_count: usize,
         down_frame_bits: u64,
         bits_up: u64,
         bits_refresh: u64,
     ) -> StepStats {
+        if reporters < self.workers.len() {
+            self.degraded_rounds += 1;
+        }
         let d = self.x.len();
         // gradient step, via the same delta packet the workers will apply:
         // x += 1·(−γ·g) with identical roundings on both ends, so master
@@ -1109,7 +1594,7 @@ impl DistributedRunner {
         // pricing (existing τ = 1 sim clocks stay comparable across PRs);
         // batched rounds price each worker's own measured compute too,
         // overlapped with its uplink transfer when pipelining is on.
-        let bits_down = n as u64 * down_frame_bits;
+        let bits_down = broadcast_count as u64 * down_frame_bits;
         if let Some(net) = &mut self.net {
             if self.pipeline {
                 net.round_pipelined(
@@ -1129,6 +1614,7 @@ impl DistributedRunner {
             bits_up,
             bits_down,
             bits_refresh,
+            active_workers: reporters,
         }
     }
 }
@@ -1182,6 +1668,7 @@ impl DistributedRunner {
                 pipeline: false,
                 downlink: None,
                 uplink_ef: false,
+                ..Default::default()
             },
         )
     }
@@ -1218,6 +1705,7 @@ impl DistributedRunner {
                 pipeline: false,
                 downlink: None,
                 uplink_ef: false,
+                ..Default::default()
             },
         )
     }
@@ -1252,6 +1740,7 @@ impl DistributedRunner {
                 pipeline: false,
                 downlink: None,
                 uplink_ef: false,
+                ..Default::default()
             },
         )
     }
@@ -1338,6 +1827,7 @@ mod tests {
             gamma: 0.1,
             local_steps: 1,
             uplink_ef: false,
+            script: WorkerFaultScript::default(),
         };
         let q: Box<dyn Compressor> = Box::new(RandK::with_q(d, 0.5));
         let h = vec![0.0; d];

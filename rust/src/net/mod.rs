@@ -125,6 +125,10 @@ pub struct NetworkAccountant {
     pub total_down_bits: u64,
     pub sim_time: f64,
     pub rounds: usize,
+    /// degraded-round mask: an inactive (quarantined) worker contributes
+    /// neither link time nor traffic — a round with f workers masked out
+    /// costs exactly what an (n−f)-fleet round costs (unit-pinned below)
+    pub active: Vec<bool>,
 }
 
 impl NetworkAccountant {
@@ -133,6 +137,7 @@ impl NetworkAccountant {
             link.validate();
         }
         Self {
+            active: vec![true; links.len()],
             links,
             ..Default::default()
         }
@@ -140,6 +145,12 @@ impl NetworkAccountant {
 
     pub fn uniform(n: usize, link: LinkModel) -> Self {
         Self::new(vec![link; n])
+    }
+
+    /// Mask worker `wi` in (`true`) or out (`false`) of round pricing —
+    /// the coordinator flips this on quarantine and rejoin.
+    pub fn set_worker_active(&mut self, wi: usize, on: bool) {
+        self.active[wi] = on;
     }
 
     /// Price one synchronous round: `up_bits[i]` is worker i's uplink
@@ -186,9 +197,10 @@ impl NetworkAccountant {
     }
 
     /// Shared straggler fold: `worker_time(link, up_bits, worker)` prices
-    /// one worker's round; the slowest worker defines the round's
-    /// wall-clock contribution, and the traffic totals accumulate either
-    /// way.
+    /// one worker's round; the slowest *active* worker defines the round's
+    /// wall-clock contribution, and the traffic totals accumulate over the
+    /// active workers only (a quarantined worker neither receives the
+    /// broadcast nor ships an uplink).
     fn finish_round(
         &mut self,
         up_bits: &[u64],
@@ -197,11 +209,16 @@ impl NetworkAccountant {
     ) -> f64 {
         assert_eq!(up_bits.len(), self.links.len());
         let mut slowest: f64 = 0.0;
+        let mut active_count: u64 = 0;
         for (wi, (bits, link)) in up_bits.iter().zip(self.links.iter()).enumerate() {
+            if !self.active[wi] {
+                continue;
+            }
+            active_count += 1;
             slowest = slowest.max(worker_time(link, *bits, wi));
             self.total_up_bits += bits;
         }
-        self.total_down_bits += down_bits * self.links.len() as u64;
+        self.total_down_bits += down_bits * active_count;
         self.sim_time += slowest;
         self.rounds += 1;
         slowest
@@ -318,6 +335,47 @@ mod tests {
         let mut hetero = NetworkAccountant::uniform(2, link);
         let t2 = hetero.round_staged(&[1_000_000, 500_000], 100_000, &[0.0, 1.0]);
         assert!((t2 - 1.62).abs() < 1e-12, "hetero staged round {t2}");
+    }
+
+    #[test]
+    fn masked_round_costs_the_same_as_the_smaller_fleet() {
+        // a 4-fleet round with workers 1 and 3 quarantined must price
+        // exactly like the 2-fleet round over the surviving links — for
+        // every pricing model (comm-only, staged, pipelined)
+        let fleet = LinkModel::heterogeneous_fleet(4, LinkModel::default(), 1.0, 1.0);
+        let survivors = vec![fleet[0], fleet[2]];
+        let up4 = [1_000_000u64, 77, 500_000, 77];
+        let up2 = [1_000_000u64, 500_000];
+        let comp4 = [0.25, 9.0, 1.0, 9.0];
+        let comp2 = [0.25, 1.0];
+        let down = 640_000u64;
+
+        let mask = |mut acc: NetworkAccountant| {
+            acc.set_worker_active(1, false);
+            acc.set_worker_active(3, false);
+            acc
+        };
+
+        let mut a4 = mask(NetworkAccountant::new(fleet.clone()));
+        let mut a2 = NetworkAccountant::new(survivors.clone());
+        assert_eq!(a4.round(&up4, down), a2.round(&up2, down));
+        assert_eq!(a4.total_up_bits, a2.total_up_bits);
+        assert_eq!(a4.total_down_bits, a2.total_down_bits);
+        assert_eq!(a4.sim_time, a2.sim_time);
+
+        let mut s4 = mask(NetworkAccountant::new(fleet.clone()));
+        let mut s2 = NetworkAccountant::new(survivors.clone());
+        assert_eq!(
+            s4.round_staged(&up4, down, &comp4),
+            s2.round_staged(&up2, down, &comp2)
+        );
+
+        let mut p4 = mask(NetworkAccountant::new(fleet));
+        let mut p2 = NetworkAccountant::new(survivors);
+        assert_eq!(
+            p4.round_pipelined(&up4, down, &comp4, 4),
+            p2.round_pipelined(&up2, down, &comp2, 4)
+        );
     }
 
     #[test]

@@ -1,0 +1,352 @@
+//! Chaos suite: deterministic fault injection against the threaded
+//! coordinator.
+//!
+//! Four properties are pinned here, one per test:
+//!
+//! 1. a seeded multi-fault schedule never deadlocks or poisons the master,
+//!    and the surviving subset still optimizes its own objective;
+//! 2. a crash degrades the trajectory **bit-identically** to a
+//!    single-process [`DcgdShift`] mirror quarantined at the same round —
+//!    the shift-consistent reweighted aggregate is the same math on both
+//!    drivers;
+//! 3. a quarantined straggler re-admitted through the dense-resync rejoin
+//!    returns to bit-equality — iterate, shift replica and worker-private
+//!    state (via [`WorkerCommand::Inspect`]) all match the mirror;
+//! 4. quarantine + rejoin flushes the worker's EF uplink accumulator the
+//!    way a resync does (EF-BV state-reset semantics): after readmission
+//!    the accumulator holds exactly the fresh residual `m − C(m)`, not
+//!    stale pre-quarantine mass.
+
+use std::sync::Arc;
+
+use shiftcomp::algorithms::{Algorithm, DcgdShift};
+use shiftcomp::compressors::{Compressor, RandK, TopK, ValPrec};
+use shiftcomp::coordinator::{
+    ClusterConfig, DistributedRunner, FailureClass, FaultPlan, MethodKind, WorkerState,
+};
+use shiftcomp::ef::EfUplink;
+use shiftcomp::linalg::{axpy, nrm2};
+use shiftcomp::problems::{Problem, Quadratic, Ridge};
+use shiftcomp::util::rng::Pcg64;
+
+/// A generous gather deadline for tests: rounds on these tiny problems
+/// take microseconds, so only an injected fault can ever hit it, while a
+/// loaded CI machine still has ~3 orders of magnitude of slack before a
+/// healthy worker is misclassified.
+const TEST_TIMEOUT_MS: u64 = 1_000;
+
+fn cluster(
+    p: &Arc<dyn Problem>,
+    method: MethodKind,
+    gamma: f64,
+    q: &(impl Compressor + Clone + 'static),
+    seed: u64,
+    uplink_ef: bool,
+    faults: FaultPlan,
+) -> DistributedRunner {
+    let d = p.dim();
+    let n = p.n_workers();
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(q.clone()) as Box<dyn Compressor>)
+        .collect();
+    DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method,
+            gamma,
+            prec: ValPrec::F64,
+            seed,
+            uplink_ef,
+            faults: Some(faults),
+            round_timeout_ms: TEST_TIMEOUT_MS,
+            quarantine_after: 1,
+            ..Default::default()
+        },
+    )
+}
+
+/// ‖(1/|S|) Σ_{i∈S} ∇f_i(x)‖ over the active subset S — the gradient of
+/// the objective a degraded fleet is actually minimizing.
+fn active_subset_grad_norm(p: &dyn Problem, active: &[usize], x: &[f64]) -> f64 {
+    assert!(!active.is_empty());
+    let d = p.dim();
+    let mut g = vec![0.0; d];
+    let mut tmp = vec![0.0; d];
+    for &i in active {
+        p.local_grad_into(i, x, &mut tmp);
+        axpy(1.0 / active.len() as f64, &tmp, &mut g);
+    }
+    nrm2(&g)
+}
+
+/// (1) A seeded fault schedule — crashes, garbage frames, corrupt
+/// downlinks, straggler windows, all drawn from one reproducible stream —
+/// must never deadlock or poison the master: every round completes, and
+/// the survivors drive *their* mean objective to stationarity.
+#[test]
+fn seeded_fault_plan_survivors_converge() {
+    let d = 12;
+    let n = 8;
+    let p: Arc<dyn Problem> = Arc::new(Quadratic::random(d, n, 1.0, 10.0, 5));
+    let omega = RandK::with_q(d, 0.5).omega().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+    // the theory step is tuned for the full fleet; a degraded fleet sees a
+    // larger effective ω/n, so run conservatively — convergence is the
+    // claim here, not rate optimality
+    let gamma = ss.gamma * 0.25;
+    let plan = FaultPlan::seeded(7, n, 20);
+    assert!(
+        !plan.faults.is_empty(),
+        "seed 7 must schedule at least one fault for this test to bite"
+    );
+    let mut dist = cluster(
+        &p,
+        MethodKind::Diana {
+            alpha: ss.alpha,
+            with_c: false,
+        },
+        gamma,
+        &RandK::with_q(d, 0.5),
+        5,
+        false,
+        plan,
+    );
+    let x0 = dist.x().to_vec();
+    for k in 0..800 {
+        dist.try_step(p.as_ref())
+            .unwrap_or_else(|f| panic!("round {k} must survive injected faults: {f}"));
+    }
+    let health = dist.health();
+    let active: Vec<usize> = health
+        .states
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| **s == WorkerState::Active)
+        .map(|(i, _)| i)
+        .collect();
+    assert!(active.contains(&0), "worker 0 is never faulted");
+    assert!(
+        health.degraded_rounds > 0,
+        "the schedule must actually have degraded some rounds"
+    );
+    assert!(dist.x().iter().all(|v| v.is_finite()));
+    let g0 = active_subset_grad_norm(p.as_ref(), &active, &x0);
+    let g1 = active_subset_grad_norm(p.as_ref(), &active, dist.x());
+    assert!(
+        g1 <= 1e-4 * g0.max(1.0),
+        "survivors must converge on their subset objective: ‖g‖ {g0:.3e} → {g1:.3e}"
+    );
+}
+
+/// (2) Crashing worker 3 at round 12 must leave the survivors
+/// bit-identical to a single-process mirror that quarantines the same
+/// worker before the same round: the deadline quarantine subtracts
+/// `h_3` from the running shift sum and reweights to `1/9` with exactly
+/// the fp operations the mirror performs.
+#[test]
+fn crash_matches_degraded_mirror_bit_for_bit() {
+    let p = Arc::new(Ridge::paper_default(3));
+    let d = p.dim();
+    let n = p.n_workers();
+    let (crashed, crash_round, rounds) = (3usize, 12usize, 40usize);
+
+    let mut single = DcgdShift::dcgd(p.as_ref(), RandK::with_q(d, 0.3), 11);
+    let gamma = single.gamma;
+    let pd: Arc<dyn Problem> = p.clone();
+    let mut dist = cluster(
+        &pd,
+        MethodKind::Fixed,
+        gamma,
+        &RandK::with_q(d, 0.3),
+        11,
+        false,
+        FaultPlan::new().crash(crashed, crash_round),
+    );
+
+    for k in 0..rounds {
+        if k == crash_round {
+            single.quarantine_worker(crashed);
+        }
+        let ss = single.step(p.as_ref());
+        let sd = dist
+            .try_step(p.as_ref())
+            .unwrap_or_else(|f| panic!("round {k}: crash must not be fatal: {f}"));
+        assert_eq!(single.x(), dist.x(), "iterates diverged at round {k}");
+        assert_eq!(
+            ss.active_workers, sd.active_workers,
+            "reporter counts diverged at round {k}"
+        );
+        if k >= crash_round {
+            assert_eq!(sd.active_workers, n - 1);
+        }
+    }
+
+    let health = dist.health();
+    assert_eq!(health.states[crashed], WorkerState::Quarantined);
+    assert_eq!(health.active_workers, n - 1);
+    assert_eq!(health.degraded_rounds, rounds - crash_round);
+    // the failure names its class: the crash surfaced as a gather-deadline
+    // miss (the channel disconnect is only observable on a later send)
+    let f = dist.last_failure(crashed).expect("failure recorded");
+    assert_eq!(f.class, FailureClass::Timeout);
+    assert_eq!(f.round, crash_round);
+    let msg = f.to_string();
+    assert!(
+        msg.contains("[timeout]") && msg.contains("worker 3"),
+        "display must name worker and class: {msg}"
+    );
+}
+
+/// (3) A straggler quarantined at its deadline miss and re-admitted
+/// through [`DistributedRunner::rejoin`] returns to bit-equality with a
+/// mirror that skipped the same rounds: the dense-resync bootstrap
+/// overwrites the worker's frozen replica and shift, after which
+/// iterates, master-side shift replicas and the worker's private state
+/// (inspected over the wire) all match.
+#[test]
+fn straggler_rejoins_bit_equal() {
+    let p = Arc::new(Ridge::paper_default(3));
+    let d = p.dim();
+    let n = p.n_workers();
+    // straggle window covers rounds 5..8; quarantined at its first miss
+    let (straggler, from, window) = (2usize, 5usize, 3usize);
+
+    let omega = RandK::with_q(d, 0.3).omega().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+    let mut single = DcgdShift::diana(p.as_ref(), RandK::with_q(d, 0.3), None, 13);
+    let gamma = single.gamma;
+    let pd: Arc<dyn Problem> = p.clone();
+    let mut dist = cluster(
+        &pd,
+        MethodKind::Diana {
+            alpha: ss.alpha,
+            with_c: false,
+        },
+        gamma,
+        &RandK::with_q(d, 0.3),
+        13,
+        false,
+        FaultPlan::new().straggle(straggler, from, window),
+    );
+
+    // healthy prefix + degraded middle: quarantine the mirror at the
+    // straggler's first missed round
+    for k in 0..from + window + 1 {
+        if k == from {
+            single.quarantine_worker(straggler);
+        }
+        single.step(p.as_ref());
+        dist.try_step(p.as_ref())
+            .unwrap_or_else(|f| panic!("round {k}: straggle must not be fatal: {f}"));
+        assert_eq!(single.x(), dist.x(), "iterates diverged at round {k}");
+    }
+    assert_eq!(dist.health().states[straggler], WorkerState::Quarantined);
+    assert_eq!(
+        dist.last_failure(straggler).unwrap().class,
+        FailureClass::Timeout
+    );
+
+    // readmission: the next distributed round ships the Rejoin bootstrap;
+    // the mirror re-activates the same worker before the same step
+    dist.rejoin(straggler).expect("straggler thread is alive");
+    single.rejoin_worker(straggler);
+    let mut x_before_last = Vec::new();
+    for k in 0..6 {
+        x_before_last = dist.x().to_vec();
+        single.step(p.as_ref());
+        dist.try_step(p.as_ref())
+            .unwrap_or_else(|f| panic!("post-rejoin round {k} failed: {f}"));
+        assert_eq!(single.x(), dist.x(), "post-rejoin divergence at round {k}");
+    }
+    assert_eq!(dist.health().active_workers, n);
+    assert!(dist.health().states.iter().all(|s| *s == WorkerState::Active));
+
+    // worker-private state over the wire: the replica is the iterate the
+    // last round computed gradients at, the shift matches the mirror's
+    let snap = dist.worker_snapshot(straggler);
+    assert_eq!(snap.x_replica, x_before_last, "worker replica diverged");
+    assert_eq!(snap.h, single.shift(straggler), "worker shift diverged");
+    assert_eq!(
+        dist.shift(straggler),
+        single.shift(straggler),
+        "master-side shift replica diverged"
+    );
+}
+
+/// (4) EF-BV state-reset semantics: quarantine + rejoin must flush the
+/// worker's EF uplink accumulator exactly like a dense resync does. After
+/// readmission the accumulator holds the fresh one-round residual
+/// `m − TopK(m)` bit for bit — stale pre-quarantine mass would change the
+/// Top-K support and leave a different residual.
+#[test]
+fn quarantine_rejoin_flushes_ef_uplink_accumulator() {
+    let p = Arc::new(Ridge::paper_default(3));
+    let d = p.dim();
+    let n = p.n_workers();
+    let (straggler, from, window) = (1usize, 6usize, 2usize);
+    let q = TopK::with_q(d, 0.1);
+    let delta = q.delta().unwrap();
+    let ss = shiftcomp::theory::ef_uplink(p.as_ref(), &vec![delta; n]);
+    let pd: Arc<dyn Problem> = p.clone();
+    let mut dist = cluster(
+        &pd,
+        MethodKind::Fixed,
+        ss.gamma,
+        &q,
+        23,
+        true,
+        FaultPlan::new().straggle(straggler, from, window),
+    );
+
+    // healthy prefix: Top-K at q = 0.1 drops 90% of coordinates every
+    // round, so the accumulator must carry mass before the fault
+    for _ in 0..from {
+        dist.try_step(p.as_ref()).unwrap();
+    }
+    let pre = dist.worker_snapshot(straggler);
+    let pre_err = pre.uplink_error.expect("EF armed");
+    assert!(
+        pre_err.iter().any(|v| *v != 0.0),
+        "accumulator must be nonzero before quarantine for the flush to matter"
+    );
+
+    // the straggle window: first miss quarantines, second round runs
+    // degraded with no command to the straggler
+    for _ in 0..window {
+        dist.try_step(p.as_ref()).unwrap();
+    }
+    assert_eq!(dist.health().states[straggler], WorkerState::Quarantined);
+
+    // rejoin: the bootstrap resync flushes the accumulator, then the
+    // worker answers the round like any freshly synced worker
+    dist.rejoin(straggler).expect("straggler thread is alive");
+    let x_k = dist.x().to_vec();
+    let h_boot = dist.shift(straggler).to_vec();
+    dist.try_step(p.as_ref()).unwrap();
+
+    let snap = dist.worker_snapshot(straggler);
+    assert_eq!(snap.x_replica, x_k, "rejoin bootstrap must resync the replica");
+    // replay the worker's EF round from a *fresh* accumulator:
+    // m = ∇f_i(x_k) − h_i, ship TopK(m), keep e = m − TopK(m)
+    let mut m = vec![0.0; d];
+    p.local_grad_into(straggler, &x_k, &mut m);
+    axpy(-1.0, &h_boot, &mut m);
+    let mut fresh = EfUplink::new(d);
+    // Top-K is deterministic; the stream is only a signature requirement
+    let mut rng = Pcg64::with_stream(0, 0);
+    fresh.fold_and_compress(&q, &mut rng, &m, ValPrec::F64);
+    let expected = fresh.error();
+    let got = snap.uplink_error.expect("EF armed");
+    assert_eq!(got.len(), expected.len());
+    for j in 0..d {
+        assert_eq!(
+            got[j].to_bits(),
+            expected[j].to_bits(),
+            "coord {j}: accumulator must equal the fresh-state residual \
+             (stale mass would shift the Top-K support)"
+        );
+    }
+}

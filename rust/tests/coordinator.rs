@@ -57,6 +57,7 @@ fn dcgd_bit_identical() {
             pipeline: false,
             downlink: None,
             uplink_ef: false,
+            ..Default::default()
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 60);
@@ -94,6 +95,7 @@ fn diana_bit_identical() {
             pipeline: false,
             downlink: None,
             uplink_ef: false,
+            ..Default::default()
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 60);
@@ -135,6 +137,7 @@ fn diana_with_c_bit_identical() {
             pipeline: false,
             downlink: None,
             uplink_ef: false,
+            ..Default::default()
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 50);
@@ -166,6 +169,7 @@ fn rand_diana_bit_identical() {
             pipeline: false,
             downlink: None,
             uplink_ef: false,
+            ..Default::default()
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 80);
@@ -198,6 +202,7 @@ fn star_bit_identical() {
             pipeline: false,
             downlink: None,
             uplink_ef: false,
+            ..Default::default()
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 60);
@@ -310,6 +315,7 @@ fn resync_rounds_stay_bit_identical() {
             pipeline: false,
             downlink: None,
             uplink_ef: false,
+            ..Default::default()
         },
     );
     assert_trajectories_match(single, dist, p.as_ref(), 40);
@@ -348,6 +354,7 @@ fn set_x0_mid_run_resyncs_replicas() {
             pipeline: false,
             downlink: None,
             uplink_ef: false,
+            ..Default::default()
         },
     );
     for _ in 0..5 {
@@ -438,6 +445,7 @@ fn f32_wire_precision_cluster_converges() {
                 pipeline: false,
                 downlink: None,
                 uplink_ef: false,
+                ..Default::default()
             },
         )
     };
@@ -490,6 +498,7 @@ fn downlink_accounting_mirrors_runner() {
             pipeline: false,
             downlink: None,
             uplink_ef: false,
+            ..Default::default()
         },
     );
     for k in 0..30 {
@@ -536,6 +545,7 @@ fn ef_identity_downlink_bit_identical_to_exact() {
             pipeline: false,
             downlink: Some(Box::new(shiftcomp::compressors::Identity::new(d))),
             uplink_ef: false,
+            ..Default::default()
         },
     );
     for k in 0..40 {
@@ -594,6 +604,7 @@ fn ef_topk_cluster_matches_single_process_mirror() {
             pipeline: false,
             downlink: Some(Box::new(TopK::with_q(d, 0.25))),
             uplink_ef: false,
+            ..Default::default()
         },
     );
     for k in 0..60 {
@@ -658,6 +669,7 @@ fn ef_topk_invariant_drift_and_resync() {
             pipeline: false,
             downlink: Some(Box::new(TopK::with_q(d, 0.2))),
             uplink_ef: false,
+            ..Default::default()
         },
     );
     let mut prev_mirror: Option<Vec<f64>> = None;
@@ -750,6 +762,7 @@ fn f32_worker_shifts_bit_equal_master_replicas() {
             pipeline: false,
             downlink: None,
             uplink_ef: false,
+            ..Default::default()
         },
     );
     for _ in 0..50 {
@@ -788,6 +801,7 @@ fn f32_worker_shifts_bit_equal_master_replicas() {
             pipeline: false,
             downlink: None,
             uplink_ef: false,
+            ..Default::default()
         },
     );
     for _ in 0..50 {
@@ -834,6 +848,7 @@ fn f32_single_process_mirrors_cluster_bit_exactly() {
             pipeline: false,
             downlink: None,
             uplink_ef: false,
+            ..Default::default()
         },
     );
     for k in 0..60 {
@@ -884,6 +899,7 @@ fn resync_every_round_stays_exact_and_dense() {
             pipeline: false,
             downlink: None,
             uplink_ef: false,
+            ..Default::default()
         },
     );
     let dense_frame_bits = shiftcomp::wire::resync_frame_bits(d);
@@ -930,6 +946,7 @@ fn set_x0_flushes_ef_accumulator() {
             pipeline: false,
             downlink: Some(Box::new(TopK::with_q(d, 0.1))),
             uplink_ef: false,
+            ..Default::default()
         },
     );
     for _ in 0..10 {
@@ -995,6 +1012,7 @@ fn mk_batched_cluster(
             pipeline,
             downlink,
             uplink_ef: false,
+            ..Default::default()
         },
     )
 }
@@ -1194,6 +1212,7 @@ fn local_steps_pipelining_cut_latency_bound_wall_clock() {
                 pipeline,
                 downlink: None,
                 uplink_ef: false,
+                ..Default::default()
             },
         )
     };
@@ -1271,6 +1290,7 @@ fn mk_ef_uplink_cluster(
             pipeline: false,
             downlink,
             uplink_ef: true,
+            ..Default::default()
         },
     )
 }
