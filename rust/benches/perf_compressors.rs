@@ -111,6 +111,70 @@ fn main() {
         ));
     }
 
+    // Top-K selection: the O(d) `select_nth_unstable` partial selection
+    // inside `TopK::compress_into` vs a sort-based reference (O(d log d)
+    // full sort of the index permutation, then take K). Pins the
+    // quickselect path's advantage at the wide-sparse operating point.
+    {
+        let d = if smoke { 20_000 } else { 200_000 };
+        let q = 0.005;
+        let mut rng = Pcg64::new(12);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let comp = TopK::with_q(d, q);
+        let k = comp.k;
+        let mut r = Pcg64::new(13);
+        let mut pkt = Packet::Zero { dim: d as u32 };
+        let select = bench_maybe_smoke(
+            &format!("top-k quickselect (compress_into) d={d} k={k}"),
+            smoke,
+            || {
+                comp.compress_into(&mut r, bb(&x), &mut pkt);
+                bb(&pkt);
+            },
+        );
+        rows.push(format!("topk-select,{},{:.3e}", d, select.median()));
+        json.push(JsonScenario::new(
+            format!("topk_select_d{d}"),
+            select.median(),
+            Some(d as f64 / select.median()),
+        ));
+
+        // sort-based reference: same comparator, same output support
+        let mut order: Vec<u32> = Vec::new();
+        let mut indices: Vec<u32> = Vec::new();
+        let sort = bench_maybe_smoke(
+            &format!("top-k full-sort reference d={d} k={k}"),
+            smoke,
+            || {
+                order.clear();
+                order.extend(0..d as u32);
+                order.sort_unstable_by(|&a, &b| {
+                    x[b as usize].abs().total_cmp(&x[a as usize].abs())
+                });
+                indices.clear();
+                indices.extend_from_slice(&order[..k]);
+                indices.sort_unstable();
+                bb(&indices);
+            },
+        );
+        rows.push(format!("topk-sort-ref,{},{:.3e}", d, sort.median()));
+        json.push(JsonScenario::new(
+            format!("topk_sort_ref_d{d}"),
+            sort.median(),
+            Some(d as f64 / sort.median()),
+        ));
+        // same support from both paths (the reference is a correctness
+        // cross-check, not just a baseline)
+        let Packet::Sparse { indices: sel, .. } = &pkt else {
+            panic!("top-k emits sparse packets");
+        };
+        assert_eq!(sel, &indices, "quickselect and sort disagree on the support");
+        println!(
+            "  → quickselect is {:.1}× faster than the sort-based reference at d={d}",
+            sort.median() / select.median()
+        );
+    }
+
     write_csv(
         "results/perf_compressors.csv",
         "name,dim,median_sec_per_iter",

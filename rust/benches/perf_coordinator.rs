@@ -549,6 +549,93 @@ fn main() {
         );
     }
 
+    // ------------------------------------------------ parallel master fold
+    // This PR's tentpole scenario: break the master's own CPU time out of
+    // the round wall-clock — broadcast encode + uplink decode + fold, with
+    // the gather wait excluded (`DistributedRunner::master_seconds`) — at
+    // fold-pool widths T ∈ {1, 4, 8}. Trajectories are bit-identical
+    // across T (asserted below): the pool trades master wall-clock only.
+    // One `master_secs`-bearing row per (n, T) lands in
+    // results/BENCH_perf.json so the scaling is inspectable across PRs.
+    // (Measured speedup depends on the host's core count; single-core
+    // runners legitimately record ~1×.)
+    {
+        let q = 0.005;
+        let fleets: &[(usize, usize)] = if smoke {
+            &[(20_000, 4), (20_000, 8)]
+        } else {
+            &[(200_000, 16), (200_000, 64)]
+        };
+        let (warmup, measured) = if smoke { (2u32, 6u32) } else { (5, 30) };
+        for &(d, n) in fleets {
+            let omega = RandK::with_q(d, q).omega().unwrap();
+            let mut final_x: Option<Vec<f64>> = None;
+            let mut per_t = Vec::new();
+            for t in [1usize, 4, 8] {
+                let pa = Arc::new(WideProblem::new(d, n, 21));
+                let ss =
+                    shiftcomp::theory::diana(pa.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+                let qs: Vec<Box<dyn Compressor>> = (0..n)
+                    .map(|_| Box::new(RandK::with_q(d, q)) as Box<dyn Compressor>)
+                    .collect();
+                let mut dist = DistributedRunner::new(
+                    pa.clone(),
+                    qs,
+                    None,
+                    vec![vec![0.0; d]; n],
+                    ClusterConfig {
+                        method: MethodKind::Diana {
+                            alpha: ss.alpha,
+                            with_c: false,
+                        },
+                        gamma: ss.gamma,
+                        seed: 21,
+                        master_threads: Some(t),
+                        ..Default::default()
+                    },
+                );
+                for _ in 0..warmup {
+                    dist.step(pa.as_ref());
+                }
+                let m0 = dist.master_seconds();
+                let t0 = std::time::Instant::now();
+                for _ in 0..measured {
+                    dist.step(pa.as_ref());
+                }
+                let wall = t0.elapsed().as_secs_f64() / measured as f64;
+                let master = (dist.master_seconds() - m0) / measured as f64;
+                println!(
+                    "master fold (d={d} n={n} T={t}): {master:.3e} s master / {wall:.3e} s round"
+                );
+                rows.push(format!("master_fold_n{n}_T{t},{master:.3e}"));
+                json.push(
+                    JsonScenario::new(
+                        format!("master_fold_d{d}n{n}_T{t}"),
+                        wall,
+                        Some((d * n) as f64 / wall),
+                    )
+                    .with_master_secs(master),
+                );
+                per_t.push((t, master));
+                // bit-identity across pool widths: identical trajectory
+                // regardless of T (the fold pool's core invariant)
+                match &final_x {
+                    None => final_x = Some(dist.x().to_vec()),
+                    Some(x1) => assert_eq!(
+                        x1.as_slice(),
+                        dist.x(),
+                        "T={t} trajectory diverged from T=1 at d={d} n={n}"
+                    ),
+                }
+            }
+            println!(
+                "  → fold pool cuts master time {:.1}× at T=4, {:.1}× at T=8 (n={n}, d={d})",
+                per_t[0].1 / per_t[1].1,
+                per_t[0].1 / per_t[2].1
+            );
+        }
+    }
+
     write_csv("results/perf_coordinator.csv", "name,median_sec", &rows).expect("csv");
     write_bench_json("results/BENCH_perf.json", &json).expect("json");
     println!("\nwritten: results/perf_coordinator.csv + results/BENCH_perf.json");

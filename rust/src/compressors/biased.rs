@@ -101,11 +101,12 @@ impl Compressor for TopK {
             let mut order = o.borrow_mut();
             order.clear();
             order.extend(0..self.d as u32);
+            // total_cmp gives a total order (descending by |x_i|): NaN
+            // inputs rank above +inf deterministically instead of silently
+            // tying with everything, which would make the selected support
+            // depend on the partition's visit order.
             order.select_nth_unstable_by(self.k.saturating_sub(1), |&a, &b| {
-                x[b as usize]
-                    .abs()
-                    .partial_cmp(&x[a as usize].abs())
-                    .unwrap_or(std::cmp::Ordering::Equal)
+                x[b as usize].abs().total_cmp(&x[a as usize].abs())
             });
             indices.clear();
             indices.extend_from_slice(&order[..self.k]);
@@ -249,6 +250,39 @@ mod tests {
         // exact identity: ‖C(x)−x‖² = ‖x‖² − ‖x‖₁²/d
         let expected = (nrm2_sq(&x) - nrm1(&x).powi(2) / d as f64) / nrm2_sq(&x);
         assert!((ratio - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn topk_orders_nan_inputs_deterministically() {
+        // |NaN| is a positive NaN, which total_cmp orders above +inf: a NaN
+        // coordinate is always selected, and repeated compressions of the
+        // same input pick the identical support (no visit-order dependence).
+        let c = TopK::new(8, 3);
+        let x = [
+            0.1,
+            -3.0,
+            f64::NAN,
+            0.2,
+            f64::INFINITY,
+            -0.5,
+            7.0,
+            f64::NAN,
+        ];
+        let mut rng = Pcg64::new(10);
+        let select = |rng: &mut Pcg64| -> Vec<u32> {
+            let pkt = c.compress(rng, &x);
+            let Packet::Sparse { indices, .. } = pkt else {
+                panic!("top-k emits sparse packets");
+            };
+            indices
+        };
+        let first = select(&mut rng);
+        assert_eq!(first.len(), 3);
+        // the two NaNs outrank +inf; the third slot goes to +inf
+        assert_eq!(first, vec![2, 4, 7]);
+        for _ in 0..10 {
+            assert_eq!(select(&mut rng), first, "selection must be deterministic");
+        }
     }
 
     #[test]

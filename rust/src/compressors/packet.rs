@@ -330,6 +330,148 @@ impl Packet {
         }
     }
 
+    /// Payload cursors at each shard cut point, for
+    /// [`Packet::add_scaled_range`]. `cuts` are the `T + 1` ascending
+    /// coordinate boundaries of the shard partition (`cuts[0] = 0`,
+    /// `cuts[T] = d`, see `coordinator::pool::shard_cuts_into`); `out[s]`
+    /// receives this packet's payload position at coordinate `cuts[s]`:
+    ///
+    /// * [`Packet::Sparse`] — the index-array offset, located with one
+    ///   binary search (`partition_point`) over the sorted indices per cut;
+    /// * [`Packet::TernaryPkt`] — the sign-array cursor, i.e. the prefix
+    ///   popcount of the presence mask, computed for all cuts in one O(d)
+    ///   pass;
+    /// * dense-shaped variants — the coordinate itself (payloads are
+    ///   coordinate-indexed).
+    ///
+    /// Bounds are computed once per packet per round and cached by the
+    /// coordinator (reused buffer — allocation-free after warm-up), so the
+    /// T-shard fold does O(T log nnz) location work instead of every shard
+    /// scanning the payload from the start.
+    pub fn shard_bounds_into(&self, cuts: &[usize], out: &mut Vec<u32>) {
+        out.clear();
+        match self {
+            Packet::Sparse { indices, .. } => {
+                for &c in cuts {
+                    out.push(indices.partition_point(|&i| (i as usize) < c) as u32);
+                }
+            }
+            Packet::TernaryPkt { mask, .. } => {
+                let mut cursor = 0u32;
+                let mut pos = 0usize;
+                for &c in cuts {
+                    while pos < c {
+                        cursor += u32::from(mask[pos]);
+                        pos += 1;
+                    }
+                    out.push(cursor);
+                }
+            }
+            _ => out.extend(cuts.iter().map(|&c| c as u32)),
+        }
+    }
+
+    /// Shard-restricted [`Packet::add_scaled_into`]: applies exactly the
+    /// coordinates in `[lo, hi)` to `out`, which is the **pre-sliced**
+    /// shard sub-range (`out.len() == hi - lo`; `out[i - lo]` is global
+    /// coordinate `i`). `bounds` are this packet's payload cursors at `lo`
+    /// and `hi` from [`Packet::shard_bounds_into`] (ignored by the
+    /// dense-shaped variants).
+    ///
+    /// Per-coordinate arithmetic is byte-for-byte the same expression as
+    /// `add_scaled_into`, so running every shard of a partition of
+    /// `[0, d)` reproduces the unsharded apply bit-identically — the
+    /// parallel fold's bit-identity invariant rests on this (pinned by the
+    /// `sharded_apply_matches_full_apply` test below for every variant).
+    pub fn add_scaled_range(
+        &self,
+        alpha: f64,
+        lo: usize,
+        hi: usize,
+        bounds: (u32, u32),
+        out: &mut [f64],
+    ) {
+        debug_assert!(lo <= hi && hi <= self.dim());
+        debug_assert_eq!(out.len(), hi - lo, "add_scaled_range shard-slice mismatch");
+        match self {
+            Packet::Dense(v) => crate::linalg::axpy(alpha, &v[lo..hi], out),
+            Packet::Sparse {
+                indices,
+                values,
+                scale,
+                ..
+            } => {
+                let (b0, b1) = (bounds.0 as usize, bounds.1 as usize);
+                if *scale == 1.0 {
+                    for (i, v) in indices[b0..b1].iter().zip(values[b0..b1].iter()) {
+                        out[*i as usize - lo] += alpha * *v;
+                    }
+                } else {
+                    for (i, v) in indices[b0..b1].iter().zip(values[b0..b1].iter()) {
+                        out[*i as usize - lo] += alpha * (*scale * *v);
+                    }
+                }
+            }
+            Packet::Levels {
+                norm,
+                s,
+                signs,
+                levels,
+                ..
+            } => {
+                for i in lo..hi {
+                    let lvl = levels[i];
+                    if lvl != 0 {
+                        let mag = norm * 2f64.powi(lvl as i32 - *s as i32);
+                        out[i - lo] += alpha * if signs[i] { mag } else { -mag };
+                    }
+                }
+            }
+            Packet::LevelsLinear {
+                norm,
+                s,
+                signs,
+                levels,
+                ..
+            } => {
+                for i in lo..hi {
+                    if levels[i] != 0 {
+                        let mag = norm * levels[i] as f64 / *s as f64;
+                        out[i - lo] += alpha * if signs[i] { mag } else { -mag };
+                    }
+                }
+            }
+            Packet::NatExp { signs, exps, .. } => {
+                for i in lo..hi {
+                    if exps[i] != i8::MIN {
+                        let mag = 2f64.powi(exps[i] as i32);
+                        out[i - lo] += alpha * if signs[i] { mag } else { -mag };
+                    }
+                }
+            }
+            Packet::SignScale { scale, signs, .. } => {
+                for i in lo..hi {
+                    out[i - lo] += alpha * if signs[i] { *scale } else { -*scale };
+                }
+            }
+            Packet::TernaryPkt {
+                scale,
+                mask,
+                signs,
+                ..
+            } => {
+                let mut sign_cursor = bounds.0 as usize;
+                for i in lo..hi {
+                    if mask[i] {
+                        out[i - lo] += alpha * if signs[sign_cursor] { *scale } else { -*scale };
+                        sign_cursor += 1;
+                    }
+                }
+            }
+            Packet::Zero { .. } => {}
+        }
+    }
+
     /// Round every floating-point field (values, scales, norms) to the
     /// wire precision, in place. A quantized packet survives the
     /// encode → decode round-trip bit for bit, so *both* ends of a link
@@ -1039,5 +1181,97 @@ mod tests {
         assert_eq!(bits_for_levels(3), 2); // {0..3}
         assert_eq!(bits_for_levels(4), 3); // {0..4}
         assert_eq!(bits_for_levels(15), 4);
+    }
+
+    #[test]
+    fn sharded_apply_matches_full_apply() {
+        // Every variant, several shard partitions (including empty shards
+        // and the trivial 1-shard split): applying add_scaled_range over a
+        // partition of [0, d) must be bit-identical to add_scaled_into.
+        let d = 13usize;
+        let pkts = vec![
+            Packet::Dense((0..d).map(|i| i as f64 * 0.37 - 2.0).collect()),
+            Packet::Sparse {
+                dim: d as u32,
+                indices: vec![0, 3, 4, 7, 12],
+                values: vec![2.0, -4.0, 0.5, 1.25, -9.0],
+                scale: 1.5,
+            },
+            Packet::Sparse {
+                dim: d as u32,
+                indices: vec![2, 11],
+                values: vec![3.0, -1.0],
+                scale: 1.0,
+            },
+            Packet::Levels {
+                dim: d as u32,
+                norm: 8.0,
+                s: 3,
+                signs: (0..d).map(|i| i % 2 == 0).collect(),
+                levels: (0..d).map(|i| (i % 4) as u8).collect(),
+            },
+            Packet::LevelsLinear {
+                dim: d as u32,
+                norm: 2.0,
+                s: 4,
+                signs: (0..d).map(|i| i % 3 == 0).collect(),
+                levels: (0..d).map(|i| (i % 5) as u8).collect(),
+            },
+            Packet::NatExp {
+                dim: d as u32,
+                signs: (0..d).map(|i| i % 2 == 1).collect(),
+                exps: (0..d)
+                    .map(|i| if i % 4 == 0 { i8::MIN } else { (i as i8) - 6 })
+                    .collect(),
+            },
+            Packet::SignScale {
+                dim: d as u32,
+                scale: 0.5,
+                signs: (0..d).map(|i| i % 3 != 1).collect(),
+            },
+            Packet::TernaryPkt {
+                dim: d as u32,
+                scale: 3.0,
+                mask: (0..d).map(|i| i % 3 != 0).collect(),
+                signs: (0..d).filter(|i| i % 3 != 0).map(|i| i % 2 == 0).collect(),
+            },
+            Packet::Zero { dim: d as u32 },
+        ];
+        let partitions: Vec<Vec<usize>> = vec![
+            vec![0, d],                   // T = 1
+            vec![0, 7, d],                // T = 2
+            vec![0, 4, 4, 9, d],          // T = 4 with an empty shard
+            (0..=d).collect(),            // T = d, one coordinate each
+        ];
+        let acc0: Vec<f64> = (0..d).map(|i| (i as f64) * 0.11 - 0.6).collect();
+        let mut bounds = Vec::new();
+        for pkt in &pkts {
+            for alpha in [1.0, -0.75, 2.5] {
+                let mut want = acc0.clone();
+                pkt.add_scaled_into(alpha, &mut want);
+                for cuts in &partitions {
+                    pkt.shard_bounds_into(cuts, &mut bounds);
+                    assert_eq!(bounds.len(), cuts.len());
+                    let mut got = acc0.clone();
+                    for s in 0..cuts.len() - 1 {
+                        let (lo, hi) = (cuts[s], cuts[s + 1]);
+                        pkt.add_scaled_range(
+                            alpha,
+                            lo,
+                            hi,
+                            (bounds[s], bounds[s + 1]),
+                            &mut got[lo..hi],
+                        );
+                    }
+                    for j in 0..d {
+                        assert_eq!(
+                            got[j].to_bits(),
+                            want[j].to_bits(),
+                            "{pkt:?} alpha={alpha} cuts={cuts:?} coord {j}"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

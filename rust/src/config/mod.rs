@@ -411,6 +411,11 @@ pub struct ClusterSpec {
     pub round_timeout_ms: u64,
     /// consecutive deadline misses before quarantine (must be ≥ 1)
     pub quarantine_after: usize,
+    /// master fold-pool width (must be ≥ 1 when given; `None` = auto-size
+    /// from the `SHIFTCOMP_MASTER_THREADS` environment variable, else
+    /// `available_parallelism`). Bit-identical trajectories for every
+    /// value — this knob trades master wall-clock only.
+    pub master_threads: Option<usize>,
 }
 
 impl Default for ClusterSpec {
@@ -425,6 +430,7 @@ impl Default for ClusterSpec {
             faults: FaultPlan::new(),
             round_timeout_ms: DEFAULT_ROUND_TIMEOUT_MS,
             quarantine_after: 1,
+            master_threads: None,
         }
     }
 }
@@ -490,6 +496,25 @@ impl ClusterSpec {
                 _ => return Err(bad("cluster.quarantine_after must be an integer >= 1")),
             }
         };
+        let mt_j = j.get("master_threads");
+        let master_threads = if mt_j.is_null() {
+            None
+        } else {
+            // reject 0 and absurd widths here so build_distributed never
+            // trips the fold pool's assert on a config-supplied value
+            match mt_j.as_usize() {
+                Some(v) if (1..=crate::coordinator::pool::MAX_FOLD_THREADS).contains(&v) => {
+                    Some(v)
+                }
+                _ => {
+                    return Err(bad(format!(
+                        "cluster.master_threads must be an integer in 1..={} (omit it to \
+                         auto-size the fold pool)",
+                        crate::coordinator::pool::MAX_FOLD_THREADS
+                    )))
+                }
+            }
+        };
         Ok(Self {
             resync_every,
             prec,
@@ -500,6 +525,7 @@ impl ClusterSpec {
             faults,
             round_timeout_ms,
             quarantine_after,
+            master_threads,
         })
     }
 
@@ -934,6 +960,7 @@ impl ExperimentConfig {
                     .then(|| self.cluster.faults.clone()),
                 round_timeout_ms: self.cluster.round_timeout_ms,
                 quarantine_after: self.cluster.quarantine_after,
+                master_threads: self.cluster.master_threads,
             },
         );
         Ok((problem, runner))
@@ -1112,6 +1139,63 @@ mod tests {
         let cfg = ExperimentConfig::parse(&with.replace(r#""kind": "dcgd""#, r#""kind": "diana""#))
             .unwrap();
         assert!(cfg.build_distributed().is_ok());
+    }
+
+    #[test]
+    fn master_threads_parses_builds_and_rejects() {
+        let with = r#"{
+            "problem": {"kind": "quadratic", "d": 10, "workers": 3, "seed": 1},
+            "algorithm": {"kind": "dcgd"},
+            "compressor": {"kind": "rand-k", "q": 0.3},
+            "cluster": {"master_threads": 3}
+        }"#;
+        let cfg = ExperimentConfig::parse(with).unwrap();
+        assert_eq!(cfg.cluster.master_threads, Some(3));
+        // the knob reaches the runner's fold pool verbatim
+        let (_p, runner) = cfg.build_distributed().unwrap();
+        assert_eq!(runner.fold_threads(), 3);
+        // default: auto-sized (spec stores None; resolution happens at
+        // pool construction from env/available_parallelism)
+        let dflt = ExperimentConfig::parse(SAMPLE).unwrap();
+        assert_eq!(dflt.cluster.master_threads, None);
+        // the field participates in ClusterSpec equality
+        assert_ne!(
+            ClusterSpec {
+                master_threads: Some(2),
+                ..ClusterSpec::default()
+            },
+            ClusterSpec::default()
+        );
+        // parse-time validation: zero, over-cap and wrong-typed values all
+        // error with a descriptive message instead of tripping the pool's
+        // assert at build time
+        let zero = with.replace(r#""master_threads": 3"#, r#""master_threads": 0"#);
+        let err = ExperimentConfig::parse(&zero).unwrap_err();
+        assert!(
+            err.to_string().contains("master_threads"),
+            "error must name the field: {err}"
+        );
+        assert!(ExperimentConfig::parse(
+            &with.replace(r#""master_threads": 3"#, r#""master_threads": 100000"#)
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            &with.replace(r#""master_threads": 3"#, r#""master_threads": "4""#)
+        )
+        .is_err());
+        // bit-identity across widths, through the config layer: T = 1 and
+        // T = 3 clusters from the same spec track each other exactly
+        let cfg1 = ExperimentConfig::parse(
+            &with.replace(r#""master_threads": 3"#, r#""master_threads": 1"#),
+        )
+        .unwrap();
+        let (p1, mut r1) = cfg1.build_distributed().unwrap();
+        let (p3, mut r3) = cfg.build_distributed().unwrap();
+        for k in 0..25 {
+            r1.step(p1.as_ref());
+            r3.step(p3.as_ref());
+            assert_eq!(r1.x(), r3.x(), "diverged at round {k}");
+        }
     }
 
     #[test]

@@ -28,10 +28,12 @@
 //! path deterministically. See [`runner`]'s module doc for the semantics.
 
 pub mod faults;
+pub mod pool;
 pub mod protocol;
 pub mod runner;
 
 pub use faults::{FaultKind, FaultPlan, FaultSpec, WorkerFaultScript};
+pub use pool::{FoldPool, ShardView};
 pub use protocol::{
     FailureClass, FrameSet, MethodKind, RunnerHealth, WorkerCommand, WorkerFailure, WorkerSnapshot,
     WorkerState, WorkerUpdate,

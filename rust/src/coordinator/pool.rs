@@ -1,0 +1,347 @@
+//! Persistent coordinate-shard thread pool for the master's fold.
+//!
+//! The master's per-round work — decoding n uplink frames and replaying the
+//! fold into `est`/`h`/`h_sum` — is the serial bottleneck once the wire is
+//! O(K) bytes (see the "Parallel fold" section of [`crate::coordinator::runner`]).
+//! [`FoldPool`] parallelizes it without touching the fp op sequence any
+//! single coordinate observes:
+//!
+//! - `T − 1` worker threads (`shiftcomp-fold-{s}`) are spawned **once** at
+//!   runner construction and parked on a rendezvous channel; arming a round
+//!   costs one channel send per thread and zero allocations, preserving the
+//!   steady-state zero-allocation round contract.
+//! - [`FoldPool::run`] executes a borrowed closure on every shard: shard 0
+//!   runs inline on the calling thread (so `T = 1` is *literally* the serial
+//!   path — no hand-off, no barrier), shards `1..T` run on the pool threads,
+//!   and `run` returns only after every shard has reported done. That
+//!   completion barrier is what makes the lifetime-erased borrow sound.
+//! - Shard panics are caught (`catch_unwind`) and re-raised on the calling
+//!   thread after the barrier, so a poisoned fold can't leave the pool or
+//!   the round state half-synchronized.
+//!
+//! [`ShardView`] is the companion aliasing escape hatch: a `Send + Sync`
+//! raw-pointer view of a mutable slice from which each shard carves its own
+//! *disjoint* sub-range. All `unsafe` of the parallel fold lives in this
+//! module behind the two SAFETY contracts documented below.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+
+/// Upper bound on fold threads: beyond this the per-round barrier cost
+/// dwarfs any conceivable fold speedup on one NUMA node.
+pub const MAX_FOLD_THREADS: usize = 256;
+
+/// Auto-sizing cap: when `master_threads` is unset we take the machine's
+/// [`std::thread::available_parallelism`] but never more than this — each
+/// runner owns its own pool, and tests/benches construct several runners.
+const AUTO_THREADS_CAP: usize = 16;
+
+/// Environment override consulted when `cluster.master_threads` is unset:
+/// lets CI force the parallel fold (`SHIFTCOMP_MASTER_THREADS=4`) through
+/// every existing test without touching configs. Invalid or zero values
+/// fall back to auto-sizing.
+pub const MASTER_THREADS_ENV: &str = "SHIFTCOMP_MASTER_THREADS";
+
+/// Resolve the fold-pool size: an explicit config value wins (validated to
+/// `1..=`[`MAX_FOLD_THREADS`]), otherwise [`MASTER_THREADS_ENV`], otherwise
+/// `available_parallelism` capped at 16.
+pub fn resolve_threads(configured: Option<usize>) -> usize {
+    if let Some(t) = configured {
+        assert!(
+            (1..=MAX_FOLD_THREADS).contains(&t),
+            "master_threads must be in 1..={MAX_FOLD_THREADS} (got {t})"
+        );
+        return t;
+    }
+    if let Ok(s) = std::env::var(MASTER_THREADS_ENV) {
+        if let Ok(t) = s.trim().parse::<usize>() {
+            if (1..=MAX_FOLD_THREADS).contains(&t) {
+                return t;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(AUTO_THREADS_CAP)
+}
+
+/// Contiguous coordinate range `[lo, hi)` owned by shard `s` of `t` over a
+/// `d`-length vector: near-equal split, the first `d % t` shards one longer.
+/// Shards cover `[0, d)` exactly and never overlap.
+pub fn shard_range(d: usize, t: usize, s: usize) -> (usize, usize) {
+    debug_assert!(s < t);
+    let base = d / t;
+    let rem = d % t;
+    let lo = s * base + s.min(rem);
+    (lo, lo + base + usize::from(s < rem))
+}
+
+/// The `t + 1` ascending cut points of the shard partition: `cuts[s]..cuts[s+1]`
+/// is shard `s`'s range, `cuts[0] == 0`, `cuts[t] == d`. Written into a
+/// reused buffer so refilling per round is allocation-free.
+pub fn shard_cuts_into(d: usize, t: usize, out: &mut Vec<usize>) {
+    out.clear();
+    out.push(0);
+    for s in 0..t {
+        out.push(shard_range(d, t, s).1);
+    }
+}
+
+/// A lifetime-erased shard job: a raw pointer to the borrowed closure.
+/// Sound because [`FoldPool::run`] blocks on the done barrier before
+/// returning, so the pointee outlives every dereference.
+struct Job(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared access from many threads is fine)
+// and `run`'s barrier guarantees it is alive for the duration of the job.
+unsafe impl Send for Job {}
+
+/// Persistent shard pool; see the module docs for the execution model.
+pub struct FoldPool {
+    threads: usize,
+    job_txs: Vec<SyncSender<Job>>,
+    done_rx: Receiver<bool>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl FoldPool {
+    /// Spawn `threads − 1` shard workers (shard 0 stays on the caller).
+    pub fn new(threads: usize) -> Self {
+        assert!(
+            (1..=MAX_FOLD_THREADS).contains(&threads),
+            "fold pool needs 1..={MAX_FOLD_THREADS} threads (got {threads})"
+        );
+        let (done_tx, done_rx) = sync_channel::<bool>(threads);
+        let mut job_txs = Vec::with_capacity(threads - 1);
+        let mut handles = Vec::with_capacity(threads - 1);
+        for s in 1..threads {
+            let (tx, rx) = sync_channel::<Job>(1);
+            let done = done_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("shiftcomp-fold-{s}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        // SAFETY: `run` keeps the closure borrowed until the
+                        // done barrier below releases it, so the pointer is
+                        // live here.
+                        let f = unsafe { &*job.0 };
+                        let ok = catch_unwind(AssertUnwindSafe(|| f(s))).is_ok();
+                        if done.send(ok).is_err() {
+                            break; // pool dropped mid-job: exit quietly
+                        }
+                    }
+                })
+                .expect("spawn fold shard thread");
+            job_txs.push(tx);
+            handles.push(handle);
+        }
+        Self {
+            threads,
+            job_txs,
+            done_rx,
+            handles,
+        }
+    }
+
+    /// Number of shards (`T`); shard ids passed to the closure are `0..T`.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `f(s)` for every shard `s ∈ 0..T` and wait for all of them.
+    /// Shard 0 runs inline on the calling thread. Panics (after the barrier)
+    /// if any shard panicked.
+    ///
+    /// The closure only borrows — no allocation, no `Arc`, no `'static`
+    /// bound — which is what keeps pooled rounds allocation-free.
+    pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        if self.threads == 1 {
+            f(0);
+            return;
+        }
+        let job = f as *const (dyn Fn(usize) + Sync);
+        for tx in &self.job_txs {
+            tx.send(Job(job)).expect("fold shard thread exited");
+        }
+        let ok0 = catch_unwind(AssertUnwindSafe(|| f(0))).is_ok();
+        // Completion barrier: every shard must check in before `f`'s borrow
+        // can end — this is the soundness linchpin of the lifetime erasure.
+        let mut ok = ok0;
+        for _ in &self.job_txs {
+            ok &= self.done_rx.recv().expect("fold shard thread exited");
+        }
+        assert!(ok, "a fold shard panicked (see thread output above)");
+    }
+}
+
+impl Drop for FoldPool {
+    fn drop(&mut self) {
+        // Disconnect the job channels; workers fall out of their recv loop.
+        self.job_txs.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// A `Send + Sync` raw view of a mutable slice, for carving *disjoint*
+/// per-shard sub-ranges (or per-worker elements) inside a [`FoldPool::run`]
+/// closure. The borrow checker cannot prove shard disjointness, so the
+/// contract moves to the two `unsafe` accessors below; every call site in
+/// `runner.rs` derives its range from the shard cut points or a
+/// `wi % T == s` ownership rule, both of which partition the index space.
+///
+/// A view is only valid while the slice it was created from is otherwise
+/// unborrowed — create it immediately before the `run` call and let it die
+/// with the closure.
+pub struct ShardView<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+// SAFETY: the view hands out disjoint &mut sub-slices across threads; that
+// is exactly the Send-but-shared pattern, sound when T: Send and callers
+// uphold the disjointness contract of `slice`/`at`.
+unsafe impl<T: Send> Send for ShardView<T> {}
+unsafe impl<T: Send> Sync for ShardView<T> {}
+
+impl<T> Clone for ShardView<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for ShardView<T> {}
+
+impl<T> ShardView<T> {
+    pub fn new(slice: &mut [T]) -> Self {
+        Self {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The sub-slice `[lo, hi)`.
+    ///
+    /// # Safety
+    /// `lo <= hi <= len`, and no concurrently live reference (from this or
+    /// any copy of the view) may overlap `[lo, hi)`.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, lo: usize, hi: usize) -> &mut [T] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+
+    /// The single element at `i`.
+    ///
+    /// # Safety
+    /// `i < len`, and no concurrently live reference (from this or any copy
+    /// of the view) may alias element `i`.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn at(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_partition_exactly() {
+        for d in [0usize, 1, 7, 64, 100_001] {
+            for t in [1usize, 2, 3, 8, 13] {
+                let mut expect_lo = 0;
+                for s in 0..t {
+                    let (lo, hi) = shard_range(d, t, s);
+                    assert_eq!(lo, expect_lo, "d={d} t={t} s={s}");
+                    assert!(hi >= lo);
+                    expect_lo = hi;
+                }
+                assert_eq!(expect_lo, d, "shards must cover [0, d) for d={d} t={t}");
+                let mut cuts = Vec::new();
+                shard_cuts_into(d, t, &mut cuts);
+                assert_eq!(cuts.len(), t + 1);
+                assert_eq!(cuts[0], 0);
+                assert_eq!(cuts[t], d);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_runs_every_shard_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for t in [1usize, 2, 5] {
+            let pool = FoldPool::new(t);
+            let hits: Vec<AtomicUsize> = (0..t).map(|_| AtomicUsize::new(0)).collect();
+            for _ in 0..3 {
+                pool.run(&|s| {
+                    hits[s].fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            for (s, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 3, "t={t} shard {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_sharded_write_matches_serial() {
+        let d = 1013;
+        let pool = FoldPool::new(4);
+        let mut cuts = Vec::new();
+        shard_cuts_into(d, pool.threads(), &mut cuts);
+        let mut v = vec![0.0f64; d];
+        let view = ShardView::new(&mut v[..]);
+        let cuts_ref = &cuts;
+        pool.run(&|s| {
+            let (lo, hi) = (cuts_ref[s], cuts_ref[s + 1]);
+            // SAFETY: shard ranges are disjoint by construction.
+            let sub = unsafe { view.slice(lo, hi) };
+            for (j, out) in sub.iter_mut().enumerate() {
+                *out = (lo + j) as f64 * 0.5;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i as f64 * 0.5);
+        }
+    }
+
+    #[test]
+    fn pool_survives_a_shard_panic() {
+        let pool = FoldPool::new(3);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&|s| {
+                if s == 2 {
+                    panic!("injected shard fault");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "shard panic must surface on the caller");
+        // The pool stays usable for the next round.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let hits = AtomicUsize::new(0);
+        pool.run(&|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn resolve_threads_explicit_wins() {
+        assert_eq!(resolve_threads(Some(1)), 1);
+        assert_eq!(resolve_threads(Some(8)), 8);
+        let auto = resolve_threads(None);
+        assert!((1..=MAX_FOLD_THREADS).contains(&auto));
+    }
+}

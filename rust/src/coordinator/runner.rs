@@ -133,6 +133,41 @@
 //! the shift vs the master's replica instead of the former dense d-length
 //! spike.
 //!
+//! # Parallel fold (coordinate-sharded master hot path)
+//!
+//! Once both wire directions are O(K) bytes, the master's serial CPU work —
+//! decoding n uplink frames and replaying the fold into `est`/`h`/`h_sum` —
+//! is the round bottleneck. It is parallelized across a persistent pool of
+//! [`ClusterConfig::master_threads`] shard threads
+//! ([`crate::coordinator::pool::FoldPool`]) without giving up bit-identity:
+//!
+//! * **frame decode** is sharded *by worker* (`wi % T == s`): each shard
+//!   decodes into that worker's private scratch packets, so there is no
+//!   floating-point ordering hazard at all;
+//! * the **fold** is sharded *by coordinate*: shard `s` owns the contiguous
+//!   range `cuts[s]..cuts[s+1]` of `[0, d)` and replays the *same
+//!   worker-order sequence* of `ax_into` / `axpy` /
+//!   [`Packet::add_scaled_range`] ops restricted to its range. Sharding by
+//!   coordinate never reorders or reassociates anything a single
+//!   coordinate sees: `est[j]`, `h[wi][j]` and `h_sum[j]` receive exactly
+//!   the serial op sequence for every `j` — only the thread executing it
+//!   differs with `j` — so trajectories, shifts and accumulators are
+//!   bit-identical for every `T` (pinned by `tests/parallel_fold.rs`
+//!   across `T ∈ {1, 2, 8}` and against the single-process mirrors,
+//!   faults and quarantine included);
+//! * sparse packets locate their shard sub-ranges with one binary search
+//!   per cut over their sorted indices ([`Packet::shard_bounds_into`]),
+//!   cached per worker per round in reused buffers; ternary packets get
+//!   their sign cursors from one prefix-popcount pass;
+//! * quarantine/rejoin's O(d) shift moves run through the same sharded
+//!   `axpy`.
+//!
+//! The pool threads are spawned once at construction and park on
+//! rendezvous channels between rounds — arming a round costs `T − 1`
+//! channel sends and zero allocations, so pooled rounds stay on the
+//! zero-allocation contract above. `T = 1` runs every shard inline on the
+//! master thread: literally the serial path, no hand-off, no barrier.
+//!
 //! # Local-step batched rounds and pipelined pricing
 //!
 //! Once frames shrink to O(K) bytes the round-trip *latency* dominates the
@@ -171,6 +206,7 @@ use std::time::{Duration, Instant};
 use crate::algorithms::{Algorithm, StepStats};
 use crate::compressors::{Compressor, Packet, PayloadBitsCache, ValPrec};
 use crate::coordinator::faults::{FaultPlan, WorkerFaultScript};
+use crate::coordinator::pool::{self, FoldPool, ShardView};
 use crate::coordinator::protocol::{
     FailureClass, FrameSet, MethodKind, RunnerHealth, WorkerCommand, WorkerFailure, WorkerSnapshot,
     WorkerState, WorkerUpdate,
@@ -239,6 +275,14 @@ pub struct ClusterConfig {
     /// consecutive deadline misses before a worker is quarantined (≥ 1;
     /// 1 = quarantine on the first missed round)
     pub quarantine_after: usize,
+    /// fold-pool width for the master's parallel decode + fold (see the
+    /// "Parallel fold" section of the module doc). `None` (default) sizes
+    /// the pool from the `SHIFTCOMP_MASTER_THREADS` environment variable
+    /// when set, else `available_parallelism` capped at 16; `Some(t)` pins
+    /// it (config parsing rejects 0). Trajectories, shifts and
+    /// accumulators are bit-identical for every value — the knob trades
+    /// wall-clock only.
+    pub master_threads: Option<usize>,
 }
 
 /// Default [`ClusterConfig::round_timeout_ms`]: far above any healthy
@@ -261,6 +305,7 @@ impl Default for ClusterConfig {
             faults: None,
             round_timeout_ms: DEFAULT_ROUND_TIMEOUT_MS,
             quarantine_after: 1,
+            master_threads: None,
         }
     }
 }
@@ -355,6 +400,31 @@ pub struct DistributedRunner {
     /// sticky fatal failure: set once the cluster can never gather again,
     /// returned verbatim by every later `try_step`
     poisoned: Option<WorkerFailure>,
+    // ---- parallel fold (see the "Parallel fold" section of the module doc)
+    /// persistent shard-thread pool for the decode + fold hot path
+    pool: FoldPool,
+    /// shard boundaries over `[0, d)`: `cuts[s]..cuts[s+1]` is shard s's
+    /// coordinate range (T + 1 entries, fixed for the run)
+    cuts: Vec<usize>,
+    /// per-worker cached Q-packet shard bounds for the current fold
+    /// (each refilled by [`Packet::shard_bounds_into`], capacity T + 1)
+    q_bounds: Vec<Vec<u32>>,
+    /// per-worker cached C/refresh-packet shard bounds for the current fold
+    c_bounds: Vec<Vec<u32>>,
+    /// per-worker decode verdict of the parallel validation pass, consumed
+    /// by the serial accounting pass (quarantine happens in worker order)
+    fold_failures: Vec<Option<WorkerFailure>>,
+    /// per-worker "this reporter folds this round" flags (set by the
+    /// serial accounting pass, read inside the sharded fold closure)
+    fold_flags: Vec<bool>,
+    /// per-worker "Rand-DIANA refresh present this round" flags
+    refresh_flags: Vec<bool>,
+    /// shard views over the worker shift replicas, rebuilt for each fold
+    /// and cleared right after (never valid across rounds; capacity n)
+    h_views: Vec<ShardView<f64>>,
+    /// cumulative master-CPU seconds across rounds (broadcast encode +
+    /// decode + fold + downlink build; gather wait excluded)
+    master_secs: f64,
 }
 
 /// Per-worker static configuration, fixed for the run (bundled so the
@@ -839,6 +909,14 @@ impl DistributedRunner {
             dl.arm(c, &x);
         }
 
+        // Fold pool: spawned once here, parked between rounds. The shard
+        // cuts and the per-worker bound caches are sized now so pooled
+        // rounds stay on the zero-allocation contract.
+        let threads = pool::resolve_threads(cfg.master_threads);
+        let fold_pool = FoldPool::new(threads);
+        let mut cuts = Vec::with_capacity(threads + 1);
+        pool::shard_cuts_into(d, threads, &mut cuts);
+
         Self {
             method: cfg.method,
             gamma: cfg.gamma,
@@ -888,6 +966,15 @@ impl DistributedRunner {
             round_timeout: Duration::from_millis(cfg.round_timeout_ms),
             quarantine_after: cfg.quarantine_after as u32,
             poisoned: None,
+            pool: fold_pool,
+            cuts,
+            q_bounds: (0..n).map(|_| Vec::with_capacity(threads + 1)).collect(),
+            c_bounds: (0..n).map(|_| Vec::with_capacity(threads + 1)).collect(),
+            fold_failures: (0..n).map(|_| None).collect(),
+            fold_flags: vec![false; n],
+            refresh_flags: vec![false; n],
+            h_views: Vec::with_capacity(n),
+            master_secs: 0.0,
         }
     }
 
@@ -934,6 +1021,38 @@ impl DistributedRunner {
 
     pub fn simulated_time(&self) -> f64 {
         self.net.as_ref().map(|n| n.sim_time).unwrap_or(0.0)
+    }
+
+    /// Cumulative master-CPU seconds across completed rounds: broadcast
+    /// encode, uplink decode, fold and downlink build — the gather wait is
+    /// excluded, so this isolates the work the fold pool parallelizes.
+    /// `benches/perf_coordinator.rs` breaks it out per round and per T.
+    pub fn master_seconds(&self) -> f64 {
+        self.master_secs
+    }
+
+    /// Resolved fold-pool width (shards), after auto-sizing
+    /// ([`ClusterConfig::master_threads`]).
+    pub fn fold_threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Sharded `h_sum += a · h[wi]` — the quarantine/rejoin O(d) shift
+    /// move, run on the fold pool. Bit-identical to the serial `axpy`:
+    /// shards own disjoint coordinate ranges and apply the identical
+    /// per-coordinate expression.
+    fn shift_sum_axpy(&mut self, a: f64, wi: usize) {
+        let cuts = &self.cuts;
+        let src = &self.h[wi];
+        let dst = ShardView::new(&mut self.h_sum);
+        self.pool.run(&|s| {
+            let (lo, hi) = (cuts[s], cuts[s + 1]);
+            if lo < hi {
+                // SAFETY: shard ranges are disjoint, so each shard holds
+                // the only live reference into h_sum[lo..hi].
+                axpy(a, &src[lo..hi], unsafe { dst.slice(lo, hi) });
+            }
+        });
     }
 
     /// Master-side health snapshot: per-worker participation state,
@@ -988,7 +1107,7 @@ impl DistributedRunner {
         self.misses[worker] = 0;
         self.rejoining[worker] = true;
         if !matches!(self.method, MethodKind::Star { .. }) {
-            axpy(1.0, &self.h[worker], &mut self.h_sum);
+            self.shift_sum_axpy(1.0, worker);
         }
         if let Some(net) = &mut self.net {
             net.set_worker_active(worker, true);
@@ -1008,7 +1127,7 @@ impl DistributedRunner {
     fn quarantine_worker(&mut self, wi: usize, state: WorkerState, failure: WorkerFailure) {
         if self.states[wi] == WorkerState::Active {
             if !matches!(self.method, MethodKind::Star { .. }) {
-                axpy(-1.0, &self.h[wi], &mut self.h_sum);
+                self.shift_sum_axpy(-1.0, wi);
             }
             self.n_active -= 1;
             if let Some(net) = &mut self.net {
@@ -1128,6 +1247,10 @@ impl DistributedRunner {
             self.wire_bits[wi] = 0;
             self.compute[wi] = 0.0;
         }
+        // master-CPU accounting: the broadcast span is charged here, the
+        // post-gather span inside finish_step — the gather wait between
+        // them is the workers' time, not the master's
+        let broadcast_started = Instant::now();
 
         // broadcast: this round's downlink frame. The delta was pre-encoded
         // at the end of the previous round into the double-buffered Arc;
@@ -1222,6 +1345,8 @@ impl DistributedRunner {
             }
         }
 
+        self.master_secs += broadcast_started.elapsed().as_secs_f64();
+
         // gather (any arrival order; processed in worker order for exact
         // fp-reproducibility). One deadline bounds the whole wait, so no
         // fault configuration — hung workers, crashed threads, any mix —
@@ -1256,6 +1381,8 @@ impl DistributedRunner {
                 }
             }
         }
+
+        let work_started = Instant::now();
 
         // a worker-reported failure means the sender's thread exits right
         // after the update: quarantine it as Failed and keep going over
@@ -1311,226 +1438,462 @@ impl DistributedRunner {
             // Validation first: frame structure and every sub-step packet
             // are decode-checked before any aggregate arithmetic, so a
             // malformed batch quarantines its sender instead of aborting
-            // a half-replayed round.
-            for wi in 0..n {
-                let Some(upd) = self.slots[wi].take() else { continue };
-                match self.validate_batch(wi, round, d, &upd) {
-                    Ok(off) => {
-                        self.offsets[wi] = off;
-                        bits_up += upd.payload_bits;
-                        bits_refresh += upd.refresh_bits;
-                        self.wire_bits[wi] = upd.wire_bytes as u64 * 8;
-                        self.slots[wi] = Some(upd);
-                    }
-                    Err(f) => {
-                        self.frames_pool[wi] = upd.frames;
-                        self.quarantine_worker(wi, WorkerState::Quarantined, f);
-                    }
-                }
-            }
-            let reporters = self.slots.iter().filter(|s| s.is_some()).count();
-            zero(&mut self.g_acc);
-            if reporters > 0 {
-                let inv = 1.0 / reporters as f64;
-                let star = matches!(self.method, MethodKind::Star { .. });
-                for _t in 0..self.local_steps {
-                    ax_into(inv, &self.h_sum, &mut self.est);
-                    if !star {
-                        // transiently-missed Active workers: excluded from
-                        // this sub-step's estimator without touching h_sum
-                        // (Diana's permanent shift learning keeps flowing
-                        // through the maintained sum)
-                        for wi in 0..n {
-                            if self.states[wi] == WorkerState::Active && self.slots[wi].is_none() {
-                                axpy(-inv, &self.h[wi], &mut self.est);
+            // a half-replayed round. The pass is worker-sharded on the
+            // fold pool (`wi % T == s`): each shard walks its own
+            // workers' frames into their private scratch, so there is no
+            // fp hazard; verdicts land in `fold_failures` and the serial
+            // accounting below quarantines in worker order.
+            let method = self.method;
+            let local_steps = self.local_steps;
+            {
+                let threads = self.pool.threads();
+                let slots = &self.slots;
+                let q_scratch = ShardView::new(&mut self.q_scratch[..]);
+                let offsets = ShardView::new(&mut self.offsets[..]);
+                let failures = ShardView::new(&mut self.fold_failures[..]);
+                self.pool.run(&|s| {
+                    let mut wi = s;
+                    while wi < n {
+                        if let Some(upd) = slots[wi].as_ref() {
+                            // SAFETY: worker wi belongs to exactly one
+                            // shard (wi % threads == s), so these element
+                            // borrows are disjoint across shards.
+                            let (q, off, fail) = unsafe {
+                                (q_scratch.at(wi), offsets.at(wi), failures.at(wi))
+                            };
+                            match validate_batch_frame(local_steps, wi, round, d, upd, q) {
+                                Ok(first) => {
+                                    *off = first;
+                                    *fail = None;
+                                }
+                                Err(f) => *fail = Some(f),
                             }
                         }
+                        wi += threads;
                     }
-                    for wi in 0..n {
-                        let Some(upd) = self.slots[wi].as_ref() else {
-                            continue;
-                        };
-                        self.offsets[wi] = wire::decode_batch_packet(
-                            &upd.frames.q_frame,
-                            self.offsets[wi],
-                            &mut self.q_scratch[wi],
-                        )
-                        .expect("batch frame validated above");
-                        self.q_scratch[wi].add_scaled_into(inv, &mut self.est);
-                        if let MethodKind::Diana { alpha, .. } = self.method {
-                            self.q_scratch[wi].add_scaled_into(alpha, &mut self.h[wi]);
-                            self.q_scratch[wi].add_scaled_into(alpha, &mut self.h_sum);
-                        }
-                    }
-                    axpy(1.0, &self.est, &mut self.g_acc);
+                });
+            }
+            for wi in 0..n {
+                if self.slots[wi].is_none() {
+                    self.fold_flags[wi] = false;
+                    continue;
                 }
+                if let Some(f) = self.fold_failures[wi].take() {
+                    let upd = self.slots[wi].take().expect("checked above");
+                    self.frames_pool[wi] = upd.frames;
+                    self.quarantine_worker(wi, WorkerState::Quarantined, f);
+                    self.fold_flags[wi] = false;
+                    continue;
+                }
+                let upd = self.slots[wi].as_ref().expect("checked above");
+                bits_up += upd.payload_bits;
+                bits_refresh += upd.refresh_bits;
+                self.wire_bits[wi] = upd.wire_bytes as u64 * 8;
+                self.fold_flags[wi] = true;
+            }
+            let reporters = self.fold_flags.iter().filter(|&&f| f).count();
+            {
+                // sharded zero of the accumulator (elementwise writes:
+                // trivially bit-identical to the serial pass)
+                let cuts = &self.cuts;
+                let g_view = ShardView::new(&mut self.g_acc);
+                self.pool.run(&|s| {
+                    let (lo, hi) = (cuts[s], cuts[s + 1]);
+                    if lo < hi {
+                        // SAFETY: shard ranges are disjoint.
+                        zero(unsafe { g_view.slice(lo, hi) });
+                    }
+                });
+            }
+            if reporters > 0 {
+                let inv = 1.0 / reporters as f64;
+                let star = matches!(method, MethodKind::Star { .. });
+                for _t in 0..local_steps {
+                    // sub-step decode: worker-sharded cursor advance into
+                    // each reporter's scratch packet + shard-bound lookup
+                    {
+                        let threads = self.pool.threads();
+                        let slots = &self.slots;
+                        let cuts = &self.cuts;
+                        let folds = &self.fold_flags;
+                        let q_scratch = ShardView::new(&mut self.q_scratch[..]);
+                        let q_bounds = ShardView::new(&mut self.q_bounds[..]);
+                        let offsets = ShardView::new(&mut self.offsets[..]);
+                        self.pool.run(&|s| {
+                            let mut wi = s;
+                            while wi < n {
+                                if folds[wi] {
+                                    let upd =
+                                        slots[wi].as_ref().expect("fold flag implies a slot");
+                                    // SAFETY: disjoint per-worker elements
+                                    // (wi % threads == s).
+                                    let (q, qb, off) = unsafe {
+                                        (q_scratch.at(wi), q_bounds.at(wi), offsets.at(wi))
+                                    };
+                                    *off =
+                                        wire::decode_batch_packet(&upd.frames.q_frame, *off, q)
+                                            .expect("batch frame validated above");
+                                    q.shard_bounds_into(cuts, qb);
+                                }
+                                wi += threads;
+                            }
+                        });
+                    }
+                    // sub-step fold: coordinate-sharded replay of the
+                    // serial worker-order op sequence (see the module doc)
+                    self.h_views.clear();
+                    for h in self.h.iter_mut() {
+                        self.h_views.push(ShardView::new(&mut h[..]));
+                    }
+                    {
+                        let cuts = &self.cuts;
+                        let states = &self.states;
+                        let folds = &self.fold_flags;
+                        let q_scratch = &self.q_scratch;
+                        let q_bounds = &self.q_bounds;
+                        let h_views = &self.h_views;
+                        let est_view = ShardView::new(&mut self.est);
+                        let h_sum_view = ShardView::new(&mut self.h_sum);
+                        let g_view = ShardView::new(&mut self.g_acc);
+                        self.pool.run(&|s| {
+                            let (lo, hi) = (cuts[s], cuts[s + 1]);
+                            if lo == hi {
+                                return;
+                            }
+                            // SAFETY: shard ranges are disjoint, so each
+                            // shard holds the only live references into
+                            // est/h_sum/g_acc/h[wi] over [lo, hi).
+                            let est = unsafe { est_view.slice(lo, hi) };
+                            let h_sum = unsafe { h_sum_view.slice(lo, hi) };
+                            ax_into(inv, h_sum, est);
+                            if !star {
+                                // transiently-missed Active workers:
+                                // excluded from this sub-step's estimator
+                                // without touching h_sum (Diana's permanent
+                                // shift learning keeps flowing through the
+                                // maintained sum)
+                                for wi in 0..n {
+                                    if states[wi] == WorkerState::Active && !folds[wi] {
+                                        let h_wi = unsafe { h_views[wi].slice(lo, hi) };
+                                        axpy(-inv, h_wi, est);
+                                    }
+                                }
+                            }
+                            for wi in 0..n {
+                                if !folds[wi] {
+                                    continue;
+                                }
+                                let qb = (q_bounds[wi][s], q_bounds[wi][s + 1]);
+                                q_scratch[wi].add_scaled_range(inv, lo, hi, qb, est);
+                                if let MethodKind::Diana { alpha, .. } = method {
+                                    let h_wi = unsafe { h_views[wi].slice(lo, hi) };
+                                    q_scratch[wi].add_scaled_range(alpha, lo, hi, qb, h_wi);
+                                    q_scratch[wi].add_scaled_range(alpha, lo, hi, qb, h_sum);
+                                }
+                            }
+                            axpy(1.0, est, unsafe { g_view.slice(lo, hi) });
+                        });
+                    }
+                }
+                self.h_views.clear();
             }
             for wi in 0..n {
                 if let Some(upd) = self.slots[wi].take() {
                     self.frames_pool[wi] = upd.frames;
                 }
             }
-            return Ok(self.finish_step(reporters, expected, down_frame_bits, bits_up, bits_refresh));
+            return Ok(self.finish_step(
+                reporters,
+                expected,
+                down_frame_bits,
+                bits_up,
+                bits_refresh,
+                work_started,
+            ));
         }
 
-        // ---- per-round fold. Validation first (same rationale as the
-        // batched path): every reporter's frames are decoded into the
-        // per-worker scratch packets before any aggregate arithmetic.
-        for wi in 0..n {
-            let Some(upd) = self.slots[wi].take() else { continue };
-            match self.decode_update(wi, round, d, &upd) {
-                Ok(()) => self.slots[wi] = Some(upd),
-                Err(f) => {
-                    self.frames_pool[wi] = upd.frames;
-                    self.quarantine_worker(wi, WorkerState::Quarantined, f);
+        // ---- per-round fold, in three passes (see the "Parallel fold"
+        // section of the module doc).
+        //
+        // Pass 1 — parallel decode: worker-sharded on the fold pool
+        // (`wi % T == s`), each shard decoding its workers' frames into
+        // their private scratch packets and caching the packets' shard
+        // bounds. Worker-local state only, so there is no fp hazard;
+        // verdicts land in `fold_failures`.
+        let method = self.method;
+        let needs_c = matches!(
+            method,
+            MethodKind::Star { with_c: true } | MethodKind::Diana { with_c: true, .. }
+        );
+        {
+            let threads = self.pool.threads();
+            let slots = &self.slots;
+            let cuts = &self.cuts;
+            let q_scratch = ShardView::new(&mut self.q_scratch[..]);
+            let c_scratch = ShardView::new(&mut self.c_scratch[..]);
+            let q_bounds = ShardView::new(&mut self.q_bounds[..]);
+            let c_bounds = ShardView::new(&mut self.c_bounds[..]);
+            let failures = ShardView::new(&mut self.fold_failures[..]);
+            self.pool.run(&|s| {
+                let mut wi = s;
+                while wi < n {
+                    if let Some(upd) = slots[wi].as_ref() {
+                        // SAFETY: worker wi belongs to exactly one shard
+                        // (wi % threads == s), so these element borrows
+                        // are disjoint across shards.
+                        let (q, c, qb, cb, fail) = unsafe {
+                            (
+                                q_scratch.at(wi),
+                                c_scratch.at(wi),
+                                q_bounds.at(wi),
+                                c_bounds.at(wi),
+                                failures.at(wi),
+                            )
+                        };
+                        *fail = decode_update_frames(method, wi, round, d, upd, q, c).err();
+                        if fail.is_none() {
+                            q.shard_bounds_into(cuts, qb);
+                            let c_folds = needs_c
+                                || (matches!(method, MethodKind::RandDiana { .. })
+                                    && upd.frames.refresh.is_some());
+                            if c_folds {
+                                c.shard_bounds_into(cuts, cb);
+                            }
+                        }
+                    }
+                    wi += threads;
                 }
-            }
+            });
         }
-        let reporters = self.slots.iter().filter(|s| s.is_some()).count();
+
+        // Pass 2 — serial accounting, in worker order: quarantine decode
+        // failures, tally bits, recycle frame buffers, and mark who folds.
+        for wi in 0..n {
+            if self.slots[wi].is_none() {
+                self.fold_flags[wi] = false;
+                self.refresh_flags[wi] = false;
+                continue;
+            }
+            if let Some(f) = self.fold_failures[wi].take() {
+                let upd = self.slots[wi].take().expect("checked above");
+                self.frames_pool[wi] = upd.frames;
+                self.quarantine_worker(wi, WorkerState::Quarantined, f);
+                self.fold_flags[wi] = false;
+                self.refresh_flags[wi] = false;
+                continue;
+            }
+            let upd = self.slots[wi].take().expect("checked above");
+            bits_up += upd.payload_bits;
+            bits_refresh += upd.refresh_bits;
+            self.wire_bits[wi] = upd.wire_bytes as u64 * 8;
+            self.fold_flags[wi] = true;
+            self.refresh_flags[wi] = upd.frames.refresh.is_some();
+            // recycle the consumed frame buffers back to this worker
+            self.frames_pool[wi] = upd.frames;
+        }
+        let reporters = self.fold_flags.iter().filter(|&&f| f).count();
 
         if reporters == 0 {
             // fully-degraded round: nobody reported, the iterate holds
             // (the zero estimator ships as an empty delta)
             zero(&mut self.est);
-            return Ok(self.finish_step(0, expected, down_frame_bits, bits_up, bits_refresh));
+            return Ok(self.finish_step(
+                0,
+                expected,
+                down_frame_bits,
+                bits_up,
+                bits_refresh,
+                work_started,
+            ));
         }
         let inv = 1.0 / reporters as f64;
 
-        // g^k seeded from the maintained shift sum in one O(d) pass, then
-        // each compressed message folded in at O(nnz). Transiently-missed
-        // Active workers are excluded from this round's estimator without
-        // touching h_sum (see the module doc).
-        ax_into(inv, &self.h_sum, &mut self.est);
-        if !matches!(self.method, MethodKind::Star { .. }) {
-            for wi in 0..n {
-                if self.states[wi] == WorkerState::Active && self.slots[wi].is_none() {
-                    axpy(-inv, &self.h[wi], &mut self.est);
-                }
-            }
+        // Pass 3 — coordinate-sharded fold: each shard replays the full
+        // serial op sequence — shift-sum seed, missed-worker subtraction,
+        // then the per-reporter method ops in worker order — restricted to
+        // its coordinate range, so every coordinate sees the unchanged fp
+        // sequence and the result is bit-identical for every T.
+        self.h_views.clear();
+        for h in self.h.iter_mut() {
+            self.h_views.push(ShardView::new(&mut h[..]));
         }
-
-        for wi in 0..n {
-            let Some(upd) = self.slots[wi].take() else { continue };
-            bits_up += upd.payload_bits;
-            bits_refresh += upd.refresh_bits;
-            self.wire_bits[wi] = upd.wire_bytes as u64 * 8;
-
-            match self.method {
-                MethodKind::Fixed => {
-                    self.q_scratch[wi].add_scaled_into(inv, &mut self.est);
+        let star = matches!(method, MethodKind::Star { .. });
+        {
+            let cuts = &self.cuts;
+            let states = &self.states;
+            let folds = &self.fold_flags;
+            let refreshes = &self.refresh_flags;
+            let q_scratch = &self.q_scratch;
+            let c_scratch = &self.c_scratch;
+            let q_bounds = &self.q_bounds;
+            let c_bounds = &self.c_bounds;
+            let grad_star = &self.grad_star;
+            let h_views = &self.h_views;
+            let est_view = ShardView::new(&mut self.est);
+            let h_sum_view = ShardView::new(&mut self.h_sum);
+            self.pool.run(&|s| {
+                let (lo, hi) = (cuts[s], cuts[s + 1]);
+                if lo == hi {
+                    return;
                 }
-                MethodKind::Star { with_c } => {
-                    // reconstruct the worker's same-round shift in place
-                    self.h[wi].copy_from_slice(&self.grad_star[wi]);
-                    if with_c {
-                        self.c_scratch[wi].add_scaled_into(1.0, &mut self.h[wi]);
-                    }
-                    axpy(inv, &self.h[wi], &mut self.est);
-                    self.q_scratch[wi].add_scaled_into(inv, &mut self.est);
-                }
-                MethodKind::Diana { alpha, with_c } => {
-                    if with_c {
-                        self.c_scratch[wi].add_scaled_into(inv, &mut self.est);
-                        self.c_scratch[wi].add_scaled_into(alpha, &mut self.h[wi]);
-                        self.c_scratch[wi].add_scaled_into(alpha, &mut self.h_sum);
-                    }
-                    self.q_scratch[wi].add_scaled_into(inv, &mut self.est);
-                    self.q_scratch[wi].add_scaled_into(alpha, &mut self.h[wi]);
-                    self.q_scratch[wi].add_scaled_into(alpha, &mut self.h_sum);
-                }
-                MethodKind::RandDiana { .. } => {
-                    self.q_scratch[wi].add_scaled_into(inv, &mut self.est);
-                    if upd.frames.refresh.is_some() {
-                        // sparse shift-refresh delta: h_new = h + Δ, applied
-                        // identically to the replica and the maintained sum
-                        // (the worker applied the same packet to its h)
-                        self.c_scratch[wi].add_scaled_into(1.0, &mut self.h[wi]);
-                        self.c_scratch[wi].add_scaled_into(1.0, &mut self.h_sum);
+                // SAFETY: shard ranges are disjoint, so each shard holds
+                // the only live references into est/h_sum/h[wi] over
+                // [lo, hi).
+                let est = unsafe { est_view.slice(lo, hi) };
+                let h_sum = unsafe { h_sum_view.slice(lo, hi) };
+                // g^k seeded from the maintained shift sum, then each
+                // compressed message folded in at O(nnz of the shard).
+                // Transiently-missed Active workers are excluded from this
+                // round's estimator without touching h_sum.
+                ax_into(inv, h_sum, est);
+                if !star {
+                    for wi in 0..n {
+                        if states[wi] == WorkerState::Active && !folds[wi] {
+                            let h_wi = unsafe { h_views[wi].slice(lo, hi) };
+                            axpy(-inv, h_wi, est);
+                        }
                     }
                 }
-            }
-            // recycle the consumed frame buffers back to this worker
-            self.frames_pool[wi] = upd.frames;
+                for wi in 0..n {
+                    if !folds[wi] {
+                        continue;
+                    }
+                    let qb = (q_bounds[wi][s], q_bounds[wi][s + 1]);
+                    match method {
+                        MethodKind::Fixed => {
+                            q_scratch[wi].add_scaled_range(inv, lo, hi, qb, est);
+                        }
+                        MethodKind::Star { with_c } => {
+                            // reconstruct the worker's same-round shift in
+                            // place
+                            let h_wi = unsafe { h_views[wi].slice(lo, hi) };
+                            h_wi.copy_from_slice(&grad_star[wi][lo..hi]);
+                            if with_c {
+                                let cb = (c_bounds[wi][s], c_bounds[wi][s + 1]);
+                                c_scratch[wi].add_scaled_range(1.0, lo, hi, cb, h_wi);
+                            }
+                            axpy(inv, h_wi, est);
+                            q_scratch[wi].add_scaled_range(inv, lo, hi, qb, est);
+                        }
+                        MethodKind::Diana { alpha, with_c } => {
+                            let h_wi = unsafe { h_views[wi].slice(lo, hi) };
+                            if with_c {
+                                let cb = (c_bounds[wi][s], c_bounds[wi][s + 1]);
+                                c_scratch[wi].add_scaled_range(inv, lo, hi, cb, est);
+                                c_scratch[wi].add_scaled_range(alpha, lo, hi, cb, h_wi);
+                                c_scratch[wi].add_scaled_range(alpha, lo, hi, cb, h_sum);
+                            }
+                            q_scratch[wi].add_scaled_range(inv, lo, hi, qb, est);
+                            q_scratch[wi].add_scaled_range(alpha, lo, hi, qb, h_wi);
+                            q_scratch[wi].add_scaled_range(alpha, lo, hi, qb, h_sum);
+                        }
+                        MethodKind::RandDiana { .. } => {
+                            q_scratch[wi].add_scaled_range(inv, lo, hi, qb, est);
+                            if refreshes[wi] {
+                                // sparse shift-refresh delta: h_new = h + Δ,
+                                // applied identically to the replica and the
+                                // maintained sum (the worker applied the
+                                // same packet to its h)
+                                let h_wi = unsafe { h_views[wi].slice(lo, hi) };
+                                let cb = (c_bounds[wi][s], c_bounds[wi][s + 1]);
+                                c_scratch[wi].add_scaled_range(1.0, lo, hi, cb, h_wi);
+                                c_scratch[wi].add_scaled_range(1.0, lo, hi, cb, h_sum);
+                            }
+                        }
+                    }
+                }
+            });
         }
+        self.h_views.clear();
 
-        Ok(self.finish_step(reporters, expected, down_frame_bits, bits_up, bits_refresh))
+        Ok(self.finish_step(
+            reporters,
+            expected,
+            down_frame_bits,
+            bits_up,
+            bits_refresh,
+            work_started,
+        ))
     }
 
-    /// Validation-pass decode of one reporter's frames into the per-worker
-    /// scratch packets (no aggregate state is touched): the Q frame
-    /// always, the C frame when the method requires one (missing ⇒
-    /// protocol failure), the Rand-DIANA refresh delta when present. Runs
-    /// before any fold arithmetic so a malformed frame cleanly
-    /// quarantines its sender.
-    fn decode_update(
-        &mut self,
-        wi: usize,
-        round: usize,
-        d: usize,
-        upd: &WorkerUpdate,
-    ) -> Result<(), WorkerFailure> {
-        let needs_c = matches!(
-            self.method,
-            MethodKind::Star { with_c: true } | MethodKind::Diana { with_c: true, .. }
-        );
-        if needs_c {
-            let cf = upd.frames.c_frame.as_deref().ok_or_else(|| WorkerFailure {
-                worker: wi,
-                round,
-                class: FailureClass::Protocol,
-                detail: "missing C frame".into(),
-            })?;
-            decode_checked(cf, &mut self.c_scratch[wi], d, wi, round, "C frame")?;
-        }
-        decode_checked(&upd.frames.q_frame, &mut self.q_scratch[wi], d, wi, round, "Q frame")?;
-        if let (MethodKind::RandDiana { .. }, Some(refresh)) = (self.method, &upd.frames.refresh) {
-            decode_checked(refresh, &mut self.c_scratch[wi], d, wi, round, "refresh frame")?;
-        }
-        Ok(())
-    }
+}
 
-    /// Validation-pass decode of one reporter's batched frame: the header
-    /// must carry exactly `local_steps` packets and every packet must
-    /// decode at the cluster dimension. Returns the payload offset of the
-    /// first packet for the fold pass to re-walk.
-    fn validate_batch(
-        &mut self,
-        wi: usize,
-        round: usize,
-        d: usize,
-        upd: &WorkerUpdate,
-    ) -> Result<usize, WorkerFailure> {
-        let (count, first) = wire::split_batch_frame(&upd.frames.q_frame)
-            .map_err(|e| frame_failure(wi, round, "batch frame", e))?;
-        if count != self.local_steps {
+/// Validation-pass decode of one reporter's frames into that worker's
+/// scratch packets (no aggregate state is touched): the Q frame always,
+/// the C frame when the method requires one (missing ⇒ protocol failure),
+/// the Rand-DIANA refresh delta when present. Runs before any fold
+/// arithmetic so a malformed frame cleanly quarantines its sender. A free
+/// function (worker-local inputs only) so the parallel decode pass can
+/// call it from any shard thread.
+fn decode_update_frames(
+    method: MethodKind,
+    wi: usize,
+    round: usize,
+    d: usize,
+    upd: &WorkerUpdate,
+    q_scratch: &mut Packet,
+    c_scratch: &mut Packet,
+) -> Result<(), WorkerFailure> {
+    let needs_c = matches!(
+        method,
+        MethodKind::Star { with_c: true } | MethodKind::Diana { with_c: true, .. }
+    );
+    if needs_c {
+        let cf = upd.frames.c_frame.as_deref().ok_or_else(|| WorkerFailure {
+            worker: wi,
+            round,
+            class: FailureClass::Protocol,
+            detail: "missing C frame".into(),
+        })?;
+        decode_checked(cf, c_scratch, d, wi, round, "C frame")?;
+    }
+    decode_checked(&upd.frames.q_frame, q_scratch, d, wi, round, "Q frame")?;
+    if let (MethodKind::RandDiana { .. }, Some(refresh)) = (method, &upd.frames.refresh) {
+        decode_checked(refresh, c_scratch, d, wi, round, "refresh frame")?;
+    }
+    Ok(())
+}
+
+/// Validation-pass decode of one reporter's batched frame: the header
+/// must carry exactly `local_steps` packets and every packet must decode
+/// at the cluster dimension. Returns the payload offset of the first
+/// packet for the fold pass to re-walk. Free for the same reason as
+/// [`decode_update_frames`].
+fn validate_batch_frame(
+    local_steps: usize,
+    wi: usize,
+    round: usize,
+    d: usize,
+    upd: &WorkerUpdate,
+    q_scratch: &mut Packet,
+) -> Result<usize, WorkerFailure> {
+    let (count, first) = wire::split_batch_frame(&upd.frames.q_frame)
+        .map_err(|e| frame_failure(wi, round, "batch frame", e))?;
+    if count != local_steps {
+        return Err(WorkerFailure {
+            worker: wi,
+            round,
+            class: FailureClass::Protocol,
+            detail: format!("batch frame carries {count} packets, expected {local_steps}"),
+        });
+    }
+    let mut off = first;
+    for _ in 0..count {
+        off = wire::decode_batch_packet(&upd.frames.q_frame, off, q_scratch)
+            .map_err(|e| frame_failure(wi, round, "batch packet", e))?;
+        if q_scratch.dim() != d {
             return Err(WorkerFailure {
                 worker: wi,
                 round,
                 class: FailureClass::Protocol,
                 detail: format!(
-                    "batch frame carries {count} packets, expected {}",
-                    self.local_steps
+                    "batch packet dimension mismatch: frame carries {}, expected {d}",
+                    q_scratch.dim()
                 ),
             });
         }
-        let mut off = first;
-        for _ in 0..count {
-            off = wire::decode_batch_packet(&upd.frames.q_frame, off, &mut self.q_scratch[wi])
-                .map_err(|e| frame_failure(wi, round, "batch packet", e))?;
-            if self.q_scratch[wi].dim() != d {
-                return Err(WorkerFailure {
-                    worker: wi,
-                    round,
-                    class: FailureClass::Protocol,
-                    detail: format!(
-                        "batch packet dimension mismatch: frame carries {}, expected {d}",
-                        self.q_scratch[wi].dim()
-                    ),
-                });
-            }
-        }
-        Ok(first)
     }
+    Ok(first)
 }
 
 impl DistributedRunner {
@@ -1540,6 +1903,9 @@ impl DistributedRunner {
     /// `reporters` is the number of workers whose updates folded into the
     /// round; `broadcast_count` the number that received this round's
     /// downlink frame (they differ when a worker missed its deadline).
+    /// `work_started` marks when the post-gather master work began — its
+    /// span lands in [`DistributedRunner::master_seconds`] here, once the
+    /// downlink is built.
     fn finish_step(
         &mut self,
         reporters: usize,
@@ -1547,6 +1913,7 @@ impl DistributedRunner {
         down_frame_bits: u64,
         bits_up: u64,
         bits_refresh: u64,
+        work_started: Instant,
     ) -> StepStats {
         if reporters < self.workers.len() {
             self.degraded_rounds += 1;
@@ -1609,6 +1976,8 @@ impl DistributedRunner {
                 net.round(&self.wire_bits, down_frame_bits);
             }
         }
+
+        self.master_secs += work_started.elapsed().as_secs_f64();
 
         StepStats {
             bits_up,

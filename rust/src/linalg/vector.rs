@@ -2,16 +2,31 @@
 //!
 //! These are the innermost loops of the whole stack — every compressor,
 //! every algorithm step, and the coordinator's aggregation path run through
-//! them — so they are written to autovectorize (plain indexed loops over
-//! equal-length slices, with `assert_eq!` up front so the compiler can elide
-//! bounds checks).
+//! them — so they are written to autovectorize. The fold kernels ([`axpy`],
+//! [`ax_into`], [`scatter_axpy`]) process fixed-width chunks via
+//! `chunks_exact`, which hands the vectorizer a bounds-check-free inner loop
+//! of known trip count; the remainder runs the same scalar expression.
+//! Chunking never reorders or reassociates the per-element arithmetic, so
+//! results stay bit-identical to the plain loop (each `y[i]` sees exactly
+//! one `+= a * x[i]`).
+
+/// Chunk width for the vectorizable kernels: 8 doubles = one cache line,
+/// and a multiple of every SIMD width in practice (2/4/8 lanes).
+const LANES: usize = 8;
 
 /// `y += a * x`.
 #[inline]
 pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
     assert_eq!(x.len(), y.len());
-    for i in 0..x.len() {
-        y[i] += a * x[i];
+    let mut xc = x.chunks_exact(LANES);
+    let mut yc = y.chunks_exact_mut(LANES);
+    for (xs, ys) in (&mut xc).zip(&mut yc) {
+        for (yv, xv) in ys.iter_mut().zip(xs.iter()) {
+            *yv += a * xv;
+        }
+    }
+    for (xv, yv) in xc.remainder().iter().zip(yc.into_remainder().iter_mut()) {
+        *yv += a * xv;
     }
 }
 
@@ -71,10 +86,22 @@ pub fn scale(a: f64, x: &mut [f64]) {
 /// [`crate::compressors::Packet::add_scaled_into`]: consuming a K-sparse
 /// message costs O(K) instead of the O(d) of a dense decode + [`axpy`].
 /// Indices must be in-bounds for `y` (compressor packets guarantee this).
+/// The scatter writes cannot vectorize (indices are data-dependent), but a
+/// 4-wide unrolled body amortizes loop overhead; the sequential `+=` order
+/// is preserved, so duplicate indices (and bit-identity) are handled
+/// exactly as in the plain loop.
 #[inline]
 pub fn scatter_axpy(a: f64, indices: &[u32], values: &[f64], y: &mut [f64]) {
     assert_eq!(indices.len(), values.len());
-    for (&i, &v) in indices.iter().zip(values.iter()) {
+    let mut ic = indices.chunks_exact(4);
+    let mut vc = values.chunks_exact(4);
+    for (i4, v4) in (&mut ic).zip(&mut vc) {
+        y[i4[0] as usize] += a * v4[0];
+        y[i4[1] as usize] += a * v4[1];
+        y[i4[2] as usize] += a * v4[2];
+        y[i4[3] as usize] += a * v4[3];
+    }
+    for (&i, &v) in ic.remainder().iter().zip(vc.remainder().iter()) {
         y[i as usize] += a * v;
     }
 }
@@ -85,8 +112,15 @@ pub fn scatter_axpy(a: f64, indices: &[u32], values: &[f64], y: &mut [f64]) {
 #[inline]
 pub fn ax_into(a: f64, x: &[f64], out: &mut [f64]) {
     assert_eq!(x.len(), out.len());
-    for i in 0..x.len() {
-        out[i] = a * x[i];
+    let mut xc = x.chunks_exact(LANES);
+    let mut oc = out.chunks_exact_mut(LANES);
+    for (xs, os) in (&mut xc).zip(&mut oc) {
+        for (ov, xv) in os.iter_mut().zip(xs.iter()) {
+            *ov = a * xv;
+        }
+    }
+    for (xv, ov) in xc.remainder().iter().zip(oc.into_remainder().iter_mut()) {
+        *ov = a * xv;
     }
 }
 
@@ -227,6 +261,57 @@ mod tests {
         let mut out = [9.0, 9.0, 9.0];
         ax_into(0.5, &x, &mut out);
         assert_eq!(out, [0.5, -1.0, 0.25]);
+    }
+
+    #[test]
+    fn chunked_kernels_match_plain_loops_at_awkward_lengths() {
+        // Lengths straddling the chunk width (8 for axpy/ax_into, 4 for
+        // scatter_axpy) including the empty and remainder-only cases: the
+        // chunked kernels must be bit-identical to the naive loop.
+        for d in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 33] {
+            let x: Vec<f64> = (0..d).map(|i| (i as f64).sin() * 3.0).collect();
+            let y0: Vec<f64> = (0..d).map(|i| (i as f64).cos() - 0.5).collect();
+            let a = -1.37;
+
+            let mut want = y0.clone();
+            for (w, xv) in want.iter_mut().zip(x.iter()) {
+                *w += a * xv;
+            }
+            let mut got = y0.clone();
+            axpy(a, &x, &mut got);
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "axpy d={d}"
+            );
+
+            let mut want = vec![0.0; d];
+            for (w, xv) in want.iter_mut().zip(x.iter()) {
+                *w = a * xv;
+            }
+            let mut got = y0.clone();
+            ax_into(a, &x, &mut got);
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "ax_into d={d}"
+            );
+
+            // sparse scatter over every 2nd coordinate (odd nnz counts too)
+            let idx: Vec<u32> = (0..d as u32).step_by(2).collect();
+            let vals: Vec<f64> = idx.iter().map(|&i| x[i as usize] * 0.7).collect();
+            let mut want = y0.clone();
+            for (&i, &v) in idx.iter().zip(vals.iter()) {
+                want[i as usize] += a * v;
+            }
+            let mut got = y0.clone();
+            scatter_axpy(a, &idx, &vals, &mut got);
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "scatter_axpy d={d}"
+            );
+        }
     }
 
     #[test]

@@ -177,6 +177,12 @@ pub struct JsonScenario {
     /// `LinkModel` fleet (tracks the latency-amortization win across PRs —
     /// scenarios record it with and without pipelining as separate rows)
     pub sim_time_sec: Option<f64>,
+    /// measured master-CPU seconds per round
+    /// (`DistributedRunner::master_seconds`), when the scenario breaks the
+    /// master's decode + fold out of the round wall-clock (tracks the
+    /// parallel-fold win across PRs — scenarios record one row per
+    /// fold-pool width T)
+    pub master_secs: Option<f64>,
 }
 
 impl JsonScenario {
@@ -188,6 +194,7 @@ impl JsonScenario {
             down_bytes_per_round: None,
             up_bytes_per_round: None,
             sim_time_sec: None,
+            master_secs: None,
         }
     }
 
@@ -206,6 +213,12 @@ impl JsonScenario {
     /// Attach the simulated wall clock (`NetworkAccountant::sim_time`).
     pub fn with_sim_time(mut self, sim_time_sec: f64) -> Self {
         self.sim_time_sec = Some(sim_time_sec);
+        self
+    }
+
+    /// Attach the measured master-CPU seconds per round.
+    pub fn with_master_secs(mut self, master_secs: f64) -> Self {
+        self.master_secs = Some(master_secs);
         self
     }
 }
@@ -237,6 +250,9 @@ pub fn write_bench_json(path: &str, rows: &[JsonScenario]) -> std::io::Result<()
         }
         if let Some(t) = r.sim_time_sec {
             fields.push(("sim_time_sec", Json::num(t)));
+        }
+        if let Some(t) = r.master_secs {
+            fields.push(("master_secs", Json::num(t)));
         }
         merged.insert(r.scenario.clone(), Json::obj(fields));
     }
@@ -302,7 +318,8 @@ mod tests {
                 JsonScenario::new("a", 0.25, Some(2e6)),
                 JsonScenario::new("b", 1.5, None)
                     .with_down_bytes(512.0)
-                    .with_sim_time(42.5),
+                    .with_sim_time(42.5)
+                    .with_master_secs(0.125),
             ],
         )
         .unwrap();
@@ -314,6 +331,8 @@ mod tests {
         assert!(j.get("b").get("coords_per_s").is_null());
         assert_eq!(j.get("b").get("down_bytes_per_round").as_f64(), Some(512.0));
         assert_eq!(j.get("b").get("sim_time_sec").as_f64(), Some(42.5));
+        assert_eq!(j.get("b").get("master_secs").as_f64(), Some(0.125));
+        assert!(j.get("a").get("master_secs").is_null());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -196,8 +196,11 @@ impl<'a> BitWriter<'a> {
     }
 
     /// Append the low `nbits` of `value`, LSB-first. Word-at-a-time: the
-    /// partial tail byte is topped up with one shift/mask, then whole bytes
-    /// are emitted directly — no per-bit loop.
+    /// partial tail byte is topped up with one shift/mask, then all whole
+    /// bytes land in a single `extend_from_slice` of the value's
+    /// little-endian bytes (a memcpy the optimizer can keep in registers) —
+    /// no per-bit or per-byte loop. The stream is byte-identical to the
+    /// byte-at-a-time formulation.
     fn write_bits(&mut self, value: u64, nbits: u64) {
         debug_assert!(nbits <= 64);
         let mut v = value & mask(nbits);
@@ -211,12 +214,14 @@ impl<'a> BitWriter<'a> {
             v >>= take;
             left -= take;
         }
-        while left >= 8 {
-            self.buf.push(v as u8);
-            v >>= 8;
-            left -= 8;
+        let nbytes = (left / 8) as usize;
+        if nbytes > 0 {
+            self.buf.extend_from_slice(&v.to_le_bytes()[..nbytes]);
+            left -= nbytes as u64 * 8;
         }
         if left > 0 {
+            // left > 0 here forces nbytes ≤ 7, so the shift is < 64
+            v >>= nbytes * 8;
             self.buf.push(v as u8);
             self.bit_pos = left as u8;
         }
@@ -268,7 +273,9 @@ impl<'a> BitReader<'a> {
     }
 
     /// Read `nbits` LSB-first. Mirrors [`BitWriter::write_bits`]: one
-    /// shift/mask for the partial head byte, then whole bytes.
+    /// shift/mask for the partial head byte, then all whole bytes in a
+    /// single little-endian word load (a bounded memcpy into a stack word)
+    /// instead of a per-byte loop.
     fn read_bits(&mut self, nbits: u64) -> Result<u64, WireError> {
         debug_assert!(nbits <= 64);
         let avail = self.avail_bits();
@@ -290,10 +297,14 @@ impl<'a> BitReader<'a> {
                 self.byte_pos += 1;
             }
         }
-        while nbits - got >= 8 {
-            out |= (self.buf[self.byte_pos] as u64) << got;
-            self.byte_pos += 1;
-            got += 8;
+        let nbytes = ((nbits - got) / 8) as usize;
+        if nbytes > 0 {
+            let mut word = [0u8; 8];
+            word[..nbytes].copy_from_slice(&self.buf[self.byte_pos..self.byte_pos + nbytes]);
+            // got > 0 forces nbytes ≤ 7, so the shifted value fits in u64
+            out |= u64::from_le_bytes(word) << got;
+            self.byte_pos += nbytes;
+            got += nbytes as u64 * 8;
         }
         let rem = nbits - got;
         if rem > 0 {

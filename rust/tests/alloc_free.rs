@@ -308,6 +308,68 @@ fn distributed_master_round_is_allocation_light() {
     );
 }
 
+/// Arming the parallel fold must not break the allocation-light contract:
+/// with `master_threads = 4` the pool threads are spawned once at
+/// construction, each `FoldPool::run` ships one borrowed-closure pointer
+/// per shard over a preallocated rendezvous channel, and the per-packet
+/// shard-bound buffers are refilled in place — so the *master thread's*
+/// steady-state allocation count stays within the same bound as the
+/// serial fold and must not scale with the dimension. (The counting
+/// allocator is per-thread: shard threads own no buffers at all, their
+/// closures only borrow the master's.)
+#[test]
+fn distributed_pooled_round_is_allocation_light() {
+    let _guard = TEST_LOCK.lock().unwrap();
+    let rounds = 10u64;
+    let mut counts = Vec::new();
+    for &d in &[1024usize, 8192] {
+        let n = 4;
+        let p = Arc::new(MeanProblem::new(d, n, 19));
+        let omega = RandK::with_q(d, 0.01).omega().expect("rand-k is unbiased");
+        let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+        let qs: Vec<Box<dyn Compressor>> = (0..n)
+            .map(|_| Box::new(RandK::with_q(d, 0.01)) as Box<dyn Compressor>)
+            .collect();
+        let mut runner = DistributedRunner::new(
+            p.clone(),
+            qs,
+            None,
+            vec![vec![0.0; d]; n],
+            ClusterConfig {
+                method: MethodKind::Diana {
+                    alpha: ss.alpha,
+                    with_c: false,
+                },
+                gamma: ss.gamma,
+                prec: ValPrec::F64,
+                seed: 19,
+                master_threads: Some(4),
+                ..Default::default()
+            },
+        );
+        assert_eq!(runner.fold_threads(), 4);
+        // warm-up fills packet capacities, shard-bound buffers and the
+        // channel/parking internals of the pool hand-off
+        for _ in 0..5 {
+            runner.step(p.as_ref());
+        }
+        let allocs = thread_allocs(|| {
+            for _ in 0..rounds {
+                runner.step(p.as_ref());
+            }
+        });
+        counts.push(allocs);
+        assert!(
+            allocs <= rounds * 2,
+            "pooled master round allocated {allocs} times in {rounds} rounds (d={d})"
+        );
+    }
+    assert_eq!(
+        counts[0], counts[1],
+        "pooled master allocations must not scale with dimension: {counts:?}"
+    );
+}
+
 /// Degraded rounds cost no extra heap: after a crashed worker is
 /// quarantined (injected fault + gather deadline), the surviving fleet's
 /// steady-state rounds stay within the same allocation-light bound as a

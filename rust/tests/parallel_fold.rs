@@ -1,0 +1,267 @@
+//! The coordinate-sharded parallel fold must be a pure scheduling change:
+//! every fold-pool width `T` (via `cluster.master_threads`) produces the
+//! **bit-identical** trajectory — iterates, learned shifts, health states,
+//! failure records and EF accumulators — as `T = 1`, which is itself the
+//! serial fold, pinned against the single-process [`DcgdShift`] mirror.
+//!
+//! Sharding is by *coordinate*: every `est[j]` / `h[i][j]` / `h_sum[j]`
+//! sees exactly the serial worker-order fp op sequence, only the executing
+//! thread varies with `j` — so these are equality tests, not tolerance
+//! tests.
+
+use std::sync::Arc;
+
+use shiftcomp::algorithms::{Algorithm, DcgdShift};
+use shiftcomp::compressors::{Compressor, RandK, TopK, ValPrec};
+use shiftcomp::coordinator::{
+    ClusterConfig, DistributedRunner, FailureClass, FaultPlan, MethodKind, WorkerState,
+};
+use shiftcomp::problems::{Problem, Ridge};
+
+/// Generous gather deadline (see `tests/chaos.rs`): only injected faults
+/// can hit it on these microsecond-scale rounds.
+const TEST_TIMEOUT_MS: u64 = 1_000;
+
+/// The pool widths the issue pins: serial, even split, more shards than
+/// the CI runner probably has cores.
+const WIDTHS: [usize; 3] = [1, 2, 8];
+
+fn ridge() -> Arc<Ridge> {
+    Arc::new(Ridge::paper_default(3))
+}
+
+fn boxed_clones(
+    q: &(impl Compressor + Clone + 'static),
+    n: usize,
+) -> Vec<Box<dyn Compressor>> {
+    (0..n)
+        .map(|_| Box::new(q.clone()) as Box<dyn Compressor>)
+        .collect()
+}
+
+/// Step the mirror and every pooled runner in lockstep, asserting the
+/// iterate and uplink-bit agreement each round.
+fn assert_widths_match_mirror(
+    mut single: DcgdShift,
+    runners: &mut [DistributedRunner],
+    p: &dyn Problem,
+    rounds: usize,
+) {
+    for k in 0..rounds {
+        let ss = single.step(p);
+        for dist in runners.iter_mut() {
+            let t = dist.fold_threads();
+            let sd = dist.step(p);
+            assert_eq!(single.x(), dist.x(), "T={t} iterate diverged at round {k}");
+            assert_eq!(ss.bits_up, sd.bits_up, "T={t} bits_up at round {k}");
+        }
+    }
+    for wi in 0..p.n_workers() {
+        for dist in runners.iter() {
+            let t = dist.fold_threads();
+            assert_eq!(single.shift(wi), dist.shift(wi), "T={t} shift of worker {wi}");
+        }
+    }
+}
+
+/// DIANA at T ∈ {1, 2, 8}: every pool width reproduces the single-process
+/// mirror bit for bit, and the master-time probe is actually armed.
+#[test]
+fn diana_fold_widths_match_serial_mirror() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let q = RandK::with_q(d, 0.3);
+    let single = DcgdShift::diana(p.as_ref(), q.clone(), None, 23);
+    let gamma = single.gamma;
+    let omega = q.omega().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+    let mut runners: Vec<DistributedRunner> = WIDTHS
+        .iter()
+        .map(|&t| {
+            DistributedRunner::new(
+                p.clone(),
+                boxed_clones(&q, n),
+                None,
+                vec![vec![0.0; d]; n],
+                ClusterConfig {
+                    method: MethodKind::Diana {
+                        alpha: ss.alpha,
+                        with_c: false,
+                    },
+                    gamma,
+                    seed: 23,
+                    master_threads: Some(t),
+                    ..Default::default()
+                },
+            )
+        })
+        .collect();
+    assert_eq!(runners[0].fold_threads(), 1);
+    assert_eq!(runners[2].fold_threads(), 8);
+    assert_widths_match_mirror(single, &mut runners, p.as_ref(), 50);
+    for dist in &runners {
+        assert!(
+            dist.master_seconds() > 0.0,
+            "master-time probe must accumulate over 50 rounds"
+        );
+    }
+}
+
+/// Rand-DIANA (refresh C-frames fold into `h_sum`) and DCGD-STAR (shifts
+/// recomputed from ∇f_i(x*) inside the fold) across pool widths.
+#[test]
+fn rand_diana_and_star_fold_widths_match() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+
+    let q = RandK::with_q(d, 0.2);
+    let single = DcgdShift::rand_diana(p.as_ref(), q.clone(), Some(0.2), 29);
+    let gamma = single.gamma;
+    let mut runners: Vec<DistributedRunner> = WIDTHS
+        .iter()
+        .map(|&t| {
+            DistributedRunner::new(
+                p.clone(),
+                boxed_clones(&q, n),
+                None,
+                vec![vec![0.0; d]; n],
+                ClusterConfig {
+                    method: MethodKind::RandDiana { p: 0.2 },
+                    gamma,
+                    seed: 29,
+                    master_threads: Some(t),
+                    ..Default::default()
+                },
+            )
+        })
+        .collect();
+    assert_widths_match_mirror(single, &mut runners, p.as_ref(), 60);
+
+    let q = RandK::with_q(d, 0.4);
+    let single = DcgdShift::star(p.as_ref(), q.clone(), None, 31);
+    let gamma = single.gamma;
+    let shifts: Vec<Vec<f64>> = (0..n).map(|i| p.grad_star(i).to_vec()).collect();
+    let mut runners: Vec<DistributedRunner> = WIDTHS
+        .iter()
+        .map(|&t| {
+            DistributedRunner::new(
+                p.clone(),
+                boxed_clones(&q, n),
+                None,
+                shifts.clone(),
+                ClusterConfig {
+                    method: MethodKind::Star { with_c: false },
+                    gamma,
+                    seed: 31,
+                    master_threads: Some(t),
+                    ..Default::default()
+                },
+            )
+        })
+        .collect();
+    assert_widths_match_mirror(single, &mut runners, p.as_ref(), 50);
+}
+
+/// The full feature matrix from the issue — f32 wire × EF uplink × EF
+/// downlink × `local_steps = 4` × a straggler quarantined mid-run — at
+/// T ∈ {1, 2, 8}: the batched validate/decode/fold pipeline, the sharded
+/// quarantine shift-removal and the rejoin bootstrap must all agree bit
+/// for bit across widths (T = 1 being the serial path).
+#[test]
+fn feature_matrix_fold_widths_bit_identical_through_quarantine() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let tau = 4usize;
+    // straggle window covers rounds 6..9; quarantined at the first miss
+    let (straggler, from, window) = (2usize, 6usize, 3usize);
+    let q = RandK::with_q(d, 0.3);
+    let omega = q.omega().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+    let mut runners: Vec<DistributedRunner> = WIDTHS
+        .iter()
+        .map(|&t| {
+            DistributedRunner::new(
+                p.clone(),
+                boxed_clones(&q, n),
+                None,
+                vec![vec![0.0; d]; n],
+                ClusterConfig {
+                    method: MethodKind::Diana {
+                        alpha: ss.alpha,
+                        with_c: false,
+                    },
+                    gamma: ss.gamma,
+                    prec: ValPrec::F32,
+                    seed: 37,
+                    local_steps: tau,
+                    downlink: Some(Box::new(TopK::with_q(d, 0.25))),
+                    uplink_ef: true,
+                    faults: Some(FaultPlan::new().straggle(straggler, from, window)),
+                    round_timeout_ms: TEST_TIMEOUT_MS,
+                    quarantine_after: 1,
+                    master_threads: Some(t),
+                    ..Default::default()
+                },
+            )
+        })
+        .collect();
+
+    let check_lockstep = |runners: &mut [DistributedRunner], k: usize| {
+        let mut x_ref: Option<Vec<f64>> = None;
+        for dist in runners.iter_mut() {
+            let t = dist.fold_threads();
+            dist.try_step(p.as_ref())
+                .unwrap_or_else(|f| panic!("T={t} round {k} must survive the straggle: {f}"));
+            match &x_ref {
+                None => x_ref = Some(dist.x().to_vec()),
+                Some(x) => {
+                    assert_eq!(x.as_slice(), dist.x(), "T={t} iterate diverged at round {k}");
+                }
+            }
+        }
+    };
+
+    // healthy prefix, then the straggle window (first miss quarantines)
+    for k in 0..from + window + 1 {
+        check_lockstep(&mut runners, k);
+    }
+    for dist in &runners {
+        let t = dist.fold_threads();
+        assert_eq!(
+            dist.health().states[straggler],
+            WorkerState::Quarantined,
+            "T={t} must quarantine the straggler"
+        );
+        let f = dist.last_failure(straggler).expect("failure recorded");
+        assert_eq!(f.class, FailureClass::Timeout, "T={t} failure class");
+        assert_eq!(f.round, from, "T={t} quarantine round");
+    }
+
+    // readmit on every width and keep checking bit-equality
+    for dist in runners.iter_mut() {
+        dist.rejoin(straggler).expect("straggler thread is alive");
+    }
+    for k in 0..8 {
+        check_lockstep(&mut runners, from + window + 1 + k);
+    }
+
+    // shifts, health and both EF accumulator families across widths
+    let (head, tail) = runners.split_first_mut().unwrap();
+    assert!(head.health().states.iter().all(|s| *s == WorkerState::Active));
+    for dist in tail.iter_mut() {
+        let t = dist.fold_threads();
+        assert_eq!(head.health().states, dist.health().states, "T={t} health");
+        assert_eq!(head.ef_error(), dist.ef_error(), "T={t} downlink EF accumulator");
+        for wi in 0..n {
+            assert_eq!(head.shift(wi), dist.shift(wi), "T={t} shift of worker {wi}");
+            assert_eq!(
+                head.worker_snapshot(wi).uplink_error,
+                dist.worker_snapshot(wi).uplink_error,
+                "T={t} uplink EF accumulator of worker {wi}"
+            );
+        }
+    }
+}
