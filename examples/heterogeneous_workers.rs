@@ -81,6 +81,7 @@ fn run_fleet(
             faults: kill.map(|(round, id)| FaultPlan::new().crash(id, round)),
             round_timeout_ms: if kill.is_some() { 500 } else { 30_000 },
             quarantine_after: 1,
+            master_threads: None,
         },
     );
     let trace = runner.run(
@@ -101,6 +102,16 @@ fn run_fleet(
         runner.simulated_time(),
     );
     let health = runner.health();
+    // Fleet memory: workers share one published snapshot, so private replica
+    // bytes stay flat in n and the per-worker divergence is just the overlay.
+    let private: u64 = health.replica_bytes.iter().sum();
+    let max_nnz = health.overlay_nnz.iter().max().copied().unwrap_or(0);
+    println!(
+        "    replica memory: {} private bytes across {} workers, max overlay nnz {}",
+        private,
+        health.replica_bytes.len(),
+        max_nnz,
+    );
     if !health.all_healthy() {
         for (wi, state) in health.states.iter().enumerate() {
             if *state == WorkerState::Active {

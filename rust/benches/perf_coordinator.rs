@@ -636,6 +636,159 @@ fn main() {
         }
     }
 
+    // ------------------------------------------ shared-replica memory
+    // This PR's tentpole scenario: the fleet holds ONE iterate. Workers
+    // read the master's double-buffered Arc snapshot instead of keeping
+    // private dense replicas, so resident replica memory is the two
+    // shared slots — 2·d·8 bytes, flat in the fleet size — where the old
+    // layout paid n·d·8. Measured at n ∈ {64, 256, 1024}; every fleet
+    // size optimizes the *same* homogeneous objective, so the n = 64
+    // final iterate doubles as a correctness baseline for the larger
+    // fleets (sparsifier streams differ across n, hence a tolerance
+    // rather than bit-equality). A Top-K EF-downlink run at the largest
+    // fleet bounds the only extra replica state — the sparse overlay —
+    // by its residual support. `--smoke` keeps the full n sweep
+    // (including the 1024-thread fleet) and shrinks d only.
+    {
+        let (d, rounds) = if smoke { (2_000, 120) } else { (200_000, 120) };
+        let q = 0.25;
+        let omega = RandK::with_q(d, q).omega().unwrap();
+        let shared_bytes = 2 * d as u64 * 8;
+        let mut baseline: Option<Vec<f64>> = None;
+        for n in [64usize, 256, 1024] {
+            let pa = Arc::new(SharedTargetProblem::new(d, n, 23));
+            let ss = shiftcomp::theory::diana(pa.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+            let qs: Vec<Box<dyn Compressor>> = (0..n)
+                .map(|_| Box::new(RandK::with_q(d, q)) as Box<dyn Compressor>)
+                .collect();
+            let mut dist = DistributedRunner::new(
+                pa.clone(),
+                qs,
+                None,
+                vec![vec![0.0; d]; n],
+                ClusterConfig {
+                    method: MethodKind::Diana {
+                        alpha: ss.alpha,
+                        with_c: false,
+                    },
+                    gamma: ss.gamma,
+                    seed: 23,
+                    // a 1024-thread fleet oversubscribes any host; the
+                    // gather deadline must not quarantine healthy workers
+                    round_timeout_ms: 120_000,
+                    ..Default::default()
+                },
+            );
+            let t0 = std::time::Instant::now();
+            for k in 0..rounds {
+                let s = dist.step(pa.as_ref());
+                assert_eq!(
+                    s.replica_bytes, shared_bytes,
+                    "round {k}, n={n}: exact-path replica memory must be the two shared slots"
+                );
+            }
+            let wall = t0.elapsed().as_secs_f64() / rounds as f64;
+            let health = dist.health();
+            assert_eq!(
+                health.replica_bytes.iter().sum::<u64>(),
+                0,
+                "n={n}: workers must hold no private dense replica"
+            );
+            let old_bytes = n as u64 * d as u64 * 8;
+            println!(
+                "  → replica memory (n={n}): {shared_bytes} B shared vs {old_bytes} B at \
+                 n·d·8 per-worker replicas ({:.0}× less)",
+                old_bytes as f64 / shared_bytes as f64
+            );
+            rows.push(format!("replica_bytes_n{n},{:.3e}", shared_bytes as f64));
+            json.push(
+                JsonScenario::new(
+                    format!("replica_memory_d{d}n{n}"),
+                    wall,
+                    Some((d * n) as f64 / wall),
+                )
+                .with_replica_bytes(shared_bytes as f64),
+            );
+            // same objective at every n ⇒ same answer: by round 120 each
+            // fleet sits within ~1e-12 of x*, so fleets agree to ~1e-10
+            let xs = pa.x_star();
+            let xs_norm = shiftcomp::linalg::dist_sq(xs, &vec![0.0; d]).sqrt();
+            let err = shiftcomp::linalg::dist_sq(dist.x(), xs).sqrt() / xs_norm;
+            assert!(err < 1e-8, "n={n}: final relative error {err:.3e} not converged");
+            match &baseline {
+                None => baseline = Some(dist.x().to_vec()),
+                Some(x64) => {
+                    let diff = shiftcomp::linalg::dist_sq(x64, dist.x()).sqrt() / xs_norm;
+                    assert!(
+                        diff < 1e-8,
+                        "n={n}: final iterate {diff:.3e} away from the n=64 baseline"
+                    );
+                }
+            }
+        }
+        // EF Top-K downlink at the largest fleet: per-replica divergence
+        // rides in the published overlay, whose support the K broadcast
+        // coordinates are excluded from — so the fleet pays at most the
+        // two snapshot slots plus two (4+8)-byte-per-entry patch slots.
+        {
+            let n = 1024usize;
+            let keep = (d / 100).max(1);
+            let pa = Arc::new(SharedTargetProblem::new(d, n, 29));
+            let ss = shiftcomp::theory::diana(pa.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+            let qs: Vec<Box<dyn Compressor>> = (0..n)
+                .map(|_| Box::new(RandK::with_q(d, q)) as Box<dyn Compressor>)
+                .collect();
+            let mut dist = DistributedRunner::new(
+                pa.clone(),
+                qs,
+                None,
+                vec![vec![0.0; d]; n],
+                ClusterConfig {
+                    method: MethodKind::Diana {
+                        alpha: ss.alpha,
+                        with_c: false,
+                    },
+                    gamma: ss.gamma,
+                    seed: 29,
+                    downlink: Some(Box::new(TopK::new(d, keep))),
+                    round_timeout_ms: 120_000,
+                    ..Default::default()
+                },
+            );
+            let ef_rounds = rounds / 3;
+            let cap = shared_bytes + 2 * (d - keep) as u64 * 12;
+            let mut max_bytes = 0u64;
+            let t0 = std::time::Instant::now();
+            for k in 0..ef_rounds {
+                let s = dist.step(pa.as_ref());
+                assert!(
+                    s.replica_bytes <= cap,
+                    "round {k}: EF replica memory {} above the residual-support cap {cap}",
+                    s.replica_bytes
+                );
+                max_bytes = max_bytes.max(s.replica_bytes);
+            }
+            let wall = t0.elapsed().as_secs_f64() / ef_rounds as f64;
+            let health = dist.health();
+            let max_nnz = health.overlay_nnz.iter().max().copied().unwrap_or(0);
+            assert!(max_nnz <= (d - keep) as u64, "overlay support above the residual bound");
+            println!(
+                "  → EF Top-K replica memory (n={n}): peak {max_bytes} B shared \
+                 (overlay nnz ≤ {max_nnz}) vs {} B at n·d·8",
+                n as u64 * d as u64 * 8
+            );
+            rows.push(format!("replica_bytes_ef_n{n},{:.3e}", max_bytes as f64));
+            json.push(
+                JsonScenario::new(
+                    format!("replica_memory_ef_d{d}n{n}"),
+                    wall,
+                    Some((d * n) as f64 / wall),
+                )
+                .with_replica_bytes(max_bytes as f64),
+            );
+        }
+    }
+
     write_csv("results/perf_coordinator.csv", "name,median_sec", &rows).expect("csv");
     write_bench_json("results/BENCH_perf.json", &json).expect("json");
     println!("\nwritten: results/perf_coordinator.csv + results/BENCH_perf.json");
@@ -679,6 +832,64 @@ impl WideProblem {
             x_star,
             grad_star,
         }
+    }
+}
+
+/// Every worker shares one target, so (a) the objective — and hence the
+/// final iterate — is independent of the fleet size, making runs at
+/// different n directly comparable, and (b) the problem itself stays O(d)
+/// resident no matter how many workers mount it. `WideProblem`'s n·d
+/// per-worker targets would dwarf the replica memory the shared-replica
+/// scenario measures at n = 1024.
+struct SharedTargetProblem {
+    d: usize,
+    n: usize,
+    target: Vec<f64>,
+    zeros: Vec<f64>,
+}
+
+impl SharedTargetProblem {
+    fn new(d: usize, n: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let target: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        Self {
+            d,
+            n,
+            target,
+            zeros: vec![0.0; d],
+        }
+    }
+}
+
+impl Problem for SharedTargetProblem {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn n_workers(&self) -> usize {
+        self.n
+    }
+    fn local_grad_into(&self, _worker: usize, x: &[f64], out: &mut [f64]) {
+        for j in 0..self.d {
+            out[j] = x[j] - self.target[j];
+        }
+    }
+    fn local_loss(&self, _worker: usize, x: &[f64]) -> f64 {
+        0.5 * shiftcomp::linalg::dist_sq(x, &self.target)
+    }
+    fn l_i(&self, _worker: usize) -> f64 {
+        1.0
+    }
+    fn l(&self) -> f64 {
+        1.0
+    }
+    fn mu(&self) -> f64 {
+        1.0
+    }
+    fn x_star(&self) -> &[f64] {
+        &self.target
+    }
+    fn grad_star(&self, _worker: usize) -> &[f64] {
+        &self.zeros
     }
 }
 

@@ -758,13 +758,14 @@ impl Algorithm for DcgdShift {
         // (Periodic `resync_every` redundancy is a runner-only operational
         // knob and is not mirrored here.) Degraded fleets broadcast to the
         // active workers only, matching the cluster's per-recipient charge.
-        let bits_down = self.dl.finish_round_packet(delta, self.n_active, self.prec);
+        let bits_down = self.dl.finish_round_packet(delta, &self.x, self.n_active, self.prec);
 
         StepStats {
             bits_up,
             bits_down,
             bits_refresh,
             active_workers: self.n_active,
+            replica_bytes: self.dl.replica_footprint(),
         }
     }
 }
@@ -846,13 +847,14 @@ impl DcgdShift {
         }
         let delta = wire::build_update_packet(&self.g_acc, -self.gamma, self.prec, &mut self.delta);
         delta.add_scaled_into(1.0, &mut self.x);
-        let bits_down = self.dl.finish_round_packet(delta, self.n_active, self.prec);
+        let bits_down = self.dl.finish_round_packet(delta, &self.x, self.n_active, self.prec);
 
         StepStats {
             bits_up,
             bits_down,
             bits_refresh: 0,
             active_workers: self.n_active,
+            replica_bytes: self.dl.replica_footprint(),
         }
     }
 }

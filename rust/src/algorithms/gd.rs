@@ -62,6 +62,7 @@ impl Algorithm for Gd {
             bits_down: self.n_workers as u64 * d * self.prec.bits(),
             bits_refresh: 0,
             active_workers: self.n_workers,
+            replica_bytes: 0,
         }
     }
 }

@@ -173,6 +173,7 @@ impl Algorithm for Gdci {
             bits_down,
             bits_refresh: 0,
             active_workers: n,
+            replica_bytes: self.downlink.replica_footprint(),
         }
     }
 }
@@ -308,6 +309,7 @@ impl Algorithm for VrGdci {
             bits_down,
             bits_refresh: 0,
             active_workers: n,
+            replica_bytes: self.downlink.replica_footprint(),
         }
     }
 }

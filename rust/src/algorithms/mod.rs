@@ -73,6 +73,13 @@ pub struct StepStats {
     /// the coordinator quarantined or missed workers (see
     /// [`crate::coordinator::DistributedRunner::health`])
     pub active_workers: usize,
+    /// resident bytes of iterate-replica state this round: on the
+    /// distributed runner, the fleet-shared snapshot/overlay publication
+    /// (`O(d + overlay nnz)`, flat in the worker count) plus any
+    /// worker-private dense iterate the workers reported (the
+    /// `local_steps > 1` local iterate); single-process drivers report
+    /// their downlink replica-mirror footprint (0 when no mirror exists)
+    pub replica_bytes: u64,
 }
 
 /// A round-synchronous distributed optimization algorithm.

@@ -810,6 +810,22 @@ impl ExperimentConfig {
     /// path ([`crate::ef::EfUplink`]). DIANA-family methods keep their
     /// ω-based step rules, so they stay unbiased-only even under EF.
     fn validate(&self) -> Result<(), ConfigError> {
+        // A lossy EF downlink keeps a residual accumulator whose support
+        // (and hence the replica overlay patch every round broadcasts)
+        // can only be truncated by a dense resync — without one scheduled,
+        // the overlay's nnz is unbounded over a long run.
+        if self.cluster.resync_every == 0
+            && matches!(
+                self.cluster.downlink,
+                DownlinkSpec::TopK { .. } | DownlinkSpec::TopKAbs { .. }
+            )
+        {
+            return Err(bad(
+                "cluster.downlink is lossy (top-k) but cluster.resync_every is 0: \
+                 overlays need a periodic truncation point to stay sparse. Set \
+                 cluster.resync_every to a positive round interval",
+            ));
+        }
         let biased = matches!(self.compressor, CompressorSpec::TopK { .. });
         match self.cluster.uplink {
             UplinkSpec::Exact => {
@@ -1204,7 +1220,7 @@ mod tests {
             "problem": {"kind": "quadratic", "d": 10, "workers": 3, "seed": 1},
             "algorithm": {"kind": "diana"},
             "compressor": {"kind": "rand-k", "q": 0.3},
-            "cluster": {"downlink": {"compressor": "top-k", "q": 0.2}}
+            "cluster": {"resync_every": 50, "downlink": {"compressor": "top-k", "q": 0.2}}
         }"#;
         let cfg = ExperimentConfig::parse(with).unwrap();
         assert_eq!(cfg.cluster.downlink, DownlinkSpec::TopK { q: 0.2 });
@@ -1241,6 +1257,44 @@ mod tests {
         assert!(ExperimentConfig::parse(&with.replace(r#""q": 0.2"#, r#""k": 0"#)).is_err());
         assert!(ExperimentConfig::parse(&with.replace(r#""q": 0.2"#, r#""q": 0.0"#)).is_err());
         assert!(ExperimentConfig::parse(&with.replace(r#""q": 0.2"#, r#""q": 1.5"#)).is_err());
+    }
+
+    #[test]
+    fn lossy_downlink_without_resync_schedule_is_rejected_at_parse() {
+        // resync_every = 0 means "never truncate": fine for exact or
+        // identity downlinks, but a lossy downlink's overlay patch then
+        // has no bound on its support. The pairing must fail at parse
+        // time with an actionable hint, not degrade silently at run time.
+        let text = r#"{
+            "problem": {"kind": "quadratic", "d": 10, "workers": 3, "seed": 1},
+            "algorithm": {"kind": "diana"},
+            "compressor": {"kind": "rand-k", "q": 0.3},
+            "cluster": {"downlink": {"compressor": "top-k", "q": 0.2}}
+        }"#;
+        let err = ExperimentConfig::parse(text).unwrap_err().to_string();
+        assert!(
+            err.contains("overlays need a periodic truncation point to stay sparse"),
+            "unhelpful error: {err}"
+        );
+        assert!(err.contains("resync_every"), "no actionable hint: {err}");
+        // the k-form is just as lossy; identity and exact are not
+        assert!(ExperimentConfig::parse(
+            &text.replace(r#""q": 0.2"#, r#""k": 3"#)
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            &text.replace(r#""compressor": "top-k", "q": 0.2"#, r#""compressor": "identity""#)
+        )
+        .is_ok());
+        assert!(ExperimentConfig::parse(
+            &text.replace(r#""compressor": "top-k", "q": 0.2"#, r#""exact": true"#)
+        )
+        .is_ok());
+        // an explicit schedule clears the rejection
+        assert!(ExperimentConfig::parse(
+            &text.replace(r#""cluster": {"#, r#""cluster": {"resync_every": 100, "#)
+        )
+        .is_ok());
     }
 
     #[test]

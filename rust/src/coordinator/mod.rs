@@ -17,9 +17,11 @@
 //! ```
 //!
 //! The downlink is delta-compressed (and optionally lossy with server-side
-//! error feedback — see [`crate::downlink`]); workers maintain an iterate
-//! replica instead of receiving the dense x^k. See [`crate::wire`] for the
-//! frame formats and [`runner`] for the broadcast protocol details.
+//! error feedback — see [`crate::downlink`]); workers read the iterate
+//! through a fleet-shared copy-on-write snapshot plus a sparse overlay
+//! (see [`replica`]) instead of each materializing a private dense x^k.
+//! See [`crate::wire`] for the frame formats and [`runner`] for the
+//! broadcast protocol details.
 
 //! Rounds are fault-tolerant: the gather is deadline-bounded, a missing or
 //! misbehaving worker is quarantined (the aggregate reweights to the
@@ -30,10 +32,12 @@
 pub mod faults;
 pub mod pool;
 pub mod protocol;
+pub mod replica;
 pub mod runner;
 
 pub use faults::{FaultKind, FaultPlan, FaultSpec, WorkerFaultScript};
 pub use pool::{FoldPool, ShardView};
+pub use replica::{OverlayPatch, ReplicaOverlay, SnapshotPublisher};
 pub use protocol::{
     FailureClass, FrameSet, MethodKind, RunnerHealth, WorkerCommand, WorkerFailure, WorkerSnapshot,
     WorkerState, WorkerUpdate,

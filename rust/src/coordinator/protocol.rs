@@ -3,6 +3,8 @@
 use std::sync::mpsc::SyncSender;
 use std::sync::Arc;
 
+use crate::coordinator::replica::OverlayPatch;
+
 /// What shift rule the cluster runs (worker- and master-side behaviour).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum MethodKind {
@@ -18,14 +20,22 @@ pub enum MethodKind {
 
 /// Master → worker.
 pub enum WorkerCommand {
-    /// Start round k with the broadcast downlink frame.
+    /// Start round k with the broadcast downlink frame and the shared
+    /// iterate snapshot.
     ///
     /// `down` is one wire-encoded frame (see [`crate::wire`]'s downlink
     /// format) shared by every worker through the `Arc`: either an iterate
-    /// **delta** (x^k − x^{k−1}, applied to the worker's local replica at
-    /// O(nnz)) or a dense **resync** (round 0, periodic drift checks,
-    /// out-of-band iterate changes). The dense n·d broadcast of the old
-    /// protocol is gone — downlink cost is the frame's actual byte size.
+    /// **delta** (x^k − x^{k−1}) or a dense **resync** (round 0, periodic
+    /// drift checks, out-of-band iterate changes). Workers *validate* the
+    /// frame (structure + dimension, the same strictness the old
+    /// decode-apply path enforced) but no longer replay it into a private
+    /// replica: the iterate itself arrives as `snap` — the fleet-shared
+    /// copy-on-write snapshot published under generation `gen` — plus the
+    /// sparse EF-downlink overlay `patch`
+    /// (see [`crate::coordinator::replica`]). A worker whose retained
+    /// generation is not `gen − 1` on a delta-framed round missed a
+    /// rotation and answers with [`WorkerUpdate::needs_resync`] instead of
+    /// computing against a stale base.
     ///
     /// `recycled` returns the frame buffers the master consumed from this
     /// worker's *previous* round so the worker can encode into them again —
@@ -36,23 +46,31 @@ pub enum WorkerCommand {
     Round {
         k: usize,
         down: Arc<Vec<u8>>,
+        gen: u64,
+        snap: Arc<Vec<f64>>,
+        patch: Arc<OverlayPatch>,
         recycled: FrameSet,
     },
     /// Re-admit a quarantined-but-alive worker (the straggler case): a
-    /// dense resync frame rebuilt from the master's *current* iterate,
-    /// plus the master's replica of this worker's shift — the worker
-    /// overwrites its local `x` and `h`, flushes its EF uplink
-    /// accumulator, and answers round `k` like any freshly bootstrapped
-    /// worker. The off-hot-path clones are fine: rejoin is an exceptional
-    /// event, not a round primitive.
+    /// dense resync frame (one recycled buffer shared by every rejoin arm
+    /// of the round — see `DownlinkState::rejoin_frame`), the current
+    /// snapshot/patch publication, plus the master's replica of this
+    /// worker's shift — the worker installs the snapshot, overwrites its
+    /// `h`, flushes its EF uplink accumulator, and answers round `k` like
+    /// any freshly bootstrapped worker. The off-hot-path `h` clone is
+    /// fine: rejoin is an exceptional event, not a round primitive.
     Rejoin {
         k: usize,
         down: Arc<Vec<u8>>,
+        gen: u64,
+        snap: Arc<Vec<f64>>,
+        patch: Arc<OverlayPatch>,
         h: Vec<f64>,
         recycled: FrameSet,
     },
     /// Debug/ops introspection: snapshot this worker's private state
-    /// (current shift and iterate replica) and send it back on `reply`.
+    /// (current shift and logical iterate replica, the latter materialized
+    /// from the retained snapshot + overlay) and send it back on `reply`.
     /// Sent between rounds, when the worker is idle; the clones allocate,
     /// which is fine off the hot path. Tests use this to verify that the
     /// master's wire-reconstructed shift replicas and EF replica mirror
@@ -69,7 +87,9 @@ pub struct WorkerSnapshot {
     pub worker: usize,
     /// the worker's current shift h_i
     pub h: Vec<f64>,
-    /// the worker's local replica of the broadcast iterate
+    /// the worker's **logical** replica of the broadcast iterate,
+    /// materialized from the retained shared snapshot + sparse overlay
+    /// (the worker holds no dense private copy)
     pub x_replica: Vec<f64>,
     /// the EF uplink's error accumulator `Σ (m − c)` (`None` when the
     /// exact uplink is running)
@@ -178,6 +198,15 @@ pub struct RunnerHealth {
     /// per-worker consecutive missed-deadline count (reset on report;
     /// quarantine triggers at the configured `quarantine_after`)
     pub consecutive_misses: Vec<u32>,
+    /// per-worker bytes of **private dense iterate storage** the worker
+    /// reported with its last update (0 under the shared-snapshot replica
+    /// model except for the `local_steps > 1` local iterate; a regression
+    /// back toward per-worker dense replicas shows up here first)
+    pub replica_bytes: Vec<u64>,
+    /// per-worker overlay-patch entry count (nnz) of the replica handle
+    /// the worker computed its last update against (0 on the exact
+    /// downlink path; bounded by the EF compressor's residual support)
+    pub overlay_nnz: Vec<u64>,
 }
 
 impl RunnerHealth {
@@ -239,4 +268,16 @@ pub struct WorkerUpdate {
     /// other fields are then zero/default); the sender thread exits right
     /// after this update
     pub failure: Option<WorkerFailure>,
+    /// set when the worker detected a snapshot-generation gap on a
+    /// delta-framed round and declined to compute against the stale base;
+    /// the master re-admits it through the `Rejoin` bootstrap (no
+    /// deadline-miss penalty — the worker is alive and well-behaved)
+    pub needs_resync: bool,
+    /// bytes of private dense iterate storage this worker holds across
+    /// rounds (the `local_steps` iterate and any materialization scratch
+    /// that had to grow; 0 on the exact downlink path)
+    pub replica_bytes: u64,
+    /// overlay-patch nnz of the replica handle this update was computed
+    /// against
+    pub overlay_nnz: u64,
 }

@@ -1,0 +1,428 @@
+//! Shared copy-on-write iterate: Arc snapshots + per-worker sparse overlays.
+//!
+//! Pre-refactor, every worker thread owned a private dense `Vec<f64>` mirror
+//! of the iterate and replayed the downlink frame stream against it, so a
+//! fleet of `n` workers paid `n * d * 8` bytes for state that is — on the
+//! exact downlink path — bit-identical by construction. This module is the
+//! replacement: the master publishes each round's post-step iterate **once**
+//! as an immutable [`Arc`] snapshot, and the only per-round divergence a
+//! replica is allowed to have (the EF-downlink invariant
+//! `x_replica + e = x_master`) travels as a sparse [`OverlayPatch`] over that
+//! snapshot. Fleet replica memory is `O(d + overlay nnz)` instead of
+//! `O(n * d)`.
+//!
+//! Three pieces:
+//!
+//! - [`OverlayPatch`] — a sparse `(index, value)` patch. The master rebuilds
+//!   it from the EF-downlink error accumulator after each fold
+//!   (`value[j] = -e[j]` on the nonzero support of `e`), so
+//!   `snapshot + patch` *is* the logical replica `x_master - e`. On the exact
+//!   downlink path the accumulator does not exist and the patch is pinned
+//!   empty.
+//! - [`SnapshotPublisher`] — the master-side double buffer. Like the
+//!   runner's `down_bufs`, it rotates two [`Arc`] slots (snapshot + patch)
+//!   with [`Arc::get_mut`] in-place reuse, so steady-state publication is
+//!   allocation-free; a quarantined worker pinning an old generation costs
+//!   one fallback allocation, after which the rotation detaches from it.
+//!   Every publication carries a monotonically increasing **generation** so
+//!   a worker can detect a missed rotation (see [`ReplicaOverlay::install`]).
+//! - [`ReplicaOverlay`] — the worker-side handle: retained snapshot `Arc`,
+//!   retained patch `Arc`, and the generation both were published under.
+//!   [`ReplicaOverlay::view`] is the zero-alloc read path the gradient
+//!   oracle consumes: it borrows the snapshot directly when the patch is
+//!   empty (exact path — zero copies, zero worker-private bytes) and
+//!   materializes `snapshot + patch` into a caller-provided scratch
+//!   otherwise.
+//!
+//! Bit-identity note: `-0.0 + 0.0 == +0.0`, so a dense `x - e` loop does
+//! *not* reproduce `x` at coordinates where `e` is zero with the opposite
+//! sign convention. Every consumer — worker view, master mirror,
+//! `Inspect` reconstruction — therefore materializes through the one
+//! algorithm in [`materialize_into`]: copy the snapshot, then add patch
+//! values only at the patch's support. Master and workers see the same
+//! bits because they run the same code on the same two buffers.
+
+use std::sync::Arc;
+
+/// Sparse divergence of a logical replica from the published snapshot.
+///
+/// Stores `(index, value)` pairs in ascending index order; the logical
+/// replica is `snapshot[j] + value` at each stored index `j` and
+/// `snapshot[j]` everywhere else. Under the EF downlink the patch holds
+/// `-e` restricted to the nonzero support of the error accumulator `e`;
+/// on the exact path it is empty.
+#[derive(Clone, Debug, Default)]
+pub struct OverlayPatch {
+    idx: Vec<u32>,
+    val: Vec<f64>,
+}
+
+impl OverlayPatch {
+    /// An empty patch (logical replica == snapshot).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of patched coordinates.
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// True when the logical replica equals the snapshot bit-for-bit.
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// Resident bytes of the patch payload (4-byte index + 8-byte value
+    /// per entry).
+    pub fn bytes(&self) -> u64 {
+        (self.idx.len() * 4 + self.val.len() * 8) as u64
+    }
+
+    /// Drop every entry (replica collapses back onto the snapshot).
+    ///
+    /// This is the overlay half of a resync: flushing the EF-downlink
+    /// accumulator zeroes `e`, and the corresponding patch is empty.
+    pub fn clear(&mut self) {
+        self.idx.clear();
+        self.val.clear();
+    }
+
+    /// Rebuild the patch as `-e` on the nonzero support of the EF error
+    /// accumulator `e`, reusing the existing entry capacity.
+    ///
+    /// Exact zeros are skipped — after `e -= c` the repacked compressed
+    /// coordinates cancel exactly, so the support (and hence the patch)
+    /// is bounded by the compressor's *residual* support. The entry
+    /// vectors are reserved to the full dimension on first use: the
+    /// residual support varies round to round, and a mid-run capacity
+    /// ratchet would break the steady-state zero-allocation contract the
+    /// counting-allocator tests pin.
+    pub fn rebuild_from_error(&mut self, e: &[f64]) {
+        self.idx.clear();
+        self.val.clear();
+        self.idx.reserve(e.len());
+        self.val.reserve(e.len());
+        for (j, &ej) in e.iter().enumerate() {
+            if ej != 0.0 {
+                self.idx.push(j as u32);
+                self.val.push(-ej);
+            }
+        }
+    }
+
+    /// Copy `other`'s entries into `self`, reusing capacity.
+    pub fn clone_from_patch(&mut self, other: &OverlayPatch) {
+        self.idx.clear();
+        self.val.clear();
+        self.idx.extend_from_slice(&other.idx);
+        self.val.extend_from_slice(&other.val);
+    }
+
+    /// Ensure capacity for `n` entries (starting from empty). The
+    /// publisher calls this with the full dimension before the first
+    /// non-empty copy so the slot never re-ratchets as the EF residual
+    /// support drifts round to round.
+    pub fn reserve(&mut self, n: usize) {
+        self.idx.reserve(n);
+        self.val.reserve(n);
+    }
+
+    /// Add the patch into `out` (`out[idx] += val` at each entry).
+    ///
+    /// This is the single shared patch-application kernel: every
+    /// materialization site goes through it so master-side mirrors and
+    /// worker-side views agree bit-for-bit.
+    pub fn apply(&self, out: &mut [f64]) {
+        for (i, &j) in self.idx.iter().enumerate() {
+            out[j as usize] += self.val[i];
+        }
+    }
+}
+
+/// Materialize the logical replica `base + patch` into `out`, resizing
+/// `out` to `base.len()` if needed (no-op on a warm buffer).
+///
+/// The one algorithm every consumer uses: copy the snapshot, then add
+/// patch values at the patch support only. See the module docs for why a
+/// dense `x - e` loop is not an acceptable substitute.
+pub fn materialize_into(base: &[f64], patch: &OverlayPatch, out: &mut Vec<f64>) {
+    if out.len() != base.len() {
+        out.resize(base.len(), 0.0);
+    }
+    out.copy_from_slice(base);
+    patch.apply(out);
+}
+
+/// Master-side double-buffered snapshot + overlay publisher.
+///
+/// Two `Arc` slots per payload rotate by generation parity, mirroring the
+/// runner's `down_bufs` discipline: by the time generation `g` is
+/// published, every active worker has installed generation `g - 1` and
+/// released the slot `g` occupies, so [`Arc::get_mut`] reuses it in place.
+/// A worker that stopped draining commands (quarantine, crash) pins its
+/// slot once; publication then falls back to a single fresh allocation and
+/// the rotation continues without it.
+#[derive(Debug)]
+pub struct SnapshotPublisher {
+    snaps: [Arc<Vec<f64>>; 2],
+    patches: [Arc<OverlayPatch>; 2],
+    gen: u64,
+}
+
+impl SnapshotPublisher {
+    /// A publisher for `d`-dimensional iterates. Both snapshot slots are
+    /// pre-sized so the first two publications are already in-place.
+    pub fn new(d: usize) -> Self {
+        Self {
+            snaps: [Arc::new(vec![0.0; d]), Arc::new(vec![0.0; d])],
+            patches: [Arc::new(OverlayPatch::new()), Arc::new(OverlayPatch::new())],
+            gen: 0,
+        }
+    }
+
+    /// Generation of the most recent publication (0 = nothing published).
+    pub fn gen(&self) -> u64 {
+        self.gen
+    }
+
+    /// Publish `x` (and the current overlay patch) as the next generation,
+    /// returning `(gen, snapshot, patch)` handles to broadcast.
+    ///
+    /// Allocation-free once warm: the parity slot is reused via
+    /// [`Arc::get_mut`] whenever no worker still pins it.
+    pub fn publish(
+        &mut self,
+        x: &[f64],
+        overlay: &OverlayPatch,
+    ) -> (u64, Arc<Vec<f64>>, Arc<OverlayPatch>) {
+        self.gen += 1;
+        let slot = (self.gen % 2) as usize;
+        match Arc::get_mut(&mut self.snaps[slot]) {
+            Some(buf) => {
+                if buf.len() != x.len() {
+                    buf.resize(x.len(), 0.0);
+                }
+                buf.copy_from_slice(x);
+            }
+            None => self.snaps[slot] = Arc::new(x.to_vec()),
+        }
+        match Arc::get_mut(&mut self.patches[slot]) {
+            Some(p) => {
+                // full-dimension reserve (no-op on the exact path, where
+                // the overlay is pinned empty): the EF residual support
+                // drifts, and a mid-run capacity ratchet would violate the
+                // steady-state allocation contract
+                if !overlay.is_empty() {
+                    p.clear();
+                    p.reserve(x.len());
+                }
+                p.clone_from_patch(overlay);
+            }
+            None => self.patches[slot] = Arc::new(overlay.clone()),
+        }
+        (self.gen, self.snaps[slot].clone(), self.patches[slot].clone())
+    }
+
+    /// Resident bytes of both snapshot slots (the fleet-shared iterate
+    /// storage; independent of the number of workers).
+    pub fn snapshot_bytes(&self) -> u64 {
+        (self.snaps[0].len() * 8 + self.snaps[1].len() * 8) as u64
+    }
+
+    /// Resident bytes of both overlay-patch slots.
+    pub fn patch_bytes(&self) -> u64 {
+        self.patches[0].bytes() + self.patches[1].bytes()
+    }
+}
+
+/// Worker-side handle to the shared iterate: the retained snapshot `Arc`,
+/// the retained overlay patch `Arc`, and the generation both were
+/// published under.
+///
+/// This replaces the worker's private dense `Vec<f64>` replica. The worker
+/// installs the handles that arrive with each round command, checks
+/// generation continuity (a delta-framed round must carry `last_gen + 1`;
+/// a gap means a rotation was missed and the worker must request a resync
+/// instead of silently computing against a stale base), and reads the
+/// logical replica through [`ReplicaOverlay::view`].
+#[derive(Clone, Debug)]
+pub struct ReplicaOverlay {
+    gen: u64,
+    snap: Arc<Vec<f64>>,
+    patch: Arc<OverlayPatch>,
+}
+
+impl Default for ReplicaOverlay {
+    fn default() -> Self {
+        Self::empty()
+    }
+}
+
+impl ReplicaOverlay {
+    /// A handle with nothing installed (generation 0, empty snapshot).
+    pub fn empty() -> Self {
+        Self {
+            gen: 0,
+            snap: Arc::new(Vec::new()),
+            patch: Arc::new(OverlayPatch::new()),
+        }
+    }
+
+    /// Install a freshly published `(gen, snapshot, patch)` triple,
+    /// releasing the previously retained slot so the master's double
+    /// buffer can reuse it.
+    pub fn install(&mut self, gen: u64, snap: Arc<Vec<f64>>, patch: Arc<OverlayPatch>) {
+        self.gen = gen;
+        self.snap = snap;
+        self.patch = patch;
+    }
+
+    /// Generation of the installed snapshot (0 = nothing installed).
+    pub fn gen(&self) -> u64 {
+        self.gen
+    }
+
+    /// Dimension of the installed snapshot.
+    pub fn len(&self) -> usize {
+        self.snap.len()
+    }
+
+    /// True when no snapshot has been installed yet.
+    pub fn is_empty(&self) -> bool {
+        self.snap.is_empty()
+    }
+
+    /// Number of overlay entries this replica currently carries.
+    pub fn overlay_nnz(&self) -> usize {
+        self.patch.nnz()
+    }
+
+    /// Zero-alloc view of the logical replica for the gradient oracle.
+    ///
+    /// When the patch is empty (exact downlink path) this borrows the
+    /// shared snapshot directly — no copy, no worker-private bytes. When
+    /// the patch is non-empty (EF downlink) it materializes
+    /// `snapshot + patch` into `scratch` via [`materialize_into`] and
+    /// borrows that; `scratch` is caller-owned and reused across rounds,
+    /// so the only allocation is its one-time warm-up growth.
+    pub fn view<'a>(&'a self, scratch: &'a mut Vec<f64>) -> &'a [f64] {
+        if self.patch.is_empty() {
+            &self.snap
+        } else {
+            materialize_into(&self.snap, &self.patch, scratch);
+            scratch
+        }
+    }
+
+    /// Materialize the logical replica into `out` unconditionally (used
+    /// to boot the local-step iterate, which is mutated in place and so
+    /// cannot borrow the shared snapshot).
+    pub fn materialize_into_buf(&self, out: &mut Vec<f64>) {
+        materialize_into(&self.snap, &self.patch, out);
+    }
+
+    /// Materialize the logical replica into a fresh vector (test /
+    /// `Inspect` path — allocation is fine off the hot loop).
+    pub fn materialize(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        materialize_into(&self.snap, &self.patch, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_patch_view_borrows_the_snapshot() {
+        let mut publ = SnapshotPublisher::new(4);
+        let overlay = OverlayPatch::new();
+        let x = [1.0, -2.0, 3.0, 0.5];
+        let (gen, snap, patch) = publ.publish(&x, &overlay);
+        assert_eq!(gen, 1);
+        let mut rep = ReplicaOverlay::empty();
+        rep.install(gen, snap, patch);
+        let mut scratch = Vec::new();
+        let view = rep.view(&mut scratch);
+        assert_eq!(view, &x[..]);
+        // Exact path: the view is the shared buffer, the scratch never grew.
+        assert_eq!(scratch.capacity(), 0);
+    }
+
+    #[test]
+    fn overlay_patch_tracks_the_error_support_and_applies_additively() {
+        let e = [0.0, 0.25, 0.0, -1.5, 0.0];
+        let mut patch = OverlayPatch::new();
+        patch.rebuild_from_error(&e);
+        assert_eq!(patch.nnz(), 2);
+        let base = [1.0, 1.0, 1.0, 1.0, 1.0];
+        let mut out = Vec::new();
+        materialize_into(&base, &patch, &mut out);
+        assert_eq!(out, vec![1.0, 0.75, 1.0, 2.5, 1.0]);
+        patch.clear();
+        assert!(patch.is_empty());
+        materialize_into(&base, &patch, &mut out);
+        assert_eq!(out, base.to_vec());
+    }
+
+    #[test]
+    fn negative_zero_error_coords_do_not_perturb_the_snapshot() {
+        // A dense `x - e` loop would turn x[j] into x[j] - (-0.0) at a
+        // negative-zero accumulator coordinate, which is fine, but the
+        // reverse composition (+ -0.0 onto +0.0) flips signs under naive
+        // subtraction orderings. The support-only patch sidesteps the
+        // whole class: -0.0 != 0.0 is false, so the coordinate is skipped
+        // and the snapshot bits pass through untouched.
+        let e = [-0.0, 2.0];
+        let mut patch = OverlayPatch::new();
+        patch.rebuild_from_error(&e);
+        assert_eq!(patch.nnz(), 1);
+        let base = [0.0f64, 1.0];
+        let mut out = Vec::new();
+        materialize_into(&base, &patch, &mut out);
+        assert_eq!(out[0].to_bits(), 0.0f64.to_bits());
+        assert_eq!(out[1], -1.0);
+    }
+
+    #[test]
+    fn publisher_rotates_generations_and_reuses_released_slots() {
+        let mut publ = SnapshotPublisher::new(3);
+        let overlay = OverlayPatch::new();
+        let mut rep = ReplicaOverlay::empty();
+        let mut slot_ptrs: [*const f64; 2] = [std::ptr::null(), std::ptr::null()];
+        for k in 0..6u64 {
+            let x = [k as f64, 1.0, 2.0];
+            let (gen, snap, patch) = publ.publish(&x, &overlay);
+            assert_eq!(gen, k + 1);
+            let slot = (gen % 2) as usize;
+            // Installing generation g releases the slot generation g − 1
+            // occupied, so after warm-up each parity slot is reused in
+            // place: its buffer pointer is stable across publications.
+            if k >= 2 {
+                assert_eq!(snap.as_ptr(), slot_ptrs[slot]);
+            }
+            slot_ptrs[slot] = snap.as_ptr();
+            rep.install(gen, snap, patch);
+            assert_eq!(rep.gen(), gen);
+            let mut scratch = Vec::new();
+            assert_eq!(rep.view(&mut scratch)[0], k as f64);
+        }
+        assert_eq!(publ.snapshot_bytes(), 2 * 3 * 8);
+    }
+
+    #[test]
+    fn pinned_slot_falls_back_to_a_fresh_allocation() {
+        let mut publ = SnapshotPublisher::new(2);
+        let overlay = OverlayPatch::new();
+        let (_, pinned, _) = publ.publish(&[1.0, 2.0], &overlay);
+        // A quarantined worker never installs past this generation; the
+        // slot it pins must not be overwritten under it.
+        let _hold = pinned.clone();
+        let _ = publ.publish(&[3.0, 4.0], &overlay); // other slot, in place
+        let (_, fresh, _) = publ.publish(&[5.0, 6.0], &overlay); // pinned slot: realloc
+        assert_eq!(*pinned, vec![1.0, 2.0]);
+        assert_eq!(*fresh, vec![5.0, 6.0]);
+    }
+}

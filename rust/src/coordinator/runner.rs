@@ -1,15 +1,42 @@
 //! Master/worker threaded runtime.
 //!
+//! # Shared copy-on-write replica: snapshot + sparse overlay
+//!
+//! The fleet holds **one** iterate, not n. Worker threads own no private
+//! dense `Vec<f64>` replica: each round the master publishes its post-step
+//! iterate as a double-buffered immutable snapshot
+//! ([`crate::coordinator::replica::SnapshotPublisher`] — two `Arc` slots
+//! rotated by generation parity, `Arc::get_mut`-reused in place so
+//! steady-state publication is allocation-free, exactly like the broadcast
+//! frame's `down_bufs`), and every worker reads the iterate through the
+//! shared snapshot. The only divergence a replica is allowed to have —
+//! the EF-downlink invariant `x_replica + e = x_master` — travels as a
+//! sparse [`crate::coordinator::replica::OverlayPatch`] (`−e` on the
+//! error accumulator's support) published alongside the snapshot, so
+//! fleet replica memory is **O(d + overlay nnz)** instead of O(n·d). On
+//! the exact downlink path the patch is pinned empty and the worker's
+//! gradient view borrows the snapshot directly (zero copies, zero
+//! worker-private bytes); under the EF downlink the worker materializes
+//! `snapshot + patch` into its round-transient gradient scratch through
+//! the same kernel the master's mirror view uses, so both sides see
+//! identical bits. Each publication carries a monotonically increasing
+//! **generation**; a worker whose retained generation is not `gen − 1` on
+//! a delta-framed round missed a rotation and answers
+//! [`WorkerUpdate::needs_resync`] instead of silently computing against a
+//! stale base (the master re-admits it through the `Rejoin` bootstrap,
+//! with no deadline-miss penalty).
+//!
 //! # Delta-compressed broadcast downlink
 //!
-//! The master never ships the dense iterate. Each worker maintains a local
-//! **replica** of x and the master broadcasts one shared wire frame per
-//! round (see [`crate::wire`]'s downlink format):
+//! The wire broadcast remains one shared frame per round (see
+//! [`crate::wire`]'s downlink format) — it is the *accounted* downlink
+//! cost a real deployment would pay, and workers still validate it with
+//! the decode path's full strictness ([`wire::validate_down`]) so a
+//! corrupted frame surfaces as the same structured failure it always did:
 //!
 //! * a **delta** frame carrying x^{k} − x^{k−1} = −γ·g^{k−1} — already
 //!   sparse when the aggregate is sparse (plain DCGD with Rand-K at
-//!   K = 0.5 % ships ~0.5 % of the former d·8 bytes/worker), applied to
-//!   the replica via [`Packet::add_scaled_into`] at O(nnz);
+//!   K = 0.5 % ships ~0.5 % of the former d·8 bytes/worker);
 //! * a dense **resync** frame on round 0 (replica bootstrap for joiners),
 //!   every [`ClusterConfig::resync_every`] rounds (drift checks; round 0
 //!   itself is skipped — the bootstrap resync already covers it), and
@@ -19,16 +46,20 @@
 //!   compressor ([`crate::downlink::EfDownlink`]) — the broadcast stays
 //!   O(nnz) even when DIANA-family shifts densify the exact delta, the
 //!   dropped residual is retried next round, and any resync flushes the
-//!   accumulator so replicas re-converge exactly.
+//!   accumulator, truncates the overlay, and collapses the replicas onto
+//!   the snapshot exactly.
 //!
-//! On the exact path the master applies the *identical* delta packet to
-//! its own iterate, so master and replicas stay bit-equal — delta
-//! application is exact f64 arithmetic and trajectories are bit-identical
-//! to the dense broadcast (pinned by `tests/coordinator.rs`). On the EF
-//! path the master additionally maintains a bit-exact mirror of the
-//! replica state (same packets, same ops), and the EF invariant
+//! On the exact path the snapshot *is* the master iterate, so master and
+//! replicas are bit-equal by construction and trajectories are
+//! bit-identical to the dense broadcast (pinned by
+//! `tests/coordinator.rs`). On the EF path the master maintains a
+//! bit-exact mirror of the replica view (same snapshot + overlay
+//! materialization the workers run), and the EF invariant
 //! `x_replica + e = x_master` bounds the drift. `StepStats::bits_down` is
-//! the measured frame size, not a dense formula.
+//! the measured frame size, not a dense formula; `StepStats::replica_bytes`
+//! totals the fleet's resident replica storage (snapshot buffers + overlay
+//! patches + any worker-private dense bytes) so the O(d) scaling is
+//! observable per round.
 //!
 //! Wire-precision symmetry: workers quantize every uplink packet to the
 //! cluster precision *before* folding it into local shift state, so under
@@ -111,15 +142,20 @@
 //! (enforced by `tests/alloc_free.rs`):
 //!
 //! * **workers** own one scratch [`Packet`] per compressor
-//!   ([`Compressor::compress_into`]), the iterate replica and its downlink
-//!   decode packet, plus the wire frame buffers, which the master ships
-//!   back inside the next [`WorkerCommand::Round`] after consuming them;
+//!   ([`Compressor::compress_into`]) plus the wire frame buffers, which
+//!   the master ships back inside the next [`WorkerCommand::Round`] after
+//!   consuming them; the iterate arrives as the shared snapshot handle
+//!   (no private replica, no downlink decode packet — the frame is
+//!   validated by a walk that touches no allocator);
 //! * the **master** owns one scratch [`Packet`] per worker and frame kind
 //!   ([`wire::decode_into`]), pre-sized gather slots, a pre-sized
-//!   [`wire::DeltaScratch`] for the downlink delta, and a double-buffered
-//!   `Arc` pair for the broadcast frame — by the time a buffer's turn
-//!   comes round again, every worker has provably dropped its handle, so
-//!   `Arc::get_mut` succeeds and the frame is encoded in place;
+//!   [`wire::DeltaScratch`] for the downlink delta, and double-buffered
+//!   `Arc` pairs for the broadcast frame and the iterate
+//!   snapshot/overlay publication — by the time a buffer's turn comes
+//!   round again, every worker has provably dropped its handle, so
+//!   `Arc::get_mut` succeeds and the frame is encoded (snapshot copied)
+//!   in place; the `Rejoin` resync frame is likewise built once per round
+//!   into a recycled buffer shared by every rejoining arm;
 //! * channels are **bounded** (`sync_channel`), so sends go through
 //!   preallocated slots instead of heap nodes.
 //!
@@ -211,6 +247,7 @@ use crate::coordinator::protocol::{
     FailureClass, FrameSet, MethodKind, RunnerHealth, WorkerCommand, WorkerFailure, WorkerSnapshot,
     WorkerState, WorkerUpdate,
 };
+use crate::coordinator::replica::{ReplicaOverlay, SnapshotPublisher};
 use crate::downlink::DownlinkState;
 use crate::ef::{self, EfUplink};
 use crate::linalg::{ax_into, axpy, sub_into, zero};
@@ -364,6 +401,16 @@ pub struct DistributedRunner {
     /// lagged equality via [`WorkerCommand::Inspect`]). On the exact path
     /// the master iterate itself plays the mirror's role.
     dl: DownlinkState,
+    /// double-buffered publisher of the fleet-shared iterate snapshot +
+    /// sparse overlay (see [`crate::coordinator::replica`]): one `publish`
+    /// per round, allocation-free in steady state
+    publisher: SnapshotPublisher,
+    /// per-worker private-dense-replica bytes, as reported in the last
+    /// update each worker sent (health gauge; 0 except the τ > 1 iterate)
+    worker_replica_bytes: Vec<u64>,
+    /// per-worker overlay nnz of the replica handle behind each worker's
+    /// last update (health gauge; 0 on the exact downlink path)
+    worker_overlay_nnz: Vec<u64>,
     /// local sub-steps per communication round (≥ 1; see the module doc)
     local_steps: usize,
     /// overlap-aware wall-clock pricing for batched rounds
@@ -389,6 +436,11 @@ pub struct DistributedRunner {
     /// workers re-admitted via [`DistributedRunner::rejoin`] whose
     /// bootstrap command has not shipped yet
     rejoining: Vec<bool>,
+    /// workers that answered *this* round with
+    /// [`WorkerUpdate::needs_resync`] (cleared at round start): alive and
+    /// well-behaved, so excused from miss accounting while they await the
+    /// rejoin bootstrap
+    resync_flags: Vec<bool>,
     /// most recent failure per worker (class + detail, kept for ops/tests)
     last_failures: Vec<Option<WorkerFailure>>,
     /// rounds completed with fewer reporters than configured workers
@@ -445,15 +497,23 @@ struct WorkerCfg {
 
 /// Worker-side loop: one thread per worker.
 ///
-/// The worker owns a local replica of the iterate, updated per round from
-/// the broadcast downlink frame (delta applied in place, or dense resync).
-/// All scratch (replica, gradient/diff vectors, compression packets, frame
-/// buffers) is owned by the loop and recycled: frame buffers travel to the
-/// master inside the [`WorkerUpdate`] and come back, consumed, inside the
-/// next [`WorkerCommand::Round`]. With `local_steps = τ > 1` the worker
-/// additionally owns a local iterate x̂ for the τ shifted sub-steps of each
-/// round, and encodes the τ packets incrementally into one batched frame
-/// as they are produced (the code-level analog of streaming them).
+/// The worker holds **no private dense replica** of the iterate: each
+/// round's command carries the fleet-shared snapshot + sparse overlay
+/// (see [`crate::coordinator::replica`]), and the worker retains only the
+/// cheap [`ReplicaOverlay`] handle (two `Arc` clones + a generation
+/// number). The broadcast downlink frame is still *validated* —
+/// structure and dimension, the same strictness the old decode-apply
+/// path enforced, so wire accounting and fault detection are unchanged —
+/// but never decoded into an O(d) packet. All scratch (gradient/diff
+/// vectors, compression packets, frame buffers) is owned by the loop and
+/// recycled: frame buffers travel to the master inside the
+/// [`WorkerUpdate`] and come back, consumed, inside the next
+/// [`WorkerCommand::Round`]. With `local_steps = τ > 1` the worker
+/// additionally owns a local iterate x̂ for the τ shifted sub-steps of
+/// each round (the one legitimate private dense vector, reported through
+/// [`WorkerUpdate::replica_bytes`]), and encodes the τ packets
+/// incrementally into one batched frame as they are produced (the
+/// code-level analog of streaming them).
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     cfg: WorkerCfg,
@@ -477,12 +537,12 @@ fn worker_loop(
     let d = problem.dim();
     // worker-side EF uplink accumulator (None = exact uplink)
     let mut uplink = if uplink_ef { Some(EfUplink::new(d)) } else { None };
-    // local replica of the broadcast iterate (bootstrapped by the round-0
-    // resync frame, then maintained by delta application)
-    let mut x = vec![0.0; d];
+    // handle onto the fleet-shared iterate: snapshot Arc + overlay Arc +
+    // generation (bootstrapped by the round-0 resync command, then
+    // re-installed from each round's publication)
+    let mut replica = ReplicaOverlay::empty();
     // local iterate for the τ sub-steps of a batched round
     let mut x_loc = if local_steps > 1 { vec![0.0; d] } else { Vec::new() };
-    let mut down_pkt = Packet::Zero { dim: d as u32 };
     let mut grad = vec![0.0; d];
     let mut diff = vec![0.0; d];
     let mut q_pkt = Packet::Zero { dim: d as u32 };
@@ -500,26 +560,36 @@ fn worker_loop(
     let mut refresh_buf: Vec<u8> = Vec::new();
 
     while let Ok(cmd) = cmd_rx.recv() {
-        let (k, down, mut frames) = match cmd {
-            WorkerCommand::Round { k, down, recycled } => (k, down, recycled),
+        let (k, down, gen, snap, patch, mut frames) = match cmd {
+            WorkerCommand::Round {
+                k,
+                down,
+                gen,
+                snap,
+                patch,
+                recycled,
+            } => (k, down, gen, snap, patch, recycled),
             WorkerCommand::Rejoin {
                 k,
                 down,
+                gen,
+                snap,
+                patch,
                 h: h_boot,
                 recycled,
             } => {
                 // re-admission bootstrap: adopt the master's replica of
                 // this worker's shift; the dense resync frame below
-                // rebuilds the iterate replica and flushes the EF uplink
+                // installs the fresh snapshot and flushes the EF uplink
                 // accumulator, then the round runs normally
                 h.copy_from_slice(&h_boot);
-                (k, down, recycled)
+                (k, down, gen, snap, patch, recycled)
             }
             WorkerCommand::Inspect { reply } => {
                 let _ = reply.send(WorkerSnapshot {
                     worker: wi,
                     h: h.clone(),
-                    x_replica: x.clone(),
+                    x_replica: replica.materialize(),
                     uplink_error: uplink.as_ref().map(|u| u.error().to_vec()),
                 });
                 continue;
@@ -544,45 +614,32 @@ fn worker_loop(
         let t0 = Instant::now();
         // injected downlink corruption replaces this worker's *view* of
         // the broadcast (the shared buffer itself is untouched — other
-        // workers must decode it cleanly); the decode below rejects it
-        // and the worker reports the defect like any organic one
+        // workers must validate it cleanly); the validation below rejects
+        // it and the worker reports the defect like any organic one
         let garbage: Option<Vec<u8>> = (!script.is_empty() && script.corrupt_downlink_at(k))
             .then(|| vec![0xBA, 0xAD, 0xF0, 0x0D]);
         let down_bytes: &[u8] = garbage.as_deref().unwrap_or(&down);
-        // apply the downlink frame to the replica, then release the shared
-        // broadcast buffer before the heavy work — the master re-encodes
-        // into it once every worker has dropped its handle. A decode or
+        // validate the downlink frame (structure + dimension — the wire
+        // broadcast stays the accounted traffic and the fault-detection
+        // surface), then release the shared buffer before the heavy work —
+        // the master re-encodes into it once every worker has dropped its
+        // handle. The iterate itself arrives as the shared snapshot +
+        // overlay, so the frame is never decoded into an O(d) packet. A
         // framing defect is a protocol failure: report it with round +
         // worker id through the update channel and exit, so the master
         // quarantines this worker instead of deadlocking on a gather that
         // will never complete.
-        let defect: Option<String> = match wire::decode_down_into(down_bytes, &mut down_pkt) {
+        let validated = wire::validate_down(down_bytes);
+        let defect: Option<String> = match &validated {
             Err(e) => Some(format!("malformed downlink frame: {e}")),
-            Ok(_) if down_pkt.dim() != d => Some(format!(
+            Ok(info) if info.dim != d as u32 => Some(format!(
                 "downlink frame dimension mismatch: frame carries {}, replica is {d}",
-                down_pkt.dim()
+                info.dim
             )),
-            Ok(DownKind::Resync) => {
-                if let Packet::Dense(vals) = &down_pkt {
-                    x.copy_from_slice(vals);
-                    // a resync re-establishes exact state on both ends:
-                    // nothing stale may be retried against it, so the EF
-                    // uplink accumulator flushes too (mirrored by
-                    // DcgdShift::set_x0)
-                    if let Some(u) = uplink.as_mut() {
-                        u.flush();
-                    }
-                    None
-                } else {
-                    Some("resync frame must be dense".into())
-                }
+            Ok(info) if info.kind == DownKind::Resync && !info.is_dense() => {
+                Some("resync frame must be dense".into())
             }
-            // exact and error-fed-back deltas apply identically; the EF
-            // residual is the master's business, not the worker's
-            Ok(DownKind::Delta | DownKind::EfDelta) => {
-                down_pkt.add_scaled_into(1.0, &mut x);
-                None
-            }
+            Ok(_) => None,
         };
         if let Some(detail) = defect {
             let _ = up_tx.send(WorkerUpdate {
@@ -599,8 +656,58 @@ fn worker_loop(
                     class: FailureClass::Protocol,
                     detail,
                 }),
+                needs_resync: false,
+                replica_bytes: 0,
+                overlay_nnz: 0,
             });
             break;
+        }
+        match validated.expect("defect handled above").kind {
+            DownKind::Resync => {
+                // a resync re-establishes exact state on both ends
+                // unconditionally (round 0, periodic drift checks, rejoin
+                // bootstraps): nothing stale may be retried against it, so
+                // the EF uplink accumulator flushes too (mirrored by
+                // DcgdShift::set_x0)
+                replica.install(gen, snap, patch);
+                if let Some(u) = uplink.as_mut() {
+                    u.flush();
+                }
+            }
+            // exact and error-fed-back deltas install identically; the EF
+            // residual already lives in the published overlay
+            DownKind::Delta | DownKind::EfDelta => {
+                if gen != replica.gen().wrapping_add(1) {
+                    // generation gap: this worker missed at least one
+                    // publication (straggled round, jammed queue), so its
+                    // retained base is stale. Computing against it would
+                    // silently corrupt the fold — decline and ask the
+                    // master for a resync bootstrap instead. The thread is
+                    // alive and well-behaved, so this is neither a failure
+                    // nor a deadline miss.
+                    drop(down);
+                    if up_tx
+                        .send(WorkerUpdate {
+                            worker: wi,
+                            k,
+                            frames,
+                            payload_bits: 0,
+                            refresh_bits: 0,
+                            wire_bytes: 0,
+                            compute_secs: 0.0,
+                            failure: None,
+                            needs_resync: true,
+                            replica_bytes: (x_loc.len() * 8) as u64,
+                            overlay_nnz: replica.overlay_nnz() as u64,
+                        })
+                        .is_err()
+                    {
+                        break; // master gone
+                    }
+                    continue;
+                }
+                replica.install(gen, snap, patch);
+            }
         }
         drop(down);
         // reclaim the optional buffers so this round can reuse them even if
@@ -624,7 +731,7 @@ fn worker_loop(
             // so the master can replay the identical aggregate from the
             // wire. DIANA learns `h += α·q_t` per sub-step, mirrored by
             // the master's sub-step-major fold.
-            x_loc.copy_from_slice(&x);
+            replica.materialize_into_buf(&mut x_loc);
             wire::begin_batch_frame(local_steps, &mut frames.q_frame);
             for _ in 0..local_steps {
                 problem.local_grad_into(wi, &x_loc, &mut grad);
@@ -668,6 +775,9 @@ fn worker_loop(
                     wire_bytes,
                     compute_secs: t0.elapsed().as_secs_f64(),
                     failure: None,
+                    needs_resync: false,
+                    replica_bytes: (x_loc.len() * 8) as u64,
+                    overlay_nnz: replica.overlay_nnz() as u64,
                 })
                 .is_err()
             {
@@ -676,7 +786,15 @@ fn worker_loop(
             continue;
         }
 
-        problem.local_grad_into(wi, &x, &mut grad);
+        // gradient at the logical replica: the exact downlink path borrows
+        // the shared snapshot directly (zero private bytes); the EF path
+        // materializes snapshot + overlay into the `diff` scratch, which
+        // is free here and is consumed (overwritten by `sub_into`) right
+        // after — the materialization is round-transient, not resident
+        {
+            let xh = replica.view(&mut diff);
+            problem.local_grad_into(wi, xh, &mut grad);
+        }
 
         // Every compressed packet is quantized to the wire precision at
         // the source, *before* it touches local state or the encoder:
@@ -778,6 +896,9 @@ fn worker_loop(
                 wire_bytes,
                 compute_secs: t0.elapsed().as_secs_f64(),
                 failure: None,
+                needs_resync: false,
+                replica_bytes: (x_loc.len() * 8) as u64,
+                overlay_nnz: replica.overlay_nnz() as u64,
             })
             .is_err()
         {
@@ -945,6 +1066,9 @@ impl DistributedRunner {
             ],
             delta: wire::DeltaScratch::with_capacity(d),
             dl,
+            publisher: SnapshotPublisher::new(d),
+            worker_replica_bytes: vec![0u64; n],
+            worker_overlay_nnz: vec![0u64; n],
             local_steps: cfg.local_steps,
             pipeline: cfg.pipeline,
             g_acc: if cfg.local_steps > 1 {
@@ -961,6 +1085,7 @@ impl DistributedRunner {
             n_active: n,
             misses: vec![0u32; n],
             rejoining: vec![false; n],
+            resync_flags: vec![false; n],
             last_failures: (0..n).map(|_| None).collect(),
             degraded_rounds: 0,
             round_timeout: Duration::from_millis(cfg.round_timeout_ms),
@@ -1056,15 +1181,19 @@ impl DistributedRunner {
     }
 
     /// Master-side health snapshot: per-worker participation state,
-    /// consecutive-miss counters and the degraded-round count — the
+    /// consecutive-miss counters, the degraded-round count — the
     /// observable surface of the quarantine machinery (see the module
-    /// doc).
+    /// doc) — plus the per-worker replica-memory gauges
+    /// (private-dense-replica bytes and overlay nnz, as each worker
+    /// reported them with its last update).
     pub fn health(&self) -> RunnerHealth {
         RunnerHealth {
             states: self.states.clone(),
             active_workers: self.n_active,
             degraded_rounds: self.degraded_rounds,
             consecutive_misses: self.misses.clone(),
+            replica_bytes: self.worker_replica_bytes.clone(),
+            overlay_nnz: self.worker_overlay_nnz.clone(),
         }
     }
 
@@ -1246,6 +1375,7 @@ impl DistributedRunner {
         for wi in 0..n {
             self.wire_bits[wi] = 0;
             self.compute[wi] = 0.0;
+            self.resync_flags[wi] = false;
         }
         // master-CPU accounting: the broadcast span is charged here, the
         // post-gather span inside finish_step — the gather wait between
@@ -1285,6 +1415,20 @@ impl DistributedRunner {
             self.dl.resync(&self.x);
         }
         let down_frame_bits = self.down_bufs[parity].len() as u64 * 8;
+        // publish this round's shared iterate: one copy of x^k into the
+        // double-buffered snapshot slot plus the EF overlay patch (−e^k on
+        // its support; empty on the exact path and right after a resync).
+        // Every worker reads the iterate through these two Arcs — the
+        // fleet holds one iterate, not n.
+        let (gen, snap, patch) = self.publisher.publish(&self.x, self.dl.overlay());
+        // rejoin bootstraps all share one dense resync frame, encoded once
+        // per round into the recycled downlink buffer (a per-arm encode
+        // would spike O(d) allocations on mass-rejoin rounds)
+        let rejoin_down = if self.rejoining.iter().any(|&r| r) {
+            Some(self.dl.rejoin_frame(&self.x))
+        } else {
+            None
+        };
         // broadcast to the active fleet only. `try_send` keeps the master
         // deadlock-free: a hung worker eventually fills its capacity-2
         // command queue, and a blocking send there would stall the fleet
@@ -1297,14 +1441,16 @@ impl DistributedRunner {
             }
             let recycled = std::mem::take(&mut self.frames_pool[wi]);
             let cmd = if self.rejoining[wi] {
-                // rejoin bootstrap: dense resync from the *current* iterate
-                // plus the master's replica of this worker's shift (the
-                // off-hot-path allocation is fine — rejoin is exceptional)
-                let mut b = Vec::with_capacity(d * 8 + 32);
-                wire::encode_down_dense(DownKind::Resync, &self.x, ValPrec::F64, &mut b);
+                // rejoin bootstrap: the shared dense resync frame from the
+                // *current* iterate plus the master's replica of this
+                // worker's shift (the off-hot-path `h` clone is fine —
+                // rejoin is exceptional)
                 WorkerCommand::Rejoin {
                     k: self.round,
-                    down: Arc::new(b),
+                    down: rejoin_down.as_ref().expect("built above").clone(),
+                    gen,
+                    snap: snap.clone(),
+                    patch: patch.clone(),
                     h: self.h[wi].clone(),
                     recycled,
                 }
@@ -1312,6 +1458,9 @@ impl DistributedRunner {
                 WorkerCommand::Round {
                     k: self.round,
                     down: self.down_bufs[parity].clone(),
+                    gen,
+                    snap: snap.clone(),
+                    patch: patch.clone(),
                     recycled,
                 }
             };
@@ -1364,6 +1513,21 @@ impl DistributedRunner {
                         self.frames_pool[wi] = upd.frames;
                         continue;
                     }
+                    self.worker_replica_bytes[wi] = upd.replica_bytes;
+                    self.worker_overlay_nnz[wi] = upd.overlay_nnz;
+                    if upd.needs_resync {
+                        // the worker detected a snapshot-generation gap and
+                        // declined to compute against the stale base:
+                        // reclaim the buffers and schedule the rejoin
+                        // bootstrap for the next round. The thread is alive
+                        // and well-behaved — the arrival counts toward the
+                        // gather and carries no miss penalty.
+                        self.frames_pool[wi] = upd.frames;
+                        self.rejoining[wi] = true;
+                        self.resync_flags[wi] = true;
+                        received += 1;
+                        continue;
+                    }
                     // each worker is charged its own measured compute when
                     // the round is priced (staged/pipelined models)
                     self.compute[wi] = upd.compute_secs;
@@ -1402,7 +1566,7 @@ impl DistributedRunner {
             if self.states[wi] != WorkerState::Active {
                 continue;
             }
-            if self.slots[wi].is_some() {
+            if self.slots[wi].is_some() || self.resync_flags[wi] {
                 self.misses[wi] = 0;
                 continue;
             }
@@ -1939,8 +2103,10 @@ impl DistributedRunner {
         let delta = wire::build_update_packet(g, -self.gamma, self.prec, &mut self.delta);
         delta.add_scaled_into(1.0, &mut self.x);
         // keep the replica mirror bit-equal to the workers: same packet,
-        // same operation
-        let bcast: &Packet = self.dl.fold_packet(delta, self.prec);
+        // same operation — on the EF path this also rebuilds the overlay
+        // (−e on its support) and re-materializes the mirror x̂ through
+        // the same kernel the workers use
+        let bcast: &Packet = self.dl.fold_packet(delta, &self.x, self.prec);
         // pre-encode next round's downlink into the buffer this round
         // retired (all round-k updates are in, so every worker has dropped
         // its handle from round k−1)
@@ -1984,6 +2150,14 @@ impl DistributedRunner {
             bits_down,
             bits_refresh,
             active_workers: reporters,
+            // fleet-resident iterate storage: the two shared publication
+            // slots (snapshot + overlay patch, independent of n) plus the
+            // private dense bytes the workers reported (the τ > 1 local
+            // iterate; 0 otherwise) — flat in the worker count on the
+            // exact downlink path
+            replica_bytes: self.publisher.snapshot_bytes()
+                + self.publisher.patch_bytes()
+                + self.worker_replica_bytes.iter().sum::<u64>(),
         }
     }
 }
@@ -2115,8 +2289,86 @@ impl DistributedRunner {
     }
 }
 
+/// Bare-worker harness for protocol-level tests: direct channel handles to
+/// a single worker thread plus command constructors for hand-crafted
+/// frames. Used by the in-file protocol-failure tests and by
+/// `rust/tests/shared_replica.rs` (generation-gap behaviour); not part of
+/// the public API surface.
+#[doc(hidden)]
+pub mod test_harness {
+    use super::*;
+    use crate::compressors::RandK;
+    use crate::coordinator::replica::OverlayPatch;
+    use crate::problems::Ridge;
+
+    /// Spawn a bare worker thread (fixed-shift method, exact uplink over
+    /// a small Ridge problem) with direct channel handles so tests can
+    /// feed it hand-crafted downlink commands. Returns
+    /// `(cmd_tx, up_rx, join_handle, dim)`.
+    pub fn spawn_bare_worker(
+        wi: usize,
+    ) -> (
+        SyncSender<WorkerCommand>,
+        Receiver<WorkerUpdate>,
+        JoinHandle<()>,
+        usize,
+    ) {
+        let p: Arc<dyn Problem> = Arc::new(Ridge::paper_default(9));
+        let d = p.dim();
+        let (cmd_tx, cmd_rx) = sync_channel(2);
+        let (up_tx, up_rx) = sync_channel(1);
+        let cfg = WorkerCfg {
+            wi,
+            method: MethodKind::Fixed,
+            prec: ValPrec::F64,
+            gamma: 0.1,
+            local_steps: 1,
+            uplink_ef: false,
+            script: WorkerFaultScript::default(),
+        };
+        let q: Box<dyn Compressor> = Box::new(RandK::with_q(d, 0.5));
+        let h = vec![0.0; d];
+        let rng = Pcg64::with_stream(1, wi as u64 + 1);
+        let handle =
+            std::thread::spawn(move || worker_loop(cfg, p, q, None, h, rng, cmd_rx, up_tx));
+        (cmd_tx, up_rx, handle, d)
+    }
+
+    /// A `Round` command carrying `frame` under an explicit snapshot
+    /// publication `(gen, snap, patch)`.
+    pub fn round_cmd_gen(
+        k: usize,
+        frame: Vec<u8>,
+        gen: u64,
+        snap: Arc<Vec<f64>>,
+        patch: Arc<OverlayPatch>,
+    ) -> WorkerCommand {
+        WorkerCommand::Round {
+            k,
+            down: Arc::new(frame),
+            gen,
+            snap,
+            patch,
+            recycled: FrameSet::default(),
+        }
+    }
+
+    /// A `Round` command for frame-defect tests: the worker must reject
+    /// `frame` before ever touching the (empty) snapshot publication.
+    pub fn round_cmd(k: usize, frame: Vec<u8>) -> WorkerCommand {
+        round_cmd_gen(
+            k,
+            frame,
+            1,
+            Arc::new(Vec::new()),
+            Arc::new(OverlayPatch::new()),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use super::test_harness::{round_cmd, spawn_bare_worker};
     use super::*;
     use crate::algorithms::RunOpts;
     use crate::compressors::RandK;
@@ -2174,45 +2426,6 @@ mod tests {
     }
 
     // -------------------------------------- protocol failures (fail fast)
-
-    /// Spawn a bare worker thread with direct channel handles so tests can
-    /// feed it hand-crafted (defective) downlink frames.
-    fn spawn_bare_worker(
-        wi: usize,
-    ) -> (
-        SyncSender<WorkerCommand>,
-        Receiver<WorkerUpdate>,
-        JoinHandle<()>,
-        usize,
-    ) {
-        let p: Arc<dyn Problem> = Arc::new(Ridge::paper_default(9));
-        let d = p.dim();
-        let (cmd_tx, cmd_rx) = sync_channel(2);
-        let (up_tx, up_rx) = sync_channel(1);
-        let cfg = WorkerCfg {
-            wi,
-            method: MethodKind::Fixed,
-            prec: ValPrec::F64,
-            gamma: 0.1,
-            local_steps: 1,
-            uplink_ef: false,
-            script: WorkerFaultScript::default(),
-        };
-        let q: Box<dyn Compressor> = Box::new(RandK::with_q(d, 0.5));
-        let h = vec![0.0; d];
-        let rng = Pcg64::with_stream(1, wi as u64 + 1);
-        let handle =
-            std::thread::spawn(move || worker_loop(cfg, p, q, None, h, rng, cmd_rx, up_tx));
-        (cmd_tx, up_rx, handle, d)
-    }
-
-    fn round_cmd(k: usize, frame: Vec<u8>) -> WorkerCommand {
-        WorkerCommand::Round {
-            k,
-            down: Arc::new(frame),
-            recycled: FrameSet::default(),
-        }
-    }
 
     /// A garbage downlink frame must produce a structured failure carrying
     /// the round and worker id — and a clean thread exit, not a panic that

@@ -20,19 +20,32 @@
 //! 2. compresses it with a contractive compressor: `c^k = C(u^k)`
 //!    (quantized to the wire precision so the encode → decode round-trip
 //!    is lossless),
-//! 3. broadcasts `c^k` as a [`crate::wire::DownKind::EfDelta`] frame —
-//!    every worker applies it to its replica with
-//!    `add_scaled_into(1.0, &mut x)`, exactly like a `Delta` frame,
+//! 3. broadcasts `c^k` as a [`crate::wire::DownKind::EfDelta`] frame (the
+//!    measured wire cost of the round; workers validate it with
+//!    [`wire::validate_down`]), and
 //! 4. keeps the residual for the next round: `e^{k+1} = u^k − c^k`.
+//!
+//! # Replicas: shared snapshot + sparse overlay
+//!
+//! Workers do **not** replay the frame stream into private dense
+//! replicas. The logical replica is represented as the fleet-shared
+//! iterate snapshot plus a sparse overlay patch
+//! ([`crate::coordinator::replica`]): after each fold this state rebuilds
+//! the patch as `−e` on the error accumulator's nonzero support, so
+//! `snapshot + patch` *is* the replica `x_master − e` — one O(d) snapshot
+//! and O(nnz e) of patch for the whole fleet, instead of n dense copies.
 //!
 //! The **EF invariant** is `x_replica + e = x_master`: everything the
 //! compressor has dropped so far is exactly what the replicas are still
-//! missing. It holds to fp rounding between resyncs and bit-exactly right
-//! after one (a resync overwrites the replicas with `x_master` and
-//! [`EfDownlink::flush`]es `e` to zero). For a contractive `C ∈ B(δ)` the
-//! residual contracts — `‖e^{k+1}‖² ≤ (1 − δ)‖e^k + Δ^k‖²` — so the
-//! replica drift stays proportional to the recent step sizes and vanishes
-//! as the method converges.
+//! missing. Under the overlay representation it holds by construction on
+//! the accumulator's support (to one fp rounding per coordinate) and
+//! bit-exactly off it; a resync [`EfDownlink::flush`]es `e` to zero and
+//! empties the patch, collapsing the replica onto the snapshot exactly.
+//! For a contractive `C ∈ B(δ)` the residual contracts —
+//! `‖e^{k+1}‖² ≤ (1 − δ)‖e^k + Δ^k‖²` — so the replica drift stays
+//! proportional to the recent step sizes and vanishes as the method
+//! converges; the overlay's nnz is bounded by the compressor's residual
+//! support (Top-K zeroes the k kept coordinates exactly).
 //!
 //! With `C = Identity` the compressor drops nothing: `c^k = Δ^k`, `e`
 //! stays exactly zero, and the broadcast — re-packed through
@@ -52,7 +65,10 @@
 //! [`crate::ef::EfUplink`] that applies the same construction to the
 //! uplink.
 
+use std::sync::Arc;
+
 use crate::compressors::{Compressor, Packet, ValPrec};
+use crate::coordinator::replica::{materialize_into, OverlayPatch};
 use crate::ef::EfCore;
 use crate::util::rng::Pcg64;
 use crate::wire;
@@ -141,8 +157,9 @@ impl EfDownlink {
 
 /// Broadcast-side state shared by every driver: measured delta-frame
 /// accounting (round-0 dense resync, then one update frame per round) and
-/// the optional error-fed-back compressed downlink with its shared worker
-/// replica. This is the single copy of the glue the threaded coordinator
+/// the optional error-fed-back compressed downlink with its sparse
+/// replica overlay and materialized mirror view. This is the single copy
+/// of the glue the threaded coordinator
 /// and the single-process drivers ([`crate::algorithms::DcgdShift`],
 /// [`crate::algorithms::Gdci`], [`crate::algorithms::VrGdci`]) all reuse,
 /// so `bits_down` means the same thing across the library and the EF fold
@@ -160,8 +177,19 @@ impl EfDownlink {
 ///   stays in the accumulator.
 pub struct DownlinkState {
     ef: Option<EfDownlink>,
-    /// shared worker replica x̂ (EF path only; empty when exact)
-    x_rep: Vec<f64>,
+    /// sparse overlay `−e` on the error accumulator's support: what the
+    /// logical replicas differ from the snapshot by (empty when exact)
+    overlay: OverlayPatch,
+    /// materialized logical replica `snapshot + overlay` (EF path only;
+    /// empty when exact) — the mirror view [`Self::x_eval`] hands the
+    /// single-process drivers, rebuilt through the *same*
+    /// [`materialize_into`] kernel the worker threads use so both sides
+    /// see identical bits
+    x_hat: Vec<f64>,
+    /// recycled dense resync frame for `Rejoin` arms: built once per
+    /// rejoin round and shared (via `Arc`) by every rejoining worker
+    /// instead of a fresh O(d) frame per arm
+    rejoin_buf: Arc<Vec<u8>>,
     /// dedicated RNG stream for the downlink compressor
     dl_rng: Pcg64,
     /// x^k snapshot the broadcast delta is built against — allocated only
@@ -187,7 +215,9 @@ impl DownlinkState {
     pub fn new(x0: &[f64], dl_rng: Pcg64) -> Self {
         Self {
             ef: None,
-            x_rep: Vec::new(),
+            overlay: OverlayPatch::new(),
+            x_hat: Vec::new(),
+            rejoin_buf: Arc::new(Vec::new()),
             dl_rng,
             x_prev: Vec::new(),
             diff: Vec::new(),
@@ -209,10 +239,12 @@ impl DownlinkState {
         self.delta = wire::DeltaScratch::with_capacity(d);
     }
 
-    /// Arm the error-fed-back compressed broadcast; the replica boots from
-    /// the current iterate (what the next dense resync would carry).
+    /// Arm the error-fed-back compressed broadcast; the overlay starts
+    /// empty and the mirror view boots from the current iterate (what the
+    /// next dense resync would carry).
     pub fn arm(&mut self, comp: Box<dyn Compressor>, x: &[f64]) {
-        self.x_rep = x.to_vec();
+        self.overlay.clear();
+        materialize_into(x, &self.overlay, &mut self.x_hat);
         self.ef = Some(EfDownlink::new(comp, x.len(), self.dl_rng.clone()));
         self.next_down_bits = wire::resync_frame_bits(x.len());
     }
@@ -222,19 +254,37 @@ impl DownlinkState {
         self.ef.is_some()
     }
 
-    /// The iterate the workers actually hold this round.
+    /// The iterate the workers actually hold this round: the materialized
+    /// `snapshot + overlay` view when the EF broadcast is armed, the
+    /// master iterate itself when exact (replicas are then bit-equal to
+    /// it by construction).
     pub fn x_eval<'a>(&'a self, x: &'a [f64]) -> &'a [f64] {
         if self.ef.is_some() {
-            &self.x_rep
+            &self.x_hat
         } else {
             x
         }
     }
 
-    /// The shared worker replica x̂ (`None` on the exact path, where the
-    /// replicas are bit-equal to the master iterate by construction).
+    /// The sparse overlay patch the logical replicas carry on top of the
+    /// published snapshot (empty on the exact path). The threaded runner
+    /// publishes exactly this patch alongside each snapshot.
+    pub fn overlay(&self) -> &OverlayPatch {
+        &self.overlay
+    }
+
+    /// The logical worker replica x̂ = snapshot + overlay, materialized
+    /// (`None` on the exact path, where the replicas are bit-equal to the
+    /// master iterate by construction).
     pub fn replica(&self) -> Option<&[f64]> {
-        self.ef.as_ref().map(|_| self.x_rep.as_slice())
+        self.ef.as_ref().map(|_| self.x_hat.as_slice())
+    }
+
+    /// Resident bytes of the mirror-side replica state: the materialized
+    /// view plus the overlay payload (0 when exact — the mirror borrows
+    /// the master iterate).
+    pub fn replica_footprint(&self) -> u64 {
+        (self.x_hat.len() * 8) as u64 + self.overlay.bytes()
     }
 
     /// The EF error accumulator `x_master − x_replica` (`None` when exact).
@@ -243,15 +293,18 @@ impl DownlinkState {
     }
 
     /// EF-fold a pre-quantized delta packet (the exact step the master
-    /// just applied to its own iterate) and apply the compressed broadcast
-    /// to the replica mirror with the same op the workers use; returns the
-    /// packet to broadcast (`delta` itself on the exact path).
-    pub fn fold_packet<'a>(&'a mut self, delta: &'a Packet, prec: ValPrec) -> &'a Packet {
+    /// just applied to its own iterate), rebuild the overlay from the new
+    /// residual, and re-materialize the mirror view `x_new + overlay`
+    /// with the same kernel the workers use; returns the packet to
+    /// broadcast (`delta` itself on the exact path). `x_new` is the
+    /// master iterate *after* the step `delta` was applied.
+    pub fn fold_packet<'a>(&'a mut self, delta: &'a Packet, x_new: &[f64], prec: ValPrec) -> &'a Packet {
         match &mut self.ef {
             Some(ef) => {
-                let c = ef.fold_and_compress(delta, prec);
-                c.add_scaled_into(1.0, &mut self.x_rep);
-                c
+                ef.fold_and_compress(delta, prec);
+                self.overlay.rebuild_from_error(ef.error());
+                materialize_into(x_new, &self.overlay, &mut self.x_hat);
+                ef.packet()
             }
             None => delta,
         }
@@ -261,9 +314,15 @@ impl DownlinkState {
     /// through a pre-quantized delta packet (the DCGD-SHIFT family):
     /// returns this round's `bits_down` across `n` workers and builds the
     /// next frame from `delta` via [`fold_packet`](Self::fold_packet).
-    pub fn finish_round_packet(&mut self, delta: &Packet, n: usize, prec: ValPrec) -> u64 {
+    pub fn finish_round_packet(
+        &mut self,
+        delta: &Packet,
+        x_new: &[f64],
+        n: usize,
+        prec: ValPrec,
+    ) -> u64 {
         let bits_down = n as u64 * self.next_down_bits;
-        let next = wire::down_frame_bits(self.fold_packet(delta, prec), prec);
+        let next = wire::down_frame_bits(self.fold_packet(delta, x_new, prec), prec);
         self.next_down_bits = next;
         bits_down
     }
@@ -286,9 +345,10 @@ impl DownlinkState {
         }
         self.next_down_bits = match &mut self.ef {
             Some(ef) => {
-                let c = ef.fold_slice_and_compress(&self.diff, prec);
-                c.add_scaled_into(1.0, &mut self.x_rep);
-                wire::down_frame_bits(c, prec)
+                ef.fold_slice_and_compress(&self.diff, prec);
+                self.overlay.rebuild_from_error(ef.error());
+                materialize_into(x_new, &self.overlay, &mut self.x_hat);
+                wire::down_frame_bits(ef.packet(), prec)
             }
             None => {
                 let delta = wire::build_update_packet(&self.diff, 1.0, prec, &mut self.delta);
@@ -300,9 +360,10 @@ impl DownlinkState {
     }
 
     /// Out-of-band iterate change (or a scheduled dense broadcast): the
-    /// next frame is a dense resync, which flushes the EF accumulator and
-    /// overwrites the replica mirror with `x` (and the delta-tracking
-    /// baseline, when armed).
+    /// next frame is a dense resync, which flushes the EF accumulator,
+    /// truncates the overlay to empty, and collapses the replica mirror
+    /// onto `x` exactly (and resets the delta-tracking baseline, when
+    /// armed).
     pub fn resync(&mut self, x: &[f64]) {
         self.next_down_bits = wire::resync_frame_bits(x.len());
         if !self.x_prev.is_empty() {
@@ -310,8 +371,29 @@ impl DownlinkState {
         }
         if let Some(ef) = &mut self.ef {
             ef.flush();
-            self.x_rep.copy_from_slice(x);
+            self.overlay.clear();
+            materialize_into(x, &self.overlay, &mut self.x_hat);
         }
+    }
+
+    /// The dense resync frame a `Rejoin` command carries, built once into
+    /// a recycled buffer and shared by every rejoin arm of the round (the
+    /// old protocol materialized a fresh O(d) frame *per arm* — the
+    /// resync-frame memory spike). The buffer is reused in place via
+    /// [`Arc::get_mut`] whenever no worker still pins the previous rejoin
+    /// frame; a pinned buffer costs one fallback allocation.
+    pub fn rejoin_frame(&mut self, x: &[f64]) -> Arc<Vec<u8>> {
+        match Arc::get_mut(&mut self.rejoin_buf) {
+            Some(buf) => {
+                wire::encode_down_dense(wire::DownKind::Resync, x, ValPrec::F64, buf);
+            }
+            None => {
+                let mut buf = Vec::with_capacity(x.len() * 8 + 32);
+                wire::encode_down_dense(wire::DownKind::Resync, x, ValPrec::F64, &mut buf);
+                self.rejoin_buf = Arc::new(buf);
+            }
+        }
+        self.rejoin_buf.clone()
     }
 }
 

@@ -183,6 +183,11 @@ pub struct JsonScenario {
     /// parallel-fold win across PRs — scenarios record one row per
     /// fold-pool width T)
     pub master_secs: Option<f64>,
+    /// resident fleet replica memory in bytes (`StepStats::replica_bytes`:
+    /// the shared snapshot slots + published overlay + any per-worker
+    /// private iterates), when the scenario tracks the shared
+    /// copy-on-write replica's O(d) guarantee across fleet sizes
+    pub replica_bytes: Option<f64>,
 }
 
 impl JsonScenario {
@@ -195,6 +200,7 @@ impl JsonScenario {
             up_bytes_per_round: None,
             sim_time_sec: None,
             master_secs: None,
+            replica_bytes: None,
         }
     }
 
@@ -219,6 +225,12 @@ impl JsonScenario {
     /// Attach the measured master-CPU seconds per round.
     pub fn with_master_secs(mut self, master_secs: f64) -> Self {
         self.master_secs = Some(master_secs);
+        self
+    }
+
+    /// Attach the resident fleet replica memory in bytes.
+    pub fn with_replica_bytes(mut self, replica_bytes: f64) -> Self {
+        self.replica_bytes = Some(replica_bytes);
         self
     }
 }
@@ -253,6 +265,9 @@ pub fn write_bench_json(path: &str, rows: &[JsonScenario]) -> std::io::Result<()
         }
         if let Some(t) = r.master_secs {
             fields.push(("master_secs", Json::num(t)));
+        }
+        if let Some(b) = r.replica_bytes {
+            fields.push(("replica_bytes", Json::num(b)));
         }
         merged.insert(r.scenario.clone(), Json::obj(fields));
     }
@@ -319,7 +334,8 @@ mod tests {
                 JsonScenario::new("b", 1.5, None)
                     .with_down_bytes(512.0)
                     .with_sim_time(42.5)
-                    .with_master_secs(0.125),
+                    .with_master_secs(0.125)
+                    .with_replica_bytes(3.2e6),
             ],
         )
         .unwrap();
@@ -333,6 +349,8 @@ mod tests {
         assert_eq!(j.get("b").get("sim_time_sec").as_f64(), Some(42.5));
         assert_eq!(j.get("b").get("master_secs").as_f64(), Some(0.125));
         assert!(j.get("a").get("master_secs").is_null());
+        assert_eq!(j.get("b").get("replica_bytes").as_f64(), Some(3.2e6));
+        assert!(j.get("a").get("replica_bytes").is_null());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

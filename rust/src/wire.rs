@@ -978,6 +978,175 @@ fn decode_packet(r: &mut BitReader, out: &mut Packet) -> Result<(), WireError> {
     }
 }
 
+// ------------------------------------------------ walk-only frame validation
+
+/// Summary of a validated downlink frame (see [`validate_down`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DownFrameInfo {
+    /// Which downlink frame kind the kind byte announced.
+    pub kind: DownKind,
+    /// The inner packet-frame tag (`TAG_DENSE`, `TAG_SPARSE`, ...).
+    pub tag: u8,
+    /// The dimension carried by the inner packet header.
+    pub dim: u32,
+}
+
+impl DownFrameInfo {
+    /// True when the inner packet is a dense frame (the only shape a
+    /// resync broadcast may carry).
+    pub fn is_dense(&self) -> bool {
+        self.tag == TAG_DENSE
+    }
+}
+
+/// Walk a downlink frame end to end, enforcing exactly the structural
+/// checks of [`decode_down_into`] without materializing the packet.
+///
+/// Workers use this on the shared broadcast buffer: under the
+/// snapshot/overlay replica model ([`crate::coordinator::replica`]) they no
+/// longer replay downlink deltas into a private dense replica, but a
+/// corrupted or wrong-dimension frame must still surface as the same
+/// structured failure it always did (the fault-injection and chaos suites
+/// pin those strings). Keeping the walk allocation-free also means a dense
+/// resync frame no longer costs every worker an O(d) decode buffer.
+pub fn validate_down(bytes: &[u8]) -> Result<DownFrameInfo, WireError> {
+    let mut r = BitReader::new(bytes);
+    let kind = match r.read_u8()? {
+        DOWN_DELTA => DownKind::Delta,
+        DOWN_RESYNC => DownKind::Resync,
+        DOWN_EF_DELTA => DownKind::EfDelta,
+        t => return Err(WireError::BadTag(t)),
+    };
+    let (tag, dim) = validate_packet(&mut r)?;
+    Ok(DownFrameInfo { kind, tag, dim })
+}
+
+/// Read-and-discard walk of one packet frame, mirroring
+/// [`decode_packet`]'s per-tag strictness (the same rejects for bad
+/// tags/precisions, truncation, out-of-range indices/levels, and ternary
+/// nnz mismatches) while touching no allocator. Returns the frame's
+/// `(tag, dim)` header.
+fn validate_packet(r: &mut BitReader) -> Result<(u8, u32), WireError> {
+    let tag = r.read_u8()?;
+    let prec = match r.read_u8()? {
+        0 => ValPrec::F32,
+        1 => ValPrec::F64,
+        p => return Err(WireError::BadPrec(p)),
+    };
+    let dim = r.read_u32()?;
+    match tag {
+        TAG_DENSE => {
+            let vb = prec.bits();
+            if dim as u64 * vb > r.avail_bits() {
+                return Err(WireError::Truncated {
+                    needed: r.byte_pos + (dim as u64 * vb / 8) as usize,
+                    have: r.buf.len(),
+                });
+            }
+            for _ in 0..dim {
+                r.read_val(prec)?;
+            }
+        }
+        TAG_SPARSE => {
+            let k = r.read_u32()?;
+            if k > dim {
+                return Err(WireError::Malformed(format!("k={k} > dim={dim}")));
+            }
+            r.read_val(prec)?;
+            let ib = index_bits(dim);
+            for _ in 0..k {
+                let idx = r.read_bits(ib)? as u32;
+                if idx >= dim {
+                    return Err(WireError::Malformed(format!("index {idx} ≥ dim {dim}")));
+                }
+            }
+            r.align();
+            for _ in 0..k {
+                r.read_val(prec)?;
+            }
+        }
+        TAG_LEVELS => {
+            let s_v = r.read_u8()?;
+            r.read_val(prec)?;
+            skip_signs(r, dim as usize)?;
+            r.align();
+            let lb = bits_for_levels(s_v);
+            for _ in 0..dim {
+                let l = r.read_bits(lb)? as u8;
+                if l > s_v {
+                    return Err(WireError::Malformed(format!("level {l} > s {s_v}")));
+                }
+            }
+        }
+        TAG_LEVELS_LINEAR => {
+            let s_v = r.read_u32()?;
+            if s_v == u32::MAX {
+                return Err(WireError::Malformed(format!(
+                    "levels-linear s={s_v} out of range"
+                )));
+            }
+            r.read_val(prec)?;
+            skip_signs(r, dim as usize)?;
+            r.align();
+            let n = s_v + 1;
+            let lb = if n <= 1 {
+                1
+            } else {
+                (32 - (n - 1).leading_zeros()) as u64
+            };
+            for _ in 0..dim {
+                let l = r.read_bits(lb)?;
+                if l > s_v as u64 || l > u8::MAX as u64 {
+                    return Err(WireError::Malformed(format!("level {l} > s {s_v}")));
+                }
+            }
+        }
+        TAG_NATEXP => {
+            skip_signs(r, dim as usize)?;
+            r.align();
+            for _ in 0..dim {
+                r.read_bits(8)?;
+            }
+        }
+        TAG_SIGNSCALE => {
+            r.read_val(prec)?;
+            skip_signs(r, dim as usize)?;
+        }
+        TAG_TERNARY => {
+            r.read_val(prec)?;
+            let mask_nnz = skip_signs(r, dim as usize)?;
+            r.align();
+            let nnz = r.read_u32()? as usize;
+            if nnz != mask_nnz {
+                return Err(WireError::Malformed("ternary nnz mismatch".into()));
+            }
+            skip_signs(r, nnz)?;
+        }
+        TAG_ZERO => {}
+        t => return Err(WireError::BadTag(t)),
+    }
+    Ok((tag, dim))
+}
+
+/// Discard `n` sign bits with [`read_signs_into`]'s exact bounds behavior,
+/// returning the number of set bits (the ternary mask popcount).
+fn skip_signs(r: &mut BitReader, n: usize) -> Result<usize, WireError> {
+    if n as u64 > r.avail_bits() {
+        return Err(WireError::Truncated {
+            needed: r.byte_pos + (n + 7) / 8,
+            have: r.buf.len(),
+        });
+    }
+    let mut set = 0usize;
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(64);
+        set += r.read_bits(take as u64)?.count_ones() as usize;
+        left -= take;
+    }
+    Ok(set)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1043,6 +1212,55 @@ mod tests {
             signs: vec![true, false, true],
         });
         roundtrip(Packet::Zero { dim: 100 });
+    }
+
+    /// The walk-only downlink validator must agree with the materializing
+    /// decoder on every frame: same accept set, same reject set — it is
+    /// the worker-side guard now that workers no longer decode-apply.
+    #[test]
+    fn validate_down_agrees_with_decode_down() {
+        let pkts = vec![
+            Packet::Dense(vec![1.5, -2.25, 0.0, 1e-3]),
+            Packet::Sparse {
+                dim: 80,
+                indices: vec![0, 7, 79],
+                values: vec![1.0, -0.5, 3.25],
+                scale: 10.0,
+            },
+            Packet::TernaryPkt {
+                dim: 6,
+                scale: 1.0,
+                mask: vec![true, false, true, false, false, true],
+                signs: vec![true, false, true],
+            },
+            Packet::Zero { dim: 100 },
+        ];
+        for pkt in &pkts {
+            for kind in [DownKind::Delta, DownKind::Resync, DownKind::EfDelta] {
+                let mut bytes = Vec::new();
+                encode_down_into(kind, pkt, ValPrec::F64, &mut bytes);
+                let info = validate_down(&bytes).expect("valid frame must validate");
+                assert_eq!(info.kind, kind);
+                assert_eq!(info.dim, pkt.dim());
+                let mut out = Packet::Zero { dim: 0 };
+                assert_eq!(decode_down_into(&bytes, &mut out).unwrap(), kind);
+                // truncation rejects in both
+                for cut in [1usize, bytes.len() / 2, bytes.len().saturating_sub(1)] {
+                    if cut < bytes.len() {
+                        assert!(validate_down(&bytes[..cut]).is_err(), "cut at {cut}");
+                        assert!(decode_down_into(&bytes[..cut], &mut out).is_err());
+                    }
+                }
+            }
+        }
+        // a bad kind byte and a bad inner tag reject identically
+        let mut bytes = Vec::new();
+        encode_down_into(DownKind::Delta, &pkts[0], ValPrec::F64, &mut bytes);
+        bytes[0] = 0x7f;
+        assert!(validate_down(&bytes).is_err());
+        bytes[0] = DOWN_DELTA;
+        bytes[1] = 0x6e;
+        assert!(validate_down(&bytes).is_err());
     }
 
     /// The word-at-a-time packer must agree, bit for bit, with a naive

@@ -427,6 +427,131 @@ fn distributed_degraded_round_is_allocation_light() {
     );
 }
 
+/// Periodic dense resyncs recycle everything they touch: the broadcast
+/// frame buffer (re-ratcheted to the dense frame during warm-up), the
+/// EF-downlink accumulator flush, the overlay clear and the snapshot
+/// publication. A schedule interleaving EF delta rounds with resync
+/// rounds must stay within the same allocation-light bound, independent
+/// of the dimension.
+#[test]
+fn distributed_resync_rounds_stay_allocation_light() {
+    let _guard = TEST_LOCK.lock().unwrap();
+    let rounds = 9u64; // resync_every = 3 ⇒ three dense resync rounds
+    let mut counts = Vec::new();
+    for &d in &[1024usize, 8192] {
+        let n = 4;
+        let p = Arc::new(MeanProblem::new(d, n, 21));
+        let omega = RandK::with_q(d, 0.01).omega().expect("rand-k is unbiased");
+        let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+        let qs: Vec<Box<dyn Compressor>> = (0..n)
+            .map(|_| Box::new(RandK::with_q(d, 0.01)) as Box<dyn Compressor>)
+            .collect();
+        let mut runner = DistributedRunner::new(
+            p.clone(),
+            qs,
+            None,
+            vec![vec![0.0; d]; n],
+            ClusterConfig {
+                method: MethodKind::Diana {
+                    alpha: ss.alpha,
+                    with_c: false,
+                },
+                gamma: ss.gamma,
+                prec: ValPrec::F64,
+                seed: 21,
+                resync_every: 3,
+                downlink: Some(Box::new(shiftcomp::compressors::TopK::with_q(d, 0.01))),
+                ..Default::default()
+            },
+        );
+        // warm-up spans two full resync periods: the dense-frame buffer
+        // capacity, the overlay's full-dimension reserve and the publisher
+        // patch slots all reach their working size here
+        for _ in 0..6 {
+            runner.step(p.as_ref());
+        }
+        let allocs = thread_allocs(|| {
+            for _ in 0..rounds {
+                runner.step(p.as_ref());
+            }
+        });
+        counts.push(allocs);
+        assert!(
+            allocs <= rounds * 2,
+            "resync-interleaved master rounds allocated {allocs} times in {rounds} rounds (d={d})"
+        );
+    }
+    assert_eq!(
+        counts[0], counts[1],
+        "resync allocations must not scale with dimension: {counts:?}"
+    );
+}
+
+/// The rejoin bootstrap frame is encoded once per round into a buffer
+/// recycled inside the downlink state, and every rejoining worker gets the
+/// same `Arc` — so a second quarantine → readmission cycle reuses the
+/// buffer the first one grew. The measured second rejoin round is bounded
+/// by a small constant (the shift-bootstrap clone plus the publisher's
+/// pinned-slot fallback), with an allocation count independent of the
+/// dimension: an O(d)-count rebuild of the dense frame would scale.
+#[test]
+fn rejoin_round_reuses_the_recycled_bootstrap_frame() {
+    let _guard = TEST_LOCK.lock().unwrap();
+    let mut counts = Vec::new();
+    for &d in &[1024usize, 8192] {
+        let n = 4;
+        let p = Arc::new(MeanProblem::new(d, n, 23));
+        let omega = RandK::with_q(d, 0.01).omega().expect("rand-k is unbiased");
+        let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+        let qs: Vec<Box<dyn Compressor>> = (0..n)
+            .map(|_| Box::new(RandK::with_q(d, 0.01)) as Box<dyn Compressor>)
+            .collect();
+        let mut runner = DistributedRunner::new(
+            p.clone(),
+            qs,
+            None,
+            vec![vec![0.0; d]; n],
+            ClusterConfig {
+                method: MethodKind::Diana {
+                    alpha: ss.alpha,
+                    with_c: false,
+                },
+                gamma: ss.gamma,
+                prec: ValPrec::F64,
+                seed: 23,
+                faults: Some(FaultPlan::new().straggle(3, 2, 1).straggle(3, 6, 1)),
+                round_timeout_ms: 200,
+                quarantine_after: 1,
+                ..Default::default()
+            },
+        );
+        // first quarantine → rejoin cycle is the warm-up: it grows the
+        // bootstrap frame buffer and every other recycled buffer
+        for _ in 0..4 {
+            runner.step(p.as_ref()); // rounds 0..3; quarantined at round 2
+        }
+        assert_eq!(runner.health().states[3], WorkerState::Quarantined);
+        runner.rejoin(3).expect("worker thread is alive");
+        for _ in 0..3 {
+            runner.step(p.as_ref()); // rejoin round + 2 more; re-quarantined at round 6
+        }
+        assert_eq!(runner.health().states[3], WorkerState::Quarantined);
+        runner.rejoin(3).expect("worker thread is alive");
+        let allocs = thread_allocs(|| {
+            runner.step(p.as_ref());
+        });
+        counts.push(allocs);
+        assert!(
+            allocs <= 8,
+            "second rejoin round allocated {allocs} times (d={d})"
+        );
+    }
+    assert_eq!(
+        counts[0], counts[1],
+        "rejoin allocations must not scale with dimension: {counts:?}"
+    );
+}
+
 /// Rand-DIANA with p = 1 refreshes every round, driving the sparse
 /// shift-refresh delta and the downlink delta builder through their
 /// maximum support during warm-up — after which rounds must stay

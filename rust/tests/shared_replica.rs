@@ -1,0 +1,277 @@
+//! The shared copy-on-write iterate, observed from outside: workers hold
+//! no private dense replica (the fleet reads one published Arc snapshot),
+//! per-worker divergence travels as a sparse overlay bounded by the EF
+//! compressor's residual support, a missed snapshot rotation triggers a
+//! clean resync request instead of a silently-corrupt fold, and a
+//! quarantined worker readmitted through the rejoin bootstrap reconstructs
+//! the logical replica bit-for-bit (checked over the wire via `Inspect`).
+
+use std::sync::Arc;
+
+use shiftcomp::algorithms::Algorithm;
+use shiftcomp::compressors::{Compressor, Packet, RandK, TopK, ValPrec};
+use shiftcomp::coordinator::runner::test_harness::{round_cmd_gen, spawn_bare_worker};
+use shiftcomp::coordinator::{
+    ClusterConfig, DistributedRunner, FaultPlan, MethodKind, OverlayPatch, WorkerState,
+};
+use shiftcomp::problems::{Problem, Ridge};
+use shiftcomp::wire::{self, DownKind};
+
+/// Generous gather deadline (see `tests/chaos.rs`): only injected faults
+/// can hit it on these microsecond-scale rounds.
+const TEST_TIMEOUT_MS: u64 = 1_000;
+
+fn ridge() -> Arc<Ridge> {
+    Arc::new(Ridge::paper_default(3))
+}
+
+fn diana_cluster(
+    p: &Arc<Ridge>,
+    q: f64,
+    seed: u64,
+    local_steps: usize,
+    downlink: Option<Box<dyn Compressor>>,
+    faults: Option<FaultPlan>,
+) -> DistributedRunner {
+    let d = p.dim();
+    let n = p.n_workers();
+    let omega = RandK::with_q(d, q).omega().unwrap();
+    let ss = shiftcomp::theory::diana(p.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(RandK::with_q(d, q)) as Box<dyn Compressor>)
+        .collect();
+    DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::Diana {
+                alpha: ss.alpha,
+                with_c: false,
+            },
+            gamma: ss.gamma,
+            prec: ValPrec::F64,
+            seed,
+            local_steps,
+            downlink,
+            faults,
+            round_timeout_ms: TEST_TIMEOUT_MS,
+            quarantine_after: 1,
+            ..Default::default()
+        },
+    )
+}
+
+/// Exact downlink path: every worker computes against the shared snapshot
+/// itself. The overlay stays empty every round, no worker reports any
+/// private dense iterate bytes, and the fleet-wide `replica_bytes` stat is
+/// exactly the publisher's two snapshot slots — independent of both the
+/// round and (structurally) the fleet size.
+#[test]
+fn exact_path_keeps_overlays_empty_and_workers_replica_free() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let mut dist = diana_cluster(&p, 0.4, 101, 1, None, None);
+    for k in 0..25 {
+        let s = dist.step(p.as_ref());
+        let health = dist.health();
+        assert_eq!(health.overlay_nnz, vec![0u64; n], "round {k}: exact-path overlay");
+        assert_eq!(
+            health.replica_bytes,
+            vec![0u64; n],
+            "round {k}: workers must hold no private dense replica"
+        );
+        assert_eq!(
+            s.replica_bytes,
+            2 * d as u64 * 8,
+            "round {k}: fleet replica memory must be the two shared snapshot slots"
+        );
+    }
+}
+
+/// `local_steps > 1` is the one legitimate private dense iterate (the τ
+/// sub-steps mutate it in place, so it cannot borrow the shared
+/// snapshot): every worker reports exactly `d * 8` bytes, and the fleet
+/// stat is the two shared slots plus the n local iterates.
+#[test]
+fn batched_rounds_report_the_local_iterate_and_nothing_more() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let mut dist = diana_cluster(&p, 0.3, 103, 4, None, None);
+    for _ in 0..10 {
+        dist.step(p.as_ref());
+    }
+    let health = dist.health();
+    assert_eq!(health.replica_bytes, vec![d as u64 * 8; n]);
+    assert_eq!(health.overlay_nnz, vec![0u64; n]);
+    let s = dist.step(p.as_ref());
+    assert_eq!(s.replica_bytes, (2 + n as u64) * d as u64 * 8);
+}
+
+/// EF downlink: the only per-replica state beyond the shared snapshot is
+/// the overlay, and its support is bounded by the Top-K residual — the K
+/// broadcast coordinates cancel exactly in the error accumulator, so at
+/// most `d − K` entries survive. All workers share one publication, so
+/// the gauges agree across the fleet.
+#[test]
+fn ef_downlink_overlay_nnz_bounded_by_residual_support() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let keep = 16usize;
+    let mut dist = diana_cluster(
+        &p,
+        0.4,
+        107,
+        1,
+        Some(Box::new(TopK::new(d, keep))),
+        None,
+    );
+    let mut saw_nonzero = false;
+    for k in 0..30 {
+        dist.step(p.as_ref());
+        let health = dist.health();
+        for wi in 0..n {
+            assert!(
+                health.overlay_nnz[wi] <= (d - keep) as u64,
+                "round {k} worker {wi}: overlay nnz {} above the residual bound {}",
+                health.overlay_nnz[wi],
+                d - keep
+            );
+            assert_eq!(
+                health.overlay_nnz[wi], health.overlay_nnz[0],
+                "round {k}: all workers install the same publication"
+            );
+            assert_eq!(health.replica_bytes[wi], 0, "round {k} worker {wi}");
+        }
+        saw_nonzero |= health.overlay_nnz[0] > 0;
+    }
+    assert!(
+        saw_nonzero,
+        "a K={keep} Top-K downlink must leave a nonzero residual overlay at some round"
+    );
+}
+
+/// A worker that missed a snapshot rotation (generation gap) must decline
+/// the round with a resync request — no compute, no failure, thread alive
+/// — and resume normally once a contiguous generation arrives.
+#[test]
+fn generation_gap_triggers_clean_resync_request() {
+    let (cmd_tx, up_rx, handle, d) = spawn_bare_worker(0);
+    let x0 = vec![0.25f64; d];
+
+    // bootstrap: dense resync frame installs generation 1 unconditionally
+    let mut frame = Vec::new();
+    wire::encode_down_into(
+        DownKind::Resync,
+        &Packet::Dense(x0.clone()),
+        ValPrec::F64,
+        &mut frame,
+    );
+    cmd_tx
+        .send(round_cmd_gen(
+            0,
+            frame,
+            1,
+            Arc::new(x0.clone()),
+            Arc::new(OverlayPatch::new()),
+        ))
+        .unwrap();
+    let upd = up_rx.recv().unwrap();
+    assert!(upd.failure.is_none(), "bootstrap round must succeed");
+    assert!(!upd.needs_resync);
+    assert!(upd.payload_bits > 0, "bootstrap round must compute");
+
+    // generation 3 after 1: the worker missed a rotation. It must refuse
+    // to compute against the stale base and ask for a resync instead.
+    let mut delta = Vec::new();
+    wire::encode_down_into(
+        DownKind::Delta,
+        &Packet::Zero { dim: d as u32 },
+        ValPrec::F64,
+        &mut delta,
+    );
+    cmd_tx
+        .send(round_cmd_gen(
+            1,
+            delta.clone(),
+            3,
+            Arc::new(vec![1.0; d]),
+            Arc::new(OverlayPatch::new()),
+        ))
+        .unwrap();
+    let upd = up_rx.recv().unwrap();
+    assert!(upd.needs_resync, "a generation gap must request a resync");
+    assert!(upd.failure.is_none(), "a gap is not a failure");
+    assert_eq!(upd.payload_bits, 0, "the worker must not compute on a stale base");
+    assert_eq!(upd.wire_bytes, 0);
+
+    // contiguous generation 2 on the retained base: business as usual
+    cmd_tx
+        .send(round_cmd_gen(
+            1,
+            delta,
+            2,
+            Arc::new(x0),
+            Arc::new(OverlayPatch::new()),
+        ))
+        .unwrap();
+    let upd = up_rx.recv().unwrap();
+    assert!(upd.failure.is_none(), "thread must still answer normally");
+    assert!(!upd.needs_resync);
+    assert!(upd.payload_bits > 0);
+
+    cmd_tx
+        .send(shiftcomp::coordinator::WorkerCommand::Shutdown)
+        .unwrap();
+    handle.join().expect("worker thread must exit cleanly");
+}
+
+/// Quarantine → rejoin on the EF downlink path: the readmission round is a
+/// full fleet resync (the bootstrap collapses every overlay), after which
+/// the worker's logical replica — materialized from its snapshot + overlay
+/// handles over the `Inspect` wire — is bit-equal to the master's mirror,
+/// lagged by the one in-flight publication, round after round.
+#[test]
+fn rejoin_reconstructs_the_logical_replica_bit_equal() {
+    let p = ridge();
+    let d = p.dim();
+    let (straggler, from, window) = (2usize, 5usize, 1usize);
+    let mut dist = diana_cluster(
+        &p,
+        0.4,
+        109,
+        1,
+        Some(Box::new(TopK::with_q(d, 0.25))),
+        Some(FaultPlan::new().straggle(straggler, from, window)),
+    );
+    for _ in 0..from + window {
+        dist.step(p.as_ref());
+    }
+    assert_eq!(dist.health().states[straggler], WorkerState::Quarantined);
+
+    dist.rejoin(straggler).expect("straggler thread is alive");
+    let x_boot = dist.x().to_vec();
+    dist.step(p.as_ref());
+    // the rejoin round resyncs the whole fleet: every replica holds the
+    // boot iterate exactly, overlays collapsed
+    let snap = dist.worker_snapshot(straggler);
+    assert_eq!(snap.x_replica, x_boot, "rejoin bootstrap must deliver x exactly");
+    assert_eq!(dist.health().overlay_nnz, vec![0u64; p.n_workers()]);
+
+    // steady state after readmission: the worker's materialized replica
+    // tracks the master's EF mirror, lagged by the in-flight publication
+    let mut prev_mirror = dist.replica_mirror().unwrap().to_vec();
+    for k in 0..8 {
+        dist.step(p.as_ref());
+        let snap = dist.worker_snapshot(straggler);
+        assert_eq!(
+            snap.x_replica, prev_mirror,
+            "round {k} after rejoin: snapshot + overlay must equal the lagged mirror"
+        );
+        prev_mirror = dist.replica_mirror().unwrap().to_vec();
+    }
+}
