@@ -789,6 +789,102 @@ fn main() {
         }
     }
 
+    // ------------------------------------------- quorum straggler collapse
+    // This PR's tentpole scenario: a heterogeneous fleet with a 50 ms
+    // latency spread (half the workers on 2 ms links, the rest fanned out
+    // to 52 ms), fat pipes so the round is latency-bound. The barrier
+    // gather prices every round at the slowest link; an m = n/2 quorum
+    // close prices it at the m-th fastest arrival — the fast half — and
+    // must collapse the simulated wall clock ≥ 3× (≈ 10× by
+    // construction). Both runs converge to the same shared-target optimum,
+    // so the quorum run's final iterate is required to sit within 1e-6 of
+    // the full-participation baseline — bounded staleness costs tail
+    // latency, not the answer. sim_time_sec is recorded per configuration
+    // in results/BENCH_perf.json so the collapse is inspectable per PR.
+    {
+        let (d, rounds) = if smoke { (2_000, 120) } else { (20_000, 200) };
+        let n = 8usize;
+        let q = 0.25;
+        let links: Vec<LinkModel> = (0..n)
+            .map(|i| LinkModel {
+                up_bps: 1e9,
+                down_bps: 1e9,
+                latency: if i < n / 2 {
+                    0.002
+                } else {
+                    0.022 + 0.01 * (i - n / 2) as f64
+                },
+            })
+            .collect();
+        let omega = RandK::with_q(d, q).omega().unwrap();
+        let mk = |quorum: Option<usize>, staleness: bool| {
+            let pa = Arc::new(SharedTargetProblem::new(d, n, 31));
+            let ss = shiftcomp::theory::dcgd_fixed(pa.as_ref(), &vec![omega; n]);
+            let qs: Vec<Box<dyn Compressor>> = (0..n)
+                .map(|_| Box::new(RandK::with_q(d, q)) as Box<dyn Compressor>)
+                .collect();
+            let dist = DistributedRunner::new(
+                pa.clone(),
+                qs,
+                None,
+                vec![vec![0.0; d]; n],
+                ClusterConfig {
+                    method: MethodKind::Fixed,
+                    gamma: ss.gamma,
+                    seed: 31,
+                    links: Some(links.clone()),
+                    quorum,
+                    staleness,
+                    ..Default::default()
+                },
+            );
+            (pa, dist)
+        };
+        let mut sims = Vec::new();
+        let mut finals = Vec::new();
+        for (label, quorum, staleness) in [
+            ("barrier", None, false),
+            ("quorum_half", Some(n / 2), true),
+        ] {
+            let (pa, mut dist) = mk(quorum, staleness);
+            let t0 = std::time::Instant::now();
+            for _ in 0..rounds {
+                dist.step(pa.as_ref());
+            }
+            let wall = t0.elapsed().as_secs_f64() / rounds as f64;
+            let sim = dist.simulated_time();
+            println!(
+                "straggler fleet [{label}] {rounds} rounds: simulated {sim:.3} s \
+                 ({:.4} s / round)",
+                sim / rounds as f64
+            );
+            rows.push(format!("quorum_straggler_{label}_sim_sec,{sim:.3e}"));
+            json.push(
+                JsonScenario::new(format!("quorum_straggler_{label}_d{d}n{n}"), wall, None)
+                    .with_sim_time(sim),
+            );
+            sims.push(sim);
+            let xs = pa.x_star().to_vec();
+            finals.push((dist.x().to_vec(), xs));
+        }
+        let collapse = sims[0] / sims[1];
+        println!(
+            "  → m = n/2 quorum close collapses the straggler-bound wall clock {collapse:.1}×"
+        );
+        assert!(
+            collapse >= 3.0,
+            "acceptance: quorum close must collapse the heterogeneous-fleet wall clock ≥ 3×, \
+             got {collapse:.2}×"
+        );
+        let xs_norm = shiftcomp::linalg::dist_sq(&finals[0].1, &vec![0.0; d]).sqrt();
+        let gap = shiftcomp::linalg::dist_sq(&finals[0].0, &finals[1].0).sqrt() / xs_norm;
+        assert!(
+            gap < 1e-6,
+            "acceptance: the quorum run's final iterate must sit within 1e-6 of full \
+             participation, gap {gap:.3e}"
+        );
+    }
+
     write_csv("results/perf_coordinator.csv", "name,median_sec", &rows).expect("csv");
     write_bench_json("results/BENCH_perf.json", &json).expect("json");
     println!("\nwritten: results/perf_coordinator.csv + results/BENCH_perf.json");

@@ -84,6 +84,7 @@
 use crate::algorithms::shift_rules::ShiftRule;
 use crate::algorithms::{Algorithm, StepStats};
 use crate::compressors::{Compressor, Packet, PayloadBitsCache, ValPrec};
+use crate::coordinator::participation::ParticipationSampler;
 use crate::downlink::DownlinkState;
 use crate::ef::{self, EfUplink};
 use crate::linalg::{ax_into, axpy, sub_into, zero};
@@ -166,6 +167,15 @@ pub struct DcgdShift {
     active: Vec<bool>,
     /// workers currently active (the aggregate reweights to 1/n_active)
     n_active: usize,
+    /// construction seed, kept so [`DcgdShift::set_participation`] can
+    /// derive the identical sampler stream the cluster derives
+    seed: u64,
+    /// seeded per-round partial participation
+    /// ([`DcgdShift::set_participation`]; `None` = every active worker
+    /// works every round)
+    sampler: Option<ParticipationSampler>,
+    /// this round's participation mask (all-true without a sampler)
+    sampled: Vec<bool>,
 }
 
 impl DcgdShift {
@@ -393,6 +403,9 @@ impl DcgdShift {
             x_loc: Vec::new(),
             active: vec![true; n_active],
             n_active,
+            seed,
+            sampler: None,
+            sampled: vec![true; n_active],
         }
     }
 
@@ -455,6 +468,10 @@ impl DcgdShift {
                 )),
                 "local-step batching (local_steps > 1) supports the fixed-shift and \
                  DIANA-without-C rules; this driver ships one frame per round"
+            );
+            assert!(
+                self.sampler.is_none(),
+                "local-step batching does not compose with partial participation"
             );
             let d = self.x.len();
             self.g_acc = vec![0.0; d];
@@ -550,6 +567,43 @@ impl DcgdShift {
     pub fn active_workers(&self) -> usize {
         self.n_active
     }
+
+    /// Sample a seeded `fraction` of the fleet each round — the
+    /// bit-identical single-process mirror of
+    /// [`crate::coordinator::ClusterConfig::participation`]. The sampler
+    /// is derived from the construction seed on the same disjoint RNG
+    /// stream the cluster uses ([`ParticipationSampler::seeded`], worker
+    /// 0 always in), so both drivers replay the identical per-round
+    /// schedule. A sampled-out worker is frozen for the round — no
+    /// gradient, no RNG draw, shift untouched — exactly what the
+    /// cluster's sync-only command leaves behind, and the estimator
+    /// reweights to the sampled reporters. Requires the fixed-shift rule
+    /// with `local_steps = 1` (the same gate the cluster asserts).
+    pub fn set_participation(&mut self, fraction: f64) {
+        assert!(
+            self.workers
+                .iter()
+                .all(|w| matches!(w.rule, ShiftRule::Fixed)),
+            "partial participation requires the fixed-shift rule: shift-learning rules \
+             would advance h_i only on sampled rounds and desynchronize from the schedule"
+        );
+        assert!(
+            self.local_steps == 1,
+            "partial participation does not compose with local-step batching (local_steps = {})",
+            self.local_steps
+        );
+        self.sampler = Some(ParticipationSampler::seeded(
+            self.seed,
+            self.workers.len(),
+            fraction,
+        ));
+    }
+
+    /// Builder-style [`set_participation`](Self::set_participation).
+    pub fn with_participation(mut self, fraction: f64) -> Self {
+        self.set_participation(fraction);
+        self
+    }
 }
 
 impl Algorithm for DcgdShift {
@@ -581,8 +635,18 @@ impl Algorithm for DcgdShift {
         if self.local_steps > 1 {
             return self.step_batched(p);
         }
-        let inv_n = if self.n_active > 0 {
-            1.0 / self.n_active as f64
+        // partial participation: draw this round's seeded sample S_k —
+        // exactly one draw per round, the same schedule the cluster
+        // replays. Without a sampler the mask stays all-true.
+        if let Some(sampler) = self.sampler.as_mut() {
+            sampler.next_round();
+            self.sampled.copy_from_slice(sampler.mask());
+        }
+        let reporters = (0..self.workers.len())
+            .filter(|&wi| self.active[wi] && self.sampled[wi])
+            .count();
+        let inv_n = if reporters > 0 {
+            1.0 / reporters as f64
         } else {
             0.0
         };
@@ -591,9 +655,11 @@ impl Algorithm for DcgdShift {
 
         // ---- phase 1: workers (mirrors coordinator::worker_loop op for op;
         // quarantined workers are skipped entirely — state frozen, RNG
-        // stream untouched, exactly like a thread out of the rotation)
+        // stream untouched, exactly like a thread out of the rotation —
+        // and a sampled-out worker is frozen for the round the same way,
+        // mirroring the cluster's sync-only command)
         for (wi, w) in self.workers.iter_mut().enumerate() {
-            if !self.active[wi] {
+            if !self.active[wi] || !self.sampled[wi] {
                 continue;
             }
             // line 6: local gradient at the iterate the worker actually
@@ -709,13 +775,25 @@ impl Algorithm for DcgdShift {
         // workers' packets in at O(nnz). A fully-quarantined fleet takes a
         // zero step (the iterate holds), like the cluster's zero-reporter
         // round.
-        if self.n_active == 0 {
+        if reporters == 0 {
             zero(&mut self.est);
         } else {
             ax_into(inv_n, &self.h_sum, &mut self.est);
         }
+        // sampled-out active workers: excluded from this round's
+        // estimator without touching h_sum — the same worker-order
+        // subtraction pass the cluster's fold runs before any reporter
+        // folds (no-op without a sampler, so the full-participation path
+        // is untouched)
+        if self.sampler.is_some() && reporters > 0 {
+            for (wi, w) in self.workers.iter().enumerate() {
+                if self.active[wi] && !self.sampled[wi] {
+                    axpy(-inv_n, &w.h, &mut self.est);
+                }
+            }
+        }
         for (wi, w) in self.workers.iter_mut().enumerate() {
-            if !self.active[wi] {
+            if !self.active[wi] || !self.sampled[wi] {
                 continue;
             }
             match &w.rule {
@@ -757,14 +835,15 @@ impl Algorithm for DcgdShift {
         // applied to the shared replica with the same op the workers use.
         // (Periodic `resync_every` redundancy is a runner-only operational
         // knob and is not mirrored here.) Degraded fleets broadcast to the
-        // active workers only, matching the cluster's per-recipient charge.
-        let bits_down = self.dl.finish_round_packet(delta, &self.x, self.n_active, self.prec);
+        // active workers only — and under partial participation only S_k
+        // is commanded — matching the cluster's per-recipient charge.
+        let bits_down = self.dl.finish_round_packet(delta, &self.x, reporters, self.prec);
 
         StepStats {
             bits_up,
             bits_down,
             bits_refresh,
-            active_workers: self.n_active,
+            active_workers: reporters,
             replica_bytes: self.dl.replica_footprint(),
         }
     }

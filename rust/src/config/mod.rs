@@ -160,6 +160,17 @@ impl ProblemSpec {
         }
     }
 
+    /// The fleet size this problem spec declares (known at parse time, so
+    /// cross-field validation can range-check cluster knobs like `quorum`
+    /// before anything is built).
+    pub fn workers(&self) -> usize {
+        match self {
+            ProblemSpec::Ridge { workers, .. }
+            | ProblemSpec::LogisticW2a { workers, .. }
+            | ProblemSpec::Quadratic { workers, .. } => *workers,
+        }
+    }
+
     pub fn build(&self) -> Result<Box<dyn Problem>, ConfigError> {
         match self {
             ProblemSpec::Ridge {
@@ -416,6 +427,21 @@ pub struct ClusterSpec {
     /// `available_parallelism`). Bit-identical trajectories for every
     /// value — this knob trades master wall-clock only.
     pub master_threads: Option<usize>,
+    /// semi-async quorum gather: close each round after this many fresh
+    /// updates (must be in 2..=workers when given; `None` or `workers` =
+    /// the barrier gather, bit-identical to the historical path). `m <
+    /// workers` requires the dcgd algorithm with `local_steps = 1`; see
+    /// [`crate::coordinator::ClusterConfig::quorum`]
+    pub quorum: Option<usize>,
+    /// FedAvg-style seeded partial participation fraction (must lie in
+    /// (0, 1] when given; `None` = every worker every round). Requires
+    /// the dcgd algorithm with `local_steps = 1`; see
+    /// [`crate::coordinator::ClusterConfig::participation`]
+    pub participation: Option<f64>,
+    /// fold one-round-late frames into the next round as damped stale
+    /// gradients (default off); see
+    /// [`crate::coordinator::ClusterConfig::staleness`]
+    pub staleness: bool,
 }
 
 impl Default for ClusterSpec {
@@ -431,6 +457,9 @@ impl Default for ClusterSpec {
             round_timeout_ms: DEFAULT_ROUND_TIMEOUT_MS,
             quarantine_after: 1,
             master_threads: None,
+            quorum: None,
+            participation: None,
+            staleness: false,
         }
     }
 }
@@ -515,6 +544,44 @@ impl ClusterSpec {
                 }
             }
         };
+        let qm_j = j.get("quorum");
+        let quorum = if qm_j.is_null() {
+            None
+        } else {
+            // the upper bound (the fleet size) is cross-checked against
+            // the problem spec in validate(); a 1-quorum would let every
+            // round close on worker 0 alone and is rejected outright
+            match qm_j.as_usize() {
+                Some(v) if v >= 2 => Some(v),
+                _ => {
+                    return Err(bad(
+                        "cluster.quorum must be an integer >= 2 (and at most problem.workers; \
+                         omit it for the barrier gather)",
+                    ))
+                }
+            }
+        };
+        let pf_j = j.get("participation");
+        let participation = if pf_j.is_null() {
+            None
+        } else {
+            match pf_j.as_f64() {
+                Some(f) if f > 0.0 && f <= 1.0 => Some(f),
+                _ => {
+                    return Err(bad(
+                        "cluster.participation must be a fraction in (0, 1] (omit it for \
+                         full participation)",
+                    ))
+                }
+            }
+        };
+        let st_j = j.get("staleness");
+        let staleness = if st_j.is_null() {
+            false
+        } else {
+            st_j.as_bool()
+                .ok_or_else(|| bad("cluster.staleness must be a boolean"))?
+        };
         Ok(Self {
             resync_every,
             prec,
@@ -526,6 +593,9 @@ impl ClusterSpec {
             round_timeout_ms,
             quarantine_after,
             master_threads,
+            quorum,
+            participation,
+            staleness,
         })
     }
 
@@ -862,6 +932,54 @@ impl ExperimentConfig {
                 }
             },
         }
+        // ---- semi-async knobs (quorum / participation / staleness).
+        // These reshape who contributes to a round, which only the
+        // fixed-shift estimator tolerates: shift-learning (DIANA-family)
+        // methods advance h_i on both ends every round, so a cut,
+        // sampled-out or late frame would desynchronize master and
+        // worker shift state. `quorum = workers` is the barrier gather
+        // and stays legal everywhere.
+        let n = self.problem.workers();
+        if let Some(m) = self.cluster.quorum {
+            if m > n {
+                return Err(bad(format!(
+                    "cluster.quorum = {m} exceeds problem.workers = {n}; a quorum the \
+                     fleet can never reach would deadline every round"
+                )));
+            }
+        }
+        let semi_async = self.cluster.quorum.is_some_and(|m| m < n)
+            || self.cluster.participation.is_some()
+            || self.cluster.staleness;
+        if semi_async {
+            if !matches!(self.algorithm, AlgorithmSpec::Dcgd) {
+                return Err(bad(format!(
+                    "cluster.quorum < workers, cluster.participation and cluster.staleness \
+                     require the dcgd algorithm (fixed shifts); {:?} learns shifts on both \
+                     ends and would desynchronize under cut or sampled-out frames",
+                    self.algorithm
+                )));
+            }
+            if self.cluster.local_steps > 1 {
+                return Err(bad(format!(
+                    "cluster.quorum < workers, cluster.participation and cluster.staleness \
+                     do not compose with cluster.local_steps = {} (batched frames cannot \
+                     fold partially)",
+                    self.cluster.local_steps
+                )));
+            }
+        }
+        if self.cluster.uplink == UplinkSpec::ErrorFeedback
+            && self.cluster.quorum.is_some_and(|m| m < n)
+            && !self.cluster.staleness
+        {
+            return Err(bad(
+                "cluster.quorum < workers with the error-fed-back uplink needs \
+                 cluster.staleness: true — a cut worker has already retired the shipped \
+                 frame from its EF accumulator, so the frame must fold late instead of \
+                 being dropped",
+            ));
+        }
         Ok(())
     }
 
@@ -977,6 +1095,9 @@ impl ExperimentConfig {
                 round_timeout_ms: self.cluster.round_timeout_ms,
                 quarantine_after: self.cluster.quarantine_after,
                 master_threads: self.cluster.master_threads,
+                quorum: self.cluster.quorum,
+                participation: self.cluster.participation,
+                staleness: self.cluster.staleness,
             },
         );
         Ok((problem, runner))
@@ -1211,6 +1332,131 @@ mod tests {
             r1.step(p1.as_ref());
             r3.step(p3.as_ref());
             assert_eq!(r1.x(), r3.x(), "diverged at round {k}");
+        }
+    }
+
+    #[test]
+    fn semi_async_knobs_parse_build_and_reject() {
+        let with = r#"{
+            "problem": {"kind": "quadratic", "d": 10, "workers": 4, "seed": 1},
+            "algorithm": {"kind": "dcgd"},
+            "compressor": {"kind": "rand-k", "q": 0.3},
+            "cluster": {"quorum": 2, "participation": 0.5, "staleness": true}
+        }"#;
+        let cfg = ExperimentConfig::parse(with).unwrap();
+        assert_eq!(cfg.cluster.quorum, Some(2));
+        assert_eq!(cfg.cluster.participation, Some(0.5));
+        assert!(cfg.cluster.staleness);
+        assert!(cfg.build_distributed().is_ok());
+        // defaults: all off
+        let dflt = ExperimentConfig::parse(SAMPLE).unwrap();
+        assert_eq!(dflt.cluster.quorum, None);
+        assert_eq!(dflt.cluster.participation, None);
+        assert!(!dflt.cluster.staleness);
+        // every knob participates in ClusterSpec equality
+        assert_ne!(
+            ClusterSpec {
+                quorum: Some(2),
+                ..ClusterSpec::default()
+            },
+            ClusterSpec::default()
+        );
+        assert_ne!(
+            ClusterSpec {
+                participation: Some(0.5),
+                ..ClusterSpec::default()
+            },
+            ClusterSpec::default()
+        );
+        assert_ne!(
+            ClusterSpec {
+                staleness: true,
+                ..ClusterSpec::default()
+            },
+            ClusterSpec::default()
+        );
+        // parse-time range checks, with descriptive field-naming errors
+        let err = ExperimentConfig::parse(&with.replace(r#""quorum": 2"#, r#""quorum": 1"#))
+            .unwrap_err();
+        assert!(err.to_string().contains("quorum"), "{err}");
+        let err = ExperimentConfig::parse(&with.replace(r#""quorum": 2"#, r#""quorum": 9"#))
+            .unwrap_err();
+        assert!(err.to_string().contains("workers"), "{err}");
+        assert!(
+            ExperimentConfig::parse(&with.replace(r#""quorum": 2"#, r#""quorum": "2""#)).is_err()
+        );
+        let err = ExperimentConfig::parse(
+            &with.replace(r#""participation": 0.5"#, r#""participation": 0.0"#),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("participation"), "{err}");
+        assert!(ExperimentConfig::parse(
+            &with.replace(r#""participation": 0.5"#, r#""participation": 1.5"#)
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            &with.replace(r#""staleness": true"#, r#""staleness": 1"#)
+        )
+        .is_err());
+        // cross-field gates: shift-learning algorithms and batched rounds
+        // are rejected at parse time, not at build
+        let err =
+            ExperimentConfig::parse(&with.replace(r#""kind": "dcgd""#, r#""kind": "diana""#))
+                .unwrap_err();
+        assert!(err.to_string().contains("dcgd"), "{err}");
+        let err = ExperimentConfig::parse(
+            &with.replace(r#""staleness": true"#, r#""staleness": true, "local_steps": 4"#),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("local_steps"), "{err}");
+        // an m < n quorum with the EF uplink requires staleness
+        let ef = with
+            .replace(r#""participation": 0.5, "#, "")
+            .replace(
+                r#""staleness": true"#,
+                r#""staleness": false, "uplink": {"error_feedback": true}"#,
+            );
+        let err = ExperimentConfig::parse(&ef).unwrap_err();
+        assert!(err.to_string().contains("staleness"), "{err}");
+        assert!(ExperimentConfig::parse(&ef.replace(
+            r#""staleness": false"#,
+            r#""staleness": true"#
+        ))
+        .is_ok());
+        // quorum = workers is the barrier gather and stays legal for every
+        // method
+        let barrier = r#"{
+            "problem": {"kind": "quadratic", "d": 10, "workers": 4, "seed": 1},
+            "algorithm": {"kind": "diana"},
+            "compressor": {"kind": "rand-k", "q": 0.3},
+            "cluster": {"quorum": 4}
+        }"#;
+        let cfg = ExperimentConfig::parse(barrier).unwrap();
+        assert!(cfg.build_distributed().is_ok());
+        // degenerate pin through the config layer: quorum = workers plus
+        // participation = 1.0 is the barrier round, bit for bit
+        let degenerate = r#"{
+            "problem": {"kind": "quadratic", "d": 10, "workers": 4, "seed": 1},
+            "algorithm": {"kind": "dcgd"},
+            "compressor": {"kind": "rand-k", "q": 0.3},
+            "cluster": {"quorum": 4, "participation": 1.0}
+        }"#;
+        let plain = degenerate.replace(
+            r#""cluster": {"quorum": 4, "participation": 1.0}"#,
+            r#""cluster": {}"#,
+        );
+        let (pd, mut rd) = ExperimentConfig::parse(degenerate)
+            .unwrap()
+            .build_distributed()
+            .unwrap();
+        let (pp, mut rp) = ExperimentConfig::parse(&plain)
+            .unwrap()
+            .build_distributed()
+            .unwrap();
+        for k in 0..25 {
+            rd.step(pd.as_ref());
+            rp.step(pp.as_ref());
+            assert_eq!(rd.x(), rp.x(), "diverged at round {k}");
         }
     }
 

@@ -30,12 +30,14 @@
 //! path deterministically. See [`runner`]'s module doc for the semantics.
 
 pub mod faults;
+pub mod participation;
 pub mod pool;
 pub mod protocol;
 pub mod replica;
 pub mod runner;
 
 pub use faults::{FaultKind, FaultPlan, FaultSpec, WorkerFaultScript};
+pub use participation::ParticipationSampler;
 pub use pool::{FoldPool, ShardView};
 pub use replica::{OverlayPatch, ReplicaOverlay, SnapshotPublisher};
 pub use protocol::{

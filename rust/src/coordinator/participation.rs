@@ -1,0 +1,149 @@
+//! Seeded per-round participation sampling (partial participation).
+//!
+//! The FedAvg-style serving regime: each round the master samples a
+//! subset S_k of the fleet, |S_k| = m = max(1, round(`fraction`·n)),
+//! broadcasts work to S_k only, and reweights the estimator to
+//! `1/|S_k ∩ reporters|`. Workers outside S_k receive a sync-only
+//! command — their replica stays generation-fresh but they perform no
+//! compute, no RNG draw, and send no reply — and their shifts are left
+//! untouched in the aggregate (subtracted for the round by the same
+//! O(d)-axpy machinery quarantine uses). The shifted estimator stays
+//! unbiased for any reporting set because the paper's shift sequence is
+//! constructed independently of who reports.
+//!
+//! Like [`crate::coordinator::FaultPlan::seeded`], worker 0 is always
+//! sampled (the fleet always has one clean, fresh reporter), and the
+//! schedule is a pure function of `(seed, n, fraction)` on its own
+//! disjoint RNG stream — the cluster runner and the single-process
+//! mirror construct identical samplers and replay the identical
+//! admission schedule, which is what keeps cluster ≡ mirror bit-exact
+//! under partial participation.
+
+use crate::util::rng::Pcg64;
+
+/// RNG stream tag for the participation schedule (disjoint from the
+/// runner's `0xa160` root, its derived worker streams, and the fault
+/// plan's `0xfa17`).
+const PARTICIPATION_STREAM: u64 = 0x5e1e;
+
+/// A seeded per-round sampler of worker subsets (see the module doc).
+#[derive(Clone, Debug)]
+pub struct ParticipationSampler {
+    rng: Pcg64,
+    n: usize,
+    m: usize,
+    mask: Vec<bool>,
+    scratch: Vec<u32>,
+}
+
+impl ParticipationSampler {
+    /// Build the schedule for an `n`-worker fleet sampling a `fraction`
+    /// of it per round. `fraction` must lie in (0, 1]; the sample size
+    /// is `m = max(1, round(fraction·n))`, clamped to `n`.
+    pub fn seeded(seed: u64, n: usize, fraction: f64) -> Self {
+        assert!(n >= 1, "participation needs at least one worker");
+        assert!(
+            fraction > 0.0 && fraction <= 1.0,
+            "participation fraction must lie in (0, 1], got {fraction}"
+        );
+        let m = ((fraction * n as f64).round() as usize).clamp(1, n);
+        Self {
+            rng: Pcg64::with_stream(seed, PARTICIPATION_STREAM),
+            n,
+            m,
+            mask: vec![false; n],
+            scratch: Vec::with_capacity(m),
+        }
+    }
+
+    /// The per-round sample size m = |S_k|.
+    pub fn sample_size(&self) -> usize {
+        self.m
+    }
+
+    /// Draw the next round's sample S_k and return it as a mask
+    /// (`mask[wi]` ⇔ wi ∈ S_k). Worker 0 is always in; the other m − 1
+    /// members are a uniform subset of {1, …, n−1}. Exactly one draw per
+    /// round — the cluster and the mirror must each call this once per
+    /// round, in round order, to stay on the shared schedule.
+    /// Allocation-free after construction.
+    pub fn next_round(&mut self) -> &[bool] {
+        self.mask.fill(false);
+        self.mask[0] = true;
+        self.rng.subset_into(self.n - 1, self.m - 1, &mut self.scratch);
+        for &s in &self.scratch {
+            self.mask[1 + s as usize] = true;
+        }
+        &self.mask
+    }
+
+    /// The most recently drawn mask (all-false before the first round).
+    pub fn mask(&self) -> &[bool] {
+        &self.mask
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_and_spares_worker_zero() {
+        let mut a = ParticipationSampler::seeded(42, 8, 0.5);
+        let mut b = ParticipationSampler::seeded(42, 8, 0.5);
+        assert_eq!(a.sample_size(), 4);
+        for k in 0..50 {
+            let ma: Vec<bool> = a.next_round().to_vec();
+            let mb = b.next_round();
+            assert_eq!(ma, mb, "round {k}");
+            assert!(ma[0], "worker 0 must always be sampled (round {k})");
+            assert_eq!(
+                ma.iter().filter(|&&s| s).count(),
+                4,
+                "|S_k| must equal m (round {k})"
+            );
+        }
+    }
+
+    #[test]
+    fn different_seeds_and_rounds_move_the_sample() {
+        let mut a = ParticipationSampler::seeded(1, 16, 0.25);
+        let mut c = ParticipationSampler::seeded(2, 16, 0.25);
+        let first: Vec<bool> = a.next_round().to_vec();
+        let mut any_round_differs = false;
+        let mut any_seed_differs = false;
+        for _ in 0..20 {
+            if a.next_round() != first.as_slice() {
+                any_round_differs = true;
+            }
+            if c.next_round() != first.as_slice() {
+                any_seed_differs = true;
+            }
+        }
+        assert!(any_round_differs, "the sample must move across rounds");
+        assert!(any_seed_differs, "the sample must move across seeds");
+    }
+
+    #[test]
+    fn full_participation_samples_everyone() {
+        let mut s = ParticipationSampler::seeded(7, 6, 1.0);
+        assert_eq!(s.sample_size(), 6);
+        for _ in 0..10 {
+            assert!(s.next_round().iter().all(|&on| on));
+        }
+    }
+
+    #[test]
+    fn tiny_fractions_clamp_to_one_worker() {
+        let mut s = ParticipationSampler::seeded(7, 8, 0.01);
+        assert_eq!(s.sample_size(), 1);
+        let m = s.next_round();
+        assert!(m[0] && m[1..].iter().all(|&on| !on));
+    }
+
+    #[test]
+    #[should_panic(expected = "fraction must lie in (0, 1]")]
+    fn rejects_out_of_range_fraction() {
+        ParticipationSampler::seeded(7, 8, 1.5);
+    }
+}

@@ -68,6 +68,22 @@ pub enum WorkerCommand {
         h: Vec<f64>,
         recycled: FrameSet,
     },
+    /// Keep a worker that was **sampled out** of round `k` (partial
+    /// participation) generation-fresh without doing any work: the worker
+    /// installs the publication (`gen`/`snap`/`patch`) exactly as a
+    /// `Round` command would, but performs no downlink validation, no
+    /// gradient, no RNG draw, and sends **no reply** — so a later `Round`
+    /// command never sees a generation gap and its shift h_i is exactly
+    /// where the master's replica says it is. No downlink frame rides
+    /// along: under the shared-snapshot replica model the publication
+    /// *is* the iterate, so frame validation has nothing to check for a
+    /// worker that computes nothing.
+    Sync {
+        k: usize,
+        gen: u64,
+        snap: Arc<Vec<f64>>,
+        patch: Arc<OverlayPatch>,
+    },
     /// Debug/ops introspection: snapshot this worker's private state
     /// (current shift and logical iterate replica, the latter materialized
     /// from the retained snapshot + overlay) and send it back on `reply`.

@@ -138,6 +138,24 @@ impl OverlayPatch {
             out[j as usize] += self.val[i];
         }
     }
+
+    /// Add the patch entries with index in `[lo, hi)` into `sub`, where
+    /// `sub` is the `[lo, hi)` window of the full output vector (so the
+    /// write lands at `sub[idx − lo]`).
+    ///
+    /// The coordinate-range form of [`OverlayPatch::apply`] for sharded
+    /// materialization: the entries are stored in ascending index order,
+    /// so each range is one `partition_point` pair away, every entry is
+    /// applied by exactly one shard, and the per-coordinate operation is
+    /// the same single `+=` the serial kernel performs — bit-identical
+    /// for any sharding.
+    pub fn apply_range(&self, lo: usize, hi: usize, sub: &mut [f64]) {
+        let a = self.idx.partition_point(|&j| (j as usize) < lo);
+        let b = self.idx.partition_point(|&j| (j as usize) < hi);
+        for i in a..b {
+            sub[self.idx[i] as usize - lo] += self.val[i];
+        }
+    }
 }
 
 /// Materialize the logical replica `base + patch` into `out`, resizing

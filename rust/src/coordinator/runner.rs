@@ -135,6 +135,58 @@
 //! ([`crate::coordinator::faults::FaultPlan`], wired in via
 //! [`ClusterConfig::faults`]) from organic ones.
 //!
+//! # Semi-async rounds: arrival → admit → close → late-fold
+//!
+//! The gather is **event-driven**, not a barrier-then-process loop. Each
+//! round moves through four moments:
+//!
+//! 1. **arrival** — the master blocks for the first update of a burst,
+//!    then greedily drains everything already queued. Every arrival marks
+//!    its sender alive for the round's miss accounting, whether it folds
+//!    or not.
+//! 2. **admit** — a fresh, failure-free update claims its gather slot and
+//!    joins the burst's *pooled on-arrival decode*: validation + frame
+//!    decode + shard-bound caching run worker-sharded on the
+//!    [`FoldPool`] **while the master is otherwise waiting** for the rest
+//!    of the fleet, so decode CPU overlaps the gather wait and the
+//!    post-close serial work shrinks to accounting plus the
+//!    coordinate-sharded fold. (The τ > 1 batched protocol keeps its own
+//!    sub-step-major validation pass instead.)
+//! 3. **close** — the round closes when every commanded worker has
+//!    answered, at the deadline, or — with [`ClusterConfig::quorum`] =
+//!    m — as soon as m fresh updates are admitted. Admitted updates fold
+//!    in worker order, so an m = n quorum (or none) is **bit-identical**
+//!    to the historical barrier gather. A quorum close is weak evidence
+//!    against the cut workers, so it raises their quarantine threshold
+//!    by one consecutive miss; their stale arrivals keep resetting the
+//!    counter, so a merely-slow worker is never cut.
+//! 4. **late-fold** — with [`ClusterConfig::staleness`] armed, a frame
+//!    that arrives one round late (the tail a quorum close cut) folds
+//!    into the *next* round's estimator damped by
+//!    λ = [`crate::theory::staleness::damping`]`(1)`: the round's
+//!    aggregate becomes the weighted average
+//!    `g = (Σ_fresh (h_i + q_i) + λ Σ_stale (h_i + q_i^{k−1})) /
+//!    (|fresh| + λ|stale|)`. Older frames are discarded (τ = 1 staleness
+//!    bound); step sizes for the delayed regime come from
+//!    [`crate::theory::staleness::dcgd_delayed`].
+//!
+//! [`ClusterConfig::participation`] layers the FedAvg-style serving
+//! regime on top: a seeded [`ParticipationSampler`] draws S_k each round
+//! (worker 0 always in), only S_k is commanded, sampled-out workers get a
+//! generation-keeping [`WorkerCommand::Sync`] (no compute, no reply) and
+//! are excluded from the estimator — which reweights to `1/|S_k ∩ R|` —
+//! with their shifts untouched. The sampler, the quorum admission
+//! schedule, and the staleness window are all pure functions of the seed
+//! and arrival order is folded away, so the single-process
+//! [`crate::algorithms::DcgdShift`] mirror replays the identical
+//! schedule and stays bit-exact. All three knobs require the fixed-shift
+//! method with `local_steps = 1` (DIANA-family shift learning on both
+//! ends would desynchronize under cut or sampled-out frames);
+//! `quorum = n` and `participation = 1.0` degenerate to the barrier
+//! round bit-for-bit. [`crate::net::NetworkAccountant::set_quorum`]
+//! prices a quorum round at the m-th fastest arrival instead of the
+//! slowest.
+//!
 //! # Zero-allocation round pipeline
 //!
 //! Steady-state rounds recycle every buffer in the system; after warm-up
@@ -242,6 +294,7 @@ use std::time::{Duration, Instant};
 use crate::algorithms::{Algorithm, StepStats};
 use crate::compressors::{Compressor, Packet, PayloadBitsCache, ValPrec};
 use crate::coordinator::faults::{FaultPlan, WorkerFaultScript};
+use crate::coordinator::participation::ParticipationSampler;
 use crate::coordinator::pool::{self, FoldPool, ShardView};
 use crate::coordinator::protocol::{
     FailureClass, FrameSet, MethodKind, RunnerHealth, WorkerCommand, WorkerFailure, WorkerSnapshot,
@@ -320,6 +373,33 @@ pub struct ClusterConfig {
     /// accumulators are bit-identical for every value — the knob trades
     /// wall-clock only.
     pub master_threads: Option<usize>,
+    /// semi-async quorum gather: close the round as soon as this many
+    /// fresh gradient updates have been admitted (the deadline still caps
+    /// the tail). `None` or `Some(n)` is the barrier gather — the round
+    /// waits for every commanded worker and the trajectory is
+    /// bit-identical to the historical path. `Some(m)` with `m < n`
+    /// requires the fixed-shift method with `local_steps = 1` (see the
+    /// module doc's "Semi-async rounds" section) and, combined with the
+    /// EF uplink, `staleness` must be armed so cut frames are folded late
+    /// instead of silently dropping error-feedback signal.
+    pub quorum: Option<usize>,
+    /// FedAvg-style partial participation: sample a seeded subset S_k of
+    /// the fleet each round (|S_k| = max(1, round(fraction·n)), worker 0
+    /// always in — see [`crate::coordinator::ParticipationSampler`]),
+    /// command only S_k, and reweight the estimator to the reporters.
+    /// Sampled-out workers receive a [`WorkerCommand::Sync`] (publication
+    /// install only — no compute, no RNG draw, no reply) so they never
+    /// gen-gap; their shifts stay untouched and are excluded from the
+    /// round's estimator by the same O(d)-axpy machinery quarantine uses.
+    /// Requires the fixed-shift method with `local_steps = 1`.
+    pub participation: Option<f64>,
+    /// Admit one-round-late frames (the tail a quorum close cuts) into
+    /// the *next* round's fold as stale gradients, damped by
+    /// [`crate::theory::staleness::damping`]`(1)`; older frames are still
+    /// discarded, so the staleness bound is τ = 1. Step sizes for the
+    /// delayed regime come from [`crate::theory::staleness::dcgd_delayed`].
+    /// Requires the fixed-shift method with `local_steps = 1`.
+    pub staleness: bool,
 }
 
 /// Default [`ClusterConfig::round_timeout_ms`]: far above any healthy
@@ -343,6 +423,9 @@ impl Default for ClusterConfig {
             round_timeout_ms: DEFAULT_ROUND_TIMEOUT_MS,
             quarantine_after: 1,
             master_threads: None,
+            quorum: None,
+            participation: None,
+            staleness: false,
         }
     }
 }
@@ -477,6 +560,37 @@ pub struct DistributedRunner {
     /// cumulative master-CPU seconds across rounds (broadcast encode +
     /// decode + fold + downlink build; gather wait excluded)
     master_secs: f64,
+    // ---- semi-async rounds (see the "Semi-async rounds" section of the
+    //      module doc)
+    /// quorum target: close the gather once this many fresh gradient
+    /// updates are admitted (`None` = wait for every commanded worker)
+    quorum: Option<usize>,
+    /// fold one-round-late frames as damped stale gradients instead of
+    /// discarding them
+    staleness: bool,
+    /// seeded per-round participation sampler (`None` = full participation)
+    sampler: Option<ParticipationSampler>,
+    /// this round's participation mask S_k (all-true without a sampler)
+    sampled: Vec<bool>,
+    /// one-round-stale updates awaiting their damped fold (staleness only)
+    stale_slots: Vec<Option<WorkerUpdate>>,
+    /// per-worker decode packets for stale Q frames (fresh and stale
+    /// frames from the same worker can fold in the same round, so the
+    /// stale decode cannot share `q_scratch`)
+    stale_scratch: Vec<Packet>,
+    /// per-worker cached shard bounds of the stale packets
+    stale_bounds: Vec<Vec<u32>>,
+    /// per-worker "stale frame folds this round" flags (accounting pass)
+    stale_flags: Vec<bool>,
+    /// per-worker stale-frame decode verdicts (quarantine in worker order)
+    stale_failures: Vec<Option<WorkerFailure>>,
+    /// per-worker "any frame arrived this round" flags: proof of life for
+    /// the miss accounting (a late frame still resets the counter)
+    alive_flags: Vec<bool>,
+    /// recycled (worker, is_stale) batch for the on-arrival decode
+    pending_decode: Vec<(usize, bool)>,
+    /// recycled shard-bound cache for the downlink delta's pooled apply
+    delta_bounds: Vec<u32>,
 }
 
 /// Per-worker static configuration, fixed for the run (bundled so the
@@ -584,6 +698,17 @@ fn worker_loop(
                 // accumulator, then the round runs normally
                 h.copy_from_slice(&h_boot);
                 (k, down, gen, snap, patch, recycled)
+            }
+            WorkerCommand::Sync {
+                gen, snap, patch, ..
+            } => {
+                // sampled out of this round (partial participation): adopt
+                // the publication so the next Round command never sees a
+                // generation gap, but compute nothing, draw no RNG, and
+                // send no reply — the master does not count this worker in
+                // the gather
+                replica.install(gen, snap, patch);
+                continue;
             }
             WorkerCommand::Inspect { reply } => {
                 let _ = reply.send(WorkerSnapshot {
@@ -960,6 +1085,44 @@ impl DistributedRunner {
             cfg.quarantine_after >= 1,
             "quarantine_after must be at least 1 (quarantine on the first miss)"
         );
+        if let Some(m) = cfg.quorum {
+            assert!(
+                m >= 1 && m <= n,
+                "quorum must lie in 1..={n} (the fleet size), got {m}"
+            );
+        }
+        // Semi-async features cut or delay folds the workers already
+        // committed locally. Under the fixed-shift method shifts never
+        // move, so a cut frame only thins one round's estimator; every
+        // shift-learning method folds h-updates on *both* ends and would
+        // silently diverge master replica from worker state the first time
+        // a frame is cut. Same story for local-step batches (the γ(τ) rule
+        // for stale τ-step composites is future work), hence the gate.
+        let semi_async =
+            cfg.quorum.is_some_and(|m| m < n) || cfg.participation.is_some() || cfg.staleness;
+        if semi_async {
+            assert!(
+                matches!(cfg.method, MethodKind::Fixed),
+                "semi-async rounds (quorum < n, participation, staleness) require the \
+                 fixed-shift method; {:?} learns shifts on both ends and a cut frame \
+                 would desynchronize them",
+                cfg.method
+            );
+            assert!(
+                cfg.local_steps == 1,
+                "semi-async rounds (quorum < n, participation, staleness) do not \
+                 compose with local-step batching (local_steps = {})",
+                cfg.local_steps
+            );
+        }
+        if cfg.uplink_ef && cfg.quorum.is_some_and(|m| m < n) {
+            assert!(
+                cfg.staleness,
+                "an m < n quorum with the EF uplink requires staleness: a cut frame \
+                 carries error-feedback signal the worker has already retired from \
+                 its accumulator, so it must fold late rather than drop"
+            );
+        }
         if let Some(plan) = &cfg.faults {
             for f in &plan.faults {
                 assert!(
@@ -1038,6 +1201,23 @@ impl DistributedRunner {
         let mut cuts = Vec::with_capacity(threads + 1);
         pool::shard_cuts_into(d, threads, &mut cuts);
 
+        // Quorum pricing: the simulated round time is the m-th fastest
+        // arrival, not the max (only armed for a real m < n cut — the
+        // degenerate m = n prices exactly like the barrier).
+        let mut net = cfg.links.map(NetworkAccountant::new);
+        if let (Some(net), Some(m)) = (net.as_mut(), cfg.quorum) {
+            if m < n {
+                net.set_quorum(Some(m));
+            }
+        }
+        // The participation schedule is a pure function of (seed, n,
+        // fraction) on its own RNG stream; the single-process mirror
+        // constructs the identical sampler, which is what keeps cluster ≡
+        // mirror bit-exact under partial participation.
+        let sampler = cfg
+            .participation
+            .map(|f| ParticipationSampler::seeded(cfg.seed, n, f));
+
         Self {
             method: cfg.method,
             gamma: cfg.gamma,
@@ -1048,7 +1228,7 @@ impl DistributedRunner {
             grad_star,
             workers,
             up_rx,
-            net: cfg.links.map(NetworkAccountant::new),
+            net,
             est: vec![0.0; d],
             q_scratch: (0..n).map(|_| Packet::Zero { dim: d as u32 }).collect(),
             c_scratch: (0..n).map(|_| Packet::Zero { dim: d as u32 }).collect(),
@@ -1100,6 +1280,18 @@ impl DistributedRunner {
             refresh_flags: vec![false; n],
             h_views: Vec::with_capacity(n),
             master_secs: 0.0,
+            quorum: cfg.quorum,
+            staleness: cfg.staleness,
+            sampler,
+            sampled: vec![true; n],
+            stale_slots: (0..n).map(|_| None).collect(),
+            stale_scratch: (0..n).map(|_| Packet::Zero { dim: d as u32 }).collect(),
+            stale_bounds: (0..n).map(|_| Vec::with_capacity(threads + 1)).collect(),
+            stale_flags: vec![false; n],
+            stale_failures: (0..n).map(|_| None).collect(),
+            alive_flags: vec![false; n],
+            pending_decode: Vec::with_capacity(n),
+            delta_bounds: Vec::with_capacity(threads + 1),
         }
     }
 
@@ -1376,6 +1568,14 @@ impl DistributedRunner {
             self.wire_bits[wi] = 0;
             self.compute[wi] = 0.0;
             self.resync_flags[wi] = false;
+            self.alive_flags[wi] = false;
+        }
+        // partial participation: draw this round's seeded sample S_k
+        // (exactly one draw per round — the mirror replays the identical
+        // schedule). Without a sampler the mask stays all-true.
+        if let Some(sampler) = self.sampler.as_mut() {
+            sampler.next_round();
+            self.sampled.copy_from_slice(sampler.mask());
         }
         // master-CPU accounting: the broadcast span is charged here, the
         // post-gather span inside finish_step — the gather wait between
@@ -1439,6 +1639,39 @@ impl DistributedRunner {
             if self.states[wi] != WorkerState::Active {
                 continue;
             }
+            if !self.sampled[wi] {
+                // sampled out of S_k: a sync-only command keeps this
+                // worker's replica generation-fresh at zero compute (no
+                // RNG draw, no reply, no gather slot, no miss penalty).
+                // A rejoining worker stays flagged for the next round it
+                // is sampled — deferring its bootstrap is safe because
+                // partial participation requires the fixed-shift method,
+                // so its h_i cannot drift meanwhile. A jammed queue is
+                // harmless (commands install in order, so the worker
+                // catches up on the next successful send); a disconnect
+                // is a confirmed thread exit either way.
+                match self.workers[wi].cmd_tx.try_send(WorkerCommand::Sync {
+                    k: self.round,
+                    gen,
+                    snap: snap.clone(),
+                    patch: patch.clone(),
+                }) {
+                    Ok(()) | Err(TrySendError::Full(_)) => {}
+                    Err(TrySendError::Disconnected(_)) => {
+                        self.quarantine_worker(
+                            wi,
+                            WorkerState::Failed,
+                            WorkerFailure {
+                                worker: wi,
+                                round,
+                                class: FailureClass::Crash,
+                                detail: "worker thread has exited (channel disconnected)".into(),
+                            },
+                        );
+                    }
+                }
+                continue;
+            }
             let recycled = std::mem::take(&mut self.frames_pool[wi]);
             let cmd = if self.rejoining[wi] {
                 // rejoin bootstrap: the shared dense resync frame from the
@@ -1496,45 +1729,41 @@ impl DistributedRunner {
 
         self.master_secs += broadcast_started.elapsed().as_secs_f64();
 
-        // gather (any arrival order; processed in worker order for exact
-        // fp-reproducibility). One deadline bounds the whole wait, so no
-        // fault configuration — hung workers, crashed threads, any mix —
-        // can stall the master past `round_timeout_ms`.
+        // gather (any arrival order; folded in worker order for exact
+        // fp-reproducibility): an **event-driven** round. The master
+        // blocks for the first arrival of each burst, then greedily
+        // drains everything already queued and validates + decodes the
+        // whole burst on the fold pool — overlapping the master's decode
+        // CPU with the wait for the remaining workers, so by the time the
+        // round closes only the serial accounting and the
+        // coordinate-sharded fold remain. With a `quorum` configured the
+        // round closes as soon as that many fresh updates have been
+        // admitted; one deadline still bounds the whole wait either way,
+        // so no fault configuration — hung workers, crashed threads, any
+        // mix — can stall the master past `round_timeout_ms`.
+        let method = self.method;
+        let needs_c = matches!(
+            method,
+            MethodKind::Star { with_c: true } | MethodKind::Diana { with_c: true, .. }
+        );
+        // decode-on-arrival runs only on the per-round path: the τ > 1
+        // batched fold re-walks each frame sub-step-major and keeps its
+        // own pooled validation pass below
+        let arrival_decode = self.local_steps == 1;
+        // with no quorum (or m ≥ the commanded count) the early close
+        // below can never fire before `received == expected` — the
+        // degenerate barrier round, bit-identical to the pre-quorum
+        // gather
+        let quorum_target = self.quorum.map(|m| m.min(expected)).unwrap_or(expected);
+        let mut closed_by_quorum = false;
         let deadline = Instant::now() + self.round_timeout;
         let mut received = 0usize;
-        while received < expected {
+        let mut admitted = 0usize;
+        'gather: while received < expected {
             let remaining = deadline.saturating_duration_since(Instant::now());
-            match self.up_rx.recv_timeout(remaining) {
-                Ok(upd) => {
-                    let wi = upd.worker;
-                    if upd.k != round {
-                        // stale update from a round the sender already
-                        // missed: reclaim the buffers, don't fold
-                        self.frames_pool[wi] = upd.frames;
-                        continue;
-                    }
-                    self.worker_replica_bytes[wi] = upd.replica_bytes;
-                    self.worker_overlay_nnz[wi] = upd.overlay_nnz;
-                    if upd.needs_resync {
-                        // the worker detected a snapshot-generation gap and
-                        // declined to compute against the stale base:
-                        // reclaim the buffers and schedule the rejoin
-                        // bootstrap for the next round. The thread is alive
-                        // and well-behaved — the arrival counts toward the
-                        // gather and carries no miss penalty.
-                        self.frames_pool[wi] = upd.frames;
-                        self.rejoining[wi] = true;
-                        self.resync_flags[wi] = true;
-                        received += 1;
-                        continue;
-                    }
-                    // each worker is charged its own measured compute when
-                    // the round is priced (staged/pipelined models)
-                    self.compute[wi] = upd.compute_secs;
-                    self.slots[wi] = Some(upd);
-                    received += 1;
-                }
-                Err(RecvTimeoutError::Timeout) => break,
+            let mut next = match self.up_rx.recv_timeout(remaining) {
+                Ok(upd) => Some(upd),
+                Err(RecvTimeoutError::Timeout) => break 'gather,
                 Err(RecvTimeoutError::Disconnected) => {
                     return Err(self.poison(WorkerFailure {
                         worker: WorkerFailure::NO_WORKER,
@@ -1543,6 +1772,158 @@ impl DistributedRunner {
                         detail: "every worker thread has exited".into(),
                     }));
                 }
+            };
+            self.pending_decode.clear();
+            while let Some(upd) = next {
+                let wi = upd.worker;
+                // any arrival — fresh or stale — proves the thread alive
+                // this round; the miss accounting below credits it
+                self.alive_flags[wi] = true;
+                if upd.k != round {
+                    if self.staleness
+                        && upd.k + 1 == round
+                        && upd.failure.is_none()
+                        && !upd.needs_resync
+                        && self.states[wi] == WorkerState::Active
+                        && self.stale_slots[wi].is_none()
+                    {
+                        // one-round-late gradient (the tail a quorum close
+                        // cut): admit it into THIS round's aggregate under
+                        // the delayed-gradient damping, decoded in the
+                        // same pooled burst as the fresh arrivals
+                        self.stale_slots[wi] = Some(upd);
+                        if arrival_decode {
+                            self.pending_decode.push((wi, true));
+                        }
+                    } else {
+                        // stale beyond the one-round window (or staleness
+                        // unarmed, or the sender left the rotation):
+                        // reclaim the buffers, don't fold
+                        self.frames_pool[wi] = upd.frames;
+                    }
+                    next = self.up_rx.try_recv().ok();
+                    continue;
+                }
+                self.worker_replica_bytes[wi] = upd.replica_bytes;
+                self.worker_overlay_nnz[wi] = upd.overlay_nnz;
+                if upd.needs_resync {
+                    // the worker detected a snapshot-generation gap and
+                    // declined to compute against the stale base:
+                    // reclaim the buffers and schedule the rejoin
+                    // bootstrap for the next round. The thread is alive
+                    // and well-behaved — the arrival counts toward the
+                    // gather and carries no miss penalty.
+                    self.frames_pool[wi] = upd.frames;
+                    self.rejoining[wi] = true;
+                    self.resync_flags[wi] = true;
+                    received += 1;
+                } else {
+                    // each worker is charged its own measured compute
+                    // when the round is priced (staged/pipelined models)
+                    self.compute[wi] = upd.compute_secs;
+                    let clean = upd.failure.is_none();
+                    self.slots[wi] = Some(upd);
+                    received += 1;
+                    if clean {
+                        // a failure-carrying update occupies its slot for
+                        // the quarantine pass below but is never decoded
+                        // and never advances the quorum
+                        admitted += 1;
+                        if arrival_decode {
+                            self.pending_decode.push((wi, false));
+                        }
+                    }
+                }
+                next = self.up_rx.try_recv().ok();
+            }
+            // pooled on-arrival decode of the burst: worker-sharded
+            // (`wi % T == s`), each shard walking its own workers' frames
+            // into their private scratch packets — worker-local state
+            // only, so no fp hazard; verdicts land in `fold_failures` /
+            // `stale_failures` for the serial passes to quarantine in
+            // worker order. This is Pass 1 of the per-round fold, run
+            // burst-by-burst while the gather is still waiting.
+            if !self.pending_decode.is_empty() {
+                let decode_started = Instant::now();
+                let threads = self.pool.threads();
+                let slots = &self.slots;
+                let stale_slots = &self.stale_slots;
+                let cuts = &self.cuts;
+                let batch = &self.pending_decode;
+                let q_scratch = ShardView::new(&mut self.q_scratch[..]);
+                let c_scratch = ShardView::new(&mut self.c_scratch[..]);
+                let q_bounds = ShardView::new(&mut self.q_bounds[..]);
+                let c_bounds = ShardView::new(&mut self.c_bounds[..]);
+                let failures = ShardView::new(&mut self.fold_failures[..]);
+                let stale_scratch = ShardView::new(&mut self.stale_scratch[..]);
+                let stale_bounds = ShardView::new(&mut self.stale_bounds[..]);
+                let stale_failures = ShardView::new(&mut self.stale_failures[..]);
+                self.pool.run(&|s| {
+                    for &(wi, is_stale) in batch {
+                        if wi % threads != s {
+                            continue;
+                        }
+                        if is_stale {
+                            let upd = stale_slots[wi].as_ref().expect("queued above");
+                            // SAFETY: worker wi belongs to exactly one
+                            // shard (wi % threads == s), so these element
+                            // borrows are disjoint across shards.
+                            let (q, qb, fail) = unsafe {
+                                (
+                                    stale_scratch.at(wi),
+                                    stale_bounds.at(wi),
+                                    stale_failures.at(wi),
+                                )
+                            };
+                            // staleness requires the fixed-shift method
+                            // (asserted at construction), so a stale
+                            // update carries exactly one Q frame
+                            *fail = decode_checked(
+                                &upd.frames.q_frame,
+                                q,
+                                d,
+                                wi,
+                                upd.k,
+                                "stale Q frame",
+                            )
+                            .err();
+                            if fail.is_none() {
+                                q.shard_bounds_into(cuts, qb);
+                            }
+                        } else {
+                            let upd = slots[wi].as_ref().expect("queued above");
+                            // SAFETY: as above — disjoint per-worker
+                            // element borrows.
+                            let (q, c, qb, cb, fail) = unsafe {
+                                (
+                                    q_scratch.at(wi),
+                                    c_scratch.at(wi),
+                                    q_bounds.at(wi),
+                                    c_bounds.at(wi),
+                                    failures.at(wi),
+                                )
+                            };
+                            *fail = decode_update_frames(method, wi, round, d, upd, q, c).err();
+                            if fail.is_none() {
+                                q.shard_bounds_into(cuts, qb);
+                                let c_folds = needs_c
+                                    || (matches!(method, MethodKind::RandDiana { .. })
+                                        && upd.frames.refresh.is_some());
+                                if c_folds {
+                                    c.shard_bounds_into(cuts, cb);
+                                }
+                            }
+                        }
+                    }
+                });
+                // decode CPU is master work even though it runs inside
+                // the gather span — it displaces the former post-gather
+                // Pass 1
+                self.master_secs += decode_started.elapsed().as_secs_f64();
+            }
+            if admitted >= quorum_target && received < expected {
+                closed_by_quorum = true;
+                break 'gather;
             }
         }
 
@@ -1561,17 +1942,36 @@ impl DistributedRunner {
         }
 
         // deadline-miss accounting: an Active worker without a fresh slot
-        // missed this round (gather timeout or jammed command queue)
+        // missed this round (gather timeout or jammed command queue).
+        // Sampled-out workers are frozen — no credit, no penalty. Any
+        // arrival this round (a stale frame included) resets the counter:
+        // a worker that keeps reporting just behind the quorum close is
+        // slow, not stuck.
         for wi in 0..n {
             if self.states[wi] != WorkerState::Active {
                 continue;
             }
-            if self.slots[wi].is_some() || self.resync_flags[wi] {
+            if !self.sampled[wi] {
+                continue;
+            }
+            if self.slots[wi].is_some() || self.resync_flags[wi] || self.alive_flags[wi] {
                 self.misses[wi] = 0;
                 continue;
             }
             self.misses[wi] += 1;
-            if self.misses[wi] >= self.quarantine_after {
+            // a quorum-closed round is weak evidence: the missing update
+            // may simply be the (m+1)-th fastest, already in flight. One
+            // extra consecutive miss is required before quarantining, so
+            // a perpetually-just-late worker is never cut (its stale
+            // arrivals keep resetting the counter above) while a
+            // genuinely dead worker still quarantines deterministically,
+            // one round later.
+            let threshold = if closed_by_quorum {
+                self.quarantine_after + 1
+            } else {
+                self.quarantine_after
+            };
+            if self.misses[wi] >= threshold {
                 let failure = WorkerFailure {
                     worker: wi,
                     round,
@@ -1607,7 +2007,6 @@ impl DistributedRunner {
             // workers' frames into their private scratch, so there is no
             // fp hazard; verdicts land in `fold_failures` and the serial
             // accounting below quarantines in worker order.
-            let method = self.method;
             let local_steps = self.local_steps;
             {
                 let threads = self.pool.threads();
@@ -1776,60 +2175,13 @@ impl DistributedRunner {
             ));
         }
 
-        // ---- per-round fold, in three passes (see the "Parallel fold"
-        // section of the module doc).
+        // ---- per-round fold (see the "Parallel fold" section of the
+        // module doc). Pass 1 — the worker-sharded pooled decode —
+        // already ran **inside the gather**, burst by burst as updates
+        // arrived, so the scratch packets and their shard bounds are
+        // populated and `fold_failures` / `stale_failures` carry the
+        // verdicts.
         //
-        // Pass 1 — parallel decode: worker-sharded on the fold pool
-        // (`wi % T == s`), each shard decoding its workers' frames into
-        // their private scratch packets and caching the packets' shard
-        // bounds. Worker-local state only, so there is no fp hazard;
-        // verdicts land in `fold_failures`.
-        let method = self.method;
-        let needs_c = matches!(
-            method,
-            MethodKind::Star { with_c: true } | MethodKind::Diana { with_c: true, .. }
-        );
-        {
-            let threads = self.pool.threads();
-            let slots = &self.slots;
-            let cuts = &self.cuts;
-            let q_scratch = ShardView::new(&mut self.q_scratch[..]);
-            let c_scratch = ShardView::new(&mut self.c_scratch[..]);
-            let q_bounds = ShardView::new(&mut self.q_bounds[..]);
-            let c_bounds = ShardView::new(&mut self.c_bounds[..]);
-            let failures = ShardView::new(&mut self.fold_failures[..]);
-            self.pool.run(&|s| {
-                let mut wi = s;
-                while wi < n {
-                    if let Some(upd) = slots[wi].as_ref() {
-                        // SAFETY: worker wi belongs to exactly one shard
-                        // (wi % threads == s), so these element borrows
-                        // are disjoint across shards.
-                        let (q, c, qb, cb, fail) = unsafe {
-                            (
-                                q_scratch.at(wi),
-                                c_scratch.at(wi),
-                                q_bounds.at(wi),
-                                c_bounds.at(wi),
-                                failures.at(wi),
-                            )
-                        };
-                        *fail = decode_update_frames(method, wi, round, d, upd, q, c).err();
-                        if fail.is_none() {
-                            q.shard_bounds_into(cuts, qb);
-                            let c_folds = needs_c
-                                || (matches!(method, MethodKind::RandDiana { .. })
-                                    && upd.frames.refresh.is_some());
-                            if c_folds {
-                                c.shard_bounds_into(cuts, cb);
-                            }
-                        }
-                    }
-                    wi += threads;
-                }
-            });
-        }
-
         // Pass 2 — serial accounting, in worker order: quarantine decode
         // failures, tally bits, recycle frame buffers, and mark who folds.
         for wi in 0..n {
@@ -1858,8 +2210,18 @@ impl DistributedRunner {
         let reporters = self.fold_flags.iter().filter(|&&f| f).count();
 
         if reporters == 0 {
-            // fully-degraded round: nobody reported, the iterate holds
-            // (the zero estimator ships as an empty delta)
+            // fully-degraded round: nobody fresh reported, the iterate
+            // holds (the zero estimator ships as an empty delta). Stale
+            // admissions, if any, are reclaimed rather than folded — a
+            // damped late gradient with no fresh reporter to anchor the
+            // round is not worth a special-cased denominator.
+            for wi in 0..n {
+                self.stale_flags[wi] = false;
+                self.stale_failures[wi] = None;
+                if let Some(upd) = self.stale_slots[wi].take() {
+                    self.frames_pool[wi] = upd.frames;
+                }
+            }
             zero(&mut self.est);
             return Ok(self.finish_step(
                 0,
@@ -1870,7 +2232,48 @@ impl DistributedRunner {
                 work_started,
             ));
         }
-        let inv = 1.0 / reporters as f64;
+
+        // Pass 2b — stale admissions, same serial worker-order discipline
+        // as the fresh pass: a one-round-late gradient (admitted by the
+        // gather under `staleness`) folds into THIS round damped by
+        // λ = [`crate::theory::staleness::damping`](1); decode failures
+        // quarantine their sender, bits tally into this round's
+        // accounting, frames recycle. A worker that reported both stale
+        // and fresh this round keeps both contributions — the weighted
+        // denominator below turns the pair into a proper weighted
+        // average of its two gradients.
+        for wi in 0..n {
+            self.stale_flags[wi] = false;
+            let Some(upd) = self.stale_slots[wi].take() else {
+                continue;
+            };
+            if let Some(f) = self.stale_failures[wi].take() {
+                self.frames_pool[wi] = upd.frames;
+                self.quarantine_worker(wi, WorkerState::Quarantined, f);
+                continue;
+            }
+            if self.states[wi] != WorkerState::Active {
+                // left the rotation between admission and fold (e.g. its
+                // fresh frame this round was malformed): reclaim, don't
+                // fold
+                self.frames_pool[wi] = upd.frames;
+                continue;
+            }
+            bits_up += upd.payload_bits;
+            self.wire_bits[wi] += upd.wire_bytes as u64 * 8;
+            // buffer-recycling collision: when this worker ALSO reported
+            // fresh, the fresh FrameSet already occupies the pool slot
+            // and this overwrite drops it — one transient allocation on
+            // the worker's next encode, accepted off the common path
+            self.frames_pool[wi] = upd.frames;
+            self.stale_flags[wi] = true;
+        }
+        let stale_folds = self.stale_flags.iter().filter(|&&f| f).count();
+        // weighted denominator: fresh gradients at weight 1, stale at λ.
+        // With no stale folds `reporters + λ·0` is bitwise `reporters`
+        // (x + 0.0 ≡ x for x > 0), so the barrier path is untouched.
+        let lam = crate::theory::staleness::damping(1);
+        let inv = 1.0 / (reporters as f64 + lam * stale_folds as f64);
 
         // Pass 3 — coordinate-sharded fold: each shard replays the full
         // serial op sequence — shift-sum seed, missed-worker subtraction,
@@ -1886,11 +2289,14 @@ impl DistributedRunner {
             let cuts = &self.cuts;
             let states = &self.states;
             let folds = &self.fold_flags;
+            let stales = &self.stale_flags;
             let refreshes = &self.refresh_flags;
             let q_scratch = &self.q_scratch;
             let c_scratch = &self.c_scratch;
+            let stale_scratch = &self.stale_scratch;
             let q_bounds = &self.q_bounds;
             let c_bounds = &self.c_bounds;
+            let stale_bounds = &self.stale_bounds;
             let grad_star = &self.grad_star;
             let h_views = &self.h_views;
             let est_view = ShardView::new(&mut self.est);
@@ -1965,6 +2371,23 @@ impl DistributedRunner {
                             }
                         }
                     }
+                }
+                // stale folds ride after the fresh reporters, in worker
+                // order: the estimator gains λ·inv·(h_i + q_i^{k−1}) per
+                // stale admission. The missed-worker subtraction above
+                // already removed the full inv·h_i for a stale-only
+                // worker, so adding λ·inv·h_i back here leaves exactly
+                // the damped weight. (Staleness requires the fixed-shift
+                // method — asserted at construction — so no shift
+                // learning replays here.)
+                for wi in 0..n {
+                    if !stales[wi] {
+                        continue;
+                    }
+                    let sb = (stale_bounds[wi][s], stale_bounds[wi][s + 1]);
+                    let h_wi = unsafe { h_views[wi].slice(lo, hi) };
+                    axpy(lam * inv, h_wi, est);
+                    stale_scratch[wi].add_scaled_range(lam * inv, lo, hi, sb, est);
                 }
             });
         }
@@ -2079,7 +2502,20 @@ impl DistributedRunner {
         bits_refresh: u64,
         work_started: Instant,
     ) -> StepStats {
-        if reporters < self.workers.len() {
+        // a round is degraded when some worker's contribution went
+        // missing *unexpectedly*: sampled-out workers were excluded by
+        // design and a quorum-cut worker whose frame folded late (a
+        // stale fold this round) did contribute. Without a sampler and
+        // without staleness both extra terms are zero and this reduces
+        // exactly to the historical `reporters < n`.
+        let sampled_out = self
+            .states
+            .iter()
+            .zip(self.sampled.iter())
+            .filter(|&(s, &on)| *s == WorkerState::Active && !on)
+            .count();
+        let stale_folds = self.stale_flags.iter().filter(|&&f| f).count();
+        if reporters + stale_folds + sampled_out < self.workers.len() {
             self.degraded_rounds += 1;
         }
         let d = self.x.len();
@@ -2101,12 +2537,35 @@ impl DistributedRunner {
             &self.est
         };
         let delta = wire::build_update_packet(g, -self.gamma, self.prec, &mut self.delta);
-        delta.add_scaled_into(1.0, &mut self.x);
+        // pooled apply: x += 1·delta, coordinate-sharded on the fold
+        // pool. Elementwise-disjoint writes, so bit-identical to the
+        // serial `add_scaled_into` for every pool width.
+        delta.shard_bounds_into(&self.cuts, &mut self.delta_bounds);
+        {
+            let cuts = &self.cuts;
+            let db = &self.delta_bounds;
+            let xv = ShardView::new(&mut self.x);
+            self.pool.run(&|s| {
+                let (lo, hi) = (cuts[s], cuts[s + 1]);
+                if lo < hi {
+                    // SAFETY: shard ranges are disjoint.
+                    delta.add_scaled_range(1.0, lo, hi, (db[s], db[s + 1]), unsafe {
+                        xv.slice(lo, hi)
+                    });
+                }
+            });
+        }
         // keep the replica mirror bit-equal to the workers: same packet,
         // same operation — on the EF path this also rebuilds the overlay
         // (−e on its support) and re-materializes the mirror x̂ through
-        // the same kernel the workers use
-        let bcast: &Packet = self.dl.fold_packet(delta, &self.x, self.prec);
+        // the same kernel the workers use. The EF compress itself stays
+        // serial (compressor tie-breaking is order-sensitive); the O(d)
+        // mirror materialization is sharded on the pool.
+        let pool = &self.pool;
+        let cuts = &self.cuts;
+        let bcast: &Packet =
+            self.dl
+                .fold_packet_pooled(delta, &self.x, self.prec, &|f| pool.run(f), cuts);
         // pre-encode next round's downlink into the buffer this round
         // retired (all round-k updates are in, so every worker has dropped
         // its handle from round k−1)
@@ -2129,6 +2588,12 @@ impl DistributedRunner {
         // overlapped with its uplink transfer when pipelining is on.
         let bits_down = broadcast_count as u64 * down_frame_bits;
         if let Some(net) = &mut self.net {
+            if self.sampler.is_some() {
+                // partial participation: only S_k's links carry traffic
+                // this round, so the round clock races the sampled subset
+                // (one-shot mask, consumed by the pricing call below)
+                net.set_round_mask(&self.sampled);
+            }
             if self.pipeline {
                 net.round_pipelined(
                     &self.wire_bits,

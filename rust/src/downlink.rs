@@ -310,6 +310,53 @@ impl DownlinkState {
         }
     }
 
+    /// [`Self::fold_packet`] with the O(d) mirror re-materialization
+    /// sharded across a caller-supplied parallel runner (the threaded
+    /// runner hands in its fold pool; `cuts` are the pool's coordinate
+    /// shard cuts). Per shard the kernel is the same
+    /// `copy_from_slice` + [`OverlayPatch::apply_range`] `+=` sequence
+    /// the serial [`materialize_into`] performs on those coordinates, so
+    /// the mirror is bit-identical for any shard count — including the
+    /// single-process drivers that keep calling the serial form. The EF
+    /// fold-and-compress itself stays serial: compressor tie-breaking
+    /// (Top-K ordering, randomized draws) is sequence-sensitive, and the
+    /// downstream bit-packed frame encode is a single bit stream either
+    /// way. Exact-path calls (`ef = None`) do no materialization at all
+    /// and never invoke the runner.
+    pub fn fold_packet_pooled<'a>(
+        &'a mut self,
+        delta: &'a Packet,
+        x_new: &[f64],
+        prec: ValPrec,
+        par: &dyn Fn(&(dyn Fn(usize) + Sync)),
+        cuts: &[usize],
+    ) -> &'a Packet {
+        match &mut self.ef {
+            Some(ef) => {
+                ef.fold_and_compress(delta, prec);
+                self.overlay.rebuild_from_error(ef.error());
+                if self.x_hat.len() != x_new.len() {
+                    self.x_hat.resize(x_new.len(), 0.0);
+                }
+                {
+                    let overlay = &self.overlay;
+                    let x_hat = crate::coordinator::pool::ShardView::new(&mut self.x_hat);
+                    par(&|s| {
+                        let (lo, hi) = (cuts[s], cuts[s + 1]);
+                        if lo < hi {
+                            // SAFETY: shard ranges are disjoint.
+                            let sub = unsafe { x_hat.slice(lo, hi) };
+                            sub.copy_from_slice(&x_new[lo..hi]);
+                            overlay.apply_range(lo, hi, sub);
+                        }
+                    });
+                }
+                ef.packet()
+            }
+            None => delta,
+        }
+    }
+
     /// Account this round's broadcast for a driver whose iterate advances
     /// through a pre-quantized delta packet (the DCGD-SHIFT family):
     /// returns this round's `bits_down` across `n` workers and builds the

@@ -30,6 +30,20 @@
 //!   ≤ the staged cost, so the simulated wall clock honestly reflects the
 //!   overlap instead of charging `compute + comm`.
 //!
+//! # Quorum pricing and per-round participation masks
+//!
+//! Semi-async rounds close as soon as `m` of the active workers have
+//! arrived, so the round's wall clock is the **m-th fastest** worker's
+//! finish time, not the fleet max ([`NetworkAccountant::set_quorum`]).
+//! Partial participation samples a subset S_k per round; a worker
+//! sampled out for one round is masked with the one-shot
+//! [`NetworkAccountant::set_round_mask`] (the sticky
+//! [`NetworkAccountant::set_worker_active`] expresses quarantine, which
+//! persists across rounds — the mask composes with it and clears itself
+//! after the next priced round). A masked-out worker contributes neither
+//! link time nor traffic, so a masked round prices exactly like the
+//! smaller fleet (unit-pinned below).
+//!
 //! Trajectories never depend on which pricing is used — only `sim_time`
 //! does.
 
@@ -129,6 +143,16 @@ pub struct NetworkAccountant {
     /// neither link time nor traffic — a round with f workers masked out
     /// costs exactly what an (n−f)-fleet round costs (unit-pinned below)
     pub active: Vec<bool>,
+    /// quorum size: when `Some(m)`, a round's wall clock is the m-th
+    /// fastest participant's finish time instead of the max (the
+    /// semi-async close rule); `m ≥ participants` degenerates to the max
+    quorum: Option<usize>,
+    /// one-shot per-round participation mask (see the module doc);
+    /// consumed and cleared by the next priced round
+    round_mask: Vec<bool>,
+    round_mask_on: bool,
+    /// reused sort scratch for the quorum order statistic
+    times_scratch: Vec<f64>,
 }
 
 impl NetworkAccountant {
@@ -151,6 +175,31 @@ impl NetworkAccountant {
     /// the coordinator flips this on quarantine and rejoin.
     pub fn set_worker_active(&mut self, wi: usize, on: bool) {
         self.active[wi] = on;
+    }
+
+    /// Price rounds under an `m`-quorum close: the round's wall clock is
+    /// the m-th smallest participant finish time (ties broken by
+    /// `total_cmp`, so the statistic is deterministic). `None` (or
+    /// `m ≥ participants`) restores the barrier max. Sticky, unlike the
+    /// per-round mask — the close rule is a property of the run.
+    pub fn set_quorum(&mut self, m: Option<usize>) {
+        if let Some(m) = m {
+            assert!(m >= 1, "quorum must be at least 1");
+        }
+        self.quorum = m;
+    }
+
+    /// Mask the **next priced round only**: workers with `mask[wi] ==
+    /// false` are sampled out of that round — no link time, no traffic —
+    /// and the mask clears itself once the round is priced. Composes with
+    /// the sticky [`Self::set_worker_active`] (a quarantined worker stays
+    /// out either way). Reuses an internal buffer, so steady-state rounds
+    /// stay allocation-free.
+    pub fn set_round_mask(&mut self, mask: &[bool]) {
+        assert_eq!(mask.len(), self.links.len());
+        self.round_mask.clear();
+        self.round_mask.extend_from_slice(mask);
+        self.round_mask_on = true;
     }
 
     /// Price one synchronous round: `up_bits[i]` is worker i's uplink
@@ -197,10 +246,12 @@ impl NetworkAccountant {
     }
 
     /// Shared straggler fold: `worker_time(link, up_bits, worker)` prices
-    /// one worker's round; the slowest *active* worker defines the round's
-    /// wall-clock contribution, and the traffic totals accumulate over the
-    /// active workers only (a quarantined worker neither receives the
-    /// broadcast nor ships an uplink).
+    /// one worker's round; the slowest *participating* worker defines the
+    /// round's wall-clock contribution — or the m-th fastest under an
+    /// [`Self::set_quorum`] close — and the traffic totals accumulate over
+    /// the participants only (a quarantined or sampled-out worker neither
+    /// receives the broadcast nor ships an uplink). A one-shot
+    /// [`Self::set_round_mask`] is consumed here.
     fn finish_round(
         &mut self,
         up_bits: &[u64],
@@ -208,20 +259,34 @@ impl NetworkAccountant {
         worker_time: impl Fn(&LinkModel, u64, usize) -> f64,
     ) -> f64 {
         assert_eq!(up_bits.len(), self.links.len());
-        let mut slowest: f64 = 0.0;
+        self.times_scratch.clear();
         let mut active_count: u64 = 0;
         for (wi, (bits, link)) in up_bits.iter().zip(self.links.iter()).enumerate() {
-            if !self.active[wi] {
+            if !self.active[wi] || (self.round_mask_on && !self.round_mask[wi]) {
                 continue;
             }
             active_count += 1;
-            slowest = slowest.max(worker_time(link, *bits, wi));
+            self.times_scratch.push(worker_time(link, *bits, wi));
             self.total_up_bits += bits;
         }
+        self.round_mask_on = false;
+        let round_time = match self.quorum {
+            Some(m) if m < self.times_scratch.len() => {
+                // m-th order statistic of the participant finish times:
+                // the round closed once m arrivals were in, so the tail
+                // beyond the m-th fastest costs nothing.
+                self.times_scratch.sort_unstable_by(|a, b| a.total_cmp(b));
+                self.times_scratch[m - 1]
+            }
+            _ => self
+                .times_scratch
+                .iter()
+                .fold(0.0_f64, |acc, t| acc.max(*t)),
+        };
         self.total_down_bits += down_bits * active_count;
-        self.sim_time += slowest;
+        self.sim_time += round_time;
         self.rounds += 1;
-        slowest
+        round_time
     }
 }
 
@@ -376,6 +441,107 @@ mod tests {
             p4.round_pipelined(&up4, down, &comp4, 4),
             p2.round_pipelined(&up2, down, &comp2, 4)
         );
+    }
+
+    #[test]
+    fn quorum_prices_the_mth_fastest_arrival() {
+        // latency-only spread so worker i's round time is exactly
+        // (1 + i) * base_latency * 2 (up + down, no transfer time)
+        let fleet = LinkModel::heterogeneous_fleet(
+            4,
+            LinkModel {
+                up_bps: 1e9,
+                down_bps: 1e9,
+                latency: 0.01,
+            },
+            0.0,
+            1.0,
+        );
+        let up = [0u64; 4];
+        let mut barrier = NetworkAccountant::new(fleet.clone());
+        let t_max = barrier.round(&up, 0);
+        assert!((t_max - 0.08).abs() < 1e-12, "barrier round {t_max}");
+
+        let mut q2 = NetworkAccountant::new(fleet.clone());
+        q2.set_quorum(Some(2));
+        let t2 = q2.round(&up, 0);
+        // 2nd fastest of {0.02, 0.04, 0.06, 0.08}
+        assert!((t2 - 0.04).abs() < 1e-12, "quorum-2 round {t2}");
+        // traffic still accumulates over every participant: the tail
+        // workers' frames were in flight (and are folded stale later)
+        barrier.round(&[1_000, 2_000, 3_000, 4_000], 640);
+        q2.round(&[1_000, 2_000, 3_000, 4_000], 640);
+        assert_eq!(q2.total_down_bits, barrier.total_down_bits);
+        assert_eq!(q2.total_up_bits, barrier.total_up_bits);
+
+        // m = n degenerates to the barrier max
+        let mut qn = NetworkAccountant::new(fleet);
+        qn.set_quorum(Some(4));
+        assert_eq!(qn.round(&up, 0), t_max);
+    }
+
+    #[test]
+    fn quorum_order_statistic_ignores_masked_workers() {
+        // quarantine the slowest worker: quorum 2 is now the 2nd fastest
+        // of the three survivors
+        let fleet = LinkModel::heterogeneous_fleet(
+            4,
+            LinkModel {
+                up_bps: 1e9,
+                down_bps: 1e9,
+                latency: 0.01,
+            },
+            0.0,
+            1.0,
+        );
+        let mut acc = NetworkAccountant::new(fleet);
+        acc.set_quorum(Some(3));
+        acc.set_worker_active(3, false);
+        let t = acc.round(&[0; 4], 0);
+        // participants {0.02, 0.04, 0.06}; 3rd fastest = 0.06
+        assert!((t - 0.06).abs() < 1e-12, "masked quorum round {t}");
+    }
+
+    #[test]
+    fn one_shot_round_mask_prices_like_the_smaller_fleet_then_clears() {
+        let fleet = LinkModel::heterogeneous_fleet(4, LinkModel::default(), 1.0, 1.0);
+        let survivors = vec![fleet[0], fleet[2]];
+        let up4 = [1_000_000u64, 77, 500_000, 77];
+        let up2 = [1_000_000u64, 500_000];
+        let comp4 = [0.25, 9.0, 1.0, 9.0];
+        let comp2 = [0.25, 1.0];
+        let down = 640_000u64;
+
+        let mut m4 = NetworkAccountant::new(fleet.clone());
+        let mut m2 = NetworkAccountant::new(survivors);
+        m4.set_round_mask(&[true, false, true, false]);
+        assert_eq!(
+            m4.round_staged(&up4, down, &comp4),
+            m2.round_staged(&up2, down, &comp2)
+        );
+        assert_eq!(m4.total_up_bits, m2.total_up_bits);
+        assert_eq!(m4.total_down_bits, m2.total_down_bits);
+
+        // the mask is one-shot: the next round prices the full fleet again
+        let mut full = NetworkAccountant::new(fleet);
+        let t_full = full.round_staged(&up4, down, &comp4);
+        assert_eq!(m4.round_staged(&up4, down, &comp4), t_full);
+    }
+
+    #[test]
+    fn round_mask_composes_with_sticky_quarantine() {
+        let fleet = LinkModel::heterogeneous_fleet(4, LinkModel::default(), 1.0, 1.0);
+        let survivor = vec![fleet[2]];
+        let mut acc = NetworkAccountant::new(fleet);
+        acc.set_worker_active(0, false); // quarantined (sticky)
+        acc.set_round_mask(&[true, false, true, false]); // sampled out (one round)
+        let mut one = NetworkAccountant::new(survivor);
+        assert_eq!(
+            acc.round(&[9, 9, 500_000, 9], 640),
+            one.round(&[500_000], 640)
+        );
+        assert_eq!(acc.total_up_bits, one.total_up_bits);
+        assert_eq!(acc.total_down_bits, one.total_down_bits);
     }
 
     #[test]

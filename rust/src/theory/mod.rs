@@ -20,6 +20,8 @@
 
 use crate::problems::Problem;
 
+pub mod staleness;
+
 /// Everything an algorithm instance needs from the theory.
 #[derive(Clone, Copy, Debug)]
 pub struct StepSizes {

@@ -1,0 +1,106 @@
+//! Bounded-staleness corrections for the semi-async coordinator.
+//!
+//! When the gather closes on a quorum of m < n arrivals, the tail
+//! workers' frames land **after** the round advanced the iterate — they
+//! are folded into round k+1 as one-round-stale gradients. A gradient
+//! evaluated at `x^{k−τ}` and applied at `x^k` perturbs the descent
+//! direction by at most `L · Σ_{j=k−τ}^{k−1} ‖x^{j+1} − x^j‖`, and the
+//! classical delayed-gradient analyses (asynchronous SGD with bounded
+//! delay) absorb that perturbation by shrinking the step:
+//!
+//! ```text
+//! γ(τ) ≤ γ(0) / (1 + 2τ)
+//! ```
+//!
+//! where `γ(0)` is the synchronous step of the underlying method and τ
+//! the worst-case staleness admitted by the runner (τ = 1 for the
+//! quorum-gather: a frame is either fresh or exactly one round late —
+//! older frames are discarded). On top of the step-size rule, a stale
+//! fold is **damped** by [`damping`]`(τ) = 1/(1 + τ)` so a
+//! perpetually-late worker contributes a convex fraction of its weight
+//! instead of double-counting against the fresh quorum.
+//!
+//! Both rules are conservative specializations: the semi-async runner
+//! only ever produces τ ∈ {0, 1}, and τ = 0 recovers the synchronous
+//! constants exactly (pinned in the tests below).
+
+use super::{dcgd_fixed, StepSizes};
+use crate::problems::Problem;
+
+/// The stale-fold damping factor `λ(τ) = 1/(1 + τ)`: a fresh frame
+/// (τ = 0) folds at full weight, a one-round-late frame at half weight.
+/// Multiplies the estimator's `1/|R|` fold weight for the stale member
+/// of the reporting set.
+pub fn damping(tau: usize) -> f64 {
+    1.0 / (1.0 + tau as f64)
+}
+
+/// DCGD with fixed shifts under bounded staleness τ: the Theorem-1 step
+/// `γ(0) ≤ 1/(L + 2 max_i(L_i ω_i)/n)` shrinks by the delayed-gradient
+/// factor `1 + 2τ`,
+///
+/// ```text
+/// γ(τ) = γ(0) / (1 + 2τ),
+/// ```
+///
+/// and the linear rate bound becomes `1 − γ(τ)μ`. `τ = 0` is exactly
+/// [`dcgd_fixed`].
+pub fn dcgd_delayed(p: &dyn Problem, omega: &[f64], tau: usize) -> StepSizes {
+    let base = dcgd_fixed(p, omega);
+    let gamma = base.gamma / (1.0 + 2.0 * tau as f64);
+    StepSizes {
+        gamma,
+        alpha: 0.0,
+        eta: 0.0,
+        m: 0.0,
+        rate: 1.0 - gamma * p.mu(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::Quadratic;
+
+    fn prob() -> Quadratic {
+        Quadratic::random(10, 4, 1.0, 20.0, 1)
+    }
+
+    #[test]
+    fn zero_staleness_recovers_the_synchronous_rule() {
+        let p = prob();
+        let omega = vec![4.0; 4];
+        let sync = dcgd_fixed(&p, &omega);
+        let stale = dcgd_delayed(&p, &omega, 0);
+        assert!((stale.gamma - sync.gamma).abs() < 1e-15);
+        assert!((stale.rate - sync.rate).abs() < 1e-15);
+    }
+
+    #[test]
+    fn gamma_shrinks_by_one_plus_two_tau() {
+        let p = prob();
+        let omega = vec![4.0; 4];
+        let sync = dcgd_fixed(&p, &omega);
+        let mut prev = f64::INFINITY;
+        for tau in 0..4 {
+            let ss = dcgd_delayed(&p, &omega, tau);
+            let expect = sync.gamma / (1.0 + 2.0 * tau as f64);
+            assert!((ss.gamma - expect).abs() < 1e-15, "τ = {tau}");
+            assert!(ss.gamma < prev, "γ must shrink with τ");
+            assert!(ss.rate < 1.0 && ss.rate > 0.0, "τ = {tau}: rate {}", ss.rate);
+            prev = ss.gamma;
+        }
+    }
+
+    #[test]
+    fn damping_is_convex_and_halves_at_one_round() {
+        assert!((damping(0) - 1.0).abs() < 1e-15);
+        assert!((damping(1) - 0.5).abs() < 1e-15);
+        assert!((damping(3) - 0.25).abs() < 1e-15);
+        for tau in 0..16 {
+            let l = damping(tau);
+            assert!(l > 0.0 && l <= 1.0);
+            assert!(l >= damping(tau + 1));
+        }
+    }
+}

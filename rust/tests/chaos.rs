@@ -350,3 +350,137 @@ fn quarantine_rejoin_flushes_ef_uplink_accumulator() {
         );
     }
 }
+
+/// (5) Semi-async composition. Two pins:
+///
+/// * partial participation + a crash: the cluster with a seeded 0.6
+///   sampler degrades **bit-identically** to a mirror that replays the
+///   same sampler stream and quarantines the same worker before the same
+///   round — the reporter set is `S_k ∩ active` on both drivers. Worker 0
+///   is crashed deliberately because the sampler's worker-0-clean
+///   guarantee makes its first commanded round (= the crash round)
+///   deterministic.
+/// * an m = n−1 quorum + a straggler: rounds the straggler misses close
+///   by quorum instead of eating the gather deadline (liveness), a
+///   quorum-closed miss gets one round of grace
+///   (`quarantine_after + 1` misses — a merely-late worker must not be
+///   confused with a dead one), and the rejoin path composes: after
+///   readmission the whole fleet is Active again.
+#[test]
+fn semi_async_composes_with_quarantine_and_rejoin() {
+    // ---- participation × crash ≡ the seeded degraded mirror
+    let p = Arc::new(Ridge::paper_default(3));
+    let d = p.dim();
+    let n = p.n_workers();
+    let (crashed, crash_round) = (0usize, 12usize);
+    let mut single = DcgdShift::dcgd(p.as_ref(), RandK::with_q(d, 0.3), 17)
+        .with_participation(0.6);
+    let gamma = single.gamma;
+    let pd: Arc<dyn Problem> = p.clone();
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(RandK::with_q(d, 0.3)) as Box<dyn Compressor>)
+        .collect();
+    let mut dist = DistributedRunner::new(
+        pd.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::Fixed,
+            gamma,
+            prec: ValPrec::F64,
+            seed: 17,
+            participation: Some(0.6),
+            faults: Some(FaultPlan::new().crash(crashed, crash_round)),
+            round_timeout_ms: TEST_TIMEOUT_MS,
+            quarantine_after: 1,
+            ..Default::default()
+        },
+    );
+    for k in 0..30 {
+        if k == crash_round {
+            single.quarantine_worker(crashed);
+        }
+        let ss = single.step(p.as_ref());
+        let sd = dist
+            .try_step(p.as_ref())
+            .unwrap_or_else(|f| panic!("round {k}: crash under participation fatal: {f}"));
+        assert_eq!(single.x(), dist.x(), "iterates diverged at round {k}");
+        assert_eq!(
+            ss.active_workers, sd.active_workers,
+            "reporter counts diverged at round {k}"
+        );
+    }
+    let health = dist.health();
+    assert_eq!(health.states[crashed], WorkerState::Quarantined);
+    assert_eq!(health.active_workers, n - 1);
+    let f = dist.last_failure(crashed).expect("failure recorded");
+    assert_eq!(f.class, FailureClass::Timeout);
+    assert_eq!(f.round, crash_round, "worker 0 is always sampled, so the \
+         crash surfaces at exactly the crash round");
+
+    // ---- quorum × straggle: fast closes, one-round grace, rejoin
+    let (straggler, from, window) = (2usize, 8usize, 2usize);
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(RandK::with_q(d, 0.3)) as Box<dyn Compressor>)
+        .collect();
+    let mut dist = DistributedRunner::new(
+        pd,
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method: MethodKind::Fixed,
+            gamma,
+            prec: ValPrec::F64,
+            seed: 19,
+            quorum: Some(n - 1),
+            staleness: true,
+            faults: Some(FaultPlan::new().straggle(straggler, from, window)),
+            round_timeout_ms: TEST_TIMEOUT_MS,
+            quarantine_after: 1,
+            ..Default::default()
+        },
+    );
+    for k in 0..from {
+        dist.try_step(p.as_ref())
+            .unwrap_or_else(|f| panic!("healthy round {k} failed: {f}"));
+    }
+    // first straggled round: the quorum closes the round without the
+    // straggler and without waiting out the deadline — and a
+    // quorum-closed miss is NOT yet a quarantine (one round of grace)
+    let t0 = std::time::Instant::now();
+    dist.try_step(p.as_ref())
+        .unwrap_or_else(|f| panic!("first straggled round failed: {f}"));
+    let first_straggled = t0.elapsed();
+    assert!(
+        first_straggled.as_millis() < TEST_TIMEOUT_MS as u128,
+        "a quorum close must beat the {TEST_TIMEOUT_MS} ms deadline, took {first_straggled:?}"
+    );
+    assert_eq!(
+        dist.health().states[straggler],
+        WorkerState::Active,
+        "a single quorum-closed miss gets grace, not quarantine"
+    );
+    // second straggled round: two consecutive quorum-closed misses cross
+    // the quarantine_after + 1 threshold
+    dist.try_step(p.as_ref())
+        .unwrap_or_else(|f| panic!("second straggled round failed: {f}"));
+    assert_eq!(dist.health().states[straggler], WorkerState::Quarantined);
+    let f = dist.last_failure(straggler).expect("failure recorded");
+    assert_eq!(f.class, FailureClass::Timeout);
+    assert_eq!(f.round, from + 1, "quarantined one round later than the \
+         barrier gather would (quorum grace)");
+    assert_eq!(dist.health().active_workers, n - 1);
+
+    // the window is over; readmit and the full fleet must settle back in
+    dist.try_step(p.as_ref()).unwrap();
+    dist.rejoin(straggler).expect("straggler thread is alive");
+    for k in 0..6 {
+        dist.try_step(p.as_ref())
+            .unwrap_or_else(|f| panic!("post-rejoin round {k} failed: {f}"));
+    }
+    assert_eq!(dist.health().active_workers, n);
+    assert!(dist.health().states.iter().all(|s| *s == WorkerState::Active));
+    assert!(dist.x().iter().all(|v| v.is_finite()));
+}

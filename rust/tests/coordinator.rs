@@ -1600,3 +1600,267 @@ fn ef_uplink_composes_with_ef_downlink_and_local_steps() {
         );
     }
 }
+
+// ------------------------------------- semi-async rounds (quorum gather)
+
+/// Build a cluster with the semi-async knobs spelled out. Everything else
+/// follows `mk_ef_uplink_cluster`'s conventions (clone-per-worker `q`,
+/// zero shifts, no links).
+#[allow(clippy::too_many_arguments)]
+fn mk_knobbed_cluster(
+    p: &Arc<Ridge>,
+    method: MethodKind,
+    gamma: f64,
+    q: &(impl Compressor + Clone + 'static),
+    seed: u64,
+    prec: ValPrec,
+    local_steps: usize,
+    uplink_ef: bool,
+    downlink: Option<Box<dyn Compressor>>,
+    master_threads: Option<usize>,
+    quorum: Option<usize>,
+    participation: Option<f64>,
+    staleness: bool,
+) -> DistributedRunner {
+    let d = p.dim();
+    let n = p.n_workers();
+    let qs: Vec<Box<dyn Compressor>> = (0..n)
+        .map(|_| Box::new(q.clone()) as Box<dyn Compressor>)
+        .collect();
+    DistributedRunner::new(
+        p.clone(),
+        qs,
+        None,
+        vec![vec![0.0; d]; n],
+        ClusterConfig {
+            method,
+            gamma,
+            prec,
+            seed,
+            local_steps,
+            uplink_ef,
+            downlink,
+            master_threads,
+            quorum,
+            participation,
+            staleness,
+            ..Default::default()
+        },
+    )
+}
+
+/// The degenerate pin, across the feature matrix: `quorum = n` plus
+/// `participation = 1.0` (and, where legal, `staleness: true` with a
+/// quorum that never cuts anyone) is the barrier round bit for bit —
+/// the quorum early-close is unreachable when the target equals the
+/// fleet, the all-in sampler commands everyone, and the stale lane
+/// stays empty. Covered: f64/f32 wire, EF uplink, EF downlink, batched
+/// `local_steps`, fold-pool widths 1 and 4.
+#[test]
+fn semi_async_degenerate_knobs_bit_identical_to_barrier() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+
+    let mut check = |mut knobbed: DistributedRunner,
+                     mut barrier: DistributedRunner,
+                     rounds: usize,
+                     label: &str| {
+        for k in 0..rounds {
+            let a = knobbed.step(p.as_ref());
+            let b = barrier.step(p.as_ref());
+            assert_eq!(knobbed.x(), barrier.x(), "{label}: iterates diverged at round {k}");
+            assert_eq!(a.bits_up, b.bits_up, "{label}: bits_up at round {k}");
+            assert_eq!(a.bits_down, b.bits_down, "{label}: bits_down at round {k}");
+        }
+        assert_eq!(
+            knobbed.health().degraded_rounds, 0,
+            "{label}: a full quorum with an all-in sampler must never degrade"
+        );
+    };
+
+    let q = RandK::with_q(d, 0.3);
+    let omega = q.omega().unwrap();
+    let ss = shiftcomp::theory::dcgd_fixed(p.as_ref(), &vec![omega; n]);
+
+    // f64 wire, serial and 4-way fold pools; staleness armed but starved
+    for t in [1usize, 4] {
+        check(
+            mk_knobbed_cluster(
+                &p, MethodKind::Fixed, ss.gamma, &q, 101, ValPrec::F64, 1, false, None,
+                Some(t), Some(n), Some(1.0), true,
+            ),
+            mk_knobbed_cluster(
+                &p, MethodKind::Fixed, ss.gamma, &q, 101, ValPrec::F64, 1, false, None,
+                Some(t), None, None, false,
+            ),
+            30,
+            &format!("f64 T={t}"),
+        );
+    }
+
+    // f32 wire precision
+    check(
+        mk_knobbed_cluster(
+            &p, MethodKind::Fixed, ss.gamma, &q, 103, ValPrec::F32, 1, false, None,
+            Some(4), Some(n), Some(1.0), true,
+        ),
+        mk_knobbed_cluster(
+            &p, MethodKind::Fixed, ss.gamma, &q, 103, ValPrec::F32, 1, false, None,
+            Some(4), None, None, false,
+        ),
+        30,
+        "f32 wire",
+    );
+
+    // EF uplink (contractive Top-K fleet)
+    let qe = TopK::with_q(d, 0.15);
+    let delta = qe.delta().unwrap();
+    let ef = shiftcomp::theory::ef_uplink(p.as_ref(), &vec![delta; n]);
+    check(
+        mk_knobbed_cluster(
+            &p, MethodKind::Fixed, ef.gamma, &qe, 105, ValPrec::F64, 1, true, None,
+            Some(4), Some(n), Some(1.0), true,
+        ),
+        mk_knobbed_cluster(
+            &p, MethodKind::Fixed, ef.gamma, &qe, 105, ValPrec::F64, 1, true, None,
+            Some(4), None, None, false,
+        ),
+        30,
+        "EF uplink",
+    );
+
+    // EF downlink (the pooled materialize is on both sides; the knobs
+    // must not perturb the shared replica/overlay state machine)
+    check(
+        mk_knobbed_cluster(
+            &p, MethodKind::Fixed, ss.gamma, &q, 107, ValPrec::F64, 1, false,
+            Some(Box::new(TopK::with_q(d, 0.25))), Some(4), Some(n), Some(1.0), true,
+        ),
+        mk_knobbed_cluster(
+            &p, MethodKind::Fixed, ss.gamma, &q, 107, ValPrec::F64, 1, false,
+            Some(Box::new(TopK::with_q(d, 0.25))), Some(4), None, None, false,
+        ),
+        30,
+        "EF downlink",
+    );
+
+    // batched local steps: only `quorum = n` composes with τ > 1 (the
+    // sampler and the stale lane are per-round constructions), and it
+    // must still be the exact barrier batch round
+    check(
+        mk_knobbed_cluster(
+            &p, MethodKind::Fixed, ss.gamma, &q, 109, ValPrec::F64, 3, false, None,
+            Some(4), Some(n), None, false,
+        ),
+        mk_knobbed_cluster(
+            &p, MethodKind::Fixed, ss.gamma, &q, 109, ValPrec::F64, 3, false, None,
+            Some(4), None, None, false,
+        ),
+        30,
+        "local_steps=3",
+    );
+}
+
+/// Partial participation is seeded and mirrored: the cluster's sampler
+/// and the single-process driver's draw the same per-round subset from
+/// the same stream, so the two trajectories (and their uplink bit
+/// accounting — only sampled workers ship frames) are bit-identical.
+#[test]
+fn participation_cluster_matches_seeded_mirror() {
+    let p = ridge();
+    let d = p.dim();
+    let single = DcgdShift::dcgd(p.as_ref(), RandK::with_q(d, 0.3), 111).with_participation(0.5);
+    let gamma = single.gamma;
+    let dist = mk_knobbed_cluster(
+        &p,
+        MethodKind::Fixed,
+        gamma,
+        &RandK::with_q(d, 0.3),
+        111,
+        ValPrec::F64,
+        1,
+        false,
+        None,
+        None,
+        None,
+        Some(0.5),
+        false,
+    );
+    assert_trajectories_match(single, dist, p.as_ref(), 60);
+}
+
+/// The acceptance scenario as a test: on a heterogeneous fleet where one
+/// worker's link is 50× slower than the rest, an m = n/2 quorum close
+/// prices rounds at the m-th fastest arrival and must collapse the
+/// simulated wall clock ≥ 3× vs the barrier gather — while the iterate
+/// stays finite and keeps optimizing (late frames fold in damped).
+#[test]
+fn quorum_gather_collapses_straggler_wall_clock() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let fast = LinkModel {
+        up_bps: 20e6,
+        down_bps: 20e6,
+        latency: 0.005,
+    };
+    let slow = LinkModel {
+        up_bps: 20e6,
+        down_bps: 20e6,
+        latency: 0.25,
+    };
+    let mut links = vec![fast; n];
+    links[n - 1] = slow;
+    let q = RandK::with_q(d, 0.3);
+    let omega = q.omega().unwrap();
+    let ss = shiftcomp::theory::dcgd_fixed(p.as_ref(), &vec![omega; n]);
+    let mk = |quorum: Option<usize>, staleness: bool| {
+        let qs: Vec<Box<dyn Compressor>> = (0..n)
+            .map(|_| Box::new(q.clone()) as Box<dyn Compressor>)
+            .collect();
+        DistributedRunner::new(
+            p.clone(),
+            qs,
+            None,
+            vec![vec![0.0; d]; n],
+            ClusterConfig {
+                method: MethodKind::Fixed,
+                gamma: ss.gamma,
+                seed: 113,
+                links: Some(links.clone()),
+                quorum,
+                staleness,
+                ..Default::default()
+            },
+        )
+    };
+    let rounds = 150usize;
+    let mut barrier = mk(None, false);
+    for _ in 0..rounds {
+        barrier.step(p.as_ref());
+    }
+    let mut quorum = mk(Some(n / 2), true);
+    for _ in 0..rounds {
+        quorum.step(p.as_ref());
+    }
+    let ratio = barrier.simulated_time() / quorum.simulated_time();
+    assert!(
+        ratio >= 3.0,
+        "quorum close must collapse the straggler-bound wall clock ≥ 3×, got {ratio:.2}× \
+         ({:.3}s vs {:.3}s)",
+        barrier.simulated_time(),
+        quorum.simulated_time()
+    );
+    assert!(quorum.x().iter().all(|v| v.is_finite()));
+    // progress, not rate: the damped stale folds must leave the descent
+    // intact (the paper ridge converges slowly under the conservative
+    // theory step, so pin net descent rather than a rate)
+    let x0 = shiftcomp::algorithms::paper_x0(d, 113);
+    let denom = shiftcomp::linalg::dist_sq(&x0, p.x_star());
+    let err = shiftcomp::linalg::dist_sq(quorum.x(), p.x_star()) / denom;
+    assert!(
+        err < 1.0,
+        "the quorum trajectory must still descend: rel err {err}"
+    );
+}

@@ -265,3 +265,62 @@ fn feature_matrix_fold_widths_bit_identical_through_quarantine() {
         }
     }
 }
+
+/// The parallel downlink build is a pure scheduling change: the pooled
+/// delta apply (`x += Δ` sharded by coordinate) and the sharded EF
+/// materialize (`x̂[lo..hi] = x_new[lo..hi]` then the overlay residual
+/// re-applied per shard) must reproduce the serial build bit for bit at
+/// every width — iterate, downlink bit accounting, the broadcast replica
+/// and the master's EF accumulator — with the degenerate semi-async
+/// knobs armed on top (quorum = n, participation = 1.0).
+#[test]
+fn pooled_downlink_build_widths_match_mirror() {
+    let p = ridge();
+    let d = p.dim();
+    let n = p.n_workers();
+    let q = RandK::with_q(d, 0.3);
+    let mut single = DcgdShift::dcgd(p.as_ref(), q.clone(), 43)
+        .with_downlink(Box::new(TopK::with_q(d, 0.25)));
+    let gamma = single.gamma;
+    let mut runners: Vec<DistributedRunner> = WIDTHS
+        .iter()
+        .map(|&t| {
+            DistributedRunner::new(
+                p.clone(),
+                boxed_clones(&q, n),
+                None,
+                vec![vec![0.0; d]; n],
+                ClusterConfig {
+                    method: MethodKind::Fixed,
+                    gamma,
+                    seed: 43,
+                    downlink: Some(Box::new(TopK::with_q(d, 0.25))),
+                    master_threads: Some(t),
+                    quorum: Some(n),
+                    participation: Some(1.0),
+                    staleness: true,
+                    ..Default::default()
+                },
+            )
+        })
+        .collect();
+    for k in 0..50 {
+        let ss = single.step(p.as_ref());
+        for dist in runners.iter_mut() {
+            let t = dist.fold_threads();
+            let sd = dist.step(p.as_ref());
+            assert_eq!(single.x(), dist.x(), "T={t} iterate diverged at round {k}");
+            assert_eq!(ss.bits_down, sd.bits_down, "T={t} bits_down at round {k}");
+            assert_eq!(
+                single.replica(),
+                dist.replica_mirror(),
+                "T={t} broadcast replica at round {k}"
+            );
+            assert_eq!(
+                single.ef_error(),
+                dist.ef_error(),
+                "T={t} downlink EF accumulator at round {k}"
+            );
+        }
+    }
+}
