@@ -44,9 +44,10 @@ fn main() {
 
             // allocating path, for the before/after comparison
             let mut r = Pcg64::new(2);
-            let stats = bench_maybe_smoke(&format!("compress (alloc) {} d={d}", c.name()), smoke, || {
-                bb(c.compress(&mut r, bb(&x)));
-            });
+            let stats =
+                bench_maybe_smoke(&format!("compress (alloc) {} d={d}", c.name()), smoke, || {
+                    bb(c.compress(&mut r, bb(&x)));
+                });
             rows.push(format!("alloc-{},{},{:.3e}", c.name(), d, stats.median()));
 
             // encode+decode roundtrip cost through recycled buffers

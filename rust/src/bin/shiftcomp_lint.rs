@@ -1,0 +1,57 @@
+//! `shiftcomp-lint` — run the in-tree static lint over the repository.
+//!
+//! Usage: `cargo run --bin shiftcomp-lint [repo-root]`. With no argument
+//! the repo root is found by walking up from the current directory until a
+//! `rust/src` directory appears. Exits non-zero iff violations are found;
+//! see [`shiftcomp::lint`] for the rule set and the `LINT-ALLOW` escape
+//! hatch.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn find_repo_root() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("rust").join("src").is_dir() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let root = match std::env::args_os().nth(1).map(PathBuf::from).or_else(find_repo_root) {
+        Some(root) => root,
+        None => {
+            eprintln!("shiftcomp-lint: no repo root found (pass it as the first argument)");
+            return ExitCode::FAILURE;
+        }
+    };
+    match shiftcomp::lint::run_repo(&root) {
+        Ok(report) if report.violations.is_empty() => {
+            println!(
+                "shiftcomp-lint: OK — {} files clean under {}",
+                report.files_scanned,
+                root.display()
+            );
+            ExitCode::SUCCESS
+        }
+        Ok(report) => {
+            for v in &report.violations {
+                eprintln!("{v}");
+            }
+            eprintln!(
+                "shiftcomp-lint: {} violation(s) in {} files scanned",
+                report.violations.len(),
+                report.files_scanned
+            );
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("shiftcomp-lint: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

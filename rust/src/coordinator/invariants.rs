@@ -1,0 +1,236 @@
+//! Debug-build invariant audits for the distributed round path.
+//!
+//! Every audit here is a cross-check between two representations the
+//! runner maintains redundantly for speed — the kind of redundancy that
+//! silently drifts when a refactor touches one side and not the other.
+//! Each function is a no-op in release builds (the body is gated on
+//! `cfg!(debug_assertions)`, so the O(d) scans compile away together with
+//! the asserts); tier-1 CI runs the test profile, which is a debug build,
+//! so every audit is live on every tier-1 round.
+//!
+//! The audited invariants:
+//!
+//! * **Snapshot generations advance by exactly one** per publication
+//!   ([`AuditState::note_publish`]). A skipped generation would make a
+//!   healthy worker look like a gen-gap straggler and trigger a spurious
+//!   resync; a repeated one would let a stale replica pass as fresh.
+//! * **The overlay patch is `−e` on the EF residual support**
+//!   ([`audit_overlay_support`]): same support, exactly negated values,
+//!   and an empty patch whenever the downlink is exact. The patch is
+//!   rebuilt from `e` every round; this catches a rebuild that went
+//!   missing or ran against a stale accumulator.
+//! * **The EF mirror closes the loop: `x_replica + e ≈ x_master`**
+//!   ([`audit_ef_mirror`]). The mirror is re-materialized through the
+//!   workers' own kernel each round; if it stops tracking
+//!   `x_master − e`, master-side pricing and `Inspect` reconstructions
+//!   are lying about what the fleet actually holds.
+//! * **The maintained `h_sum` equals `Σ_{active} h_i`**
+//!   ([`audit_h_sum`]). Quarantine subtracts a shift, rejoin adds it
+//!   back, and every fold updates `h_sum` incrementally next to the
+//!   per-worker replicas; a missed update shifts every later aggregate.
+//!   Skipped for DCGD-STAR, which rebuilds shifts densely per round and
+//!   keeps `h_sum` at zero by construction. Summation order differs
+//!   between the incremental and re-summed paths, so the comparison is
+//!   toleranced, not bit-exact.
+//! * **`replica_bytes` accounting reconciles**
+//!   ([`audit_replica_bytes`]): the published snapshot slots hold
+//!   exactly two dense iterates, the patch slots shrink to zero on the
+//!   exact path, and the [`crate::coordinator::runner::StepStats`] total
+//!   equals publisher bytes plus the workers' reported private bytes.
+
+use crate::coordinator::protocol::{MethodKind, WorkerState};
+use crate::coordinator::replica::SnapshotPublisher;
+use crate::downlink::DownlinkState;
+
+/// Absolute floor plus relative slack for toleranced comparisons: the
+/// audited quantities are re-associations of identical f64 terms, so the
+/// true discrepancy is a few ulps per accumulated term — `1e-8` relative
+/// leaves orders of magnitude of headroom without masking a real
+/// bookkeeping bug (a dropped term shifts the sum by a whole `h_i[j]`).
+const TOL: f64 = 1e-8;
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= TOL * (1.0 + a.abs().max(b.abs()))
+}
+
+/// Cross-round audit state owned by the runner (one per
+/// [`crate::coordinator::DistributedRunner`]).
+///
+/// Kept tiny and always-on: the release build pays one u64 store per
+/// round, the debug build gets the generation-monotonicity assert.
+#[derive(Debug, Default)]
+pub struct AuditState {
+    last_gen: u64,
+}
+
+impl AuditState {
+    /// Fresh state; the first published generation must be `1`.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a publication and assert the generation advanced by
+    /// exactly one (the publisher owns the counter; the audit catches a
+    /// second publish in the same round or a round that forgot to
+    /// publish before handing out snapshot handles).
+    pub fn note_publish(&mut self, gen: u64) {
+        debug_assert_eq!(
+            gen,
+            self.last_gen + 1,
+            "snapshot generation must advance by exactly 1 per round \
+             (published {gen} after {})",
+            self.last_gen
+        );
+        self.last_gen = gen;
+    }
+}
+
+/// Audit the overlay patch against the EF error accumulator: the patch
+/// must be exactly `−e` restricted to the nonzero support of `e`, and
+/// must be empty when the downlink is exact (not armed).
+pub fn audit_overlay_support(dl: &DownlinkState) {
+    if !cfg!(debug_assertions) {
+        return;
+    }
+    let overlay = dl.overlay();
+    let Some(e) = dl.ef_error() else {
+        debug_assert!(
+            overlay.is_empty(),
+            "exact downlink must keep an empty overlay (found {} entries)",
+            overlay.nnz()
+        );
+        return;
+    };
+    let mut support = 0usize;
+    for (j, v) in overlay.entries() {
+        debug_assert!(
+            j < e.len(),
+            "overlay index {j} out of range for d = {}",
+            e.len()
+        );
+        debug_assert!(
+            e[j] != 0.0,
+            "overlay entry at coordinate {j} outside the EF residual support"
+        );
+        debug_assert!(
+            v == -e[j],
+            "overlay[{j}] = {v:e} must be the exact negation of e[{j}] = {:e}",
+            e[j]
+        );
+        support += 1;
+    }
+    let residual_nnz = e.iter().filter(|&&ej| ej != 0.0).count();
+    debug_assert_eq!(
+        support, residual_nnz,
+        "overlay support ({support}) must cover the full EF residual \
+         support ({residual_nnz})"
+    );
+}
+
+/// Audit the EF mirror identity `x_replica + e ≈ x_master` coordinate by
+/// coordinate. `(x − e) + e` re-rounds, so the check is toleranced; a
+/// real bug (stale mirror, missed fold) is off by a whole step, not an
+/// ulp. No-op on the exact path, where no mirror is kept.
+pub fn audit_ef_mirror(x_master: &[f64], dl: &DownlinkState) {
+    if !cfg!(debug_assertions) {
+        return;
+    }
+    let (Some(replica), Some(e)) = (dl.replica(), dl.ef_error()) else {
+        return;
+    };
+    debug_assert_eq!(replica.len(), x_master.len(), "mirror dimension drifted");
+    debug_assert_eq!(e.len(), x_master.len(), "EF accumulator dimension drifted");
+    for j in 0..x_master.len() {
+        debug_assert!(
+            close(replica[j] + e[j], x_master[j]),
+            "EF invariant violated at coordinate {j}: \
+             x_replica ({:e}) + e ({:e}) != x_master ({:e})",
+            replica[j],
+            e[j],
+            x_master[j]
+        );
+    }
+}
+
+/// Audit the maintained aggregate shift: `h_sum[j] ≈ Σ h_i[j]` over the
+/// workers still in the rotation ([`WorkerState::Active`] — quarantine
+/// subtracts a shift from `h_sum` the moment it triggers, rejoin adds it
+/// back). Skipped for DCGD-STAR, which aggregates dense per-round shifts
+/// and pins `h_sum` at zero.
+pub fn audit_h_sum(
+    h_sum: &[f64],
+    h: &[Vec<f64>],
+    states: &[WorkerState],
+    method: MethodKind,
+) {
+    if !cfg!(debug_assertions) {
+        return;
+    }
+    if matches!(method, MethodKind::Star { .. }) {
+        return;
+    }
+    debug_assert_eq!(h.len(), states.len(), "shift table / state table mismatch");
+    for j in 0..h_sum.len() {
+        let mut sum = 0.0;
+        for (wi, hi) in h.iter().enumerate() {
+            if states[wi] == WorkerState::Active {
+                sum += hi[j];
+            }
+        }
+        debug_assert!(
+            close(h_sum[j], sum),
+            "h_sum drifted from the active-shift re-sum at coordinate {j}: \
+             maintained {:e}, re-summed {:e}",
+            h_sum[j],
+            sum
+        );
+    }
+}
+
+/// Audit the fleet-resident iterate-storage accounting reported in
+/// [`crate::coordinator::runner::StepStats::replica_bytes`]:
+///
+/// * both publisher snapshot slots hold exactly one dense `d`-vector
+///   (`2 · d · 8` bytes, independent of the worker count);
+/// * on the exact path the patch slots are empty; on the EF path the
+///   freshly published slot mirrors the current overlay, so the patch
+///   bytes are at least the overlay's;
+/// * the reported total is exactly publisher bytes plus the workers'
+///   self-reported private bytes (no double counting, nothing dropped).
+pub fn audit_replica_bytes(
+    d: usize,
+    dl: &DownlinkState,
+    publisher: &SnapshotPublisher,
+    worker_bytes: u64,
+    reported: u64,
+) {
+    if !cfg!(debug_assertions) {
+        return;
+    }
+    let snap = publisher.snapshot_bytes();
+    let patch = publisher.patch_bytes();
+    debug_assert_eq!(
+        snap,
+        (2 * d * 8) as u64,
+        "snapshot slots must hold exactly two dense d-vectors"
+    );
+    if dl.ef_error().is_none() {
+        debug_assert_eq!(
+            patch, 0,
+            "exact downlink must publish empty overlay patches"
+        );
+    } else {
+        debug_assert!(
+            patch >= dl.overlay().bytes(),
+            "published patch bytes ({patch}) lost the current overlay \
+             ({} bytes)",
+            dl.overlay().bytes()
+        );
+    }
+    debug_assert_eq!(
+        reported,
+        snap + patch + worker_bytes,
+        "replica_bytes must reconcile: snapshot {snap} + patch {patch} \
+         + worker-private {worker_bytes}"
+    );
+}

@@ -30,6 +30,7 @@
 //! path deterministically. See [`runner`]'s module doc for the semantics.
 
 pub mod faults;
+pub mod invariants;
 pub mod participation;
 pub mod pool;
 pub mod protocol;

@@ -122,6 +122,10 @@ impl FoldPool {
             let handle = std::thread::Builder::new()
                 .name(format!("shiftcomp-fold-{s}"))
                 .spawn(move || {
+                    // LINT-ALLOW(blocking-recv): shard-thread idle loop —
+                    // pool threads park here between rounds with no
+                    // deadline by design; Drop disconnects the channel and
+                    // ends the loop.
                     while let Ok(job) = rx.recv() {
                         // SAFETY: `run` keeps the closure borrowed until the
                         // done barrier below releases it, so the pointer is
@@ -133,6 +137,9 @@ impl FoldPool {
                         }
                     }
                 })
+                // LINT-ALLOW(no-panic): construction time, before any round
+                // runs — a spawn failure is an OS resource error, not a
+                // round-path fault to degrade around.
                 .expect("spawn fold shard thread");
             job_txs.push(tx);
             handles.push(handle);
@@ -163,6 +170,10 @@ impl FoldPool {
         }
         let job = f as *const (dyn Fn(usize) + Sync);
         for tx in &self.job_txs {
+            // LINT-ALLOW(no-panic): a shard thread can only exit when the
+            // pool is dropped (its panics are caught) — a dead channel here
+            // means master-side memory corruption; aborting the fold loudly
+            // beats folding a partial shard set silently.
             tx.send(Job(job)).expect("fold shard thread exited");
         }
         let ok0 = catch_unwind(AssertUnwindSafe(|| f(0))).is_ok();
@@ -170,6 +181,13 @@ impl FoldPool {
         // can end — this is the soundness linchpin of the lifetime erasure.
         let mut ok = ok0;
         for _ in &self.job_txs {
+            // LINT-ALLOW(blocking-recv): the completion barrier `run`'s
+            // lifetime erasure is sound by — every armed shard sends
+            // exactly one done token (its panics are caught), so this wait
+            // is bounded by the shard's own work, and a deadline that
+            // released the borrow early would be UB, not resilience.
+            // LINT-ALLOW(no-panic): see the send above — a vanished shard
+            // thread is memory corruption, not a degradable fault.
             ok &= self.done_rx.recv().expect("fold shard thread exited");
         }
         assert!(ok, "a fold shard panicked (see thread output above)");
@@ -205,6 +223,8 @@ pub struct ShardView<T> {
 // is exactly the Send-but-shared pattern, sound when T: Send and callers
 // uphold the disjointness contract of `slice`/`at`.
 unsafe impl<T: Send> Send for ShardView<T> {}
+// SAFETY: as above — shared `&ShardView` access only ever materializes
+// disjoint `&mut` sub-slices, so cross-thread sharing of the view is sound.
 unsafe impl<T: Send> Sync for ShardView<T> {}
 
 impl<T> Clone for ShardView<T> {

@@ -79,6 +79,13 @@ impl OverlayPatch {
         (self.idx.len() * 4 + self.val.len() * 8) as u64
     }
 
+    /// The stored `(index, value)` pairs in ascending index order
+    /// (read-only; used by the debug-build invariant audits to check the
+    /// patch support against the EF residual).
+    pub fn entries(&self) -> impl Iterator<Item = (usize, f64)> + '_ {
+        self.idx.iter().zip(self.val.iter()).map(|(&j, &v)| (j as usize, v))
+    }
+
     /// Drop every entry (replica collapses back onto the snapshot).
     ///
     /// This is the overlay half of a resync: flushing the EF-downlink

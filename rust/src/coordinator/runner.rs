@@ -285,6 +285,20 @@
 //! compute overlaps the uplink transfer (workers report their measured
 //! compute seconds in each [`WorkerUpdate`]). The toggle affects only the
 //! simulated wall clock — trajectories are bit-identical either way.
+//!
+//! # Debug-build invariant audits
+//!
+//! Every equivalence claim above is also *executed*: after each
+//! publication the round loop calls into
+//! [`crate::coordinator::invariants`], a set of `debug_assert!`-backed
+//! audits compiled out of release builds — snapshot generations advance by
+//! exactly one, the overlay support equals the EF error accumulator's
+//! nonzero support, the EF invariant `x_replica + e = x_master` holds on
+//! the master's own mirror, `replica_bytes` reconciles against the
+//! publisher's buffers plus worker-private bytes, and (periodically) the
+//! maintained `h_sum` re-sums over the active shift replicas. Debug tier-1
+//! (`cargo test`) therefore exercises the invariants on every round of
+//! every test; release builds pay nothing.
 
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -294,6 +308,7 @@ use std::time::{Duration, Instant};
 use crate::algorithms::{Algorithm, StepStats};
 use crate::compressors::{Compressor, Packet, PayloadBitsCache, ValPrec};
 use crate::coordinator::faults::{FaultPlan, WorkerFaultScript};
+use crate::coordinator::invariants::{self, AuditState};
 use crate::coordinator::participation::ParticipationSampler;
 use crate::coordinator::pool::{self, FoldPool, ShardView};
 use crate::coordinator::protocol::{
@@ -488,6 +503,9 @@ pub struct DistributedRunner {
     /// sparse overlay (see [`crate::coordinator::replica`]): one `publish`
     /// per round, allocation-free in steady state
     publisher: SnapshotPublisher,
+    /// cross-round debug-audit state (snapshot-generation monotonicity;
+    /// see [`crate::coordinator::invariants`] — one u64 in release builds)
+    audit: AuditState,
     /// per-worker private-dense-replica bytes, as reported in the last
     /// update each worker sent (health gauge; 0 except the τ > 1 iterate)
     worker_replica_bytes: Vec<u64>,
@@ -673,6 +691,10 @@ fn worker_loop(
     let mut c_buf: Vec<u8> = Vec::new();
     let mut refresh_buf: Vec<u8> = Vec::new();
 
+    // LINT-ALLOW(blocking-recv): worker-side command loop — workers park
+    // between rounds with no deadline by design; only the *master's* waits
+    // are deadline-bounded, and a Shutdown (or a hung-up channel) always
+    // ends this loop.
     while let Ok(cmd) = cmd_rx.recv() {
         let (k, down, gen, snap, patch, mut frames) = match cmd {
             WorkerCommand::Round {
@@ -787,7 +809,12 @@ fn worker_loop(
             });
             break;
         }
-        match validated.expect("defect handled above").kind {
+        let Ok(down_info) = validated else {
+            // every Err was mapped to a defect report above, so this arm
+            // can't run; exiting the worker loop keeps the path panic-free
+            break;
+        };
+        match down_info.kind {
             DownKind::Resync => {
                 // a resync re-establishes exact state on both ends
                 // unconditionally (round 0, periodic drift checks, rejoin
@@ -930,14 +957,23 @@ fn worker_loop(
         match method {
             MethodKind::Fixed => {
                 sub_into(&grad, &h, &mut diff);
-                let pkt =
-                    ef::compress_uplink(q.as_ref(), &mut rng, uplink.as_mut(), &diff, prec, &mut q_pkt);
+                let pkt = ef::compress_uplink(
+                    q.as_ref(),
+                    &mut rng,
+                    uplink.as_mut(),
+                    &diff,
+                    prec,
+                    &mut q_pkt,
+                );
                 payload_bits += q_bits.bits(pkt, prec);
                 wire::encode_into(pkt, prec, &mut frames.q_frame);
             }
             MethodKind::Star { with_c } => {
                 let gs = problem.grad_star(wi);
                 if with_c {
+                    // LINT-ALLOW(no-panic): `with_c` implies a C compressor
+                    // by the constructor contract (validated before any
+                    // thread spawns); worker state can't lose it mid-run.
                     let cc = c.as_mut().expect("star with_c needs a C compressor");
                     sub_into(&grad, gs, &mut diff);
                     cc.compress_into(&mut rng, &diff, &mut c_pkt);
@@ -952,14 +988,23 @@ fn worker_loop(
                     h.copy_from_slice(gs);
                 }
                 sub_into(&grad, &h, &mut diff);
-                let pkt =
-                    ef::compress_uplink(q.as_ref(), &mut rng, uplink.as_mut(), &diff, prec, &mut q_pkt);
+                let pkt = ef::compress_uplink(
+                    q.as_ref(),
+                    &mut rng,
+                    uplink.as_mut(),
+                    &diff,
+                    prec,
+                    &mut q_pkt,
+                );
                 payload_bits += q_bits.bits(pkt, prec);
                 wire::encode_into(pkt, prec, &mut frames.q_frame);
             }
             MethodKind::Diana { alpha, with_c } => {
                 sub_into(&grad, &h, &mut diff);
                 if with_c {
+                    // LINT-ALLOW(no-panic): `with_c` implies a C compressor
+                    // by the constructor contract (validated before any
+                    // thread spawns); worker state can't lose it mid-run.
                     let cc = c.as_mut().expect("diana with_c needs a C compressor");
                     cc.compress_into(&mut rng, &diff, &mut c_pkt);
                     c_pkt.quantize(prec);
@@ -969,8 +1014,14 @@ fn worker_loop(
                     wire::encode_into(&c_pkt, prec, &mut c_buf);
                     frames.c_frame = Some(std::mem::take(&mut c_buf));
                 }
-                let pkt =
-                    ef::compress_uplink(q.as_ref(), &mut rng, uplink.as_mut(), &diff, prec, &mut q_pkt);
+                let pkt = ef::compress_uplink(
+                    q.as_ref(),
+                    &mut rng,
+                    uplink.as_mut(),
+                    &diff,
+                    prec,
+                    &mut q_pkt,
+                );
                 payload_bits += q_bits.bits(pkt, prec);
                 // shift learning h += α(c + q), straight from the packets —
                 // the master applies the identical update to its replica
@@ -983,8 +1034,14 @@ fn worker_loop(
             }
             MethodKind::RandDiana { p } => {
                 sub_into(&grad, &h, &mut diff);
-                let pkt =
-                    ef::compress_uplink(q.as_ref(), &mut rng, uplink.as_mut(), &diff, prec, &mut q_pkt);
+                let pkt = ef::compress_uplink(
+                    q.as_ref(),
+                    &mut rng,
+                    uplink.as_mut(),
+                    &diff,
+                    prec,
+                    &mut q_pkt,
+                );
                 payload_bits += q_bits.bits(pkt, prec);
                 wire::encode_into(pkt, prec, &mut frames.q_frame);
                 if rng.bernoulli(p) {
@@ -1165,6 +1222,9 @@ impl DistributedRunner {
             let handle = std::thread::Builder::new()
                 .name(format!("shiftcomp-worker-{wi}"))
                 .spawn(move || worker_loop(wcfg, problem, q, c, h0, rng, cmd_rx, up_tx))
+                // LINT-ALLOW(no-panic): construction time, before any round
+                // runs — a spawn failure here is an OS resource error the
+                // caller can't degrade around, not a round-path fault.
                 .expect("spawn worker thread");
             workers.push(WorkerThread {
                 cmd_tx,
@@ -1247,6 +1307,7 @@ impl DistributedRunner {
             delta: wire::DeltaScratch::with_capacity(d),
             dl,
             publisher: SnapshotPublisher::new(d),
+            audit: AuditState::new(),
             worker_replica_bytes: vec![0u64; n],
             worker_overlay_nnz: vec![0u64; n],
             local_steps: cfg.local_steps,
@@ -1316,7 +1377,14 @@ impl DistributedRunner {
         self.workers[worker]
             .cmd_tx
             .send(WorkerCommand::Inspect { reply: tx })
+            // LINT-ALLOW(no-panic): debug/ops introspection off the round
+            // path — a dead worker here should fail the inspecting test
+            // loudly, not degrade.
             .expect("worker thread died");
+        // LINT-ALLOW(blocking-recv): same debug/ops path; the worker is
+        // idle by contract and answers immediately or the send above has
+        // already panicked.
+        // LINT-ALLOW(no-panic): see the send above.
         rx.recv().expect("worker thread died")
     }
 
@@ -1495,6 +1563,9 @@ impl Algorithm for DistributedRunner {
         // (round + worker id + detail) the failure carries
         match self.try_step(p) {
             Ok(stats) => stats,
+            // LINT-ALLOW(no-panic): the infallible Algorithm::step trait
+            // contract demands it — this is the documented panicking
+            // wrapper around the panic-free try_step, not a round path.
             Err(f) => panic!("{f}"),
         }
     }
@@ -1621,14 +1692,18 @@ impl DistributedRunner {
         // Every worker reads the iterate through these two Arcs — the
         // fleet holds one iterate, not n.
         let (gen, snap, patch) = self.publisher.publish(&self.x, self.dl.overlay());
-        // rejoin bootstraps all share one dense resync frame, encoded once
-        // per round into the recycled downlink buffer (a per-arm encode
-        // would spike O(d) allocations on mass-rejoin rounds)
-        let rejoin_down = if self.rejoining.iter().any(|&r| r) {
-            Some(self.dl.rejoin_frame(&self.x))
-        } else {
-            None
-        };
+        // debug-build audits (no-ops in release — see
+        // [`crate::coordinator::invariants`]): generations advance by
+        // exactly one, and the published overlay is −e on the EF
+        // residual support
+        self.audit.note_publish(gen);
+        invariants::audit_overlay_support(&self.dl);
+        // rejoin bootstraps all share one dense resync frame, encoded
+        // lazily on the first rejoining arm of the round into the recycled
+        // buffer (a per-arm encode would spike O(d) allocations on
+        // mass-rejoin rounds; rounds without a commanded rejoiner skip the
+        // encode entirely)
+        let mut rejoin_down: Option<Arc<Vec<u8>>> = None;
         // broadcast to the active fleet only. `try_send` keeps the master
         // deadlock-free: a hung worker eventually fills its capacity-2
         // command queue, and a blocking send there would stall the fleet
@@ -1678,9 +1753,17 @@ impl DistributedRunner {
                 // *current* iterate plus the master's replica of this
                 // worker's shift (the off-hot-path `h` clone is fine —
                 // rejoin is exceptional)
+                let down = match &rejoin_down {
+                    Some(frame) => frame.clone(),
+                    None => {
+                        let frame = self.dl.rejoin_frame(&self.x);
+                        rejoin_down = Some(frame.clone());
+                        frame
+                    }
+                };
                 WorkerCommand::Rejoin {
                     k: self.round,
-                    down: rejoin_down.as_ref().expect("built above").clone(),
+                    down,
                     gen,
                     snap: snap.clone(),
                     patch: patch.clone(),
@@ -1864,7 +1947,12 @@ impl DistributedRunner {
                             continue;
                         }
                         if is_stale {
-                            let upd = stale_slots[wi].as_ref().expect("queued above");
+                            // a queued (wi, true) entry always has a stale
+                            // slot; skipping a missing one keeps the shard
+                            // closure panic-free
+                            let Some(upd) = stale_slots[wi].as_ref() else {
+                                continue;
+                            };
                             // SAFETY: worker wi belongs to exactly one
                             // shard (wi % threads == s), so these element
                             // borrows are disjoint across shards.
@@ -1891,7 +1979,11 @@ impl DistributedRunner {
                                 q.shard_bounds_into(cuts, qb);
                             }
                         } else {
-                            let upd = slots[wi].as_ref().expect("queued above");
+                            // as above: a queued (wi, false) entry always
+                            // has a fresh slot
+                            let Some(upd) = slots[wi].as_ref() else {
+                                continue;
+                            };
                             // SAFETY: as above — disjoint per-worker
                             // element borrows.
                             let (q, c, qb, cb, fail) = unsafe {
@@ -1934,10 +2026,18 @@ impl DistributedRunner {
         // the survivors
         for wi in 0..n {
             if self.slots[wi].as_ref().is_some_and(|u| u.failure.is_some()) {
-                let upd = self.slots[wi].take().expect("checked above");
-                let WorkerUpdate { frames, failure, .. } = upd;
+                // the guard above makes the pattern irrefutable in
+                // practice; the else arm keeps the path panic-free
+                let Some(WorkerUpdate {
+                    frames,
+                    failure: Some(failure),
+                    ..
+                }) = self.slots[wi].take()
+                else {
+                    continue;
+                };
                 self.frames_pool[wi] = frames;
-                self.quarantine_worker(wi, WorkerState::Failed, failure.expect("checked above"));
+                self.quarantine_worker(wi, WorkerState::Failed, failure);
             }
         }
 
@@ -2042,13 +2142,19 @@ impl DistributedRunner {
                     continue;
                 }
                 if let Some(f) = self.fold_failures[wi].take() {
-                    let upd = self.slots[wi].take().expect("checked above");
-                    self.frames_pool[wi] = upd.frames;
+                    if let Some(upd) = self.slots[wi].take() {
+                        self.frames_pool[wi] = upd.frames;
+                    }
                     self.quarantine_worker(wi, WorkerState::Quarantined, f);
                     self.fold_flags[wi] = false;
                     continue;
                 }
-                let upd = self.slots[wi].as_ref().expect("checked above");
+                // the is_none guard above makes this irrefutable; the else
+                // arm keeps the path panic-free
+                let Some(upd) = self.slots[wi].as_ref() else {
+                    self.fold_flags[wi] = false;
+                    continue;
+                };
                 bits_up += upd.payload_bits;
                 bits_refresh += upd.refresh_bits;
                 self.wire_bits[wi] = upd.wire_bytes as u64 * 8;
@@ -2085,9 +2191,9 @@ impl DistributedRunner {
                         self.pool.run(&|s| {
                             let mut wi = s;
                             while wi < n {
-                                if folds[wi] {
-                                    let upd =
-                                        slots[wi].as_ref().expect("fold flag implies a slot");
+                                // a set fold flag implies a slot; pattern-
+                                // matching both keeps the closure panic-free
+                                if let (true, Some(upd)) = (folds[wi], slots[wi].as_ref()) {
                                     // SAFETY: disjoint per-worker elements
                                     // (wi % threads == s).
                                     let (q, qb, off) = unsafe {
@@ -2095,6 +2201,13 @@ impl DistributedRunner {
                                     };
                                     *off =
                                         wire::decode_batch_packet(&upd.frames.q_frame, *off, q)
+                                            // LINT-ALLOW(no-panic): every
+                                            // sub-step packet was decode-
+                                            // checked by the batch validation
+                                            // pass before any fold, so this
+                                            // cursor advance cannot fail; the
+                                            // pool turns a shard panic into a
+                                            // loud master abort, never UB.
                                             .expect("batch frame validated above");
                                     q.shard_bounds_into(cuts, qb);
                                 }
@@ -2127,6 +2240,7 @@ impl DistributedRunner {
                             // shard holds the only live references into
                             // est/h_sum/g_acc/h[wi] over [lo, hi).
                             let est = unsafe { est_view.slice(lo, hi) };
+                            // SAFETY: same disjoint shard range as est.
                             let h_sum = unsafe { h_sum_view.slice(lo, hi) };
                             ax_into(inv, h_sum, est);
                             if !star {
@@ -2137,6 +2251,7 @@ impl DistributedRunner {
                                 // maintained sum)
                                 for wi in 0..n {
                                     if states[wi] == WorkerState::Active && !folds[wi] {
+                                        // SAFETY: disjoint shard range.
                                         let h_wi = unsafe { h_views[wi].slice(lo, hi) };
                                         axpy(-inv, h_wi, est);
                                     }
@@ -2149,11 +2264,13 @@ impl DistributedRunner {
                                 let qb = (q_bounds[wi][s], q_bounds[wi][s + 1]);
                                 q_scratch[wi].add_scaled_range(inv, lo, hi, qb, est);
                                 if let MethodKind::Diana { alpha, .. } = method {
+                                    // SAFETY: disjoint shard range.
                                     let h_wi = unsafe { h_views[wi].slice(lo, hi) };
                                     q_scratch[wi].add_scaled_range(alpha, lo, hi, qb, h_wi);
                                     q_scratch[wi].add_scaled_range(alpha, lo, hi, qb, h_sum);
                                 }
                             }
+                            // SAFETY: same disjoint shard range as est.
                             axpy(1.0, est, unsafe { g_view.slice(lo, hi) });
                         });
                     }
@@ -2191,14 +2308,21 @@ impl DistributedRunner {
                 continue;
             }
             if let Some(f) = self.fold_failures[wi].take() {
-                let upd = self.slots[wi].take().expect("checked above");
-                self.frames_pool[wi] = upd.frames;
+                if let Some(upd) = self.slots[wi].take() {
+                    self.frames_pool[wi] = upd.frames;
+                }
                 self.quarantine_worker(wi, WorkerState::Quarantined, f);
                 self.fold_flags[wi] = false;
                 self.refresh_flags[wi] = false;
                 continue;
             }
-            let upd = self.slots[wi].take().expect("checked above");
+            // the is_none guard above makes this irrefutable; the else arm
+            // keeps the path panic-free
+            let Some(upd) = self.slots[wi].take() else {
+                self.fold_flags[wi] = false;
+                self.refresh_flags[wi] = false;
+                continue;
+            };
             bits_up += upd.payload_bits;
             bits_refresh += upd.refresh_bits;
             self.wire_bits[wi] = upd.wire_bytes as u64 * 8;
@@ -2310,6 +2434,7 @@ impl DistributedRunner {
                 // the only live references into est/h_sum/h[wi] over
                 // [lo, hi).
                 let est = unsafe { est_view.slice(lo, hi) };
+                // SAFETY: same disjoint shard range as est.
                 let h_sum = unsafe { h_sum_view.slice(lo, hi) };
                 // g^k seeded from the maintained shift sum, then each
                 // compressed message folded in at O(nnz of the shard).
@@ -2319,6 +2444,7 @@ impl DistributedRunner {
                 if !star {
                     for wi in 0..n {
                         if states[wi] == WorkerState::Active && !folds[wi] {
+                            // SAFETY: disjoint shard range.
                             let h_wi = unsafe { h_views[wi].slice(lo, hi) };
                             axpy(-inv, h_wi, est);
                         }
@@ -2336,6 +2462,7 @@ impl DistributedRunner {
                         MethodKind::Star { with_c } => {
                             // reconstruct the worker's same-round shift in
                             // place
+                            // SAFETY: disjoint shard range.
                             let h_wi = unsafe { h_views[wi].slice(lo, hi) };
                             h_wi.copy_from_slice(&grad_star[wi][lo..hi]);
                             if with_c {
@@ -2346,6 +2473,7 @@ impl DistributedRunner {
                             q_scratch[wi].add_scaled_range(inv, lo, hi, qb, est);
                         }
                         MethodKind::Diana { alpha, with_c } => {
+                            // SAFETY: disjoint shard range.
                             let h_wi = unsafe { h_views[wi].slice(lo, hi) };
                             if with_c {
                                 let cb = (c_bounds[wi][s], c_bounds[wi][s + 1]);
@@ -2364,6 +2492,7 @@ impl DistributedRunner {
                                 // applied identically to the replica and the
                                 // maintained sum (the worker applied the
                                 // same packet to its h)
+                                // SAFETY: disjoint shard range.
                                 let h_wi = unsafe { h_views[wi].slice(lo, hi) };
                                 let cb = (c_bounds[wi][s], c_bounds[wi][s + 1]);
                                 c_scratch[wi].add_scaled_range(1.0, lo, hi, cb, h_wi);
@@ -2385,6 +2514,7 @@ impl DistributedRunner {
                         continue;
                     }
                     let sb = (stale_bounds[wi][s], stale_bounds[wi][s + 1]);
+                    // SAFETY: disjoint shard range.
                     let h_wi = unsafe { h_views[wi].slice(lo, hi) };
                     axpy(lam * inv, h_wi, est);
                     stale_scratch[wi].add_scaled_range(lam * inv, lo, hi, sb, est);
@@ -2579,6 +2709,13 @@ impl DistributedRunner {
                 *buf = Arc::new(b);
             }
         }
+        // debug-build audits (no-ops in release): the EF mirror identity
+        // x_replica + e ≈ x_master after the fold, and a periodic re-sum
+        // of the incrementally maintained h_sum over the active shifts
+        invariants::audit_ef_mirror(&self.x, &self.dl);
+        if self.round % 64 == 0 {
+            invariants::audit_h_sum(&self.h_sum, &self.h, &self.states, self.method);
+        }
         self.round += 1;
 
         // measured downlink cost: the frame each worker actually received.
@@ -2610,7 +2747,7 @@ impl DistributedRunner {
 
         self.master_secs += work_started.elapsed().as_secs_f64();
 
-        StepStats {
+        let stats = StepStats {
             bits_up,
             bits_down,
             bits_refresh,
@@ -2623,7 +2760,17 @@ impl DistributedRunner {
             replica_bytes: self.publisher.snapshot_bytes()
                 + self.publisher.patch_bytes()
                 + self.worker_replica_bytes.iter().sum::<u64>(),
-        }
+        };
+        // debug-build audit (no-op in release): the reported footprint
+        // reconciles against an independent recomputation
+        invariants::audit_replica_bytes(
+            d,
+            &self.dl,
+            &self.publisher,
+            self.worker_replica_bytes.iter().sum::<u64>(),
+            stats.replica_bytes,
+        );
+        stats
     }
 }
 
@@ -2652,6 +2799,9 @@ impl DistributedRunner {
     ) -> Self {
         let n = problem.n_workers();
         let d = problem.dim();
+        // LINT-ALLOW(no-panic): constructor precondition, enforced before
+        // any thread exists; the config layer rejects biased Q for DIANA
+        // at parse time, so only direct API misuse reaches this.
         let omega = q.omega().expect("DIANA needs unbiased Q");
         let ss = crate::theory::diana(problem.as_ref(), &vec![omega; n], &vec![0.0; n], 2.0);
         let qs: Vec<Box<dyn Compressor>> = (0..n)
@@ -2691,6 +2841,7 @@ impl DistributedRunner {
     ) -> Self {
         let n = problem.n_workers();
         let d = problem.dim();
+        // LINT-ALLOW(no-panic): constructor precondition (see `diana`).
         let omega = q.omega().expect("Rand-DIANA needs unbiased Q");
         let pr = p_refresh.unwrap_or_else(|| crate::theory::rand_diana_default_p(omega));
         let ss = crate::theory::rand_diana(problem.as_ref(), omega, &vec![pr; n], None);
@@ -2727,6 +2878,7 @@ impl DistributedRunner {
     ) -> Self {
         let n = problem.n_workers();
         let d = problem.dim();
+        // LINT-ALLOW(no-panic): constructor precondition (see `diana`).
         let omega = q.omega().expect("DCGD needs unbiased Q");
         let ss = crate::theory::dcgd_fixed(problem.as_ref(), &vec![omega; n]);
         let qs: Vec<Box<dyn Compressor>> = (0..n)

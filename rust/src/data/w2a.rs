@@ -143,7 +143,10 @@ fn sigmoid(t: f64) -> f64 {
 
 /// Generate, write as LibSVM text to `path`, and read back through the
 /// parser — the canonical way experiments obtain the dataset.
-pub fn synthetic_w2a_via_file(opts: &W2aOpts, path: &str) -> Result<SparseDataset, libsvm::LibsvmError> {
+pub fn synthetic_w2a_via_file(
+    opts: &W2aOpts,
+    path: &str,
+) -> Result<SparseDataset, libsvm::LibsvmError> {
     let ds = synthetic_w2a(opts);
     libsvm::write_file(path, &ds)?;
     libsvm::read_file(path)

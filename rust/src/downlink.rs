@@ -298,7 +298,12 @@ impl DownlinkState {
     /// with the same kernel the workers use; returns the packet to
     /// broadcast (`delta` itself on the exact path). `x_new` is the
     /// master iterate *after* the step `delta` was applied.
-    pub fn fold_packet<'a>(&'a mut self, delta: &'a Packet, x_new: &[f64], prec: ValPrec) -> &'a Packet {
+    pub fn fold_packet<'a>(
+        &'a mut self,
+        delta: &'a Packet,
+        x_new: &[f64],
+        prec: ValPrec,
+    ) -> &'a Packet {
         match &mut self.ef {
             Some(ef) => {
                 ef.fold_and_compress(delta, prec);

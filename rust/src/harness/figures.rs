@@ -92,7 +92,15 @@ pub fn fig1_left(out_dir: &str, seed: u64, max_rounds: usize) -> FigureResult {
         let trace = DcgdShift::diana(&p, RandK::with_q(d, q), None, seed).run(&p, &opts);
         record("fig1_left", out_dir, &mut plot, &mut curves, &format!("diana q={q}"), &trace, tol);
         let trace = DcgdShift::rand_diana(&p, RandK::with_q(d, q), None, seed).run(&p, &opts);
-        record("fig1_left", out_dir, &mut plot, &mut curves, &format!("rand-diana q={q}"), &trace, tol);
+        record(
+            "fig1_left",
+            out_dir,
+            &mut plot,
+            &mut curves,
+            &format!("rand-diana q={q}"),
+            &trace,
+            tol,
+        );
     }
     finish("fig1_left", plot, curves)
 }
@@ -289,7 +297,15 @@ pub fn fig4(out_dir: &str, seed: u64, max_rounds: usize) -> (FigureResult, Figur
         let trace = DcgdShift::diana(&p, RandK::with_q(d, q), None, seed).run(&p, &opts);
         record("fig4_left", out_dir, &mut plot, &mut curves, &format!("diana q={q}"), &trace, tol);
         let trace = DcgdShift::rand_diana(&p, RandK::with_q(d, q), None, seed).run(&p, &opts);
-        record("fig4_left", out_dir, &mut plot, &mut curves, &format!("rand-diana q={q}"), &trace, tol);
+        record(
+            "fig4_left",
+            out_dir,
+            &mut plot,
+            &mut curves,
+            &format!("rand-diana q={q}"),
+            &trace,
+            tol,
+        );
     }
     let left = finish("fig4_left", plot, curves);
 

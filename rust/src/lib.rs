@@ -56,6 +56,7 @@ pub mod downlink;
 pub mod ef;
 pub mod harness;
 pub mod linalg;
+pub mod lint;
 #[cfg(feature = "pjrt")]
 pub mod lm;
 pub mod metrics;

@@ -1,0 +1,848 @@
+//! In-tree static lint (`shiftcomp-lint`): repo-specific invariants as code.
+//!
+//! The crate carries correctness obligations that `rustc` cannot see — the
+//! `// SAFETY:` discipline around the fold pool's aliasing surface, the
+//! panic-freedom contract of the master's round path (PR 5's `try_step`),
+//! the wire-format frame table, the ROADMAP `cluster.*` documentation, and
+//! the "no deadline-free blocking recv on the master" rule the
+//! fault-tolerance layer depends on. This module enforces them textually,
+//! with zero dependencies (same offline discipline as the rest of the
+//! crate), so CI fails instead of a reviewer having to notice.
+//!
+//! ## Rules
+//!
+//! | rule id          | scope                                   | requirement |
+//! |------------------|-----------------------------------------|-------------|
+//! | `safety-comment` | all of `rust/src/**`                    | every `unsafe` token is adjacent to a `// SAFETY:` (or `/// # Safety`) comment |
+//! | `no-panic`       | `coordinator/`, `wire.rs`, `net/`, `downlink.rs`, `ef.rs` | no `.unwrap()`, `.expect(`, or `panic!` outside `#[cfg(test)]` |
+//! | `wire-tags`      | `wire.rs`                               | frame tag bytes (`TAG_*`, `DOWN_*`) unique per namespace and each listed in the module-doc frame table |
+//! | `cluster-keys`   | `config/mod.rs`                         | every key `ClusterSpec::parse` reads appears in ROADMAP's cluster table |
+//! | `blocking-recv`  | `coordinator/`                          | no deadline-free `.recv()` (use `recv_timeout`/`try_recv`; `try_send` on the send side) |
+//!
+//! ## Escape hatch
+//!
+//! A violation is suppressed by a `// LINT-ALLOW(rule): reason` comment on
+//! the same line or on the contiguous comment block directly above it. The
+//! reason is mandatory — an allow without one is itself a violation, so
+//! every exemption in the tree is forced to say *why* it is sound.
+//!
+//! The scanner is a line-oriented token classifier (string/char literals
+//! and comments are masked out before pattern matching), not a parser; it
+//! is deliberately conservative, and `LINT-ALLOW` exists precisely so a
+//! human can overrule it with a recorded justification.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One lint finding, pointing at a repo-relative file and 1-based line.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// Result of a whole-tree run: findings plus how many files were scanned.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub violations: Vec<Violation>,
+    pub files_scanned: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Byte classification: code vs comment vs string/char literal
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Code,
+    Comment,
+    Str,
+}
+
+/// Classify every byte of `src` as code, comment, or string/char literal.
+///
+/// Newlines are always classified as code so line splitting stays trivial.
+/// Handles line comments, nested block comments, string escapes, raw
+/// strings (`r"…"`, `r#"…"#`, byte variants), and the `'x'` char-literal
+/// vs `'lifetime` ambiguity via one-char lookahead.
+fn classify(src: &str) -> Vec<Kind> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut kinds = vec![Kind::Code; n];
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            // Line comment (also `///` and `//!`): to end of line.
+            while i < n && b[i] != b'\n' {
+                kinds[i] = Kind::Comment;
+                i += 1;
+            }
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            // Block comment; Rust block comments nest.
+            let mut depth = 0usize;
+            while i < n {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    kinds[i] = Kind::Comment;
+                    kinds[i + 1] = Kind::Comment;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    kinds[i] = Kind::Comment;
+                    kinds[i + 1] = Kind::Comment;
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    if b[i] != b'\n' {
+                        kinds[i] = Kind::Comment;
+                    }
+                    i += 1;
+                }
+            }
+        } else if c == b'"' {
+            // String literal; check for a raw-string prefix `(b?)r#*` just
+            // before the quote (the byte before the prefix must not be an
+            // identifier byte, so `var_r"` can't false-positive).
+            let mut hashes = 0usize;
+            let mut j = i;
+            while j > 0 && b[j - 1] == b'#' {
+                hashes += 1;
+                j -= 1;
+            }
+            let raw = j > 0
+                && b[j - 1] == b'r'
+                && (j < 2 || !is_ident_byte(b[j - 2]) || b[j - 2] == b'b');
+            // Mark the prefix bytes as part of the literal too.
+            if raw {
+                let start = if j >= 2 && b[j - 2] == b'b' { j - 2 } else { j - 1 };
+                for k in start..i {
+                    kinds[k] = Kind::Str;
+                }
+            }
+            kinds[i] = Kind::Str;
+            i += 1;
+            if raw {
+                // Ends at `"` followed by `hashes` hash marks.
+                'raw: while i < n {
+                    if b[i] == b'"' {
+                        let mut ok = true;
+                        for k in 0..hashes {
+                            if i + 1 + k >= n || b[i + 1 + k] != b'#' {
+                                ok = false;
+                                break;
+                            }
+                        }
+                        if ok {
+                            for k in 0..=hashes {
+                                kinds[i + k] = Kind::Str;
+                            }
+                            i += hashes + 1;
+                            break 'raw;
+                        }
+                    }
+                    if b[i] != b'\n' {
+                        kinds[i] = Kind::Str;
+                    }
+                    i += 1;
+                }
+            } else {
+                while i < n {
+                    if b[i] == b'\\' && i + 1 < n {
+                        kinds[i] = Kind::Str;
+                        if b[i + 1] != b'\n' {
+                            kinds[i + 1] = Kind::Str;
+                        }
+                        i += 2;
+                        continue;
+                    }
+                    if b[i] != b'\n' {
+                        kinds[i] = Kind::Str;
+                    }
+                    if b[i] == b'"' {
+                        i += 1;
+                        break;
+                    }
+                    i += 1;
+                }
+            }
+        } else if c == b'\'' {
+            // Char literal vs lifetime. `'\…'` is always a char literal;
+            // `'X'` (one UTF-8 char then a quote) is a char literal;
+            // anything else (`'a>`, `'static`) is a lifetime → code.
+            let is_escape = i + 1 < n && b[i + 1] == b'\\';
+            let mut char_len = 0usize;
+            if !is_escape && i + 1 < n {
+                let rest = &src[i + 1..];
+                if let Some(ch) = rest.chars().next() {
+                    char_len = ch.len_utf8();
+                }
+            }
+            let is_char = is_escape
+                || (char_len > 0 && i + 1 + char_len < n && b[i + 1 + char_len] == b'\'');
+            if is_char {
+                kinds[i] = Kind::Str;
+                i += 1;
+                let mut prev_backslash = false;
+                while i < n {
+                    if b[i] != b'\n' {
+                        kinds[i] = Kind::Str;
+                    }
+                    if b[i] == b'\'' && !prev_backslash {
+                        i += 1;
+                        break;
+                    }
+                    prev_backslash = b[i] == b'\\' && !prev_backslash;
+                    i += 1;
+                }
+            } else {
+                i += 1; // lifetime quote stays code
+            }
+        } else {
+            i += 1;
+        }
+    }
+    kinds
+}
+
+fn is_ident_byte(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+// ---------------------------------------------------------------------------
+// Per-file scan structure
+// ---------------------------------------------------------------------------
+
+/// A scanned file: per-line code text (non-code bytes blanked to spaces)
+/// and comment text, plus which lines sit inside `#[cfg(test)]` items.
+struct Scan {
+    /// Per line: source bytes with comment/string bytes replaced by spaces.
+    code: Vec<String>,
+    /// Per line: the comment bytes of the line (code/string blanked).
+    comment: Vec<String>,
+    /// Per line: true if the line is inside a `#[cfg(test)]` item.
+    in_test: Vec<bool>,
+}
+
+impl Scan {
+    fn new(src: &str) -> Scan {
+        let kinds = classify(src);
+        let bytes = src.as_bytes();
+        let mut code_lines = Vec::new();
+        let mut comment_lines = Vec::new();
+        let mut code_buf = Vec::new();
+        let mut comment_buf = Vec::new();
+        for (i, &c) in bytes.iter().enumerate() {
+            if c == b'\n' {
+                code_lines.push(String::from_utf8_lossy(&code_buf).into_owned());
+                comment_lines.push(String::from_utf8_lossy(&comment_buf).into_owned());
+                code_buf.clear();
+                comment_buf.clear();
+                continue;
+            }
+            match kinds[i] {
+                Kind::Code => {
+                    code_buf.push(c);
+                    comment_buf.push(b' ');
+                }
+                Kind::Comment => {
+                    code_buf.push(b' ');
+                    comment_buf.push(c);
+                }
+                Kind::Str => {
+                    // Keep the quotes themselves as structure-free spaces;
+                    // string contents never participate in rules.
+                    code_buf.push(b' ');
+                    comment_buf.push(b' ');
+                }
+            }
+        }
+        if !code_buf.is_empty() || !comment_buf.is_empty() {
+            code_lines.push(String::from_utf8_lossy(&code_buf).into_owned());
+            comment_lines.push(String::from_utf8_lossy(&comment_buf).into_owned());
+        }
+        let in_test = mark_test_lines(&code_lines);
+        Scan {
+            code: code_lines,
+            comment: comment_lines,
+            in_test,
+        }
+    }
+
+    /// True if the violation at `line` (0-based) carries a reasoned
+    /// `LINT-ALLOW(rule): …` on the same line or the contiguous comment
+    /// block directly above.
+    fn allowed(&self, rule: &str, line: usize) -> Option<bool> {
+        let needle = format!("LINT-ALLOW({rule})");
+        let check = |text: &str| -> Option<bool> {
+            let at = text.find(&needle)?;
+            let rest = &text[at + needle.len()..];
+            // Reason is mandatory: `LINT-ALLOW(rule): non-empty reason`.
+            let ok = rest
+                .strip_prefix(':')
+                .is_some_and(|r| !r.trim().is_empty());
+            Some(ok)
+        };
+        if let Some(v) = check(&self.comment[line]) {
+            return Some(v);
+        }
+        let mut j = line;
+        while j > 0 {
+            j -= 1;
+            match self.adjacent_kind(j) {
+                Adjacent::Comment => {
+                    if let Some(v) = check(&self.comment[j]) {
+                        return Some(v);
+                    }
+                }
+                Adjacent::Attribute => {}
+                Adjacent::Other => break,
+            }
+        }
+        None
+    }
+
+    /// How line `j` participates in an upward adjacency scan: a comment
+    /// line is checked, an attribute line (`#[...]`) is skipped over (doc
+    /// comments legitimately sit above attributes), anything else ends the
+    /// scan.
+    fn adjacent_kind(&self, j: usize) -> Adjacent {
+        let code = self.code[j].trim();
+        if code.is_empty() {
+            if self.comment[j].trim().is_empty() {
+                Adjacent::Other // blank line breaks adjacency
+            } else {
+                Adjacent::Comment
+            }
+        } else if code.starts_with("#[") && code.ends_with(']') {
+            Adjacent::Attribute
+        } else {
+            Adjacent::Other
+        }
+    }
+
+    /// True if the `unsafe` at `line` is covered by an adjacent
+    /// `SAFETY:` comment (same line, or the contiguous comment block
+    /// directly above — doc-comment `# Safety` sections count).
+    fn has_safety_comment(&self, line: usize) -> bool {
+        let hit = |text: &str| text.contains("SAFETY:") || text.contains("# Safety");
+        if hit(&self.comment[line]) {
+            return true;
+        }
+        let mut j = line;
+        while j > 0 {
+            j -= 1;
+            match self.adjacent_kind(j) {
+                Adjacent::Comment => {
+                    if hit(&self.comment[j]) {
+                        return true;
+                    }
+                }
+                Adjacent::Attribute => {}
+                Adjacent::Other => return false,
+            }
+        }
+        false
+    }
+}
+
+/// Classification of a line during an upward adjacency scan.
+enum Adjacent {
+    Comment,
+    Attribute,
+    Other,
+}
+
+/// Mark the lines belonging to `#[cfg(test)]` items (attribute through the
+/// end of the following brace-balanced item, or through the next `;` for
+/// brace-less items).
+fn mark_test_lines(code_lines: &[String]) -> Vec<bool> {
+    let mut marked = vec![false; code_lines.len()];
+    let mut i = 0usize;
+    while i < code_lines.len() {
+        if !code_lines[i].contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        // From the end of the attribute, find the first `{` or `;`; on
+        // `{`, brace-count to the matching `}`.
+        let attr_end = code_lines[i].find("#[cfg(test)]").map(|p| p + 12).unwrap_or(0);
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut line = i;
+        let mut col = attr_end;
+        'outer: while line < code_lines.len() {
+            let chars: Vec<char> = code_lines[line].chars().collect();
+            while col < chars.len() {
+                match chars[col] {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth == 0 {
+                            break 'outer;
+                        }
+                    }
+                    ';' if !opened => break 'outer,
+                    _ => {}
+                }
+                col += 1;
+            }
+            marked[line] = true;
+            line += 1;
+            col = 0;
+        }
+        if line < code_lines.len() {
+            marked[line] = true;
+        }
+        i = line + 1;
+    }
+    marked
+}
+
+// ---------------------------------------------------------------------------
+// Path-scoped rules: safety-comment, no-panic, blocking-recv
+// ---------------------------------------------------------------------------
+
+fn path_in_no_panic_scope(file: &str) -> bool {
+    file.contains("coordinator/")
+        || file.contains("net/")
+        || file.ends_with("wire.rs")
+        || file.ends_with("downlink.rs")
+        || file.ends_with("ef.rs")
+}
+
+fn path_in_recv_scope(file: &str) -> bool {
+    file.contains("coordinator/")
+}
+
+/// Run the path-scoped textual rules over one file's source.
+///
+/// `file` is a repo-relative path with `/` separators; it selects which
+/// rules apply (`safety-comment` is crate-wide, `no-panic` and
+/// `blocking-recv` are scoped — see the module docs).
+pub fn lint_source(file: &str, content: &str) -> Vec<Violation> {
+    let scan = Scan::new(content);
+    let mut out = Vec::new();
+    let mut push = |rule: &'static str, line: usize, message: String| {
+        match scan.allowed(rule, line) {
+            Some(true) => {}
+            Some(false) => out.push(Violation {
+                file: file.to_string(),
+                line: line + 1,
+                rule,
+                message: format!("LINT-ALLOW({rule}) without a reason (use `: why`)"),
+            }),
+            None => out.push(Violation {
+                file: file.to_string(),
+                line: line + 1,
+                rule,
+                message,
+            }),
+        }
+    };
+
+    let no_panic = path_in_no_panic_scope(file);
+    let recv_scope = path_in_recv_scope(file);
+
+    for (i, code) in scan.code.iter().enumerate() {
+        // safety-comment: crate-wide, including test code (an aliasing
+        // argument is just as load-bearing inside a test). One finding per
+        // line is enough.
+        if !find_word(code, "unsafe").is_empty() && !scan.has_safety_comment(i) {
+            push(
+                "safety-comment",
+                i,
+                "`unsafe` without an adjacent `// SAFETY:` comment".to_string(),
+            );
+        }
+
+        if scan.in_test[i] {
+            continue;
+        }
+
+        if no_panic {
+            if code.contains(".unwrap()") {
+                push(
+                    "no-panic",
+                    i,
+                    "`.unwrap()` in production path (return an error or LINT-ALLOW)"
+                        .to_string(),
+                );
+            }
+            if code.contains(".expect(") {
+                push(
+                    "no-panic",
+                    i,
+                    "`.expect(` in production path (return an error or LINT-ALLOW)"
+                        .to_string(),
+                );
+            }
+            for at in code.match_indices("panic!").map(|(p, _)| p) {
+                let before_ok =
+                    at == 0 || !is_ident_byte(code.as_bytes()[at - 1]);
+                if before_ok {
+                    push(
+                        "no-panic",
+                        i,
+                        "`panic!` in production path (return an error or LINT-ALLOW)"
+                            .to_string(),
+                    );
+                    break;
+                }
+            }
+        }
+
+        if recv_scope && code.contains(".recv()") {
+            push(
+                "blocking-recv",
+                i,
+                "deadline-free blocking `.recv()` (use `recv_timeout` or LINT-ALLOW)"
+                    .to_string(),
+            );
+        }
+    }
+    out
+}
+
+/// Find occurrences of `word` in `hay` with identifier boundaries.
+fn find_word(hay: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let bytes = hay.as_bytes();
+    for (at, _) in hay.match_indices(word) {
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after = at + word.len();
+        let after_ok = after >= bytes.len() || !is_ident_byte(bytes[after]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// wire-tags rule
+// ---------------------------------------------------------------------------
+
+/// Check `wire.rs`: frame tag constants (`TAG_*: u8`, `DOWN_*: u8`) must be
+/// unique within their namespace and each value must appear in the
+/// module-doc frame table as `tag N` (uplink) / `kind N` (downlink).
+pub fn check_wire_tags(file: &str, content: &str) -> Vec<Violation> {
+    let scan = Scan::new(content);
+    let mut out = Vec::new();
+    let mut tags: Vec<(String, u64, usize)> = Vec::new(); // (name, value, line)
+    let mut downs: Vec<(String, u64, usize)> = Vec::new();
+    for (i, code) in scan.code.iter().enumerate() {
+        if let Some((name, value)) = parse_u8_const(code) {
+            if name.starts_with("TAG_") {
+                tags.push((name, value, i));
+            } else if name.starts_with("DOWN_") {
+                downs.push((name, value, i));
+            }
+        }
+    }
+    // Module-doc text: every `//!` comment line joined.
+    let doc: String = scan
+        .comment
+        .iter()
+        .filter(|c| c.trim_start().starts_with("//!"))
+        .map(|c| c.as_str())
+        .collect::<Vec<_>>()
+        .join("\n");
+
+    for (word, list) in [("tag", &tags), ("kind", &downs)] {
+        for (idx, (name, value, line)) in list.iter().enumerate() {
+            for (prev_name, prev_value, _) in &list[..idx] {
+                if prev_value == value {
+                    out.push(Violation {
+                        file: file.to_string(),
+                        line: line + 1,
+                        rule: "wire-tags",
+                        message: format!(
+                            "{name} reuses frame byte {value} already taken by {prev_name}"
+                        ),
+                    });
+                }
+            }
+            if !doc_mentions(&doc, word, *value) {
+                out.push(Violation {
+                    file: file.to_string(),
+                    line: line + 1,
+                    rule: "wire-tags",
+                    message: format!(
+                        "{name} = {value} missing from the module-doc frame table \
+                         (expected `{word} {value}` in a `//!` row)"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Parse `pub const NAME: u8 = N;` from a code line.
+fn parse_u8_const(code: &str) -> Option<(String, u64)> {
+    let t = code.trim();
+    let t = t.strip_prefix("pub ").unwrap_or(t);
+    let rest = t.strip_prefix("const ")?;
+    let colon = rest.find(':')?;
+    let name = rest[..colon].trim().to_string();
+    let after = rest[colon + 1..].trim();
+    let after = after.strip_prefix("u8")?.trim_start();
+    let after = after.strip_prefix('=')?.trim_start();
+    let digits: String = after.chars().take_while(|c| c.is_ascii_digit()).collect();
+    if digits.is_empty() {
+        return None;
+    }
+    Some((name, digits.parse().ok()?))
+}
+
+/// `doc` mentions `word N` with the number not running into more digits.
+fn doc_mentions(doc: &str, word: &str, value: u64) -> bool {
+    let needle = format!("{word} {value}");
+    for (at, _) in doc.match_indices(&needle) {
+        let after = at + needle.len();
+        let bytes = doc.as_bytes();
+        if after >= bytes.len() || !bytes[after].is_ascii_digit() {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// cluster-keys rule
+// ---------------------------------------------------------------------------
+
+/// Check `config/mod.rs`: every `cluster.*` key read inside
+/// `ClusterSpec::parse` (via `.get("key")`) must appear backticked in the
+/// ROADMAP cluster table (`roadmap` is the full ROADMAP.md text).
+pub fn check_cluster_keys(file: &str, content: &str, roadmap: &str) -> Vec<Violation> {
+    let scan = Scan::new(content);
+    let mut out = Vec::new();
+    let Some((start_line, end_line)) = cluster_parse_body(&scan) else {
+        return out; // no ClusterSpec::parse in this file — nothing to check
+    };
+    let raw_lines: Vec<&str> = content.lines().collect();
+    for (i, raw) in raw_lines
+        .iter()
+        .enumerate()
+        .take(end_line + 1)
+        .skip(start_line)
+    {
+        // Only look where the *code* has a `.get(` call; the key itself
+        // lives in the raw text (string literals are masked in code text).
+        if !scan.code[i].contains(".get(") {
+            continue;
+        }
+        let mut rest = *raw;
+        while let Some(p) = rest.find(".get(\"") {
+            let key_start = p + 6;
+            let Some(len) = rest[key_start..].find('"') else { break };
+            let key = &rest[key_start..key_start + len];
+            if !roadmap.contains(&format!("`{key}`")) {
+                out.push(Violation {
+                    file: file.to_string(),
+                    line: i + 1,
+                    rule: "cluster-keys",
+                    message: format!(
+                        "cluster key \"{key}\" is parsed here but missing from \
+                         ROADMAP.md's cluster table"
+                    ),
+                });
+            }
+            rest = &rest[key_start + len..];
+        }
+    }
+    out
+}
+
+/// Locate the line range (0-based, inclusive) of the `fn parse` body inside
+/// `impl ClusterSpec`.
+fn cluster_parse_body(scan: &Scan) -> Option<(usize, usize)> {
+    let mut impl_line = None;
+    for (i, code) in scan.code.iter().enumerate() {
+        if code.contains("impl ClusterSpec") {
+            impl_line = Some(i);
+            break;
+        }
+    }
+    let impl_line = impl_line?;
+    let mut fn_line = None;
+    for (i, code) in scan.code.iter().enumerate().skip(impl_line) {
+        if code.contains("fn parse(") {
+            fn_line = Some(i);
+            break;
+        }
+    }
+    let fn_line = fn_line?;
+    // Brace-count from the function signature to the end of its body.
+    let mut depth = 0i64;
+    let mut opened = false;
+    for (i, code) in scan.code.iter().enumerate().skip(fn_line) {
+        for c in code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if opened && depth == 0 {
+                        return Some((fn_line, i));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Whole-tree driver
+// ---------------------------------------------------------------------------
+
+/// Lint the repository rooted at `repo_root` (the directory containing
+/// `rust/` and `ROADMAP.md`). Walks `rust/src/**`, applies every rule, and
+/// returns all findings sorted by file/line.
+pub fn run_repo(repo_root: &Path) -> Result<Report, String> {
+    let src_root = repo_root.join("rust").join("src");
+    if !src_root.is_dir() {
+        return Err(format!("{} is not a directory", src_root.display()));
+    }
+    let roadmap = std::fs::read_to_string(repo_root.join("ROADMAP.md"))
+        .map_err(|e| format!("read ROADMAP.md: {e}"))?;
+    let mut files = Vec::new();
+    collect_rs_files(&src_root, &mut files)?;
+    files.sort();
+
+    let mut report = Report::default();
+    for path in &files {
+        let content = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(repo_root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        report.files_scanned += 1;
+        report.violations.extend(lint_source(&rel, &content));
+        if rel.ends_with("src/wire.rs") {
+            report.violations.extend(check_wire_tags(&rel, &content));
+        }
+        if rel.ends_with("config/mod.rs") {
+            report
+                .violations
+                .extend(check_cluster_keys(&rel, &content, &roadmap));
+        }
+    }
+    report
+        .violations
+        .sort_by(|a, b| a.file.cmp(&b.file).then(a.line.cmp(&b.line)));
+    Ok(report)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds_of(src: &str) -> String {
+        classify(src)
+            .iter()
+            .map(|k| match k {
+                Kind::Code => 'c',
+                Kind::Comment => '/',
+                Kind::Str => 's',
+            })
+            .collect()
+    }
+
+    #[test]
+    fn classifier_masks_comments_and_strings() {
+        assert_eq!(kinds_of("a // b"), "cc////");
+        assert_eq!(kinds_of("\"x\" y"), "ssscc");
+        assert_eq!(kinds_of("/*a*/b"), "/////c");
+        // Nested block comment.
+        assert_eq!(kinds_of("/*/*x*/*/y"), "/////////c");
+    }
+
+    #[test]
+    fn classifier_handles_char_literals_and_lifetimes() {
+        // Char literal masked; lifetime kept as code.
+        assert_eq!(kinds_of("'a' x"), "ssscc");
+        assert_eq!(kinds_of("&'a str"), "ccccccc");
+        assert_eq!(kinds_of(r"'\n' x"), "sssscc");
+    }
+
+    #[test]
+    fn classifier_handles_raw_strings() {
+        let src = "r#\"// not a comment\"# x";
+        let k = kinds_of(src);
+        assert!(k.starts_with("sss"));
+        assert!(k.ends_with("cc"));
+        assert!(!lint_source("coordinator/f.rs", "let s = r#\".unwrap()\"#;")
+            .iter()
+            .any(|v| v.rule == "no-panic"));
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_excluded() {
+        let src = "fn f() {}\n#[cfg(test)]\nmod tests {\n    fn g() { x.unwrap(); }\n}\n";
+        assert!(lint_source("coordinator/f.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_requires_reason() {
+        let with_reason = "// LINT-ALLOW(no-panic): construction-time only\nx.unwrap();\n";
+        assert!(lint_source("coordinator/f.rs", with_reason).is_empty());
+        let without = "// LINT-ALLOW(no-panic)\nx.unwrap();\n";
+        let v = lint_source("coordinator/f.rs", without);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].message.contains("without a reason"));
+    }
+
+    #[test]
+    fn expect_err_is_not_flagged() {
+        assert!(lint_source("coordinator/f.rs", "let e = r.expect_err(\"msg\");")
+            .iter()
+            .all(|v| v.rule != "no-panic"));
+    }
+
+    #[test]
+    fn recv_timeout_is_not_flagged() {
+        let src = "let r = rx.recv_timeout(deadline);\nlet t = rx.try_recv();\n";
+        assert!(lint_source("coordinator/f.rs", src).is_empty());
+    }
+}

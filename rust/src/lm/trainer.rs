@@ -173,7 +173,8 @@ impl<'e> LmTrainer<'e> {
             let log = self.round(k)?;
             if k % self.opts.log_every == 0 || k + 1 == self.opts.rounds {
                 println!(
-                    "round {:>4}  loss {:.4}  uplink {:>10} bits (dense {:>12})  compression {:>5.1}×",
+                    "round {:>4}  loss {:.4}  uplink {:>10} bits (dense {:>12})  \
+                     compression {:>5.1}×",
                     log.round,
                     log.mean_loss,
                     log.bits_up,

@@ -102,7 +102,8 @@ impl Engine {
     /// Create a CPU engine over an artifacts directory.
     pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| any_err(format!("PJRT cpu client: {e:?}")))?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| any_err(format!("PJRT cpu client: {e:?}")))?;
         Ok(Self {
             client,
             manifest,

@@ -46,13 +46,26 @@
 //!
 //! # Frame kinds at a glance
 //!
-//! | dir      | kind                  | first byte | body                          | purpose                                        |
-//! |----------|-----------------------|------------|-------------------------------|------------------------------------------------|
-//! | uplink   | packet                | tag 1–8    | one packet frame              | one compressed message (Q/C/refresh frame; EF uplink ships C(e + m) here) |
-//! | uplink   | `Batch`               | tag 9      | count (u16) + τ packet frames | τ local-step packets, one latency round trip   |
-//! | downlink | [`DownKind::Delta`]   | kind 1     | packet frame                  | exact iterate delta x^{k+1} − x^k              |
-//! | downlink | [`DownKind::Resync`]  | kind 2     | dense f64 packet frame        | full iterate, replica bootstrap / drift reset  |
-//! | downlink | [`DownKind::EfDelta`] | kind 3     | packet frame                  | lossy EF replica update C(e + Δ)               |
+//! One row per frame byte; `shiftcomp-lint` (rule `wire-tags`) checks that
+//! every `TAG_*`/`DOWN_*` constant below is unique in its namespace and
+//! appears in this table as `tag N` / `kind N`. Every uplink packet frame
+//! is one compressed message (a Q/C/refresh frame; the EF uplink ships
+//! C(e + m) in the same encodings).
+//!
+//! | dir      | kind                     | first byte | body                          |
+//! |----------|--------------------------|------------|-------------------------------|
+//! | uplink   | `Dense` packet           | tag 1      | dense f32/f64 values          |
+//! | uplink   | `Sparse` packet          | tag 2      | bit-packed indices + values   |
+//! | uplink   | `Levels` packet          | tag 3      | norm + sign/level bit runs    |
+//! | uplink   | `LevelsLinear` packet    | tag 4      | norm + sign/level bit runs    |
+//! | uplink   | `NatExp` packet          | tag 5      | sign + exponent bit runs      |
+//! | uplink   | `SignScale` packet       | tag 6      | scale + sign bit run          |
+//! | uplink   | `Ternary` packet         | tag 7      | scale + 2-bit trit run        |
+//! | uplink   | `Zero` packet            | tag 8      | empty (all-zero message)      |
+//! | uplink   | `Batch`                  | tag 9      | count (u16) + τ packet frames |
+//! | downlink | [`DownKind::Delta`]      | kind 1     | exact delta packet frame      |
+//! | downlink | [`DownKind::Resync`]     | kind 2     | dense f64 full iterate        |
+//! | downlink | [`DownKind::EfDelta`]    | kind 3     | lossy EF update C(e + Δ)      |
 //!
 //! # Downlink (broadcast) frames
 //!

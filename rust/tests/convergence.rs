@@ -250,7 +250,8 @@ fn heterogeneous_compressors_converge() {
 fn diana_with_natural_dithering_converges() {
     let p = ridge();
     let d = p.dim();
-    let mut alg = DcgdShift::diana(&p, shiftcomp::compressors::NaturalDithering::l2(d, 6), None, 33);
+    let mut alg =
+        DcgdShift::diana(&p, shiftcomp::compressors::NaturalDithering::l2(d, 6), None, 33);
     let trace = alg.run(&p, &opts(80_000, 1e-14));
     assert!(
         trace.converged || trace.error_floor() < 1e-12,

@@ -1085,7 +1085,8 @@ fn local_steps_one_is_the_per_round_protocol() {
     let p = ridge();
     let d = p.dim();
     let mut base = DcgdShift::diana(p.as_ref(), RandK::with_q(d, 0.3), None, 65);
-    let mut tau1 = DcgdShift::diana(p.as_ref(), RandK::with_q(d, 0.3), None, 65).with_local_steps(1);
+    let mut tau1 =
+        DcgdShift::diana(p.as_ref(), RandK::with_q(d, 0.3), None, 65).with_local_steps(1);
     for k in 0..30 {
         let a = base.step(p.as_ref());
         let b = tau1.step(p.as_ref());

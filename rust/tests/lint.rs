@@ -1,0 +1,113 @@
+//! Fixture tests for the in-tree invariant lint (`shiftcomp::lint`, run
+//! in CI as the `shiftcomp-lint` binary), plus the clean-tree self-check.
+//!
+//! The fixtures under `lint_fixtures/` are plain text (Cargo only builds
+//! top-level `tests/*.rs`, so they are never compiled); each seeds the
+//! exact violation its rule exists to catch, and the tests pin both that
+//! the violation fires and that the adjacent compliant pattern does not —
+//! a lint that flags everything would also "catch" every fixture.
+
+use shiftcomp::lint;
+use std::path::Path;
+
+/// A path label inside the strictest scope: `no-panic` + `blocking-recv`.
+const COORD_PATH: &str = "rust/src/coordinator/fixture.rs";
+
+fn rules(violations: &[lint::Violation], rule: &str) -> usize {
+    violations.iter().filter(|v| v.rule == rule).count()
+}
+
+#[test]
+fn missing_safety_comment_is_flagged() {
+    let src = include_str!("lint_fixtures/missing_safety.rs");
+    let v = lint::lint_source("rust/src/lint_fixture.rs", src);
+    assert_eq!(
+        rules(&v, "safety-comment"),
+        1,
+        "exactly the undocumented unsafe must fire: {v:?}"
+    );
+    // The documented `unsafe` sits on a later line than the flagged one.
+    let flagged = v.iter().find(|f| f.rule == "safety-comment").unwrap();
+    assert!(
+        src.lines().nth(flagged.line - 1).unwrap().contains("unsafe"),
+        "finding must anchor on the unsafe line itself"
+    );
+}
+
+#[test]
+fn stray_unwrap_expect_and_panic_are_flagged() {
+    let src = include_str!("lint_fixtures/stray_unwrap.rs");
+    let v = lint::lint_source(COORD_PATH, src);
+    // head's unwrap, tail's expect, boom's panic!, and the reason-less
+    // LINT-ALLOW; the reasoned allow, `unwrap_or_default` and the
+    // `#[cfg(test)]` unwrap stay silent.
+    assert_eq!(rules(&v, "no-panic"), 4, "findings: {v:?}");
+    assert!(
+        v.iter()
+            .any(|f| f.message.contains("without a reason")),
+        "the reason-less LINT-ALLOW must itself be a finding: {v:?}"
+    );
+    // Outside the no-panic scope the same source is clean.
+    let outside = lint::lint_source("rust/src/harness/fixture.rs", src);
+    assert_eq!(rules(&outside, "no-panic"), 0, "findings: {outside:?}");
+}
+
+#[test]
+fn duplicate_and_undocumented_wire_tags_are_flagged() {
+    let src = include_str!("lint_fixtures/dup_wire_tag.rs");
+    let v = lint::check_wire_tags("rust/src/wire_fixture.rs", src);
+    assert_eq!(rules(&v, "wire-tags"), 2, "findings: {v:?}");
+    assert!(
+        v.iter().any(|f| f.message.contains("reuses frame byte 1")),
+        "TAG_CLASH must be reported as a duplicate: {v:?}"
+    );
+    assert!(
+        v.iter().any(|f| f.message.contains("missing from the module-doc")),
+        "TAG_GHOST must be reported as undocumented: {v:?}"
+    );
+}
+
+#[test]
+fn undocumented_cluster_key_is_flagged() {
+    let src = include_str!("lint_fixtures/undocumented_cluster_key.rs");
+    let roadmap = "cluster table: | `prec` | value precision of uplink frames |";
+    let v = lint::check_cluster_keys("rust/src/config_fixture.rs", src, roadmap);
+    assert_eq!(rules(&v, "cluster-keys"), 1, "findings: {v:?}");
+    assert!(
+        v.iter().any(|f| f.message.contains("warp_factor")),
+        "the undocumented key must be named: {v:?}"
+    );
+}
+
+#[test]
+fn blocking_recv_is_flagged_and_recv_timeout_is_not() {
+    let src = include_str!("lint_fixtures/blocking_recv.rs");
+    let v = lint::lint_source(COORD_PATH, src);
+    assert_eq!(rules(&v, "blocking-recv"), 1, "findings: {v:?}");
+    // The rule is scoped: the identical source outside coordinator/ passes.
+    let outside = lint::lint_source("rust/src/net/fixture.rs", src);
+    assert_eq!(rules(&outside, "blocking-recv"), 0, "findings: {outside:?}");
+}
+
+/// The self-check CI runs via `cargo run --bin shiftcomp-lint`, wired as
+/// a unit test too so a violation fails tier-1 locally before CI.
+#[test]
+fn whole_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let report = lint::run_repo(&root).expect("lint walk failed");
+    assert!(
+        report.files_scanned > 20,
+        "the walk found only {} files — wrong root?",
+        report.files_scanned
+    );
+    assert!(
+        report.violations.is_empty(),
+        "the tree must lint clean; findings:\n{}",
+        report
+            .violations
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}

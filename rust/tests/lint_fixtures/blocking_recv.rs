@@ -1,0 +1,14 @@
+// Fixture for the `blocking-recv` rule (NOT compiled — included as text
+// by ../lint.rs, under a coordinator/ path label): the deadline-free
+// wait must be flagged; the deadline-bounded one must pass.
+
+use std::sync::mpsc::Receiver;
+use std::time::Duration;
+
+pub fn gather_forever(rx: &Receiver<u64>) -> Option<u64> {
+    rx.recv().ok()
+}
+
+pub fn gather_bounded(rx: &Receiver<u64>) -> Option<u64> {
+    rx.recv_timeout(Duration::from_millis(5)).ok()
+}

@@ -1,0 +1,16 @@
+//! Fixture for the `wire-tags` rule (NOT compiled — included as text by
+//! ../lint.rs). Frame table the rule reads:
+//!
+//! | byte   | frame  |
+//! |--------|--------|
+//! | tag 1  | Dense  |
+//! | tag 2  | Sparse |
+//! | kind 1 | Delta  |
+
+pub const TAG_DENSE: u8 = 1;
+pub const TAG_SPARSE: u8 = 2;
+/// Reuses byte 1 — the duplicate the rule must catch.
+pub const TAG_CLASH: u8 = 1;
+/// Byte 9 appears nowhere in the frame table above.
+pub const TAG_GHOST: u8 = 9;
+pub const DOWN_DELTA: u8 = 1;

@@ -1,0 +1,13 @@
+// Fixture for the `safety-comment` rule (NOT compiled — included as text
+// by ../lint.rs): one undocumented `unsafe` that must be flagged, one
+// documented `unsafe` that must pass.
+
+/// Reads the first byte without a bounds check.
+pub fn first_unchecked(v: &[u8]) -> u8 {
+    unsafe { *v.get_unchecked(0) }
+}
+
+pub fn first_documented(v: &[u8]) -> u8 {
+    // SAFETY: fixture — the caller guarantees `v` is non-empty.
+    unsafe { *v.get_unchecked(0) }
+}

@@ -1,0 +1,39 @@
+// Fixture for the `no-panic` rule (NOT compiled — included as text by
+// ../lint.rs, under a coordinator/ path label). Expected findings: one
+// `.unwrap()`, one `.expect(`, one `panic!`, and one reason-less
+// LINT-ALLOW; the reasoned allow, the non-panicking `_or_default`
+// variant and the test-module unwrap are all exempt.
+
+pub fn head(v: &[u64]) -> u64 {
+    *v.first().unwrap()
+}
+
+pub fn tail(v: &[u64]) -> u64 {
+    *v.last().expect("fixture: non-empty")
+}
+
+pub fn boom() -> ! {
+    panic!("fixture")
+}
+
+pub fn allowed_head(v: &[u64]) -> u64 {
+    // LINT-ALLOW(no-panic): fixture — a reasoned escape hatch is honored.
+    *v.first().unwrap()
+}
+
+pub fn reasonless_head(v: &[u64]) -> u64 {
+    // LINT-ALLOW(no-panic):
+    *v.first().unwrap()
+}
+
+pub fn graceful(v: &[u64]) -> u64 {
+    v.first().copied().unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(super::head(&[1]), [1u64].first().copied().unwrap());
+    }
+}

@@ -1,0 +1,15 @@
+// Fixture for the `cluster-keys` rule (NOT compiled — included as text
+// by ../lint.rs, checked against a miniature roadmap that documents only
+// `prec`): the `warp_factor` read must be flagged.
+
+pub struct ClusterSpec {
+    pub prec: u32,
+}
+
+impl ClusterSpec {
+    pub fn parse(obj: &Value) -> ClusterSpec {
+        let prec = obj.get("prec").and_then(Value::as_u32).unwrap_or(64);
+        let _undocumented = obj.get("warp_factor");
+        ClusterSpec { prec }
+    }
+}

@@ -547,7 +547,9 @@ fn prop_pipelined_bounded_by_stages() {
         );
         // the staged straggler, recomputed per worker with its own compute
         let reference = (0..n)
-            .map(|i| links[i].downlink_time(down_bits) + compute[i] + links[i].uplink_time(up_bits[i]))
+            .map(|i| {
+                links[i].downlink_time(down_bits) + compute[i] + links[i].uplink_time(up_bits[i])
+            })
             .fold(0.0f64, f64::max);
         if staged != reference {
             return Err(format!("staged {staged} != per-worker reference {reference}"));
